@@ -1,0 +1,75 @@
+//! Adaptive kernel selection across deployment regimes (appendix B).
+//!
+//! The paper's appendix B suggests dynamically selecting between a
+//! GSPN-1-like configuration and the full GSPN-2 based on input
+//! dimensions and batch size. This example drives
+//! `gspn2::gpusim::adaptive` across the four workload regimes the paper
+//! profiles — diffusion latents, classifier towers, batch video, and
+//! high-channel feature maps — on every modeled device, printing the
+//! chosen configuration, the rules that fired, and the predicted gain.
+//!
+//! Run: `cargo run --release --example adaptive_kernels`
+
+use gspn2::gpusim::adaptive::{choose, compare};
+use gspn2::gpusim::{DeviceSpec, ScanWorkload};
+
+struct Regime {
+    name: &'static str,
+    wl: ScanWorkload,
+}
+
+fn main() {
+    let regimes = [
+        Regime {
+            name: "diffusion latent  (1x4x1024x1024, low occupancy)",
+            wl: ScanWorkload::fwd(1, 4, 1024, 1024),
+        },
+        Regime {
+            name: "classifier tower  (16x8x1024x1024, paper Fig 3)",
+            wl: ScanWorkload::fwd(16, 8, 1024, 1024),
+        },
+        Regime {
+            name: "batch video       (256x1x1024x1024, paper Fig S3)",
+            wl: ScanWorkload::fwd(256, 1, 1024, 1024),
+        },
+        Regime {
+            name: "wide features     (1x1152x1024x1024, paper Fig S4)",
+            wl: ScanWorkload::fwd(1, 1152, 1024, 1024),
+        },
+        Regime {
+            name: "single stream     (1x1x2048x2048, worst-case occupancy)",
+            wl: ScanWorkload::fwd(1, 1, 2048, 2048),
+        },
+    ];
+
+    for dev in DeviceSpec::all() {
+        println!("== {} ({} SMs, {:.0} GB/s) ==", dev.name, dev.sms, dev.peak_bw_gbs);
+        for r in &regimes {
+            let (fixed, adaptive, choice) = compare(&dev, &r.wl);
+            let cfg = &choice.cfg;
+            println!(
+                "  {:<55} fixed {:>8.3} ms -> adaptive {:>8.3} ms ({:>4.1}x)",
+                r.name,
+                fixed,
+                adaptive,
+                fixed / adaptive
+            );
+            println!(
+                "      config: sram={} 2d={} proxy={} split={}",
+                cfg.sram, cfg.blocks2d, cfg.proxy_ratio, cfg.split
+            );
+            for rule in &choice.rationale {
+                println!("      rule:  {rule}");
+            }
+        }
+        println!();
+    }
+
+    // Show the full decision for one shape, as a serving coordinator
+    // would log it at batch time.
+    let dev = DeviceSpec::a100_sxm4_80gb();
+    let wl = ScanWorkload::fwd(1, 1, 2048, 2048);
+    let choice = choose(&dev, &wl);
+    println!("batch-time decision for 1x1x2048x2048 on {}:", dev.name);
+    println!("  {:#?}", choice.cfg);
+}

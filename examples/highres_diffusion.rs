@@ -1,0 +1,134 @@
+//! High-resolution diffusion example (the paper's §5.3 scenario, scaled
+//! to this testbed):
+//!
+//! 1. Briefly trains the GSPN-2 denoiser on structured images (DDPM
+//!    epsilon objective) through the AOT train-step artifact.
+//! 2. Runs the full DDPM reverse-process sampling loop from Rust using
+//!    the denoiser forward artifact — generating actual images.
+//! 3. Sweeps generation resolution on the A100 simulator to reproduce
+//!    the Fig-5 scaling story (quadratic attention vs linear GSPN scan).
+//!
+//! Run: `make artifacts && cargo run --release --example highres_diffusion -- \
+//!        [--train-steps 60]`
+
+use gspn2::gpusim::{Backend, DeviceSpec, DiffusionModel};
+use gspn2::runtime::{artifacts_available, Engine, Value};
+use gspn2::train::train_denoiser;
+use gspn2::util::cli::Args;
+use gspn2::util::Rng;
+use gspn2::Tensor;
+
+/// DDPM schedule (must match python/compile/model.py::ddpm_alphas).
+fn ddpm_schedule(steps: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut betas = Vec::with_capacity(steps);
+    for i in 0..steps {
+        betas.push(1e-4 + (0.02 - 1e-4) * i as f64 / (steps - 1) as f64);
+    }
+    let mut alpha_bar = Vec::with_capacity(steps);
+    let mut prod = 1.0;
+    for b in &betas {
+        prod *= 1.0 - b;
+        alpha_bar.push(prod);
+    }
+    (betas, alpha_bar.clone(), alpha_bar.iter().map(|a| (1.0 - a).sqrt()).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let train_steps = args.usize_or("train-steps", 60);
+
+    if artifacts_available("artifacts") {
+        let engine = Engine::cpu("artifacts")?;
+        println!("== 1. training the GSPN-2 denoiser ({train_steps} steps) ==");
+        let report = train_denoiser(&engine, train_steps, (train_steps / 10).max(1), 7)?;
+        println!(
+            "epsilon-prediction loss: {:.4} -> {:.4}\n",
+            report.curve.first().map(|l| l.loss).unwrap_or(0.0),
+            report.final_train_loss
+        );
+
+        println!("== 2. DDPM reverse sampling via the fwd artifact (16x16, 100 steps) ==");
+        sample(&engine)?;
+    } else {
+        println!("artifacts/ not built — skipping the PJRT phases; run `make artifacts`.");
+    }
+
+    println!("\n== 3. Fig-5 resolution sweep on the A100 simulator ==");
+    let dev = DeviceSpec::a100_sxm4_80gb();
+    let m = DiffusionModel::sdxl_like();
+    println!(
+        "{:>10} {:>14} {:>14} {:>12} {:>10}",
+        "res", "SDXL(flash)", "GSPN-2", "speedup", "GSPN-1"
+    );
+    for res in [1024usize, 2048, 4096, 8192, 16384] {
+        let flash = m.generate_s(&dev, res, Backend::SdxlFlash);
+        let g2 = m.generate_s(&dev, res, Backend::Gspn2);
+        let g1 = m.generate_s(&dev, res, Backend::Gspn1);
+        println!(
+            "{:>10} {:>12.1} s {:>12.2} s {:>11.0}x {:>8.1} s",
+            format!("{res}x{res}"),
+            flash,
+            g2,
+            flash / g2,
+            g1
+        );
+    }
+    println!("(paper: 32x at 4K, 93x at 16K; see EXPERIMENTS.md for the 16K caveat)");
+    Ok(())
+}
+
+/// Full reverse diffusion with the trained-from-init denoiser artifact.
+fn sample(engine: &Engine) -> anyhow::Result<()> {
+    let name = "denoiser_fwd_r16_b4";
+    let params = engine.initial_params(name)?;
+    let steps = 100usize;
+    let (betas, alpha_bar, _) = ddpm_schedule(steps);
+    let mut rng = Rng::new(123);
+    let mut x = Tensor::randn(&[4, 3, 16, 16], &mut rng, 1.0);
+    let t0 = std::time::Instant::now();
+    for ti in (0..steps).rev() {
+        let mut inputs = params.clone();
+        inputs.push(Value::F32(x.clone()));
+        inputs.push(Value::F32(Tensor::full(&[4], ti as f32)));
+        let eps = engine.run(name, &inputs)?.remove(0).into_f32()?;
+        let beta = betas[ti];
+        let ab = alpha_bar[ti];
+        let a = 1.0 - beta;
+        // x_{t-1} = 1/sqrt(a) (x - beta/sqrt(1-ab) eps) + sigma z
+        let coef = beta / (1.0 - ab).sqrt();
+        x = x
+            .zip(&eps, |xv, ev| (xv - coef as f32 * ev) / (a as f32).sqrt());
+        if ti > 0 {
+            let z = Tensor::randn(&x.shape, &mut rng, 1.0);
+            let sigma = beta.sqrt() as f32;
+            x = x.zip(&z, |xv, zv| xv + sigma * zv);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "sampled 4 images in {dt:.1} s ({:.1} ms/denoise-step); output stats: \
+         mean {:.3}, |max| {:.3}",
+        dt * 1000.0 / steps as f64,
+        x.mean(),
+        x.abs_max()
+    );
+    // Render one channel of one sample as ASCII.
+    println!("sample 0, channel 0:");
+    let maxv = x.abs_max().max(1e-6);
+    for r in 0..16 {
+        let row: String = (0..16)
+            .map(|cidx| {
+                let v = x.at(&[0, 0, r, cidx]) / maxv;
+                match ((v + 1.0) * 2.5) as i32 {
+                    i32::MIN..=0 => ' ',
+                    1 => '.',
+                    2 => '+',
+                    3 => '*',
+                    _ => '#',
+                }
+            })
+            .collect();
+        println!("  {row}");
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Serving example (the paper's deployment scenario): drive the
+//! coordinator with an open-loop Poisson trace of scan requests across
+//! two shape buckets, then report latency percentiles, throughput, and
+//! batching behaviour — plus a max-throughput closed-loop phase.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_images -- \
+//!        [--rate 100] [--requests 200] [--workers 2] [--max-batch 4]`
+
+use std::time::Instant;
+
+use gspn2::config::{Config, ServeConfig};
+use gspn2::coordinator::{generate_trace, Coordinator, SubmitError, TraceConfig};
+use gspn2::runtime::artifacts_available;
+use gspn2::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available("artifacts") {
+        eprintln!("artifacts/ not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let args = Args::parse(std::env::args().skip(1));
+    let mut cfg = Config::from_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+    if args.get("rate").is_none() {
+        cfg.serve.rate_rps = 100.0;
+    }
+    if args.get("requests").is_none() {
+        cfg.serve.requests = 200;
+    }
+
+    println!("== phase 1: open-loop Poisson trace ==");
+    open_loop(&cfg.serve)?;
+
+    println!("\n== phase 2: closed-loop max throughput (single bucket) ==");
+    closed_loop(&cfg.serve)?;
+    Ok(())
+}
+
+fn open_loop(serve: &ServeConfig) -> anyhow::Result<()> {
+    let coord = Coordinator::start(serve)?;
+    let trace = generate_trace(&TraceConfig {
+        rate_rps: serve.rate_rps,
+        requests: serve.requests,
+        seed: serve.seed,
+        ..TraceConfig::default()
+    });
+    println!(
+        "replaying {} requests at ~{:.0} rps ({} workers, max_batch {}, max_wait {} µs)",
+        trace.len(),
+        serve.rate_rps,
+        serve.workers,
+        serve.max_batch,
+        serve.max_wait_us
+    );
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0;
+    for ev in trace {
+        let el = t0.elapsed();
+        if ev.at > el {
+            std::thread::sleep(ev.at - el);
+        }
+        match coord.submit_scan(ev.x, ev.a_raw, ev.lam, 0) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::Backpressure) => rejected += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let m = coord.shutdown();
+    println!("completed {ok}, rejected-at-admission {rejected}");
+    println!("{}", m.report());
+    Ok(())
+}
+
+fn closed_loop(serve: &ServeConfig) -> anyhow::Result<()> {
+    use gspn2::util::Rng;
+    use gspn2::Tensor;
+    let coord = Coordinator::start(serve)?;
+    let mut rng = Rng::new(1);
+    let total = 200usize;
+    let inflight_cap = 32usize;
+    let mut inflight = std::collections::VecDeque::new();
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    let mut submitted = 0usize;
+    while done < total {
+        while submitted < total && inflight.len() < inflight_cap {
+            let x = Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0);
+            let a = Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0);
+            let lam = Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0);
+            match coord.submit_scan(x, a, lam, 0) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(SubmitError::Backpressure) => break,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        if let Some(rx) = inflight.pop_front() {
+            let _ = rx.recv();
+            done += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    println!(
+        "{total} requests in {secs:.2} s -> {:.1} req/s sustained (mean batch {:.2})",
+        total as f64 / secs,
+        m.batch_sizes.mean()
+    );
+    println!("{}", m.report());
+    Ok(())
+}

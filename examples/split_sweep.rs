@@ -1,0 +1,54 @@
+//! Segment-parallel scan decomposition: overhead and crossover sweep.
+//!
+//! Measures the CPU reference of the §5.1 low-occupancy decomposition
+//! (`gspn2::scan::split`) against the sequential scan across segment
+//! counts and thread counts. Findings (recorded in EXPERIMENTS.md §Perf):
+//!
+//! * the carry-only two-phase form costs ~0.75-0.95x of sequential
+//!   throughput in pure overhead (the extra 3-flop correction pass);
+//! * the banded *operator* form (see `segment_transfer`) costs O(s) extra
+//!   work per column and was 4-30x slower — it only pays on massively
+//!   parallel hardware, which is exactly the GPU regime the simulator's
+//!   `KernelConfig::split` models and the adaptive policy selects;
+//! * thread scaling requires multiple cores; on a single-core host the
+//!   t>1 rows show pure spawn overhead (this box: see nproc).
+//!
+//! Run: `cargo run --release --example split_sweep`
+
+use gspn2::scan::{scan_l2r, scan_l2r_split, Taps};
+use gspn2::util::bench::black_box;
+use gspn2::util::Rng;
+use gspn2::Tensor;
+use std::time::Instant;
+
+fn main() {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host parallelism: {host}\n");
+    let mut rng = Rng::new(0);
+    for (c, h, w) in [(1usize, 256usize, 256usize), (1, 512, 2048), (4, 512, 512)] {
+        let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let a = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
+        let lam = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let reps = (50_000_000 / (c * h * w)).clamp(3, 50);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(scan_l2r(&x, &a, &lam, 0));
+        }
+        let seq = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("c{c} {h}x{w}: sequential {:.3} ms", seq * 1e3);
+        for segs in [8usize, 32] {
+            for t in [1usize, host.min(8)] {
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    black_box(scan_l2r_split(&x, &a, &lam, segs, t));
+                }
+                let el = t0.elapsed().as_secs_f64() / reps as f64;
+                println!(
+                    "  segs={segs:<3} t={t}: {:.3} ms ({:.2}x vs seq)",
+                    el * 1e3,
+                    seq / el
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,360 @@
+"""AOT pipeline: lower every L2 entrypoint to HLO *text* artifacts.
+
+This is the ONLY Python that ever runs in the system, and it runs once at
+build time (``make artifacts``). It produces, under ``artifacts/``:
+
+  <name>.hlo.txt      one per entrypoint (HLO text — the interchange format
+                      xla_extension 0.5.1 can parse; serialized protos from
+                      jax >= 0.5 carry 64-bit instruction ids it rejects)
+  <model>.params.bin  initial parameters, little-endian f32, leaves
+                      concatenated in jax tree order
+  manifest.json       machine-readable index: per entry the file name,
+                      ordered input/output specs (shape + dtype), how many
+                      leading inputs are parameters, and which params.bin
+                      they come from. The Rust runtime is driven entirely
+                      by this manifest.
+
+Entry naming convention: ``<family>_<variant>``, e.g. ``scan_h64w64c8n1``,
+``classifier_fwd_b8``, ``classifier_train_b8``. Scan entries exist at
+several (N, C, H, W) buckets — these are the shape buckets the L3 dynamic
+batcher routes into (HLO executables are shape-specialised).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.gspn import gspn_scan, normalize_taps
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper (see /opt/xla-example/gen_hlo.py and aot_recipe.md)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> HLO text via stablehlo -> XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+
+
+def _spec(x, name: str) -> dict:
+    return {"name": name, "shape": [int(s) for s in x.shape], "dtype": _dt(x)}
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class ArtifactWriter:
+    """Collects entries + param blobs, writes files and manifest.json."""
+
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.entries = []
+        self.params_bins = {}
+
+    def add_params_bin(self, name: str, params) -> tuple:
+        """Write a params.bin; returns (file, leaves) for manifest reuse."""
+        leaves, _ = M.flatten_params(params)
+        fname = f"{name}.params.bin"
+        with open(os.path.join(self.out, fname), "wb") as f:
+            for leaf in leaves:
+                f.write(np.asarray(leaf, dtype=np.float32).tobytes())
+        self.params_bins[name] = fname
+        return fname, leaves
+
+    def add(self, name: str, fn, in_specs: list, in_names: list,
+            n_params: int = 0, params_bin: str | None = None,
+            meta: dict | None = None):
+        """Lower fn at in_specs, write <name>.hlo.txt, record manifest entry."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        out_leaves = jax.tree_util.tree_leaves(out_shapes)
+        self.entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [_spec(s, n) for s, n in zip(in_specs, in_names)],
+                "outputs": [_spec(s, f"o{i}") for i, s in enumerate(out_leaves)],
+                "n_params": n_params,
+                "params_bin": params_bin,
+                "meta": meta or {},
+            }
+        )
+        print(f"  [{time.time() - t0:6.1f}s] {name}: "
+              f"{len(in_specs)} inputs, {len(out_leaves)} outputs, "
+              f"{len(text) / 1e6:.2f} MB hlo")
+
+    def finish(self):
+        manifest = {
+            "version": 1,
+            "generated_unix": int(time.time()),
+            "jax_version": jax.__version__,
+            "entries": self.entries,
+        }
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"wrote manifest with {len(self.entries)} entries -> {self.out}")
+
+
+# ---------------------------------------------------------------------------
+# Entry builders
+# ---------------------------------------------------------------------------
+
+
+def scan_entries(w: ArtifactWriter):
+    """Standalone fused-scan ops at the serving shape buckets.
+
+    Input taps are *raw logits*; normalisation happens inside the artifact
+    so the Rust side never reimplements the Stability-Context Condition.
+    """
+    buckets = [
+        # (n, c, h, wdim, cw, kchunk)
+        (1, 8, 64, 64, 1, 0),
+        (2, 8, 64, 64, 1, 0),
+        (4, 8, 64, 64, 1, 0),
+        (1, 8, 128, 128, 1, 0),
+        (1, 8, 64, 64, 8, 0),     # per-channel (GSPN-1 semantics)
+        (1, 8, 64, 64, 1, 16),    # GSPN-local, kchunk=16
+    ]
+    for (n, c, h, wd, cw, kchunk) in buckets:
+        def fn(x, a_raw, lam, _k=kchunk):
+            return gspn_scan(x, normalize_taps(a_raw), lam, _k, 1, True)
+
+        tag = f"scan_h{h}w{wd}c{c}n{n}" + (f"k{kchunk}" if kchunk else "") + (
+            "pc" if cw == c else ""
+        )
+        w.add(
+            tag,
+            fn,
+            [_sds((n, c, h, wd)), _sds((n, cw, 3, h, wd)), _sds((n, c, h, wd))],
+            ["x", "a_raw", "lam"],
+            meta={"kind": "scan", "n": n, "c": c, "h": h, "w": wd,
+                  "cw": cw, "kchunk": kchunk},
+        )
+
+
+def classifier_entries(w: ArtifactWriter, *, attn: bool = False,
+                       readout: str = "gap"):
+    cfg = M.GspnConfig(readout=readout)
+    rng = np.random.default_rng(42)
+    if attn:
+        params = M.init_attn_classifier(rng, cfg)
+        apply, prefix = M.attn_classifier, "attn_classifier"
+        train = M.make_train_step(cfg, model=M.attn_classifier)
+        evals = M.make_eval_step(cfg, model=M.attn_classifier)
+    else:
+        params = M.init_classifier(rng, cfg)
+        apply = M.classifier
+        prefix = "reg_classifier" if readout == "register" else "classifier"
+        train = M.make_train_step(cfg)
+        evals = M.make_eval_step(cfg)
+
+    pbin, leaves = w.add_params_bin(prefix, params)
+    treedef = jax.tree_util.tree_structure(params)
+    k = len(leaves)
+    pspecs = [_sds(l.shape) for l in leaves]
+    pnames = [f"p{i}" for i in range(k)]
+    batch = 8
+    img = _sds((batch, cfg.in_ch, 32, 32))
+    lbl = _sds((batch,), jnp.int32)
+    meta = {"kind": "classifier", "model": prefix, "batch": batch,
+            "img": 32, "classes": cfg.num_classes,
+            "param_count": int(sum(int(np.prod(l.shape)) for l in leaves))}
+
+    def fwd(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        return apply(p, args[k], cfg)
+
+    w.add(f"{prefix}_fwd_b{batch}", fwd, pspecs + [img], pnames + ["x"],
+          n_params=k, params_bin=pbin, meta=meta)
+
+    def train_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        v = jax.tree_util.tree_unflatten(treedef, args[k:2 * k])
+        np_, nv, loss = train(p, v, args[2 * k], args[2 * k + 1])
+        return (
+            tuple(jax.tree_util.tree_leaves(np_))
+            + tuple(jax.tree_util.tree_leaves(nv))
+            + (loss,)
+        )
+
+    w.add(
+        f"{prefix}_train_b{batch}",
+        train_fn,
+        pspecs + pspecs + [img, lbl],
+        pnames + [f"v{i}" for i in range(k)] + ["x", "y"],
+        n_params=k,
+        params_bin=pbin,
+        meta={**meta, "kind": "train_step", "n_vel": k},
+    )
+
+    def eval_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        return evals(p, args[k], args[k + 1])
+
+    w.add(f"{prefix}_eval_b{batch}", eval_fn, pspecs + [img, lbl],
+          pnames + ["x", "y"], n_params=k, params_bin=pbin,
+          meta={**meta, "kind": "eval_step"})
+
+
+def segmenter_entries(w: ArtifactWriter):
+    """Dense-prediction artifacts (the §6 extension): fwd + train + eval
+    at 32x32, batch 4, 2 classes (the synthetic Voronoi task)."""
+    cfg = M.SegConfig()
+    rng = np.random.default_rng(11)
+    params = M.init_segmenter(rng, cfg)
+    pbin, leaves = w.add_params_bin("segmenter", params)
+    treedef = jax.tree_util.tree_structure(params)
+    k = len(leaves)
+    pspecs = [_sds(l.shape) for l in leaves]
+    pnames = [f"p{i}" for i in range(k)]
+    batch, res = 4, 32
+    img = _sds((batch, cfg.in_ch, res, res))
+    lbl = _sds((batch, res, res), jnp.int32)
+    meta = {"kind": "segmenter", "model": "segmenter", "batch": batch,
+            "img": res, "classes": cfg.num_classes,
+            "param_count": int(sum(int(np.prod(l.shape)) for l in leaves))}
+
+    def fwd(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        return M.segmenter(p, args[k], cfg)
+
+    w.add(f"segmenter_fwd_b{batch}", fwd, pspecs + [img], pnames + ["x"],
+          n_params=k, params_bin=pbin, meta=meta)
+
+    train = M.make_seg_train_step(cfg)
+
+    def train_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        v = jax.tree_util.tree_unflatten(treedef, args[k:2 * k])
+        np_, nv, loss = train(p, v, args[2 * k], args[2 * k + 1])
+        return (
+            tuple(jax.tree_util.tree_leaves(np_))
+            + tuple(jax.tree_util.tree_leaves(nv))
+            + (loss,)
+        )
+
+    w.add(
+        f"segmenter_train_b{batch}",
+        train_fn,
+        pspecs + pspecs + [img, lbl],
+        pnames + [f"v{i}" for i in range(k)] + ["x", "y"],
+        n_params=k, params_bin=pbin,
+        meta={**meta, "kind": "seg_train_step", "n_vel": k},
+    )
+
+    evals = M.make_seg_eval_step(cfg)
+
+    def eval_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        return evals(p, args[k], args[k + 1])
+
+    w.add(f"segmenter_eval_b{batch}", eval_fn, pspecs + [img, lbl],
+          pnames + ["x", "y"], n_params=k, params_bin=pbin,
+          meta={**meta, "kind": "seg_eval_step"})
+
+
+def denoiser_entries(w: ArtifactWriter):
+    cfg = M.DenoiserConfig()
+    rng = np.random.default_rng(7)
+    params = M.init_denoiser(rng, cfg)
+    pbin, leaves = w.add_params_bin("denoiser", params)
+    treedef = jax.tree_util.tree_structure(params)
+    k = len(leaves)
+    pspecs = [_sds(l.shape) for l in leaves]
+    pnames = [f"p{i}" for i in range(k)]
+    meta = {"kind": "denoiser", "dim": cfg.dim, "depth": cfg.depth,
+            "param_count": int(sum(int(np.prod(l.shape)) for l in leaves))}
+
+    # Forward at two resolutions — the Fig-5 resolution sweep buckets.
+    for (batch, res) in [(4, 16), (1, 32)]:
+        def fwd(*args):
+            p = jax.tree_util.tree_unflatten(treedef, args[:k])
+            return M.denoiser(p, args[k], args[k + 1], cfg)
+
+        w.add(
+            f"denoiser_fwd_r{res}_b{batch}",
+            fwd,
+            pspecs + [_sds((batch, cfg.in_ch, res, res)), _sds((batch,))],
+            pnames + ["x", "t"],
+            n_params=k, params_bin=pbin,
+            meta={**meta, "res": res, "batch": batch},
+        )
+
+    # Train step at 16x16 (epsilon-prediction objective).
+    train = M.make_denoise_train_step(cfg)
+    batch, res = 4, 16
+
+    def train_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:k])
+        np_, loss = train(p, args[k], args[k + 1], args[k + 2])
+        return tuple(jax.tree_util.tree_leaves(np_)) + (loss,)
+
+    w.add(
+        f"denoiser_train_r{res}_b{batch}",
+        train_fn,
+        pspecs + [
+            _sds((batch, cfg.in_ch, res, res)),
+            _sds((batch, cfg.in_ch, res, res)),
+            _sds((batch,), jnp.int32),
+        ],
+        pnames + ["x0", "noise", "t"],
+        n_params=k, params_bin=pbin,
+        meta={**meta, "kind": "denoise_train_step", "res": res, "batch": batch},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated families: "
+                         "scan,classifier,attn,register,segmenter,denoiser")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    w = ArtifactWriter(args.out)
+    print("== AOT lowering (jax", jax.__version__, ") ==")
+    if only is None or "scan" in only:
+        scan_entries(w)
+    if only is None or "classifier" in only:
+        classifier_entries(w, attn=False)
+    if only is None or "attn" in only:
+        classifier_entries(w, attn=True)
+    if only is None or "register" in only:
+        classifier_entries(w, readout="register")
+    if only is None or "segmenter" in only:
+        segmenter_entries(w)
+    if only is None or "denoiser" in only:
+        denoiser_entries(w)
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""L1: the fused GSPN-2 line-scan as a single Pallas kernel.
+
+This is the TPU re-think of the paper's single-kernel CUDA design (§4.1,
+§4.3 of the paper). The mapping from the paper's CUDA concepts:
+
+  CUDA thread block over (chunk, n, c)    ->  Pallas grid (n, c_group, chunk)
+  one warp pinned per channel slice       ->  `c_tile` channels per program
+                                              (the paper's 2D block / cSlice)
+  shared-memory staging of h_{i-1}        ->  the scan carry lives in
+                                              registers/VMEM for the whole
+                                              kernel (never round-trips HBM)
+  coalesced column accesses               ->  H is the minor (lane) axis of
+                                              every block; each step reads a
+                                              contiguous (c_tile, H) slab
+  single fused kernel, inner column loop  ->  one `pallas_call` whose body
+                                              runs the full fori_loop over W
+
+The kernel MUST run with ``interpret=True`` on this CPU-only image: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Numerics are identical between interpret and compiled modes; TPU
+performance is estimated analytically in DESIGN.md §8.
+
+Tap/tensor conventions match ``ref.py`` (see its docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def normalize_taps(a_raw: jnp.ndarray) -> jnp.ndarray:
+    """jnp twin of ref.normalize_taps: sigmoid + boundary-masked row
+    normalisation. Guarantees the Stability-Context Condition (each
+    tridiagonal row of w_i sums to exactly 1)."""
+    a = jax.nn.sigmoid(a_raw)
+    h = a.shape[-2]
+    row = jnp.arange(h)
+    up_ok = (row > 0)[:, None]  # (H, 1) broadcast over W
+    dn_ok = (row < h - 1)[:, None]
+    mask = jnp.stack(
+        [
+            jnp.broadcast_to(up_ok, a.shape[-2:]),
+            jnp.ones(a.shape[-2:], dtype=bool),
+            jnp.broadcast_to(dn_ok, a.shape[-2:]),
+        ],
+        axis=0,
+    )
+    a = jnp.where(mask, a, 0.0)
+    return a / jnp.sum(a, axis=-3, keepdims=True)
+
+
+def _scan_kernel(x_ref, a_ref, lam_ref, o_ref, *, width: int):
+    """Kernel body: one (n, channel-group, chunk) program.
+
+    Block shapes:
+      x_ref, lam_ref, o_ref : (1, c_tile, H, K)
+      a_ref                 : (1, cw_tile, 3, H, K)  cw_tile in {1, c_tile}
+
+    The hidden-state carry ``h`` has shape (c_tile, H) and stays on-chip
+    for the entire scan — this is the fused-kernel + SRAM-staging insight
+    of the paper in Pallas form.
+    """
+    c_tile, hdim = x_ref.shape[1], x_ref.shape[2]
+
+    def step(i, h):
+        # Taps for this column; a channel-shared block (cw_tile == 1)
+        # broadcasts over the c_tile axis.
+        a_up = a_ref[0, :, 0, :, i]
+        a_ct = a_ref[0, :, 1, :, i]
+        a_dn = a_ref[0, :, 2, :, i]
+        zero = jnp.zeros((h.shape[0], 1), dtype=h.dtype)
+        h_up = jnp.concatenate([zero, h[:, :-1]], axis=1)  # h_{i-1}[r-1]
+        h_dn = jnp.concatenate([h[:, 1:], zero], axis=1)  # h_{i-1}[r+1]
+        xi = x_ref[0, :, :, i].astype(jnp.float32)
+        li = lam_ref[0, :, :, i].astype(jnp.float32)
+        h_new = (
+            a_up.astype(jnp.float32) * h_up
+            + a_ct.astype(jnp.float32) * h
+            + a_dn.astype(jnp.float32) * h_dn
+            + li * xi
+        )
+        o_ref[0, :, :, i] = h_new.astype(o_ref.dtype)
+        return h_new
+
+    h0 = jnp.zeros((c_tile, hdim), dtype=jnp.float32)
+    jax.lax.fori_loop(0, width, step, h0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kchunk", "c_tile", "interpret")
+)
+def gspn_fused(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    lam: jnp.ndarray,
+    *,
+    kchunk: int = 0,
+    c_tile: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused left-to-right GSPN scan (GSPN-2 single-kernel analog).
+
+    x   : (N, C, H, W)
+    a   : (N, Cw, 3, H, W) **already normalised** taps (row-stochastic);
+          Cw == 1 selects channel-shared (compact) propagation, Cw == C
+          per-channel (GSPN-1 semantics).
+    lam : (N, C, H, W)
+    kchunk : 0 = global scan; > 0 = GSPN-local with independent chunks.
+    c_tile : channels per program — the paper's 2D-block `cSlice` knob.
+
+    Returns hidden states h with x's shape and dtype (accumulation is f32).
+    """
+    n, c, hdim, wdim = x.shape
+    cw = a.shape[1]
+    if cw not in (1, c):
+        raise ValueError(f"Cw must be 1 or C={c}, got {cw}")
+    if c % c_tile != 0:
+        raise ValueError(f"c_tile={c_tile} must divide C={c}")
+    k = kchunk if kchunk and kchunk > 0 else wdim
+    if wdim % k != 0:
+        raise ValueError(f"kchunk={k} must divide W={wdim}")
+    nchunks = wdim // k
+    cw_tile = c_tile if cw == c else 1
+
+    grid = (n, c // c_tile, nchunks)
+    kernel = functools.partial(_scan_kernel, width=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, c_tile, hdim, k), lambda ni, ci, ki: (ni, ci, 0, ki)
+            ),
+            pl.BlockSpec(
+                (1, cw_tile, 3, hdim, k),
+                (lambda ni, ci, ki: (ni, ci, 0, 0, ki))
+                if cw_tile == c_tile and cw == c
+                else (lambda ni, ci, ki: (ni, 0, 0, 0, ki)),
+            ),
+            pl.BlockSpec(
+                (1, c_tile, hdim, k), lambda ni, ci, ki: (ni, ci, 0, ki)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, c_tile, hdim, k), lambda ni, ci, ki: (ni, ci, 0, ki)
+        ),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, a, lam)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: forward kernel + fused backward kernel (custom VJP)
+# ---------------------------------------------------------------------------
+#
+# `pallas_call` is a primitive with no AD rule, so models that train through
+# the scan use `gspn_scan`, which pairs the forward kernel with the fused
+# reverse-scan kernel in gspn_bwd.py. The tap input `a` is the *normalised*
+# tap tensor — normalize_taps is plain jnp, so sigmoid/masking/renorm
+# gradients flow through ordinary JAX AD outside the kernel.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def gspn_scan(x, a, lam, kchunk=0, c_tile=1, interpret=True):
+    """Differentiable fused GSPN scan (canonical left-to-right).
+
+    Same contract as :func:`gspn_fused`; additionally supports
+    ``jax.grad`` via the fused backward kernel.
+    """
+    return gspn_fused(x, a, lam, kchunk=kchunk, c_tile=c_tile, interpret=interpret)
+
+
+def _gspn_scan_fwd(x, a, lam, kchunk, c_tile, interpret):
+    h = gspn_fused(x, a, lam, kchunk=kchunk, c_tile=c_tile, interpret=interpret)
+    return h, (x, a, lam, h)
+
+
+def _gspn_scan_bwd(kchunk, c_tile, interpret, res, g):
+    from .gspn_bwd import gspn_fused_bwd
+
+    x, a, lam, h = res
+    dx, da, dlam = gspn_fused_bwd(
+        g, x, a, lam, h, kchunk=kchunk, c_tile=c_tile, interpret=interpret
+    )
+    return dx, da, dlam
+
+
+gspn_scan.defvjp(_gspn_scan_fwd, _gspn_scan_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Directional wrappers (mirror ref.py's to/from_canonical).
+# ---------------------------------------------------------------------------
+
+DIRECTIONS = ("l2r", "r2l", "t2b", "b2t")
+
+
+def to_canonical(t: jnp.ndarray, direction: str) -> jnp.ndarray:
+    if direction == "l2r":
+        return t
+    if direction == "r2l":
+        return jnp.flip(t, axis=-1)
+    if direction == "t2b":
+        return jnp.swapaxes(t, -1, -2)
+    if direction == "b2t":
+        return jnp.flip(jnp.swapaxes(t, -1, -2), axis=-1)
+    raise ValueError(direction)
+
+
+def from_canonical(t: jnp.ndarray, direction: str) -> jnp.ndarray:
+    if direction == "l2r":
+        return t
+    if direction == "r2l":
+        return jnp.flip(t, axis=-1)
+    if direction == "t2b":
+        return jnp.swapaxes(t, -1, -2)
+    if direction == "b2t":
+        return jnp.swapaxes(jnp.flip(t, axis=-1), -1, -2)
+    raise ValueError(direction)
+
+
+def gspn_scan_dir(
+    x: jnp.ndarray,
+    a_raw: jnp.ndarray,
+    lam: jnp.ndarray,
+    direction: str = "l2r",
+    *,
+    kchunk: int = 0,
+    c_tile: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Normalise taps and run the fused scan in the given direction.
+
+    ``a_raw`` is in canonical orientation (computed from the reoriented
+    feature map), matching ref.gspn_scan_ref_dir.
+    """
+    a = normalize_taps(a_raw)
+    xc = to_canonical(x, direction)
+    lamc = to_canonical(lam, direction)
+    hc = gspn_fused(
+        xc, a, lamc, kchunk=kchunk, c_tile=c_tile, interpret=interpret
+    )
+    return from_canonical(hc, direction)

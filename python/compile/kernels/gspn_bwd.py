@@ -1,0 +1,153 @@
+"""L1: the fused GSPN backward pass as a single Pallas kernel.
+
+The paper benchmarks backward as well as forward (Fig. 4 reports 25-49x
+backward speedups), and GSPN-1's backward suffered the same per-step
+micro-launch structure. This module is the GSPN-2-style *fused reverse
+scan*: one `pallas_call`, the adjoint carry staged on-chip for the whole
+kernel, contiguous column slabs.
+
+Math. Forward (per channel, canonical left-to-right):
+
+    h_i = W_i h_{i-1} + lam_i .* x_i        (W_i tridiagonal from taps a)
+
+Given upstream gradients g_i = dL/dh_i, define the adjoint
+
+    ghat_i = g_i + W_{i+1}^T ghat_{i+1}     (reverse scan, ghat_W = g_W)
+
+Then
+    dL/dx_i    = lam_i .* ghat_i
+    dL/dlam_i  = x_i  .* ghat_i
+    dL/da_up [r,i] = ghat_i[r] * h_{i-1}[r-1]
+    dL/da_ct [r,i] = ghat_i[r] * h_{i-1}[r]
+    dL/da_dn [r,i] = ghat_i[r] * h_{i-1}[r+1]
+
+with h_{-1} = 0 (and per-chunk resets handled for free because each chunk
+is its own grid program). W^T applied to a vector v reads
+
+    (W^T v)[r] = a_up[r+1] v[r+1] + a_ct[r] v[r] + a_dn[r-1] v[r-1].
+
+Channel-shared taps (Cw == 1) sum the tap gradient over channels; the
+kernel always emits per-channel tap gradients and the wrapper reduces.
+
+`gspn.py`'s ``gspn_scan`` ties this to the forward kernel via
+``jax.custom_vjp`` so L2 models can be differentiated and the whole
+train-step lowers to one HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_bwd_kernel(g_ref, a_ref, x_ref, lam_ref, h_ref,
+                     dx_ref, da_ref, dlam_ref, *, width: int):
+    """Kernel body: one (n, channel-group, chunk) program, reverse scan.
+
+    Block shapes:
+      g_ref, x_ref, lam_ref, h_ref, dx_ref, dlam_ref : (1, c_tile, H, K)
+      a_ref  : (1, cw_tile, 3, H, K)   cw_tile in {1, c_tile}
+      da_ref : (1, c_tile, 3, H, K)    per-channel tap grads (reduced
+                                       outside when taps are shared)
+
+    The adjoint carry (c_tile, H) stays on-chip for the entire reverse
+    scan — the backward twin of the forward kernel's SRAM staging.
+    """
+    c_tile, hdim = g_ref.shape[1], g_ref.shape[2]
+
+    def wt_apply(a_up, a_ct, a_dn, v):
+        """(W^T v) for tridiagonal W given its taps, batched over c_tile."""
+        zero = jnp.zeros((v.shape[0], 1), dtype=v.dtype)
+        up_shift = jnp.concatenate([a_up[:, 1:] * v[:, 1:], zero], axis=1)
+        dn_shift = jnp.concatenate([zero, a_dn[:, :-1] * v[:, :-1]], axis=1)
+        return up_shift + a_ct * v + dn_shift
+
+    def step(j, carry):
+        i = width - 1 - j
+        a_up = a_ref[0, :, 0, :, i].astype(jnp.float32)
+        a_ct = a_ref[0, :, 1, :, i].astype(jnp.float32)
+        a_dn = a_ref[0, :, 2, :, i].astype(jnp.float32)
+        ghat = g_ref[0, :, :, i].astype(jnp.float32) + carry
+
+        # h_{i-1}: previous forward output, zero at the chunk head.
+        iprev = jnp.maximum(i - 1, 0)
+        h_prev = jnp.where(
+            i == 0,
+            jnp.zeros((c_tile, hdim), dtype=jnp.float32),
+            h_ref[0, :, :, iprev].astype(jnp.float32),
+        )
+
+        xi = x_ref[0, :, :, i].astype(jnp.float32)
+        li = lam_ref[0, :, :, i].astype(jnp.float32)
+        dx_ref[0, :, :, i] = (li * ghat).astype(dx_ref.dtype)
+        dlam_ref[0, :, :, i] = (xi * ghat).astype(dlam_ref.dtype)
+
+        zero = jnp.zeros((c_tile, 1), dtype=jnp.float32)
+        hp_up = jnp.concatenate([zero, h_prev[:, :-1]], axis=1)  # h_{i-1}[r-1]
+        hp_dn = jnp.concatenate([h_prev[:, 1:], zero], axis=1)   # h_{i-1}[r+1]
+        da_ref[0, :, 0, :, i] = (ghat * hp_up).astype(da_ref.dtype)
+        da_ref[0, :, 1, :, i] = (ghat * h_prev).astype(da_ref.dtype)
+        da_ref[0, :, 2, :, i] = (ghat * hp_dn).astype(da_ref.dtype)
+
+        return wt_apply(a_up, a_ct, a_dn, ghat)
+
+    c0 = jnp.zeros((c_tile, hdim), dtype=jnp.float32)
+    jax.lax.fori_loop(0, width, step, c0)
+
+
+@functools.partial(jax.jit, static_argnames=("kchunk", "c_tile", "interpret"))
+def gspn_fused_bwd(
+    g: jnp.ndarray,
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    lam: jnp.ndarray,
+    h: jnp.ndarray,
+    *,
+    kchunk: int = 0,
+    c_tile: int = 1,
+    interpret: bool = True,
+):
+    """Fused reverse scan. Returns (dx, da, dlam) with da matching a's
+    shape (channel-shared tap grads are summed over channels)."""
+    n, c, hdim, wdim = x.shape
+    cw = a.shape[1]
+    if cw not in (1, c):
+        raise ValueError(f"Cw must be 1 or C={c}, got {cw}")
+    if c % c_tile != 0:
+        raise ValueError(f"c_tile={c_tile} must divide C={c}")
+    k = kchunk if kchunk and kchunk > 0 else wdim
+    if wdim % k != 0:
+        raise ValueError(f"kchunk={k} must divide W={wdim}")
+    nchunks = wdim // k
+    cw_tile = c_tile if cw == c else 1
+
+    grid = (n, c // c_tile, nchunks)
+    kernel = functools.partial(_scan_bwd_kernel, width=k)
+    blk = pl.BlockSpec((1, c_tile, hdim, k), lambda ni, ci, ki: (ni, ci, 0, ki))
+    a_spec = pl.BlockSpec(
+        (1, cw_tile, 3, hdim, k),
+        (lambda ni, ci, ki: (ni, ci, 0, 0, ki))
+        if cw_tile == c_tile and cw == c
+        else (lambda ni, ci, ki: (ni, 0, 0, 0, ki)),
+    )
+    da_spec = pl.BlockSpec(
+        (1, c_tile, 3, hdim, k), lambda ni, ci, ki: (ni, ci, 0, 0, ki)
+    )
+    dx, da_pc, dlam = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk, a_spec, blk, blk, blk],
+        out_specs=[blk, da_spec, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((n, c, 3, hdim, wdim), jnp.float32),
+            jax.ShapeDtypeStruct(lam.shape, lam.dtype),
+        ],
+        interpret=interpret,
+    )(g, a, x, lam, h)
+
+    da = jnp.sum(da_pc, axis=1, keepdims=True) if cw == 1 else da_pc
+    return dx, da.astype(a.dtype), dlam

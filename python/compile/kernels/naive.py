@@ -1,0 +1,65 @@
+"""L1 baseline: the per-step GSPN-1 analog.
+
+GSPN-1 launched one small CUDA kernel per propagation step (§3.3 of the
+paper). The JAX analog of that structure is a `lax.scan` over columns where
+every step is a handful of small element-wise XLA ops on (N, C, H) slabs —
+the hidden state round-trips through the loop carry (the HBM analog) and
+nothing is fused across steps. This module exists:
+
+  * as a second, structurally different implementation to cross-check the
+    fused Pallas kernel against (both must match ref.py), and
+  * as the baseline whose step count / op structure feeds the GSPN-1 cost
+    model in `rust/src/gpusim/` (one launch per step, no on-chip reuse).
+
+Tap/tensor conventions match ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("kchunk",))
+def gspn_naive(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    lam: jnp.ndarray,
+    *,
+    kchunk: int = 0,
+) -> jnp.ndarray:
+    """Per-step left-to-right scan (GSPN-1 structure).
+
+    x   : (N, C, H, W)
+    a   : (N, Cw, 3, H, W) normalised taps, Cw in {1, C}
+    lam : (N, C, H, W)
+
+    Semantically identical to kernels.gspn.gspn_fused.
+    """
+    n, c, hdim, wdim = x.shape
+    k = kchunk if kchunk and kchunk > 0 else wdim
+    if wdim % k != 0:
+        raise ValueError(f"kchunk={k} must divide W={wdim}")
+
+    # Move the scan axis (W) to the front: (W, N, C, H) / (W, N, Cw, 3, H).
+    xs = jnp.moveaxis(x, -1, 0).astype(jnp.float32)
+    lams = jnp.moveaxis(lam, -1, 0).astype(jnp.float32)
+    avs = jnp.moveaxis(a, -1, 0).astype(jnp.float32)
+    # Chunk reset mask: step i starts a new chunk iff i % k == 0.
+    reset = (jnp.arange(wdim) % k) == 0
+
+    def step(h, inp):
+        xi, li, ai, ri = inp
+        h = jnp.where(ri, jnp.zeros_like(h), h)
+        a_up, a_ct, a_dn = ai[:, :, 0], ai[:, :, 1], ai[:, :, 2]
+        zero = jnp.zeros(h.shape[:-1] + (1,), dtype=h.dtype)
+        h_up = jnp.concatenate([zero, h[..., :-1]], axis=-1)
+        h_dn = jnp.concatenate([h[..., 1:], zero], axis=-1)
+        h_new = a_up * h_up + a_ct * h + a_dn * h_dn + li * xi
+        return h_new, h_new
+
+    h0 = jnp.zeros((n, c, hdim), dtype=jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (xs, lams, avs, reset))
+    return jnp.moveaxis(hs, 0, -1).astype(x.dtype)

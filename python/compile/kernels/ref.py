@@ -1,0 +1,181 @@
+"""Pure-numpy oracle for the GSPN line-scan recurrence.
+
+This module is the correctness ground truth for every other implementation
+(the fused Pallas kernel, the per-step baseline, and the Rust `scan`
+module). It is deliberately written in the most literal way possible —
+materialising the tridiagonal propagation matrix ``w_i`` of Eq. (1) as a
+dense ``H x H`` matrix and performing explicit matrix-vector products —
+so that it shares no code (and no bugs) with the optimised paths.
+
+Conventions (canonical left-to-right scan; see DESIGN.md §6):
+
+  x     : (N, C, H, W)  input
+  a_raw : (N, Cw, 3, H, W)  unnormalised tap logits, Cw == C (per-channel,
+          GSPN-1 mode) or Cw == 1 (channel-shared, GSPN-2 mode).
+          Tap 0 = "up" (connects to row r-1 of the previous column),
+          tap 1 = "center" (row r), tap 2 = "down" (row r+1).
+  lam   : (N, C, H, W)  per-pixel input scaling (Diag(lambda) in Eq. 1)
+
+The recurrence over columns i = 0..W-1:
+
+  h[..., 0] = lam[..., 0] * x[..., 0]
+  h[..., i] = w_i @ h[..., i-1] + lam[..., i] * x[..., i]
+
+where ``w_i`` is tridiagonal and **row-stochastic** (Stability-Context
+Condition): row r of ``w_i`` holds (a_up[r], a_c[r], a_dn[r]) at columns
+(r-1, r, r+1), with out-of-range taps masked *before* normalisation so
+every row sums to exactly 1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def normalize_taps(a_raw: np.ndarray) -> np.ndarray:
+    """sigmoid + boundary-masked row normalisation -> row-stochastic taps.
+
+    a_raw: (..., 3, H, W) logits. Returns same-shape array where, for each
+    (row r, column i), the in-range taps sum to 1 and out-of-range taps
+    (up at r=0, down at r=H-1) are exactly 0.
+    """
+    a = 1.0 / (1.0 + np.exp(-np.asarray(a_raw, dtype=np.float64)))
+    h = a.shape[-2]
+    mask = np.ones_like(a)
+    mask[..., 0, 0, :] = 0.0  # "up" tap invalid at top row
+    mask[..., 2, h - 1, :] = 0.0  # "down" tap invalid at bottom row
+    a = a * mask
+    denom = a.sum(axis=-3, keepdims=True)
+    return a / denom
+
+
+def tridiag_from_taps(a: np.ndarray) -> np.ndarray:
+    """Materialise one dense tridiagonal matrix from taps of one column.
+
+    a: (3, H) normalised taps for a single (n, c, column i).
+    Returns W_i: (H, H) with W_i[r, r-1] = a[0, r], W_i[r, r] = a[1, r],
+    W_i[r, r+1] = a[2, r].
+    """
+    h = a.shape[1]
+    w = np.zeros((h, h), dtype=np.float64)
+    for r in range(h):
+        if r - 1 >= 0:
+            w[r, r - 1] = a[0, r]
+        w[r, r] = a[1, r]
+        if r + 1 < h:
+            w[r, r + 1] = a[2, r]
+    return w
+
+
+def gspn_scan_ref(
+    x: np.ndarray,
+    a_raw: np.ndarray,
+    lam: np.ndarray,
+    kchunk: int = 0,
+) -> np.ndarray:
+    """Reference left-to-right GSPN scan via dense tridiagonal matmuls.
+
+    kchunk == 0 means global propagation (one chunk spanning all of W);
+    kchunk > 0 resets the hidden state at every chunk boundary
+    (the GSPN-local variant of §3.2).
+
+    Returns h: (N, C, H, W) hidden states (the caller applies the output
+    modulation u ⊙ h of Eq. 2).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    lam = np.asarray(lam, dtype=np.float64)
+    n, c, hdim, wdim = x.shape
+    cw = a_raw.shape[1]
+    assert cw in (1, c), f"Cw must be 1 or C, got {cw}"
+    a = normalize_taps(a_raw)
+
+    chunk = kchunk if kchunk and kchunk > 0 else wdim
+    out = np.zeros_like(x)
+    for ni in range(n):
+        for ci in range(c):
+            cwi = ci if cw == c else 0
+            h = np.zeros(hdim, dtype=np.float64)
+            for i in range(wdim):
+                if i % chunk == 0:
+                    h = np.zeros(hdim, dtype=np.float64)
+                w_i = tridiag_from_taps(a[ni, cwi, :, :, i])
+                h = w_i @ h + lam[ni, ci, :, i] * x[ni, ci, :, i]
+                out[ni, ci, :, i] = h
+    return out
+
+
+def gspn_expand_g(a_raw: np.ndarray, lam: np.ndarray, n: int, c: int) -> np.ndarray:
+    """Expand the recurrence into the dense block lower-triangular G of Eq. 4.
+
+    For a single (n, c): returns G (W*H, W*H) such that vec(h) = G vec(x),
+    where vec stacks columns i = 0..W-1. Used to validate the
+    linear-attention view: block (i, j) equals
+    (prod_{k=j+1}^{i} w_k) @ Diag(lam_j) for j <= i, else 0.
+    """
+    a = normalize_taps(a_raw)
+    cw = a_raw.shape[1]
+    cwi = c if cw > 1 else 0
+    hdim, wdim = lam.shape[-2], lam.shape[-1]
+    ws = [tridiag_from_taps(a[n, cwi, :, :, i]) for i in range(wdim)]
+    lams = [np.diag(lam[n, c, :, i].astype(np.float64)) for i in range(wdim)]
+    g = np.zeros((wdim * hdim, wdim * hdim), dtype=np.float64)
+    for i in range(wdim):
+        for j in range(i + 1):
+            block = lams[j]
+            for k in range(j + 1, i + 1):
+                block = ws[k] @ block
+            g[i * hdim : (i + 1) * hdim, j * hdim : (j + 1) * hdim] = block
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Directional wrappers. All four directions are expressed by flipping /
+# transposing around the canonical left-to-right scan, exactly as the
+# Rust reference and the Pallas kernel wrapper do.
+# ---------------------------------------------------------------------------
+
+DIRECTIONS = ("l2r", "r2l", "t2b", "b2t")
+
+
+def to_canonical(t: np.ndarray, direction: str) -> np.ndarray:
+    """Reorient a (..., H, W) tensor so the requested scan direction
+    becomes a left-to-right scan over the last axis."""
+    if direction == "l2r":
+        return t
+    if direction == "r2l":
+        return t[..., ::-1]
+    if direction == "t2b":
+        return np.swapaxes(t, -1, -2)
+    if direction == "b2t":
+        return np.swapaxes(t, -1, -2)[..., ::-1]
+    raise ValueError(direction)
+
+
+def from_canonical(t: np.ndarray, direction: str) -> np.ndarray:
+    """Inverse of :func:`to_canonical`."""
+    if direction == "l2r":
+        return t
+    if direction == "r2l":
+        return t[..., ::-1]
+    if direction == "t2b":
+        return np.swapaxes(t, -1, -2)
+    if direction == "b2t":
+        return np.swapaxes(t[..., ::-1], -1, -2)
+    raise ValueError(direction)
+
+
+def gspn_scan_ref_dir(
+    x: np.ndarray,
+    a_raw: np.ndarray,
+    lam: np.ndarray,
+    direction: str = "l2r",
+    kchunk: int = 0,
+) -> np.ndarray:
+    """Directional reference scan. ``a_raw`` is given in canonical
+    orientation (taps over the scan's cross axis), i.e. the caller produces
+    it *after* reorienting x — matching how the model computes taps from
+    the reoriented feature map."""
+    xc = to_canonical(x, direction)
+    lamc = to_canonical(lam, direction)
+    hc = gspn_scan_ref(xc, a_raw, lamc, kchunk=kchunk)
+    return from_canonical(hc, direction)

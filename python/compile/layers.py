@@ -1,0 +1,159 @@
+"""L2 building blocks: the small neural-net layer zoo the GSPN models use.
+
+Everything here is a pure function over explicit parameter pytrees (nested
+dicts of jnp arrays) so the whole model lowers to a single HLO module with
+no Python state. Initialisers live next to the apply functions and use a
+numpy Generator so artifact builds are deterministic.
+
+Layout convention is NCHW throughout (matching the paper and the Rust
+tensor library).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def _fan_in_normal(rng: np.random.Generator, shape, fan_in: int) -> np.ndarray:
+    std = math.sqrt(2.0 / max(1, fan_in))
+    return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+
+def init_conv(
+    rng: np.random.Generator,
+    cin: int,
+    cout: int,
+    k: int = 1,
+    *,
+    groups: int = 1,
+    zero: bool = False,
+) -> dict:
+    """Conv params: weight (cout, cin//groups, k, k) + bias (cout,)."""
+    shape = (cout, cin // groups, k, k)
+    fan_in = (cin // groups) * k * k
+    w = (
+        np.zeros(shape, dtype=np.float32)
+        if zero
+        else _fan_in_normal(rng, shape, fan_in)
+    )
+    return {"w": jnp.asarray(w), "b": jnp.zeros((cout,), dtype=jnp.float32)}
+
+
+def init_linear(rng: np.random.Generator, din: int, dout: int) -> dict:
+    return {
+        "w": jnp.asarray(_fan_in_normal(rng, (din, dout), din)),
+        "b": jnp.zeros((dout,), dtype=jnp.float32),
+    }
+
+
+def init_norm(c: int) -> dict:
+    return {"g": jnp.ones((c,), dtype=jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Apply functions
+# ---------------------------------------------------------------------------
+
+
+def conv2d(p: dict, x: jnp.ndarray, *, stride: int = 1, groups: int = 1) -> jnp.ndarray:
+    """NCHW conv with SAME padding."""
+    k = p["w"].shape[-1]
+    pad = (k - 1) // 2
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    return y + p["b"][None, :, None, None]
+
+
+def conv1x1(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return conv2d(p, x)
+
+
+def dwconv3x3(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise 3x3 — the Local Perception Unit's workhorse."""
+    return conv2d(p, x, groups=x.shape[1])
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Channel RMSNorm over NCHW (normalises the C axis per position)."""
+    ms = jnp.mean(jnp.square(x), axis=1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * p["g"][None, :, None, None]
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, H, W) -> (N, C)."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def init_register_readout(rng: np.random.Generator, c: int, k: int = 4) -> dict:
+    """Register-token readout head (see §6 Limitations).
+
+    The paper notes GSPN "lacks CLS and register tokens commonly used in
+    Vision Transformers, limiting direct applicability as a drop-in
+    attention replacement in models relying on summary tokens". This head
+    closes that gap: `k` learnable register tokens cross-attend over the
+    final spatial features (queries = registers, keys/values = projected
+    pixels) and their mean is the summary ("CLS") vector. Because the
+    attention is only (k x HW), it adds O(k*HW*C) — negligible next to
+    the backbone — while giving downstream users the summary-token
+    interface ViT pipelines expect.
+    """
+    return {
+        "reg": _fan_in_normal(rng, (k, c), c),       # learnable registers
+        "wk": init_linear(rng, c, c),                 # key projection
+        "wv": init_linear(rng, c, c),                 # value projection
+        "wo": init_linear(rng, c, c),                 # output projection
+    }
+
+
+def register_readout(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, H, W) -> (N, C) summary via register-token cross-attention."""
+    n, c, h, w = x.shape
+    toks = x.reshape(n, c, h * w).transpose(0, 2, 1)        # (N, HW, C)
+    keys = linear(p["wk"], toks)                             # (N, HW, C)
+    vals = linear(p["wv"], toks)                             # (N, HW, C)
+    q = p["reg"]                                             # (K, C)
+    att = jnp.einsum("kc,nlc->nkl", q, keys) / jnp.sqrt(jnp.float32(c))
+    att = jax.nn.softmax(att, axis=-1)                       # (N, K, HW)
+    reg = jnp.einsum("nkl,nlc->nkc", att, vals)              # (N, K, C)
+    out = linear(p["wo"], reg)                               # (N, K, C)
+    return jnp.mean(out, axis=1)                             # (N, C)
+
+
+def depth_to_space(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    """(N, C*r^2, H, W) -> (N, C, H*r, W*r) pixel shuffle (decoder upsample)."""
+    n, crr, h, w = x.shape
+    c = crr // (r * r)
+    x = x.reshape(n, c, r, r, h, w)
+    x = x.transpose(0, 1, 4, 2, 5, 3)  # (N, C, H, r, W, r)
+    return x.reshape(n, c, h * r, w * r)
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int, max_period: float = 10_000.0) -> jnp.ndarray:
+    """Sinusoidal timestep embedding, (N,) -> (N, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)

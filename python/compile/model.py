@@ -1,0 +1,478 @@
+"""L2: the GSPN-2 model family in JAX.
+
+This module defines, as pure functions over explicit parameter pytrees:
+
+  * ``gspn_unit``   — the paper's attention-replacement module: optional
+    compressive proxy projection (C -> C_proxy, §4.2), four directional
+    line scans through the fused Pallas kernel (L1), learned directional
+    merge, output modulation ``u`` (Eq. 2), and expansion back to C.
+  * ``gspn_block``  — LPU (depthwise conv) + GSPN unit + FFN, each behind
+    an RMSNorm with residual connections (the Table-2 block recipe).
+  * ``classifier``  — patch-embed stem, stages of blocks with strided
+    downsampling, global pool, linear head (the ImageNet-style backbone).
+  * ``denoiser``    — timestep-conditioned denoising network (the
+    text-to-image/diffusion-lite analog used for Fig 5 / Table S1).
+  * ``train_step``  — cross-entropy + SGD-with-momentum update, lowered as
+    one HLO module so the Rust training driver never touches Python.
+
+Everything is shape-polymorphic in batch only at trace time; the AOT
+pipeline (aot.py) pins concrete shapes per artifact.
+
+The ``mode`` knob selects the propagation flavour:
+  "gspn2"  — channel-shared taps (Cw = 1) + compressive proxy (§4.2)
+  "gspn1"  — per-channel taps (Cw = C_proxy), no sharing (GSPN-1 semantics)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels.gspn import DIRECTIONS, gspn_scan, normalize_taps, to_canonical, from_canonical
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GspnConfig:
+    """Architecture hyperparameters for one GSPN backbone."""
+
+    name: str = "test-tiny"
+    in_ch: int = 3
+    num_classes: int = 10
+    dims: tuple = (32, 64)          # channels per stage
+    depths: tuple = (1, 1)          # blocks per stage
+    patch: int = 4                  # stem patch size / stride
+    c_proxy: int = 2                # compressive proxy dim (§4.2)
+    kchunk: int = 0                 # 0 = global scan, >0 = GSPN-local
+    ffn_ratio: int = 4
+    mode: str = "gspn2"             # "gspn2" | "gspn1"
+    interpret: bool = True          # pallas interpret mode (CPU image)
+    readout: str = "gap"            # "gap" | "register" (§6 extension)
+    num_registers: int = 4          # register tokens when readout="register"
+
+    @property
+    def per_channel(self) -> bool:
+        return self.mode == "gspn1"
+
+
+@dataclasses.dataclass(frozen=True)
+class DenoiserConfig:
+    """Denoiser (diffusion-lite) hyperparameters."""
+
+    name: str = "denoiser-tiny"
+    in_ch: int = 3
+    dim: int = 32
+    depth: int = 4
+    time_dim: int = 64
+    c_proxy: int = 4
+    kchunk: int = 0
+    ffn_ratio: int = 4
+    mode: str = "gspn2"
+    interpret: bool = True
+
+    @property
+    def per_channel(self) -> bool:
+        return self.mode == "gspn1"
+
+
+@dataclasses.dataclass(frozen=True)
+class SegConfig:
+    """Dense-prediction (segmentation) head over a GSPN encoder.
+
+    Addresses the paper's §6 note that dense-prediction evaluation is
+    under-explored: per-pixel logits come from a pixel-shuffle decoder on
+    top of the same GSPN blocks, so the propagation path is exercised by
+    a task whose labels *require* global context (the synthetic Voronoi
+    task in rust/src/train/data.rs)."""
+
+    name: str = "seg-tiny"
+    in_ch: int = 3
+    num_classes: int = 2
+    dim: int = 32
+    depth: int = 2
+    patch: int = 4                  # stem stride == decoder upsample factor
+    c_proxy: int = 2
+    kchunk: int = 0
+    ffn_ratio: int = 4
+    mode: str = "gspn2"
+    interpret: bool = True
+    readout: str = "dense"          # unused; parity with GspnConfig
+
+    @property
+    def per_channel(self) -> bool:
+        return self.mode == "gspn1"
+
+
+# Paper-scale configs (Table 2). These are used for param/MAC accounting and
+# (in the Rust model module) cross-checked against the paper's columns; the
+# AOT artifacts use the small `test-*` configs so CPU PJRT stays fast.
+GSPN2_TINY = GspnConfig(
+    name="gspn2-t", num_classes=1000, dims=(64, 128, 320, 512),
+    depths=(2, 2, 9, 3), c_proxy=2,
+)
+GSPN2_SMALL = GspnConfig(
+    name="gspn2-s", num_classes=1000, dims=(80, 160, 400, 640),
+    depths=(3, 3, 12, 4), c_proxy=2,
+)
+GSPN2_BASE = GspnConfig(
+    name="gspn2-b", num_classes=1000, dims=(104, 208, 520, 832),
+    depths=(3, 4, 14, 5), c_proxy=2,
+)
+
+
+# ---------------------------------------------------------------------------
+# GSPN unit (the attention replacement)
+# ---------------------------------------------------------------------------
+
+
+def init_gspn_unit(rng: np.random.Generator, c: int, cfg) -> dict:
+    """Parameters of one GSPN unit operating on C channels."""
+    cp = cfg.c_proxy
+    cw = cp if cfg.per_channel else 1
+    p = {
+        "down": L.init_conv(rng, c, cp, 1),
+        "up": L.init_conv(rng, cp, c, 1),
+        # Output modulation u (Eq. 2): per proxy-channel gain applied to h.
+        "u": jnp.ones((cp,), dtype=jnp.float32),
+        # Learned directional-merge logits (softmax-combined).
+        "merge": jnp.zeros((len(DIRECTIONS),), dtype=jnp.float32),
+    }
+    for d in DIRECTIONS:
+        # Taps + lambda are input-dependent (computed from the proxy map by
+        # 1x1 convs), mirroring GSPN's data-dependent propagation weights.
+        p[f"taps_{d}"] = L.init_conv(rng, cp, 3 * cw, 1)
+        p[f"lam_{d}"] = L.init_conv(rng, cp, cp, 1)
+    return p
+
+
+def gspn_unit(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Apply the GSPN unit to x: (N, C, H, W) -> (N, C, H, W)."""
+    n, c, hdim, wdim = x.shape
+    cp = cfg.c_proxy
+    cw = cp if cfg.per_channel else 1
+
+    xp = L.conv1x1(p["down"], x)  # (N, Cp, H, W) — compressive proxy (§4.2)
+    merge = jax.nn.softmax(p["merge"])
+
+    out = jnp.zeros_like(xp)
+    for di, d in enumerate(DIRECTIONS):
+        xc = to_canonical(xp, d)  # (N, Cp, Hc, Wc)
+        a_raw = L.conv1x1(p[f"taps_{d}"], xc)  # (N, 3*Cw, Hc, Wc)
+        a_raw = a_raw.reshape(n, cw, 3, xc.shape[2], xc.shape[3])
+        lam = L.conv1x1(p[f"lam_{d}"], xc)  # (N, Cp, Hc, Wc)
+        a = normalize_taps(a_raw)
+        h = gspn_scan(xc, a, lam, cfg.kchunk, 1, cfg.interpret)
+        out = out + merge[di] * from_canonical(h, d)
+
+    out = out * p["u"][None, :, None, None]  # Eq. 2 output modulation
+    return L.conv1x1(p["up"], out)  # expand back to C
+
+
+# ---------------------------------------------------------------------------
+# GSPN block: LPU + GSPN + FFN (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+
+def init_gspn_block(rng: np.random.Generator, c: int, cfg) -> dict:
+    hid = c * cfg.ffn_ratio
+    return {
+        "lpu": L.init_conv(rng, c, c, 3, groups=c, zero=True),
+        "norm1": L.init_norm(c),
+        "gspn": init_gspn_unit(rng, c, cfg),
+        "norm2": L.init_norm(c),
+        "ffn1": L.init_conv(rng, c, hid, 1),
+        "ffn2": L.init_conv(rng, hid, c, 1),
+    }
+
+
+def gspn_block(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = x + L.dwconv3x3(p["lpu"], x)  # Local Perception Unit [52]
+    x = x + gspn_unit(p["gspn"], L.rmsnorm(p["norm1"], x), cfg)
+    y = L.rmsnorm(p["norm2"], x)
+    y = L.conv1x1(p["ffn2"], L.gelu(L.conv1x1(p["ffn1"], y)))
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# Classifier backbone
+# ---------------------------------------------------------------------------
+
+
+def init_classifier(rng: np.random.Generator, cfg: GspnConfig) -> dict:
+    p = {"stem": L.init_conv(rng, cfg.in_ch, cfg.dims[0], cfg.patch)}
+    for si, (dim, depth) in enumerate(zip(cfg.dims, cfg.depths)):
+        if si > 0:
+            p[f"down{si}"] = L.init_conv(rng, cfg.dims[si - 1], dim, 2)
+        for bi in range(depth):
+            p[f"s{si}b{bi}"] = init_gspn_block(rng, dim, cfg)
+    p["norm"] = L.init_norm(cfg.dims[-1])
+    if cfg.readout == "register":
+        p["readout"] = L.init_register_readout(rng, cfg.dims[-1], cfg.num_registers)
+    p["head"] = L.init_linear(rng, cfg.dims[-1], cfg.num_classes)
+    return p
+
+
+def classifier(p: dict, x: jnp.ndarray, cfg: GspnConfig) -> jnp.ndarray:
+    """x: (N, in_ch, H, W) -> logits (N, num_classes)."""
+    x = L.conv2d(p["stem"], x, stride=cfg.patch)
+    for si, (dim, depth) in enumerate(zip(cfg.dims, cfg.depths)):
+        if si > 0:
+            x = L.conv2d(p[f"down{si}"], x, stride=2)
+        for bi in range(depth):
+            x = gspn_block(p[f"s{si}b{bi}"], x, cfg)
+    x = L.rmsnorm(p["norm"], x)
+    if cfg.readout == "register":
+        return L.linear(p["head"], L.register_readout(p["readout"], x))
+    return L.linear(p["head"], L.global_avg_pool(x))
+
+
+# ---------------------------------------------------------------------------
+# Segmenter (dense prediction) — §6 extension
+# ---------------------------------------------------------------------------
+
+
+def init_segmenter(rng: np.random.Generator, cfg: SegConfig) -> dict:
+    p = {"stem": L.init_conv(rng, cfg.in_ch, cfg.dim, cfg.patch)}
+    for bi in range(cfg.depth):
+        p[f"b{bi}"] = init_gspn_block(rng, cfg.dim, cfg)
+    p["norm"] = L.init_norm(cfg.dim)
+    p["head"] = L.init_conv(rng, cfg.dim, cfg.num_classes * cfg.patch * cfg.patch, 1)
+    return p
+
+
+def segmenter(p: dict, x: jnp.ndarray, cfg: SegConfig) -> jnp.ndarray:
+    """x: (N, in_ch, H, W) -> per-pixel logits (N, num_classes, H, W)."""
+    x = L.conv2d(p["stem"], x, stride=cfg.patch)
+    for bi in range(cfg.depth):
+        x = gspn_block(p[f"b{bi}"], x, cfg)
+    x = L.rmsnorm(p["norm"], x)
+    x = L.conv1x1(p["head"], x)  # (N, classes*patch^2, H/p, W/p)
+    return L.depth_to_space(x, cfg.patch)
+
+
+def pixel_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean per-pixel CE. logits (N, C, H, W), labels (N, H, W) int32."""
+    logp = jax.nn.log_softmax(logits, axis=1)
+    onehot = jax.nn.one_hot(labels, logits.shape[1], axis=1, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=1))
+
+
+def make_seg_train_step(cfg: SegConfig, lr: float = 0.05, momentum: float = 0.9):
+    """SGD+momentum train step over the segmenter (pixel CE)."""
+
+    def loss_fn(params, x, y):
+        return pixel_cross_entropy(segmenter(params, x, cfg), y)
+
+    def train_step(params, vel, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_vel = jax.tree_util.tree_map(lambda v, g: momentum * v - lr * g, vel, grads)
+        new_params = jax.tree_util.tree_map(lambda p, v: p + v, params, new_vel)
+        return new_params, new_vel, loss
+
+    return train_step
+
+
+def make_seg_eval_step(cfg: SegConfig):
+    def eval_step(params, x, y):
+        logits = segmenter(params, x, cfg)
+        loss = pixel_cross_entropy(logits, y)
+        pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.int32))
+        return loss, correct
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Denoiser (diffusion-lite) — the text-to-image analog
+# ---------------------------------------------------------------------------
+
+
+def init_denoiser(rng: np.random.Generator, cfg: DenoiserConfig) -> dict:
+    p = {
+        "stem": L.init_conv(rng, cfg.in_ch, cfg.dim, 3),
+        "t1": L.init_linear(rng, cfg.time_dim, cfg.dim),
+        "t2": L.init_linear(rng, cfg.dim, cfg.dim),
+        "out_norm": L.init_norm(cfg.dim),
+        "out": L.init_conv(rng, cfg.dim, cfg.in_ch, 3, zero=True),
+    }
+    for bi in range(cfg.depth):
+        p[f"b{bi}"] = init_gspn_block(rng, cfg.dim, cfg)
+    return p
+
+
+def denoiser(p: dict, x: jnp.ndarray, t: jnp.ndarray, cfg: DenoiserConfig) -> jnp.ndarray:
+    """Predict noise: x (N, C, H, W), t (N,) -> (N, C, H, W)."""
+    emb = L.timestep_embedding(t, cfg.time_dim)
+    emb = L.linear(p["t2"], L.gelu(L.linear(p["t1"], emb)))  # (N, dim)
+    y = L.conv2d(p["stem"], x) + emb[:, :, None, None]
+    for bi in range(cfg.depth):
+        y = gspn_block(p[f"b{bi}"], y, cfg)
+    return L.conv2d(p["out"], L.rmsnorm(p["out_norm"], y))
+
+
+# ---------------------------------------------------------------------------
+# Attention baseline (for Table 2 / Fig 5-style comparisons at small scale)
+# ---------------------------------------------------------------------------
+
+
+def init_attn_unit(rng: np.random.Generator, c: int) -> dict:
+    return {
+        "qkv": L.init_conv(rng, c, 3 * c, 1),
+        "proj": L.init_conv(rng, c, c, 1),
+    }
+
+
+def attn_unit(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Single-head global self-attention over all H*W tokens (quadratic)."""
+    n, c, hdim, wdim = x.shape
+    qkv = L.conv1x1(p["qkv"], x).reshape(n, 3, c, hdim * wdim)
+    q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]  # (N, C, T)
+    att = jax.nn.softmax(jnp.einsum("nct,ncs->nts", q, k) / jnp.sqrt(c), axis=-1)
+    y = jnp.einsum("nts,ncs->nct", att, v).reshape(n, c, hdim, wdim)
+    return L.conv1x1(p["proj"], y)
+
+
+def init_attn_block(rng: np.random.Generator, c: int, ffn_ratio: int = 4) -> dict:
+    hid = c * ffn_ratio
+    return {
+        "norm1": L.init_norm(c),
+        "attn": init_attn_unit(rng, c),
+        "norm2": L.init_norm(c),
+        "ffn1": L.init_conv(rng, c, hid, 1),
+        "ffn2": L.init_conv(rng, hid, c, 1),
+    }
+
+
+def attn_block(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    x = x + attn_unit(p["attn"], L.rmsnorm(p["norm1"], x))
+    y = L.rmsnorm(p["norm2"], x)
+    return x + L.conv1x1(p["ffn2"], L.gelu(L.conv1x1(p["ffn1"], y)))
+
+
+def init_attn_classifier(rng: np.random.Generator, cfg: GspnConfig) -> dict:
+    """Same macro-architecture as `classifier` but with attention blocks."""
+    p = {"stem": L.init_conv(rng, cfg.in_ch, cfg.dims[0], cfg.patch)}
+    for si, (dim, depth) in enumerate(zip(cfg.dims, cfg.depths)):
+        if si > 0:
+            p[f"down{si}"] = L.init_conv(rng, cfg.dims[si - 1], dim, 2)
+        for bi in range(depth):
+            p[f"s{si}b{bi}"] = init_attn_block(rng, dim)
+    p["norm"] = L.init_norm(cfg.dims[-1])
+    p["head"] = L.init_linear(rng, cfg.dims[-1], cfg.num_classes)
+    return p
+
+
+def attn_classifier(p: dict, x: jnp.ndarray, cfg: GspnConfig) -> jnp.ndarray:
+    x = L.conv2d(p["stem"], x, stride=cfg.patch)
+    for si, (dim, depth) in enumerate(zip(cfg.dims, cfg.depths)):
+        if si > 0:
+            x = L.conv2d(p[f"down{si}"], x, stride=2)
+        for bi in range(depth):
+            x = attn_block(p[f"s{si}b{bi}"], x)
+    x = L.rmsnorm(p["norm"], x)
+    return L.linear(p["head"], L.global_avg_pool(x))
+
+
+# ---------------------------------------------------------------------------
+# Training step (classifier): cross-entropy + SGD momentum, one HLO module
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_train_step(cfg: GspnConfig, lr: float = 0.03, momentum: float = 0.9,
+                    model=None):
+    """Returns train_step(params, velocity, x, y) -> (params', velocity', loss).
+
+    `model` defaults to the GSPN classifier; pass `attn_classifier` for the
+    attention baseline so both lower through the identical driver.
+    """
+    apply = model or classifier
+
+    def loss_fn(params, x, y):
+        return cross_entropy(apply(params, x, cfg), y)
+
+    def train_step(params, vel, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_vel = jax.tree_util.tree_map(
+            lambda v, g: momentum * v + g, vel, grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p_, v: p_ - lr * v, params, new_vel
+        )
+        return new_params, new_vel, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: GspnConfig, model=None):
+    """Returns eval_step(params, x, y) -> (loss, n_correct)."""
+    apply = model or classifier
+
+    def eval_step(params, x, y):
+        logits = apply(params, x, cfg)
+        loss = cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+        return loss, correct
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Denoiser training step (epsilon-prediction DDPM-style objective)
+# ---------------------------------------------------------------------------
+
+
+def ddpm_alphas(steps: int = 100) -> np.ndarray:
+    """Linear-beta DDPM schedule; returns sqrt_alpha_bar, sqrt_1m_alpha_bar."""
+    betas = np.linspace(1e-4, 0.02, steps, dtype=np.float64)
+    alpha_bar = np.cumprod(1.0 - betas)
+    return (
+        np.sqrt(alpha_bar).astype(np.float32),
+        np.sqrt(1.0 - alpha_bar).astype(np.float32),
+    )
+
+
+def make_denoise_train_step(cfg: DenoiserConfig, lr: float = 1e-3,
+                            steps: int = 100):
+    sa, s1 = ddpm_alphas(steps)
+    sa_j, s1_j = jnp.asarray(sa), jnp.asarray(s1)
+
+    def loss_fn(params, x0, noise, t):
+        xt = sa_j[t][:, None, None, None] * x0 + s1_j[t][:, None, None, None] * noise
+        pred = denoiser(params, xt, t.astype(jnp.float32), cfg)
+        return jnp.mean(jnp.square(pred - noise))
+
+    def train_step(params, x0, noise, t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x0, noise, t)
+        new_params = jax.tree_util.tree_map(lambda p_, g: p_ - lr * g, params, grads)
+        return new_params, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Parameter pytree <-> flat list bridge (shared with aot.py and Rust)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params):
+    """Deterministic flatten: returns (leaves, treedef)."""
+    return jax.tree_util.tree_flatten(params)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,366 @@
+"""L1 kernel correctness: fused Pallas scan vs the numpy oracle.
+
+Covers: shape/dtype sweeps (hypothesis), all four directions, chunked
+(GSPN-local) propagation, channel-shared vs per-channel taps, c_tile
+(2D-block) variants, the Stability-Context Condition, and the
+linear-attention G-matrix identity of Eq. 4.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gspn import (
+    DIRECTIONS,
+    gspn_fused,
+    gspn_scan,
+    gspn_scan_dir,
+    normalize_taps,
+)
+from compile.kernels.naive import gspn_naive
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand_case(rng, n, c, h, w, cw):
+    x = rng.normal(size=(n, c, h, w)).astype(np.float32)
+    a_raw = rng.normal(size=(n, cw, 3, h, w)).astype(np.float32)
+    lam = rng.normal(size=(n, c, h, w)).astype(np.float32)
+    return x, a_raw, lam
+
+
+# ---------------------------------------------------------------------------
+# Tap normalisation (Stability-Context Condition)
+# ---------------------------------------------------------------------------
+
+
+class TestNormalizeTaps:
+    def test_rows_sum_to_one(self):
+        rng = np.random.default_rng(0)
+        a_raw = rng.normal(size=(2, 3, 3, 7, 5)).astype(np.float32)
+        a = np.asarray(normalize_taps(jnp.asarray(a_raw)))
+        np.testing.assert_allclose(a.sum(axis=2), 1.0, rtol=1e-6)
+
+    def test_boundary_taps_zero(self):
+        rng = np.random.default_rng(1)
+        a_raw = rng.normal(size=(1, 1, 3, 6, 4)).astype(np.float32)
+        a = np.asarray(normalize_taps(jnp.asarray(a_raw)))
+        assert np.all(a[:, :, 0, 0, :] == 0.0), "up tap at top row must be 0"
+        assert np.all(a[:, :, 2, -1, :] == 0.0), "down tap at bottom row must be 0"
+
+    def test_matches_numpy_oracle(self):
+        rng = np.random.default_rng(2)
+        a_raw = rng.normal(size=(2, 2, 3, 5, 4)).astype(np.float32)
+        got = np.asarray(normalize_taps(jnp.asarray(a_raw)))
+        want = ref.normalize_taps(a_raw)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_all_positive(self):
+        rng = np.random.default_rng(3)
+        a_raw = (rng.normal(size=(1, 1, 3, 4, 4)) * 10).astype(np.float32)
+        a = np.asarray(normalize_taps(jnp.asarray(a_raw)))
+        assert np.all(a >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel vs oracle (hypothesis sweep)
+# ---------------------------------------------------------------------------
+
+
+class TestFusedVsOracle:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        c=st.integers(1, 6),
+        h=st.integers(2, 12),
+        w=st.integers(1, 12),
+        shared=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, c, h, w, shared, seed):
+        rng = np.random.default_rng(seed)
+        cw = 1 if shared else c
+        x, a_raw, lam = rand_case(rng, n, c, h, w, cw)
+        want = ref.gspn_scan_ref(x, a_raw, lam)
+        a = normalize_taps(jnp.asarray(a_raw))
+        got = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("c_tile", [1, 2, 4])
+    def test_c_tile_invariance(self, c_tile):
+        """The 2D-block knob (cSlice analog) must not change numerics."""
+        rng = np.random.default_rng(10)
+        x, a_raw, lam = rand_case(rng, 2, 4, 8, 8, 1)
+        a = normalize_taps(jnp.asarray(a_raw))
+        base = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam), c_tile=1))
+        got = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam), c_tile=c_tile))
+        np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("kchunk", [1, 2, 4, 8])
+    def test_chunked_matches_oracle(self, kchunk):
+        rng = np.random.default_rng(11)
+        x, a_raw, lam = rand_case(rng, 1, 3, 6, 8, 1)
+        want = ref.gspn_scan_ref(x, a_raw, lam, kchunk=kchunk)
+        a = normalize_taps(jnp.asarray(a_raw))
+        got = np.asarray(
+            gspn_fused(jnp.asarray(x), a, jnp.asarray(lam), kchunk=kchunk)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_chunk_locality(self):
+        """GSPN-local: perturbing chunk 0 must not affect chunk 1 outputs."""
+        rng = np.random.default_rng(12)
+        x, a_raw, lam = rand_case(rng, 1, 2, 4, 8, 1)
+        a = normalize_taps(jnp.asarray(a_raw))
+        out1 = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam), kchunk=4))
+        x2 = x.copy()
+        x2[..., :4] += 100.0
+        out2 = np.asarray(gspn_fused(jnp.asarray(x2), a, jnp.asarray(lam), kchunk=4))
+        np.testing.assert_allclose(out1[..., 4:], out2[..., 4:], rtol=1e-6)
+        assert np.abs(out1[..., :4] - out2[..., :4]).max() > 1.0
+
+    def test_global_scan_is_cross_chunk(self):
+        """Without chunking, early columns must influence late columns."""
+        rng = np.random.default_rng(13)
+        x, a_raw, lam = rand_case(rng, 1, 1, 4, 8, 1)
+        a = normalize_taps(jnp.asarray(a_raw))
+        out1 = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam)))
+        x2 = x.copy()
+        x2[..., 0] += 100.0
+        out2 = np.asarray(gspn_fused(jnp.asarray(x2), a, jnp.asarray(lam)))
+        assert np.abs(out1[..., -1] - out2[..., -1]).max() > 1e-3
+
+    def test_bf16_runs(self):
+        """bf16 inputs (TPU-MXU readiness): accumulate f32, cast back."""
+        rng = np.random.default_rng(14)
+        x, a_raw, lam = rand_case(rng, 1, 2, 4, 6, 1)
+        a = normalize_taps(jnp.asarray(a_raw, dtype=jnp.bfloat16))
+        got = gspn_fused(
+            jnp.asarray(x, dtype=jnp.bfloat16),
+            a,
+            jnp.asarray(lam, dtype=jnp.bfloat16),
+        )
+        assert got.dtype == jnp.bfloat16
+        want = ref.gspn_scan_ref(x, a_raw, lam)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), want, rtol=0.15, atol=0.15
+        )
+
+
+# ---------------------------------------------------------------------------
+# Naive (GSPN-1 structure) cross-check
+# ---------------------------------------------------------------------------
+
+
+class TestNaiveBaseline:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 2),
+        c=st.integers(1, 4),
+        h=st.integers(2, 8),
+        w=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle(self, n, c, h, w, seed):
+        rng = np.random.default_rng(seed)
+        x, a_raw, lam = rand_case(rng, n, c, h, w, c)
+        want = ref.gspn_scan_ref(x, a_raw, lam)
+        a = normalize_taps(jnp.asarray(a_raw))
+        got = np.asarray(gspn_naive(jnp.asarray(x), a, jnp.asarray(lam)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_matches_fused_exactly_structured_inputs(self):
+        """Fused and naive must agree on identical normalised taps."""
+        rng = np.random.default_rng(20)
+        x, a_raw, lam = rand_case(rng, 2, 3, 7, 9, 1)
+        a = normalize_taps(jnp.asarray(a_raw))
+        f = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam)))
+        nv = np.asarray(gspn_naive(jnp.asarray(x), a, jnp.asarray(lam)))
+        np.testing.assert_allclose(f, nv, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Directions
+# ---------------------------------------------------------------------------
+
+
+class TestDirections:
+    @pytest.mark.parametrize("direction", DIRECTIONS)
+    def test_direction_matches_oracle(self, direction):
+        rng = np.random.default_rng(30)
+        x = rng.normal(size=(1, 2, 6, 8)).astype(np.float32)
+        lam = rng.normal(size=(1, 2, 6, 8)).astype(np.float32)
+        hc = 8 if direction in ("t2b", "b2t") else 6
+        wc = 6 if direction in ("t2b", "b2t") else 8
+        a_raw = rng.normal(size=(1, 1, 3, hc, wc)).astype(np.float32)
+        want = ref.gspn_scan_ref_dir(x, a_raw, lam, direction=direction)
+        got = np.asarray(
+            gspn_scan_dir(
+                jnp.asarray(x), jnp.asarray(a_raw), jnp.asarray(lam),
+                direction=direction,
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("direction", DIRECTIONS)
+    def test_canonical_roundtrip(self, direction):
+        rng = np.random.default_rng(31)
+        t = jnp.asarray(rng.normal(size=(2, 3, 5, 7)).astype(np.float32))
+        from compile.kernels.gspn import to_canonical, from_canonical
+
+        rt = from_canonical(to_canonical(t, direction), direction)
+        np.testing.assert_array_equal(np.asarray(rt), np.asarray(t))
+
+    def test_r2l_is_flipped_l2r(self):
+        rng = np.random.default_rng(32)
+        x = rng.normal(size=(1, 1, 4, 6)).astype(np.float32)
+        lam = rng.normal(size=(1, 1, 4, 6)).astype(np.float32)
+        a_raw = rng.normal(size=(1, 1, 3, 4, 6)).astype(np.float32)
+        l2r = ref.gspn_scan_ref_dir(x, a_raw, lam, direction="l2r")
+        r2l = ref.gspn_scan_ref_dir(
+            x[..., ::-1].copy(), a_raw, lam[..., ::-1].copy(), direction="r2l"
+        )
+        np.testing.assert_allclose(l2r, r2l[..., ::-1], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Stability-Context Condition consequences + Eq. 4 identity
+# ---------------------------------------------------------------------------
+
+
+class TestStability:
+    def test_hidden_state_bounded(self):
+        """Row-stochastic w => ||h_i||_inf <= sum_j ||lam_j * x_j||_inf."""
+        rng = np.random.default_rng(40)
+        x, a_raw, lam = rand_case(rng, 1, 1, 8, 32, 1)
+        a = normalize_taps(jnp.asarray(a_raw))
+        h = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam)))
+        bound = np.cumsum(np.abs(lam * x).max(axis=2), axis=-1)  # (1,1,W)
+        assert np.all(np.abs(h).max(axis=2) <= bound + 1e-5)
+
+    def test_constant_preserved(self):
+        """With lam*x = 0 after column 0 and h_0 = const, the row-stochastic
+        propagation keeps h constant (mass conservation per row)."""
+        h, w = 6, 10
+        x = np.zeros((1, 1, h, w), dtype=np.float32)
+        x[..., 0] = 1.0
+        lam = np.ones_like(x)
+        rng = np.random.default_rng(41)
+        a_raw = rng.normal(size=(1, 1, 3, h, w)).astype(np.float32)
+        a = normalize_taps(jnp.asarray(a_raw))
+        out = np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam)))
+        np.testing.assert_allclose(out[..., -1], 1.0, rtol=1e-5)
+
+    def test_linearity_in_x(self):
+        rng = np.random.default_rng(42)
+        x1, a_raw, lam = rand_case(rng, 1, 2, 5, 7, 1)
+        x2 = rng.normal(size=x1.shape).astype(np.float32)
+        a = normalize_taps(jnp.asarray(a_raw))
+
+        def run(x):
+            return np.asarray(gspn_fused(jnp.asarray(x), a, jnp.asarray(lam)))
+
+        np.testing.assert_allclose(
+            run(2.5 * x1 + 0.5 * x2), 2.5 * run(x1) + 0.5 * run(x2),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_eq4_g_matrix_identity(self):
+        """vec(h) == G vec(x) with G the block lower-triangular of Eq. 4."""
+        rng = np.random.default_rng(43)
+        n, c, h, w = 1, 2, 4, 5
+        x, a_raw, lam = rand_case(rng, n, c, h, w, 1)
+        want = ref.gspn_scan_ref(x, a_raw, lam)
+        for ci in range(c):
+            g = ref.gspn_expand_g(a_raw, lam, 0, ci)
+            xv = x[0, ci].T.reshape(-1)  # stack columns
+            hv = g @ xv
+            np.testing.assert_allclose(
+                hv.reshape(w, h).T, want[0, ci], rtol=1e-6, atol=1e-8
+            )
+
+    def test_g_row_sums_bounded(self):
+        """Each row of G sums to <= max-lam * W (no amplification blowup)."""
+        rng = np.random.default_rng(44)
+        x, a_raw, lam = rand_case(rng, 1, 1, 4, 6, 1)
+        lam_abs = np.abs(lam)
+        g = ref.gspn_expand_g(a_raw, lam_abs, 0, 0)
+        assert g.min() >= 0.0
+        assert g.sum(axis=1).max() <= lam_abs.max() * 6 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Autodiff (custom VJP with the fused backward kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestAutodiff:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(1, 2),
+        c=st.integers(1, 3),
+        h=st.integers(2, 6),
+        w=st.integers(1, 6),
+        shared=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_vjp_matches_naive_autodiff(self, n, c, h, w, shared, seed):
+        rng = np.random.default_rng(seed)
+        cw = 1 if shared else c
+        x, a_raw, lam = rand_case(rng, n, c, h, w, cw)
+        g = rng.normal(size=x.shape).astype(np.float32)
+        xj, aj, lj = jnp.asarray(x), jnp.asarray(a_raw), jnp.asarray(lam)
+
+        def loss_fused(x, a_raw, lam):
+            return jnp.sum(gspn_scan(x, normalize_taps(a_raw), lam, 0, 1, True) * g)
+
+        def loss_naive(x, a_raw, lam):
+            return jnp.sum(gspn_naive(x, normalize_taps(a_raw), lam) * g)
+
+        gf = jax.grad(loss_fused, argnums=(0, 1, 2))(xj, aj, lj)
+        gn = jax.grad(loss_naive, argnums=(0, 1, 2))(xj, aj, lj)
+        for got, want in zip(gf, gn):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4
+            )
+
+    @pytest.mark.parametrize("kchunk", [2, 4])
+    def test_vjp_chunked(self, kchunk):
+        rng = np.random.default_rng(50)
+        x, a_raw, lam = rand_case(rng, 1, 2, 4, 8, 1)
+        g = rng.normal(size=x.shape).astype(np.float32)
+        xj, aj, lj = jnp.asarray(x), jnp.asarray(a_raw), jnp.asarray(lam)
+
+        def lf(x, a, lam):
+            return jnp.sum(gspn_scan(x, normalize_taps(a), lam, kchunk, 1, True) * g)
+
+        def ln(x, a, lam):
+            return jnp.sum(gspn_naive(x, normalize_taps(a), lam, kchunk=kchunk) * g)
+
+        gf = jax.grad(lf, argnums=(0, 1, 2))(xj, aj, lj)
+        gn = jax.grad(ln, argnums=(0, 1, 2))(xj, aj, lj)
+        for got, want in zip(gf, gn):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4
+            )
+
+    def test_grad_finite_difference(self):
+        """dL/dx via VJP vs central differences on a few coordinates."""
+        rng = np.random.default_rng(51)
+        x, a_raw, lam = rand_case(rng, 1, 1, 3, 4, 1)
+        a = normalize_taps(jnp.asarray(a_raw))
+
+        def loss(x):
+            return jnp.sum(jnp.square(gspn_scan(jnp.asarray(x), a, jnp.asarray(lam), 0, 1, True)))
+
+        gx = np.asarray(jax.grad(lambda x: loss(x))(jnp.asarray(x)))
+        eps = 1e-3
+        for (r, i) in [(0, 0), (1, 2), (2, 3)]:
+            xp, xm = x.copy(), x.copy()
+            xp[0, 0, r, i] += eps
+            xm[0, 0, r, i] -= eps
+            fd = (float(loss(xp)) - float(loss(xm))) / (2 * eps)
+            np.testing.assert_allclose(gx[0, 0, r, i], fd, rtol=2e-2, atol=1e-3)

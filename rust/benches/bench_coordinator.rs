@@ -1,0 +1,176 @@
+//! Coordinator benchmarks: the pure batching policy at load, the
+//! metrics hot path, trace generation, and — when artifacts exist — the
+//! PJRT execute path raw vs through the full serving stack (the
+//! "coordinator overhead" number EXPERIMENTS.md §Perf tracks).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use gspn2::config::ServeConfig;
+use gspn2::coordinator::{
+    BatchPolicy, Batcher, Bucket, Coordinator, Metrics, Payload, Request, TraceConfig,
+};
+use gspn2::runtime::{artifacts_available, Engine, Value};
+use gspn2::util::bench::{black_box, BenchSuite};
+use gspn2::util::Rng;
+use gspn2::Tensor;
+
+fn bucket() -> Bucket {
+    Bucket { c: 8, h: 64, w: 64, kchunk: 0, per_channel: false }
+}
+
+fn mk_req(id: u64, tx: &mpsc::Sender<gspn2::coordinator::Response>) -> Request {
+    Request {
+        id,
+        payload: Payload::Scan {
+            x: Tensor::zeros(&[1, 8, 64, 64]),
+            a_raw: Tensor::zeros(&[1, 1, 3, 64, 64]),
+            lam: Tensor::zeros(&[1, 8, 64, 64]),
+        },
+        kchunk: 0,
+        arrived: Instant::now(),
+        reply: tx.clone(),
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("coordinator");
+
+    // Batching policy throughput (no PJRT): enqueue + pop cycles.
+    {
+        let (tx, _rx) = mpsc::channel();
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(0),
+            queue_cap: 0,
+            eager_idle: false,
+        });
+        b.register_bucket(bucket(), vec![1, 2, 4]);
+        let mut id = 0u64;
+        suite.bench("batcher enqueue+pop (batch of 4)", || {
+            for _ in 0..4 {
+                b.enqueue(bucket(), mk_req(id, &tx));
+                id += 1;
+            }
+            black_box(b.pop_batch(Instant::now()));
+        });
+    }
+
+    // Queue mechanics alone (1-element payloads isolate the BTreeMap +
+    // VecDeque cost from the ~450 KB payload allocation above).
+    {
+        let (tx, _rx) = mpsc::channel();
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(0),
+            queue_cap: 0,
+            eager_idle: false,
+        });
+        b.register_bucket(bucket(), vec![1, 2, 4]);
+        let mut id = 0u64;
+        suite.bench("batcher queue ops only (batch of 4, tiny payload)", || {
+            for _ in 0..4 {
+                let r = Request {
+                    id,
+                    payload: Payload::Scan {
+                        x: Tensor::zeros(&[1, 1, 1, 1]),
+                        a_raw: Tensor::zeros(&[1, 1, 3, 1, 1]),
+                        lam: Tensor::zeros(&[1, 1, 1, 1]),
+                    },
+                    kchunk: 0,
+                    arrived: Instant::now(),
+                    reply: tx.clone(),
+                };
+                b.enqueue(bucket(), r);
+                id += 1;
+            }
+            black_box(b.pop_batch(Instant::now()));
+        });
+    }
+
+    // Metrics hot path.
+    {
+        let mut m = Metrics::new();
+        suite.bench("metrics record_request", || {
+            m.record_request(1_000, 50_000, 51_000, 4);
+        });
+        black_box(m.completed);
+    }
+
+    // Trace generation.
+    suite.bench("trace generate 100 reqs", || {
+        black_box(gspn2::coordinator::generate_trace(&TraceConfig {
+            requests: 100,
+            ..TraceConfig::default()
+        }));
+    });
+
+    if !artifacts_available("artifacts") {
+        eprintln!("artifacts/ missing: skipping PJRT-path benches");
+        suite.finish();
+        return;
+    }
+
+    // Raw engine execute (n=1 and n=4) — the baseline the serve path is
+    // compared against.
+    {
+        let engine = Engine::cpu("artifacts").expect("engine");
+        let mut rng = Rng::new(0);
+        let mk = |rng: &mut Rng, n: usize| {
+            vec![
+                Value::F32(Tensor::randn(&[n, 8, 64, 64], rng, 1.0)),
+                Value::F32(Tensor::randn(&[n, 1, 3, 64, 64], rng, 1.0)),
+                Value::F32(Tensor::randn(&[n, 8, 64, 64], rng, 1.0)),
+            ]
+        };
+        let in1 = mk(&mut rng, 1);
+        let in4 = mk(&mut rng, 4);
+        engine.run("scan_h64w64c8n1", &in1).unwrap(); // warm compile
+        engine.run("scan_h64w64c8n4", &in4).unwrap();
+        suite.bench("engine.run scan n=1 (per request)", || {
+            black_box(engine.run("scan_h64w64c8n1", &in1).unwrap());
+        });
+        let r4 = suite.bench("engine.run scan n=4 (per batch)", || {
+            black_box(engine.run("scan_h64w64c8n4", &in4).unwrap());
+        });
+        suite.record_value(
+            "engine.run scan n=4 per-request share",
+            r4.mean_ns / 4.0 / 1e3,
+            "µs",
+        );
+    }
+
+    // Full serving stack, closed loop: per-request latency including
+    // router/batcher/worker hop.
+    {
+        let coord = Coordinator::start(&ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 256,
+            ..ServeConfig::default()
+        })
+        .expect("coordinator");
+        let mut rng = Rng::new(1);
+        // Warm up the worker's compile cache.
+        let warm = coord
+            .submit_scan(
+                Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0),
+                Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0),
+                Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0),
+                0,
+            )
+            .unwrap();
+        let _ = warm.recv();
+        let x = Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0);
+        let a = Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0);
+        let lam = Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0);
+        suite.bench("serve path single request (batch=1)", || {
+            let rx = coord.submit_scan(x.clone(), a.clone(), lam.clone(), 0).unwrap();
+            black_box(rx.recv().unwrap());
+        });
+        coord.shutdown();
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,58 @@
+//! Simulator benchmarks: raw `simulate()` throughput (the repro pipeline
+//! calls it thousands of times in sweeps), the full Fig-3 pipeline, the
+//! diffusion model, and the classifier throughput model.
+
+use gspn2::gpusim::{
+    attention, simulate, Backend, DeviceSpec, DiffusionModel, KernelConfig, ScanWorkload, FIG3,
+};
+use gspn2::model;
+use gspn2::util::bench::{black_box, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("gpusim");
+    let dev = DeviceSpec::a100_sxm4_80gb();
+
+    let wl = ScanWorkload::fwd(16, 8, 1024, 1024);
+    let g1 = KernelConfig::gspn1();
+    let g2 = KernelConfig::gspn2();
+    suite.bench("simulate GSPN-1 (one config)", || {
+        black_box(simulate(&dev, &wl, &g1));
+    });
+    suite.bench("simulate GSPN-2 (one config)", || {
+        black_box(simulate(&dev, &wl, &g2));
+    });
+
+    suite.bench("pipeline Fig3 (6 stages)", || {
+        black_box(FIG3.run(&dev));
+    });
+
+    // A full resolution x channel sweep like the Fig-4 driver performs.
+    suite.bench("sweep 5 res x 7 ch x 2 kernels", || {
+        for res in [128usize, 256, 512, 1024, 2048] {
+            for c in [8usize, 32, 64, 128, 256, 512, 1024] {
+                let w = ScanWorkload::fwd(4, c, res, res);
+                black_box(simulate(&dev, &w, &g1));
+                black_box(simulate(&dev, &w, &g2));
+            }
+        }
+    });
+
+    let m = DiffusionModel::sdxl_like();
+    suite.bench("diffusion generate_s 4K (gspn2)", || {
+        black_box(m.generate_s(&dev, 4096, Backend::Gspn2));
+    });
+    suite.bench("diffusion generate_s 4K (flash)", || {
+        black_box(m.generate_s(&dev, 4096, Backend::SdxlFlash));
+    });
+
+    let arch = model::gspn2_tiny();
+    suite.bench("classifier_throughput model (tiny)", || {
+        black_box(attention::classifier_throughput(&dev, &arch, 224, 64));
+    });
+
+    suite.bench("arch cost accounting (tiny @224)", || {
+        black_box(arch.cost(224));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,95 @@
+//! Micro-benchmarks for the pure-Rust GSPN core: tap normalisation, the
+//! canonical scan at several sizes, directional wrappers, the compact
+//! unit, and the Eq. 4 dense expansion.
+//!
+//! Run: `cargo bench --bench bench_scan` (results land in bench_out/).
+
+use gspn2::scan::{expand_g, merged_4dir, scan_l2r, scan_l2r_split, CompactGspnUnit, Taps};
+use gspn2::util::bench::{black_box, BenchSuite};
+use gspn2::util::Rng;
+use gspn2::Tensor;
+
+fn main() {
+    let mut suite = BenchSuite::new("scan_core");
+    let mut rng = Rng::new(0);
+
+    // Tap normalisation.
+    let raw = Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0);
+    suite.bench("normalize_taps 64x64 shared", || {
+        black_box(Taps::normalize(&raw));
+    });
+    let raw_pc = Tensor::randn(&[1, 8, 3, 64, 64], &mut rng, 1.0);
+    suite.bench("normalize_taps 64x64 per-channel c8", || {
+        black_box(Taps::normalize(&raw_pc));
+    });
+
+    // Canonical scan across sizes.
+    for (c, h, w) in [(8usize, 64usize, 64usize), (8, 128, 128), (8, 256, 256), (64, 64, 64)] {
+        let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let a = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
+        let lam = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        suite.bench(&format!("scan_l2r c{c} {h}x{w}"), || {
+            black_box(scan_l2r(&x, &a, &lam, 0));
+        });
+    }
+
+    // Chunked (GSPN-local) variant.
+    {
+        let x = Tensor::randn(&[1, 8, 128, 128], &mut rng, 1.0);
+        let a = Taps::normalize(&Tensor::randn(&[1, 1, 3, 128, 128], &mut rng, 1.0));
+        let lam = Tensor::randn(&[1, 8, 128, 128], &mut rng, 1.0);
+        suite.bench("scan_l2r c8 128x128 kchunk=16", || {
+            black_box(scan_l2r(&x, &a, &lam, 16));
+        });
+    }
+
+    // Segment-parallel decomposition (the §5.1 extension): sequential vs
+    // split with 1 thread (pure overhead) vs split with host threads.
+    {
+        let (c, h, w) = (1usize, 256usize, 256usize);
+        let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let a = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
+        let lam = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        suite.bench("scan_l2r c1 256x256 (sequential)", || {
+            black_box(scan_l2r(&x, &a, &lam, 0));
+        });
+        suite.bench("scan_split c1 256x256 seg=8 t=1", || {
+            black_box(scan_l2r_split(&x, &a, &lam, 8, 1));
+        });
+        let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+        suite.bench(&format!("scan_split c1 256x256 seg=8 t={t}"), || {
+            black_box(scan_l2r_split(&x, &a, &lam, 8, t));
+        });
+    }
+
+    // Four directions merged.
+    {
+        let x = Tensor::randn(&[1, 4, 64, 64], &mut rng, 1.0);
+        let lam = Tensor::randn(&[1, 4, 64, 64], &mut rng, 1.0);
+        let t_lr = Taps::normalize(&Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0));
+        let t_tb = Taps::normalize(&Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0));
+        suite.bench("merged_4dir c4 64x64", || {
+            black_box(merged_4dir(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0));
+        });
+    }
+
+    // The full compact unit (projections + 4 scans).
+    {
+        let unit = CompactGspnUnit::init(&mut rng, 32, 4, 0, false);
+        let x = Tensor::randn(&[1, 32, 64, 64], &mut rng, 1.0);
+        suite.bench("CompactGspnUnit c32 p4 64x64", || {
+            black_box(unit.forward(&x));
+        });
+    }
+
+    // Eq. 4 dense expansion (validation-path cost).
+    {
+        let taps = Taps::normalize(&Tensor::randn(&[1, 1, 3, 8, 8], &mut rng, 1.0));
+        let lam = Tensor::randn(&[1, 1, 8, 8], &mut rng, 1.0);
+        suite.bench("expand_g 8x8", || {
+            black_box(expand_g(&taps, &lam, 0, 0));
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,38 @@
+//! The aggregate reproduction bench: regenerates EVERY table and figure
+//! of the paper's evaluation into `bench_out/` (the same drivers as
+//! `gspn2 repro all`), timing each one. Training-backed proxies run with
+//! a small step budget here; use `gspn2 repro proxy2 --proxy-steps 300`
+//! for the full-length run recorded in EXPERIMENTS.md.
+
+use gspn2::gpusim::DeviceSpec;
+use gspn2::repro;
+use gspn2::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("repro_paper");
+    let dev = DeviceSpec::a100_sxm4_80gb();
+    let out = std::env::var("GSPN2_BENCH_OUT").unwrap_or_else(|_| "bench_out".into());
+    let proxy_steps = std::env::var("GSPN2_PROXY_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+
+    for id in repro::ALL {
+        let t0 = std::time::Instant::now();
+        match repro::run(id, &dev, &out, proxy_steps) {
+            Ok(()) => {
+                suite.record_value(
+                    &format!("repro {id}"),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    "ms (driver wall time)",
+                );
+            }
+            Err(e) => {
+                eprintln!("repro {id} FAILED: {e:#}");
+                suite.record_value(&format!("repro {id} FAILED"), -1.0, "");
+            }
+        }
+    }
+    suite.finish();
+    println!("\nall paper tables/figures regenerated under {out}/");
+}

@@ -1,0 +1,40 @@
+use gspn2::gpusim::*;
+fn main() {
+    let dev = DeviceSpec::a100_sxm4_80gb();
+    for p in [&FIG3, &FIG_S3, &FIG_S4] {
+        println!("== {} ==", p.label);
+        for (s, paper) in p.run(&dev).iter().zip(p.paper_ms) {
+            println!("  {:<26} {:>9.2} ms (paper {:>7.2})  step {:>5.2}x cum {:>6.1}x  eff {:.3} ach {:.0} GB/s ({:.1}%)",
+                s.name, s.time_ms, paper, s.step_speedup, s.cum_speedup, s.sim.efficiency, s.sim.achieved_gbs, s.sim.pct_peak);
+        }
+    }
+    println!("== Table 1 ==");
+    for (n,c,h,w) in [(32,196,32,32),(1,768,64,64),(1,1152,64,64),(1,32,64,64),(1,32,128,128),(1,64,256,256),(8,64,256,256),(1,128,512,512)] {
+        let wl = ScanWorkload::fwd(n,c,h,w);
+        let g1 = simulate(&dev, &wl, &KernelConfig::gspn1());
+        let g2 = simulate(&dev, &wl, &KernelConfig::gspn2());
+        println!("  {:>4}x{:<4} b{:<3} c{:<4} G1 {:>6.0} GB/s ({:>4.1}%)  G2 {:>6.0} GB/s ({:>4.1}%)  t1={:.3}ms t2={:.4}ms",
+            h, w, n, c, g1.achieved_gbs, g1.pct_peak, g2.achieved_gbs, g2.pct_peak, g1.time_ms, g2.time_ms);
+    }
+    println!("== speedup vs res (n4 c8) ==");
+    for res in [128usize,256,512,1024,2048] {
+        let wl = ScanWorkload::fwd(4,8,res,res);
+        let s1 = simulate(&dev,&wl,&KernelConfig::gspn1());
+        let s2 = simulate(&dev,&wl,&KernelConfig::gspn2());
+        println!("  {res:>5}: g1 {:>9.3} ms  g2 {:>8.4} ms  speedup {:>6.1}x (g2: mem {:.3} lat {:.3} launch {:.3})", s1.time_ms, s2.time_ms, s1.time_ms/s2.time_ms, s2.mem_ms, s2.latency_ms, s2.launch_ms);
+    }
+    println!("== fig5 ==");
+    let m = DiffusionModel::sdxl_like();
+    for res in [1024usize, 2048, 4096, 8192, 16384] {
+        let dense = m.generate_s(&dev,res,Backend::SdxlDense);
+        let flash = m.generate_s(&dev,res,Backend::SdxlFlash);
+        let g1 = m.generate_s(&dev,res,Backend::Gspn1);
+        let g2 = m.generate_s(&dev,res,Backend::Gspn2);
+        println!("  {res:>5}: dense {dense:>9.2}s flash {flash:>9.2}s g1 {g1:>8.2}s g2 {g2:>8.3}s  speedup(flash/g2) {:>6.1}x", flash/g2);
+    }
+    println!("== throughput (tiny) ==");
+    for p in [2usize,4,8,16,32] {
+        let arch = gspn2::model::GspnArch { c_proxy: p, ..gspn2::model::gspn2_tiny() };
+        println!("  cproxy {p:>2}: {:>7.0} img/s", attention::classifier_throughput(&dev,&arch,224,64));
+    }
+}

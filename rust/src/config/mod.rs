@@ -1,0 +1,213 @@
+//! Typed configuration for the launcher: serve / train / sim sections with
+//! defaults, loadable from a TOML file and overridable from CLI args.
+//!
+//! A downstream user drives the binary either entirely from flags or by
+//! pointing `--config path.toml` at a file like:
+//!
+//! ```toml
+//! [serve]
+//! workers = 4
+//! max_batch = 4
+//! max_wait_us = 2000
+//!
+//! [train]
+//! steps = 200
+//! log_every = 10
+//!
+//! [sim]
+//! device = "a100-sxm4-80gb"
+//! ```
+
+use crate::util::cli::Args;
+use crate::util::toml::Toml;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Number of executor workers pulling batches.
+    pub workers: usize,
+    /// Dynamic batcher: max requests fused into one executable call.
+    pub max_batch: usize,
+    /// Dynamic batcher: max time the head request waits for peers.
+    pub max_wait_us: u64,
+    /// Bounded-queue admission limit (requests). 0 = unbounded.
+    pub queue_cap: usize,
+    /// Release partial batches when a worker would otherwise idle.
+    pub eager_idle: bool,
+    /// Synthetic client: offered load in requests/second.
+    pub rate_rps: f64,
+    /// Synthetic client: total requests to send.
+    pub requests: usize,
+    /// Artifact directory.
+    pub artifacts: String,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 4,
+            max_wait_us: 2_000,
+            queue_cap: 256,
+            eager_idle: true,
+            rate_rps: 200.0,
+            requests: 500,
+            artifacts: "artifacts".into(),
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub artifacts: String,
+    pub seed: u64,
+    /// Which train-step artifact family ("classifier" | "attn_classifier").
+    pub model: String,
+    /// Synthetic dataset size (samples).
+    pub dataset: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            log_every: 10,
+            eval_every: 50,
+            artifacts: "artifacts".into(),
+            seed: 0,
+            model: "classifier".into(),
+            dataset: 512,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    pub device: String,
+    pub out_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { device: "a100-sxm4-80gb".into(), out_dir: "bench_out".into() }
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub serve: ServeConfig,
+    pub train: TrainConfig,
+    pub sim: SimConfig,
+}
+
+impl Config {
+    /// Layered: defaults <- TOML file (if `--config`) <- CLI flags.
+    pub fn from_args(args: &Args) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        if let Some(path) = args.get("config") {
+            cfg.apply_toml(&Toml::load(path)?);
+        }
+        cfg.apply_args(args);
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, t: &Toml) {
+        let s = &mut self.serve;
+        s.workers = t.usize_or("serve.workers", s.workers);
+        s.max_batch = t.usize_or("serve.max_batch", s.max_batch);
+        s.max_wait_us = t.usize_or("serve.max_wait_us", s.max_wait_us as usize) as u64;
+        s.queue_cap = t.usize_or("serve.queue_cap", s.queue_cap);
+        s.eager_idle = t.bool_or("serve.eager_idle", s.eager_idle);
+        s.rate_rps = t.f64_or("serve.rate_rps", s.rate_rps);
+        s.requests = t.usize_or("serve.requests", s.requests);
+        s.artifacts = t.str_or("serve.artifacts", &s.artifacts);
+        s.seed = t.usize_or("serve.seed", s.seed as usize) as u64;
+
+        let tr = &mut self.train;
+        tr.steps = t.usize_or("train.steps", tr.steps);
+        tr.log_every = t.usize_or("train.log_every", tr.log_every);
+        tr.eval_every = t.usize_or("train.eval_every", tr.eval_every);
+        tr.artifacts = t.str_or("train.artifacts", &tr.artifacts);
+        tr.seed = t.usize_or("train.seed", tr.seed as usize) as u64;
+        tr.model = t.str_or("train.model", &tr.model);
+        tr.dataset = t.usize_or("train.dataset", tr.dataset);
+
+        self.sim.device = t.str_or("sim.device", &self.sim.device);
+        self.sim.out_dir = t.str_or("sim.out_dir", &self.sim.out_dir);
+    }
+
+    pub fn apply_args(&mut self, a: &Args) {
+        let s = &mut self.serve;
+        s.workers = a.usize_or("workers", s.workers);
+        s.max_batch = a.usize_or("max-batch", s.max_batch);
+        s.max_wait_us = a.u64_or("max-wait-us", s.max_wait_us);
+        s.queue_cap = a.usize_or("queue-cap", s.queue_cap);
+        if a.flag("no-eager-idle") {
+            s.eager_idle = false;
+        }
+        s.rate_rps = a.f64_or("rate", s.rate_rps);
+        s.requests = a.usize_or("requests", s.requests);
+        s.artifacts = a.str_or("artifacts", &s.artifacts);
+        s.seed = a.u64_or("seed", s.seed);
+
+        let tr = &mut self.train;
+        tr.steps = a.usize_or("steps", tr.steps);
+        tr.log_every = a.usize_or("log-every", tr.log_every);
+        tr.eval_every = a.usize_or("eval-every", tr.eval_every);
+        tr.artifacts = a.str_or("artifacts", &tr.artifacts);
+        tr.seed = a.u64_or("seed", tr.seed);
+        tr.model = a.str_or("model", &tr.model);
+        tr.dataset = a.usize_or("dataset", tr.dataset);
+
+        self.sim.device = a.str_or("device", &self.sim.device);
+        self.sim.out_dir = a.str_or("out-dir", &self.sim.out_dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_without_flags() {
+        let cfg = Config::from_args(&args(&[])).unwrap();
+        assert_eq!(cfg, Config::default());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let cfg =
+            Config::from_args(&args(&["--workers", "8", "--steps", "50", "--rate=99.5"]))
+                .unwrap();
+        assert_eq!(cfg.serve.workers, 8);
+        assert_eq!(cfg.train.steps, 50);
+        assert_eq!(cfg.serve.rate_rps, 99.5);
+        assert_eq!(cfg.serve.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn toml_then_cli_layering() {
+        let t = Toml::parse("[serve]\nworkers = 6\nmax_batch = 16\n").unwrap();
+        let mut cfg = Config::default();
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.serve.workers, 6);
+        assert_eq!(cfg.serve.max_batch, 16);
+        cfg.apply_args(&args(&["--workers", "2"]));
+        assert_eq!(cfg.serve.workers, 2); // CLI wins
+        assert_eq!(cfg.serve.max_batch, 16); // TOML preserved
+    }
+
+    #[test]
+    fn missing_config_file_errors() {
+        let err = Config::from_args(&args(&["--config", "/no/such/file.toml"]));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Shape-bucketed dynamic batching policy.
+//!
+//! Requests accumulate in per-bucket FIFO queues. A batch is released
+//! when (a) the head request has waited `max_wait`, or (b) the queue
+//! holds at least `max_batch` requests. Released batches are fused to
+//! the largest compiled batch size that fits (artifact batch sizes come
+//! from the manifest, e.g. {1, 2, 4}), splitting greedily: 7 queued ->
+//! 4 + 2 + 1 if the caller keeps draining.
+//!
+//! The policy is deliberately separate from the execution loop so it can
+//! be unit-tested (and criterion-benched) without PJRT.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::request::{Bucket, Request};
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Total queued-request cap across buckets (admission control).
+    pub queue_cap: usize,
+    /// Release partial batches immediately when a worker would otherwise
+    /// idle: batch formation only pays when the executor is busy, so an
+    /// idle worker takes whatever is queued instead of letting the head
+    /// request age out `max_wait` (latency-under-idleness; see
+    /// EXPERIMENTS.md §Perf).
+    pub eager_idle: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 4,
+            max_wait: Duration::from_micros(2000),
+            queue_cap: 256,
+            eager_idle: true,
+        }
+    }
+}
+
+/// Per-bucket queues + round-robin fairness cursor.
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queues: BTreeMap<Bucket, VecDeque<Request>>,
+    /// Supported artifact batch sizes per bucket (sorted ascending).
+    batch_sizes: BTreeMap<Bucket, Vec<usize>>,
+    rr_cursor: usize,
+    queued: usize,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher {
+            policy,
+            queues: BTreeMap::new(),
+            batch_sizes: BTreeMap::new(),
+            rr_cursor: 0,
+            queued: 0,
+        }
+    }
+
+    /// Register a bucket with the artifact batch sizes available for it.
+    pub fn register_bucket(&mut self, bucket: Bucket, mut sizes: Vec<usize>) {
+        sizes.sort_unstable();
+        self.batch_sizes.insert(bucket.clone(), sizes);
+        self.queues.entry(bucket).or_default();
+    }
+
+    pub fn known_bucket(&self, bucket: &Bucket) -> bool {
+        self.batch_sizes.contains_key(bucket)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.policy.queue_cap == 0 || self.queued < self.policy.queue_cap
+    }
+
+    pub fn enqueue(&mut self, bucket: Bucket, req: Request) {
+        self.queues.entry(bucket).or_default().push_back(req);
+        self.queued += 1;
+    }
+
+    /// Next deadline at which some queue becomes releasable by age (for
+    /// condvar timeouts). None when everything is empty.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| r.arrived + self.policy.max_wait)
+            .min()
+    }
+
+    /// Pop a releasable batch, preferring (fairly, round-robin) buckets
+    /// that are full or whose head has aged out. `now` is injectable for
+    /// tests. Returns the bucket, the fused artifact batch size, and the
+    /// requests (len <= fused size; len == fused size unless the bucket
+    /// only offers larger artifacts — callers pad in that case).
+    pub fn pop_batch(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
+        let keys: Vec<Bucket> = self.queues.keys().cloned().collect();
+        if keys.is_empty() {
+            return None;
+        }
+        let n = keys.len();
+        for i in 0..n {
+            let k = &keys[(self.rr_cursor + i) % n];
+            let q = self.queues.get_mut(k).unwrap();
+            if q.is_empty() {
+                continue;
+            }
+            let head_aged =
+                now.duration_since(q.front().unwrap().arrived) >= self.policy.max_wait;
+            let full = q.len() >= self.policy.max_batch;
+            if !(head_aged || full) {
+                continue;
+            }
+            let sizes = self.batch_sizes.get(k).cloned().unwrap_or_else(|| vec![1]);
+            let want = q.len().min(self.policy.max_batch);
+            // Largest artifact size <= want, else the smallest artifact
+            // (padding case when want < min size).
+            let fused = sizes
+                .iter()
+                .rev()
+                .find(|&&s| s <= want)
+                .copied()
+                .unwrap_or_else(|| sizes[0]);
+            let take = fused.min(q.len());
+            let batch: Vec<Request> = q.drain(..take).collect();
+            self.queued -= batch.len();
+            self.rr_cursor = (self.rr_cursor + i + 1) % n;
+            return Some((k.clone(), fused, batch));
+        }
+        None
+    }
+
+    /// Pop regardless of head age (the eager-idle path): equivalent to
+    /// `pop_batch` at a time when every head has aged out.
+    pub fn pop_eager(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
+        self.pop_batch(now + self.policy.max_wait + Duration::from_nanos(1))
+    }
+
+    /// Drain everything regardless of age (shutdown path).
+    pub fn drain_all(&mut self, mut f: impl FnMut(Bucket, usize, Vec<Request>)) {
+        loop {
+            let far_future = Instant::now() + Duration::from_secs(3600);
+            match self.pop_batch(far_future) {
+                Some((b, fused, reqs)) => f(b, fused, reqs),
+                None => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Payload, Response};
+    use crate::Tensor;
+    use std::sync::mpsc;
+
+    fn bucket(c: usize) -> Bucket {
+        Bucket { c, h: 64, w: 64, kchunk: 0, per_channel: false }
+    }
+
+    fn req(id: u64, c: usize, arrived: Instant) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let r = Request {
+            id,
+            payload: Payload::Scan {
+                x: Tensor::zeros(&[1, c, 64, 64]),
+                a_raw: Tensor::zeros(&[1, 1, 3, 64, 64]),
+                lam: Tensor::zeros(&[1, c, 64, 64]),
+            },
+            kchunk: 0,
+            arrived,
+            reply: tx,
+        };
+        (r, rx)
+    }
+
+    fn mk_batcher(max_batch: usize, wait_us: u64) -> Batcher {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+            queue_cap: 16,
+            eager_idle: false,
+        });
+        b.register_bucket(bucket(8), vec![1, 2, 4]);
+        b
+    }
+
+    #[test]
+    fn young_queue_not_released() {
+        let mut b = mk_batcher(4, 10_000);
+        let now = Instant::now();
+        let (r, _rx) = req(1, 8, now);
+        b.enqueue(bucket(8), r);
+        assert!(b.pop_batch(now).is_none());
+    }
+
+    #[test]
+    fn aged_head_releases_partial_batch() {
+        let mut b = mk_batcher(4, 1_000);
+        let t0 = Instant::now();
+        let (r, _rx) = req(1, 8, t0);
+        b.enqueue(bucket(8), r);
+        let later = t0 + Duration::from_micros(2_000);
+        let (bk, fused, reqs) = b.pop_batch(later).expect("aged release");
+        assert_eq!(bk, bucket(8));
+        assert_eq!(fused, 1);
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn full_queue_releases_immediately() {
+        let mut b = mk_batcher(4, 1_000_000);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r);
+            rxs.push(rx);
+        }
+        let (_, fused, reqs) = b.pop_batch(now).expect("full release");
+        assert_eq!(fused, 4);
+        assert_eq!(reqs.len(), 4);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn fused_size_is_largest_artifact_leq_queue() {
+        let mut b = mk_batcher(8, 0); // release instantly
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r);
+            rxs.push(rx);
+        }
+        // 3 queued with artifacts {1,2,4} -> fuse 2, leave 1.
+        let (_, fused, reqs) = b.pop_batch(now).unwrap();
+        assert_eq!(fused, 2);
+        assert_eq!(reqs.len(), 2);
+        let (_, fused2, reqs2) = b.pop_batch(now).unwrap();
+        assert_eq!(fused2, 1);
+        assert_eq!(reqs2.len(), 1);
+    }
+
+    #[test]
+    fn never_exceeds_max_batch() {
+        let mut b = mk_batcher(2, 0);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r);
+            rxs.push(rx);
+        }
+        while let Some((_, _fused, reqs)) = b.pop_batch(now) {
+            assert!(reqs.len() <= 2);
+        }
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn round_robin_is_fair_across_buckets() {
+        let mut b = mk_batcher(1, 0);
+        b.register_bucket(bucket(16), vec![1]);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let c = if i % 2 == 0 { 8 } else { 16 };
+            let (r, rx) = req(i, c, now);
+            b.enqueue(bucket(c), r);
+            rxs.push(rx);
+        }
+        let mut seen = Vec::new();
+        while let Some((bk, _, _)) = b.pop_batch(now) {
+            seen.push(bk.c);
+        }
+        // Strict alternation between the two buckets.
+        assert_eq!(seen.len(), 4);
+        assert_ne!(seen[0], seen[1]);
+        assert_ne!(seen[1], seen[2]);
+        assert_ne!(seen[2], seen[3]);
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let mut b = mk_batcher(4, 1000);
+        assert!(b.has_capacity());
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r);
+            rxs.push(rx);
+        }
+        assert!(!b.has_capacity());
+    }
+
+    #[test]
+    fn fifo_order_within_bucket() {
+        let mut b = mk_batcher(2, 0);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r);
+            rxs.push(rx);
+        }
+        let (_, _, first) = b.pop_batch(now).unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let (_, _, second) = b.pop_batch(now).unwrap();
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_head() {
+        let mut b = mk_batcher(4, 5_000);
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        let (r, _rx) = req(1, 8, t0);
+        b.enqueue(bucket(8), r);
+        let d = b.next_deadline().unwrap();
+        assert_eq!(d, t0 + Duration::from_micros(5_000));
+    }
+}

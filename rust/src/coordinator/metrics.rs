@@ -1,0 +1,122 @@
+//! Serving metrics: latency histograms per stage, throughput, queue and
+//! batching statistics. Shared across workers behind a mutex; snapshots
+//! are cheap copies for reporting.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_time_ns, LatencyHistogram, Summary};
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub queue_wait: LatencyHistogram,
+    pub execute: LatencyHistogram,
+    pub total: LatencyHistogram,
+    pub batch_sizes: Summary,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub padded_slots: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&mut self, queue_ns: u64, execute_ns: u64, total_ns: u64, batch: usize) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        self.finished = Some(Instant::now());
+        self.queue_wait.record_ns(queue_ns);
+        self.execute.record_ns(execute_ns);
+        self.total.record_ns(total_ns);
+        self.batch_sizes.add(batch as f64);
+        self.completed += 1;
+    }
+
+    pub fn record_rejection(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn record_padding(&mut self, slots: usize) {
+        self.padded_slots += slots as u64;
+    }
+
+    /// Completed requests per second over the serving window.
+    pub fn throughput_rps(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => {
+                self.completed as f64 / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests: {} completed, {} rejected, {} errors\n",
+            self.completed, self.rejected, self.errors
+        ));
+        s.push_str(&format!(
+            "throughput: {:.1} req/s; mean batch {:.2} (padded slots {})\n",
+            self.throughput_rps(),
+            self.batch_sizes.mean(),
+            self.padded_slots
+        ));
+        for (name, h) in [
+            ("queue ", &self.queue_wait),
+            ("exec  ", &self.execute),
+            ("total ", &self.total),
+        ] {
+            s.push_str(&format!(
+                "{name}: p50 {} | p95 {} | p99 {} | max-ish {}\n",
+                fmt_time_ns(h.percentile_ns(50.0)),
+                fmt_time_ns(h.percentile_ns(95.0)),
+                fmt_time_ns(h.percentile_ns(99.0)),
+                fmt_time_ns(h.percentile_ns(100.0)),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = Metrics::new();
+        for i in 0..100u64 {
+            m.record_request(1000 + i, 5000, 7000 + i, 4);
+        }
+        m.record_rejection();
+        assert_eq!(m.completed, 100);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.batch_sizes.mean(), 4.0);
+        assert!(m.total.percentile_ns(50.0) > 6000.0);
+    }
+
+    #[test]
+    fn report_contains_key_lines() {
+        let mut m = Metrics::new();
+        m.record_request(100, 200, 400, 2);
+        let r = m.report();
+        assert!(r.contains("completed"));
+        assert!(r.contains("p95"));
+        assert!(r.contains("throughput"));
+    }
+
+    #[test]
+    fn throughput_zero_when_empty() {
+        assert_eq!(Metrics::new().throughput_rps(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The L3 serving coordinator (the paper is pitched at high-resolution
+//! inference, so L3 takes the vLLM-router shape; DESIGN.md §4):
+//!
+//! * [`request`] — request/response types and shape buckets.
+//! * [`batcher`] — the shape-bucketed dynamic batching policy (pure, so
+//!   it is unit-tested and benched without PJRT).
+//! * [`server`]  — admission control + worker pool driving PJRT engines.
+//! * [`metrics`] — latency histograms, throughput, batching stats.
+//! * [`trace`]   — synthetic Poisson load generator.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod trace;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{Bucket, Payload, Request, Response, SubmitError};
+pub use server::Coordinator;
+pub use trace::{generate as generate_trace, TraceConfig, TraceEvent};

@@ -1,0 +1,146 @@
+//! Request / response types and shape buckets.
+//!
+//! HLO executables are shape-specialised, so the dynamic batcher routes
+//! requests into *buckets* — one per (C, H, W, kchunk, tap-mode) scan
+//! geometry — and fuses same-bucket requests into the largest compiled
+//! batch artifact that fits (`scan_h{H}w{W}c{C}n{N}` entries from the
+//! manifest).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::Value;
+use crate::Tensor;
+
+/// Scan-geometry bucket key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Bucket {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kchunk: usize,
+    /// Per-channel taps (GSPN-1 semantics) vs channel-shared.
+    pub per_channel: bool,
+}
+
+impl Bucket {
+    /// Manifest entry name for this bucket at batch size n.
+    pub fn artifact(&self, n: usize) -> String {
+        let mut s = format!("scan_h{}w{}c{}n{}", self.h, self.w, self.c, n);
+        if self.kchunk > 0 {
+            s.push_str(&format!("k{}", self.kchunk));
+        }
+        if self.per_channel {
+            s.push_str("pc");
+        }
+        s
+    }
+}
+
+/// The payload of one inference request.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// One single-sample GSPN scan: x (1,C,H,W), a_raw (1,Cw,3,H,W),
+    /// lam (1,C,H,W). Batchable with same-bucket peers.
+    Scan { x: Tensor, a_raw: Tensor, lam: Tensor },
+    /// Direct execution of a named artifact (not batched).
+    Direct { artifact: String, inputs: Vec<Value> },
+}
+
+impl Payload {
+    /// Bucket for a scan payload (None for direct requests).
+    pub fn bucket(&self, kchunk: usize) -> Option<Bucket> {
+        match self {
+            Payload::Scan { x, a_raw, .. } => Some(Bucket {
+                c: x.shape[1],
+                h: x.shape[2],
+                w: x.shape[3],
+                kchunk,
+                per_channel: a_raw.shape[1] == x.shape[1] && x.shape[1] > 1,
+            }),
+            Payload::Direct { .. } => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub payload: Payload,
+    pub kchunk: usize,
+    pub arrived: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: anyhow::Result<Vec<Value>>,
+    /// Time spent waiting in the queue.
+    pub queue_us: u64,
+    /// Time in the executor (per-batch, shared across the batch).
+    pub execute_us: u64,
+    /// Batch size this request was fused into.
+    pub batch: usize,
+}
+
+/// Errors surfaced to the submitting client.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue full — admission rejected (backpressure).
+    Backpressure,
+    /// Coordinator is draining / stopped.
+    Closed,
+    /// No compiled artifact covers this request's geometry.
+    UnknownBucket(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+            SubmitError::UnknownBucket(b) => write!(f, "no artifact for bucket {b}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_artifact_names() {
+        let b = Bucket { c: 8, h: 64, w: 64, kchunk: 0, per_channel: false };
+        assert_eq!(b.artifact(1), "scan_h64w64c8n1");
+        assert_eq!(b.artifact(4), "scan_h64w64c8n4");
+        let bk = Bucket { kchunk: 16, ..b.clone() };
+        assert_eq!(bk.artifact(1), "scan_h64w64c8n1k16");
+        let bp = Bucket { per_channel: true, ..b };
+        assert_eq!(bp.artifact(1), "scan_h64w64c8n1pc");
+    }
+
+    #[test]
+    fn payload_bucket_derivation() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[1, 8, 64, 32], &mut rng, 1.0);
+        let shared = Tensor::randn(&[1, 1, 3, 64, 32], &mut rng, 1.0);
+        let lam = x.clone();
+        let p = Payload::Scan { x: x.clone(), a_raw: shared, lam: lam.clone() };
+        let b = p.bucket(0).unwrap();
+        assert_eq!((b.c, b.h, b.w, b.per_channel), (8, 64, 32, false));
+
+        let perch = Tensor::randn(&[1, 8, 3, 64, 32], &mut rng, 1.0);
+        let p2 = Payload::Scan { x, a_raw: perch, lam };
+        assert!(p2.bucket(0).unwrap().per_channel);
+    }
+
+    #[test]
+    fn direct_has_no_bucket() {
+        let p = Payload::Direct { artifact: "classifier_fwd_b8".into(), inputs: vec![] };
+        assert!(p.bucket(0).is_none());
+    }
+}

@@ -1,0 +1,379 @@
+//! The serving coordinator: admission control, shape-bucketed dynamic
+//! batching, and a pool of executor workers driving PJRT engines.
+//!
+//! Shape: a vLLM-router-like front end for GSPN inference. Clients call
+//! `submit_scan` (single-sample scan requests, fused into batched
+//! executables) or `submit_direct` (whole-artifact calls). Each worker
+//! thread owns its own `Engine` (the xla wrapper types are not `Send`);
+//! the shared state is only the batcher, the direct queue, and metrics.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{Bucket, Payload, Request, Response, SubmitError};
+use crate::config::ServeConfig;
+use crate::runtime::{Engine, Manifest, Value};
+use crate::tensor::{concat_axis0, split_axis0};
+use crate::util::logging;
+use crate::Tensor;
+
+struct Shared {
+    batcher: Mutex<Batcher>,
+    direct: Mutex<VecDeque<Request>>,
+    work_ready: Condvar,
+    metrics: Mutex<Metrics>,
+    shutdown: AtomicBool,
+    artifacts_dir: String,
+}
+
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Start the coordinator: enumerate scan buckets from the manifest,
+    /// then spawn `cfg.workers` executor threads (each builds its own
+    /// PJRT engine).
+    pub fn start(cfg: &ServeConfig) -> anyhow::Result<Coordinator> {
+        let manifest = Manifest::load(&cfg.artifacts)?;
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch,
+            max_wait: Duration::from_micros(cfg.max_wait_us),
+            queue_cap: cfg.queue_cap,
+            eager_idle: cfg.eager_idle,
+        };
+        let mut batcher = Batcher::new(policy);
+        // Group scan artifacts into buckets with their batch sizes.
+        let mut sizes: std::collections::BTreeMap<Bucket, Vec<usize>> = Default::default();
+        for e in manifest.by_kind("scan") {
+            let bucket = Bucket {
+                c: e.meta_usize("c").unwrap_or(0),
+                h: e.meta_usize("h").unwrap_or(0),
+                w: e.meta_usize("w").unwrap_or(0),
+                kchunk: e.meta_usize("kchunk").unwrap_or(0),
+                per_channel: e.meta_usize("cw").unwrap_or(1) > 1,
+            };
+            sizes.entry(bucket).or_default().push(e.meta_usize("n").unwrap_or(1));
+        }
+        let n_buckets = sizes.len();
+        for (b, s) in sizes {
+            batcher.register_bucket(b, s);
+        }
+        logging::info(
+            "coordinator",
+            &format!("{} scan buckets, {} workers", n_buckets, cfg.workers),
+        );
+
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(batcher),
+            direct: Mutex::new(VecDeque::new()),
+            work_ready: Condvar::new(),
+            metrics: Mutex::new(Metrics::new()),
+            shutdown: AtomicBool::new(false),
+            artifacts_dir: cfg.artifacts.clone(),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gspn2-exec-{i}"))
+                    .spawn(move || worker_main(i, sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Ok(Coordinator { shared, workers, next_id: AtomicU64::new(1) })
+    }
+
+    /// Submit one single-sample scan; returns the response channel.
+    pub fn submit_scan(
+        &self,
+        x: Tensor,
+        a_raw: Tensor,
+        lam: Tensor,
+        kchunk: usize,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed);
+        }
+        let payload = Payload::Scan { x, a_raw, lam };
+        let bucket = payload.bucket(kchunk).expect("scan payload");
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut b = self.shared.batcher.lock().unwrap();
+            if !b.known_bucket(&bucket) {
+                self.shared.metrics.lock().unwrap().record_rejection();
+                return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
+            }
+            if !b.has_capacity() {
+                self.shared.metrics.lock().unwrap().record_rejection();
+                return Err(SubmitError::Backpressure);
+            }
+            let req = Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                payload,
+                kchunk,
+                arrived: Instant::now(),
+                reply: tx,
+            };
+            b.enqueue(bucket, req);
+        }
+        self.shared.work_ready.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit a direct whole-artifact execution (not batched).
+    pub fn submit_direct(
+        &self,
+        artifact: &str,
+        inputs: Vec<Value>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed);
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.direct.lock().unwrap();
+            if q.len() >= 64 {
+                self.shared.metrics.lock().unwrap().record_rejection();
+                return Err(SubmitError::Backpressure);
+            }
+            q.push_back(Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                payload: Payload::Direct { artifact: artifact.to_string(), inputs },
+                kchunk: 0,
+                arrived: Instant::now(),
+                reply: tx,
+            });
+        }
+        self.shared.work_ready.notify_one();
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.shared.batcher.lock().unwrap().queued()
+            + self.shared.direct.lock().unwrap().len()
+    }
+
+    /// Graceful drain: stop admitting, process everything queued, join.
+    pub fn shutdown(mut self) -> Metrics {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let m = self.shared.metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+fn worker_main(idx: usize, sh: Arc<Shared>) {
+    let engine = match Engine::cpu(&sh.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            logging::error("worker", &format!("worker {idx}: engine init failed: {e:#}"));
+            return;
+        }
+    };
+    loop {
+        // 1) Direct requests take priority (they are latency-sensitive
+        //    whole-model calls).
+        let direct = sh.direct.lock().unwrap().pop_front();
+        if let Some(req) = direct {
+            run_direct(&engine, &sh, req);
+            continue;
+        }
+        // 2) Batched scan work.
+        let batch = {
+            let mut b = sh.batcher.lock().unwrap();
+            loop {
+                let now = Instant::now();
+                if let Some(batch) = b.pop_batch(now) {
+                    break Some(batch);
+                }
+                // Direct work may have arrived while we waited; bounce out
+                // to the outer loop (which prioritises it).
+                if !sh.direct.lock().unwrap().is_empty() {
+                    break None;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    // Drain leftovers younger than max_wait.
+                    let horizon = now + b.policy.max_wait + Duration::from_secs(1);
+                    break b.pop_batch(horizon);
+                }
+                // Eager-idle release: this worker has nothing runnable, so
+                // waiting out max_wait would buy batching nothing — take
+                // the queue head now (only fires when queues are non-empty
+                // but un-aged and un-full).
+                if b.policy.eager_idle {
+                    if let Some(batch) = b.pop_eager(now) {
+                        break Some(batch);
+                    }
+                }
+                let timeout = b
+                    .next_deadline()
+                    .map(|d| d.saturating_duration_since(now))
+                    .unwrap_or(Duration::from_millis(5));
+                let (nb, _t) = sh
+                    .work_ready
+                    .wait_timeout(b, timeout.max(Duration::from_micros(100)))
+                    .unwrap();
+                b = nb;
+            }
+        };
+        match batch {
+            Some((bucket, fused, reqs)) => run_scan_batch(&engine, &sh, bucket, fused, reqs),
+            None => {
+                if sh.shutdown.load(Ordering::SeqCst)
+                    && sh.direct.lock().unwrap().is_empty()
+                {
+                    return;
+                }
+                // Otherwise: loop back to pick up direct work.
+            }
+        }
+    }
+}
+
+fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
+    let t0 = Instant::now();
+    let queue_ns = t0.duration_since(req.arrived).as_nanos() as u64;
+    let (artifact, inputs) = match req.payload {
+        Payload::Direct { artifact, inputs } => (artifact, inputs),
+        _ => unreachable!("direct queue holds direct payloads"),
+    };
+    let result = engine.run(&artifact, &inputs);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    let ok = result.is_ok();
+    let _ = req.reply.send(Response {
+        id: req.id,
+        result,
+        queue_us: queue_ns / 1000,
+        execute_us: exec_ns / 1000,
+        batch: 1,
+    });
+    let mut m = sh.metrics.lock().unwrap();
+    if ok {
+        m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
+    } else {
+        m.record_error();
+    }
+}
+
+fn run_scan_batch(
+    engine: &Engine,
+    sh: &Shared,
+    bucket: Bucket,
+    fused: usize,
+    reqs: Vec<Request>,
+) {
+    let t0 = Instant::now();
+    let artifact = bucket.artifact(fused);
+    // Fast path: single request into a batch-1 artifact — move the
+    // payload tensors straight into the input Values, no concat/split
+    // copies (saves ~450 KB of memcpy per request at the 64^2 c8 bucket).
+    if fused == 1 && reqs.len() == 1 {
+        let mut reqs = reqs;
+        let r = reqs.pop().unwrap();
+        let (x, a_raw, lam) = match r.payload {
+            Payload::Scan { x, a_raw, lam } => (x, a_raw, lam),
+            _ => unreachable!("scan batch holds scan payloads"),
+        };
+        let inputs = vec![Value::F32(x), Value::F32(a_raw), Value::F32(lam)];
+        let result = engine.run(&artifact, &inputs);
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        let queue_ns = t0.duration_since(r.arrived).as_nanos() as u64;
+        let ok = result.is_ok();
+        let _ = r.reply.send(Response {
+            id: r.id,
+            result,
+            queue_us: queue_ns / 1000,
+            execute_us: exec_ns / 1000,
+            batch: 1,
+        });
+        let mut m = sh.metrics.lock().unwrap();
+        if ok {
+            m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
+        } else {
+            m.record_error();
+        }
+        return;
+    }
+    // Assemble batch inputs (pad by repeating the first sample if the
+    // smallest compiled batch exceeds the queue remainder).
+    let mut xs: Vec<&Tensor> = Vec::with_capacity(fused);
+    let mut avs: Vec<&Tensor> = Vec::with_capacity(fused);
+    let mut lams: Vec<&Tensor> = Vec::with_capacity(fused);
+    for r in &reqs {
+        if let Payload::Scan { x, a_raw, lam } = &r.payload {
+            xs.push(x);
+            avs.push(a_raw);
+            lams.push(lam);
+        }
+    }
+    let pad = fused.saturating_sub(xs.len());
+    for _ in 0..pad {
+        xs.push(xs[0]);
+        avs.push(avs[0]);
+        lams.push(lams[0]);
+    }
+    if pad > 0 {
+        sh.metrics.lock().unwrap().record_padding(pad);
+    }
+    let inputs = vec![
+        Value::F32(concat_axis0(&xs)),
+        Value::F32(concat_axis0(&avs)),
+        Value::F32(concat_axis0(&lams)),
+    ];
+
+    let result = engine.run(&artifact, &inputs);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+
+    match result {
+        Ok(mut outs) => {
+            let h = outs.remove(0).into_f32().expect("scan output is f32");
+            let sizes = vec![1usize; fused];
+            let mut parts = split_axis0(&h, &sizes);
+            parts.truncate(reqs.len());
+            let mut m = sh.metrics.lock().unwrap();
+            for (r, out) in reqs.iter().zip(parts.drain(..)) {
+                let queue_ns = t0.duration_since(r.arrived).as_nanos() as u64;
+                m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, fused);
+                let _ = r.reply.send(Response {
+                    id: r.id,
+                    result: Ok(vec![Value::F32(out)]),
+                    queue_us: queue_ns / 1000,
+                    execute_us: exec_ns / 1000,
+                    batch: fused,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let mut m = sh.metrics.lock().unwrap();
+            for r in &reqs {
+                m.record_error();
+                let _ = r.reply.send(Response {
+                    id: r.id,
+                    result: Err(anyhow!("{msg}")),
+                    queue_us: 0,
+                    execute_us: exec_ns / 1000,
+                    batch: fused,
+                });
+            }
+        }
+    }
+}

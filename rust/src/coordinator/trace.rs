@@ -1,0 +1,95 @@
+//! Synthetic client: open-loop Poisson arrivals over the scan buckets.
+//!
+//! Used by `gspn2 serve`, the serving example, and the coordinator
+//! benches to drive the system at a configurable offered load, the way a
+//! load generator would in a real deployment.
+
+use std::time::Duration;
+
+use crate::util::Rng;
+use crate::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Time offset from trace start.
+    pub at: Duration,
+    pub x: Tensor,
+    pub a_raw: Tensor,
+    pub lam: Tensor,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub rate_rps: f64,
+    pub requests: usize,
+    /// Geometry (c, h, w) choices with weights.
+    pub shapes: Vec<((usize, usize, usize), f64)>,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            rate_rps: 200.0,
+            requests: 500,
+            shapes: vec![((8, 64, 64), 0.8), ((8, 128, 128), 0.2)],
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a deterministic Poisson-arrival trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed ^ 0x7ace);
+    let weights: Vec<f64> = cfg.shapes.iter().map(|(_, w)| *w).collect();
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        t += rng.exponential(cfg.rate_rps);
+        let (c, h, w) = cfg.shapes[rng.weighted(&weights)].0;
+        out.push(TraceEvent {
+            at: Duration::from_secs_f64(t),
+            x: Tensor::randn(&[1, c, h, w], &mut rng, 1.0),
+            a_raw: Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0),
+            lam: Tensor::randn(&[1, c, h, w], &mut rng, 1.0),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let cfg = TraceConfig { requests: 20, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.x, y.x);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_increasing_and_rate_roughly_matches() {
+        let cfg = TraceConfig { rate_rps: 1000.0, requests: 2000, ..Default::default() };
+        let tr = generate(&cfg);
+        for w in tr.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        let total = tr.last().unwrap().at.as_secs_f64();
+        let rate = 2000.0 / total;
+        assert!((rate / 1000.0 - 1.0).abs() < 0.15, "rate {rate}");
+    }
+
+    #[test]
+    fn shapes_follow_weights() {
+        let cfg = TraceConfig { requests: 1000, ..Default::default() };
+        let tr = generate(&cfg);
+        let big = tr.iter().filter(|e| e.x.shape[2] == 128).count();
+        assert!((100..350).contains(&big), "128^2 fraction {big}/1000");
+    }
+}

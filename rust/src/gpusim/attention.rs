@@ -1,0 +1,324 @@
+//! Cost models for the comparison baselines: softmax / flash attention,
+//! linear attention, Mamba-style selective scan — plus the composite
+//! diffusion-pipeline model behind Fig 1 and Fig 5 and the classifier
+//! throughput model behind Fig S1 / Table S2.
+//!
+//! Compute peaks are A100 datasheet numbers (312 TFLOP/s bf16 tensor,
+//! 19.5 TFLOP/s fp32 SIMT); achieved fractions are the standard ~60%
+//! GEMM / ~40% attention figures from the FlashAttention papers.
+
+use super::device::DeviceSpec;
+use super::exec::simulate_dirs;
+use super::workload::{KernelConfig, ScanWorkload};
+
+pub const TENSOR_PEAK_TFLOPS: f64 = 312.0;
+pub const GEMM_EFF: f64 = 0.60;
+pub const ATTN_EFF: f64 = 0.40;
+
+/// One global softmax-attention layer over T tokens, head dim d, channels
+/// c. FlashAttention-style: IO is linear in T, compute stays quadratic.
+pub fn attention_time_ms(dev: &DeviceSpec, t: usize, c: usize, flash: bool) -> f64 {
+    let t = t as f64;
+    let c = c as f64;
+    // QKV + output projections (4 dense GEMMs).
+    let proj_flops = 8.0 * t * c * c;
+    // QK^T and AV.
+    let attn_flops = 4.0 * t * t * c;
+    let compute_ms =
+        (proj_flops / (TENSOR_PEAK_TFLOPS * GEMM_EFF) + attn_flops / (TENSOR_PEAK_TFLOPS * ATTN_EFF))
+            / 1e12
+            * 1e3;
+    let bytes = if flash {
+        // O(T x c) streaming IO.
+        12.0 * t * c * 4.0
+    } else {
+        // Materialised T x T attention matrix, read + written.
+        (12.0 * t * c + 2.0 * t * t) * 4.0
+    };
+    let mem_ms = bytes / (dev.peak_bw_gbs * 0.85 * 1e9) * 1e3;
+    compute_ms.max(mem_ms)
+}
+
+/// Linear attention (kernel feature maps): O(T c^2) compute.
+pub fn linear_attention_time_ms(dev: &DeviceSpec, t: usize, c: usize) -> f64 {
+    let t = t as f64;
+    let c = c as f64;
+    let flops = 8.0 * t * c * c + 4.0 * t * c * c;
+    let compute_ms = flops / (TENSOR_PEAK_TFLOPS * GEMM_EFF) / 1e12 * 1e3;
+    let mem_ms = 16.0 * t * c * 4.0 / (dev.peak_bw_gbs * 0.85 * 1e9) * 1e3;
+    compute_ms.max(mem_ms)
+}
+
+/// Mamba-style selective scan over T tokens, state dim n, channels c:
+/// bandwidth-bound chunked prefix scan.
+pub fn mamba_scan_time_ms(dev: &DeviceSpec, t: usize, c: usize, state: usize) -> f64 {
+    let bytes = (t * c * (6 + 2 * state)) as f64 * 4.0;
+    let mem_ms = bytes / (dev.peak_bw_gbs * 0.80 * 1e9) * 1e3;
+    let flops = (t * c * state * 6) as f64;
+    let compute_ms = flops / (19.5e12 * 0.5) * 1e3;
+    mem_ms.max(compute_ms)
+}
+
+/// GSPN module time: 4 directional passes on streams (GSPN-2) or serial
+/// micro-kernels (GSPN-1), over an (n, c, h, w) feature map. The proxy
+/// down/up projections (when `proxy_ratio > 1`) run ONCE, outside the
+/// per-direction scans.
+pub fn gspn_module_time_ms(
+    dev: &DeviceSpec,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    cfg: &KernelConfig,
+) -> f64 {
+    let c_eff = cfg.effective_channels(c).max(1);
+    // Scans see the proxy-compressed channel count directly; clear the
+    // ratio so the simulator does not re-add projection traffic per pass.
+    let scan_cfg = KernelConfig { proxy_ratio: 0, ..*cfg };
+    let wl = ScanWorkload::fwd(n, c_eff, h, w);
+    let scans_ms = simulate_dirs(dev, &wl, &scan_cfg, 4, cfg.fused);
+    let proj_ms = if cfg.proxy_ratio > 1 && c_eff < c {
+        let words = 2.0 * (c + c_eff) as f64;
+        let bytes = words * 4.0 * (n * h * w) as f64;
+        bytes / (dev.peak_bw_gbs * 0.90 * 1e9) * 1e3
+    } else {
+        0.0
+    };
+    scans_ms + proj_ms
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5: text-to-image pipeline model
+// ---------------------------------------------------------------------------
+
+/// SDXL-like denoising pipeline at a given output resolution.
+///
+/// The UNet runs on an 8x-downsampled latent; attention layers sit at 1/2
+/// and 1/4 of the latent resolution (SDXL places self-attention in the
+/// lower-resolution stages), conv layers everywhere. GSPN variants swap
+/// each attention layer for a 4-direction GSPN module with C_proxy = C/8
+/// (the paper's §5.3 setting).
+#[derive(Clone, Debug)]
+pub struct DiffusionModel {
+    /// Attention-bearing layers: (downsample factor from latent, channels).
+    pub attn_layers: Vec<(usize, usize)>,
+    /// Conv compute per latent pixel (FLOPs) for the whole UNet.
+    pub conv_flops_per_px: f64,
+    pub steps: usize,
+}
+
+impl DiffusionModel {
+    pub fn sdxl_like() -> DiffusionModel {
+        DiffusionModel {
+            // SDXL's ~70 transformer blocks sit at latent/2 (640ch) and
+            // latent/4 (1280ch).
+            attn_layers: vec![(2, 640); 24]
+                .into_iter()
+                .chain(vec![(4, 1280); 46])
+                .collect(),
+            conv_flops_per_px: 2.0e6,
+            steps: 30,
+        }
+    }
+
+    /// Latent side length for an output resolution.
+    pub fn latent(res: usize) -> usize {
+        (res / 8).max(1)
+    }
+
+    fn conv_time_ms(&self, res: usize) -> f64 {
+        let lat = Self::latent(res);
+        let px = (lat * lat) as f64;
+        self.conv_flops_per_px * px / (TENSOR_PEAK_TFLOPS * GEMM_EFF * 1e12) * 1e3
+    }
+
+    /// Per-denoising-step time with dense (or flash) attention.
+    pub fn attn_step_ms(&self, dev: &DeviceSpec, res: usize, flash: bool) -> f64 {
+        let lat = Self::latent(res);
+        let mut t = self.conv_time_ms(res);
+        for &(ds, c) in &self.attn_layers {
+            let side = (lat / ds).max(1);
+            t += attention_time_ms(dev, side * side, c.min(128), flash);
+        }
+        t
+    }
+
+    /// Per-step time with GSPN modules in place of attention.
+    pub fn gspn_step_ms(&self, dev: &DeviceSpec, res: usize, cfg: &KernelConfig) -> f64 {
+        let lat = Self::latent(res);
+        let mut t = self.conv_time_ms(res);
+        for &(ds, c) in &self.attn_layers {
+            let side = (lat / ds).max(1);
+            t += gspn_module_time_ms(dev, 1, c, side, side, cfg);
+        }
+        t
+    }
+
+    /// Full-image generation time (all denoising steps), seconds.
+    pub fn generate_s(&self, dev: &DeviceSpec, res: usize, backend: Backend) -> f64 {
+        let per_step = match backend {
+            Backend::SdxlDense => self.attn_step_ms(dev, res, false),
+            Backend::SdxlFlash => self.attn_step_ms(dev, res, true),
+            Backend::Gspn1 => self.gspn_step_ms(dev, res, &KernelConfig::gspn1()),
+            Backend::Gspn2 => self.gspn_step_ms(dev, res, &KernelConfig::with_proxy(8)),
+        };
+        per_step * self.steps as f64 / 1e3
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    SdxlDense,
+    SdxlFlash,
+    Gspn1,
+    Gspn2,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 4] =
+        [Backend::SdxlDense, Backend::SdxlFlash, Backend::Gspn1, Backend::Gspn2];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::SdxlDense => "SDXL (dense attn)",
+            Backend::SdxlFlash => "SDXL (flash attn)",
+            Backend::Gspn1 => "GSPN-1",
+            Backend::Gspn2 => "GSPN-2",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig S1 / Table S2: classifier throughput model
+// ---------------------------------------------------------------------------
+
+/// ImageNet-style inference throughput (img/s) of a GSPN classifier.
+///
+/// GEMM-dominated compute from the MAC accounting plus the simulated scan
+/// time of every block's 4-direction module at its stage resolution.
+pub fn classifier_throughput(
+    dev: &DeviceSpec,
+    arch: &crate::model::GspnArch,
+    img: usize,
+    batch: usize,
+) -> f64 {
+    // Small-conv inference at 224^2 achieves nowhere near tensor peak:
+    // ViT-small-class models on A100 sustain ~15-20 effective TFLOP/s
+    // (launch latency + small GEMMs); calibrated on Fig S1's reported
+    // 1544 img/s for GSPN-2-T.
+    const CLASSIFIER_EFF_TFLOPS: f64 = 18.0;
+    let macs = arch.cost(img).macs as f64 * batch as f64;
+    let gemm_ms = 2.0 * macs / (CLASSIFIER_EFF_TFLOPS * 1e12) * 1e3;
+    let cfg = KernelConfig::gspn2();
+    let mut scan_ms = 0.0;
+    let mut res = img / arch.patch;
+    for (si, (&_dim, &depth)) in arch.dims.iter().zip(&arch.depths).enumerate() {
+        if si > 0 {
+            res /= 2;
+        }
+        let wl = ScanWorkload::fwd(batch, arch.c_proxy, res, res);
+        let per_block = simulate_dirs(dev, &wl, &cfg, 4, true);
+        scan_ms += per_block * depth as f64;
+    }
+    // Fixed per-image framework overhead (dataloader/normalisation).
+    let overhead_ms = 0.05 * batch as f64;
+    batch as f64 / ((gemm_ms + scan_ms + overhead_ms) / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100() -> DeviceSpec {
+        DeviceSpec::a100_sxm4_80gb()
+    }
+
+    #[test]
+    fn attention_quadratic_scan_linear() {
+        let dev = a100();
+        let t1 = attention_time_ms(&dev, 4096, 64, true);
+        let t2 = attention_time_ms(&dev, 16384, 64, true);
+        assert!(t2 / t1 > 8.0, "attention not ~quadratic: {}", t2 / t1);
+        let cfg = KernelConfig::gspn2();
+        let s1 = gspn_module_time_ms(&dev, 1, 64, 64, 64, &cfg);
+        let s2 = gspn_module_time_ms(&dev, 1, 64, 128, 128, &cfg);
+        assert!(s2 / s1 < 8.0, "scan super-quadratic: {}", s2 / s1);
+    }
+
+    #[test]
+    fn dense_attention_slower_than_flash_at_scale() {
+        let dev = a100();
+        assert!(
+            attention_time_ms(&dev, 16384, 64, false)
+                > attention_time_ms(&dev, 16384, 64, true)
+        );
+    }
+
+    #[test]
+    fn fig5_speedup_grows_with_resolution() {
+        let dev = a100();
+        let m = DiffusionModel::sdxl_like();
+        let mut prev = 0.0;
+        for res in [1024usize, 2048, 4096, 8192, 16384] {
+            let base = m.generate_s(&dev, res, Backend::SdxlFlash);
+            let ours = m.generate_s(&dev, res, Backend::Gspn2);
+            let speedup = base / ours;
+            assert!(speedup > prev * 0.95, "speedup fell at {res}: {speedup}");
+            prev = speedup;
+        }
+        assert!(prev > 30.0, "16K speedup only {prev}x (paper: 93x)");
+    }
+
+    #[test]
+    fn fig5_4k_speedup_band() {
+        let dev = a100();
+        let m = DiffusionModel::sdxl_like();
+        let base = m.generate_s(&dev, 4096, Backend::SdxlFlash);
+        let ours = m.generate_s(&dev, 4096, Backend::Gspn2);
+        let s = base / ours;
+        assert!((8.0..120.0).contains(&s), "4K speedup {s}x (paper: 32x)");
+    }
+
+    #[test]
+    fn gspn2_pipeline_faster_than_gspn1() {
+        let dev = a100();
+        let m = DiffusionModel::sdxl_like();
+        for res in [1024usize, 4096] {
+            assert!(
+                m.generate_s(&dev, res, Backend::Gspn2)
+                    < m.generate_s(&dev, res, Backend::Gspn1)
+            );
+        }
+    }
+
+    #[test]
+    fn mamba_and_linear_attention_sane() {
+        let dev = a100();
+        let lin = linear_attention_time_ms(&dev, 16384, 64);
+        let dense = attention_time_ms(&dev, 16384, 64, false);
+        assert!(lin < dense);
+        let mam = mamba_scan_time_ms(&dev, 16384, 64, 16);
+        assert!(mam > 0.0 && mam < dense);
+    }
+
+    #[test]
+    fn throughput_decreases_with_proxy_dim() {
+        // Table S2 trend: larger C_proxy -> lower img/s.
+        let dev = a100();
+        let mut prev = f64::INFINITY;
+        for p in [2usize, 4, 8, 16, 32] {
+            let arch = crate::model::GspnArch { c_proxy: p, ..crate::model::gspn2_tiny() };
+            let thr = classifier_throughput(&dev, &arch, 224, 64);
+            assert!(thr < prev, "throughput rose at C_proxy={p}: {thr}");
+            prev = thr;
+        }
+    }
+
+    #[test]
+    fn tiny_throughput_magnitude() {
+        // Fig S1 reports 1544 img/s for GSPN-2-T; accept a broad band.
+        let dev = a100();
+        let thr = classifier_throughput(&dev, &crate::model::gspn2_tiny(), 224, 64);
+        assert!((400.0..5000.0).contains(&thr), "throughput {thr}");
+    }
+}

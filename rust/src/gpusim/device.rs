@@ -1,0 +1,229 @@
+//! GPU device specification and occupancy calculator.
+//!
+//! All numbers are published hardware constants (A100-SXM4 datasheet /
+//! CUDA occupancy tables), not fits — see DESIGN.md §5. The handful of
+//! *calibration* constants live in `memory.rs` and are documented there.
+
+/// Static device description.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Max resident thread blocks per SM (compute capability 8.0).
+    pub max_blocks_per_sm: usize,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Max threads per block.
+    pub max_threads_per_block: usize,
+    /// Shared memory per SM (KiB), carveout-max configuration.
+    pub smem_kb_per_sm: usize,
+    /// L1/tex cache per SM (KiB) — unified with smem on A100 (192 total).
+    pub l1_kb_per_sm: usize,
+    /// L2 cache (MiB).
+    pub l2_mb: usize,
+    /// HBM peak bandwidth (GB/s). A100-80GB HBM2e: ~1995 effective.
+    pub peak_bw_gbs: f64,
+    /// Kernel launch overhead (µs), CUDA driver literature value.
+    pub launch_us: f64,
+    /// DRAM access latency (µs) — a dependent HBM round trip.
+    pub hbm_latency_us: f64,
+    /// CUDA per-grid-axis block limit (x axis is 2^31-1, y/z are 65535;
+    /// GSPN-1's flat 1D grids hit the 65535 legacy limit when misused).
+    pub grid_axis_limit: usize,
+}
+
+impl DeviceSpec {
+    /// NVIDIA A100-SXM4-80GB (compute capability 8.0).
+    pub fn a100_sxm4_80gb() -> DeviceSpec {
+        DeviceSpec {
+            name: "A100-SXM4-80GB".into(),
+            sms: 108,
+            max_blocks_per_sm: 32,
+            max_threads_per_sm: 2048,
+            max_threads_per_block: 1024,
+            smem_kb_per_sm: 164,
+            l1_kb_per_sm: 192,
+            l2_mb: 40,
+            peak_bw_gbs: 1995.0,
+            launch_us: 4.0,
+            hbm_latency_us: 0.5,
+            grid_axis_limit: 65_535,
+        }
+    }
+
+    /// A smaller part (A30-like) used by ablations to show the model is
+    /// not A100-specific.
+    pub fn a30() -> DeviceSpec {
+        DeviceSpec {
+            name: "A30".into(),
+            sms: 56,
+            max_blocks_per_sm: 32,
+            max_threads_per_sm: 2048,
+            max_threads_per_block: 1024,
+            smem_kb_per_sm: 164,
+            l1_kb_per_sm: 192,
+            l2_mb: 24,
+            peak_bw_gbs: 933.0,
+            launch_us: 4.0,
+            hbm_latency_us: 0.5,
+            grid_axis_limit: 65_535,
+        }
+    }
+
+    /// NVIDIA H100-SXM5-80GB (compute capability 9.0): more SMs and HBM3
+    /// bandwidth move the concurrency knee and the roofline, used by the
+    /// cross-device sweep to show the model is not A100-specific.
+    pub fn h100_sxm5_80gb() -> DeviceSpec {
+        DeviceSpec {
+            name: "H100-SXM5-80GB".into(),
+            sms: 132,
+            max_blocks_per_sm: 32,
+            max_threads_per_sm: 2048,
+            max_threads_per_block: 1024,
+            smem_kb_per_sm: 228,
+            l1_kb_per_sm: 256,
+            l2_mb: 50,
+            peak_bw_gbs: 3352.0,
+            launch_us: 3.5,
+            hbm_latency_us: 0.45,
+            grid_axis_limit: 65_535,
+        }
+    }
+
+    /// NVIDIA V100-SXM2-32GB (compute capability 7.0), the previous
+    /// generation: fewer SMs, HBM2, higher launch overhead.
+    pub fn v100_sxm2_32gb() -> DeviceSpec {
+        DeviceSpec {
+            name: "V100-SXM2-32GB".into(),
+            sms: 80,
+            max_blocks_per_sm: 32,
+            max_threads_per_sm: 2048,
+            max_threads_per_block: 1024,
+            smem_kb_per_sm: 96,
+            l1_kb_per_sm: 128,
+            l2_mb: 6,
+            peak_bw_gbs: 900.0,
+            launch_us: 5.0,
+            hbm_latency_us: 0.6,
+            grid_axis_limit: 65_535,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceSpec> {
+        match name {
+            "a100-sxm4-80gb" | "a100" => Some(Self::a100_sxm4_80gb()),
+            "a30" => Some(Self::a30()),
+            "h100-sxm5-80gb" | "h100" => Some(Self::h100_sxm5_80gb()),
+            "v100-sxm2-32gb" | "v100" => Some(Self::v100_sxm2_32gb()),
+            _ => None,
+        }
+    }
+
+    /// Every known device, for cross-device sweeps.
+    pub fn all() -> Vec<DeviceSpec> {
+        vec![Self::v100_sxm2_32gb(), Self::a30(), Self::a100_sxm4_80gb(), Self::h100_sxm5_80gb()]
+    }
+
+    /// Resident blocks per SM for a given block shape.
+    pub fn blocks_per_sm(&self, threads_per_block: usize, smem_bytes_per_block: usize) -> usize {
+        if threads_per_block == 0 {
+            return 0;
+        }
+        let by_threads = self.max_threads_per_sm / threads_per_block.min(self.max_threads_per_block);
+        let by_smem = if smem_bytes_per_block == 0 {
+            self.max_blocks_per_sm
+        } else {
+            (self.smem_kb_per_sm * 1024) / smem_bytes_per_block
+        };
+        by_threads.min(by_smem).min(self.max_blocks_per_sm).max(0)
+    }
+
+    /// Device-wide concurrent-block capacity (the §4.2 saturation scale:
+    /// 108 x 32 ≈ 3.5K blocks in the best case).
+    pub fn concurrency_capacity(&self, threads_per_block: usize, smem_bytes: usize) -> usize {
+        (self.blocks_per_sm(threads_per_block, smem_bytes) * self.sms).max(1)
+    }
+
+    /// Occupancy in [0,1] for a block shape: resident threads / max.
+    pub fn occupancy(&self, threads_per_block: usize, smem_bytes: usize) -> f64 {
+        let b = self.blocks_per_sm(threads_per_block, smem_bytes);
+        (b * threads_per_block.min(self.max_threads_per_block)) as f64
+            / self.max_threads_per_sm as f64
+    }
+
+    /// Number of launches needed to cover `blocks` given the per-axis grid
+    /// limit (GSPN-2's multi-launch offset indexing, §4.3).
+    pub fn launches_for_grid(&self, blocks: usize) -> usize {
+        blocks.div_ceil(self.grid_axis_limit).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_constants() {
+        let d = DeviceSpec::a100_sxm4_80gb();
+        assert_eq!(d.sms, 108);
+        assert_eq!(d.max_blocks_per_sm, 32);
+        // The paper's ~3.5K concurrent-block figure (108 x 32).
+        assert_eq!(d.concurrency_capacity(64, 0), 3456);
+    }
+
+    #[test]
+    fn occupancy_by_threads() {
+        let d = DeviceSpec::a100_sxm4_80gb();
+        // 1024-thread blocks: 2 resident per SM.
+        assert_eq!(d.blocks_per_sm(1024, 0), 2);
+        assert!((d.occupancy(1024, 0) - 1.0).abs() < 1e-9);
+        // 512-thread blocks: 4 resident.
+        assert_eq!(d.blocks_per_sm(512, 0), 4);
+        // Tiny blocks capped by the 32-block limit.
+        assert_eq!(d.blocks_per_sm(32, 0), 32);
+        assert!(d.occupancy(32, 0) < 0.51);
+    }
+
+    #[test]
+    fn smem_limits_residency() {
+        let d = DeviceSpec::a100_sxm4_80gb();
+        // 100 KiB smem per block -> only 1 block per SM.
+        assert_eq!(d.blocks_per_sm(256, 100 * 1024), 1);
+        assert_eq!(d.blocks_per_sm(256, 40 * 1024), 4);
+    }
+
+    #[test]
+    fn grid_limit_launches() {
+        let d = DeviceSpec::a100_sxm4_80gb();
+        assert_eq!(d.launches_for_grid(1000), 1);
+        assert_eq!(d.launches_for_grid(65_535), 1);
+        assert_eq!(d.launches_for_grid(65_536), 2);
+        assert_eq!(d.launches_for_grid(200_000), 4);
+    }
+
+    #[test]
+    fn device_lookup() {
+        assert!(DeviceSpec::by_name("a100").is_some());
+        assert!(DeviceSpec::by_name("a30").is_some());
+        assert!(DeviceSpec::by_name("h100").is_some());
+        assert!(DeviceSpec::by_name("v100").is_some());
+        assert!(DeviceSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn device_ordering_by_bandwidth() {
+        let all = DeviceSpec::all();
+        assert_eq!(all.len(), 4);
+        for pair in all.windows(2) {
+            assert!(pair[0].peak_bw_gbs < pair[1].peak_bw_gbs);
+        }
+    }
+
+    #[test]
+    fn h100_concurrency_exceeds_a100() {
+        let a = DeviceSpec::a100_sxm4_80gb();
+        let h = DeviceSpec::h100_sxm5_80gb();
+        assert!(h.concurrency_capacity(64, 0) > a.concurrency_capacity(64, 0));
+    }
+}

@@ -1,0 +1,31 @@
+//! First-principles A100 execution simulator.
+//!
+//! The paper's system contribution is a CUDA kernel; this environment has
+//! no GPU, so every table and figure of the evaluation is regenerated on
+//! a mechanistic simulator (DESIGN.md §1 documents the substitution):
+//!
+//! * [`device`] — published hardware constants + occupancy calculator.
+//! * [`workload`] — scan workloads and the cumulative optimisation stages.
+//! * [`memory`] — HBM traffic / coalescing / cache model (the calibrated
+//!   constants live here, each documented against the paper section that
+//!   motivates it).
+//! * [`exec`] — launch / wave / latency composition for GSPN-1's per-step
+//!   micro-kernels and GSPN-2's fused kernel.
+//! * [`pipeline`] — the Fig 3 / S3 / S4 step-by-step stage runner.
+//! * [`attention`] — baseline cost models (softmax/flash/linear/Mamba) and
+//!   the Fig 5 diffusion-pipeline + Fig S1 throughput models.
+
+pub mod adaptive;
+pub mod attention;
+pub mod device;
+pub mod exec;
+pub mod memory;
+pub mod pipeline;
+pub mod workload;
+
+pub use adaptive::{choose as adaptive_choose, Choice};
+pub use attention::{Backend, DiffusionModel};
+pub use device::DeviceSpec;
+pub use exec::{simulate, simulate_dirs, SimResult};
+pub use pipeline::{run_pipeline, PaperPipeline, StageResult, FIG3, FIG_S3, FIG_S4};
+pub use workload::{KernelConfig, OptStage, ScanWorkload};

@@ -1,0 +1,30 @@
+//! # GSPN-2: Efficient Parallel Sequence Modeling — Rust coordinator
+//!
+//! Three-layer reproduction of *GSPN-2* (Wang et al., 2025):
+//!
+//! * **L1** — fused Pallas line-scan kernels (`python/compile/kernels/`),
+//!   AOT-lowered to HLO text.
+//! * **L2** — the GSPN model family in JAX (`python/compile/model.py`),
+//!   lowered once by `python/compile/aot.py` into `artifacts/`.
+//! * **L3** — this crate: the serving coordinator (router + dynamic
+//!   batcher + worker pool), the PJRT runtime that loads and executes the
+//!   artifacts, the training driver, the pure-Rust GSPN reference
+//!   (`scan`), the A100 execution simulator (`gpusim`) that regenerates
+//!   every table and figure of the paper's evaluation, and the substrate
+//!   utilities everything is built on.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `gspn2` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod scan;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use tensor::Tensor;

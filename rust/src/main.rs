@@ -1,0 +1,209 @@
+//! `gspn2` — the GSPN-2 launcher.
+//!
+//! ```text
+//! gspn2 repro <id|all> [--device a100] [--out-dir bench_out] [--proxy-steps N]
+//! gspn2 serve  [--workers N] [--max-batch N] [--max-wait-us U]
+//!              [--rate RPS] [--requests N] [--artifacts DIR]
+//! gspn2 train  [--model classifier|attn_classifier] [--steps N]
+//!              [--log-every N] [--eval-every N] [--seed S]
+//! gspn2 denoise-train [--steps N]
+//! gspn2 seg-train [--steps N] [--eval-every N]
+//! gspn2 sim    [--batch N] [--channels C] [--res R] [--proxy RATIO]
+//! gspn2 info   [--artifacts DIR]
+//! ```
+//!
+//! Any command also accepts `--config path.toml` (see `configs/`).
+
+use gspn2::config::Config;
+use gspn2::coordinator::{Coordinator, SubmitError};
+use gspn2::gpusim::{simulate, DeviceSpec, KernelConfig, ScanWorkload};
+use gspn2::runtime::{Engine, Manifest};
+use gspn2::train::{train_classifier, train_denoiser, train_segmenter};
+use gspn2::util::cli::Args;
+use gspn2::util::logging;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            logging::error("gspn2", &format!("{e:#}"));
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::from_args(args).map_err(|e| anyhow::anyhow!(e))?;
+    match cmd {
+        "repro" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let dev = DeviceSpec::by_name(&cfg.sim.device)
+                .ok_or_else(|| anyhow::anyhow!("unknown device '{}'", cfg.sim.device))?;
+            let proxy_steps = args.usize_or("proxy-steps", 60);
+            gspn2::repro::run(id, &dev, &cfg.sim.out_dir, proxy_steps)
+        }
+        "serve" => serve(&cfg),
+        "train" => {
+            let engine = Engine::cpu(&cfg.train.artifacts)?;
+            let report = train_classifier(
+                &engine,
+                &cfg.train.model,
+                cfg.train.steps,
+                cfg.train.log_every,
+                cfg.train.eval_every,
+                cfg.train.seed,
+            )?;
+            let path = format!("{}/loss_curve_{}.csv", cfg.sim.out_dir, cfg.train.model);
+            std::fs::create_dir_all(&cfg.sim.out_dir)?;
+            std::fs::write(&path, report.to_csv())?;
+            println!(
+                "trained {} for {} steps: loss {:.4}, eval acc {:.1}%, {:.1}s \
+                 (driver overhead {:.1}%); curve -> {path}",
+                cfg.train.model,
+                cfg.train.steps,
+                report.final_train_loss,
+                report.final_eval_acc * 100.0,
+                report.wall_s,
+                report.step_overhead_frac * 100.0
+            );
+            Ok(())
+        }
+        "seg-train" => {
+            let engine = Engine::cpu(&cfg.train.artifacts)?;
+            let report = train_segmenter(
+                &engine,
+                cfg.train.steps,
+                cfg.train.log_every,
+                cfg.train.eval_every,
+                cfg.train.seed,
+            )?;
+            let path = format!("{}/loss_curve_segmenter.csv", cfg.sim.out_dir);
+            std::fs::create_dir_all(&cfg.sim.out_dir)?;
+            std::fs::write(&path, report.to_csv())?;
+            println!(
+                "segmenter: {} steps, loss {:.4}, pixel acc {:.1}%; curve -> {path}",
+                cfg.train.steps,
+                report.final_train_loss,
+                report.final_eval_acc * 100.0
+            );
+            Ok(())
+        }
+        "denoise-train" => {
+            let engine = Engine::cpu(&cfg.train.artifacts)?;
+            let report =
+                train_denoiser(&engine, cfg.train.steps, cfg.train.log_every, cfg.train.seed)?;
+            let path = format!("{}/loss_curve_denoiser.csv", cfg.sim.out_dir);
+            std::fs::create_dir_all(&cfg.sim.out_dir)?;
+            std::fs::write(&path, report.to_csv())?;
+            println!(
+                "denoiser: {} steps, final loss {:.4}; curve -> {path}",
+                cfg.train.steps, report.final_train_loss
+            );
+            Ok(())
+        }
+        "sim" => {
+            let dev = DeviceSpec::by_name(&cfg.sim.device)
+                .ok_or_else(|| anyhow::anyhow!("unknown device '{}'", cfg.sim.device))?;
+            let n = args.usize_or("batch", 16);
+            let c = args.usize_or("channels", 8);
+            let r = args.usize_or("res", 1024);
+            let proxy = args.usize_or("proxy", 0);
+            let wl = ScanWorkload::fwd(n, c, r, r);
+            let g1 = simulate(&dev, &wl, &KernelConfig::gspn1());
+            let kcfg =
+                if proxy > 1 { KernelConfig::with_proxy(proxy) } else { KernelConfig::gspn2() };
+            let g2 = simulate(&dev, &wl, &kcfg);
+            println!("workload: {r}x{r} batch {n} channels {c} on {}", dev.name);
+            println!(
+                "  GSPN-1: {:8.3} ms  ({} launches, {:.0} GB/s, {:.1}% peak)",
+                g1.time_ms, g1.launches, g1.achieved_gbs, g1.pct_peak
+            );
+            println!(
+                "  GSPN-2: {:8.3} ms  ({} launches, {:.0} GB/s, {:.1}% peak)",
+                g2.time_ms, g2.launches, g2.achieved_gbs, g2.pct_peak
+            );
+            println!("  speedup: {:.1}x", g1.time_ms / g2.time_ms);
+            Ok(())
+        }
+        "info" => {
+            let m = Manifest::load(&cfg.serve.artifacts)?;
+            println!("artifacts in {}:", cfg.serve.artifacts);
+            for e in &m.entries {
+                println!(
+                    "  {:<28} {:>3} inputs {:>3} outputs  kind={}",
+                    e.name,
+                    e.inputs.len(),
+                    e.outputs.len(),
+                    e.meta_str("kind").unwrap_or("-")
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "gspn2 — GSPN-2 three-layer reproduction\n\n\
+                 commands:\n  \
+                 repro <id|all>   regenerate paper tables/figures ({})\n  \
+                 serve            run the serving coordinator on a synthetic trace\n  \
+                 train            train the classifier via PJRT artifacts\n  \
+                 denoise-train    train the denoiser\n  \
+                 sim              one-off kernel simulation\n  \
+                 info             list compiled artifacts\n",
+                gspn2::repro::ALL.join(", ")
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(cfg: &Config) -> anyhow::Result<()> {
+    use gspn2::coordinator::{generate_trace, TraceConfig};
+    use std::time::Instant;
+
+    let coord = Coordinator::start(&cfg.serve)?;
+    let trace = generate_trace(&TraceConfig {
+        rate_rps: cfg.serve.rate_rps,
+        requests: cfg.serve.requests,
+        seed: cfg.serve.seed,
+        ..TraceConfig::default()
+    });
+    logging::info(
+        "serve",
+        &format!(
+            "replaying {} requests at ~{:.0} rps over {} workers",
+            trace.len(),
+            cfg.serve.rate_rps,
+            cfg.serve.workers
+        ),
+    );
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for ev in trace {
+        let elapsed = t0.elapsed();
+        if ev.at > elapsed {
+            std::thread::sleep(ev.at - elapsed);
+        }
+        match coord.submit_scan(ev.x, ev.a_raw, ev.lam, 0) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::Backpressure) => rejected += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if let Ok(resp) = rx.recv() {
+            if resp.result.is_ok() {
+                ok += 1;
+            }
+        }
+    }
+    let metrics = coord.shutdown();
+    println!("completed {ok} requests ({rejected} rejected at admission)\n");
+    println!("{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Model-level accounting and the Table-2 comparison zoo.
+//!
+//! `arch` computes exact Param/MAC costs of the GSPN macro-architecture
+//! (the numbers the Python L2 model realises at small scale); `zoo` holds
+//! the published baseline rows the paper compares against and the
+//! computed GSPN-2 rows.
+
+pub mod arch;
+pub mod zoo;
+
+pub use arch::{gspn1_of, gspn2_base, gspn2_small, gspn2_tiny, Cost, GspnArch, PropMode};
+pub use zoo::{base_group, gspn1_rows, paper_targets, small_group, tiny_group, Backbone, ZooRow};

@@ -1,0 +1,375 @@
+//! Simulator-driven reproductions: the kernel-level tables and figures
+//! (Fig 1, Fig 3, Fig 4, Table 1, Fig S2, Fig S3, Fig S4).
+
+use super::table::{f1, ms, speedup, Table};
+use crate::gpusim::{
+    attention, simulate, DeviceSpec, KernelConfig, PaperPipeline, ScanWorkload, FIG3,
+    FIG_S3, FIG_S4,
+};
+
+fn pipeline_table(dev: &DeviceSpec, p: &PaperPipeline, slug_note: &str) -> Table {
+    let mut t = Table::new(
+        &format!("{} — step-by-step kernel optimisation", p.label),
+        &["stage", "sim time", "paper", "step gain", "cum speedup", "achieved %peak"],
+    );
+    let results = p.run(dev);
+    for (r, paper) in results.iter().zip(p.paper_ms) {
+        t.row(vec![
+            r.name.to_string(),
+            ms(r.time_ms),
+            ms(paper),
+            speedup(r.step_speedup),
+            speedup(r.cum_speedup),
+            format!("{:.1}%", r.sim.pct_peak),
+        ]);
+    }
+    let total = results.last().unwrap().cum_speedup;
+    let paper_total = p.paper_ms[0] / p.paper_ms[5];
+    t.note(&format!(
+        "cumulative speedup: simulated {total:.1}x vs paper {paper_total:.1}x {slug_note}"
+    ));
+    t
+}
+
+/// Fig 3: main config (1024^2, bs16, 8ch), 71.4 -> 1.8 ms (40x).
+pub fn fig3(dev: &DeviceSpec, out: &str) -> Table {
+    let t = pipeline_table(dev, &FIG3, "(paper conclusion claims 'up to 52x')");
+    t.emit(out, "fig3_pipeline");
+    t
+}
+
+/// Fig S3: large batch (1024^2, bs256, 1ch) — SRAM hurts here.
+pub fn figs3(dev: &DeviceSpec, out: &str) -> Table {
+    let t = pipeline_table(dev, &FIG_S3, "(SRAM stage is expected to be a ~0.9x slowdown)");
+    t.emit(out, "figs3_pipeline");
+    t
+}
+
+/// Fig S4: large channels (1024^2, bs1, 1152ch) — compressive dominates.
+pub fn figs4(dev: &DeviceSpec, out: &str) -> Table {
+    let t = pipeline_table(dev, &FIG_S4, "(compressive stage is the dominant gain)");
+    t.emit(out, "figs4_pipeline");
+    t
+}
+
+/// Table 1: global memory throughput, GSPN-1 vs GSPN-2, 8 configs.
+pub fn table1(dev: &DeviceSpec, out: &str) -> Table {
+    let rows: [(usize, usize, usize, f64, f64); 8] = [
+        // (batch, channels, size, paper GSPN-1 GB/s, paper GSPN-2 GB/s)
+        (32, 196, 32, 114.0, 1832.0),
+        (1, 768, 64, 86.0, 1847.0),
+        (1, 1152, 64, 35.0, 1837.0),
+        (1, 32, 64, 125.0, 1830.0),
+        (1, 32, 128, 98.0, 1865.0),
+        (1, 64, 256, 76.0, 1842.0),
+        (8, 64, 256, 94.0, 1858.0),
+        (1, 128, 512, 64.0, 1840.0),
+    ];
+    let mut t = Table::new(
+        "Table 1 — global memory throughput on A100",
+        &["input", "batch", "ch", "GSPN-1 sim", "GSPN-1 paper", "GSPN-2 sim", "GSPN-2 paper"],
+    );
+    for (n, c, s, p1, p2) in rows {
+        let wl = ScanWorkload::fwd(n, c, s, s);
+        let g1 = simulate(dev, &wl, &KernelConfig::gspn1());
+        let g2 = simulate(dev, &wl, &KernelConfig::gspn2());
+        t.row(vec![
+            format!("{s}x{s}"),
+            n.to_string(),
+            c.to_string(),
+            format!("{:.0} GB/s ({:.1}%)", g1.achieved_gbs, g1.pct_peak),
+            format!("{:.0} GB/s ({:.1}%)", p1, p1 / dev.peak_bw_gbs * 100.0),
+            format!("{:.0} GB/s ({:.1}%)", g2.achieved_gbs, g2.pct_peak),
+            format!("{:.0} GB/s ({:.1}%)", p2, p2 / dev.peak_bw_gbs * 100.0),
+        ]);
+    }
+    t.note("band check: GSPN-1 in the paper's 2-8% regime, GSPN-2 in the 90%+ regime");
+    t.emit(out, "table1_throughput");
+    t
+}
+
+/// Fig 4: forward/backward runtime vs resolution and vs channel count.
+pub fn fig4(dev: &DeviceSpec, out: &str) -> Table {
+    let mut t = Table::new(
+        "Fig 4 — runtime vs resolution / channels (GSPN-1 vs GSPN-2)",
+        &["config", "pass", "GSPN-1", "GSPN-2", "speedup"],
+    );
+    for res in [128usize, 256, 512, 1024, 2048] {
+        for bwd in [false, true] {
+            let wl = if bwd {
+                ScanWorkload::bwd(4, 8, res, res)
+            } else {
+                ScanWorkload::fwd(4, 8, res, res)
+            };
+            let g1 = simulate(dev, &wl, &KernelConfig::gspn1()).time_ms;
+            let g2 = simulate(dev, &wl, &KernelConfig::gspn2()).time_ms;
+            t.row(vec![
+                format!("{res}x{res} b4 c8"),
+                if bwd { "bwd" } else { "fwd" }.into(),
+                ms(g1),
+                ms(g2),
+                speedup(g1 / g2),
+            ]);
+        }
+    }
+    for c in [8usize, 32, 64, 128, 256, 512, 1024] {
+        for bwd in [false, true] {
+            let wl = if bwd {
+                ScanWorkload::bwd(4, c, 512, 512)
+            } else {
+                ScanWorkload::fwd(4, c, 512, 512)
+            };
+            let g1 = simulate(dev, &wl, &KernelConfig::gspn1()).time_ms;
+            let g2 = simulate(dev, &wl, &KernelConfig::with_proxy(8)).time_ms;
+            t.row(vec![
+                format!("512x512 b4 c{c}"),
+                if bwd { "bwd" } else { "fwd" }.into(),
+                ms(g1),
+                ms(g2),
+                speedup(g1 / g2),
+            ]);
+        }
+    }
+    t.note("paper: up to 36.8x fwd / 25.3x bwd at 1024^2; 27.4x fwd / 48.6x bwd at 256 ch");
+    t.emit(out, "fig4_runtime");
+    t
+}
+
+/// Fig S2: runtime vs BS x C product — the concurrency saturation story.
+pub fn figs2(dev: &DeviceSpec, out: &str) -> Table {
+    let mut t = Table::new(
+        "Fig S2 — forward runtime vs BSxC (64^2 latents)",
+        &["BSxC", "blocks (G1 step)", "GSPN-1", "GSPN-2", "speedup"],
+    );
+    for bsc in [32usize, 128, 512, 1024, 2048, 3456, 4096, 8192, 16384] {
+        let n = bsc.min(256);
+        let c = bsc.div_ceil(n);
+        let wl = ScanWorkload::fwd(n, c, 64, 64);
+        let g1 = simulate(dev, &wl, &KernelConfig::gspn1());
+        let g2 = simulate(dev, &wl, &KernelConfig::gspn2());
+        t.row(vec![
+            bsc.to_string(),
+            g1.blocks.to_string(),
+            ms(g1.time_ms),
+            ms(g2.time_ms),
+            speedup(g1.time_ms / g2.time_ms),
+        ]);
+    }
+    let cap = dev.concurrency_capacity(512, 0);
+    t.note(&format!(
+        "GSPN-1 per-step grids saturate the device at ~{cap} concurrent blocks (paper: 3-4K)"
+    ));
+    t.emit(out, "figs2_bsc");
+    t
+}
+
+/// Fig 1: headline comparison across attention variants.
+pub fn fig1(dev: &DeviceSpec, out: &str) -> Table {
+    let mut t = Table::new(
+        "Fig 1 — GSPN-2 vs GSPN-1 and efficient-attention variants",
+        &["tokens (side^2)", "softmax", "flash", "linear", "mamba", "GSPN-1", "GSPN-2", "G1/G2"],
+    );
+    for side in [64usize, 128, 256, 512] {
+        let tokens = side * side;
+        let c = 64;
+        let soft = attention::attention_time_ms(dev, tokens, c, false);
+        let flash = attention::attention_time_ms(dev, tokens, c, true);
+        let lin = attention::linear_attention_time_ms(dev, tokens, c);
+        let mamba = attention::mamba_scan_time_ms(dev, tokens, c, 16);
+        let g1 = attention::gspn_module_time_ms(dev, 1, c, side, side, &KernelConfig::gspn1());
+        let g2 = attention::gspn_module_time_ms(dev, 1, c, side, side, &KernelConfig::with_proxy(8));
+        t.row(vec![
+            format!("{side}^2"),
+            ms(soft),
+            ms(flash),
+            ms(lin),
+            ms(mamba),
+            ms(g1),
+            ms(g2),
+            speedup(g1 / g2),
+        ]);
+    }
+    t.note("paper: GSPN-2 runs 30-50x faster than GSPN-1 across configurations");
+    t.emit(out, "fig1_headline");
+    t
+}
+
+/// The concurrency-knee validation of §4.2 (supports Fig S2's narrative):
+/// a latency-bound kernel shows near-constant runtime until the device
+/// block capacity, then linear growth.
+pub fn knee(dev: &DeviceSpec, out: &str) -> Table {
+    let mut t = Table::new(
+        "Concurrency knee — waves vs active blocks (latency-bound kernel)",
+        &["blocks", "capacity", "waves", "relative runtime"],
+    );
+    // 64-thread blocks reach the cc-8.0 residency limit of 32 blocks/SM:
+    // 108 x 32 = 3,456 — the paper's "roughly 3,500 blocks" ceiling.
+    let cap = dev.concurrency_capacity(64, 0);
+    for blocks in [cap / 4, cap / 2, cap, cap + 1, cap * 2, cap * 4] {
+        let waves = blocks.div_ceil(cap);
+        t.row(vec![
+            blocks.to_string(),
+            cap.to_string(),
+            waves.to_string(),
+            f1(waves as f64),
+        ]);
+    }
+    t.note(&format!(
+        "capacity = {} SMs x {} resident blocks (cc 8.0) = {cap} (paper: ~3,500)",
+        dev.sms,
+        cap / dev.sms
+    ));
+    t.emit(out, "knee_concurrency");
+    t
+}
+
+/// Ablation: every single-optimisation toggle removed from full GSPN-2
+/// (how much each mechanism contributes at the Fig-3 config).
+pub fn ablation(dev: &DeviceSpec, out: &str) -> Table {
+    let wl = FIG3.workload();
+    let full = simulate(dev, &wl, &KernelConfig::gspn2()).time_ms;
+    let mut t = Table::new(
+        "Ablation — remove one optimisation from full GSPN-2 (Fig 3 config)",
+        &["variant", "time", "slowdown vs full"],
+    );
+    t.row(vec!["full GSPN-2".into(), ms(full), speedup(1.0)]);
+    let variants: Vec<(&str, KernelConfig)> = vec![
+        ("- coalescing", KernelConfig { coalesced: false, ..KernelConfig::gspn2() }),
+        ("- SRAM staging", KernelConfig { sram: false, ..KernelConfig::gspn2() }),
+        ("- 2D blocks", KernelConfig { blocks2d: false, c_slice: 1, ..KernelConfig::gspn2() }),
+        ("- shared taps", KernelConfig { shared_taps: false, ..KernelConfig::gspn2() }),
+        ("- fusion (per-step)", KernelConfig { fused: false, ..KernelConfig::gspn2() }),
+    ];
+    for (name, cfg) in variants {
+        let tms = simulate(dev, &wl, &cfg).time_ms;
+        t.row(vec![name.into(), ms(tms), speedup(tms / full)]);
+    }
+    t.emit(out, "ablation_stages");
+    t
+}
+
+/// Extension (appendix B): adaptive GSPN-1/GSPN-2 configuration
+/// selection by input shape, vs the fixed full-GSPN-2 config.
+pub fn adaptive(dev: &DeviceSpec, out: &str) -> Table {
+    use crate::gpusim::adaptive::compare;
+    let mut t = Table::new(
+        "Adaptive kernel policy — fixed GSPN-2 vs shape-adaptive config",
+        &["config", "fixed", "adaptive", "gain", "rules fired"],
+    );
+    let sweep: [(usize, usize, usize); 8] = [
+        (1, 1, 2048),
+        (1, 4, 1024),
+        (1, 8, 512),
+        (16, 8, 1024),
+        (256, 1, 1024),
+        (1, 1152, 1024),
+        (64, 256, 256),
+        (8, 64, 256),
+    ];
+    for (n, c, r) in sweep {
+        let wl = ScanWorkload::fwd(n, c, r, r);
+        let (fixed, ad, choice) = compare(dev, &wl);
+        let rules = if choice.rationale.is_empty() {
+            "(fixed optimal)".to_string()
+        } else {
+            choice
+                .rationale
+                .iter()
+                .map(|r| r.split(':').next().unwrap_or(r))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        t.row(vec![
+            format!("{r}x{r} b{n} c{c}"),
+            ms(fixed),
+            ms(ad),
+            speedup(fixed / ad),
+            rules,
+        ]);
+    }
+    t.note(
+        "appendix-B extension: shape-adaptive selection (sram/2d gating, model-searched \
+         proxy + segment-split) never loses to the fixed config and wins up to several-fold \
+         in the low-occupancy regime",
+    );
+    t.emit(out, "adaptive_policy");
+    t
+}
+
+/// Extension: cross-device sweep (V100 / A30 / A100 / H100) of the Fig-3
+/// headline config — the concurrency knee and speedup move with SM count
+/// and bandwidth, showing the model is not A100-specific.
+pub fn devices(out: &str) -> Table {
+    let mut t = Table::new(
+        "Cross-device sweep — Fig-3 config (1024^2, bs16, 8ch) per device",
+        &["device", "SMs", "peak GB/s", "GSPN-1", "GSPN-2", "speedup", "knee (blocks)"],
+    );
+    for dev in DeviceSpec::all() {
+        let wl = ScanWorkload::fwd(16, 8, 1024, 1024);
+        let g1 = simulate(&dev, &wl, &KernelConfig::gspn1());
+        let g2 = simulate(&dev, &wl, &KernelConfig::gspn2());
+        t.row(vec![
+            dev.name.clone(),
+            dev.sms.to_string(),
+            format!("{:.0}", dev.peak_bw_gbs),
+            ms(g1.time_ms),
+            ms(g2.time_ms),
+            speedup(g1.time_ms / g2.time_ms),
+            dev.concurrency_capacity(64, 0).to_string(),
+        ]);
+    }
+    t.note("knee = max resident 64-thread blocks (SMs x 32); paper cites ~3.5K on A100");
+    t.emit(out, "devices_sweep");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::a100_sxm4_80gb()
+    }
+
+    #[test]
+    fn fig3_table_has_six_stages() {
+        let t = pipeline_table(&dev(), &FIG3, "");
+        assert_eq!(t.rows.len(), 6);
+        assert!(t.rows[0][0].contains("GSPN-1"));
+    }
+
+    #[test]
+    fn table1_has_eight_rows() {
+        let t = table1(&dev(), "/tmp/gspn2_test_out");
+        assert_eq!(t.rows.len(), 8);
+    }
+
+    #[test]
+    fn fig4_covers_fwd_and_bwd() {
+        let t = fig4(&dev(), "/tmp/gspn2_test_out");
+        let fwd = t.rows.iter().filter(|r| r[1] == "fwd").count();
+        let bwd = t.rows.iter().filter(|r| r[1] == "bwd").count();
+        assert_eq!(fwd, bwd);
+        assert!(fwd >= 10);
+    }
+
+    #[test]
+    fn ablation_every_removal_slows_down() {
+        let t = ablation(&dev(), "/tmp/gspn2_test_out");
+        for row in &t.rows[1..] {
+            let s: f64 = row[2].trim_end_matches('x').parse().unwrap();
+            assert!(s >= 0.99, "{} sped things up: {s}", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig1_gspn2_fastest_at_scale() {
+        let t = fig1(&dev(), "/tmp/gspn2_test_out");
+        let last = t.rows.last().unwrap();
+        let parse = |s: &str| -> f64 { s.trim_end_matches(" ms").parse().unwrap() };
+        let g2 = parse(&last[6]);
+        for col in [1, 2, 5] {
+            assert!(parse(&last[col]) > g2, "col {col} not slower than GSPN-2");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Reproduction drivers: one entry per table and figure in the paper's
+//! evaluation (the DESIGN.md §3 experiment index). Each regenerates its
+//! artifact as an aligned table on stdout plus `.txt`/`.csv` files in
+//! `bench_out/`.
+//!
+//! | id       | paper artifact                                   |
+//! |----------|--------------------------------------------------|
+//! | fig1     | headline kernel comparison vs attention variants |
+//! | fig3     | step-by-step optimisation, main config           |
+//! | fig4     | fwd/bwd runtime vs resolution and channels       |
+//! | table1   | global memory throughput (8 configs)             |
+//! | table2   | ImageNet params/MACs/accuracy zoo                |
+//! | proxy2   | small-scale accuracy proxy (trains via PJRT)     |
+//! | fig5     | SDXL-like generation time vs resolution          |
+//! | figs1    | accuracy/throughput/size scatter                 |
+//! | figs2    | runtime vs BSxC (concurrency saturation)         |
+//! | figs3    | step-by-step, large-batch config                 |
+//! | figs4    | step-by-step, large-channel config               |
+//! | tables1  | COCO quality (quoted) + denoising proxy          |
+//! | tables2  | C_proxy ablation                                 |
+//! | knee     | §4.2 concurrency-knee validation                 |
+//! | ablation | leave-one-out over the GSPN-2 optimisations      |
+//! | adaptive | appendix-B adaptive config selection (extension) |
+//! | devices  | cross-device sweep V100/A30/A100/H100 (extension)|
+
+pub mod kernels;
+pub mod models;
+pub mod table;
+
+pub use table::Table;
+
+use crate::gpusim::DeviceSpec;
+
+pub const ALL: [&str; 17] = [
+    "fig1", "fig3", "fig4", "table1", "table2", "proxy2", "fig5", "figs1", "figs2",
+    "figs3", "figs4", "tables1", "tables2", "knee", "ablation", "adaptive", "devices",
+];
+
+/// Run one reproduction by id. `proxy_steps` bounds the artifact-training
+/// proxies (`proxy2`, `tables1`) so CI stays fast.
+pub fn run(id: &str, dev: &DeviceSpec, out: &str, proxy_steps: usize) -> anyhow::Result<()> {
+    match id {
+        "fig1" => {
+            kernels::fig1(dev, out);
+        }
+        "fig3" => {
+            kernels::fig3(dev, out);
+        }
+        "fig4" => {
+            kernels::fig4(dev, out);
+        }
+        "table1" => {
+            kernels::table1(dev, out);
+        }
+        "table2" => {
+            models::table2(dev, out);
+        }
+        "proxy2" => {
+            models::table2_proxy(out, proxy_steps)?;
+        }
+        "fig5" => {
+            models::fig5(dev, out);
+        }
+        "figs1" => {
+            models::figs1(dev, out);
+        }
+        "figs2" => {
+            kernels::figs2(dev, out);
+        }
+        "figs3" => {
+            kernels::figs3(dev, out);
+        }
+        "figs4" => {
+            kernels::figs4(dev, out);
+        }
+        "tables1" => {
+            models::tables1(out, proxy_steps.min(30))?;
+        }
+        "tables2" => {
+            models::tables2(dev, out);
+        }
+        "knee" => {
+            kernels::knee(dev, out);
+        }
+        "ablation" => {
+            kernels::ablation(dev, out);
+        }
+        "adaptive" => {
+            kernels::adaptive(dev, out);
+        }
+        "devices" => {
+            kernels::devices(out);
+        }
+        "all" => {
+            for id in ALL {
+                run(id, dev, out, proxy_steps)?;
+            }
+        }
+        other => anyhow::bail!("unknown repro id '{other}' (try: {} or all)", ALL.join(", ")),
+    }
+    Ok(())
+}

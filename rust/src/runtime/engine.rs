@@ -1,0 +1,160 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, caches executables, and runs them with typed
+//! host values.
+//!
+//! One `Engine` per OS thread: the underlying `xla` wrapper types hold
+//! raw pointers and are not `Send`, so the coordinator gives each worker
+//! thread its own engine (the PJRT CPU runtime itself multithreads the
+//! compute internally).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Entry, Manifest};
+use super::value::Value;
+use crate::util::logging;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile + execute statistics.
+    pub stats: RefCell<EngineStats>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_ms: f64,
+    pub executions: usize,
+    pub execute_ms: f64,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn cpu(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        logging::debug(
+            "engine",
+            &format!(
+                "PJRT client '{}' with {} device(s), {} artifacts",
+                client.platform_name(),
+                client.device_count(),
+                manifest.entries.len()
+            ),
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let entry = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_ms += dt;
+        }
+        logging::debug("engine", &format!("compiled {name} in {dt:.1} ms"));
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of entries (warmup before serving).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns the
+    /// flattened outputs (the AOT pipeline lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let entry = self.manifest.get(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, manifest wants {}",
+                inputs.len(),
+                entry.inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&entry.inputs) {
+            v.check(spec).with_context(|| format!("artifact {name}"))?;
+        }
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_ms += dt;
+        }
+
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{name}: produced {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    /// Load a model's initial parameters (params.bin) as values.
+    pub fn initial_params(&self, entry_name: &str) -> Result<Vec<Value>> {
+        let entry = self.manifest.get(entry_name)?;
+        Ok(self
+            .manifest
+            .load_params(entry)?
+            .into_iter()
+            .map(Value::F32)
+            .collect())
+    }
+}

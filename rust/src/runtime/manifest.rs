@@ -1,0 +1,274 @@
+//! The artifact manifest: the machine-readable contract between the
+//! Python AOT pipeline (`python/compile/aot.py`) and this runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One input or output slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let name = j.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("io spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"),
+        )?;
+        Ok(IoSpec { name, shape, dtype })
+    }
+}
+
+/// One compiled entrypoint.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// The first `n_params` inputs are model parameters.
+    pub n_params: usize,
+    pub params_bin: Option<String>,
+    pub meta: Json,
+}
+
+impl Entry {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let entries = j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string();
+                let file = e
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string();
+                let inputs = e
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = e
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let n_params = e.get("n_params").and_then(|v| v.as_usize()).unwrap_or(0);
+                let params_bin = e
+                    .get("params_bin")
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string());
+                Ok(Entry {
+                    name,
+                    file,
+                    inputs,
+                    outputs,
+                    n_params,
+                    params_bin,
+                    meta: e.get("meta").cloned().unwrap_or(Json::Null),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// All entries whose meta.kind matches.
+    pub fn by_kind(&self, kind: &str) -> Vec<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.meta_str("kind") == Some(kind))
+            .collect()
+    }
+
+    /// Load the initial parameter tensors for an entry from its params.bin.
+    pub fn load_params(&self, entry: &Entry) -> Result<Vec<crate::Tensor>> {
+        let bin = entry
+            .params_bin
+            .as_ref()
+            .ok_or_else(|| anyhow!("entry {} has no params_bin", entry.name))?;
+        let bytes = std::fs::read(self.dir.join(bin))
+            .with_context(|| format!("reading {bin}"))?;
+        slice_params(&bytes, &entry.inputs[..entry.n_params])
+    }
+}
+
+/// Slice a concatenated little-endian f32 blob into tensors per spec.
+pub fn slice_params(bytes: &[u8], specs: &[IoSpec]) -> Result<Vec<crate::Tensor>> {
+    let total: usize = specs.iter().map(|s| s.elems() * 4).sum();
+    if bytes.len() != total {
+        bail!("params.bin is {} bytes, manifest wants {total}", bytes.len());
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0;
+    for s in specs {
+        let n = s.elems() * 4;
+        out.push(crate::Tensor::from_le_bytes(&s.shape, &bytes[off..off + n]));
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Check whether `path` exists relative to the manifest dir.
+pub fn artifacts_available(dir: &str) -> bool {
+    Path::new(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "scan_a", "file": "scan_a.hlo.txt", "n_params": 0,
+         "params_bin": null,
+         "inputs": [{"name": "x", "shape": [1, 8, 64, 64], "dtype": "f32"},
+                    {"name": "a", "shape": [1, 1, 3, 64, 64], "dtype": "f32"}],
+         "outputs": [{"name": "o0", "shape": [1, 8, 64, 64], "dtype": "f32"}],
+         "meta": {"kind": "scan", "n": 1}},
+        {"name": "net_fwd", "file": "net.hlo.txt", "n_params": 2,
+         "params_bin": "net.params.bin",
+         "inputs": [{"name": "p0", "shape": [4], "dtype": "f32"},
+                    {"name": "p1", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "y", "shape": [4], "dtype": "i32"}],
+         "outputs": [{"name": "o0", "shape": [], "dtype": "f32"}],
+         "meta": {"kind": "classifier"}}
+      ]
+    }"#;
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/none")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = sample();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("scan_a").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![1, 8, 64, 64]);
+        assert_eq!(e.inputs[1].elems(), 3 * 64 * 64);
+        assert_eq!(e.meta_usize("n"), Some(1));
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        let m = sample();
+        let e = m.get("net_fwd").unwrap();
+        assert_eq!(e.inputs[2].dtype, Dtype::I32);
+        assert_eq!(e.outputs[0].shape, Vec::<usize>::new());
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        assert!(sample().get("nope").is_err());
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let m = sample();
+        assert_eq!(m.by_kind("scan").len(), 1);
+        assert_eq!(m.by_kind("classifier").len(), 1);
+        assert!(m.by_kind("other").is_empty());
+    }
+
+    #[test]
+    fn slice_params_roundtrip() {
+        let m = sample();
+        let e = m.get("net_fwd").unwrap();
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let ts = slice_params(&bytes, &e.inputs[..2]).unwrap();
+        assert_eq!(ts[0].shape, vec![4]);
+        assert_eq!(ts[1].shape, vec![2, 2]);
+        assert_eq!(ts[1].data, vec![4.0, 5.0, 6.0, 7.0]);
+        assert!(slice_params(&bytes[..4], &e.inputs[..2]).is_err());
+    }
+}

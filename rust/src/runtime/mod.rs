@@ -1,0 +1,15 @@
+//! PJRT runtime: the L3 side of the AOT bridge.
+//!
+//! `python/compile/aot.py` lowers every L2 entrypoint to HLO *text*
+//! (xla_extension 0.5.1 rejects serialized protos from jax >= 0.5 — see
+//! DESIGN.md §4); this module loads those artifacts, compiles them once
+//! per process on the PJRT CPU client, and executes them from the
+//! serving / training hot paths with zero Python involvement.
+
+pub mod engine;
+pub mod manifest;
+pub mod value;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{artifacts_available, Dtype, Entry, IoSpec, Manifest};
+pub use value::Value;

@@ -1,0 +1,166 @@
+//! Typed host values crossing the runtime boundary, and the bridge to
+//! XLA literals.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{Dtype, IoSpec};
+use crate::Tensor;
+
+/// A host-side value: what the coordinator and trainer traffic in.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(Tensor::from_vec(&[], vec![x]))
+    }
+
+    pub fn i32_vec(data: Vec<i32>) -> Value {
+        let shape = vec![data.len()];
+        Value::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            bail!("expected a scalar, got shape {:?}", t.shape);
+        }
+        Ok(t.data[0])
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check(&self, spec: &IoSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input '{}': shape {:?} does not match manifest {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("input '{}': dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    /// Convert into an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::F32(t) => {
+                let bytes = t.to_le_bytes();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &t.shape,
+                    &bytes,
+                )
+                .map_err(|e| anyhow!("literal from tensor: {e:?}"))
+            }
+            Value::I32 { shape, data } => {
+                let bytes: Vec<u8> =
+                    data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    &bytes,
+                )
+                .map_err(|e| anyhow!("literal from i32: {e:?}"))
+            }
+        }
+    }
+
+    /// Convert an XLA literal back into a host value.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let arr = match shape {
+            xla::Shape::Array(a) => a,
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+        match arr.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                Ok(Value::F32(Tensor::from_vec(&dims, data)))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                Ok(Value::I32 { shape: dims, data })
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let v = Value::F32(t.clone());
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let v = Value::i32_vec(vec![7, -3, 0, 42]);
+        let lit = v.to_literal().unwrap();
+        assert_eq!(Value::from_literal(&lit).unwrap(), v);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let v = Value::scalar_f32(3.25);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar().unwrap(), 3.25);
+    }
+
+    #[test]
+    fn check_against_spec() {
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        assert!(Value::F32(Tensor::zeros(&[2, 2])).check(&spec).is_ok());
+        assert!(Value::F32(Tensor::zeros(&[2, 3])).check(&spec).is_err());
+        assert!(Value::i32_vec(vec![1, 2, 3, 4]).check(&spec).is_err());
+    }
+}

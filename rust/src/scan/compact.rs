@@ -1,0 +1,228 @@
+//! Compact channel propagation (§4.2): channel-shared weights + the
+//! compressive proxy dimension, as a pure-Rust unit.
+//!
+//! Pipeline (mirroring `python/compile/model.py::gspn_unit`):
+//!
+//!   x (N,C,H,W) --1x1--> proxy (N,Cp,H,W)
+//!     --taps/lam from 1x1 convs--> 4 directional scans (shared w_i)
+//!     --softmax merge--> u ⊙ · --1x1--> back to (N,C,H,W)
+//!
+//! This is the CPU-reference twin of the L2 unit: integration tests check
+//! it behaves like the JAX path structurally (receptive field, proxy-dim
+//! ablation trends), and the param accounting in `crate::model` uses its
+//! shapes. It is also what the quickstart example runs without artifacts.
+
+use super::direction::{from_canonical, to_canonical, DIRECTIONS};
+use super::taps::Taps;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Pointwise (1x1) channel projection: weight (Cout, Cin), bias (Cout).
+#[derive(Clone, Debug)]
+pub struct Proj {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl Proj {
+    pub fn init(rng: &mut Rng, cin: usize, cout: usize) -> Proj {
+        let std = (2.0 / cin as f32).sqrt();
+        Proj { w: rng.normal_vec(cin * cout, std), b: vec![0.0; cout], cin, cout }
+    }
+
+    pub fn params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    /// Apply to (N, Cin, H, W) -> (N, Cout, H, W).
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.cin, "channel mismatch");
+        let (n, _, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let plane = h * w;
+        let mut out = Tensor::zeros(&[n, self.cout, h, w]);
+        for ni in 0..n {
+            for co in 0..self.cout {
+                let obase = (ni * self.cout + co) * plane;
+                for k in 0..plane {
+                    out.data[obase + k] = self.b[co];
+                }
+                for ci in 0..self.cin {
+                    let wv = self.w[co * self.cin + ci];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let ibase = (ni * self.cin + ci) * plane;
+                    for k in 0..plane {
+                        out.data[obase + k] += wv * x.data[ibase + k];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The compact GSPN unit with owned parameters.
+#[derive(Clone, Debug)]
+pub struct CompactGspnUnit {
+    pub c: usize,
+    pub c_proxy: usize,
+    pub kchunk: usize,
+    /// Per-channel taps (GSPN-1 semantics) instead of shared (GSPN-2).
+    pub per_channel: bool,
+    pub down: Proj,
+    pub up: Proj,
+    /// One taps-producing and one lam-producing projection per direction.
+    pub taps_proj: Vec<Proj>,
+    pub lam_proj: Vec<Proj>,
+    pub u: Vec<f32>,
+    pub merge: [f32; 4],
+}
+
+impl CompactGspnUnit {
+    pub fn init(rng: &mut Rng, c: usize, c_proxy: usize, kchunk: usize, per_channel: bool) -> Self {
+        let cw = if per_channel { c_proxy } else { 1 };
+        CompactGspnUnit {
+            c,
+            c_proxy,
+            kchunk,
+            per_channel,
+            down: Proj::init(rng, c, c_proxy),
+            up: Proj::init(rng, c_proxy, c),
+            taps_proj: (0..4).map(|_| Proj::init(rng, c_proxy, 3 * cw)).collect(),
+            lam_proj: (0..4).map(|_| Proj::init(rng, c_proxy, c_proxy)).collect(),
+            u: vec![1.0; c_proxy],
+            merge: [0.0; 4],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.down.params()
+            + self.up.params()
+            + self.taps_proj.iter().map(|p| p.params()).sum::<usize>()
+            + self.lam_proj.iter().map(|p| p.params()).sum::<usize>()
+            + self.u.len()
+            + self.merge.len()
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.c);
+        let xp = self.down.apply(x);
+        let cw = if self.per_channel { self.c_proxy } else { 1 };
+
+        // Taps per direction, computed in canonical orientation.
+        let mut taps: Vec<Taps> = Vec::with_capacity(4);
+        for (k, d) in DIRECTIONS.iter().enumerate() {
+            let xc = to_canonical(&xp, *d);
+            let raw = self.taps_proj[k].apply(&xc); // (N, 3*cw, Hc, Wc)
+            let (n, _, hc, wc) = (raw.shape[0], raw.shape[1], raw.shape[2], raw.shape[3]);
+            taps.push(Taps::normalize(&raw.reshape(&[n, cw, 3, hc, wc])));
+        }
+
+        // Lambda per direction must also follow canonical orientation: the
+        // merged_4dir helper reorients lam internally from the *spatial*
+        // layout, so we produce lam in spatial layout per direction and run
+        // each direction separately here (lam differs per direction).
+        let mx = self.merge.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = self.merge.iter().map(|&l| (l - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let mut merged = Tensor::zeros(&xp.shape);
+        for (k, d) in DIRECTIONS.iter().enumerate() {
+            let xc = to_canonical(&xp, *d);
+            let lamc = self.lam_proj[k].apply(&xc);
+            let hc = super::core::scan_l2r(&xc, &taps[k], &lamc, self.kchunk);
+            let y = from_canonical(&hc, *d);
+            let wk = exps[k] / z;
+            for (o, v) in merged.data.iter_mut().zip(&y.data) {
+                *o += wk * v;
+            }
+        }
+
+        let modulated = super::core::output_modulation(&merged, &self.u);
+        self.up.apply(&modulated)
+    }
+}
+
+// Re-export so `merged_4dir` is exercised by the public API too.
+pub use super::direction::merged_4dir as merge_directions;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proj_identity() {
+        let mut p = Proj::init(&mut Rng::new(0), 3, 3);
+        p.w = vec![1., 0., 0., 0., 1., 0., 0., 0., 1.];
+        p.b = vec![0.0; 3];
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[2, 3, 4, 4], &mut rng, 1.0);
+        assert!(p.apply(&x).allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn proj_shapes_and_bias() {
+        let mut p = Proj::init(&mut Rng::new(0), 4, 2);
+        p.w = vec![0.0; 8];
+        p.b = vec![1.5, -2.0];
+        let x = Tensor::zeros(&[1, 4, 3, 3]);
+        let y = p.apply(&x);
+        assert_eq!(y.shape, vec![1, 2, 3, 3]);
+        assert!((y.at(&[0, 0, 1, 1]) - 1.5).abs() < 1e-6);
+        assert!((y.at(&[0, 1, 2, 2]) + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_preserves_shape() {
+        let mut rng = Rng::new(2);
+        let unit = CompactGspnUnit::init(&mut rng, 16, 4, 0, false);
+        let x = Tensor::randn(&[2, 16, 8, 8], &mut rng, 1.0);
+        let y = unit.forward(&x);
+        assert_eq!(y.shape, x.shape);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn global_receptive_field() {
+        let mut rng = Rng::new(3);
+        let unit = CompactGspnUnit::init(&mut rng, 8, 2, 0, false);
+        let x = Tensor::randn(&[1, 8, 8, 8], &mut rng, 1.0);
+        let mut x2 = x.clone();
+        for c in 0..8 {
+            *x2.at_mut(&[0, c, 0, 0]) += 5.0;
+        }
+        let y1 = unit.forward(&x);
+        let y2 = unit.forward(&x2);
+        let corner_diff: f32 =
+            (0..8).map(|c| (y1.at(&[0, c, 7, 7]) - y2.at(&[0, c, 7, 7])).abs()).sum();
+        assert!(corner_diff > 1e-6, "corner unaffected: {corner_diff}");
+    }
+
+    #[test]
+    fn param_count_shrinks_with_proxy() {
+        // The §4.2 claim: compact propagation trims parameters.
+        let mut rng = Rng::new(4);
+        let small = CompactGspnUnit::init(&mut rng, 64, 2, 0, false);
+        let big = CompactGspnUnit::init(&mut rng, 64, 32, 0, false);
+        assert!(small.param_count() < big.param_count());
+    }
+
+    #[test]
+    fn per_channel_has_more_params_than_shared() {
+        let mut rng = Rng::new(5);
+        let shared = CompactGspnUnit::init(&mut rng, 32, 8, 0, false);
+        let perch = CompactGspnUnit::init(&mut rng, 32, 8, 0, true);
+        assert!(perch.param_count() > shared.param_count());
+    }
+
+    #[test]
+    fn chunked_unit_runs() {
+        let mut rng = Rng::new(6);
+        let unit = CompactGspnUnit::init(&mut rng, 8, 2, 4, false);
+        let x = Tensor::randn(&[1, 8, 8, 8], &mut rng, 1.0);
+        let y = unit.forward(&x);
+        assert_eq!(y.shape, x.shape);
+    }
+}

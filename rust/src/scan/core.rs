@@ -1,0 +1,262 @@
+//! The canonical left-to-right GSPN line scan (pure-Rust reference).
+//!
+//! Implements Eq. 1 of the paper exactly: for each column `i`,
+//!
+//!   h[:, i] = w_i · h[:, i-1] + lam[:, i] ⊙ x[:, i]
+//!
+//! with `w_i` tridiagonal row-stochastic (see `taps.rs`). `kchunk > 0`
+//! selects the GSPN-local variant, resetting the hidden state at chunk
+//! boundaries. This is the numerical ground truth the PJRT artifacts are
+//! integration-tested against, and the workload whose memory/launch
+//! behaviour `gpusim` models.
+
+use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
+use crate::tensor::Tensor;
+
+/// Forward scan. `x`, `lam`: (N, C, H, W); returns h with the same shape.
+pub fn scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
+    assert_eq!(x.shape, lam.shape, "lam shape must match x");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!((taps.n, taps.h, taps.w), (n, h, w), "taps geometry mismatch");
+    assert!(taps.cw == 1 || taps.cw == c, "Cw must be 1 or C");
+    let chunk = if kchunk == 0 { w } else { kchunk };
+    assert!(w % chunk == 0, "kchunk={chunk} must divide W={w}");
+
+    let mut out = Tensor::zeros(&x.shape);
+    let plane = h * w;
+    let tap_plane = h * w;
+    let mut hprev = vec![0.0f32; h];
+    let mut hcur = vec![0.0f32; h];
+
+    for ni in 0..n {
+        for ci in 0..c {
+            let cw = if taps.cw == 1 { 0 } else { ci };
+            let xbase = (ni * c + ci) * plane;
+            let tbase = (ni * taps.cw + cw) * 3 * tap_plane;
+            // Hoisted tap-plane slices: keeps the inner loop free of
+            // re-derived base offsets and lets bounds checks vanish
+            // (EXPERIMENTS.md §Perf, L3 iteration 4).
+            let t_up = &taps.t.data[tbase + TAP_UP * tap_plane..tbase + TAP_UP * tap_plane + tap_plane];
+            let t_ct = &taps.t.data
+                [tbase + TAP_CENTER * tap_plane..tbase + TAP_CENTER * tap_plane + tap_plane];
+            let t_dn = &taps.t.data
+                [tbase + TAP_DOWN * tap_plane..tbase + TAP_DOWN * tap_plane + tap_plane];
+            let xs = &x.data[xbase..xbase + plane];
+            let ls = &lam.data[xbase..xbase + plane];
+            let os = &mut out.data[xbase..xbase + plane];
+            hprev.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..w {
+                if i % chunk == 0 {
+                    hprev.iter_mut().for_each(|v| *v = 0.0);
+                }
+                for r in 0..h {
+                    let p = r * w + i;
+                    let up = if r > 0 { t_up[p] * hprev[r - 1] } else { 0.0 };
+                    let ct = t_ct[p] * hprev[r];
+                    let dn = if r + 1 < h { t_dn[p] * hprev[r + 1] } else { 0.0 };
+                    hcur[r] = up + ct + dn + ls[p] * xs[p];
+                    os[p] = hcur[r];
+                }
+                std::mem::swap(&mut hprev, &mut hcur);
+            }
+        }
+    }
+    out
+}
+
+/// Output modulation of Eq. 2: y = u ⊙ h with per-channel gain u (C,).
+pub fn output_modulation(h: &Tensor, u: &[f32]) -> Tensor {
+    let (n, c, hh, w) = (h.shape[0], h.shape[1], h.shape[2], h.shape[3]);
+    assert_eq!(u.len(), c);
+    let mut out = h.clone();
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hh * w;
+            for k in 0..hh * w {
+                out.data[base + k] *= u[ci];
+            }
+        }
+    }
+    out
+}
+
+/// FLOP count of one scan (7 madds/pixel/channel: 3 tap muls + 2 adds +
+/// 1 lam mul + 1 add). Used by gpusim and the MAC accounting.
+pub fn scan_flops(n: usize, c: usize, h: usize, w: usize) -> u64 {
+    7 * (n * c * h * w) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::taps::Taps;
+    use crate::util::proptest::{check, ensure, ensure_close};
+    use crate::util::Rng;
+
+    fn case(seed: u64, n: usize, c: usize, h: usize, w: usize, cw: usize) -> (Tensor, Taps, Tensor) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let raw = Tensor::randn(&[n, cw, 3, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        (x, Taps::normalize(&raw), lam)
+    }
+
+    #[test]
+    fn first_column_is_lam_x() {
+        let (x, taps, lam) = case(0, 2, 3, 4, 5, 3);
+        let out = scan_l2r(&x, &taps, &lam, 0);
+        for ni in 0..2 {
+            for ci in 0..3 {
+                for r in 0..4 {
+                    let want = lam.at(&[ni, ci, r, 0]) * x.at(&[ni, ci, r, 0]);
+                    assert!((out.at(&[ni, ci, r, 0]) - want).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn width_one_trivial() {
+        let (x, taps, lam) = case(1, 1, 2, 3, 1, 1);
+        let out = scan_l2r(&x, &taps, &lam, 0);
+        assert!(out.allclose(&lam.mul(&x), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn manual_two_column_case() {
+        // H=2, W=2, hand-computed recurrence.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lam = Tensor::full(&[1, 1, 2, 2], 1.0);
+        // Raw logits of 0 -> sigmoid 0.5 everywhere; boundary masking
+        // leaves rows of H=2 with taps (0, .5, .5)/1 and (.5, .5, 0)/1.
+        let raw = Tensor::zeros(&[1, 1, 3, 2, 2]);
+        let taps = Taps::normalize(&raw);
+        let out = scan_l2r(&x, &taps, &lam, 0);
+        // col 0: h = x = [1, 3]. col 1 row 0: .5*h0 + .5*h1 + x01 = .5+1.5+2 = 4
+        //        col 1 row 1: .5*h0 + .5*h1 + x11 = 2 + 4 = 6
+        assert!((out.at(&[0, 0, 0, 1]) - 4.0).abs() < 1e-6);
+        assert!((out.at(&[0, 0, 1, 1]) - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linearity_in_x() {
+        check("scan linear in x", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 3);
+            let h = g.int_in(1, 6);
+            let w = g.int_in(1, 6);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x1 = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let x2 = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let raw = Tensor::randn(&[n, 1, 3, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = Taps::normalize(&raw);
+            let a = 1.7f32;
+            let lhs = scan_l2r(&x1.scale(a).add(&x2), &taps, &lam, 0);
+            let rhs = scan_l2r(&x1, &taps, &lam, 0).scale(a).add(&scan_l2r(&x2, &taps, &lam, 0));
+            ensure_close(
+                lhs.max_abs_diff(&rhs) as f64,
+                0.0,
+                1e-4,
+                "linearity residual",
+            )
+        });
+    }
+
+    #[test]
+    fn stability_bound() {
+        // ||h_i||_inf <= cumulative max ||lam x||_inf (row-stochastic w).
+        check("stability-context bound", |g| {
+            let h = g.int_in(1, 8);
+            let w = g.int_in(1, 10);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[1, 1, h, w], &mut rng, 2.0);
+            let raw = Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[1, 1, h, w], &mut rng, 2.0);
+            let taps = Taps::normalize(&raw);
+            let out = scan_l2r(&x, &taps, &lam, 0);
+            let mut bound = 0.0f32;
+            for i in 0..w {
+                let mut colmax = 0.0f32;
+                for r in 0..h {
+                    colmax = colmax.max((lam.at(&[0, 0, r, i]) * x.at(&[0, 0, r, i])).abs());
+                }
+                bound += colmax;
+                for r in 0..h {
+                    ensure(
+                        out.at(&[0, 0, r, i]).abs() <= bound + 1e-4,
+                        format!("|h| {} > bound {}", out.at(&[0, 0, r, i]).abs(), bound),
+                    )
+                    .unwrap();
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunk_reset_blocks_flow() {
+        let (x, taps, lam) = case(7, 1, 1, 4, 8, 1);
+        let base = scan_l2r(&x, &taps, &lam, 4);
+        let mut x2 = x.clone();
+        for r in 0..4 {
+            for i in 0..4 {
+                *x2.at_mut(&[0, 0, r, i]) += 50.0;
+            }
+        }
+        let pert = scan_l2r(&x2, &taps, &lam, 4);
+        for r in 0..4 {
+            for i in 4..8 {
+                assert_eq!(base.at(&[0, 0, r, i]), pert.at(&[0, 0, r, i]));
+            }
+        }
+        assert!(base.max_abs_diff(&pert) > 1.0);
+    }
+
+    #[test]
+    fn global_scan_propagates_across() {
+        let (x, taps, lam) = case(8, 1, 1, 4, 8, 1);
+        let base = scan_l2r(&x, &taps, &lam, 0);
+        let mut x2 = x.clone();
+        *x2.at_mut(&[0, 0, 2, 0]) += 10.0;
+        let pert = scan_l2r(&x2, &taps, &lam, 0);
+        let tail_diff: f32 = (0..4)
+            .map(|r| (base.at(&[0, 0, r, 7]) - pert.at(&[0, 0, r, 7])).abs())
+            .sum();
+        assert!(tail_diff > 1e-4, "no propagation to last column");
+    }
+
+    #[test]
+    fn kchunk_full_width_equals_global() {
+        let (x, taps, lam) = case(9, 2, 2, 5, 6, 1);
+        let a = scan_l2r(&x, &taps, &lam, 0);
+        let b = scan_l2r(&x, &taps, &lam, 6);
+        assert!(a.allclose(&b, 1e-7, 1e-7));
+    }
+
+    #[test]
+    fn per_channel_vs_shared_differ() {
+        let mut rng = Rng::new(10);
+        let x = Tensor::randn(&[1, 3, 4, 5], &mut rng, 1.0);
+        let lam = Tensor::randn(&[1, 3, 4, 5], &mut rng, 1.0);
+        let raw_pc = Tensor::randn(&[1, 3, 3, 4, 5], &mut rng, 1.0);
+        let raw_sh = Tensor::randn(&[1, 1, 3, 4, 5], &mut rng, 1.0);
+        let a = scan_l2r(&x, &Taps::normalize(&raw_pc), &lam, 0);
+        let b = scan_l2r(&x, &Taps::normalize(&raw_sh), &lam, 0);
+        assert!(a.max_abs_diff(&b) > 1e-4);
+    }
+
+    #[test]
+    fn output_modulation_scales_channels() {
+        let h = Tensor::full(&[1, 2, 2, 2], 1.0);
+        let y = output_modulation(&h, &[2.0, -1.0]);
+        assert_eq!(y.at(&[0, 0, 1, 1]), 2.0);
+        assert_eq!(y.at(&[0, 1, 0, 0]), -1.0);
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(scan_flops(2, 4, 8, 16), 7 * 2 * 4 * 8 * 16);
+    }
+}

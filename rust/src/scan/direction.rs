@@ -1,0 +1,227 @@
+//! The four directional passes (§3.2): top-to-bottom, bottom-to-top,
+//! left-to-right, right-to-left, all expressed by reorienting the tensor
+//! around the canonical left-to-right scan — exactly mirroring
+//! `python/compile/kernels/ref.py`'s `to_canonical`/`from_canonical`.
+//!
+//! Combining the 3-neighbour kernel with the four passes yields dense
+//! pairwise connectivity across the grid (the paper's full-context claim);
+//! `merged_4dir` applies a learned convex combination over directions.
+
+use super::core::scan_l2r;
+use super::taps::Taps;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    L2R,
+    R2L,
+    T2B,
+    B2T,
+}
+
+pub const DIRECTIONS: [Direction; 4] =
+    [Direction::L2R, Direction::R2L, Direction::T2B, Direction::B2T];
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::L2R => "l2r",
+            Direction::R2L => "r2l",
+            Direction::T2B => "t2b",
+            Direction::B2T => "b2t",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        Some(match s {
+            "l2r" => Direction::L2R,
+            "r2l" => Direction::R2L,
+            "t2b" => Direction::T2B,
+            "b2t" => Direction::B2T,
+            _ => return None,
+        })
+    }
+}
+
+/// Reorient (..., H, W) so the requested direction becomes l2r.
+pub fn to_canonical(t: &Tensor, d: Direction) -> Tensor {
+    match d {
+        Direction::L2R => t.clone(),
+        Direction::R2L => t.flip_last(),
+        Direction::T2B => t.swap_last2(),
+        Direction::B2T => t.swap_last2().flip_last(),
+    }
+}
+
+/// Inverse of `to_canonical`.
+pub fn from_canonical(t: &Tensor, d: Direction) -> Tensor {
+    match d {
+        Direction::L2R => t.clone(),
+        Direction::R2L => t.flip_last(),
+        Direction::T2B => t.swap_last2(),
+        Direction::B2T => t.flip_last().swap_last2(),
+    }
+}
+
+/// Directional scan; `taps` are given in canonical orientation (computed
+/// from the reoriented feature map, as the model does).
+pub fn scan_dir(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+) -> Tensor {
+    let xc = to_canonical(x, d);
+    let lamc = to_canonical(lam, d);
+    let h = scan_l2r(&xc, taps, &lamc, kchunk);
+    from_canonical(&h, d)
+}
+
+/// Four directional scans merged by convex weights (softmaxed logits).
+pub fn merged_4dir(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    let mx = merge_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = merge_logits.iter().map(|&l| (l - mx).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let mut out = Tensor::zeros(&x.shape);
+    for (k, d) in DIRECTIONS.iter().enumerate() {
+        let y = scan_dir(x, taps[k], lam, *d, kchunk);
+        let wk = exps[k] / z;
+        for (o, v) in out.data.iter_mut().zip(&y.data) {
+            *o += wk * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+    use crate::util::Rng;
+
+    #[test]
+    fn canonical_roundtrip_all_directions() {
+        check("to/from canonical roundtrip", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 3);
+            let h = g.int_in(1, 6);
+            let w = g.int_in(1, 6);
+            let t = Tensor::from_vec(&[n, c, h, w], g.normal_vec(n * c * h * w));
+            for d in DIRECTIONS {
+                let rt = from_canonical(&to_canonical(&t, d), d);
+                ensure(rt == t, format!("roundtrip failed for {:?}", d))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn canonical_shapes() {
+        let t = Tensor::zeros(&[1, 2, 3, 5]);
+        assert_eq!(to_canonical(&t, Direction::L2R).shape, vec![1, 2, 3, 5]);
+        assert_eq!(to_canonical(&t, Direction::T2B).shape, vec![1, 2, 5, 3]);
+        assert_eq!(to_canonical(&t, Direction::B2T).shape, vec![1, 2, 5, 3]);
+    }
+
+    #[test]
+    fn r2l_equals_flipped_l2r() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[1, 1, 4, 6], &mut rng, 1.0);
+        let lam = Tensor::randn(&[1, 1, 4, 6], &mut rng, 1.0);
+        let raw = Tensor::randn(&[1, 1, 3, 4, 6], &mut rng, 1.0);
+        let taps = Taps::normalize(&raw);
+        let l2r = scan_dir(&x.flip_last(), &taps, &lam.flip_last(), Direction::L2R, 0);
+        let r2l = scan_dir(&x, &taps, &lam, Direction::R2L, 0);
+        assert!(l2r.flip_last().allclose(&r2l, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn t2b_propagates_downward() {
+        // Impulse at top row; t2b must move it to lower rows, spreading
+        // laterally by at most one column per step (tridiagonal cone).
+        let h = 6;
+        let w = 6;
+        let mut x = Tensor::zeros(&[1, 1, h, w]);
+        *x.at_mut(&[0, 0, 0, 3]) = 1.0;
+        let lam = Tensor::full(&[1, 1, h, w], 1.0);
+        let raw = Tensor::zeros(&[1, 1, 3, w, h]); // canonical geometry of t2b
+        let taps = Taps::normalize(&raw);
+        let y = scan_dir(&x, &taps, &lam, Direction::T2B, 0);
+        let lower_mass: f32 = (1..h).map(|r| y.at(&[0, 0, r, 3]).abs()).sum();
+        assert!(lower_mass > 0.1, "t2b did not propagate down: {lower_mass}");
+        // Row r can only be reached within |col - 3| <= r (3-neighbour cone).
+        for r in 0..h {
+            for c in 0..w {
+                if (c as i64 - 3).unsigned_abs() as usize > r {
+                    assert_eq!(y.at(&[0, 0, r, c]), 0.0, "cone violated at ({r},{c})");
+                }
+            }
+        }
+        // Upward direction never receives mass (strictly top-to-bottom):
+        // nothing above the impulse row.
+        for c in 0..w {
+            if c != 3 {
+                assert_eq!(y.at(&[0, 0, 0, c]), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_weights_convex() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[1, 2, 4, 4], &mut rng, 1.0);
+        let lam = Tensor::full(&[1, 2, 4, 4], 0.5);
+        let raws: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[1, 1, 3, 4, 4], &mut rng, 1.0)).collect();
+        let taps: Vec<Taps> = raws.iter().map(Taps::normalize).collect();
+        let tr = [&taps[0], &taps[1], &taps[2], &taps[3]];
+        // One-hot logits ~ selecting a single direction.
+        let hot = merged_4dir(&x, tr, &lam, &[50.0, 0.0, 0.0, 0.0], 0);
+        let solo = scan_dir(&x, &taps[0], &lam, Direction::L2R, 0);
+        assert!(hot.allclose(&solo, 1e-4, 1e-4));
+        // Uniform logits = average of the four.
+        let uni = merged_4dir(&x, tr, &lam, &[0.0; 4], 0);
+        let mut avg = Tensor::zeros(&x.shape);
+        for (k, d) in DIRECTIONS.iter().enumerate() {
+            let y = scan_dir(&x, tr[k], &lam, *d, 0);
+            avg = avg.add(&y.scale(0.25));
+        }
+        assert!(uni.allclose(&avg, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn four_directions_reach_everywhere() {
+        // With all four passes, an impulse at any position influences all
+        // four corners (dense pairwise connectivity claim).
+        let h = 5;
+        let w = 5;
+        let mut x = Tensor::zeros(&[1, 1, h, w]);
+        *x.at_mut(&[0, 0, 2, 2]) = 1.0;
+        let lam = Tensor::full(&[1, 1, h, w], 1.0);
+        let mk = |hh, ww| Taps::normalize(&Tensor::zeros(&[1, 1, 3, hh, ww]));
+        let t_lr = mk(h, w);
+        let t_tb = mk(w, h);
+        let y = merged_4dir(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0);
+        for (r, c) in [(0, 0), (0, w - 1), (h - 1, 0), (h - 1, w - 1)] {
+            assert!(
+                y.at(&[0, 0, r, c]).abs() > 1e-5,
+                "corner ({r},{c}) unreached"
+            );
+        }
+    }
+
+    #[test]
+    fn direction_parse_roundtrip() {
+        for d in DIRECTIONS {
+            assert_eq!(Direction::parse(d.name()), Some(d));
+        }
+        assert_eq!(Direction::parse("nope"), None);
+    }
+}

@@ -1,0 +1,200 @@
+//! Dense expansion of the recurrence into the block lower-triangular
+//! matrix G of Eq. 4 — the linear-attention view of GSPN.
+//!
+//! For a single (batch, channel), `vec(h) = G vec(x)` where `vec` stacks
+//! columns and block (i, j) equals `(prod_{k=j+1}^{i} w_k) Diag(lam_j)`.
+//! This module exists to *validate* that view (tests assert the identity
+//! against the O(HW) scan) and to expose attention-map introspection for
+//! the examples.
+
+use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
+use crate::tensor::Tensor;
+
+/// Dense H x H tridiagonal matrix for column `i` of (n, cw).
+pub fn tridiag(taps: &Taps, n: usize, cw: usize, i: usize) -> Vec<Vec<f32>> {
+    let h = taps.h;
+    let mut m = vec![vec![0.0f32; h]; h];
+    for r in 0..h {
+        if r > 0 {
+            m[r][r - 1] = taps.at(n, cw, TAP_UP, r, i);
+        }
+        m[r][r] = taps.at(n, cw, TAP_CENTER, r, i);
+        if r + 1 < h {
+            m[r][r + 1] = taps.at(n, cw, TAP_DOWN, r, i);
+        }
+    }
+    m
+}
+
+fn matmul(a: &[Vec<f32>], b: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = a.len();
+    let m = b[0].len();
+    let k = b.len();
+    let mut out = vec![vec![0.0f32; m]; n];
+    for i in 0..n {
+        for kk in 0..k {
+            let aik = a[i][kk];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..m {
+                out[i][j] += aik * b[kk][j];
+            }
+        }
+    }
+    out
+}
+
+/// Full G (W*H x W*H) for one (n, c): the affinity matrix of the
+/// attention analogy. O(W^2 H^3) — validation/introspection only.
+pub fn expand_g(taps: &Taps, lam: &Tensor, n: usize, c: usize) -> Vec<Vec<f32>> {
+    let (h, w) = (taps.h, taps.w);
+    let cw = if taps.cw == 1 { 0 } else { c };
+    let ws: Vec<Vec<Vec<f32>>> = (0..w).map(|i| tridiag(taps, n, cw, i)).collect();
+    let mut g = vec![vec![0.0f32; w * h]; w * h];
+    for j in 0..w {
+        // Lam_j as a diagonal block.
+        let mut block: Vec<Vec<f32>> = (0..h)
+            .map(|r| {
+                let mut row = vec![0.0f32; h];
+                row[r] = lam.at(&[n, c, r, j]);
+                row
+            })
+            .collect();
+        // Walk i = j, j+1, ... multiplying in w_{i} progressively.
+        for i in j..w {
+            if i > j {
+                block = matmul(&ws[i], &block);
+            }
+            for r in 0..h {
+                for q in 0..h {
+                    g[i * h + r][j * h + q] = block[r][q];
+                }
+            }
+        }
+    }
+    g
+}
+
+/// Effective receptive field: |G| row for the output pixel (r, i),
+/// reshaped to (H, W). This is the "attention map" of pixel (r, i).
+pub fn attention_map(taps: &Taps, lam: &Tensor, n: usize, c: usize, r: usize, i: usize) -> Tensor {
+    let g = expand_g(taps, lam, n, c);
+    let (h, w) = (taps.h, taps.w);
+    let row = &g[i * h + r];
+    let mut out = Tensor::zeros(&[h, w]);
+    for j in 0..w {
+        for q in 0..h {
+            *out.at_mut(&[q, j]) = row[j * h + q].abs();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::core::scan_l2r;
+    use crate::util::Rng;
+
+    fn case(seed: u64, n: usize, c: usize, h: usize, w: usize, cw: usize) -> (Tensor, Taps, Tensor) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let raw = Tensor::randn(&[n, cw, 3, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        (x, Taps::normalize(&raw), lam)
+    }
+
+    #[test]
+    fn eq4_identity_g_times_x_equals_scan() {
+        let (x, taps, lam) = case(0, 1, 2, 4, 5, 1);
+        let want = scan_l2r(&x, &taps, &lam, 0);
+        for c in 0..2 {
+            let g = expand_g(&taps, &lam, 0, c);
+            // vec(x): columns stacked.
+            let (h, w) = (4, 5);
+            let xv: Vec<f32> = (0..w)
+                .flat_map(|i| (0..h).map(move |r| (i, r)))
+                .map(|(i, r)| x.at(&[0, c, r, i]))
+                .collect();
+            for i in 0..w {
+                for r in 0..h {
+                    let hv: f32 = g[i * h + r]
+                        .iter()
+                        .zip(&xv)
+                        .map(|(a, b)| a * b)
+                        .sum();
+                    let got = want.at(&[0, c, r, i]);
+                    assert!(
+                        (hv - got).abs() < 1e-4,
+                        "mismatch at ({r},{i}): {hv} vs {got}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn g_is_block_lower_triangular() {
+        let (_, taps, lam) = case(1, 1, 1, 3, 4, 1);
+        let g = expand_g(&taps, &lam, 0, 0);
+        let h = 3;
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                for r in 0..h {
+                    for q in 0..h {
+                        assert_eq!(g[i * h + r][j * h + q], 0.0, "upper block nonzero");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_blocks_are_lam() {
+        let (_, taps, lam) = case(2, 1, 1, 3, 4, 1);
+        let g = expand_g(&taps, &lam, 0, 0);
+        for i in 0..4 {
+            for r in 0..3 {
+                assert!((g[i * 3 + r][i * 3 + r] - lam.at(&[0, 0, r, i])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_mass_conserved_but_diffuses_with_distance() {
+        // Row-stochastic taps conserve total mass exactly: each column
+        // block of the query row sums to 1 regardless of distance (the
+        // Stability-Context Condition). What distance changes is the
+        // *concentration*: the near block is a delta (Diag(lam)), while
+        // far blocks are smeared across rows by repeated tridiagonal
+        // mixing — so the max entry decays even though the sum does not.
+        let mut rng = Rng::new(3);
+        let raw = Tensor::randn(&[1, 1, 3, 4, 8], &mut rng, 0.5);
+        let taps = Taps::normalize(&raw);
+        let lam = Tensor::full(&[1, 1, 4, 8], 1.0);
+        let amap = attention_map(&taps, &lam, 0, 0, 2, 7);
+        let near_sum: f32 = (0..4).map(|r| amap.at(&[r, 7])).sum();
+        let far_sum: f32 = (0..4).map(|r| amap.at(&[r, 0])).sum();
+        assert!((near_sum - 1.0).abs() < 1e-4, "near mass {near_sum}");
+        assert!((far_sum - 1.0).abs() < 1e-4, "far mass {far_sum}");
+        let near_max = (0..4).map(|r| amap.at(&[r, 7])).fold(0.0f32, f32::max);
+        let far_max = (0..4).map(|r| amap.at(&[r, 0])).fold(0.0f32, f32::max);
+        assert!(
+            near_max > far_max + 0.05,
+            "no diffusion: near max {near_max}, far max {far_max}"
+        );
+    }
+
+    #[test]
+    fn tridiag_row_stochastic() {
+        let (_, taps, _) = case(4, 1, 1, 5, 3, 1);
+        for i in 0..3 {
+            let m = tridiag(&taps, 0, 0, i);
+            for row in m {
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+}

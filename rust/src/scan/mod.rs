@@ -1,0 +1,29 @@
+//! Pure-Rust GSPN propagation reference (the algorithmic core of [1]).
+//!
+//! * [`taps`] — tridiagonal propagation coefficients + the
+//!   Stability-Context normalisation (row-stochastic w_i).
+//! * [`core`] — the canonical left-to-right line scan (Eq. 1) with the
+//!   GSPN-local chunked variant, plus output modulation (Eq. 2).
+//! * [`direction`] — the four directional passes and learned merging.
+//! * [`gmatrix`] — the Eq. 4 dense expansion (linear-attention view),
+//!   used for validation and attention-map introspection.
+//! * [`compact`] — GSPN-2's compact channel propagation (§4.2):
+//!   channel-shared weights + compressive proxy dimension.
+//!
+//! This module is the numerical ground truth for the PJRT artifacts
+//! (integration tests compare both) and the workload description that
+//! `crate::gpusim` costs out.
+
+pub mod compact;
+pub mod core;
+pub mod direction;
+pub mod gmatrix;
+pub mod split;
+pub mod taps;
+
+pub use compact::{CompactGspnUnit, Proj};
+pub use core::{output_modulation, scan_flops, scan_l2r};
+pub use direction::{from_canonical, merged_4dir, scan_dir, to_canonical, Direction, DIRECTIONS};
+pub use gmatrix::{attention_map, expand_g};
+pub use split::{scan_l2r_split, segment_transfer, Banded};
+pub use taps::Taps;

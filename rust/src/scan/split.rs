@@ -1,0 +1,463 @@
+//! Segment-parallel decomposition of the line scan.
+//!
+//! The paper's §5.1 profiling notes that for small batch x channel counts
+//! SM occupancy drops to 20-30% because one block per (chunk, n, c) slice
+//! is the only parallelism, and names "further decompos[ing] the problem
+//! to increase parallelism across SMs" as future work. This module
+//! implements that decomposition as a two-phase segmented scan over the
+//! linear recurrence h_i = w_i h_{i-1} + b_i:
+//!
+//!   phase 1 (parallel over segments x planes): scan each segment from a
+//!     zero incoming carry.
+//!   phase 2 (parallel over planes, sequential over a plane's segments):
+//!     propagate the true carry through each segment as a *correction
+//!     scan* (x ≡ 0, initial state = incoming carry) added onto the
+//!     phase-1 output — exact by linearity of Eq. 1. The corrected last
+//!     column of segment k is, definitionally, segment k+1's carry, so
+//!     the carry chain and the correction pass are one and the same.
+//!
+//! Work: phase 1 is 7 flops/pixel (parallel), phase 2 is 3 flops/pixel
+//! (sequential per plane) — a parallel speedup bounded by 7/(3 + 7/P),
+//! ~1.8x at 8 threads for a single plane. The *operator* formulation
+//! (composing banded transfer matrices T_k = w_last···w_first, see
+//! [`Banded`] and [`segment_transfer`]) costs O(H·s) extra work per
+//! column and only pays on massively parallel hardware — which is why
+//! the GPU-side model ([`crate::gpusim::KernelConfig::split`], selected
+//! by [`crate::gpusim::adaptive`]) charges 2.5x the per-step latency but
+//! still wins in the low-occupancy regime, while this CPU reference uses
+//! the carry-only form. EXPERIMENTS.md §Perf records the measured
+//! crossover (the operator form was 4-30x *slower* on CPU).
+
+use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
+use crate::tensor::Tensor;
+
+/// A square banded matrix of size `h` with half-bandwidth `hb`, stored
+/// row-major as `h` rows of `2*hb + 1` in-band entries. Entry `(r, c)` is
+/// stored at `row r, offset c - r + hb` when `|r - c| <= hb`, else 0.
+#[derive(Clone, Debug)]
+pub struct Banded {
+    pub h: usize,
+    pub hb: usize,
+    data: Vec<f32>,
+}
+
+impl Banded {
+    pub fn identity(h: usize) -> Banded {
+        Banded { h, hb: 0, data: vec![1.0; h] }
+    }
+
+    fn width(&self) -> usize {
+        2 * self.hb + 1
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (r_i, c_i) = (r as isize, c as isize);
+        let d = c_i - r_i + self.hb as isize;
+        if d < 0 || d >= self.width() as isize {
+            0.0
+        } else {
+            self.data[r * self.width() + d as usize]
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, r: usize, c: usize, v: f32) {
+        let d = (c as isize - r as isize + self.hb as isize) as usize;
+        let w = self.width();
+        self.data[r * w + d] = v;
+    }
+
+    /// The tridiagonal propagation matrix w_i of Eq. 1 for column `i`:
+    /// row r has (up, center, down) taps connecting to rows r-1, r, r+1.
+    pub fn tridiag(taps: &Taps, n: usize, cw: usize, i: usize) -> Banded {
+        let h = taps.h;
+        let mut m = Banded { h, hb: 1, data: vec![0.0; h * 3] };
+        for r in 0..h {
+            if r > 0 {
+                m.set(r, r - 1, taps.at(n, cw, TAP_UP, r, i));
+            }
+            m.set(r, r, taps.at(n, cw, TAP_CENTER, r, i));
+            if r + 1 < h {
+                m.set(r, r + 1, taps.at(n, cw, TAP_DOWN, r, i));
+            }
+        }
+        m
+    }
+
+    /// y = self · x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.h);
+        let mut y = vec![0.0f32; self.h];
+        for (r, yr) in y.iter_mut().enumerate() {
+            let lo = r.saturating_sub(self.hb);
+            let hi = (r + self.hb).min(self.h - 1);
+            let mut acc = 0.0;
+            for c in lo..=hi {
+                acc += self.get(r, c) * x[c];
+            }
+            *yr = acc;
+        }
+        y
+    }
+
+    /// C = a · b (matrix product). Bandwidth adds, capped at h-1.
+    pub fn compose(a: &Banded, b: &Banded) -> Banded {
+        assert_eq!(a.h, b.h);
+        let h = a.h;
+        let hb = (a.hb + b.hb).min(h.saturating_sub(1));
+        let mut out = Banded { h, hb, data: vec![0.0; h * (2 * hb + 1)] };
+        for r in 0..h {
+            let clo = r.saturating_sub(hb);
+            let chi = (r + hb).min(h - 1);
+            for c in clo..=chi {
+                // k must satisfy |r-k| <= a.hb and |k-c| <= b.hb.
+                let klo = r.saturating_sub(a.hb).max(c.saturating_sub(b.hb));
+                let khi = (r + a.hb).min(c + b.hb).min(h - 1);
+                let mut acc = 0.0;
+                for k in klo..=khi {
+                    acc += a.get(r, k) * b.get(k, c);
+                }
+                out.set(r, c, acc);
+            }
+        }
+        out
+    }
+
+    /// Dense form, for tests and introspection.
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        (0..self.h).map(|r| (0..self.h).map(|c| self.get(r, c)).collect()).collect()
+    }
+}
+
+/// Per-plane, per-segment phase-1 result: the local (zero-carry) scan
+/// output, h x seg_len, column-major over the segment.
+struct SegScan {
+    out: Vec<f32>,
+}
+
+/// Tap-plane slices for one (n, cw) pair.
+fn tap_planes<'a>(taps: &'a Taps, ni: usize, cw: usize) -> (&'a [f32], &'a [f32], &'a [f32]) {
+    let (h, w) = (taps.h, taps.w);
+    let plane = h * w;
+    let tbase = (ni * taps.cw + cw) * 3 * plane;
+    (
+        &taps.t.data[tbase + TAP_UP * plane..tbase + TAP_UP * plane + plane],
+        &taps.t.data[tbase + TAP_CENTER * plane..tbase + TAP_CENTER * plane + plane],
+        &taps.t.data[tbase + TAP_DOWN * plane..tbase + TAP_DOWN * plane + plane],
+    )
+}
+
+/// Scan one segment of columns `[lo, hi)` of plane (ni, ci) from a zero
+/// carry. Allocation-free inner loop (3-tap recurrence, like `scan_l2r`).
+fn phase1(x: &Tensor, taps: &Taps, lam: &Tensor, ni: usize, ci: usize, lo: usize, hi: usize) -> SegScan {
+    let (c, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
+    let cw = if taps.cw == 1 { 0 } else { ci };
+    let (t_up, t_ct, t_dn) = tap_planes(taps, ni, cw);
+    let xbase = (ni * c + ci) * h * w;
+    let seg = hi - lo;
+    let mut out = vec![0.0f32; h * seg];
+    let mut hprev = vec![0.0f32; h];
+    let mut hcur = vec![0.0f32; h];
+    for (j, i) in (lo..hi).enumerate() {
+        for r in 0..h {
+            let up = if r > 0 { t_up[r * w + i] * hprev[r - 1] } else { 0.0 };
+            let ct = t_ct[r * w + i] * hprev[r];
+            let dn = if r + 1 < h { t_dn[r * w + i] * hprev[r + 1] } else { 0.0 };
+            let idx = xbase + r * w + i;
+            let v = up + ct + dn + lam.data[idx] * x.data[idx];
+            out[r * seg + j] = v;
+            hcur[r] = v;
+        }
+        std::mem::swap(&mut hprev, &mut hcur);
+    }
+    SegScan { out }
+}
+
+/// Phase 2 for one plane: chain the carry through the plane's segments,
+/// adding the correction scan onto each segment in place. The corrected
+/// last column of a segment is the next segment's incoming carry.
+fn phase2_plane(
+    segs: &mut [SegScan],
+    bounds: &[(usize, usize)],
+    taps: &Taps,
+    ni: usize,
+    ci: usize,
+) {
+    let h = taps.h;
+    let w = taps.w;
+    let cw = if taps.cw == 1 { 0 } else { ci };
+    let (t_up, t_ct, t_dn) = tap_planes(taps, ni, cw);
+    let mut corr = vec![0.0f32; h];
+    let mut next = vec![0.0f32; h];
+    for (k, sc) in segs.iter_mut().enumerate() {
+        let (lo, hi) = bounds[k];
+        let seg = hi - lo;
+        if k > 0 && corr.iter().any(|&v| v != 0.0) {
+            // Correction scan: corr_{i} = w_i · corr_{i-1}, added to out.
+            for (j, i) in (lo..hi).enumerate() {
+                for r in 0..h {
+                    let up = if r > 0 { t_up[r * w + i] * corr[r - 1] } else { 0.0 };
+                    let ct = t_ct[r * w + i] * corr[r];
+                    let dn = if r + 1 < h { t_dn[r * w + i] * corr[r + 1] } else { 0.0 };
+                    next[r] = up + ct + dn;
+                    sc.out[r * seg + j] += next[r];
+                }
+                std::mem::swap(&mut corr, &mut next);
+            }
+        }
+        // The (now corrected) final column is the next segment's carry.
+        for r in 0..h {
+            corr[r] = sc.out[r * seg + (seg - 1)];
+        }
+    }
+}
+
+/// The composed transfer operator T = w_{hi-1} ··· w_{lo} of a column
+/// range, as a banded matrix. Not on the scan hot path (the carry-only
+/// phase 2 above avoids it); exposed for introspection and validation —
+/// e.g. checking that the Stability-Context Condition (row-stochasticity)
+/// survives segment composition.
+pub fn segment_transfer(taps: &Taps, ni: usize, cw: usize, lo: usize, hi: usize) -> Banded {
+    let mut t = Banded::identity(taps.h);
+    for i in lo..hi {
+        t = Banded::compose(&Banded::tridiag(taps, ni, cw, i), &t);
+    }
+    t
+}
+
+/// Segment-parallel global scan; numerically equivalent to
+/// [`super::scan_l2r`] with `kchunk = 0` (up to fp reassociation).
+///
+/// `segments` is the decomposition degree (clamped to W); `threads > 1`
+/// runs phase 1 across segments x planes and phase 2 across planes on
+/// scoped worker threads.
+pub fn scan_l2r_split(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    segments: usize,
+    threads: usize,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
+    assert_eq!(x.shape, lam.shape, "lam shape must match x");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!((taps.n, taps.h, taps.w), (n, h, w), "taps geometry mismatch");
+    assert!(taps.cw == 1 || taps.cw == c, "Cw must be 1 or C");
+    let segments = segments.clamp(1, w);
+    let seg_len = w.div_ceil(segments);
+    let bounds: Vec<(usize, usize)> =
+        (0..w).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(w))).collect();
+    let n_segs = bounds.len();
+
+    // Phase 1: all (plane, segment) tasks are independent.
+    let tasks: Vec<(usize, usize, usize)> = (0..n * c)
+        .flat_map(|p| (0..n_segs).map(move |s| (p / c, p % c, s)))
+        .collect();
+    let run1 = |&(ni, ci, s): &(usize, usize, usize)| {
+        let (lo, hi) = bounds[s];
+        phase1(x, taps, lam, ni, ci, lo, hi)
+    };
+    let workers = threads.max(1).min(tasks.len().max(1));
+    let mut scans: Vec<SegScan> = if workers > 1 {
+        let chunk = tasks.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = tasks
+                .chunks(chunk)
+                .map(|part| scope.spawn(move || part.iter().map(run1).collect::<Vec<_>>()))
+                .collect();
+            handles.into_iter().flat_map(|j| j.join().expect("phase-1 worker")).collect()
+        })
+    } else {
+        tasks.iter().map(run1).collect()
+    };
+
+    // Phase 2: per-plane carry + correction pass (planes independent).
+    {
+        let planes: Vec<(usize, &mut [SegScan])> =
+            scans.chunks_mut(n_segs).enumerate().collect();
+        let run2 = |(p, segs): &mut (usize, &mut [SegScan])| {
+            phase2_plane(segs, &bounds, taps, *p / c, *p % c);
+        };
+        let pw = threads.max(1).min(planes.len().max(1));
+        if pw > 1 {
+            let mut planes = planes;
+            let chunk = planes.len().div_ceil(pw);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for part in planes.chunks_mut(chunk) {
+                    handles.push(scope.spawn(move || part.iter_mut().for_each(run2)));
+                }
+                for j in handles {
+                    j.join().expect("phase-2 worker");
+                }
+            });
+        } else {
+            planes.into_iter().for_each(|mut pl| run2(&mut pl));
+        }
+    }
+
+    // Assemble (N, C, H, W).
+    let mut out = Tensor::zeros(&x.shape);
+    for (t, sc) in scans.iter().enumerate() {
+        let (ni, ci, s) = tasks[t];
+        let (lo, hi) = bounds[s];
+        let seg = hi - lo;
+        let obase = (ni * c + ci) * h * w;
+        for r in 0..h {
+            let src = &sc.out[r * seg..(r + 1) * seg];
+            out.data[obase + r * w + lo..obase + r * w + hi].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan_l2r;
+    use crate::util::proptest::{check, ensure_close};
+    use crate::util::Rng;
+
+    fn case(seed: u64, n: usize, c: usize, h: usize, w: usize, cw: usize) -> (Tensor, Taps, Tensor) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let raw = Tensor::randn(&[n, cw, 3, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        (x, Taps::normalize(&raw), lam)
+    }
+
+    #[test]
+    fn banded_identity_matvec() {
+        let i = Banded::identity(5);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(i.matvec(&x), x);
+    }
+
+    #[test]
+    fn banded_tridiag_matches_scan_step() {
+        let (x, taps, lam) = case(3, 1, 1, 6, 4, 1);
+        // One scan step == tridiag matvec + lam*x.
+        let seq = scan_l2r(&x, &taps, &lam, 0);
+        let h0: Vec<f32> = (0..6).map(|r| seq.at(&[0, 0, r, 0])).collect();
+        let w1 = Banded::tridiag(&taps, 0, 0, 1);
+        let prop = w1.matvec(&h0);
+        for r in 0..6 {
+            let want = prop[r] + lam.at(&[0, 0, r, 1]) * x.at(&[0, 0, r, 1]);
+            assert!((seq.at(&[0, 0, r, 1]) - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn compose_matches_dense_product() {
+        let (_, taps, _) = case(4, 1, 1, 5, 3, 1);
+        let a = Banded::tridiag(&taps, 0, 0, 0);
+        let b = Banded::tridiag(&taps, 0, 0, 1);
+        let c = Banded::compose(&a, &b);
+        assert_eq!(c.hb, 2);
+        let (da, db, dc) = (a.to_dense(), b.to_dense(), c.to_dense());
+        for r in 0..5 {
+            for cc in 0..5 {
+                let want: f32 = (0..5).map(|k| da[r][k] * db[k][cc]).sum();
+                assert!((dc[r][cc] - want).abs() < 1e-6, "({r},{cc})");
+            }
+        }
+    }
+
+    #[test]
+    fn compose_band_caps_at_h_minus_one() {
+        let (_, taps, _) = case(5, 1, 1, 3, 8, 1);
+        let t = segment_transfer(&taps, 0, 0, 0, 8);
+        assert_eq!(t.hb, 2); // capped at h-1, not 8
+    }
+
+    #[test]
+    fn transfer_is_row_stochastic() {
+        // Product of row-stochastic matrices is row-stochastic — the
+        // Stability-Context Condition survives segment composition.
+        let (_, taps, _) = case(6, 1, 1, 7, 6, 1);
+        let t = segment_transfer(&taps, 0, 0, 0, 6);
+        for r in 0..7 {
+            let s: f32 = (0..7).map(|c| t.get(r, c)).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn transfer_matches_chained_scan() {
+        // T · h0 must equal scanning h0 through the segment with x = 0.
+        let (x, taps, lam) = case(11, 1, 1, 6, 5, 1);
+        let t = segment_transfer(&taps, 0, 0, 0, 5);
+        let h0: Vec<f32> = (0..6).map(|r| 0.3 * r as f32 - 0.7).collect();
+        let via_op = t.matvec(&h0);
+        // Chain through the recurrence directly.
+        let mut corr = h0.clone();
+        for i in 0..5 {
+            corr = Banded::tridiag(&taps, 0, 0, i).matvec(&corr);
+        }
+        for r in 0..6 {
+            assert!((via_op[r] - corr[r]).abs() < 1e-5);
+        }
+        let _ = (x, lam);
+    }
+
+    #[test]
+    fn split_equals_sequential_basic() {
+        let (x, taps, lam) = case(0, 2, 3, 8, 12, 3);
+        let seq = scan_l2r(&x, &taps, &lam, 0);
+        for segments in [1, 2, 3, 4, 6, 12] {
+            let par = scan_l2r_split(&x, &taps, &lam, segments, 1);
+            assert!(
+                seq.allclose(&par, 1e-4, 1e-4),
+                "segments={segments}: max diff {}",
+                seq.max_abs_diff(&par)
+            );
+        }
+    }
+
+    #[test]
+    fn split_uneven_segments() {
+        // W=10 into 3 segments -> lengths 4,4,2.
+        let (x, taps, lam) = case(1, 1, 2, 5, 10, 1);
+        let seq = scan_l2r(&x, &taps, &lam, 0);
+        let par = scan_l2r_split(&x, &taps, &lam, 3, 1);
+        assert!(seq.allclose(&par, 1e-4, 1e-4), "diff {}", seq.max_abs_diff(&par));
+    }
+
+    #[test]
+    fn split_threaded_matches_inline() {
+        let (x, taps, lam) = case(2, 2, 2, 16, 32, 1);
+        let a = scan_l2r_split(&x, &taps, &lam, 8, 4);
+        let b = scan_l2r_split(&x, &taps, &lam, 8, 1);
+        assert!(a.allclose(&b, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn split_more_segments_than_columns_clamps() {
+        let (x, taps, lam) = case(7, 1, 1, 4, 5, 1);
+        let seq = scan_l2r(&x, &taps, &lam, 0);
+        let par = scan_l2r_split(&x, &taps, &lam, 64, 1);
+        assert!(seq.allclose(&par, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn split_property_random_shapes() {
+        check("segmented scan == sequential scan", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 3);
+            let h = g.int_in(1, 9);
+            let w = g.int_in(1, 17);
+            let segments = g.int_in(1, 6);
+            let shared = g.int_in(0, 1) == 0;
+            let cw = if shared { 1 } else { c };
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.5);
+            let raw = Tensor::randn(&[n, cw, 3, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = Taps::normalize(&raw);
+            let seq = scan_l2r(&x, &taps, &lam, 0);
+            let par = scan_l2r_split(&x, &taps, &lam, segments, 1);
+            ensure_close(seq.max_abs_diff(&par) as f64, 0.0, 1e-3, "split residual")
+        });
+    }
+}

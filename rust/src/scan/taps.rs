@@ -1,0 +1,152 @@
+//! Propagation taps and the Stability-Context normalisation.
+//!
+//! A tap tensor holds, for each (batch, weight-channel, row, column), the
+//! three coefficients connecting a pixel in column `i` to its three
+//! neighbours in column `i-1` (up / center / down — the tridiagonal
+//! structure of Eq. 1). `Cw == C` gives per-channel weights (GSPN-1);
+//! `Cw == 1` gives the channel-shared compact weights of GSPN-2 §4.2.
+//!
+//! `normalize` applies the Stability-Context Condition of [1]: sigmoid on
+//! the raw logits, zeroing of out-of-range taps at the top/bottom rows,
+//! then per-row renormalisation so every row of the tridiagonal matrix
+//! w_i sums to exactly 1 (row-stochastic => ||h||_inf never amplifies).
+
+use crate::tensor::Tensor;
+
+pub const TAP_UP: usize = 0;
+pub const TAP_CENTER: usize = 1;
+pub const TAP_DOWN: usize = 2;
+
+/// Normalised taps, layout (N, Cw, 3, H, W).
+#[derive(Clone, Debug)]
+pub struct Taps {
+    pub t: Tensor,
+    pub n: usize,
+    pub cw: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Taps {
+    /// Normalise raw logits (N, Cw, 3, H, W) into row-stochastic taps.
+    pub fn normalize(raw: &Tensor) -> Taps {
+        assert_eq!(raw.rank(), 5, "taps must be (N, Cw, 3, H, W)");
+        assert_eq!(raw.shape[2], 3, "tap axis must have size 3");
+        let (n, cw, h, w) = (raw.shape[0], raw.shape[1], raw.shape[3], raw.shape[4]);
+        let mut out = raw.map(|x| 1.0 / (1.0 + (-x).exp()));
+        let plane = h * w;
+        for ni in 0..n {
+            for ci in 0..cw {
+                let base = (ni * cw + ci) * 3 * plane;
+                for r in 0..h {
+                    for i in 0..w {
+                        let up = base + TAP_UP * plane + r * w + i;
+                        let ct = base + TAP_CENTER * plane + r * w + i;
+                        let dn = base + TAP_DOWN * plane + r * w + i;
+                        if r == 0 {
+                            out.data[up] = 0.0;
+                        }
+                        if r == h - 1 {
+                            out.data[dn] = 0.0;
+                        }
+                        let s = out.data[up] + out.data[ct] + out.data[dn];
+                        out.data[up] /= s;
+                        out.data[ct] /= s;
+                        out.data[dn] /= s;
+                    }
+                }
+            }
+        }
+        Taps { t: out, n, cw, h, w }
+    }
+
+    /// Tap value at (n, cw, tap, row, col). `cw` is clamped for shared mode.
+    #[inline]
+    pub fn at(&self, n: usize, cw: usize, tap: usize, r: usize, i: usize) -> f32 {
+        let c = if self.cw == 1 { 0 } else { cw };
+        let plane = self.h * self.w;
+        self.t.data[((n * self.cw + c) * 3 + tap) * plane + r * self.w + i]
+    }
+
+    /// Verify the Stability-Context Condition; returns max |row_sum - 1|.
+    pub fn row_sum_error(&self) -> f32 {
+        let mut err = 0.0f32;
+        for n in 0..self.n {
+            for c in 0..self.cw {
+                for r in 0..self.h {
+                    for i in 0..self.w {
+                        let s = self.at(n, c, TAP_UP, r, i)
+                            + self.at(n, c, TAP_CENTER, r, i)
+                            + self.at(n, c, TAP_DOWN, r, i);
+                        err = err.max((s - 1.0).abs());
+                    }
+                }
+            }
+        }
+        err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+    use crate::util::Rng;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let mut rng = Rng::new(0);
+        let raw = Tensor::randn(&[2, 3, 3, 5, 4], &mut rng, 1.5);
+        let taps = Taps::normalize(&raw);
+        assert!(taps.row_sum_error() < 1e-6);
+    }
+
+    #[test]
+    fn boundary_taps_are_zero() {
+        let mut rng = Rng::new(1);
+        let raw = Tensor::randn(&[1, 1, 3, 6, 4], &mut rng, 1.0);
+        let taps = Taps::normalize(&raw);
+        for i in 0..4 {
+            assert_eq!(taps.at(0, 0, TAP_UP, 0, i), 0.0);
+            assert_eq!(taps.at(0, 0, TAP_DOWN, 5, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn all_taps_nonnegative_property() {
+        check("taps nonnegative + stochastic", |g| {
+            let n = g.int_in(1, 2);
+            let cw = g.int_in(1, 3);
+            let h = g.int_in(1, 8);
+            let w = g.int_in(1, 8);
+            let raw = Tensor::from_vec(
+                &[n, cw, 3, h, w],
+                g.normal_vec(n * cw * 3 * h * w).iter().map(|x| x * 3.0).collect(),
+            );
+            let taps = Taps::normalize(&raw);
+            ensure(taps.t.data.iter().all(|&x| x >= 0.0), "nonnegative")?;
+            ensure(taps.row_sum_error() < 1e-5, "row-stochastic")
+        });
+    }
+
+    #[test]
+    fn shared_taps_broadcast() {
+        let mut rng = Rng::new(2);
+        let raw = Tensor::randn(&[1, 1, 3, 4, 4], &mut rng, 1.0);
+        let taps = Taps::normalize(&raw);
+        // Asking for any channel returns the shared channel-0 values.
+        assert_eq!(taps.at(0, 5, TAP_CENTER, 2, 2), taps.at(0, 0, TAP_CENTER, 2, 2));
+    }
+
+    #[test]
+    fn h_equals_one_center_only() {
+        let mut rng = Rng::new(3);
+        let raw = Tensor::randn(&[1, 1, 3, 1, 3], &mut rng, 1.0);
+        let taps = Taps::normalize(&raw);
+        for i in 0..3 {
+            assert_eq!(taps.at(0, 0, TAP_UP, 0, i), 0.0);
+            assert_eq!(taps.at(0, 0, TAP_DOWN, 0, i), 0.0);
+            assert!((taps.at(0, 0, TAP_CENTER, 0, i) - 1.0).abs() < 1e-6);
+        }
+    }
+}

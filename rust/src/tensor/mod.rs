@@ -1,0 +1,417 @@
+//! NCHW f32 tensor micro-library.
+//!
+//! The Rust reference implementation of GSPN (`crate::scan`), the
+//! synthetic-data generators and the runtime's literal bridge all operate
+//! on these tensors. Deliberately small: contiguous `Vec<f32>` storage,
+//! row-major (last axis fastest), the few ops the CPU paths need —
+//! indexing, flips, transposes of the trailing two axes, elementwise maps,
+//! reductions, slicing along the last axis.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    // ------------------------------------------------------------------
+    // Construction
+    // ------------------------------------------------------------------
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut crate::util::Rng, std: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection
+    // ------------------------------------------------------------------
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        let mut stride = 1;
+        for d in (0..idx.len()).rev() {
+            debug_assert!(idx[d] < self.shape[d], "index {idx:?} out of {:?}", self.shape);
+            off += idx[d] * stride;
+            stride *= self.shape[d];
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let o = self.offset(idx);
+        &mut self.data[o]
+    }
+
+    // ------------------------------------------------------------------
+    // Shape ops
+    // ------------------------------------------------------------------
+
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Flip along the last axis (used for r2l / b2t scans).
+    pub fn flip_last(&self) -> Tensor {
+        let w = *self.shape.last().expect("flip_last on rank-0");
+        let rows = self.data.len() / w;
+        let mut out = vec![0.0f32; self.data.len()];
+        for r in 0..rows {
+            let src = &self.data[r * w..(r + 1) * w];
+            let dst = &mut out[r * w..(r + 1) * w];
+            for i in 0..w {
+                dst[i] = src[w - 1 - i];
+            }
+        }
+        Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// Swap the trailing two axes (used for t2b / b2t scans).
+    pub fn swap_last2(&self) -> Tensor {
+        let n = self.shape.len();
+        assert!(n >= 2, "swap_last2 needs rank >= 2");
+        let h = self.shape[n - 2];
+        let w = self.shape[n - 1];
+        let outer = self.data.len() / (h * w);
+        let mut shape = self.shape.clone();
+        shape.swap(n - 2, n - 1);
+        let mut out = vec![0.0f32; self.data.len()];
+        for o in 0..outer {
+            let src = &self.data[o * h * w..(o + 1) * h * w];
+            let dst = &mut out[o * h * w..(o + 1) * h * w];
+            for r in 0..h {
+                for c in 0..w {
+                    dst[c * h + r] = src[r * w + c];
+                }
+            }
+        }
+        Tensor { shape, data: out }
+    }
+
+    /// Column i (last axis) as a contiguous (prefix) vector.
+    pub fn take_last(&self, i: usize) -> Vec<f32> {
+        let w = *self.shape.last().unwrap();
+        assert!(i < w);
+        let rows = self.data.len() / w;
+        (0..rows).map(|r| self.data[r * w + i]).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Elementwise + reductions
+    // ------------------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, k: f32) -> Tensor {
+        self.map(|x| x * k)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(&a, &b)| {
+            (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Raw bytes (little-endian f32) for the params.bin / literal bridge
+    // ------------------------------------------------------------------
+
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for &x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_le_bytes(shape: &[usize], bytes: &[u8]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(bytes.len(), n * 4, "byte length mismatch for {shape:?}");
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, ensure_all_close};
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+        let f = Tensor::full(&[2, 2], 3.5);
+        assert_eq!(f.sum(), 14.0);
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn strides_match_offsets() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        let s = t.strides();
+        assert_eq!(s, vec![60, 20, 5, 1]);
+        assert_eq!(t.offset(&[1, 2, 3, 4]), 60 + 40 + 15 + 4);
+    }
+
+    #[test]
+    fn flip_last_involution() {
+        check("flip_last is an involution", |g| {
+            let h = g.int_in(1, 6);
+            let w = g.int_in(1, 8);
+            let t = Tensor::from_vec(&[h, w], g.normal_vec(h * w));
+            let back = t.flip_last().flip_last();
+            ensure_all_close(&t.data, &back.data, 0.0, "flip twice")
+        });
+    }
+
+    #[test]
+    fn swap_last2_transposes() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.swap_last2();
+        assert_eq!(s.shape, vec![3, 2]);
+        assert_eq!(s.at(&[0, 0]), 1.0);
+        assert_eq!(s.at(&[0, 1]), 4.0);
+        assert_eq!(s.at(&[2, 1]), 6.0);
+    }
+
+    #[test]
+    fn swap_last2_involution_with_batch() {
+        check("swap_last2 involution", |g| {
+            let n = g.int_in(1, 3);
+            let h = g.int_in(1, 5);
+            let w = g.int_in(1, 5);
+            let t = Tensor::from_vec(&[n, h, w], g.normal_vec(n * h * w));
+            let back = t.swap_last2().swap_last2();
+            ensure(back.shape == t.shape, "shape restored")?;
+            ensure_all_close(&t.data, &back.data, 0.0, "data restored")
+        });
+    }
+
+    #[test]
+    fn take_last_column() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.take_last(1), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn elementwise_and_reductions() {
+        let a = Tensor::from_vec(&[3], vec![1., -2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![10., 20., 30.]);
+        assert_eq!(a.add(&b).data, vec![11., 18., 33.]);
+        assert_eq!(a.mul(&b).data, vec![10., -40., 90.]);
+        assert_eq!(a.abs_max(), 3.0);
+        assert!((a.mean() - (2.0 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(&[3, 4, 5], &mut rng, 2.0);
+        let back = Tensor::from_le_bytes(&t.shape, &t.to_le_bytes());
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 100.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0001, 100.001]);
+        assert!(a.allclose(&b, 1e-3, 1e-4));
+        assert!(!a.allclose(&b, 1e-6, 1e-7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_length() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}
+
+/// Concatenate tensors along axis 0 (batch assembly in the coordinator).
+pub fn concat_axis0(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty(), "concat_axis0 of nothing");
+    let tail = &parts[0].shape[1..];
+    let mut n0 = 0;
+    let mut data = Vec::with_capacity(parts.iter().map(|t| t.len()).sum());
+    for p in parts {
+        assert_eq!(&p.shape[1..], tail, "concat_axis0 trailing-shape mismatch");
+        n0 += p.shape[0];
+        data.extend_from_slice(&p.data);
+    }
+    let mut shape = vec![n0];
+    shape.extend_from_slice(tail);
+    Tensor { shape, data }
+}
+
+/// Split a tensor along axis 0 into chunks of the given sizes.
+pub fn split_axis0(t: &Tensor, sizes: &[usize]) -> Vec<Tensor> {
+    assert_eq!(sizes.iter().sum::<usize>(), t.shape[0], "split sizes mismatch");
+    let per = t.shape[1..].iter().product::<usize>();
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for &s in sizes {
+        let mut shape = vec![s];
+        shape.extend_from_slice(&t.shape[1..]);
+        out.push(Tensor::from_vec(&shape, t.data[off..off + s * per].to_vec()));
+        off += s * per;
+    }
+    out
+}
+
+#[cfg(test)]
+mod concat_tests {
+    use super::*;
+
+    #[test]
+    fn concat_then_split_roundtrip() {
+        let a = Tensor::from_vec(&[1, 2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2, 2], (5..13).map(|x| x as f32).collect());
+        let cat = concat_axis0(&[&a, &b]);
+        assert_eq!(cat.shape, vec![3, 2, 2]);
+        let parts = split_axis0(&cat, &[1, 2]);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn concat_rejects_mismatched_tails() {
+        let a = Tensor::zeros(&[1, 2]);
+        let b = Tensor::zeros(&[1, 3]);
+        concat_axis0(&[&a, &b]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_rejects_bad_sizes() {
+        let t = Tensor::zeros(&[3, 2]);
+        split_axis0(&t, &[1, 1]);
+    }
+}

@@ -1,0 +1,340 @@
+//! Training driver: runs the AOT-compiled `*_train_*` artifacts in a
+//! loop with Rust-generated data. Python never runs here — the full
+//! optimiser step (forward, backward through the fused scan kernels,
+//! SGD-momentum update) is one HLO module per step.
+
+use anyhow::{bail, Result};
+
+use super::data::{DirectionalContext, NUM_CLASSES};
+use crate::runtime::{Engine, Value};
+use crate::util::logging;
+use crate::util::Rng;
+use crate::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f64,
+    pub ms: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub curve: Vec<StepLog>,
+    pub evals: Vec<(usize, f64, f64)>, // (step, loss, accuracy)
+    pub final_train_loss: f64,
+    pub final_eval_acc: f64,
+    pub wall_s: f64,
+    pub step_overhead_frac: f64,
+}
+
+impl TrainReport {
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,ms\n");
+        for l in &self.curve {
+            s.push_str(&format!("{},{:.6},{:.3}\n", l.step, l.loss, l.ms));
+        }
+        s
+    }
+}
+
+/// Classifier trainer over the `{model}_train_b{N}` artifact family.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub model: String,
+    train_entry: String,
+    eval_entry: String,
+    batch: usize,
+    img: usize,
+    k: usize,
+    params: Vec<Value>,
+    vel: Vec<Value>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, model: &str) -> Result<Trainer<'e>> {
+        // Discover the train-step entry for this model family.
+        let entry = engine
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| {
+                e.meta_str("kind") == Some("train_step")
+                    && e.meta_str("model") == Some(model)
+            })
+            .cloned();
+        let Some(entry) = entry else {
+            bail!("no train_step artifact for model '{model}'");
+        };
+        let batch = entry.meta_usize("batch").unwrap_or(8);
+        let img = entry.meta_usize("img").unwrap_or(32);
+        let k = entry.n_params;
+        let params = engine.initial_params(&entry.name)?;
+        let vel: Vec<Value> = params
+            .iter()
+            .map(|p| Value::F32(Tensor::zeros(p.shape())))
+            .collect();
+        let eval_entry = entry.name.replace("_train_", "_eval_");
+        Ok(Trainer {
+            engine,
+            model: model.to_string(),
+            train_entry: entry.name,
+            eval_entry,
+            batch,
+            img,
+            k,
+            params,
+            vel,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.img
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.shape().iter().product::<usize>()).sum()
+    }
+
+    /// One optimiser step; returns the loss.
+    pub fn step(&mut self, x: Tensor, y: Vec<i32>) -> Result<f64> {
+        assert_eq!(y.len(), self.batch);
+        let mut inputs = Vec::with_capacity(2 * self.k + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.vel.iter().cloned());
+        inputs.push(Value::F32(x));
+        inputs.push(Value::i32_vec(y));
+        let mut out = self.engine.run(&self.train_entry, &inputs)?;
+        let loss = out.pop().expect("loss output").scalar()? as f64;
+        let vel: Vec<Value> = out.drain(self.k..).collect();
+        let params: Vec<Value> = out;
+        self.params = params;
+        self.vel = vel;
+        Ok(loss)
+    }
+
+    /// Evaluate on one batch; returns (loss, n_correct).
+    pub fn eval(&self, x: Tensor, y: Vec<i32>) -> Result<(f64, usize)> {
+        let mut inputs = Vec::with_capacity(self.k + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.push(Value::F32(x));
+        inputs.push(Value::i32_vec(y));
+        let out = self.engine.run(&self.eval_entry, &inputs)?;
+        let loss = out[0].scalar()? as f64;
+        let correct = match &out[1] {
+            Value::I32 { data, .. } => data[0] as usize,
+            Value::F32(t) => t.data[0] as usize,
+        };
+        Ok((loss, correct))
+    }
+}
+
+/// The end-to-end training loop (the E2E deliverable's engine room).
+pub fn train_classifier(
+    engine: &Engine,
+    model: &str,
+    steps: usize,
+    log_every: usize,
+    eval_every: usize,
+    seed: u64,
+) -> Result<TrainReport> {
+    let t_start = std::time::Instant::now();
+    let mut trainer = Trainer::new(engine, model)?;
+    let b = trainer.batch_size();
+    let img = trainer.image_size();
+    logging::info(
+        "train",
+        &format!(
+            "model={model} params={} batch={b} img={img} classes<= {NUM_CLASSES}",
+            trainer.param_count()
+        ),
+    );
+    let mut ds = DirectionalContext::new(img, seed);
+    let mut eval_ds = DirectionalContext::new(img, seed ^ 0xe7a1);
+    let mut report = TrainReport::default();
+    let mut exec_ms_total = 0.0;
+
+    for step in 0..steps {
+        let (x, y) = ds.batch(b);
+        let t0 = std::time::Instant::now();
+        let loss = trainer.step(x, y)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        exec_ms_total += ms;
+        if step % log_every == 0 || step + 1 == steps {
+            logging::info("train", &format!("step {step:>5}  loss {loss:.4}  ({ms:.0} ms)"));
+            report.curve.push(StepLog { step, loss, ms });
+        }
+        report.final_train_loss = loss;
+
+        if eval_every > 0 && (step + 1) % eval_every == 0 {
+            let (ex, ey) = eval_ds.batch(b);
+            let mut correct = 0;
+            let mut eloss = 0.0;
+            let evals = 4;
+            let (l, c) = trainer.eval(ex, ey)?;
+            eloss += l;
+            correct += c;
+            let mut total = b;
+            for _ in 1..evals {
+                let (ex, ey) = eval_ds.batch(b);
+                let (l, c) = trainer.eval(ex, ey)?;
+                eloss += l;
+                correct += c;
+                total += b;
+            }
+            let acc = correct as f64 / total as f64;
+            logging::info(
+                "train",
+                &format!("  eval @ {step}: loss {:.4} acc {:.1}%", eloss / evals as f64, acc * 100.0),
+            );
+            report.evals.push((step, eloss / evals as f64, acc));
+            report.final_eval_acc = acc;
+        }
+    }
+    report.wall_s = t_start.elapsed().as_secs_f64();
+    let wall_ms = report.wall_s * 1e3;
+    report.step_overhead_frac = ((wall_ms - exec_ms_total) / wall_ms).max(0.0);
+    Ok(report)
+}
+
+/// Denoiser training loop (DDPM epsilon objective) over the
+/// `denoiser_train_*` artifact.
+pub fn train_denoiser(
+    engine: &Engine,
+    steps: usize,
+    log_every: usize,
+    seed: u64,
+) -> Result<TrainReport> {
+    let entry = engine
+        .manifest()
+        .by_kind("denoise_train_step")
+        .first()
+        .cloned()
+        .cloned();
+    let Some(entry) = entry else {
+        bail!("no denoiser train artifact");
+    };
+    let batch = entry.meta_usize("batch").unwrap_or(4);
+    let res = entry.meta_usize("res").unwrap_or(16);
+    let k = entry.n_params;
+    let mut params = engine.initial_params(&entry.name)?;
+    let mut rng = Rng::new(seed ^ 0xdd);
+    let mut report = TrainReport::default();
+    let t_start = std::time::Instant::now();
+
+    for step in 0..steps {
+        let x0 = super::data::denoising_batch(&mut rng, batch, res);
+        let noise = Tensor::randn(&[batch, 3, res, res], &mut rng, 1.0);
+        let t: Vec<i32> = (0..batch).map(|_| rng.below(100) as i32).collect();
+        let mut inputs = Vec::with_capacity(k + 3);
+        inputs.extend(params.iter().cloned());
+        inputs.push(Value::F32(x0));
+        inputs.push(Value::F32(noise));
+        inputs.push(Value::i32_vec(t));
+        let t0 = std::time::Instant::now();
+        let mut out = engine.run(&entry.name, &inputs)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let loss = out.pop().expect("loss").scalar()? as f64;
+        params = out;
+        if step % log_every == 0 || step + 1 == steps {
+            logging::info("train", &format!("denoise step {step:>5} loss {loss:.4} ({ms:.0} ms)"));
+            report.curve.push(StepLog { step, loss, ms });
+        }
+        report.final_train_loss = loss;
+    }
+    report.wall_s = t_start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Dense-prediction training loop (§6 extension) over the
+/// `segmenter_train_*` artifact: per-pixel cross-entropy on the synthetic
+/// Voronoi task. Returns the usual report; `final_eval_acc` is *pixel*
+/// accuracy.
+pub fn train_segmenter(
+    engine: &Engine,
+    steps: usize,
+    log_every: usize,
+    eval_every: usize,
+    seed: u64,
+) -> Result<TrainReport> {
+    let entry = engine
+        .manifest()
+        .by_kind("seg_train_step")
+        .first()
+        .cloned()
+        .cloned();
+    let Some(entry) = entry else {
+        bail!("no segmenter train artifact (rebuild artifacts)");
+    };
+    let batch = entry.meta_usize("batch").unwrap_or(4);
+    let img = entry.meta_usize("img").unwrap_or(32);
+    let k = entry.n_params;
+    let mut params = engine.initial_params(&entry.name)?;
+    let mut vel: Vec<Value> =
+        params.iter().map(|p| Value::F32(Tensor::zeros(p.shape()))).collect();
+    let eval_entry = entry.name.replace("_train_", "_eval_");
+    let mut ds = super::data::VoronoiSeg::new(img, seed);
+    let mut eval_ds = super::data::VoronoiSeg::new(img, seed ^ 0x5e61);
+    let mut report = TrainReport::default();
+    let t_start = std::time::Instant::now();
+    let mut exec_ms_total = 0.0;
+    logging::info(
+        "seg-train",
+        &format!(
+            "segmenter params={} batch={batch} img={img}",
+            params.iter().map(|p| p.shape().iter().product::<usize>()).sum::<usize>()
+        ),
+    );
+
+    for step in 0..steps {
+        let (x, y) = ds.batch(batch);
+        let mut inputs = Vec::with_capacity(2 * k + 2);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(vel.iter().cloned());
+        inputs.push(Value::F32(x));
+        inputs.push(Value::I32 { shape: vec![batch, img, img], data: y });
+        let t0 = std::time::Instant::now();
+        let mut out = engine.run(&entry.name, &inputs)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        exec_ms_total += ms;
+        let loss = out.pop().expect("loss").scalar()? as f64;
+        let new_vel: Vec<Value> = out.drain(k..).collect();
+        params = out;
+        vel = new_vel;
+        if step % log_every == 0 || step + 1 == steps {
+            logging::info("seg-train", &format!("step {step:>5}  loss {loss:.4}  ({ms:.0} ms)"));
+            report.curve.push(StepLog { step, loss, ms });
+        }
+        report.final_train_loss = loss;
+
+        if eval_every > 0 && (step + 1) % eval_every == 0 {
+            let (ex, ey) = eval_ds.batch(batch);
+            let total_px = batch * img * img;
+            let mut inputs = Vec::with_capacity(k + 2);
+            inputs.extend(params.iter().cloned());
+            inputs.push(Value::F32(ex));
+            inputs.push(Value::I32 { shape: vec![batch, img, img], data: ey });
+            let out = engine.run(&eval_entry, &inputs)?;
+            let eloss = out[0].scalar()? as f64;
+            let correct = match &out[1] {
+                Value::I32 { data, .. } => data[0] as usize,
+                Value::F32(t) => t.data[0] as usize,
+            };
+            let acc = correct as f64 / total_px as f64;
+            logging::info(
+                "seg-train",
+                &format!("  eval @ {step}: loss {eloss:.4} pixel-acc {:.1}%", acc * 100.0),
+            );
+            report.evals.push((step, eloss, acc));
+            report.final_eval_acc = acc;
+        }
+    }
+    report.wall_s = t_start.elapsed().as_secs_f64();
+    let wall_ms = report.wall_s * 1e3;
+    report.step_overhead_frac = ((wall_ms - exec_ms_total) / wall_ms).max(0.0);
+    Ok(report)
+}

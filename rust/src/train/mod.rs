@@ -1,0 +1,8 @@
+//! Training driver: synthetic data generation + the SGD loop over the
+//! AOT-compiled train-step artifacts (the end-to-end deliverable).
+
+pub mod data;
+pub mod driver;
+
+pub use data::{denoising_batch, DirectionalContext, Sample, VoronoiSeg, NUM_CLASSES};
+pub use driver::{train_classifier, train_denoiser, train_segmenter, StepLog, TrainReport, Trainer};

@@ -1,0 +1,216 @@
+//! Criterion-style micro-benchmark harness (criterion is not vendored).
+//!
+//! Usage from a `[[bench]]` target with `harness = false`:
+//!
+//! ```ignore
+//! let mut b = BenchSuite::new("scan");
+//! b.bench("scan_64", || scan_once(&x));
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over adaptive batches until a
+//! target measurement time is reached; results print mean / p50 / p95 and
+//! are appended to `bench_out/<suite>.json` for the repro pipeline.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::{fmt_time_ns, percentile};
+
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(700),
+            min_samples: 10,
+            max_samples: 2000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("mean_ns", self.mean_ns.into()),
+            ("p50_ns", self.p50_ns.into()),
+            ("p95_ns", self.p95_ns.into()),
+            ("samples", self.samples.into()),
+            ("iters_per_sample", (self.iters_per_sample as usize).into()),
+        ])
+    }
+}
+
+pub struct BenchSuite {
+    suite: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    out_dir: String,
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        Self::with_config(suite, BenchConfig::default())
+    }
+
+    pub fn with_config(suite: &str, cfg: BenchConfig) -> Self {
+        println!("== bench suite: {suite} ==");
+        Self {
+            suite: suite.to_string(),
+            cfg,
+            results: Vec::new(),
+            out_dir: std::env::var("GSPN2_BENCH_OUT").unwrap_or_else(|_| "bench_out".into()),
+        }
+    }
+
+    /// Time `f`, which performs ONE logical operation per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.cfg.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+
+        // Choose batch so one sample is ~measure/min_samples but >= 1 iter.
+        let sample_target_ns =
+            self.cfg.measure.as_nanos() as f64 / self.cfg.min_samples as f64;
+        let iters = ((sample_target_ns / per_iter.max(1.0)).round() as u64).clamp(1, 1 << 22);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t_all = Instant::now();
+        while t_all.elapsed() < self.cfg.measure && samples_ns.len() < self.cfg.max_samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        while samples_ns.len() < self.cfg.min_samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let mut s = samples_ns.clone();
+        let p50 = percentile(&mut s, 50.0);
+        let p95 = percentile(&mut s, 95.0);
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+            samples: samples_ns.len(),
+            iters_per_sample: iters,
+        };
+        println!(
+            "  {:<44} {:>12}/iter  (p50 {:>12}, p95 {:>12}, {} samples x {} iters)",
+            name,
+            fmt_time_ns(mean),
+            fmt_time_ns(p50),
+            fmt_time_ns(p95),
+            res.samples,
+            iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    /// Record an externally measured scalar (e.g. simulated milliseconds).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("  {name:<44} {value:>12.4} {unit}");
+        self.results.push(BenchResult {
+            name: format!("{name} [{unit}]"),
+            mean_ns: value,
+            p50_ns: value,
+            p95_ns: value,
+            samples: 1,
+            iters_per_sample: 1,
+        });
+    }
+
+    /// Write `bench_out/<suite>.json` and print a footer.
+    pub fn finish(self) {
+        let _ = std::fs::create_dir_all(&self.out_dir);
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let doc = Json::from_pairs(vec![
+            ("suite", self.suite.as_str().into()),
+            ("results", arr),
+        ]);
+        let path = format!("{}/{}.json", self.out_dir, self.suite);
+        if let Err(e) = std::fs::write(&path, doc.write_pretty()) {
+            eprintln!("bench: could not write {path}: {e}");
+        } else {
+            println!("== wrote {path} ({} results) ==", self.results.len());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 5,
+            max_samples: 50,
+        }
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut suite = BenchSuite::with_config("selftest", fast_cfg());
+        let mut acc = 0u64;
+        let r = suite.bench("u64 add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.samples >= 5);
+    }
+
+    #[test]
+    fn bench_orders_costs() {
+        let mut suite = BenchSuite::with_config("selftest2", fast_cfg());
+        let cheap = suite.bench("cheap", || {
+            black_box(1 + 1);
+        });
+        let costly = suite.bench("costly", || {
+            let mut s = 0u64;
+            for i in 0..2000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(costly.mean_ns > cheap.mean_ns * 3.0);
+    }
+}

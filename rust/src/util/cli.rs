@@ -1,0 +1,127 @@
+//! Tiny declarative CLI argument parser (no clap vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! The binary's subcommands each build an `Args` from `std::env::args()`
+//! leftovers and query typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 64,128,256`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["repro", "fig3", "--verbose"]);
+        assert_eq!(a.positional, vec!["repro", "fig3"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = parse(&["--batch", "16", "--res=1024"]);
+        assert_eq!(a.usize_or("batch", 0), 16);
+        assert_eq!(a.usize_or("res", 0), 1024);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--offset", "-3"]);
+        // "-3" does not start with -- so it is consumed as a value.
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--sizes", "64,128,256"]);
+        assert_eq!(a.usize_list_or("sizes", &[]), vec![64, 128, 256]);
+        assert_eq!(a.usize_list_or("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn floats() {
+        let a = parse(&["--rate", "123.5"]);
+        assert_eq!(a.f64_or("rate", 0.0), 123.5);
+    }
+}

@@ -1,0 +1,112 @@
+//! Leveled stderr logger with per-module tags and a global level filter.
+//!
+//! Small on purpose: the binary is a CLI tool, so structured stderr lines
+//! (`LEVEL tag: message`) are enough. The level comes from `GSPN2_LOG`
+//! (error|warn|info|debug|trace) or defaults to `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != 255 {
+        return match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        };
+    }
+    let lv = std::env::var("GSPN2_LOG").map(|s| Level::parse(&s)).unwrap_or(Level::Info);
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    lv
+}
+
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn log(lv: Level, tag: &str, msg: &str) {
+    if lv > level() {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let dt = t0.elapsed().as_secs_f64();
+    eprintln!("[{dt:9.3}s] {} {tag}: {msg}", lv.tag());
+}
+
+pub fn error(tag: &str, msg: &str) {
+    log(Level::Error, tag, msg);
+}
+pub fn warn(tag: &str, msg: &str) {
+    log(Level::Warn, tag, msg);
+}
+pub fn info(tag: &str, msg: &str) {
+    log(Level::Info, tag, msg);
+}
+pub fn debug(tag: &str, msg: &str) {
+    log(Level::Debug, tag, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("ERROR"), Level::Error);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn set_level_silences() {
+        set_level(Level::Error);
+        // Nothing to assert on stderr; just exercise the filtered path.
+        info("test", "should be filtered");
+        error("test", "visible");
+        set_level(Level::Info);
+    }
+}

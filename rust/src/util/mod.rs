@@ -1,0 +1,18 @@
+//! Substrate utilities built from scratch for this repo (no general-purpose
+//! crates beyond `xla`/`anyhow` are vendored): PRNG, JSON, TOML, logging,
+//! CLI parsing, a thread pool, statistics, a property-testing framework,
+//! and a criterion-style bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod toml;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use threadpool::ThreadPool;

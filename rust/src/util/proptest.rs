@@ -1,0 +1,159 @@
+//! Property-based testing mini-framework (no proptest crate vendored).
+//!
+//! A property is a closure from a seeded `Gen` to `Result<(), String>`;
+//! the runner executes it across many deterministic seeds and, on failure,
+//! reports the failing seed so the case replays exactly. Shrinking is
+//! intentionally simple: we re-run with "smaller" size hints first, which
+//! in practice finds near-minimal cases for the tensor/scan/batcher
+//! invariants this repo checks.
+
+use super::rng::Rng;
+
+/// Value generator handed to each property execution.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint in [0, 1]; properties scale their dimensions by it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Rng::new(seed), size }
+    }
+
+    /// Integer in [lo, hi] scaled toward lo for small sizes.
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n, 1.0)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x5EED }
+    }
+}
+
+/// Run a property across `cfg.cases` seeds; panics with the failing seed.
+pub fn check_with<F>(cfg: Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    // Small sizes first: failures surface with near-minimal inputs.
+    for case in 0..cfg.cases {
+        let size = 0.15 + 0.85 * (case as f64 / cfg.cases.max(1) as f64);
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed={seed:#x}, size={size:.2}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_with(Config::default(), name, prop);
+}
+
+/// Assertion helpers that return Err instead of panicking.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let denom = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+pub fn ensure_all_close(a: &[f32], b: &[f32], tol: f64, what: &str) -> Result<(), String> {
+    ensure(a.len() == b.len(), format!("{what}: length {} vs {}", a.len(), b.len()))?;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0f64.max((*x as f64).abs()).max((*y as f64).abs());
+        if ((*x as f64) - (*y as f64)).abs() / denom > tol {
+            return Err(format!("{what}: index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("addition commutes", |g| {
+            let a = g.f32_in(-100.0, 100.0);
+            let b = g.f32_in(-100.0, 100.0);
+            ensure_close((a + b) as f64, (b + a) as f64, 1e-9, "a+b")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn int_in_respects_bounds() {
+        check("int_in bounds", |g| {
+            let lo = g.int_in(0, 10);
+            let hi = lo + g.int_in(0, 10);
+            let x = g.int_in(lo, hi);
+            ensure(x >= lo && x <= hi, format!("{x} not in [{lo},{hi}]"))
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut g1 = Gen::new(123, 0.5);
+        let mut g2 = Gen::new(123, 0.5);
+        for _ in 0..16 {
+            assert_eq!(g1.int_in(0, 1000), g2.int_in(0, 1000));
+        }
+    }
+
+    #[test]
+    fn ensure_all_close_reports_index() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 9.0, 3.0];
+        let err = ensure_all_close(&a, &b, 1e-6, "vecs").unwrap_err();
+        assert!(err.contains("index 1"), "{err}");
+    }
+}

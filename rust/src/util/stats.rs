@@ -1,0 +1,272 @@
+//! Summary statistics, percentile estimation, and latency histograms.
+//!
+//! Used by the coordinator's metrics, the bench harness, and the repro
+//! drivers that print paper tables.
+
+/// Running summary over f64 samples (Welford's online algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile over a stored sample set (fine for bench-scale data).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (samples.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let frac = rank - lo as f64;
+        samples[lo] * (1.0 - frac) + samples[hi] * frac
+    }
+}
+
+/// Log-bucketed latency histogram (HdrHistogram-lite): buckets grow by
+/// ~4.6% per step, covering 1 ns .. ~17 min with 512 buckets.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const HIST_BUCKETS: usize = 512;
+const HIST_GROWTH: f64 = 1.046;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns <= 1 {
+            return 0;
+        }
+        let b = (ns as f64).ln() / HIST_GROWTH.ln();
+        (b as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn bucket_upper(i: usize) -> f64 {
+        HIST_GROWTH.powi(i as i32 + 1)
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Percentile in nanoseconds (upper bucket bound; <= 4.6% error).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_upper(i).min(self.max_ns as f64);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Pretty-print engineering time: ns/us/ms/s.
+pub fn fmt_time_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_sequential() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut whole = Summary::new();
+        for i in 0..100 {
+            let x = (i as f64).sin() * 10.0;
+            whole.add(x);
+            if i % 2 == 0 {
+                a.add(x)
+            } else {
+                b.add(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.var() - whole.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_exact() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&mut xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_close() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 1000); // 1µs..10ms uniform
+        }
+        let p50 = h.percentile_ns(50.0);
+        assert!((p50 / 5_000_000.0 - 1.0).abs() < 0.06, "p50={p50}");
+        let p99 = h.percentile_ns(99.0);
+        assert!((p99 / 9_900_000.0 - 1.0).abs() < 0.06, "p99={p99}");
+        assert!(h.percentile_ns(100.0) <= 10_000_000.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            a.record_ns(1000 + i);
+            b.record_ns(5000 + i);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        assert!(a.mean_ns() > 3000.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time_ns(500.0), "500 ns");
+        assert!(fmt_time_ns(1500.0).contains("µs"));
+        assert!(fmt_time_ns(2.5e6).contains("ms"));
+        assert!(fmt_time_ns(3.2e9).contains(" s"));
+    }
+}

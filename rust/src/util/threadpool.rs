@@ -1,0 +1,202 @@
+//! A small fixed-size thread pool with a shared FIFO queue.
+//!
+//! The coordinator's worker pool and the benchmark drivers use this; no
+//! tokio/rayon is vendored, so it is built directly on `std::thread` +
+//! `Mutex`/`Condvar`. Supports fire-and-forget `execute`, fork-join
+//! `scope`-style `map`, and graceful shutdown on drop.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gspn2-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the machine (leaving one core for the driver).
+    pub fn for_host() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every queued job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Fork-join map: applies `f` to each item in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let f = Arc::new(f);
+        for (i, item) in items.into_iter().enumerate() {
+            let res = Arc::clone(&results);
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let r = f(item);
+                res.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("pool still holds results"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job did not run"))
+            .collect()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not wedge wait_idle: decrement via guard.
+        struct Dec<'a>(&'a Shared);
+        impl Drop for Dec<'_> {
+            fn drop(&mut self) {
+                if self.0.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = self.0.done_lock.lock().unwrap();
+                    self.0.done.notify_all();
+                }
+            }
+        }
+        let _dec = Dec(&sh);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if result.is_err() {
+            crate::util::logging::warn("threadpool", "worker job panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_actually_parallel() {
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.map(vec![(); 8], |_| std::thread::sleep(std::time::Duration::from_millis(40)));
+        // 8 x 40ms on 4 threads ~ 80ms; serial would be 320ms.
+        assert!(t0.elapsed() < std::time::Duration::from_millis(250));
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let ok = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&ok);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+}

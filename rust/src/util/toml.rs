@@ -1,0 +1,236 @@
+//! Mini-TOML parser for config files (`configs/*.toml`).
+//!
+//! Supports the subset the launcher needs: `[section]` / `[a.b]` tables,
+//! `key = value` with string / integer / float / bool / array values, and
+//! `#` comments. Values land in a flat `section.key -> Value` map, which
+//! the typed config structs in `crate::config` consume.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize_list(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Arr(items) => items.iter().map(|v| v.as_i64().map(|x| x as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub map: BTreeMap<String, Value>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            map.insert(key, value);
+        }
+        Ok(Toml { map })
+    }
+
+    pub fn load(path: &str) -> Result<Toml, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Toml::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|x| x as usize).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_sections() {
+        let t = Toml::parse(
+            "top = 1\n[server]\nport = 8080\nhost = \"local\"\n[a.b]\nx = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(t.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(t.usize_or("server.port", 0), 8080);
+        assert_eq!(t.str_or("server.host", ""), "local");
+        assert_eq!(t.f64_or("a.b.x", 0.0), 2.5);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = Toml::parse("# header\nx = 3 # trailing\n\ny = \"a # not comment\"\n").unwrap();
+        assert_eq!(t.get("x").unwrap().as_i64(), Some(3));
+        assert_eq!(t.str_or("y", ""), "a # not comment");
+    }
+
+    #[test]
+    fn arrays() {
+        let t = Toml::parse("dims = [64, 128, 320, 512]\nmix = [1, 2.5]\n").unwrap();
+        assert_eq!(
+            t.get("dims").unwrap().as_usize_list().unwrap(),
+            vec![64, 128, 320, 512]
+        );
+    }
+
+    #[test]
+    fn bools_and_underscored_numbers() {
+        let t = Toml::parse("on = true\noff = false\nbig = 1_000_000\n").unwrap();
+        assert_eq!(t.bool_or("on", false), true);
+        assert_eq!(t.bool_or("off", true), false);
+        assert_eq!(t.get("big").unwrap().as_i64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = Toml::parse("x 3\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(Toml::parse("[open\n").is_err());
+        assert!(Toml::parse("k = \"unterminated\n").is_err());
+    }
+}

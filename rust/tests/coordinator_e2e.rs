@@ -1,0 +1,203 @@
+//! Integration: the serving coordinator end to end — submit scan
+//! requests through the router/batcher/worker-pool and verify results
+//! against the Rust reference, batching behaviour, backpressure, and
+//! graceful drain.
+
+use std::time::Duration;
+
+use gspn2::config::ServeConfig;
+use gspn2::coordinator::{Coordinator, SubmitError};
+use gspn2::runtime::artifacts_available;
+use gspn2::scan::{scan_l2r, Taps};
+use gspn2::util::Rng;
+use gspn2::Tensor;
+
+fn cfg(workers: usize, max_batch: usize, wait_us: u64, cap: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        max_batch,
+        max_wait_us: wait_us,
+        queue_cap: cap,
+        ..ServeConfig::default()
+    }
+}
+
+fn ready() -> bool {
+    if !artifacts_available("artifacts") {
+        eprintln!("SKIP: artifacts/ not built");
+        return false;
+    }
+    true
+}
+
+fn mk_case(rng: &mut Rng, c: usize, h: usize, w: usize) -> (Tensor, Tensor, Tensor) {
+    (
+        Tensor::randn(&[1, c, h, w], rng, 1.0),
+        Tensor::randn(&[1, 1, 3, h, w], rng, 1.0),
+        Tensor::randn(&[1, c, h, w], rng, 1.0),
+    )
+}
+
+#[test]
+fn serves_correct_results() {
+    if !ready() {
+        return;
+    }
+    let coord = Coordinator::start(&cfg(1, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(1);
+    let mut cases = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..6 {
+        let (x, a, lam) = mk_case(&mut rng, 8, 64, 64);
+        let rx = coord
+            .submit_scan(x.clone(), a.clone(), lam.clone(), 0)
+            .expect("submit");
+        cases.push((x, a, lam));
+        rxs.push(rx);
+    }
+    for ((x, a, lam), rx) in cases.into_iter().zip(rxs) {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let got = resp.result.expect("ok")[0].as_f32().unwrap().clone();
+        let want = scan_l2r(&x, &Taps::normalize(&a), &lam, 0);
+        assert!(
+            got.max_abs_diff(&want) < 2e-4,
+            "served result diverges: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 6);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn batches_are_fused() {
+    if !ready() {
+        return;
+    }
+    // Long wait window so all requests land in one collection window.
+    let coord = Coordinator::start(&cfg(1, 4, 50_000, 64)).unwrap();
+    let mut rng = Rng::new(2);
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let (x, a, lam) = mk_case(&mut rng, 8, 64, 64);
+        rxs.push(coord.submit_scan(x, a, lam, 0).unwrap());
+    }
+    let mut max_batch_seen = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.result.is_ok());
+        max_batch_seen = max_batch_seen.max(resp.batch);
+    }
+    assert!(
+        max_batch_seen >= 2,
+        "no fusion happened (max batch {max_batch_seen})"
+    );
+    let m = coord.shutdown();
+    assert!(m.batch_sizes.mean() > 1.0);
+}
+
+#[test]
+fn unknown_bucket_rejected() {
+    if !ready() {
+        return;
+    }
+    let coord = Coordinator::start(&cfg(1, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(3);
+    // 32x32 geometry has no compiled artifact.
+    let (x, a, lam) = mk_case(&mut rng, 8, 32, 32);
+    match coord.submit_scan(x, a, lam, 0) {
+        Err(SubmitError::UnknownBucket(name)) => {
+            assert!(name.contains("h32w32"), "{name}");
+        }
+        other => panic!("expected UnknownBucket, got {other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    if !ready() {
+        return;
+    }
+    // Capacity 2, one slow worker, huge wait -> the queue fills.
+    let coord = Coordinator::start(&cfg(1, 4, 2_000_000, 2)).unwrap();
+    let mut rng = Rng::new(4);
+    let mut kept = Vec::new();
+    let mut saw_backpressure = false;
+    for _ in 0..8 {
+        let (x, a, lam) = mk_case(&mut rng, 8, 64, 64);
+        match coord.submit_scan(x, a, lam, 0) {
+            Ok(rx) => kept.push(rx),
+            Err(SubmitError::Backpressure) => {
+                saw_backpressure = true;
+                break;
+            }
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert!(saw_backpressure, "queue never filled");
+    let m = coord.shutdown();
+    assert!(m.rejected >= 1);
+    // The admitted requests still complete during drain.
+    for rx in kept {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.result.is_ok());
+    }
+}
+
+#[test]
+fn multiple_buckets_served() {
+    if !ready() {
+        return;
+    }
+    let coord = Coordinator::start(&cfg(2, 4, 1_000, 64)).unwrap();
+    let mut rng = Rng::new(5);
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let (c, h, w) = if i % 2 == 0 { (8, 64, 64) } else { (8, 128, 128) };
+        let (x, a, lam) = mk_case(&mut rng, c, h, w);
+        rxs.push(coord.submit_scan(x, a, lam, 0).unwrap());
+    }
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(180)).unwrap();
+        assert!(r.result.is_ok());
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 6);
+}
+
+#[test]
+fn direct_requests_execute() {
+    if !ready() {
+        return;
+    }
+    let coord = Coordinator::start(&cfg(1, 4, 500, 64)).unwrap();
+    // Drive the classifier forward through the direct path.
+    use gspn2::runtime::{Engine, Value};
+    let engine = Engine::cpu("artifacts").unwrap();
+    let mut inputs = engine.initial_params("classifier_fwd_b8").unwrap();
+    let mut rng = Rng::new(6);
+    inputs.push(Value::F32(Tensor::randn(&[8, 3, 32, 32], &mut rng, 1.0)));
+    let rx = coord.submit_direct("classifier_fwd_b8", inputs).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let outs = resp.result.expect("direct ok");
+    assert_eq!(outs[0].as_f32().unwrap().shape, vec![8, 10]);
+    coord.shutdown();
+}
+
+#[test]
+fn chunked_bucket_served() {
+    if !ready() {
+        return;
+    }
+    let coord = Coordinator::start(&cfg(1, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(7);
+    let (x, a, lam) = mk_case(&mut rng, 8, 64, 64);
+    let rx = coord.submit_scan(x.clone(), a.clone(), lam.clone(), 16).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let got = resp.result.unwrap()[0].as_f32().unwrap().clone();
+    let want = scan_l2r(&x, &Taps::normalize(&a), &lam, 16);
+    assert!(got.max_abs_diff(&want) < 2e-4);
+    coord.shutdown();
+}

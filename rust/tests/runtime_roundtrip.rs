@@ -1,0 +1,192 @@
+//! Integration: the full AOT bridge. Loads the HLO-text artifacts built
+//! by `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! checks numerics against the pure-Rust GSPN reference (`gspn2::scan`) —
+//! two implementations that share no code, one lowered through
+//! JAX/Pallas, one hand-written.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts are absent).
+
+use gspn2::runtime::{artifacts_available, Engine, Value};
+use gspn2::scan::{scan_l2r, Taps};
+use gspn2::util::Rng;
+use gspn2::Tensor;
+
+const DIR: &str = "artifacts";
+
+fn engine() -> Option<Engine> {
+    if !artifacts_available(DIR) {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::cpu(DIR).expect("engine"))
+}
+
+fn scan_case(
+    engine: &Engine,
+    name: &str,
+    n: usize,
+    c: usize,
+    cw: usize,
+    h: usize,
+    w: usize,
+    kchunk: usize,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let a_raw = Tensor::randn(&[n, cw, 3, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+
+    let outs = engine
+        .run(
+            name,
+            &[
+                Value::F32(x.clone()),
+                Value::F32(a_raw.clone()),
+                Value::F32(lam.clone()),
+            ],
+        )
+        .expect("execute");
+    let got = outs[0].as_f32().unwrap();
+
+    let taps = Taps::normalize(&a_raw);
+    let want = scan_l2r(&x, &taps, &lam, kchunk);
+    let diff = got.max_abs_diff(&want);
+    assert!(
+        diff < 2e-4,
+        "{name}: PJRT vs Rust reference diverge by {diff}"
+    );
+}
+
+#[test]
+fn scan_artifact_matches_rust_reference() {
+    let Some(e) = engine() else { return };
+    scan_case(&e, "scan_h64w64c8n1", 1, 8, 1, 64, 64, 0, 0);
+}
+
+#[test]
+fn scan_batched_artifacts_match() {
+    let Some(e) = engine() else { return };
+    scan_case(&e, "scan_h64w64c8n2", 2, 8, 1, 64, 64, 0, 1);
+    scan_case(&e, "scan_h64w64c8n4", 4, 8, 1, 64, 64, 0, 2);
+}
+
+#[test]
+fn scan_highres_artifact_matches() {
+    let Some(e) = engine() else { return };
+    scan_case(&e, "scan_h128w128c8n1", 1, 8, 1, 128, 128, 0, 3);
+}
+
+#[test]
+fn scan_per_channel_artifact_matches() {
+    let Some(e) = engine() else { return };
+    scan_case(&e, "scan_h64w64c8n1pc", 1, 8, 8, 64, 64, 0, 4);
+}
+
+#[test]
+fn scan_chunked_artifact_matches() {
+    let Some(e) = engine() else { return };
+    scan_case(&e, "scan_h64w64c8n1k16", 1, 8, 1, 64, 64, 16, 5);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(e) = engine() else { return };
+    let _ = e.load("scan_h64w64c8n1").unwrap();
+    let compiles_before = e.stats.borrow().compiles;
+    let _ = e.load("scan_h64w64c8n1").unwrap();
+    assert_eq!(e.stats.borrow().compiles, compiles_before, "cache miss");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(e) = engine() else { return };
+    let bad = vec![
+        Value::F32(Tensor::zeros(&[1, 8, 64, 63])), // wrong W
+        Value::F32(Tensor::zeros(&[1, 1, 3, 64, 64])),
+        Value::F32(Tensor::zeros(&[1, 8, 64, 64])),
+    ];
+    assert!(e.run("scan_h64w64c8n1", &bad).is_err());
+    let too_few = vec![Value::F32(Tensor::zeros(&[1, 8, 64, 64]))];
+    assert!(e.run("scan_h64w64c8n1", &too_few).is_err());
+}
+
+#[test]
+fn classifier_fwd_produces_logits() {
+    let Some(e) = engine() else { return };
+    let mut inputs = e.initial_params("classifier_fwd_b8").unwrap();
+    let mut rng = Rng::new(9);
+    inputs.push(Value::F32(Tensor::randn(&[8, 3, 32, 32], &mut rng, 1.0)));
+    let outs = e.run("classifier_fwd_b8", &inputs).unwrap();
+    let logits = outs[0].as_f32().unwrap();
+    assert_eq!(logits.shape, vec![8, 10]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+    // Different inputs -> different logits (the model is not constant).
+    let mut inputs2 = e.initial_params("classifier_fwd_b8").unwrap();
+    inputs2.push(Value::F32(Tensor::randn(&[8, 3, 32, 32], &mut rng, 1.0)));
+    let outs2 = e.run("classifier_fwd_b8", &inputs2).unwrap();
+    assert!(logits.max_abs_diff(outs2[0].as_f32().unwrap()) > 1e-6);
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    let Some(e) = engine() else { return };
+    let entry = e.entry("classifier_train_b8").unwrap().clone();
+    let k = entry.n_params;
+    let params = e.initial_params("classifier_train_b8").unwrap();
+    let mut rng = Rng::new(11);
+    let x = Value::F32(Tensor::randn(&[8, 3, 32, 32], &mut rng, 1.0));
+    let y = Value::i32_vec((0..8).map(|_| rng.below(10) as i32).collect());
+
+    let mut cur: Vec<Value> = params.clone();
+    let mut vel: Vec<Value> = params
+        .iter()
+        .map(|p| Value::F32(Tensor::zeros(p.shape())))
+        .collect();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..5 {
+        let mut inputs = Vec::with_capacity(2 * k + 2);
+        inputs.extend(cur.iter().cloned());
+        inputs.extend(vel.iter().cloned());
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        let mut out = e.run("classifier_train_b8", &inputs).unwrap();
+        let loss = out.pop().unwrap().scalar().unwrap() as f64;
+        vel = out.drain(k..).collect();
+        cur = out;
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn denoiser_fwd_runs_both_resolutions() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(13);
+    for (name, b, r) in [("denoiser_fwd_r16_b4", 4usize, 16usize), ("denoiser_fwd_r32_b1", 1, 32)] {
+        let mut inputs = e.initial_params(name).unwrap();
+        inputs.push(Value::F32(Tensor::randn(&[b, 3, r, r], &mut rng, 1.0)));
+        inputs.push(Value::F32(Tensor::from_vec(
+            &[b],
+            (0..b).map(|i| i as f32 * 7.0).collect(),
+        )));
+        let outs = e.run(name, &inputs).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap().shape, vec![b, 3, r, r]);
+    }
+}
+
+#[test]
+fn attention_baseline_artifacts_run() {
+    let Some(e) = engine() else { return };
+    let mut inputs = e.initial_params("attn_classifier_fwd_b8").unwrap();
+    let mut rng = Rng::new(17);
+    inputs.push(Value::F32(Tensor::randn(&[8, 3, 32, 32], &mut rng, 1.0)));
+    let outs = e.run("attn_classifier_fwd_b8", &inputs).unwrap();
+    assert_eq!(outs[0].as_f32().unwrap().shape, vec![8, 10]);
+}

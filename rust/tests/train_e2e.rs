@@ -1,0 +1,110 @@
+//! Integration: the Rust training driver over the AOT train-step
+//! artifacts — loss decreases on the directional-context task and on the
+//! denoising objective, entirely from Rust.
+
+use gspn2::runtime::{artifacts_available, Engine};
+use gspn2::train::{train_classifier, train_denoiser, DirectionalContext, Trainer};
+
+fn ready() -> bool {
+    if !artifacts_available("artifacts") {
+        eprintln!("SKIP: artifacts/ not built");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn classifier_loss_decreases() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let report = train_classifier(&engine, "classifier", 40, 1, 0, 42).unwrap();
+    // Stochastic fresh-batch training: compare early-window vs
+    // late-window mean loss.
+    let losses: Vec<f64> = report.curve.iter().map(|l| l.loss).collect();
+    let early = losses[..8].iter().sum::<f64>() / 8.0;
+    let late = losses[losses.len() - 8..].iter().sum::<f64>() / 8.0;
+    assert!(
+        late < early,
+        "mean loss did not decrease over 40 steps: {early:.3} -> {late:.3}"
+    );
+}
+
+#[test]
+fn trainer_eval_counts_bounded() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let trainer = Trainer::new(&engine, "classifier").unwrap();
+    let b = trainer.batch_size();
+    let mut ds = DirectionalContext::new(trainer.image_size(), 0);
+    let (x, y) = ds.batch(b);
+    let (loss, correct) = trainer.eval(x, y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(correct <= b);
+}
+
+#[test]
+fn attention_baseline_also_trains() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    // 60 steps with wide early/late windows: enough for the slower-to-warm
+    // attention baseline to show a robust downward trend regardless of the
+    // synthetic-data RNG stream.
+    let report = train_classifier(&engine, "attn_classifier", 60, 10, 0, 42).unwrap();
+    let losses: Vec<f64> = report.curve.iter().map(|l| l.loss).collect();
+    let k = losses.len() / 3;
+    let early = losses[..k].iter().sum::<f64>() / k as f64;
+    let late = losses[losses.len() - k..].iter().sum::<f64>() / k as f64;
+    assert!(late < early, "attn mean loss {early:.3} -> {late:.3}");
+}
+
+#[test]
+fn denoiser_trains() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let report = train_denoiser(&engine, 10, 5, 7).unwrap();
+    let first = report.curve.first().unwrap().loss;
+    assert!(
+        report.final_train_loss < first,
+        "denoise loss {first} -> {}",
+        report.final_train_loss
+    );
+}
+
+#[test]
+fn missing_model_is_an_error() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    assert!(Trainer::new(&engine, "nonexistent_model").is_err());
+}
+
+#[test]
+fn segmenter_learns_voronoi_pixels() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let report =
+        gspn2::train::train_segmenter(&engine, 60, 20, 30, 7).expect("seg training runs");
+    // Pixel CE must drop well below ln(2) and pixel accuracy must beat
+    // chance (50%) decisively.
+    assert!(
+        report.final_train_loss < 0.6,
+        "seg loss stuck at {}",
+        report.final_train_loss
+    );
+    assert!(
+        report.final_eval_acc > 0.65,
+        "pixel acc {} barely above chance",
+        report.final_eval_acc
+    );
+}
