@@ -10,8 +10,9 @@
 //!   work per column and was 4-30x slower — it only pays on massively
 //!   parallel hardware, which is exactly the GPU regime the simulator's
 //!   `KernelConfig::split` models and the adaptive policy selects;
-//! * thread scaling requires multiple cores; on a single-core host the
-//!   t>1 rows show pure spawn overhead (this box: see nproc).
+//! * thread scaling requires multiple cores; `t>1` submits at most `t`
+//!   jobs to the process-wide shared `ThreadPool` (no per-call spawns),
+//!   so on a single-core host the t>1 rows show pure queueing overhead.
 //!
 //! Run: `cargo run --release --example split_sweep`
 

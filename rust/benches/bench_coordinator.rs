@@ -11,8 +11,9 @@ use gspn2::coordinator::{
     BatchPolicy, Batcher, Bucket, Coordinator, Metrics, Payload, Request, TraceConfig,
 };
 use gspn2::runtime::{artifacts_available, Engine, Value};
+use gspn2::tensor::concat_axis0;
 use gspn2::util::bench::{black_box, BenchSuite};
-use gspn2::util::Rng;
+use gspn2::util::{Rng, ThreadPool};
 use gspn2::Tensor;
 
 fn bucket() -> Bucket {
@@ -49,7 +50,7 @@ fn main() {
         let mut id = 0u64;
         suite.bench("batcher enqueue+pop (batch of 4)", || {
             for _ in 0..4 {
-                b.enqueue(bucket(), mk_req(id, &tx));
+                b.enqueue(bucket(), mk_req(id, &tx)).expect("registered bucket");
                 id += 1;
             }
             black_box(b.pop_batch(Instant::now()));
@@ -81,10 +82,34 @@ fn main() {
                     arrived: Instant::now(),
                     reply: tx.clone(),
                 };
-                b.enqueue(bucket(), r);
+                b.enqueue(bucket(), r).expect("registered bucket");
                 id += 1;
             }
             black_box(b.pop_batch(Instant::now()));
+        });
+    }
+
+    // Intra-batch input assembly (the serving-path CPU work inside
+    // run_scan_batch): three fused-input concats, serial vs fanned out
+    // on the same shared pool the scan reference uses.
+    {
+        let mut rng = Rng::new(9);
+        let xs: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0)).collect();
+        let avs: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0)).collect();
+        let lams: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[1, 8, 64, 64], &mut rng, 1.0)).collect();
+        let xr: Vec<&Tensor> = xs.iter().collect();
+        let ar: Vec<&Tensor> = avs.iter().collect();
+        let lr: Vec<&Tensor> = lams.iter().collect();
+        suite.bench("batch assembly 3x concat n=4 (serial)", || {
+            black_box((concat_axis0(&xr), concat_axis0(&ar), concat_axis0(&lr)));
+        });
+        let pool = ThreadPool::global();
+        suite.bench("batch assembly 3x concat n=4 (shared pool)", || {
+            let groups: Vec<&[&Tensor]> = vec![&xr, &ar, &lr];
+            black_box(pool.map(groups, concat_axis0));
         });
     }
 

@@ -4,9 +4,12 @@
 //!
 //! Run: `cargo bench --bench bench_scan` (results land in bench_out/).
 
-use gspn2::scan::{expand_g, merged_4dir, scan_l2r, scan_l2r_split, CompactGspnUnit, Taps};
+use gspn2::scan::{
+    expand_g, merged_4dir, merged_4dir_pool, scan_l2r, scan_l2r_pool, scan_l2r_split,
+    CompactGspnUnit, Taps,
+};
 use gspn2::util::bench::{black_box, BenchSuite};
-use gspn2::util::Rng;
+use gspn2::util::{Rng, ThreadPool};
 use gspn2::Tensor;
 
 fn main() {
@@ -33,6 +36,24 @@ fn main() {
         });
     }
 
+    // Shared-pool plane fan-out vs the serial plane loop above: the same
+    // per-plane kernel (bit-identical output), (N·C)-way parallel on the
+    // process-wide pool. Multi-plane inputs are where the pool must win.
+    {
+        let pool = ThreadPool::global();
+        for (c, h, w) in [(8usize, 128usize, 128usize), (64, 64, 64)] {
+            let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+            let a = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
+            let lam = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+            suite.bench(
+                &format!("scan_l2r c{c} {h}x{w} (shared pool, {} workers)", pool.threads()),
+                || {
+                    black_box(scan_l2r_pool(&x, &a, &lam, 0, pool));
+                },
+            );
+        }
+    }
+
     // Chunked (GSPN-local) variant.
     {
         let x = Tensor::randn(&[1, 8, 128, 128], &mut rng, 1.0);
@@ -44,7 +65,8 @@ fn main() {
     }
 
     // Segment-parallel decomposition (the §5.1 extension): sequential vs
-    // split with 1 thread (pure overhead) vs split with host threads.
+    // split with 1 thread (pure overhead) vs split on the shared pool
+    // (t>1 submits to ThreadPool::global(), no per-call spawns).
     {
         let (c, h, w) = (1usize, 256usize, 256usize);
         let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
@@ -56,13 +78,14 @@ fn main() {
         suite.bench("scan_split c1 256x256 seg=8 t=1", || {
             black_box(scan_l2r_split(&x, &a, &lam, 8, 1));
         });
-        let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-        suite.bench(&format!("scan_split c1 256x256 seg=8 t={t}"), || {
+        // threads > 1 bounds the job count submitted to the shared pool.
+        let t = ThreadPool::global().threads().clamp(2, 8);
+        suite.bench(&format!("scan_split c1 256x256 seg=8 t={t} (pool)"), || {
             black_box(scan_l2r_split(&x, &a, &lam, 8, t));
         });
     }
 
-    // Four directions merged.
+    // Four directions merged: serial vs the pooled directional fan-out.
     {
         let x = Tensor::randn(&[1, 4, 64, 64], &mut rng, 1.0);
         let lam = Tensor::randn(&[1, 4, 64, 64], &mut rng, 1.0);
@@ -70,6 +93,10 @@ fn main() {
         let t_tb = Taps::normalize(&Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0));
         suite.bench("merged_4dir c4 64x64", || {
             black_box(merged_4dir(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0));
+        });
+        let pool = ThreadPool::global();
+        suite.bench("merged_4dir c4 64x64 (shared pool)", || {
+            black_box(merged_4dir_pool(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0, pool));
         });
     }
 

@@ -80,9 +80,20 @@ impl Batcher {
         self.policy.queue_cap == 0 || self.queued < self.policy.queue_cap
     }
 
-    pub fn enqueue(&mut self, bucket: Bucket, req: Request) {
-        self.queues.entry(bucket).or_default().push_back(req);
-        self.queued += 1;
+    /// Enqueue into a *registered* bucket. Unknown buckets hand the
+    /// request back as `Err` instead of silently creating a queue (the
+    /// old behaviour — such queues then fell back to a fabricated
+    /// artifact batch size of 1 in `pop_batch` and produced executions
+    /// against artifacts that do not exist).
+    pub fn enqueue(&mut self, bucket: Bucket, req: Request) -> Result<(), Request> {
+        match self.queues.get_mut(&bucket) {
+            Some(q) => {
+                q.push_back(req);
+                self.queued += 1;
+                Ok(())
+            }
+            None => Err(req),
+        }
     }
 
     /// Next deadline at which some queue becomes releasable by age (for
@@ -118,7 +129,11 @@ impl Batcher {
             if !(head_aged || full) {
                 continue;
             }
-            let sizes = self.batch_sizes.get(k).cloned().unwrap_or_else(|| vec![1]);
+            let sizes = self
+                .batch_sizes
+                .get(k)
+                .cloned()
+                .expect("every queued bucket was registered at enqueue");
             let want = q.len().min(self.policy.max_batch);
             // Largest artifact size <= want, else the smallest artifact
             // (padding case when want < min size).
@@ -198,7 +213,7 @@ mod tests {
         let mut b = mk_batcher(4, 10_000);
         let now = Instant::now();
         let (r, _rx) = req(1, 8, now);
-        b.enqueue(bucket(8), r);
+        b.enqueue(bucket(8), r).expect("registered");
         assert!(b.pop_batch(now).is_none());
     }
 
@@ -207,7 +222,7 @@ mod tests {
         let mut b = mk_batcher(4, 1_000);
         let t0 = Instant::now();
         let (r, _rx) = req(1, 8, t0);
-        b.enqueue(bucket(8), r);
+        b.enqueue(bucket(8), r).expect("registered");
         let later = t0 + Duration::from_micros(2_000);
         let (bk, fused, reqs) = b.pop_batch(later).expect("aged release");
         assert_eq!(bk, bucket(8));
@@ -223,7 +238,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..5 {
             let (r, rx) = req(i, 8, now);
-            b.enqueue(bucket(8), r);
+            b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
         let (_, fused, reqs) = b.pop_batch(now).expect("full release");
@@ -239,7 +254,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..3 {
             let (r, rx) = req(i, 8, now);
-            b.enqueue(bucket(8), r);
+            b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
         // 3 queued with artifacts {1,2,4} -> fuse 2, leave 1.
@@ -258,7 +273,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..10 {
             let (r, rx) = req(i, 8, now);
-            b.enqueue(bucket(8), r);
+            b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
         while let Some((_, _fused, reqs)) = b.pop_batch(now) {
@@ -276,7 +291,7 @@ mod tests {
         for i in 0..4 {
             let c = if i % 2 == 0 { 8 } else { 16 };
             let (r, rx) = req(i, c, now);
-            b.enqueue(bucket(c), r);
+            b.enqueue(bucket(c), r).expect("registered");
             rxs.push(rx);
         }
         let mut seen = Vec::new();
@@ -298,7 +313,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..16 {
             let (r, rx) = req(i, 8, now);
-            b.enqueue(bucket(8), r);
+            b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
         assert!(!b.has_capacity());
@@ -311,7 +326,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..4 {
             let (r, rx) = req(i, 8, now);
-            b.enqueue(bucket(8), r);
+            b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
         let (_, _, first) = b.pop_batch(now).unwrap();
@@ -321,12 +336,31 @@ mod tests {
     }
 
     #[test]
+    fn unknown_bucket_enqueue_is_rejected() {
+        let mut b = mk_batcher(4, 0);
+        let now = Instant::now();
+        // bucket(16) was never registered: the request comes back and
+        // nothing is queued (previously this silently created a queue
+        // that pop_batch served with a fabricated batch size of 1).
+        let (r, _rx) = req(1, 16, now);
+        let rejected = b.enqueue(bucket(16), r).unwrap_err();
+        assert_eq!(rejected.id, 1);
+        assert_eq!(b.queued(), 0);
+        assert!(b.pop_eager(now).is_none());
+        // After registration the same bucket is accepted.
+        b.register_bucket(bucket(16), vec![1]);
+        let (r, _rx2) = req(2, 16, now);
+        b.enqueue(bucket(16), r).expect("registered now");
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
     fn next_deadline_tracks_oldest_head() {
         let mut b = mk_batcher(4, 5_000);
         assert!(b.next_deadline().is_none());
         let t0 = Instant::now();
         let (r, _rx) = req(1, 8, t0);
-        b.enqueue(bucket(8), r);
+        b.enqueue(bucket(8), r).expect("registered");
         let d = b.next_deadline().unwrap();
         assert_eq!(d, t0 + Duration::from_micros(5_000));
     }

@@ -16,6 +16,6 @@ pub mod trace;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use request::{Bucket, Payload, Request, Response, SubmitError};
+pub use request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
 pub use server::Coordinator;
 pub use trace::{generate as generate_trace, TraceConfig, TraceEvent};

@@ -10,6 +10,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::runtime::Value;
+use crate::scan::kchunk_valid;
 use crate::Tensor;
 
 /// Scan-geometry bucket key.
@@ -45,6 +46,49 @@ pub enum Payload {
     Scan { x: Tensor, a_raw: Tensor, lam: Tensor },
     /// Direct execution of a named artifact (not batched).
     Direct { artifact: String, inputs: Vec<Value> },
+}
+
+/// Admission-time validation of a scan request's geometry. Rejecting
+/// here turns what used to be a worker-side panic (`scan_l2r`'s
+/// `assert!(w % kchunk == 0)`, or an HLO shape mismatch deep in PJRT)
+/// into a structured [`SubmitError::Invalid`] at the submit call.
+pub fn validate_scan_shapes(
+    x: &Tensor,
+    a_raw: &Tensor,
+    lam: &Tensor,
+    kchunk: usize,
+) -> Result<(), String> {
+    if x.rank() != 4 {
+        return Err(format!("x must be (1, C, H, W), got rank {}", x.rank()));
+    }
+    if x.shape[0] != 1 {
+        return Err(format!("scan requests are single-sample: N must be 1, got {}", x.shape[0]));
+    }
+    if lam.shape != x.shape {
+        return Err(format!("lam shape {:?} must match x shape {:?}", lam.shape, x.shape));
+    }
+    let (c, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
+    if c == 0 || h == 0 || w == 0 {
+        // Degenerate geometry: W=0 in particular would reach the
+        // `w % chunk` remainder in the scan with a zero divisor.
+        return Err(format!("x dims must be non-zero, got (1, {c}, {h}, {w})"));
+    }
+    if a_raw.rank() != 5 || a_raw.shape[0] != 1 || a_raw.shape[2] != 3 {
+        return Err(format!("a_raw must be (1, Cw, 3, H, W), got {:?}", a_raw.shape));
+    }
+    if a_raw.shape[3] != h || a_raw.shape[4] != w {
+        return Err(format!(
+            "a_raw spatial dims {:?} must match x ({h}, {w})",
+            &a_raw.shape[3..]
+        ));
+    }
+    if a_raw.shape[1] != 1 && a_raw.shape[1] != c {
+        return Err(format!("a_raw Cw={} must be 1 or C={c}", a_raw.shape[1]));
+    }
+    if !kchunk_valid(w, kchunk) {
+        return Err(format!("kchunk={kchunk} must be 0 or divide W={w}"));
+    }
+    Ok(())
 }
 
 impl Payload {
@@ -93,6 +137,8 @@ pub enum SubmitError {
     Closed,
     /// No compiled artifact covers this request's geometry.
     UnknownBucket(String),
+    /// Malformed request (bad shapes or kchunk), rejected at admission.
+    Invalid(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -101,6 +147,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
             SubmitError::Closed => write!(f, "coordinator closed"),
             SubmitError::UnknownBucket(b) => write!(f, "no artifact for bucket {b}"),
+            SubmitError::Invalid(why) => write!(f, "invalid request: {why}"),
         }
     }
 }
@@ -142,5 +189,68 @@ mod tests {
     fn direct_has_no_bucket() {
         let p = Payload::Direct { artifact: "classifier_fwd_b8".into(), inputs: vec![] };
         assert!(p.bucket(0).is_none());
+    }
+
+    #[test]
+    fn admission_validation_accepts_good_requests() {
+        let x = Tensor::zeros(&[1, 8, 64, 64]);
+        let a = Tensor::zeros(&[1, 1, 3, 64, 64]);
+        let lam = Tensor::zeros(&[1, 8, 64, 64]);
+        assert!(validate_scan_shapes(&x, &a, &lam, 0).is_ok());
+        assert!(validate_scan_shapes(&x, &a, &lam, 16).is_ok());
+        let apc = Tensor::zeros(&[1, 8, 3, 64, 64]);
+        assert!(validate_scan_shapes(&x, &apc, &lam, 0).is_ok());
+    }
+
+    #[test]
+    fn admission_validation_rejects_bad_kchunk() {
+        // W=64, kchunk=7: the old path panicked a serving worker inside
+        // scan_l2r; admission must reject instead.
+        let x = Tensor::zeros(&[1, 8, 64, 64]);
+        let a = Tensor::zeros(&[1, 1, 3, 64, 64]);
+        let lam = Tensor::zeros(&[1, 8, 64, 64]);
+        let err = validate_scan_shapes(&x, &a, &lam, 7).unwrap_err();
+        assert!(err.contains("kchunk"), "{err}");
+        assert!(validate_scan_shapes(&x, &a, &lam, 128).is_err());
+    }
+
+    #[test]
+    fn admission_validation_rejects_degenerate_dims() {
+        // W=0 would hit a zero-divisor remainder inside scan_l2r.
+        let x = Tensor::zeros(&[1, 8, 64, 0]);
+        let a = Tensor::zeros(&[1, 1, 3, 64, 0]);
+        let lam = Tensor::zeros(&[1, 8, 64, 0]);
+        let err = validate_scan_shapes(&x, &a, &lam, 0).unwrap_err();
+        assert!(err.contains("non-zero"), "{err}");
+        assert!(validate_scan_shapes(
+            &Tensor::zeros(&[1, 8, 0, 64]),
+            &Tensor::zeros(&[1, 1, 3, 0, 64]),
+            &Tensor::zeros(&[1, 8, 0, 64]),
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn admission_validation_rejects_bad_shapes() {
+        let x = Tensor::zeros(&[1, 8, 64, 64]);
+        let a = Tensor::zeros(&[1, 1, 3, 64, 64]);
+        let lam = Tensor::zeros(&[1, 8, 64, 64]);
+        // Wrong rank.
+        assert!(validate_scan_shapes(&Tensor::zeros(&[8, 64, 64]), &a, &lam, 0).is_err());
+        // Batched payload (N must be 1 at submit).
+        assert!(validate_scan_shapes(&Tensor::zeros(&[2, 8, 64, 64]), &a, &lam, 0).is_err());
+        // lam mismatch.
+        assert!(validate_scan_shapes(&x, &a, &Tensor::zeros(&[1, 8, 64, 32]), 0).is_err());
+        // a_raw wrong tap count / spatial dims / Cw.
+        assert!(validate_scan_shapes(&x, &Tensor::zeros(&[1, 1, 2, 64, 64]), &lam, 0).is_err());
+        assert!(validate_scan_shapes(&x, &Tensor::zeros(&[1, 1, 3, 32, 64]), &lam, 0).is_err());
+        assert!(validate_scan_shapes(&x, &Tensor::zeros(&[1, 4, 3, 64, 64]), &lam, 0).is_err());
+    }
+
+    #[test]
+    fn invalid_submit_error_displays_reason() {
+        let e = SubmitError::Invalid("kchunk=7 must be 0 or divide W=64".into());
+        assert!(e.to_string().contains("kchunk=7"));
     }
 }

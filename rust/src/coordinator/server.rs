@@ -4,8 +4,16 @@
 //! Shape: a vLLM-router-like front end for GSPN inference. Clients call
 //! `submit_scan` (single-sample scan requests, fused into batched
 //! executables) or `submit_direct` (whole-artifact calls). Each worker
-//! thread owns its own `Engine` (the xla wrapper types are not `Send`);
-//! the shared state is only the batcher, the direct queue, and metrics.
+//! thread owns its own `Engine` (the xla wrapper types are not `Send`,
+//! so executor workers must stay dedicated OS threads); the shared state
+//! is only the batcher, the direct queue, and metrics.
+//!
+//! CPU-side work on the serving path (fused-batch input assembly) runs
+//! on the process-wide [`ThreadPool::global`] — the same substrate the
+//! scan reference and the benches use — never on ad-hoc threads.
+//! Requests are validated at admission via `validate_scan_shapes`: a
+//! malformed shape or kchunk comes back as [`SubmitError::Invalid`]
+//! instead of panicking an executor.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -18,11 +26,11 @@ use anyhow::anyhow;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{Bucket, Payload, Request, Response, SubmitError};
+use super::request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
 use crate::tensor::{concat_axis0, split_axis0};
-use crate::util::logging;
+use crate::util::{logging, ThreadPool};
 use crate::Tensor;
 
 struct Shared {
@@ -105,6 +113,13 @@ impl Coordinator {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::Closed);
         }
+        // Admission validation: reject malformed geometry with a
+        // structured error here rather than panicking a worker later
+        // (e.g. scan_l2r's kchunk-divides-W assert).
+        if let Err(why) = validate_scan_shapes(&x, &a_raw, &lam, kchunk) {
+            self.shared.metrics.lock().unwrap().record_rejection();
+            return Err(SubmitError::Invalid(why));
+        }
         let payload = Payload::Scan { x, a_raw, lam };
         let bucket = payload.bucket(kchunk).expect("scan payload");
         let (tx, rx) = mpsc::channel();
@@ -125,7 +140,13 @@ impl Coordinator {
                 arrived: Instant::now(),
                 reply: tx,
             };
-            b.enqueue(bucket, req);
+            if b.enqueue(bucket.clone(), req).is_err() {
+                // Unreachable while the known_bucket check above holds
+                // (same lock), but the batcher no longer auto-creates
+                // queues — surface it as the structured rejection.
+                self.shared.metrics.lock().unwrap().record_rejection();
+                return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
+            }
         }
         self.shared.work_ready.notify_one();
         Ok(rx)
@@ -333,11 +354,34 @@ fn run_scan_batch(
     if pad > 0 {
         sh.metrics.lock().unwrap().record_padding(pad);
     }
-    let inputs = vec![
-        Value::F32(concat_axis0(&xs)),
-        Value::F32(concat_axis0(&avs)),
-        Value::F32(concat_axis0(&lams)),
-    ];
+    // Intra-batch parallelism on the shared pool: the three fused input
+    // concats are independent memcpy-bound jobs (~hundreds of KB each at
+    // the 64^2 c8 bucket), and the executor threads must not spawn
+    // ad-hoc threads for them. Small batches concat inline instead —
+    // the pool dispatch costs more than a short memcpy. (The pool's
+    // helping wait only ever runs this call's own jobs, so the executor
+    // cannot be stalled by a stranger's queued work either way.)
+    const POOL_CONCAT_MIN_ELEMS: usize = 1 << 16;
+    let fused_elems: usize = xs
+        .iter()
+        .chain(avs.iter())
+        .chain(lams.iter())
+        .map(|t| t.len())
+        .sum();
+    let inputs = if fused_elems < POOL_CONCAT_MIN_ELEMS {
+        vec![
+            Value::F32(concat_axis0(&xs)),
+            Value::F32(concat_axis0(&avs)),
+            Value::F32(concat_axis0(&lams)),
+        ]
+    } else {
+        let groups: Vec<&[&Tensor]> = vec![&xs, &avs, &lams];
+        let mut fusedt = ThreadPool::global().map(groups, concat_axis0);
+        let lam_in = fusedt.pop().expect("three fused inputs");
+        let av_in = fusedt.pop().expect("three fused inputs");
+        let x_in = fusedt.pop().expect("three fused inputs");
+        vec![Value::F32(x_in), Value::F32(av_in), Value::F32(lam_in)]
+    };
 
     let result = engine.run(&artifact, &inputs);
     let exec_ns = t0.elapsed().as_nanos() as u64;

@@ -5,6 +5,15 @@
 //! DESIGN.md §4); this module loads those artifacts, compiles them once
 //! per process on the PJRT CPU client, and executes them from the
 //! serving / training hot paths with zero Python involvement.
+//!
+//! Threading model: the `xla` wrapper types hold raw pointers and are
+//! not `Send`, so an [`Engine`] is pinned to the OS thread that created
+//! it (the coordinator gives each executor worker its own engine). The
+//! shared [`crate::util::ThreadPool`] is therefore used only for
+//! host-side tensor work around the engine, never for engine calls.
+//! In offline builds `xla` resolves to the in-tree stub
+//! (`rust/vendor/xla`): host-side literals work, `PjRtClient::cpu`
+//! errors, and artifact-gated tests skip.
 
 pub mod engine;
 pub mod manifest;

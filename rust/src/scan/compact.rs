@@ -15,7 +15,7 @@
 use super::direction::{from_canonical, to_canonical, DIRECTIONS};
 use super::taps::Taps;
 use crate::tensor::Tensor;
-use crate::util::Rng;
+use crate::util::{Rng, ThreadPool};
 
 /// Pointwise (1x1) channel projection: weight (Cout, Cin), bias (Cout).
 #[derive(Clone, Debug)]
@@ -111,32 +111,35 @@ impl CompactGspnUnit {
         assert_eq!(x.shape[1], self.c);
         let xp = self.down.apply(x);
         let cw = if self.per_channel { self.c_proxy } else { 1 };
+        let pool = ThreadPool::global();
 
-        // Taps per direction, computed in canonical orientation.
-        let mut taps: Vec<Taps> = Vec::with_capacity(4);
-        for (k, d) in DIRECTIONS.iter().enumerate() {
-            let xc = to_canonical(&xp, *d);
+        // The four directional passes are independent end to end (taps
+        // projection, lam projection, scan): run each as a job on the
+        // shared pool, with the scan's plane loop nested into the same
+        // pool. Per-direction arithmetic is untouched and the merge below
+        // accumulates in direction order, so this is bit-identical to the
+        // old serial loop.
+        //
+        // Lambda per direction must follow canonical orientation: the
+        // merged_4dir helper reorients lam internally from the *spatial*
+        // layout, so we produce lam in canonical layout per direction and
+        // run each direction separately here (lam differs per direction).
+        let ys = pool.map((0..4usize).collect(), |k| {
+            let d = DIRECTIONS[k];
+            let xc = to_canonical(&xp, d);
             let raw = self.taps_proj[k].apply(&xc); // (N, 3*cw, Hc, Wc)
             let (n, _, hc, wc) = (raw.shape[0], raw.shape[1], raw.shape[2], raw.shape[3]);
-            taps.push(Taps::normalize(&raw.reshape(&[n, cw, 3, hc, wc])));
-        }
-
-        // Lambda per direction must also follow canonical orientation: the
-        // merged_4dir helper reorients lam internally from the *spatial*
-        // layout, so we produce lam in spatial layout per direction and run
-        // each direction separately here (lam differs per direction).
-        let mx = self.merge.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let exps: Vec<f32> = self.merge.iter().map(|&l| (l - mx).exp()).collect();
-        let z: f32 = exps.iter().sum();
-        let mut merged = Tensor::zeros(&xp.shape);
-        for (k, d) in DIRECTIONS.iter().enumerate() {
-            let xc = to_canonical(&xp, *d);
+            let taps = Taps::normalize(&raw.reshape(&[n, cw, 3, hc, wc]));
             let lamc = self.lam_proj[k].apply(&xc);
-            let hc = super::core::scan_l2r(&xc, &taps[k], &lamc, self.kchunk);
-            let y = from_canonical(&hc, *d);
-            let wk = exps[k] / z;
+            let hc = super::core::scan_l2r_pool(&xc, &taps, &lamc, self.kchunk, pool);
+            from_canonical(&hc, d)
+        });
+
+        let wts = super::direction::merge_weights(&self.merge);
+        let mut merged = Tensor::zeros(&xp.shape);
+        for (k, y) in ys.iter().enumerate() {
             for (o, v) in merged.data.iter_mut().zip(&y.data) {
-                *o += wk * v;
+                *o += wts[k] * v;
             }
         }
 

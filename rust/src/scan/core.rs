@@ -9,12 +9,26 @@
 //! boundaries. This is the numerical ground truth the PJRT artifacts are
 //! integration-tested against, and the workload whose memory/launch
 //! behaviour `gpusim` models.
+//!
+//! The (N·C) plane loop is embarrassingly parallel; `scan_l2r_pool` /
+//! `scan_l2r_par` fan it out over the shared [`ThreadPool`] while staying
+//! bit-identical to the serial `scan_l2r` (planes share no accumulators,
+//! so nothing reassociates).
 
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
+use crate::util::ThreadPool;
 
-/// Forward scan. `x`, `lam`: (N, C, H, W); returns h with the same shape.
-pub fn scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+/// A kchunk is valid for width `w` when it is 0 (global scan) or divides
+/// `w` exactly. The serving coordinator checks this at admission so a bad
+/// request is rejected with a structured error instead of panicking a
+/// worker on the assert below.
+pub fn kchunk_valid(w: usize, kchunk: usize) -> bool {
+    kchunk == 0 || (kchunk <= w && w % kchunk == 0)
+}
+
+/// Shared shape validation; returns the effective chunk width.
+fn validate_scan_args(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> usize {
     assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
     assert_eq!(x.shape, lam.shape, "lam shape must match x");
     let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
@@ -22,47 +36,115 @@ pub fn scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor 
     assert!(taps.cw == 1 || taps.cw == c, "Cw must be 1 or C");
     let chunk = if kchunk == 0 { w } else { kchunk };
     assert!(w % chunk == 0, "kchunk={chunk} must divide W={w}");
+    chunk
+}
 
-    let mut out = Tensor::zeros(&x.shape);
+/// Reusable per-plane scratch (the two h-length state columns). The
+/// serial loop reuses one across all planes, as the pre-refactor code
+/// did; each pooled job owns its own. Contents need no zeroing between
+/// planes: the `i % chunk == 0` reset fires on column 0.
+struct PlaneScratch {
+    hprev: Vec<f32>,
+    hcur: Vec<f32>,
+}
+
+impl PlaneScratch {
+    fn new(h: usize) -> PlaneScratch {
+        PlaneScratch { hprev: vec![0.0f32; h], hcur: vec![0.0f32; h] }
+    }
+}
+
+/// Scan one (ni, ci) plane of the recurrence into `os`, the plane's
+/// output slice. Extracted from `scan_l2r` so the serial loop and the
+/// pool-parallel fan-out run the *identical* per-plane code — plane-level
+/// parallelism reassociates nothing, so the two paths are bit-identical.
+fn scan_plane(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    ni: usize,
+    ci: usize,
+    chunk: usize,
+    os: &mut [f32],
+    scratch: &mut PlaneScratch,
+) {
+    let (c, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
     let plane = h * w;
     let tap_plane = h * w;
-    let mut hprev = vec![0.0f32; h];
-    let mut hcur = vec![0.0f32; h];
-
-    for ni in 0..n {
-        for ci in 0..c {
-            let cw = if taps.cw == 1 { 0 } else { ci };
-            let xbase = (ni * c + ci) * plane;
-            let tbase = (ni * taps.cw + cw) * 3 * tap_plane;
-            // Hoisted tap-plane slices: keeps the inner loop free of
-            // re-derived base offsets and lets bounds checks vanish
-            // (EXPERIMENTS.md §Perf, L3 iteration 4).
-            let t_up = &taps.t.data[tbase + TAP_UP * tap_plane..tbase + TAP_UP * tap_plane + tap_plane];
-            let t_ct = &taps.t.data
-                [tbase + TAP_CENTER * tap_plane..tbase + TAP_CENTER * tap_plane + tap_plane];
-            let t_dn = &taps.t.data
-                [tbase + TAP_DOWN * tap_plane..tbase + TAP_DOWN * tap_plane + tap_plane];
-            let xs = &x.data[xbase..xbase + plane];
-            let ls = &lam.data[xbase..xbase + plane];
-            let os = &mut out.data[xbase..xbase + plane];
+    let cw = if taps.cw == 1 { 0 } else { ci };
+    let xbase = (ni * c + ci) * plane;
+    let tbase = (ni * taps.cw + cw) * 3 * tap_plane;
+    // Hoisted tap-plane slices: keeps the inner loop free of
+    // re-derived base offsets and lets bounds checks vanish
+    // (EXPERIMENTS.md §Perf, L3 iteration 4).
+    let t_up = &taps.t.data[tbase + TAP_UP * tap_plane..tbase + TAP_UP * tap_plane + tap_plane];
+    let t_ct = &taps.t.data
+        [tbase + TAP_CENTER * tap_plane..tbase + TAP_CENTER * tap_plane + tap_plane];
+    let t_dn = &taps.t.data
+        [tbase + TAP_DOWN * tap_plane..tbase + TAP_DOWN * tap_plane + tap_plane];
+    let xs = &x.data[xbase..xbase + plane];
+    let ls = &lam.data[xbase..xbase + plane];
+    let PlaneScratch { hprev, hcur } = scratch;
+    for i in 0..w {
+        if i % chunk == 0 {
             hprev.iter_mut().for_each(|v| *v = 0.0);
-            for i in 0..w {
-                if i % chunk == 0 {
-                    hprev.iter_mut().for_each(|v| *v = 0.0);
-                }
-                for r in 0..h {
-                    let p = r * w + i;
-                    let up = if r > 0 { t_up[p] * hprev[r - 1] } else { 0.0 };
-                    let ct = t_ct[p] * hprev[r];
-                    let dn = if r + 1 < h { t_dn[p] * hprev[r + 1] } else { 0.0 };
-                    hcur[r] = up + ct + dn + ls[p] * xs[p];
-                    os[p] = hcur[r];
-                }
-                std::mem::swap(&mut hprev, &mut hcur);
-            }
         }
+        for r in 0..h {
+            let p = r * w + i;
+            let up = if r > 0 { t_up[p] * hprev[r - 1] } else { 0.0 };
+            let ct = t_ct[p] * hprev[r];
+            let dn = if r + 1 < h { t_dn[p] * hprev[r + 1] } else { 0.0 };
+            hcur[r] = up + ct + dn + ls[p] * xs[p];
+            os[p] = hcur[r];
+        }
+        std::mem::swap(hprev, hcur);
+    }
+}
+
+/// Forward scan. `x`, `lam`: (N, C, H, W); returns h with the same shape.
+pub fn scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    let chunk = validate_scan_args(x, taps, lam, kchunk);
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&x.shape);
+    let plane = h * w;
+    if n * c == 0 || plane == 0 {
+        return out;
+    }
+    let mut scratch = PlaneScratch::new(h);
+    for (p, os) in out.data.chunks_mut(plane).enumerate() {
+        scan_plane(x, taps, lam, p / c, p % c, chunk, os, &mut scratch);
     }
     out
+}
+
+/// `scan_l2r` with the (N·C) plane loop fanned out over a shared thread
+/// pool. Bit-identical to the serial path: each plane runs the same
+/// `scan_plane` kernel, and planes never share accumulators.
+pub fn scan_l2r_pool(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let chunk = validate_scan_args(x, taps, lam, kchunk);
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&x.shape);
+    let plane = h * w;
+    if n * c == 0 || plane == 0 {
+        return out;
+    }
+    let planes: Vec<(usize, &mut [f32])> = out.data.chunks_mut(plane).enumerate().collect();
+    pool.map(planes, |(p, os)| {
+        let mut scratch = PlaneScratch::new(h);
+        scan_plane(x, taps, lam, p / c, p % c, chunk, os, &mut scratch)
+    });
+    out
+}
+
+/// `scan_l2r` over the process-wide shared pool ([`ThreadPool::global`]).
+pub fn scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    scan_l2r_pool(x, taps, lam, kchunk, ThreadPool::global())
 }
 
 /// Output modulation of Eq. 2: y = u ⊙ h with per-channel gain u (C,).
@@ -258,5 +340,40 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(scan_flops(2, 4, 8, 16), 7 * 2 * 4 * 8 * 16);
+    }
+
+    #[test]
+    fn kchunk_validation() {
+        assert!(kchunk_valid(64, 0));
+        assert!(kchunk_valid(64, 16));
+        assert!(kchunk_valid(64, 64));
+        assert!(!kchunk_valid(64, 3));
+        assert!(!kchunk_valid(64, 128));
+        assert!(kchunk_valid(1, 1));
+    }
+
+    #[test]
+    fn pool_scan_is_bit_identical_to_serial() {
+        // Plane-level parallelism must not change a single bit: compare
+        // with exact equality, not allclose.
+        let pool = crate::util::ThreadPool::new(4);
+        for (seed, n, c, h, w, cw) in
+            [(20, 2, 3, 8, 12, 3), (21, 1, 1, 5, 7, 1), (22, 3, 4, 16, 16, 1)]
+        {
+            let (x, taps, lam) = case(seed, n, c, h, w, cw);
+            for kchunk in [0, w] {
+                let serial = scan_l2r(&x, &taps, &lam, kchunk);
+                let pooled = scan_l2r_pool(&x, &taps, &lam, kchunk, &pool);
+                assert_eq!(serial.data, pooled.data, "n{n} c{c} {h}x{w} k{kchunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_scan_matches_serial() {
+        let (x, taps, lam) = case(23, 2, 4, 6, 8, 1);
+        let serial = scan_l2r(&x, &taps, &lam, 4);
+        let pooled = scan_l2r_par(&x, &taps, &lam, 4);
+        assert_eq!(serial.data, pooled.data);
     }
 }

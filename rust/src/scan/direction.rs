@@ -7,9 +7,10 @@
 //! pairwise connectivity across the grid (the paper's full-context claim);
 //! `merged_4dir` applies a learned convex combination over directions.
 
-use super::core::scan_l2r;
+use super::core::{scan_l2r, scan_l2r_pool};
 use super::taps::Taps;
 use crate::tensor::Tensor;
+use crate::util::ThreadPool;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
@@ -78,6 +79,15 @@ pub fn scan_dir(
     from_canonical(&h, d)
 }
 
+/// Softmax of the merge logits (shared by the serial path, the pooled
+/// path, and [`super::compact`] so every merge stays bit-identical).
+pub(crate) fn merge_weights(merge_logits: &[f32; 4]) -> [f32; 4] {
+    let mx = merge_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: [f32; 4] = std::array::from_fn(|k| (merge_logits[k] - mx).exp());
+    let z: f32 = exps.iter().sum();
+    std::array::from_fn(|k| exps[k] / z)
+}
+
 /// Four directional scans merged by convex weights (softmaxed logits).
 pub fn merged_4dir(
     x: &Tensor,
@@ -86,18 +96,57 @@ pub fn merged_4dir(
     merge_logits: &[f32; 4],
     kchunk: usize,
 ) -> Tensor {
-    let mx = merge_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = merge_logits.iter().map(|&l| (l - mx).exp()).collect();
-    let z: f32 = exps.iter().sum();
+    let wts = merge_weights(merge_logits);
     let mut out = Tensor::zeros(&x.shape);
     for (k, d) in DIRECTIONS.iter().enumerate() {
         let y = scan_dir(x, taps[k], lam, *d, kchunk);
-        let wk = exps[k] / z;
         for (o, v) in out.data.iter_mut().zip(&y.data) {
-            *o += wk * v;
+            *o += wts[k] * v;
         }
     }
     out
+}
+
+/// [`merged_4dir`] with the four directional passes submitted to a
+/// shared pool, each pass additionally fanning its plane loop into the
+/// same pool (nested submission is safe: the pool's helping wait drains
+/// nested jobs, even on a 1-thread pool). Bit-identical to the serial
+/// path — per-direction results are unchanged and the weighted
+/// accumulation runs in the same direction order on the caller.
+pub fn merged_4dir_pool(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let wts = merge_weights(merge_logits);
+    let ys = pool.map((0..4usize).collect(), |k| {
+        let d = DIRECTIONS[k];
+        let xc = to_canonical(x, d);
+        let lamc = to_canonical(lam, d);
+        let h = scan_l2r_pool(&xc, taps[k], &lamc, kchunk, pool);
+        from_canonical(&h, d)
+    });
+    let mut out = Tensor::zeros(&x.shape);
+    for (k, y) in ys.iter().enumerate() {
+        for (o, v) in out.data.iter_mut().zip(&y.data) {
+            *o += wts[k] * v;
+        }
+    }
+    out
+}
+
+/// [`merged_4dir`] over the process-wide shared pool.
+pub fn merged_4dir_par(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    merged_4dir_pool(x, taps, lam, merge_logits, kchunk, ThreadPool::global())
 }
 
 #[cfg(test)]
@@ -215,6 +264,26 @@ mod tests {
                 "corner ({r},{c}) unreached"
             );
         }
+    }
+
+    #[test]
+    fn merged_pool_is_bit_identical_to_serial() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(17);
+        let x = Tensor::randn(&[2, 3, 6, 7], &mut rng, 1.0);
+        let lam = Tensor::randn(&[2, 3, 6, 7], &mut rng, 1.0);
+        let raw_lr = Tensor::randn(&[2, 1, 3, 6, 7], &mut rng, 1.0);
+        let raw_tb = Tensor::randn(&[2, 1, 3, 7, 6], &mut rng, 1.0);
+        let t_lr = Taps::normalize(&raw_lr);
+        let t_tb = Taps::normalize(&raw_tb);
+        let tr = [&t_lr, &t_lr, &t_tb, &t_tb];
+        let logits = [0.4f32, -0.2, 1.1, 0.0];
+        let serial = merged_4dir(&x, tr, &lam, &logits, 0);
+        let pooled = merged_4dir_pool(&x, tr, &lam, &logits, 0, &pool);
+        assert_eq!(serial.data, pooled.data);
+        // And through the global pool (the serving/model path).
+        let global = merged_4dir_par(&x, tr, &lam, &logits, 0);
+        assert_eq!(serial.data, global.data);
     }
 
     #[test]

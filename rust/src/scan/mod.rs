@@ -13,6 +13,13 @@
 //! This module is the numerical ground truth for the PJRT artifacts
 //! (integration tests compare both) and the workload description that
 //! `crate::gpusim` costs out.
+//!
+//! CPU parallelism: every parallel entry point (`scan_l2r_pool`/`_par`,
+//! `merged_4dir_pool`/`_par`, `scan_l2r_split` with `threads > 1`)
+//! submits to the shared [`crate::util::ThreadPool`] — nothing in this
+//! module spawns ad-hoc OS threads per call. Plane-level fan-out is
+//! bit-identical to the serial reference; only the segment decomposition
+//! of [`split`] reassociates (and is tested to 1e-4 against sequential).
 
 pub mod compact;
 pub mod core;
@@ -22,8 +29,11 @@ pub mod split;
 pub mod taps;
 
 pub use compact::{CompactGspnUnit, Proj};
-pub use core::{output_modulation, scan_flops, scan_l2r};
-pub use direction::{from_canonical, merged_4dir, scan_dir, to_canonical, Direction, DIRECTIONS};
+pub use core::{kchunk_valid, output_modulation, scan_flops, scan_l2r, scan_l2r_par, scan_l2r_pool};
+pub use direction::{
+    from_canonical, merged_4dir, merged_4dir_par, merged_4dir_pool, scan_dir, to_canonical,
+    Direction, DIRECTIONS,
+};
 pub use gmatrix::{attention_map, expand_g};
-pub use split::{scan_l2r_split, segment_transfer, Banded};
+pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};
 pub use taps::Taps;

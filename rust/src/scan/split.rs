@@ -27,9 +27,16 @@
 //! still wins in the low-occupancy regime, while this CPU reference uses
 //! the carry-only form. EXPERIMENTS.md §Perf records the measured
 //! crossover (the operator form was 4-30x *slower* on CPU).
+//!
+//! Parallel execution submits phase-1 (segment × plane) and phase-2
+//! (plane) tasks to the process-wide shared [`ThreadPool`] — the scoped
+//! per-call `std::thread` spawns this module used to do are gone, so a
+//! serving worker calling in at request rate pays zero thread-creation
+//! cost and the whole process keeps exactly one worker set.
 
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
+use crate::util::ThreadPool;
 
 /// A square banded matrix of size `h` with half-bandwidth `hb`, stored
 /// row-major as `h` rows of `2*hb + 1` in-band entries. Entry `(r, c)` is
@@ -229,15 +236,42 @@ pub fn segment_transfer(taps: &Taps, ni: usize, cw: usize, lo: usize, hi: usize)
 /// Segment-parallel global scan; numerically equivalent to
 /// [`super::scan_l2r`] with `kchunk = 0` (up to fp reassociation).
 ///
-/// `segments` is the decomposition degree (clamped to W); `threads > 1`
-/// runs phase 1 across segments x planes and phase 2 across planes on
-/// scoped worker threads.
+/// `segments` is the decomposition degree (clamped to W). `threads <= 1`
+/// runs inline on the calling thread; `threads > 1` submits at most
+/// `threads` jobs for phase 1 (segments × planes) and phase 2 (planes)
+/// to the process-wide shared [`ThreadPool`] — no per-call thread
+/// spawns, and `threads` still bounds this call's parallelism even when
+/// the pool is wider.
 pub fn scan_l2r_split(
     x: &Tensor,
     taps: &Taps,
     lam: &Tensor,
     segments: usize,
     threads: usize,
+) -> Tensor {
+    let par = if threads > 1 { Some((ThreadPool::global(), threads)) } else { None };
+    scan_l2r_split_impl(x, taps, lam, segments, par)
+}
+
+/// [`scan_l2r_split`] over an explicit pool handle (tests and callers
+/// that manage their own pool); fans out one job per task, so the
+/// pool's worker count is the parallelism bound.
+pub fn scan_l2r_split_pool(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    scan_l2r_split_impl(x, taps, lam, segments, Some((pool, usize::MAX)))
+}
+
+fn scan_l2r_split_impl(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    segments: usize,
+    par: Option<(&ThreadPool, usize)>,
 ) -> Tensor {
     assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
     assert_eq!(x.shape, lam.shape, "lam shape must match x");
@@ -250,57 +284,58 @@ pub fn scan_l2r_split(
         (0..w).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(w))).collect();
     let n_segs = bounds.len();
 
-    // Phase 1: all (plane, segment) tasks are independent.
-    let tasks: Vec<(usize, usize, usize)> = (0..n * c)
-        .flat_map(|p| (0..n_segs).map(move |s| (p / c, p % c, s)))
-        .collect();
-    let run1 = |&(ni, ci, s): &(usize, usize, usize)| {
+    // Phase 1: all (plane, segment) tasks are independent. Task t covers
+    // plane t / n_segs, segment t % n_segs; the pooled path groups the
+    // task range into at most `cap` contiguous jobs so the caller's
+    // thread budget is respected.
+    let n_tasks = n * c * n_segs;
+    let run_task = |t: usize| {
+        let (p, s) = (t / n_segs, t % n_segs);
         let (lo, hi) = bounds[s];
-        phase1(x, taps, lam, ni, ci, lo, hi)
+        phase1(x, taps, lam, p / c, p % c, lo, hi)
     };
-    let workers = threads.max(1).min(tasks.len().max(1));
-    let mut scans: Vec<SegScan> = if workers > 1 {
-        let chunk = tasks.len().div_ceil(workers);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = tasks
-                .chunks(chunk)
-                .map(|part| scope.spawn(move || part.iter().map(run1).collect::<Vec<_>>()))
+    let mut scans: Vec<SegScan> = match par {
+        Some((pool, cap)) if n_tasks > 1 && cap > 1 => {
+            let per = n_tasks.div_ceil(cap.min(n_tasks));
+            let ranges: Vec<(usize, usize)> = (0..n_tasks)
+                .step_by(per)
+                .map(|lo| (lo, (lo + per).min(n_tasks)))
                 .collect();
-            handles.into_iter().flat_map(|j| j.join().expect("phase-1 worker")).collect()
-        })
-    } else {
-        tasks.iter().map(run1).collect()
+            pool.map(ranges, |(lo, hi)| (lo..hi).map(run_task).collect::<Vec<_>>())
+                .into_iter()
+                .flatten()
+                .collect()
+        }
+        _ => (0..n_tasks).map(run_task).collect(),
     };
 
-    // Phase 2: per-plane carry + correction pass (planes independent).
-    {
-        let planes: Vec<(usize, &mut [SegScan])> =
-            scans.chunks_mut(n_segs).enumerate().collect();
-        let run2 = |(p, segs): &mut (usize, &mut [SegScan])| {
-            phase2_plane(segs, &bounds, taps, *p / c, *p % c);
-        };
-        let pw = threads.max(1).min(planes.len().max(1));
-        if pw > 1 {
-            let mut planes = planes;
-            let chunk = planes.len().div_ceil(pw);
-            std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for part in planes.chunks_mut(chunk) {
-                    handles.push(scope.spawn(move || part.iter_mut().for_each(run2)));
-                }
-                for j in handles {
-                    j.join().expect("phase-2 worker");
+    // Phase 2: per-plane carry + correction pass (planes independent),
+    // again grouped into at most `cap` jobs.
+    match par {
+        Some((pool, cap)) if n * c > 1 && cap > 1 => {
+            let per = (n * c).div_ceil(cap.min(n * c));
+            let groups: Vec<(usize, &mut [SegScan])> =
+                scans.chunks_mut(per * n_segs).enumerate().collect();
+            pool.map(groups, |(g, group)| {
+                for (j, segs) in group.chunks_mut(n_segs).enumerate() {
+                    let p = g * per + j;
+                    phase2_plane(segs, &bounds, taps, p / c, p % c);
                 }
             });
-        } else {
-            planes.into_iter().for_each(|mut pl| run2(&mut pl));
+        }
+        _ => {
+            for (p, segs) in scans.chunks_mut(n_segs).enumerate() {
+                phase2_plane(segs, &bounds, taps, p / c, p % c);
+            }
         }
     }
 
-    // Assemble (N, C, H, W).
+    // Assemble (N, C, H, W). Task t covered plane t / n_segs, segment
+    // t % n_segs (the phase-1 task order).
     let mut out = Tensor::zeros(&x.shape);
     for (t, sc) in scans.iter().enumerate() {
-        let (ni, ci, s) = tasks[t];
+        let (p, s) = (t / n_segs, t % n_segs);
+        let (ni, ci) = (p / c, p % c);
         let (lo, hi) = bounds[s];
         let seg = hi - lo;
         let obase = (ni * c + ci) * h * w;
@@ -426,10 +461,22 @@ mod tests {
 
     #[test]
     fn split_threaded_matches_inline() {
+        // threads > 1 now routes through the shared global pool.
         let (x, taps, lam) = case(2, 2, 2, 16, 32, 1);
         let a = scan_l2r_split(&x, &taps, &lam, 8, 4);
         let b = scan_l2r_split(&x, &taps, &lam, 8, 1);
         assert!(a.allclose(&b, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn split_explicit_pool_is_bit_identical_to_inline() {
+        // Same segmentation, pooled vs inline: the per-task arithmetic is
+        // identical, so this is exact equality (not just allclose).
+        let pool = crate::util::ThreadPool::new(3);
+        let (x, taps, lam) = case(12, 2, 3, 8, 24, 1);
+        let inline = scan_l2r_split(&x, &taps, &lam, 6, 1);
+        let pooled = scan_l2r_split_pool(&x, &taps, &lam, 6, &pool);
+        assert_eq!(inline.data, pooled.data);
     }
 
     #[test]

@@ -1,30 +1,155 @@
-//! A small fixed-size thread pool with a shared FIFO queue.
+//! The process-wide parallelism substrate: a fixed-size thread pool with
+//! a shared FIFO queue, safe concurrent fork-join, and work-helping.
 //!
-//! The coordinator's worker pool and the benchmark drivers use this; no
-//! tokio/rayon is vendored, so it is built directly on `std::thread` +
-//! `Mutex`/`Condvar`. Supports fire-and-forget `execute`, fork-join
-//! `scope`-style `map`, and graceful shutdown on drop.
+//! Everything in the crate that wants CPU parallelism — the scan plane
+//! loops ([`crate::scan`]), the segment-parallel decomposition, the
+//! coordinator's intra-batch tensor assembly, and the bench drivers —
+//! submits to one shared pool ([`ThreadPool::global`]) instead of
+//! spawning scoped OS threads per call. No tokio/rayon is vendored, so
+//! it is built directly on `std::thread` + `Mutex`/`Condvar`.
+//!
+//! Design notes:
+//!
+//! * **Per-call completion latch.** Each `map`/`try_map` call owns a
+//!   latch (count + condvar, the `BlockInfo`-style state machine of the
+//!   multi-dimensional-parallel-scan reference) that only its own jobs
+//!   decrement. Two `map` calls racing from different threads, or a
+//!   `map` overlapping fire-and-forget `execute` jobs, can no longer
+//!   observe each other's completion (the old implementation waited on
+//!   the pool-global `in_flight` counter and could return early or trip
+//!   `expect("job did not run")`).
+//! * **Scoped borrows.** `map` jobs may borrow non-`'static` data from
+//!   the caller's frame: the call does not return until its latch
+//!   confirms every job has finished, so the borrows cannot dangle
+//!   (the queue erases the lifetime internally, `rayon::scope`-style).
+//! * **Work-helping (own-call only).** While its latch is closed, the
+//!   calling thread pulls *its own call's* jobs out of the queue and
+//!   runs them instead of sleeping. A job may therefore submit a nested
+//!   `map` to the same pool without deadlocking, even on a 1-thread
+//!   pool: every caller can always drive its own jobs to completion by
+//!   itself. Helping never executes another call's work, so a
+//!   latency-sensitive caller (e.g. a serving executor fanning out a
+//!   batch assembly) cannot be held hostage by a stranger's
+//!   long-running job.
+//! * **Panic propagation.** A panicking `map` job no longer poisons the
+//!   pool or wedges the caller: `try_map` collects the first payload and
+//!   returns it as a [`MapError`]; `map` rethrows the payload in the
+//!   calling thread via `resume_unwind`. `execute` jobs keep the old
+//!   log-and-continue behaviour.
+//!
+//! Sharing model: [`ThreadPool::global`] lazily builds one host-sized
+//! pool for the lifetime of the process; `ThreadPool::new` remains for
+//! tests and callers that need an isolated pool. The pool is `Sync` —
+//! submit from as many threads as you like.
 
+use std::any::Any;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Queue tag identifying which `map`/`try_map` call a job belongs to
+/// (0 = fire-and-forget `execute`), so a waiting caller can selectively
+/// help with its own jobs.
+type CallId = u64;
+
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
+    queue: Mutex<VecDeque<(CallId, Job)>>,
     available: Condvar,
     shutdown: AtomicBool,
     in_flight: AtomicUsize,
     done: Condvar,
     done_lock: Mutex<()>,
+    next_call: AtomicU64,
 }
+
+/// Per-`map`-call completion latch: counts its own jobs down to zero and
+/// records panic payloads, independent of anything else in the pool.
+struct Latch {
+    state: Mutex<LatchState>,
+    open: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: usize,
+    payload: Option<Box<dyn Any + Send + 'static>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining: n, panicked: 0, payload: None }),
+            open: Condvar::new(),
+        }
+    }
+
+    /// One job finished (`payload` set if it panicked).
+    fn complete(&self, payload: Option<Box<dyn Any + Send + 'static>>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if let Some(p) = payload {
+            st.panicked += 1;
+            if st.payload.is_none() {
+                st.payload = Some(p);
+            }
+        }
+        if st.remaining == 0 {
+            self.open.notify_all();
+        }
+    }
+}
+
+/// Error returned by [`ThreadPool::try_map`] when at least one job
+/// panicked. Holds the first panic payload; the remaining jobs still ran
+/// to completion before the call returned.
+pub struct MapError {
+    /// How many of the call's jobs panicked.
+    pub panicked: usize,
+    payload: Box<dyn Any + Send + 'static>,
+}
+
+impl MapError {
+    /// Best-effort text of the first panic payload.
+    pub fn message(&self) -> String {
+        if let Some(s) = self.payload.downcast_ref::<&'static str>() {
+            (*s).to_string()
+        } else if let Some(s) = self.payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    }
+
+    /// The first panic payload, e.g. for `std::panic::resume_unwind`.
+    pub fn into_payload(self) -> Box<dyn Any + Send + 'static> {
+        self.payload
+    }
+}
+
+impl std::fmt::Debug for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MapError {{ panicked: {}, message: {:?} }}", self.panicked, self.message())
+    }
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} pool job(s) panicked: {}", self.panicked, self.message())
+    }
+}
+
+impl std::error::Error for MapError {}
 
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
 }
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
 
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
@@ -36,6 +161,7 @@ impl ThreadPool {
             in_flight: AtomicUsize::new(0),
             done: Condvar::new(),
             done_lock: Mutex::new(()),
+            next_call: AtomicU64::new(1),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -55,18 +181,29 @@ impl ThreadPool {
         Self::new(n.saturating_sub(1).max(1))
     }
 
+    /// The process-wide shared pool: built once, never torn down. All
+    /// scan / serving / bench parallelism routes through this handle so
+    /// the process runs exactly one persistent worker set.
+    pub fn global() -> &'static ThreadPool {
+        GLOBAL.get_or_init(ThreadPool::for_host)
+    }
+
     pub fn threads(&self) -> usize {
         self.workers.len()
     }
 
-    /// Fire-and-forget.
+    /// Fire-and-forget. A panic in `job` is caught and logged; use
+    /// [`ThreadPool::try_map`] when the caller needs the outcome.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        self.shared.queue.lock().unwrap().push_back((0, Box::new(job)));
         self.shared.available.notify_one();
     }
 
-    /// Block until every queued job has finished.
+    /// Block until the queue is fully drained (every job from every
+    /// submitter has finished). This is a pool-global rendezvous for
+    /// `execute`-style usage; `map`/`try_map` wait on their own per-call
+    /// latch instead and are unaffected by other submitters.
     pub fn wait_idle(&self) {
         let mut guard = self.shared.done_lock.lock().unwrap();
         while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
@@ -74,33 +211,147 @@ impl ThreadPool {
         }
     }
 
-    /// Fork-join map: applies `f` to each item in parallel, preserving order.
+    /// Fork-join map: applies `f` to each item in parallel, preserving
+    /// order. Items, results, and `f` may borrow from the caller's frame
+    /// (no `'static` bound): the call returns only after every job has
+    /// run. If any job panics the payload is rethrown in the caller —
+    /// use [`ThreadPool::try_map`] to get it as an error instead.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
-        T: Send + 'static,
-        R: Send + 'static,
-        F: Fn(T) -> R + Send + Sync + 'static,
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        match self.try_map(items, f) {
+            Ok(out) => out,
+            Err(e) => std::panic::resume_unwind(e.into_payload()),
+        }
+    }
+
+    /// Fork-join map returning `Err(MapError)` if any job panicked
+    /// (carrying the first payload) instead of unwinding the caller.
+    /// All jobs run to completion either way.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>, MapError>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
     {
         let n = items.len();
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        let f = Arc::new(f);
-        for (i, item) in items.into_iter().enumerate() {
-            let res = Arc::clone(&results);
-            let f = Arc::clone(&f);
-            self.execute(move || {
-                let r = f(item);
-                res.lock().unwrap()[i] = Some(r);
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let call_id = self.shared.next_call.fetch_add(1, Ordering::Relaxed);
+        let latch = Latch::new(n);
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let f = &f;
+            let slots = &slots;
+            let latch = &latch;
+            let mut jobs: Vec<Job> = Vec::with_capacity(n);
+            for (i, item) in items.into_iter().enumerate() {
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                        Ok(r) => {
+                            *slots[i].lock().unwrap() = Some(r);
+                            latch.complete(None);
+                        }
+                        Err(payload) => latch.complete(Some(payload)),
+                    }
+                });
+                // SAFETY: the latch wait below keeps this frame (and
+                // every borrow inside the job) alive until the job has
+                // finished running; the queue cannot drop a job unrun
+                // while `&self` borrows the pool (shutdown only happens
+                // in `Drop`).
+                jobs.push(unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                });
+            }
+            self.shared.in_flight.fetch_add(n, Ordering::SeqCst);
+            {
+                let mut q = self.shared.queue.lock().unwrap();
+                q.extend(jobs.into_iter().map(|j| (call_id, j)));
+            }
+            if n == 1 {
+                self.shared.available.notify_one();
+            } else {
+                self.shared.available.notify_all();
+            }
+
+            // Work-helping wait: pull THIS call's jobs out of the queue
+            // and run them until the latch opens. Helping only our own
+            // jobs keeps nested submission deadlock-free (a caller can
+            // always drive its own jobs by itself, workers or not)
+            // without ever executing a stranger's long-running job on a
+            // latency-sensitive caller. Once none of our jobs are
+            // queued, the rest are running on other threads, so a plain
+            // latch wait cannot stall.
+            loop {
+                // The tag scan is O(queue length) under the queue lock;
+                // fine at current fan-outs (hundreds of queued jobs).
+                // If pool traffic grows, move to per-call job lists so
+                // an own-job pop is O(1) (see ROADMAP).
+                let job = {
+                    let mut q = self.shared.queue.lock().unwrap();
+                    match q.iter().position(|(tag, _)| *tag == call_id) {
+                        Some(i) => q.remove(i).map(|(_, j)| j),
+                        None => None,
+                    }
+                };
+                match job {
+                    Some(job) => run_one(&self.shared, job),
+                    None => {
+                        let mut st = latch.state.lock().unwrap();
+                        while st.remaining > 0 {
+                            st = latch.open.wait(st).unwrap();
+                        }
+                        break;
+                    }
+                }
+                let st = latch.state.lock().unwrap();
+                if st.remaining == 0 {
+                    break;
+                }
+            }
+        }
+
+        let st = latch.state.into_inner().unwrap();
+        if st.panicked > 0 {
+            return Err(MapError {
+                panicked: st.panicked,
+                payload: st.payload.expect("panicked > 0 implies a stored payload"),
             });
         }
-        self.wait_idle();
-        Arc::try_unwrap(results)
-            .unwrap_or_else(|_| panic!("pool still holds results"))
-            .into_inner()
-            .unwrap()
+        Ok(slots
             .into_iter()
-            .map(|r| r.expect("job did not run"))
-            .collect()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap()
+                    .expect("latch opened with no panics: every slot is filled")
+            })
+            .collect())
+    }
+}
+
+/// Execute one queued job with the in-flight bookkeeping shared by
+/// workers and helping callers.
+fn run_one(sh: &Shared, job: Job) {
+    // A panicking job must not wedge wait_idle: decrement via guard.
+    struct Dec<'a>(&'a Shared);
+    impl Drop for Dec<'_> {
+        fn drop(&mut self) {
+            if self.0.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                let _g = self.0.done_lock.lock().unwrap();
+                self.0.done.notify_all();
+            }
+        }
+    }
+    let _dec = Dec(sh);
+    // Map jobs catch their own panics (routing the payload to the
+    // call's latch); this outer guard only fires for `execute` jobs.
+    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+        crate::util::logging::warn("threadpool", "worker job panicked");
     }
 }
 
@@ -109,7 +360,7 @@ fn worker_loop(sh: Arc<Shared>) {
         let job = {
             let mut q = sh.queue.lock().unwrap();
             loop {
-                if let Some(job) = q.pop_front() {
+                if let Some((_, job)) = q.pop_front() {
                     break job;
                 }
                 if sh.shutdown.load(Ordering::SeqCst) {
@@ -118,21 +369,7 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.available.wait(q).unwrap();
             }
         };
-        // A panicking job must not wedge wait_idle: decrement via guard.
-        struct Dec<'a>(&'a Shared);
-        impl Drop for Dec<'_> {
-            fn drop(&mut self) {
-                if self.0.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
-                    let _g = self.0.done_lock.lock().unwrap();
-                    self.0.done.notify_all();
-                }
-            }
-        }
-        let _dec = Dec(&sh);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
-        if result.is_err() {
-            crate::util::logging::warn("threadpool", "worker job panicked");
-        }
+        run_one(&sh, job);
     }
 }
 
@@ -177,8 +414,18 @@ mod tests {
         let pool = ThreadPool::new(4);
         let t0 = std::time::Instant::now();
         pool.map(vec![(); 8], |_| std::thread::sleep(std::time::Duration::from_millis(40)));
-        // 8 x 40ms on 4 threads ~ 80ms; serial would be 320ms.
+        // 8 x 40ms on 4 threads (+ the helping caller) ~ 80ms; serial
+        // would be 320ms.
         assert!(t0.elapsed() < std::time::Duration::from_millis(250));
+    }
+
+    #[test]
+    fn map_borrows_caller_frame() {
+        // No 'static bound: jobs read a stack-local table by reference.
+        let pool = ThreadPool::new(2);
+        let table: Vec<u64> = (0..32).map(|i| i * 10).collect();
+        let out = pool.map((0..32usize).collect::<Vec<_>>(), |i| table[i] + 1);
+        assert_eq!(out, (0..32).map(|i| i * 10 + 1).collect::<Vec<u64>>());
     }
 
     #[test]
@@ -198,5 +445,114 @@ mod tests {
     fn wait_idle_on_empty_pool_returns() {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn try_map_empty_is_ok() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.try_map(Vec::<u32>::new(), |x| x).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn try_map_surfaces_panic_as_error() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .try_map((0..8).collect::<Vec<u32>>(), |x| {
+                if x == 3 {
+                    panic!("job {x} exploded");
+                }
+                x * 2
+            })
+            .unwrap_err();
+        assert_eq!(err.panicked, 1);
+        assert!(err.message().contains("exploded"), "{}", err.message());
+        // The pool is not poisoned: the next call works.
+        let ok = pool.try_map(vec![1u32, 2, 3], |x| x + 1).unwrap();
+        assert_eq!(ok, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn map_rethrows_panic_payload_in_caller() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0u32, 1, 2], |x| {
+                if x == 1 {
+                    panic!("rethrown payload");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("map must propagate the panic");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("rethrown payload"), "{msg}");
+        assert_eq!(pool.map(vec![5u32], |x| x), vec![5]);
+    }
+
+    #[test]
+    fn map_self_helps_when_workers_are_busy() {
+        // The single worker is parked on a blocking execute job; map
+        // must complete anyway by running its own jobs on the calling
+        // thread (selective helping).
+        let pool = ThreadPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            let _ = rx.recv();
+        });
+        let out = pool.map(vec![1u32, 2, 3], |x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
+        tx.send(()).unwrap();
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn nested_map_inside_a_job_completes() {
+        // A 1-thread pool forces the helping path: the outer job's
+        // thread must drain the inner jobs itself.
+        let pool = ThreadPool::new(1);
+        let out = pool.map(vec![10u64, 20], |base| {
+            pool.map(vec![1u64, 2, 3], |d| base + d).iter().sum::<u64>()
+        });
+        assert_eq!(out, vec![36, 66]);
+    }
+
+    #[test]
+    fn global_pool_is_one_instance() {
+        let a = ThreadPool::global();
+        let b = ThreadPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads() >= 1);
+        assert_eq!(a.map(vec![2u32, 3], |x| x * x), vec![4, 9]);
+    }
+
+    /// The regression for the completion race: two threads run `map`
+    /// concurrently while `execute` jobs churn the pool-global counter.
+    /// The old `wait_idle`-based map returned early/late or hit
+    /// `expect("job did not run")` under exactly this interleaving.
+    /// 100 consecutive rounds as demanded by the acceptance criteria.
+    #[test]
+    fn concurrent_maps_with_interleaved_executes() {
+        let pool = ThreadPool::new(4);
+        let noise = Arc::new(AtomicU64::new(0));
+        for round in 0..100u64 {
+            std::thread::scope(|s| {
+                let p = &pool;
+                let items = || (0..64u64).collect::<Vec<_>>();
+                let h1 = s.spawn(move || p.map(items(), move |x| x * 2 + round));
+                let h2 = s.spawn(move || p.map(items(), move |x| x * 3 + round));
+                for _ in 0..16 {
+                    let c = Arc::clone(&noise);
+                    pool.execute(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                let r1 = h1.join().expect("map caller 1");
+                let r2 = h2.join().expect("map caller 2");
+                assert_eq!(r1, (0..64).map(|x| x * 2 + round).collect::<Vec<u64>>());
+                assert_eq!(r2, (0..64).map(|x| x * 3 + round).collect::<Vec<u64>>());
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(noise.load(Ordering::SeqCst), 100 * 16);
     }
 }

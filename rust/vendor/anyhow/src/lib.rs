@@ -1,0 +1,168 @@
+//! Minimal in-tree stand-in for the `anyhow` crate so the workspace
+//! builds fully offline (nothing is fetched from a registry). Implements
+//! exactly the surface `gspn2` uses:
+//!
+//! * [`Error`] — a message plus a context/cause chain. `{}` prints the
+//!   outermost message, `{:#}` the full chain joined with `": "`, and
+//!   `{:?}` an anyhow-style "Caused by:" listing.
+//! * [`Result<T>`] with the error type defaulted.
+//! * [`anyhow!`] / [`bail!`] macros (literal, single-expression, and
+//!   format-args forms).
+//! * The [`Context`] extension trait (`context` / `with_context`) on
+//!   `Result`s whose error converts into [`Error`] — including every
+//!   `std::error::Error` via the blanket `From`.
+//!
+//! Not implemented (unused here): downcasting, backtraces, `ensure!`.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: outermost message first, then its causes.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (innermost stays last).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts, capturing its source chain. `Error` itself
+// deliberately does not implement `std::error::Error` (same trick as the
+// real anyhow) so this blanket impl cannot overlap the reflexive
+// `From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension methods to attach context to failing `Result`s.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn context_on_std_errors() {
+        let r: Result<()> = io_fail().with_context(|| "reading manifest".to_string());
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("reading manifest") && msg.contains("gone"), "{msg}");
+    }
+
+    #[test]
+    fn macros_cover_all_forms() {
+        let a = anyhow!("plain");
+        let n = 3;
+        let b = anyhow!("got {n} things");
+        let c = anyhow!("got {} things", 4);
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(format!("{a}"), "plain");
+        assert_eq!(format!("{b}"), "got 3 things");
+        assert_eq!(format!("{c}"), "got 4 things");
+        assert_eq!(format!("{d}"), "owned");
+
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "nope 1");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! In-tree stub of the `xla` PJRT wrapper crate, so the workspace builds
+//! and tests fully offline (the real wrapper links libxla/PJRT and
+//! cannot be vendored here).
+//!
+//! Two tiers of fidelity:
+//!
+//! * **Host-side [`Literal`]s are fully functional** — typed creation
+//!   from untyped bytes, shape introspection, `to_vec`, tuples. The
+//!   `runtime::Value` bridge round-trips through them in unit tests.
+//! * **The PJRT client surface compiles but does not execute**:
+//!   [`PjRtClient::cpu`] returns an error, so `Engine::cpu` fails
+//!   cleanly and every artifact-gated test/bench/example skips itself
+//!   (the artifact store is absent in this build anyway). Swapping this
+//!   path dependency for the real wrapper restores execution without
+//!   touching `gspn2` code.
+
+use std::fmt;
+
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str =
+    "PJRT runtime unavailable: this build uses the in-tree xla stub (host-side \
+     literals only); link the real xla wrapper to execute artifacts";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn size_in_bytes(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Dense array shape: element type + dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Element types that can be read back out of a literal.
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side literal: either a dense typed array or a tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        let want = elems * ty.size_in_bytes();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {dims:?} of {ty:?} needs {want}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), data: Vec::new(), tuple: Some(elems) }
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.tuple {
+            Some(elems) => Ok(Shape::Tuple(
+                elems.iter().map(|e| e.shape()).collect::<Result<Vec<_>>>()?,
+            )),
+            None => Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty: self.ty })),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if self.ty != T::TY {
+            return Err(Error(format!("literal is {:?}, requested {:?}", self.ty, T::TY)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(elems) => Ok(elems.clone()),
+            None => Err(Error("to_tuple on a non-tuple literal".into())),
+        }
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!("cannot parse {path}: {STUB_MSG}")))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        match lit.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[3]);
+                assert_eq!(a.ty(), ElementType::F32);
+            }
+            other => panic!("expected array shape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn literal_size_mismatch_rejected() {
+        let r = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 4]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn wrong_type_readback_rejected() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0])
+                .unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1]);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .unwrap();
+        let t = Literal::tuple(vec![a.clone()]);
+        assert_eq!(t.to_tuple().unwrap(), vec![a]);
+        assert!(t.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

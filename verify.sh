@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): release build + full test suite.
+# Artifact-gated integration tests (PJRT execution) skip themselves when
+# artifacts/ is absent; everything else must pass.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+cargo build --release
+cargo test -q
