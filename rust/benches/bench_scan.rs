@@ -1,18 +1,103 @@
 //! Micro-benchmarks for the pure-Rust GSPN core: tap normalisation, the
 //! canonical scan at several sizes, directional wrappers, the compact
-//! unit, and the Eq. 4 dense expansion.
+//! unit, and the Eq. 4 dense expansion — plus the fused-vs-reference
+//! comparison suite (`BENCH_scan`), the perf-trajectory record for the
+//! column-staged fused engine.
 //!
 //! Run: `cargo bench --bench bench_scan` (results land in bench_out/).
+//! `GSPN2_BENCH_SMOKE=1` runs only the fused-vs-reference suite with a
+//! short measurement budget — the CI mode that keeps
+//! `bench_out/BENCH_scan.json` accumulating on every push.
 
+use std::time::Duration;
+
+use gspn2::scan::fused::{
+    fused_merged_4dir, fused_merged_4dir_pool, fused_scan_l2r, fused_scan_l2r_pool,
+};
 use gspn2::scan::{
-    expand_g, merged_4dir, merged_4dir_pool, scan_l2r, scan_l2r_pool, scan_l2r_split,
+    expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool, scan_l2r_split,
     CompactGspnUnit, Taps,
 };
-use gspn2::util::bench::{black_box, BenchSuite};
+use gspn2::util::bench::{black_box, BenchConfig, BenchSuite};
 use gspn2::util::{Rng, ThreadPool};
 use gspn2::Tensor;
 
+/// The acceptance suite: reference vs fused rows at the two pinned
+/// geometries (c64 64x64 and c8 256x256), written to
+/// `bench_out/BENCH_scan.json`. Speedup rows make the trajectory
+/// greppable without post-processing.
+fn bench_fused_vs_reference(cfg: BenchConfig) {
+    let mut suite = BenchSuite::with_config("BENCH_scan", cfg);
+    let mut rng = Rng::new(7);
+    let pool = ThreadPool::global();
+
+    for (c, h, w) in [(64usize, 64usize, 64usize), (8, 256, 256)] {
+        let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let taps = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
+
+        let r_ref = suite.bench(&format!("scan_l2r c{c} {h}x{w} (reference)"), || {
+            black_box(scan_l2r(&x, &taps, &lam, 0));
+        });
+        let r_fused = suite.bench(&format!("scan_l2r c{c} {h}x{w} (fused)"), || {
+            black_box(fused_scan_l2r(&x, &taps, &lam, 0));
+        });
+        let r_fused_pool =
+            suite.bench(&format!("scan_l2r c{c} {h}x{w} (fused pool)"), || {
+                black_box(fused_scan_l2r_pool(&x, &taps, &lam, 0, pool));
+            });
+        suite.record_value(
+            &format!("speedup scan_l2r c{c} {h}x{w} fused/ref"),
+            r_ref.mean_ns / r_fused.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r c{c} {h}x{w} fused-pool/ref"),
+            r_ref.mean_ns / r_fused_pool.mean_ns,
+            "x",
+        );
+
+        let t_tb = Taps::normalize(&Tensor::randn(&[1, 1, 3, w, h], &mut rng, 1.0));
+        let tr = [&taps, &taps, &t_tb, &t_tb];
+        let logits = [0.3f32, -0.1, 0.6, 0.0];
+        let m_ref = suite.bench(&format!("merged_4dir c{c} {h}x{w} (reference)"), || {
+            black_box(merged_4dir_ref(&x, tr, &lam, &logits, 0));
+        });
+        let m_fused = suite.bench(&format!("merged_4dir c{c} {h}x{w} (fused)"), || {
+            black_box(fused_merged_4dir(&x, tr, &lam, &logits, 0));
+        });
+        let m_fused_pool =
+            suite.bench(&format!("merged_4dir c{c} {h}x{w} (fused pool)"), || {
+                black_box(fused_merged_4dir_pool(&x, tr, &lam, &logits, 0, pool));
+            });
+        suite.record_value(
+            &format!("speedup merged_4dir c{c} {h}x{w} fused/ref"),
+            m_ref.mean_ns / m_fused.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("speedup merged_4dir c{c} {h}x{w} fused-pool/ref"),
+            m_ref.mean_ns / m_fused_pool.mean_ns,
+            "x",
+        );
+    }
+
+    suite.finish();
+}
+
 fn main() {
+    // Smoke mode (CI): only the fused-vs-reference acceptance suite,
+    // short measurement windows.
+    if std::env::var("GSPN2_BENCH_SMOKE").is_ok() {
+        bench_fused_vs_reference(BenchConfig {
+            warmup: Duration::from_millis(40),
+            measure: Duration::from_millis(250),
+            min_samples: 5,
+            max_samples: 200,
+        });
+        return;
+    }
+
     let mut suite = BenchSuite::new("scan_core");
     let mut rng = Rng::new(0);
 
@@ -26,7 +111,8 @@ fn main() {
         black_box(Taps::normalize(&raw_pc));
     });
 
-    // Canonical scan across sizes.
+    // Canonical scan across sizes: reference vs the column-staged fused
+    // engine, serial.
     for (c, h, w) in [(8usize, 64usize, 64usize), (8, 128, 128), (8, 256, 256), (64, 64, 64)] {
         let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
         let a = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
@@ -34,11 +120,14 @@ fn main() {
         suite.bench(&format!("scan_l2r c{c} {h}x{w}"), || {
             black_box(scan_l2r(&x, &a, &lam, 0));
         });
+        suite.bench(&format!("scan_l2r c{c} {h}x{w} (fused)"), || {
+            black_box(fused_scan_l2r(&x, &a, &lam, 0));
+        });
     }
 
-    // Shared-pool plane fan-out vs the serial plane loop above: the same
-    // per-plane kernel (bit-identical output), (N·C)-way parallel on the
-    // process-wide pool. Multi-plane inputs are where the pool must win.
+    // Shared-pool fan-out vs the serial plane loop above: the reference
+    // pool path submits one job per plane; the fused path submits
+    // block-granular jobs sized off the pool.
     {
         let pool = ThreadPool::global();
         for (c, h, w) in [(8usize, 128usize, 128usize), (64, 64, 64)] {
@@ -51,6 +140,9 @@ fn main() {
                     black_box(scan_l2r_pool(&x, &a, &lam, 0, pool));
                 },
             );
+            suite.bench(&format!("scan_l2r c{c} {h}x{w} (fused pool)"), || {
+                black_box(fused_scan_l2r_pool(&x, &a, &lam, 0, pool));
+            });
         }
     }
 
@@ -61,6 +153,9 @@ fn main() {
         let lam = Tensor::randn(&[1, 8, 128, 128], &mut rng, 1.0);
         suite.bench("scan_l2r c8 128x128 kchunk=16", || {
             black_box(scan_l2r(&x, &a, &lam, 16));
+        });
+        suite.bench("scan_l2r c8 128x128 kchunk=16 (fused)", || {
+            black_box(fused_scan_l2r(&x, &a, &lam, 16));
         });
     }
 
@@ -85,27 +180,35 @@ fn main() {
         });
     }
 
-    // Four directions merged: serial vs the pooled directional fan-out.
+    // Four directions merged: the serial reference composition vs the
+    // fused engine, serial and block-pooled.
     {
         let x = Tensor::randn(&[1, 4, 64, 64], &mut rng, 1.0);
         let lam = Tensor::randn(&[1, 4, 64, 64], &mut rng, 1.0);
         let t_lr = Taps::normalize(&Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0));
         let t_tb = Taps::normalize(&Tensor::randn(&[1, 1, 3, 64, 64], &mut rng, 1.0));
-        suite.bench("merged_4dir c4 64x64", || {
-            black_box(merged_4dir(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0));
+        suite.bench("merged_4dir c4 64x64 (reference)", || {
+            black_box(merged_4dir_ref(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0));
+        });
+        suite.bench("merged_4dir c4 64x64 (fused)", || {
+            black_box(fused_merged_4dir(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0));
         });
         let pool = ThreadPool::global();
-        suite.bench("merged_4dir c4 64x64 (shared pool)", || {
+        suite.bench("merged_4dir c4 64x64 (fused pool)", || {
             black_box(merged_4dir_pool(&x, [&t_lr, &t_lr, &t_tb, &t_tb], &lam, &[0.0; 4], 0, pool));
         });
     }
 
-    // The full compact unit (projections + 4 scans).
+    // The full compact unit (projections + 4 scans), now through the
+    // fused scan+merge+modulate path and the parallel projections.
     {
         let unit = CompactGspnUnit::init(&mut rng, 32, 4, 0, false);
         let x = Tensor::randn(&[1, 32, 64, 64], &mut rng, 1.0);
-        suite.bench("CompactGspnUnit c32 p4 64x64", || {
+        suite.bench("CompactGspnUnit c32 p4 64x64 (fused)", || {
             black_box(unit.forward(&x));
+        });
+        suite.bench("CompactGspnUnit c32 p4 64x64 (reference)", || {
+            black_box(unit.forward_ref(&x));
         });
     }
 
@@ -119,4 +222,7 @@ fn main() {
     }
 
     suite.finish();
+
+    // The acceptance suite, full measurement budget.
+    bench_fused_vs_reference(BenchConfig::default());
 }

@@ -39,6 +39,10 @@ pub struct ServeConfig {
     pub requests: usize,
     /// Artifact directory.
     pub artifacts: String,
+    /// Execution backend: "pjrt" (compiled HLO artifacts) or "cpu"
+    /// (the fused pure-Rust scan engine; serves any geometry, no
+    /// artifacts required).
+    pub backend: String,
     pub seed: u64,
 }
 
@@ -53,6 +57,7 @@ impl Default for ServeConfig {
             rate_rps: 200.0,
             requests: 500,
             artifacts: "artifacts".into(),
+            backend: "pjrt".into(),
             seed: 0,
         }
     }
@@ -125,6 +130,7 @@ impl Config {
         s.rate_rps = t.f64_or("serve.rate_rps", s.rate_rps);
         s.requests = t.usize_or("serve.requests", s.requests);
         s.artifacts = t.str_or("serve.artifacts", &s.artifacts);
+        s.backend = t.str_or("serve.backend", &s.backend);
         s.seed = t.usize_or("serve.seed", s.seed as usize) as u64;
 
         let tr = &mut self.train;
@@ -152,6 +158,7 @@ impl Config {
         s.rate_rps = a.f64_or("rate", s.rate_rps);
         s.requests = a.usize_or("requests", s.requests);
         s.artifacts = a.str_or("artifacts", &s.artifacts);
+        s.backend = a.str_or("backend", &s.backend);
         s.seed = a.u64_or("seed", s.seed);
 
         let tr = &mut self.train;
@@ -180,6 +187,17 @@ mod tests {
     fn defaults_without_flags() {
         let cfg = Config::from_args(&args(&[])).unwrap();
         assert_eq!(cfg, Config::default());
+    }
+
+    #[test]
+    fn backend_from_toml_and_cli() {
+        let t = Toml::parse("[serve]\nbackend = \"cpu\"\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.serve.backend, "pjrt");
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.serve.backend, "cpu");
+        cfg.apply_args(&args(&["--backend", "pjrt"]));
+        assert_eq!(cfg.serve.backend, "pjrt");
     }
 
     #[test]

@@ -72,6 +72,11 @@ impl Batcher {
         self.batch_sizes.contains_key(bucket)
     }
 
+    /// Number of registered buckets (used to cap dynamic registration).
+    pub fn bucket_count(&self) -> usize {
+        self.batch_sizes.len()
+    }
+
     pub fn queued(&self) -> usize {
         self.queued
     }

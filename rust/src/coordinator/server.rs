@@ -14,6 +14,17 @@
 //! Requests are validated at admission via `validate_scan_shapes`: a
 //! malformed shape or kchunk comes back as [`SubmitError::Invalid`]
 //! instead of panicking an executor.
+//!
+//! Two execution backends ([`ServeConfig::backend`]):
+//!
+//! * `"pjrt"` — compiled HLO artifacts; buckets come from the manifest
+//!   and each worker owns a PJRT engine.
+//! * `"cpu"` — the column-staged fused scan engine
+//!   ([`crate::scan::fused`]) serves scan requests directly: no
+//!   artifacts, no manifest, any valid geometry (buckets register on
+//!   first use), plane-block parallelism on the shared pool. This is
+//!   the pure-Rust serving path — bit-identical to `scan_l2r` — and
+//!   what the coordinator e2e tests exercise without artifacts.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -33,6 +44,13 @@ use crate::tensor::{concat_axis0, split_axis0};
 use crate::util::{logging, ThreadPool};
 use crate::Tensor;
 
+/// Execution backend selected by [`ServeConfig::backend`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Pjrt,
+    CpuFused,
+}
+
 struct Shared {
     batcher: Mutex<Batcher>,
     direct: Mutex<VecDeque<Request>>,
@@ -40,6 +58,7 @@ struct Shared {
     metrics: Mutex<Metrics>,
     shutdown: AtomicBool,
     artifacts_dir: String,
+    backend: Backend,
 }
 
 pub struct Coordinator {
@@ -53,7 +72,11 @@ impl Coordinator {
     /// then spawn `cfg.workers` executor threads (each builds its own
     /// PJRT engine).
     pub fn start(cfg: &ServeConfig) -> anyhow::Result<Coordinator> {
-        let manifest = Manifest::load(&cfg.artifacts)?;
+        let backend = match cfg.backend.as_str() {
+            "pjrt" => Backend::Pjrt,
+            "cpu" | "cpu-fused" => Backend::CpuFused,
+            other => anyhow::bail!("unknown serve backend {other:?} (want \"pjrt\" or \"cpu\")"),
+        };
         let policy = BatchPolicy {
             max_batch: cfg.max_batch,
             max_wait: Duration::from_micros(cfg.max_wait_us),
@@ -61,26 +84,40 @@ impl Coordinator {
             eager_idle: cfg.eager_idle,
         };
         let mut batcher = Batcher::new(policy);
-        // Group scan artifacts into buckets with their batch sizes.
-        let mut sizes: std::collections::BTreeMap<Bucket, Vec<usize>> = Default::default();
-        for e in manifest.by_kind("scan") {
-            let bucket = Bucket {
-                c: e.meta_usize("c").unwrap_or(0),
-                h: e.meta_usize("h").unwrap_or(0),
-                w: e.meta_usize("w").unwrap_or(0),
-                kchunk: e.meta_usize("kchunk").unwrap_or(0),
-                per_channel: e.meta_usize("cw").unwrap_or(1) > 1,
-            };
-            sizes.entry(bucket).or_default().push(e.meta_usize("n").unwrap_or(1));
+        match backend {
+            Backend::Pjrt => {
+                // Group scan artifacts into buckets with their batch sizes.
+                let manifest = Manifest::load(&cfg.artifacts)?;
+                let mut sizes: std::collections::BTreeMap<Bucket, Vec<usize>> =
+                    Default::default();
+                for e in manifest.by_kind("scan") {
+                    let bucket = Bucket {
+                        c: e.meta_usize("c").unwrap_or(0),
+                        h: e.meta_usize("h").unwrap_or(0),
+                        w: e.meta_usize("w").unwrap_or(0),
+                        kchunk: e.meta_usize("kchunk").unwrap_or(0),
+                        per_channel: e.meta_usize("cw").unwrap_or(1) > 1,
+                    };
+                    sizes.entry(bucket).or_default().push(e.meta_usize("n").unwrap_or(1));
+                }
+                let n_buckets = sizes.len();
+                for (b, s) in sizes {
+                    batcher.register_bucket(b, s);
+                }
+                logging::info(
+                    "coordinator",
+                    &format!("{} scan buckets, {} workers (pjrt)", n_buckets, cfg.workers),
+                );
+            }
+            Backend::CpuFused => {
+                // The fused CPU engine serves any valid geometry at any
+                // batch size; buckets register on first submit.
+                logging::info(
+                    "coordinator",
+                    &format!("cpu-fused backend, {} workers", cfg.workers),
+                );
+            }
         }
-        let n_buckets = sizes.len();
-        for (b, s) in sizes {
-            batcher.register_bucket(b, s);
-        }
-        logging::info(
-            "coordinator",
-            &format!("{} scan buckets, {} workers", n_buckets, cfg.workers),
-        );
 
         let shared = Arc::new(Shared {
             batcher: Mutex::new(batcher),
@@ -89,6 +126,7 @@ impl Coordinator {
             metrics: Mutex::new(Metrics::new()),
             shutdown: AtomicBool::new(false),
             artifacts_dir: cfg.artifacts.clone(),
+            backend,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|i| {
@@ -125,13 +163,32 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         {
             let mut b = self.shared.batcher.lock().unwrap();
-            if !b.known_bucket(&bucket) {
+            let known = b.known_bucket(&bucket);
+            if !known && self.shared.backend != Backend::CpuFused {
                 self.shared.metrics.lock().unwrap().record_rejection();
                 return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
             }
             if !b.has_capacity() {
                 self.shared.metrics.lock().unwrap().record_rejection();
                 return Err(SubmitError::Backpressure);
+            }
+            if !known {
+                // The fused CPU engine serves any valid geometry at any
+                // batch size: register the bucket on first use (admission
+                // already validated the shapes, and the backpressure
+                // check above ran first so a rejected request never
+                // burns a registration). The count is capped so a client
+                // cycling through geometries cannot grow batcher state —
+                // and pop_batch's key scan — without bound; beyond the
+                // cap, novel geometries get the same structured
+                // rejection the pjrt backend gives.
+                const MAX_DYNAMIC_BUCKETS: usize = 1024;
+                if b.bucket_count() >= MAX_DYNAMIC_BUCKETS {
+                    self.shared.metrics.lock().unwrap().record_rejection();
+                    return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
+                }
+                let max = b.policy.max_batch.max(1);
+                b.register_bucket(bucket.clone(), (1..=max).collect());
             }
             let req = Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -202,19 +259,27 @@ impl Coordinator {
 }
 
 fn worker_main(idx: usize, sh: Arc<Shared>) {
-    let engine = match Engine::cpu(&sh.artifacts_dir) {
-        Ok(e) => e,
-        Err(e) => {
-            logging::error("worker", &format!("worker {idx}: engine init failed: {e:#}"));
-            return;
-        }
+    // The cpu-fused backend needs no PJRT engine (and must not require
+    // an artifact directory to exist).
+    let engine = match sh.backend {
+        Backend::CpuFused => None,
+        Backend::Pjrt => match Engine::cpu(&sh.artifacts_dir) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                logging::error("worker", &format!("worker {idx}: engine init failed: {e:#}"));
+                return;
+            }
+        },
     };
     loop {
         // 1) Direct requests take priority (they are latency-sensitive
         //    whole-model calls).
         let direct = sh.direct.lock().unwrap().pop_front();
         if let Some(req) = direct {
-            run_direct(&engine, &sh, req);
+            match &engine {
+                Some(engine) => run_direct(engine, &sh, req),
+                None => reject_direct(&sh, req),
+            }
             continue;
         }
         // 2) Batched scan work.
@@ -256,7 +321,10 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
             }
         };
         match batch {
-            Some((bucket, fused, reqs)) => run_scan_batch(&engine, &sh, bucket, fused, reqs),
+            Some((bucket, fused, reqs)) => match &engine {
+                Some(engine) => run_scan_batch(engine, &sh, bucket, fused, reqs),
+                None => run_scan_batch_cpu(&sh, reqs),
+            },
             None => {
                 if sh.shutdown.load(Ordering::SeqCst)
                     && sh.direct.lock().unwrap().is_empty()
@@ -291,6 +359,55 @@ fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
         m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
     } else {
         m.record_error();
+    }
+}
+
+/// Direct (whole-artifact) execution has no CPU fallback: reply with a
+/// structured error instead of hanging the client.
+fn reject_direct(sh: &Shared, req: Request) {
+    sh.metrics.lock().unwrap().record_error();
+    let _ = req.reply.send(Response {
+        id: req.id,
+        result: Err(anyhow!("direct execution requires the pjrt backend")),
+        queue_us: req.arrived.elapsed().as_micros() as u64,
+        execute_us: 0,
+        batch: 1,
+    });
+}
+
+/// Serve a scan batch on the fused CPU engine: per request, normalize
+/// the raw taps and run the column-staged fused scan with its plane
+/// blocks fanned out on the process-wide pool. No concat/pad/split —
+/// the CPU path has no shape-specialised executable to feed, so each
+/// request's tensors are consumed in place. Results are bit-identical
+/// to `scan_l2r` (the e2e tests pin this with exact equality).
+fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
+    let batch = reqs.len();
+    for r in reqs {
+        let t0 = Instant::now();
+        let (x, a_raw, lam) = match r.payload {
+            Payload::Scan { x, a_raw, lam } => (x, a_raw, lam),
+            _ => unreachable!("scan batch holds scan payloads"),
+        };
+        let taps = crate::scan::Taps::normalize(&a_raw);
+        let h = crate::scan::fused::fused_scan_l2r_pool(
+            &x,
+            &taps,
+            &lam,
+            r.kchunk,
+            ThreadPool::global(),
+        );
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        let queue_ns = t0.duration_since(r.arrived).as_nanos() as u64;
+        let _ = r.reply.send(Response {
+            id: r.id,
+            result: Ok(vec![Value::F32(h)]),
+            queue_us: queue_ns / 1000,
+            execute_us: exec_ns / 1000,
+            batch,
+        });
+        let mut m = sh.metrics.lock().unwrap();
+        m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, batch);
     }
 }
 

@@ -37,30 +37,73 @@ impl Proj {
     }
 
     /// Apply to (N, Cin, H, W) -> (N, Cout, H, W).
+    ///
+    /// The (n, cout) output-plane loop fans out over the shared
+    /// [`ThreadPool`] in block-granular jobs (serial below a small work
+    /// floor where pool dispatch would dominate), and the spatial axis is
+    /// cache-blocked so each output tile stays L1-resident across the
+    /// whole `cin` accumulation instead of streaming `cin` full planes
+    /// through it. Accumulation order per element (bias, then `ci`
+    /// ascending) is unchanged, so results are bit-identical to the old
+    /// serial triple loop.
     pub fn apply(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.shape[1], self.cin, "channel mismatch");
         let (n, _, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         let plane = h * w;
         let mut out = Tensor::zeros(&[n, self.cout, h, w]);
-        for ni in 0..n {
-            for co in 0..self.cout {
-                let obase = (ni * self.cout + co) * plane;
-                for k in 0..plane {
-                    out.data[obase + k] = self.b[co];
+        let nplanes = n * self.cout;
+        if nplanes == 0 || plane == 0 {
+            return out;
+        }
+        let pool = ThreadPool::global();
+        // Pool fan-out pays only when there is real work to split.
+        const MIN_PAR_MADDS: usize = 1 << 15;
+        let nblocks = super::fused::plane_blocks(nplanes, pool.threads());
+        if nblocks <= 1
+            || pool.threads() <= 1
+            || nplanes * plane * self.cin.max(1) < MIN_PAR_MADDS
+        {
+            for (p, os) in out.data.chunks_mut(plane).enumerate() {
+                self.apply_plane(x, p / self.cout, p % self.cout, plane, os);
+            }
+            return out;
+        }
+        let per_block = nplanes.div_ceil(nblocks);
+        let jobs: Vec<(usize, &mut [f32])> =
+            out.data.chunks_mut(per_block * plane).enumerate().collect();
+        pool.map(jobs, |(b, block)| {
+            for (j, os) in block.chunks_mut(plane).enumerate() {
+                let p = b * per_block + j;
+                self.apply_plane(x, p / self.cout, p % self.cout, plane, os);
+            }
+        });
+        out
+    }
+
+    /// One (ni, co) output plane: bias fill, then the `cin` reduction
+    /// over cache-blocked spatial tiles.
+    fn apply_plane(&self, x: &Tensor, ni: usize, co: usize, plane: usize, os: &mut [f32]) {
+        // Spatial tile (f32 elements) kept hot across the cin loop:
+        // 16 KB out-tile + one 16 KB in-tile per step fits L1/L2 with
+        // room for the weight row.
+        const KTILE: usize = 4096;
+        os.iter_mut().for_each(|v| *v = self.b[co]);
+        let wrow = &self.w[co * self.cin..(co + 1) * self.cin];
+        let mut k0 = 0;
+        while k0 < plane {
+            let k1 = (k0 + KTILE).min(plane);
+            for (ci, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
                 }
-                for ci in 0..self.cin {
-                    let wv = self.w[co * self.cin + ci];
-                    if wv == 0.0 {
-                        continue;
-                    }
-                    let ibase = (ni * self.cin + ci) * plane;
-                    for k in 0..plane {
-                        out.data[obase + k] += wv * x.data[ibase + k];
-                    }
+                let ibase = (ni * self.cin + ci) * plane;
+                let xt = &x.data[ibase + k0..ibase + k1];
+                for (o, &xv) in os[k0..k1].iter_mut().zip(xt) {
+                    *o += wv * xv;
                 }
             }
+            k0 = k1;
         }
-        out
     }
 }
 
@@ -107,31 +150,61 @@ impl CompactGspnUnit {
             + self.merge.len()
     }
 
-    pub fn forward(&self, x: &Tensor) -> Tensor {
-        assert_eq!(x.shape[1], self.c);
-        let xp = self.down.apply(x);
+    /// Per-direction canonical activations + normalized taps — the stage
+    /// shared by the fused forward and the reference composition. Lambda
+    /// per direction must follow canonical orientation: the projections
+    /// operate on the reoriented feature map, so taps and lam come out in
+    /// canonical layout per direction (lam differs per direction).
+    fn project_directions(&self, xp: &Tensor) -> Vec<(Tensor, Taps, Tensor)> {
         let cw = if self.per_channel { self.c_proxy } else { 1 };
-        let pool = ThreadPool::global();
-
-        // The four directional passes are independent end to end (taps
-        // projection, lam projection, scan): run each as a job on the
-        // shared pool, with the scan's plane loop nested into the same
-        // pool. Per-direction arithmetic is untouched and the merge below
-        // accumulates in direction order, so this is bit-identical to the
-        // old serial loop.
-        //
-        // Lambda per direction must follow canonical orientation: the
-        // merged_4dir helper reorients lam internally from the *spatial*
-        // layout, so we produce lam in canonical layout per direction and
-        // run each direction separately here (lam differs per direction).
-        let ys = pool.map((0..4usize).collect(), |k| {
+        ThreadPool::global().map((0..4usize).collect(), |k| {
             let d = DIRECTIONS[k];
-            let xc = to_canonical(&xp, d);
+            let xc = to_canonical(xp, d);
             let raw = self.taps_proj[k].apply(&xc); // (N, 3*cw, Hc, Wc)
             let (n, _, hc, wc) = (raw.shape[0], raw.shape[1], raw.shape[2], raw.shape[3]);
             let taps = Taps::normalize(&raw.reshape(&[n, cw, 3, hc, wc]));
             let lamc = self.lam_proj[k].apply(&xc);
-            let hc = super::core::scan_l2r_pool(&xc, &taps, &lamc, self.kchunk, pool);
+            (xc, taps, lamc)
+        })
+    }
+
+    /// Forward through the column-staged fused engine: after the
+    /// per-direction projections, the pack → 4-direction scan → softmax
+    /// merge → `u ⊙ h` modulation all run as one fused pass
+    /// ([`super::fused::fused_merged_canonical`]) — no directional scan
+    /// output, `from_canonical` copy, merged intermediate, or modulation
+    /// clone is ever materialized. Bit-identical to [`Self::forward_ref`]
+    /// (pinned by tests).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.c);
+        let xp = self.down.apply(x);
+        let dirs = self.project_directions(&xp);
+        let merged = super::fused::fused_merged_canonical(
+            [&dirs[0].0, &dirs[1].0, &dirs[2].0, &dirs[3].0],
+            [&dirs[0].1, &dirs[1].1, &dirs[2].1, &dirs[3].1],
+            [&dirs[0].2, &dirs[1].2, &dirs[2].2, &dirs[3].2],
+            &self.merge,
+            &self.u,
+            self.kchunk,
+            &xp.shape,
+            ThreadPool::global(),
+        );
+        self.up.apply(&merged)
+    }
+
+    /// The pre-fusion reference composition (directional scans through
+    /// `scan_l2r_pool`, explicit `from_canonical`, separate merge and
+    /// modulation passes). Kept as the bit-exact ground truth
+    /// [`Self::forward`] is pinned against.
+    pub fn forward_ref(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.c);
+        let xp = self.down.apply(x);
+        let pool = ThreadPool::global();
+        let dirs = self.project_directions(&xp);
+        let ys = pool.map((0..4usize).collect(), |k| {
+            let d = DIRECTIONS[k];
+            let (xc, taps, lamc) = &dirs[k];
+            let hc = super::core::scan_l2r_pool(xc, taps, lamc, self.kchunk, pool);
             from_canonical(&hc, d)
         });
 
@@ -143,7 +216,7 @@ impl CompactGspnUnit {
             }
         }
 
-        let modulated = super::core::output_modulation(&merged, &self.u);
+        let modulated = super::core::output_modulation_owned(merged, &self.u);
         self.up.apply(&modulated)
     }
 }
@@ -227,5 +300,50 @@ mod tests {
         let x = Tensor::randn(&[1, 8, 8, 8], &mut rng, 1.0);
         let y = unit.forward(&x);
         assert_eq!(y.shape, x.shape);
+    }
+
+    #[test]
+    fn fused_forward_bit_identical_to_reference() {
+        // The fused scan+merge+modulate path must not change a single
+        // bit vs the reference composition — per-channel and shared
+        // taps, chunked and global.
+        let mut rng = Rng::new(7);
+        for (c, cp, kchunk, per_channel) in
+            [(16, 4, 0, false), (8, 2, 4, false), (8, 4, 0, true)]
+        {
+            let unit = CompactGspnUnit::init(&mut rng, c, cp, kchunk, per_channel);
+            let x = Tensor::randn(&[2, c, 8, 8], &mut rng, 1.0);
+            let fused = unit.forward(&x);
+            let reference = unit.forward_ref(&x);
+            assert_eq!(fused.data, reference.data, "c{c} p{cp} k{kchunk} pc{per_channel}");
+        }
+    }
+
+    #[test]
+    fn parallel_proj_bit_identical_to_serial_loop() {
+        // Proj::apply fans out over the pool above a work floor; the
+        // result must be bit-identical to the naive triple loop.
+        let mut rng = Rng::new(8);
+        let p = Proj::init(&mut rng, 7, 5);
+        let x = Tensor::randn(&[2, 7, 33, 41], &mut rng, 1.0);
+        let got = p.apply(&x);
+        let mut want = Tensor::zeros(&[2, 5, 33, 41]);
+        let plane = 33 * 41;
+        for ni in 0..2 {
+            for co in 0..5 {
+                let obase = (ni * 5 + co) * plane;
+                for k in 0..plane {
+                    want.data[obase + k] = p.b[co];
+                }
+                for ci in 0..7 {
+                    let wv = p.w[co * 7 + ci];
+                    let ibase = (ni * 7 + ci) * plane;
+                    for k in 0..plane {
+                        want.data[obase + k] += wv * x.data[ibase + k];
+                    }
+                }
+            }
+        }
+        assert_eq!(got.data, want.data);
     }
 }

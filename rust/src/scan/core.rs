@@ -148,19 +148,30 @@ pub fn scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Ten
 }
 
 /// Output modulation of Eq. 2: y = u ⊙ h with per-channel gain u (C,).
+/// Borrowing wrapper kept for callers outside the fused path; owners
+/// should pass ownership to [`output_modulation_owned`], and the fused
+/// engine ([`super::fused`]) folds the modulation into its scatter
+/// epilogue so no separate pass runs at all.
 pub fn output_modulation(h: &Tensor, u: &[f32]) -> Tensor {
-    let (n, c, hh, w) = (h.shape[0], h.shape[1], h.shape[2], h.shape[3]);
+    output_modulation_owned(h.clone(), u)
+}
+
+/// [`output_modulation`] on an owned input: one in-place traversal, no
+/// clone and no second pass over the data.
+pub fn output_modulation_owned(mut h: Tensor, u: &[f32]) -> Tensor {
+    let (c, hh, w) = (h.shape[1], h.shape[2], h.shape[3]);
     assert_eq!(u.len(), c);
-    let mut out = h.clone();
-    for ni in 0..n {
-        for ci in 0..c {
-            let base = (ni * c + ci) * hh * w;
-            for k in 0..hh * w {
-                out.data[base + k] *= u[ci];
-            }
+    let plane = hh * w;
+    if plane == 0 || h.data.is_empty() {
+        return h;
+    }
+    for (p, os) in h.data.chunks_mut(plane).enumerate() {
+        let g = u[p % c];
+        for v in os {
+            *v *= g;
         }
     }
-    out
+    h
 }
 
 /// FLOP count of one scan (7 madds/pixel/channel: 3 tap muls + 2 adds +

@@ -7,7 +7,8 @@
 //! pairwise connectivity across the grid (the paper's full-context claim);
 //! `merged_4dir` applies a learned convex combination over directions.
 
-use super::core::{scan_l2r, scan_l2r_pool};
+use super::core::scan_l2r;
+use super::fused::{fused_merged_4dir, fused_merged_4dir_pool};
 use super::taps::Taps;
 use crate::tensor::Tensor;
 use crate::util::ThreadPool;
@@ -88,8 +89,13 @@ pub(crate) fn merge_weights(merge_logits: &[f32; 4]) -> [f32; 4] {
     std::array::from_fn(|k| exps[k] / z)
 }
 
-/// Four directional scans merged by convex weights (softmaxed logits).
-pub fn merged_4dir(
+/// The serial reference composition of the four-direction merge: one
+/// `scan_dir` per direction (with its `to_canonical`/`from_canonical`
+/// materializations) and a separate weighted accumulation pass. Kept as
+/// the bit-exact ground truth the fused engine ([`super::fused`]) is
+/// pinned against; production callers go through [`merged_4dir`], which
+/// routes to the fused path.
+pub fn merged_4dir_ref(
     x: &Tensor,
     taps: [&Taps; 4],
     lam: &Tensor,
@@ -107,12 +113,26 @@ pub fn merged_4dir(
     out
 }
 
-/// [`merged_4dir`] with the four directional passes submitted to a
-/// shared pool, each pass additionally fanning its plane loop into the
-/// same pool (nested submission is safe: the pool's helping wait drains
-/// nested jobs, even on a 1-thread pool). Bit-identical to the serial
-/// path — per-direction results are unchanged and the weighted
-/// accumulation runs in the same direction order on the caller.
+/// Four directional scans merged by convex weights (softmaxed logits).
+/// Routed through the column-staged fused engine — bit-identical to
+/// [`merged_4dir_ref`] (pinned by property tests) with zero canonical /
+/// directional intermediates.
+pub fn merged_4dir(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    fused_merged_4dir(x, taps, lam, merge_logits, kchunk)
+}
+
+/// [`merged_4dir`] with the fused engine's plane loop submitted to a
+/// shared pool in block-granular jobs (one job per block of planes,
+/// sized off the pool width — not one per plane, and not one per
+/// direction: directions merge in-pass inside each plane job, which is
+/// what keeps the accumulation order, and therefore every bit, identical
+/// to the serial path).
 pub fn merged_4dir_pool(
     x: &Tensor,
     taps: [&Taps; 4],
@@ -121,21 +141,7 @@ pub fn merged_4dir_pool(
     kchunk: usize,
     pool: &ThreadPool,
 ) -> Tensor {
-    let wts = merge_weights(merge_logits);
-    let ys = pool.map((0..4usize).collect(), |k| {
-        let d = DIRECTIONS[k];
-        let xc = to_canonical(x, d);
-        let lamc = to_canonical(lam, d);
-        let h = scan_l2r_pool(&xc, taps[k], &lamc, kchunk, pool);
-        from_canonical(&h, d)
-    });
-    let mut out = Tensor::zeros(&x.shape);
-    for (k, y) in ys.iter().enumerate() {
-        for (o, v) in out.data.iter_mut().zip(&y.data) {
-            *o += wts[k] * v;
-        }
-    }
-    out
+    fused_merged_4dir_pool(x, taps, lam, merge_logits, kchunk, pool)
 }
 
 /// [`merged_4dir`] over the process-wide shared pool.
@@ -284,6 +290,10 @@ mod tests {
         // And through the global pool (the serving/model path).
         let global = merged_4dir_par(&x, tr, &lam, &logits, 0);
         assert_eq!(serial.data, global.data);
+        // All of the above route through the fused engine; the serial
+        // reference composition must agree bit for bit.
+        let reference = merged_4dir_ref(&x, tr, &lam, &logits, 0);
+        assert_eq!(reference.data, serial.data);
     }
 
     #[test]

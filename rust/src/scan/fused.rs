@@ -1,0 +1,990 @@
+//! Column-staged fused scan engine: one pass for pack → 4-direction
+//! scan → merge → modulate.
+//!
+//! GSPN-2's system contribution is three fixes to the same hot path, and
+//! this module is their CPU analog — the reference path in [`super::core`] /
+//! [`super::direction`] reproduces all three sins, the engine here removes
+//! them while staying **bit-identical** (exact `==` on `data`, pinned by
+//! property tests) to that reference:
+//!
+//! 1. **Micro-launches → block-granular work.** The reference submits one
+//!    pool job per (N·C) plane (the CPU twin of the paper's thousands of
+//!    per-column kernel launches). The fused engine submits one job per
+//!    *block* of planes, the block count sized off
+//!    [`ThreadPool::threads`] (§ "fusing the column loop into a single
+//!    kernel launch"), so dispatch overhead is O(threads), not O(planes).
+//!
+//! 2. **Shared-memory column staging → L1-resident column slabs.** The
+//!    reference walks columns over a row-major layout: every inner-loop
+//!    access strides by `W` floats and nothing vectorizes. The engine
+//!    processes each plane in slabs of [`SLAB`] canonical columns: the
+//!    pack step gathers the input term `b = lam ⊙ x` (one fused product,
+//!    exactly the `ls[p] * xs[p]` unit of the reference expression) into
+//!    a column-major slab — row index contiguous, the CPU analog of the
+//!    paper's shared-memory column staging — with the direction's
+//!    orientation folded into the gather, so no
+//!    `to_canonical`/`from_canonical`/`flip_last` tensor is ever
+//!    materialized. The previous column is read straight out of the slab
+//!    (a carry column crosses slab boundaries), and the scan inner loop
+//!    is unit-stride over four L1-resident columns and auto-vectorizes.
+//!    Taps are staged once per (batch, weight-channel) and — with the
+//!    §4.2 channel-shared weights — reused by every channel plane.
+//!
+//! 3. **Global-memory round trips → fused epilogue.** The reference
+//!    materializes two canonical copies per direction, a full scan
+//!    output per direction, a `from_canonical` copy of each, a separate
+//!    merge-accumulate pass, and `output_modulation`'s clone + second
+//!    traversal — four full intermediate tensors and change. The
+//!    scatter-back epilogue here folds the inverse orientation, the
+//!    softmax-weighted 4-direction merge, *and* the `u ⊙ h` output
+//!    modulation into the per-slab drain; no directional intermediate
+//!    ever exists in memory, and scratch is O(SLAB·max(H, W)) per job
+//!    instead of O(H·W) panels.
+//!
+//! Bit-exactness: per element the engine evaluates exactly the reference
+//! expression `up + ct + dn + (lam·x)` in the same association,
+//! accumulates directions in the same `k = 0..4` order, and multiplies
+//! the modulation gain after the full accumulation — memory layout
+//! changes, arithmetic does not (Rust never reassociates or contracts
+//! float ops, so vectorization cannot perturb results).
+
+use super::direction::{merge_weights, Direction, DIRECTIONS};
+use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
+use crate::tensor::Tensor;
+use crate::util::ThreadPool;
+
+/// Canonical columns staged per slab. 32 columns keep the b/h slabs
+/// L1-resident up to H = 256 while amortizing the slab loop overhead;
+/// measured best among {8, 16, 32} at both acceptance geometries.
+const SLAB: usize = 32;
+
+// ---------------------------------------------------------------------
+// Taps staging: full column-major panels, shared across channel planes
+// ---------------------------------------------------------------------
+
+/// Transpose an `h x w` row-major plane into a `w`-columns-of-`h` panel
+/// (`dst[i*h + r] = src[r*w + i]`) through an 8x8 tile buffer, so reads
+/// are contiguous and writes flush in contiguous 8-float runs.
+fn transpose_plane(src: &[f32], h: usize, w: usize, dst: &mut [f32]) {
+    const T: usize = 8;
+    let mut tmp = [0.0f32; T * T];
+    let mut r0 = 0;
+    while r0 + T <= h {
+        let mut i0 = 0;
+        while i0 + T <= w {
+            for r in 0..T {
+                let row = &src[(r0 + r) * w + i0..(r0 + r) * w + i0 + T];
+                for i in 0..T {
+                    tmp[i * T + r] = row[i];
+                }
+            }
+            for i in 0..T {
+                dst[(i0 + i) * h + r0..(i0 + i) * h + r0 + T]
+                    .copy_from_slice(&tmp[i * T..i * T + T]);
+            }
+            i0 += T;
+        }
+        while i0 < w {
+            for r in r0..r0 + T {
+                dst[i0 * h + r] = src[r * w + i0];
+            }
+            i0 += 1;
+        }
+        r0 += T;
+    }
+    while r0 < h {
+        for i in 0..w {
+            dst[i * h + r0] = src[r0 * w + i];
+        }
+        r0 += 1;
+    }
+}
+
+/// Taps of one direction re-staged into column-major panels, shared
+/// read-only across all plane jobs. With the channel-shared weights of
+/// §4.2 (`Cw == 1`) each tap plane is staged once per batch item and
+/// every channel plane reuses it.
+struct StagedTaps {
+    /// Layout: per (ni*cw + ci), three `hc x wc` column-major panels in
+    /// tap order (up, center, down).
+    data: Vec<f32>,
+    cw: usize,
+    plane: usize,
+}
+
+impl StagedTaps {
+    fn build(taps: &Taps, pool: Option<&ThreadPool>) -> StagedTaps {
+        let (hc, wc) = (taps.h, taps.w);
+        let plane = hc * wc;
+        let blocks = taps.n * taps.cw;
+        let mut data = vec![0.0f32; blocks * 3 * plane];
+        let stage_block = |(b, dst): (usize, &mut [f32])| {
+            let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
+            for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
+                transpose_plane(
+                    &src[tap * plane..(tap + 1) * plane],
+                    hc,
+                    wc,
+                    &mut dst[tap * plane..(tap + 1) * plane],
+                );
+            }
+        };
+        match pool {
+            Some(pool) if blocks > 1 && plane >= 1 << 12 => {
+                let jobs: Vec<(usize, &mut [f32])> =
+                    data.chunks_mut(3 * plane).enumerate().collect();
+                pool.map(jobs, stage_block);
+            }
+            _ => {
+                for job in data.chunks_mut(3 * plane).enumerate() {
+                    stage_block(job);
+                }
+            }
+        }
+        StagedTaps { data, cw: taps.cw, plane }
+    }
+
+    /// The three staged panels for channel `ci` of batch item `ni`
+    /// (clamped for shared mode).
+    #[inline]
+    fn panels(&self, ni: usize, ci: usize) -> (&[f32], &[f32], &[f32]) {
+        let c = if self.cw == 1 { 0 } else { ci };
+        let base = (ni * self.cw + c) * 3 * self.plane;
+        let s = &self.data[base..base + 3 * self.plane];
+        (
+            &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
+            &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
+            &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pack: gather b = lam ⊙ x column slabs with orientation folded in
+// ---------------------------------------------------------------------
+
+/// How a direction's activations are laid out: shared spatial tensors
+/// (orientation folded into the gather) or per-direction canonical
+/// row-major tensors (the compact unit's case — its 1x1 projections
+/// already produced canonical layouts, so the gather is a straight
+/// transpose).
+#[derive(Clone, Copy)]
+enum Orientation {
+    Spatial,
+    Canonical,
+}
+
+/// Pack canonical columns `i0..i0+sw` of `b = lam ⊙ x` into the
+/// column-major slab (`b[i*hc + r]` = canonical column `i0+i`, row `r`).
+/// The product is the exact `ls[p] * xs[p]` unit of the reference
+/// expression, computed during the gather so `x` and `lam` are each read
+/// once and no staged copy of either exists.
+#[allow(clippy::too_many_arguments)]
+fn pack_slab(
+    xs: &[f32],
+    ls: &[f32],
+    h: usize,
+    w: usize,
+    d: Direction,
+    layout: Orientation,
+    i0: usize,
+    sw: usize,
+    hc: usize,
+    b: &mut [f32],
+) {
+    match (layout, d) {
+        // Spatial L2R and every canonical layout: canonical (r, i) is
+        // row-major (r, i) of the source with dims (hc, wc) — for
+        // spatial L2R those are just (H, W), so one transposing gather
+        // covers both.
+        (Orientation::Canonical, _) | (Orientation::Spatial, Direction::L2R) => {
+            let wr = hw_src(h, w, d).1;
+            for r in 0..hc {
+                let base = r * wr + i0;
+                let (xr, lr) = (&xs[base..base + sw], &ls[base..base + sw]);
+                for i in 0..sw {
+                    b[i * hc + r] = lr[i] * xr[i];
+                }
+            }
+        }
+        (Orientation::Spatial, Direction::R2L) => {
+            // canonical (r, i) = spatial (r, W-1-i).
+            for r in 0..h {
+                let row = r * w;
+                for i in 0..sw {
+                    let p = row + w - 1 - (i0 + i);
+                    b[i * hc + r] = ls[p] * xs[p];
+                }
+            }
+        }
+        (Orientation::Spatial, Direction::T2B) => {
+            // canonical column i0+i is spatial row i0+i: contiguous on
+            // both sides.
+            for i in 0..sw {
+                let row = (i0 + i) * w;
+                let (xr, lr) = (&xs[row..row + w], &ls[row..row + w]);
+                let bc = &mut b[i * hc..i * hc + hc];
+                for r in 0..hc {
+                    bc[r] = lr[r] * xr[r];
+                }
+            }
+        }
+        (Orientation::Spatial, Direction::B2T) => {
+            // canonical column i0+i is spatial row H-1-(i0+i).
+            for i in 0..sw {
+                let row = (h - 1 - (i0 + i)) * w;
+                let (xr, lr) = (&xs[row..row + w], &ls[row..row + w]);
+                let bc = &mut b[i * hc..i * hc + hc];
+                for r in 0..hc {
+                    bc[r] = lr[r] * xr[r];
+                }
+            }
+        }
+    }
+}
+
+/// Source row-major dims for a direction/layout pair: spatial tensors
+/// keep (H, W); canonical tensors are stored as (hc, wc).
+#[inline]
+fn hw_src(h: usize, w: usize, d: Direction) -> (usize, usize) {
+    match d {
+        Direction::L2R | Direction::R2L => (h, w),
+        Direction::T2B | Direction::B2T => (w, h),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scan: the unit-stride staged kernel
+// ---------------------------------------------------------------------
+
+/// One column of the recurrence off staged (column-contiguous) slices.
+/// Evaluates exactly the reference expression of `core::scan_plane` —
+/// `up + ct + dn + (lam·x)` with `up`/`dn` literal `0.0` at the boundary
+/// rows — so the result is bit-identical; only the stride changed.
+#[inline]
+fn scan_col(prev: &[f32], b: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]) {
+    let h = out.len();
+    if h == 1 {
+        out[0] = 0.0 + tc[0] * prev[0] + 0.0 + b[0];
+        return;
+    }
+    out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1] + b[0];
+    for r in 1..h - 1 {
+        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1] + b[r];
+    }
+    let r = h - 1;
+    out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0 + b[r];
+}
+
+/// Scan one slab of canonical columns. `carry` holds the previous
+/// slab's last column on entry and this slab's last column on return —
+/// the "shared-memory" column handed across slab boundaries. Chunk
+/// resets (`gi % chunk == 0`) substitute the zero column, exactly like
+/// the reference's `hprev` reset.
+#[allow(clippy::too_many_arguments)]
+fn scan_slab(
+    hc: usize,
+    i0: usize,
+    sw: usize,
+    chunk: usize,
+    b: &[f32],
+    tu: &[f32],
+    tc: &[f32],
+    td: &[f32],
+    zeros: &[f32],
+    carry: &mut [f32],
+    hs: &mut [f32],
+) {
+    for i in 0..sw {
+        let gi = i0 + i;
+        let col = i * hc;
+        let gcol = gi * hc;
+        let (done, rest) = hs.split_at_mut(col);
+        let cur = &mut rest[..hc];
+        let prev: &[f32] = if gi % chunk == 0 {
+            &zeros[..hc]
+        } else if i == 0 {
+            &carry[..hc]
+        } else {
+            &done[col - hc..]
+        };
+        scan_col(
+            prev,
+            &b[col..col + hc],
+            &tu[gcol..gcol + hc],
+            &tc[gcol..gcol + hc],
+            &td[gcol..gcol + hc],
+            cur,
+        );
+    }
+    carry[..hc].copy_from_slice(&hs[(sw - 1) * hc..sw * hc]);
+}
+
+// ---------------------------------------------------------------------
+// Scatter-back epilogue: inverse orientation + merge + modulation
+// ---------------------------------------------------------------------
+
+/// Drain a scanned slab back to the spatial plane, mapping canonical
+/// (r, i0+i) to its spatial position and applying the epilogue op
+/// (assign, weighted merge, or merge + modulation) per element. This is
+/// the step that deletes the directional intermediates, the separate
+/// accumulation loop, and `output_modulation`'s clone.
+fn scatter_slab(
+    hs: &[f32],
+    h: usize,
+    w: usize,
+    d: Direction,
+    i0: usize,
+    sw: usize,
+    hc: usize,
+    out: &mut [f32],
+    f: impl Fn(f32, f32) -> f32,
+) {
+    match d {
+        Direction::L2R => {
+            for r in 0..h {
+                let orow = &mut out[r * w + i0..r * w + i0 + sw];
+                for i in 0..sw {
+                    orow[i] = f(orow[i], hs[i * hc + r]);
+                }
+            }
+        }
+        Direction::R2L => {
+            for r in 0..h {
+                let row = r * w;
+                for i in 0..sw {
+                    let p = row + w - 1 - (i0 + i);
+                    out[p] = f(out[p], hs[i * hc + r]);
+                }
+            }
+        }
+        Direction::T2B => {
+            for i in 0..sw {
+                let row = (i0 + i) * w;
+                let orow = &mut out[row..row + w];
+                let hcol = &hs[i * hc..i * hc + hc];
+                for r in 0..w {
+                    orow[r] = f(orow[r], hcol[r]);
+                }
+            }
+        }
+        Direction::B2T => {
+            for i in 0..sw {
+                let row = (h - 1 - (i0 + i)) * w;
+                let orow = &mut out[row..row + w];
+                let hcol = &hs[i * hc..i * hc + hc];
+                for r in 0..w {
+                    orow[r] = f(orow[r], hcol[r]);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-job scratch + block sizing
+// ---------------------------------------------------------------------
+
+/// Per-job scratch: the b and h column slabs, the carry column, and the
+/// zero column used at chunk resets. One per pool job, reused across
+/// every plane (and direction) the job owns.
+struct FusedScratch {
+    b: Vec<f32>,
+    h: Vec<f32>,
+    carry: Vec<f32>,
+    zeros: Vec<f32>,
+}
+
+impl FusedScratch {
+    fn new(hmax: usize) -> FusedScratch {
+        FusedScratch {
+            b: vec![0.0f32; SLAB * hmax],
+            h: vec![0.0f32; SLAB * hmax],
+            carry: vec![0.0f32; hmax],
+            zeros: vec![0.0f32; hmax],
+        }
+    }
+}
+
+/// Number of plane-blocks to submit for `nplanes` planes: about two
+/// blocks per worker for load balance, never more blocks than planes.
+/// This is the "one kernel launch" fix: job count scales with the pool,
+/// not with N·C. Shared with `Proj::apply`'s block dispatch so the
+/// blocks-per-worker policy has one source of truth.
+pub(crate) fn plane_blocks(nplanes: usize, threads: usize) -> usize {
+    nplanes.min((2 * threads).max(1))
+}
+
+// ---------------------------------------------------------------------
+// Input descriptors + engine core
+// ---------------------------------------------------------------------
+
+/// One direction's inputs to the fused engine.
+struct DirInput<'a> {
+    d: Direction,
+    taps: &'a Taps,
+    x: &'a Tensor,
+    lam: &'a Tensor,
+    layout: Orientation,
+    /// Effective chunk width in canonical columns.
+    chunk: usize,
+}
+
+fn effective_chunk(wc: usize, kchunk: usize) -> usize {
+    let chunk = if kchunk == 0 { wc } else { kchunk };
+    assert!(wc % chunk == 0, "kchunk={chunk} must divide W={wc}");
+    chunk
+}
+
+fn validate_dir(x: &Tensor, taps: &Taps, lam: &Tensor, d: Direction) {
+    assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
+    assert_eq!(x.shape, lam.shape, "lam shape must match x");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (hc, wc) = hw_src(h, w, d);
+    assert_eq!((taps.n, taps.h, taps.w), (n, hc, wc), "taps geometry mismatch");
+    assert!(taps.cw == 1 || taps.cw == c, "Cw must be 1 or C");
+}
+
+/// The fused per-plane pipeline: for each direction in order, walk the
+/// plane in column slabs — pack `b = lam ⊙ x`, scan, scatter with the
+/// epilogue op (assign / weighted merge / merge + modulate) — so every
+/// staged value is consumed while still L1-hot.
+#[allow(clippy::too_many_arguments)]
+fn run_plane(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps],
+    wts: Option<&[f32; 4]>,
+    gain: Option<f32>,
+    ni: usize,
+    ci: usize,
+    c: usize,
+    hw: (usize, usize),
+    os: &mut [f32],
+    scratch: &mut FusedScratch,
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let last = dirs.len() - 1;
+    for (k, di) in dirs.iter().enumerate() {
+        let (hc, wc) = (di.taps.h, di.taps.w);
+        let base = (ni * c + ci) * plane;
+        let xs = &di.x.data[base..base + plane];
+        let ls = &di.lam.data[base..base + plane];
+        let (tu, tc, td) = staged[k].panels(ni, ci);
+        let mut i0 = 0;
+        while i0 < wc {
+            let sw = SLAB.min(wc - i0);
+            pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut scratch.b);
+            scan_slab(
+                hc,
+                i0,
+                sw,
+                di.chunk,
+                &scratch.b,
+                tu,
+                tc,
+                td,
+                &scratch.zeros,
+                &mut scratch.carry,
+                &mut scratch.h,
+            );
+            match wts {
+                None => {
+                    scatter_slab(&scratch.h, h, w, di.d, i0, sw, hc, os, |_, v| v);
+                }
+                Some(wts) => {
+                    let wt = wts[k];
+                    match gain.filter(|_| k == last) {
+                        None => scatter_slab(
+                            &scratch.h,
+                            h,
+                            w,
+                            di.d,
+                            i0,
+                            sw,
+                            hc,
+                            os,
+                            |o, v| o + wt * v,
+                        ),
+                        Some(g) => scatter_slab(
+                            &scratch.h,
+                            h,
+                            w,
+                            di.d,
+                            i0,
+                            sw,
+                            hc,
+                            os,
+                            |o, v| (o + wt * v) * g,
+                        ),
+                    }
+                }
+            }
+            i0 += sw;
+        }
+    }
+}
+
+/// Drive `run_plane` over all (N·C) planes — serially, or in
+/// block-granular jobs on the pool.
+fn run_engine(
+    dirs: &[DirInput<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+) -> Tensor {
+    let (n, c) = (out_shape[0], out_shape[1]);
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let mut out = Tensor::zeros(out_shape);
+    let nplanes = n * c;
+    if nplanes == 0 || plane == 0 {
+        return out;
+    }
+    let hmax = h.max(w);
+    let staged: Vec<StagedTaps> =
+        dirs.iter().map(|d| StagedTaps::build(d.taps, pool)).collect();
+    let gain_for = |ci: usize| gain.map(|g| g[ci]);
+
+    match pool {
+        Some(pool) if nplanes > 1 && pool.threads() > 1 => {
+            let nblocks = plane_blocks(nplanes, pool.threads());
+            let per_block = nplanes.div_ceil(nblocks);
+            let jobs: Vec<(usize, &mut [f32])> =
+                out.data.chunks_mut(per_block * plane).enumerate().collect();
+            pool.map(jobs, |(bi, block)| {
+                let mut scratch = FusedScratch::new(hmax);
+                for (j, os) in block.chunks_mut(plane).enumerate() {
+                    let p = bi * per_block + j;
+                    run_plane(
+                        dirs,
+                        &staged,
+                        wts,
+                        gain_for(p % c),
+                        p / c,
+                        p % c,
+                        c,
+                        (h, w),
+                        os,
+                        &mut scratch,
+                    );
+                }
+            });
+        }
+        _ => {
+            let mut scratch = FusedScratch::new(hmax);
+            for (p, os) in out.data.chunks_mut(plane).enumerate() {
+                run_plane(
+                    dirs,
+                    &staged,
+                    wts,
+                    gain_for(p % c),
+                    p / c,
+                    p % c,
+                    c,
+                    (h, w),
+                    os,
+                    &mut scratch,
+                );
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------
+
+/// Fused directional scan (serial): bit-identical to
+/// `scan_dir(x, taps, lam, d, kchunk)` with zero canonical copies.
+pub fn fused_scan_dir(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, None)
+}
+
+/// [`fused_scan_dir`] with block-granular plane jobs on `pool`.
+pub fn fused_scan_dir_pool(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool))
+}
+
+fn fused_scan_dir_inner(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    pool: Option<&ThreadPool>,
+) -> Tensor {
+    validate_dir(x, taps, lam, d);
+    if x.data.is_empty() {
+        return Tensor::zeros(&x.shape);
+    }
+    let chunk = effective_chunk(taps.w, kchunk);
+    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
+    run_engine(&dirs, None, None, &x.shape, pool)
+}
+
+/// Fused canonical scan (serial): bit-identical to `scan_l2r`.
+pub fn fused_scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    fused_scan_dir(x, taps, lam, Direction::L2R, kchunk)
+}
+
+/// [`fused_scan_l2r`] with block-granular plane jobs on `pool`.
+pub fn fused_scan_l2r_pool(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_pool(x, taps, lam, Direction::L2R, kchunk, pool)
+}
+
+/// [`fused_scan_l2r`] over the process-wide shared pool.
+pub fn fused_scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    fused_scan_l2r_pool(x, taps, lam, kchunk, ThreadPool::global())
+}
+
+fn merged_dirs<'a>(
+    x: &'a Tensor,
+    taps: [&'a Taps; 4],
+    lam: &'a Tensor,
+    kchunk: usize,
+) -> Vec<DirInput<'a>> {
+    DIRECTIONS
+        .iter()
+        .enumerate()
+        .map(|(k, &d)| {
+            validate_dir(x, taps[k], lam, d);
+            DirInput {
+                d,
+                taps: taps[k],
+                x,
+                lam,
+                layout: Orientation::Spatial,
+                chunk: effective_chunk(taps[k].w, kchunk),
+            }
+        })
+        .collect()
+}
+
+/// Fused four-direction merge (serial): bit-identical to the reference
+/// [`super::direction::merged_4dir_ref`], with the pack, all four scans,
+/// and the weighted merge in one engine pass.
+pub fn fused_merged_4dir(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(&dirs, Some(&wts), None, &x.shape, None)
+}
+
+/// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
+pub fn fused_merged_4dir_pool(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool))
+}
+
+/// [`fused_merged_4dir`] over the process-wide shared pool.
+pub fn fused_merged_4dir_par(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    fused_merged_4dir_pool(x, taps, lam, merge_logits, kchunk, ThreadPool::global())
+}
+
+/// The compact unit's scan stage, fused end to end: per-direction
+/// activations `xcs[k]` / `lamcs[k]` are already in canonical layout
+/// (they come out of the unit's 1x1 projections), taps are canonical as
+/// always, and the epilogue folds the merge *and* the `u ⊙ h` output
+/// modulation into the scatter — the unit never materializes a
+/// directional output, the merged tensor, or the modulation clone.
+/// Output is the spatial (N, Cp, H, W) modulated merge, bit-identical to
+/// the reference composition in `CompactGspnUnit::forward_ref`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_merged_canonical(
+    xcs: [&Tensor; 4],
+    taps: [&Taps; 4],
+    lamcs: [&Tensor; 4],
+    merge_logits: &[f32; 4],
+    u: &[f32],
+    kchunk: usize,
+    out_shape: &[usize],
+    pool: &ThreadPool,
+) -> Tensor {
+    let dirs: Vec<DirInput<'_>> = DIRECTIONS
+        .iter()
+        .enumerate()
+        .map(|(k, &d)| {
+            let (xc, lamc) = (xcs[k], lamcs[k]);
+            assert_eq!(xc.rank(), 4, "xc must be (N, C, Hc, Wc)");
+            assert_eq!(xc.shape, lamc.shape, "lamc shape must match xc");
+            assert_eq!(
+                (taps[k].n, taps[k].h, taps[k].w),
+                (xc.shape[0], xc.shape[2], xc.shape[3]),
+                "taps geometry mismatch"
+            );
+            assert!(
+                taps[k].cw == 1 || taps[k].cw == xc.shape[1],
+                "Cw must be 1 or C"
+            );
+            DirInput {
+                d,
+                taps: taps[k],
+                x: xc,
+                lam: lamc,
+                layout: Orientation::Canonical,
+                chunk: effective_chunk(taps[k].w, kchunk),
+            }
+        })
+        .collect();
+    assert_eq!(u.len(), out_shape[1], "gain length must be C");
+    let wts = merge_weights(merge_logits);
+    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::core::{scan_l2r, scan_l2r_pool};
+    use crate::scan::direction::{merged_4dir_ref, scan_dir};
+    use crate::util::proptest::{check, ensure};
+    use crate::util::Rng;
+
+    fn divisors(w: usize) -> Vec<usize> {
+        (1..=w).filter(|d| w % d == 0).collect()
+    }
+
+    fn mk_taps(rng: &mut Rng, n: usize, cw: usize, h: usize, w: usize) -> Taps {
+        Taps::normalize(&Tensor::randn(&[n, cw, 3, h, w], rng, 1.0))
+    }
+
+    /// The tentpole pinning property: the fused engine is exactly equal
+    /// (`==` on `data`, not allclose) to the serial reference across
+    /// random shapes, every kchunk divisor, shared and per-channel taps,
+    /// and all four directions — including H=1 and W=1 edge geometries.
+    #[test]
+    fn fused_scan_pinned_bit_exact_to_reference() {
+        check("fused == scan_dir reference", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 3);
+            let h = g.int_in(1, 7);
+            let w = g.int_in(1, 7);
+            let cw = *g.pick(&[1, c]);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            for d in DIRECTIONS {
+                let (hc, wc) = hw_src(h, w, d);
+                let taps = mk_taps(&mut rng, n, cw, hc, wc);
+                let mut kchunks = vec![0usize];
+                kchunks.extend(divisors(wc));
+                for k in kchunks {
+                    let reference = scan_dir(&x, &taps, &lam, d, k);
+                    let fused = fused_scan_dir(&x, &taps, &lam, d, k);
+                    ensure(
+                        reference.shape == fused.shape && reference.data == fused.data,
+                        format!("fused != ref: n{n} c{c} {h}x{w} cw{cw} {d:?} k{k}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Slab-boundary coverage: widths around multiples of SLAB, so the
+    /// carry column crossing and the partial last slab are both hit,
+    /// including kchunk resets landing inside and on slab boundaries.
+    #[test]
+    fn fused_scan_exact_across_slab_boundaries() {
+        let mut rng = Rng::new(39);
+        for w in [SLAB - 1, SLAB, SLAB + 1, 2 * SLAB, 2 * SLAB + 3] {
+            let (n, c, h) = (1, 2, 5);
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = mk_taps(&mut rng, n, 1, h, w);
+            let mut kchunks = vec![0usize];
+            kchunks.extend(divisors(w));
+            for k in kchunks {
+                let reference = scan_l2r(&x, &taps, &lam, k);
+                let fused = fused_scan_l2r(&x, &taps, &lam, k);
+                assert_eq!(reference.data, fused.data, "w={w} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_merged_pinned_bit_exact_to_reference() {
+        check("fused merged == merged_4dir_ref", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 3);
+            let h = g.int_in(1, 6);
+            let w = g.int_in(1, 6);
+            let cw = *g.pick(&[1, c]);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let t_lr = mk_taps(&mut rng, n, cw, h, w);
+            let t_rl = mk_taps(&mut rng, n, cw, h, w);
+            let t_tb = mk_taps(&mut rng, n, cw, w, h);
+            let t_bt = mk_taps(&mut rng, n, cw, w, h);
+            let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+            let logits = [
+                g.f32_in(-2.0, 2.0),
+                g.f32_in(-2.0, 2.0),
+                g.f32_in(-2.0, 2.0),
+                g.f32_in(-2.0, 2.0),
+            ];
+            // kchunk must divide the canonical width of every direction.
+            let mut kchunks = vec![0usize];
+            kchunks.extend(divisors(w).into_iter().filter(|k| h % k == 0));
+            for k in kchunks {
+                let reference = merged_4dir_ref(&x, taps, &lam, &logits, k);
+                let fused = fused_merged_4dir(&x, taps, &lam, &logits, k);
+                ensure(
+                    reference.data == fused.data,
+                    format!("fused merged != ref: n{n} c{c} {h}x{w} cw{cw} k{k}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_pool_bit_identical_to_fused_serial_and_reference() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(40);
+        for (n, c, h, w, cw) in
+            [(2, 3, 8, 12, 3), (1, 1, 5, 7, 1), (3, 4, 16, 16, 1), (1, 2, 1, 6, 1), (1, 2, 6, 1, 2)]
+        {
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = mk_taps(&mut rng, n, cw, h, w);
+            for kchunk in [0, w] {
+                let reference = scan_l2r(&x, &taps, &lam, kchunk);
+                let serial = fused_scan_l2r(&x, &taps, &lam, kchunk);
+                let pooled = fused_scan_l2r_pool(&x, &taps, &lam, kchunk, &pool);
+                assert_eq!(reference.data, serial.data, "serial n{n} c{c} {h}x{w} k{kchunk}");
+                assert_eq!(reference.data, pooled.data, "pooled n{n} c{c} {h}x{w} k{kchunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_merged_pool_bit_identical_to_reference() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(41);
+        let (n, c, h, w) = (2, 3, 6, 7);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let taps = [&t_lr, &t_lr, &t_tb, &t_tb];
+        let logits = [0.4f32, -0.2, 1.1, 0.0];
+        let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+        let pooled = fused_merged_4dir_pool(&x, taps, &lam, &logits, 0, &pool);
+        let global = fused_merged_4dir_par(&x, taps, &lam, &logits, 0);
+        assert_eq!(reference.data, pooled.data);
+        assert_eq!(reference.data, global.data);
+    }
+
+    #[test]
+    fn fused_canonical_merge_modulate_matches_reference_composition() {
+        // The compact-unit path: canonical per-direction activations,
+        // fused merge + u ⊙ h modulation vs the explicit reference
+        // composition (scan_l2r_pool + from_canonical + merge pass +
+        // output_modulation).
+        use crate::scan::direction::{from_canonical, to_canonical};
+        let pool = crate::util::ThreadPool::new(2);
+        let mut rng = Rng::new(42);
+        let (n, c, h, w) = (2, 3, 5, 6);
+        let xp = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let logits = [0.3f32, -0.7, 0.2, 1.0];
+        let u: Vec<f32> = (0..c).map(|i| 0.5 + i as f32).collect();
+        let mut xcs = Vec::new();
+        let mut taps = Vec::new();
+        let mut lamcs = Vec::new();
+        for d in DIRECTIONS {
+            let xc = to_canonical(&xp, d);
+            let (hc, wc) = (xc.shape[2], xc.shape[3]);
+            taps.push(mk_taps(&mut rng, n, 1, hc, wc));
+            lamcs.push(Tensor::randn(&xc.shape, &mut rng, 1.0));
+            xcs.push(xc);
+        }
+        let fused = fused_merged_canonical(
+            [&xcs[0], &xcs[1], &xcs[2], &xcs[3]],
+            [&taps[0], &taps[1], &taps[2], &taps[3]],
+            [&lamcs[0], &lamcs[1], &lamcs[2], &lamcs[3]],
+            &logits,
+            &u,
+            0,
+            &xp.shape,
+            &pool,
+        );
+        let wts = merge_weights(&logits);
+        let mut merged = Tensor::zeros(&xp.shape);
+        for (k, d) in DIRECTIONS.iter().enumerate() {
+            let hcan = scan_l2r_pool(&xcs[k], &taps[k], &lamcs[k], 0, &pool);
+            let y = from_canonical(&hcan, *d);
+            for (o, v) in merged.data.iter_mut().zip(&y.data) {
+                *o += wts[k] * v;
+            }
+        }
+        let reference = crate::scan::core::output_modulation_owned(merged, &u);
+        assert_eq!(reference.data, fused.data);
+    }
+
+    #[test]
+    fn fused_empty_and_degenerate_geometries() {
+        // N·C = 0 and H = 0 return zeros without panicking, as the
+        // reference does.
+        let x = Tensor::zeros(&[0, 3, 4, 5]);
+        let lam = Tensor::zeros(&[0, 3, 4, 5]);
+        let taps = Taps::normalize(&Tensor::zeros(&[0, 1, 3, 4, 5]));
+        let out = fused_scan_l2r(&x, &taps, &lam, 0);
+        assert_eq!(out.shape, vec![0, 3, 4, 5]);
+
+        let x = Tensor::zeros(&[1, 2, 0, 5]);
+        let lam = Tensor::zeros(&[1, 2, 0, 5]);
+        let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
+        let out = fused_scan_l2r(&x, &taps, &lam, 0);
+        assert!(out.data.is_empty());
+    }
+
+    #[test]
+    fn block_count_scales_with_pool_not_planes() {
+        assert_eq!(plane_blocks(1000, 4), 8);
+        assert_eq!(plane_blocks(3, 4), 3);
+        assert_eq!(plane_blocks(0, 4), 0);
+        assert_eq!(plane_blocks(16, 1), 2);
+    }
+}

@@ -5,6 +5,10 @@
 //! * [`core`] — the canonical left-to-right line scan (Eq. 1) with the
 //!   GSPN-local chunked variant, plus output modulation (Eq. 2).
 //! * [`direction`] — the four directional passes and learned merging.
+//! * [`fused`] — the column-staged fused scan engine: pack →
+//!   4-direction scan → merge → modulate in one pass, bit-identical to
+//!   the reference path above (the production hot path; see its module
+//!   docs for how it maps onto the paper's three GPU bottlenecks).
 //! * [`gmatrix`] — the Eq. 4 dense expansion (linear-attention view),
 //!   used for validation and attention-map introspection.
 //! * [`compact`] — GSPN-2's compact channel propagation (§4.2):
@@ -24,15 +28,23 @@
 pub mod compact;
 pub mod core;
 pub mod direction;
+pub mod fused;
 pub mod gmatrix;
 pub mod split;
 pub mod taps;
 
 pub use compact::{CompactGspnUnit, Proj};
-pub use core::{kchunk_valid, output_modulation, scan_flops, scan_l2r, scan_l2r_par, scan_l2r_pool};
+pub use core::{
+    kchunk_valid, output_modulation, output_modulation_owned, scan_flops, scan_l2r,
+    scan_l2r_par, scan_l2r_pool,
+};
 pub use direction::{
-    from_canonical, merged_4dir, merged_4dir_par, merged_4dir_pool, scan_dir, to_canonical,
-    Direction, DIRECTIONS,
+    from_canonical, merged_4dir, merged_4dir_par, merged_4dir_pool, merged_4dir_ref, scan_dir,
+    to_canonical, Direction, DIRECTIONS,
+};
+pub use fused::{
+    fused_merged_4dir, fused_merged_4dir_par, fused_merged_4dir_pool, fused_scan_dir,
+    fused_scan_dir_pool, fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool,
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};

@@ -201,3 +201,111 @@ fn chunked_bucket_served() {
     assert!(got.max_abs_diff(&want) < 2e-4);
     coord.shutdown();
 }
+
+// ---------------------------------------------------------------------
+// cpu-fused backend: the column-staged fused scan engine serves directly,
+// no artifacts required — these tests always run.
+// ---------------------------------------------------------------------
+
+fn cpu_cfg(workers: usize, max_batch: usize, wait_us: u64, cap: usize) -> ServeConfig {
+    ServeConfig { backend: "cpu".into(), ..cfg(workers, max_batch, wait_us, cap) }
+}
+
+#[test]
+fn cpu_backend_serves_bit_identical_results() {
+    let coord = Coordinator::start(&cpu_cfg(2, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(11);
+    let mut cases = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        // Arbitrary geometries, including ones no artifact covers.
+        let (c, h, w) = [(8, 64, 64), (3, 17, 29), (1, 5, 40)][i % 3];
+        let (x, a, lam) = mk_case(&mut rng, c, h, w);
+        let rx = coord
+            .submit_scan(x.clone(), a.clone(), lam.clone(), 0)
+            .expect("cpu backend accepts any valid geometry");
+        cases.push((x, a, lam));
+        rxs.push(rx);
+    }
+    for ((x, a, lam), rx) in cases.into_iter().zip(rxs) {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let got = resp.result.expect("ok")[0].as_f32().unwrap().clone();
+        let want = scan_l2r(&x, &Taps::normalize(&a), &lam, 0);
+        // The fused engine is pinned bit-identical to the reference.
+        assert_eq!(got.data, want.data, "cpu-fused serving diverged");
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 6);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn cpu_backend_serves_chunked_scans() {
+    let coord = Coordinator::start(&cpu_cfg(1, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(12);
+    let (x, a, lam) = mk_case(&mut rng, 4, 32, 48);
+    let rx = coord.submit_scan(x.clone(), a.clone(), lam.clone(), 16).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let got = resp.result.unwrap()[0].as_f32().unwrap().clone();
+    let want = scan_l2r(&x, &Taps::normalize(&a), &lam, 16);
+    assert_eq!(got.data, want.data);
+    coord.shutdown();
+}
+
+#[test]
+fn cpu_backend_still_validates_admission() {
+    let coord = Coordinator::start(&cpu_cfg(1, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(13);
+    let (x, a, lam) = mk_case(&mut rng, 4, 32, 48);
+    // Bad kchunk must still be a structured rejection, not a panic.
+    match coord.submit_scan(x, a, lam, 7) {
+        Err(SubmitError::Invalid(why)) => assert!(why.contains("kchunk"), "{why}"),
+        other => panic!("expected Invalid, got {other:?}"),
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.rejected, 1);
+}
+
+#[test]
+fn cpu_backend_fuses_batches() {
+    // Long wait window so requests land in one collection window; the
+    // cpu path reports the fused batch size it was released with.
+    // eager_idle off: cpu workers are ready instantly (no engine
+    // compile), so an idle-release could otherwise race the submissions
+    // and drain the first request as a batch of 1.
+    let coord = Coordinator::start(&ServeConfig {
+        eager_idle: false,
+        ..cpu_cfg(1, 4, 50_000, 64)
+    })
+    .unwrap();
+    let mut rng = Rng::new(14);
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let (x, a, lam) = mk_case(&mut rng, 2, 16, 16);
+        rxs.push(coord.submit_scan(x, a, lam, 0).unwrap());
+    }
+    let mut max_batch_seen = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.result.is_ok());
+        max_batch_seen = max_batch_seen.max(resp.batch);
+    }
+    assert!(max_batch_seen >= 2, "no fusion happened (max batch {max_batch_seen})");
+    coord.shutdown();
+}
+
+#[test]
+fn cpu_backend_rejects_direct_requests() {
+    let coord = Coordinator::start(&cpu_cfg(1, 4, 500, 64)).unwrap();
+    let rx = coord.submit_direct("classifier_fwd_b8", vec![]).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let err = resp.result.expect_err("direct needs pjrt");
+    assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_backend_rejected_at_start() {
+    let bad = ServeConfig { backend: "tpu".into(), ..ServeConfig::default() };
+    assert!(Coordinator::start(&bad).is_err());
+}
