@@ -12,7 +12,8 @@
 use std::time::Duration;
 
 use gspn2::scan::fused::{
-    fused_merged_4dir, fused_merged_4dir_pool, fused_scan_l2r, fused_scan_l2r_pool,
+    auto_segments, fused_merged_4dir, fused_merged_4dir_pool, fused_scan_l2r,
+    fused_scan_l2r_pool, fused_scan_l2r_seg,
 };
 use gspn2::scan::{
     expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool, scan_l2r_split,
@@ -78,6 +79,52 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup merged_4dir c{c} {h}x{w} fused-pool/ref"),
             m_ref.mean_ns / m_fused_pool.mean_ns,
+            "x",
+        );
+    }
+
+    // Low-occupancy geometries (the §5.1 regime): few planes, huge H·W.
+    // The "plane" row runs the PR 2 engine at its effective parallelism
+    // cap — plane-parallel work cannot use more threads than planes, so
+    // an nplanes-thread pool measures exactly what the old engine does
+    // on any wider pool. The "auto" rows let the occupancy scheduler
+    // segment on an 8-thread pool (the acceptance configuration) and on
+    // the host-sized global pool (what serving actually gets here).
+    for (n, c, h, w) in [(1usize, 4usize, 512usize, 512usize), (1, 1, 1024, 1024)] {
+        let nplanes = n * c;
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = Taps::normalize(&Tensor::randn(&[n, 1, 3, h, w], &mut rng, 1.0));
+        let plane_pool = ThreadPool::new(nplanes);
+        let seg_pool = ThreadPool::new(8);
+        let tag = format!("n{n}c{c} {h}x{w}");
+
+        let r_plane = suite.bench(&format!("scan_l2r {tag} (fused plane, PR2)"), || {
+            black_box(fused_scan_l2r_pool(&x, &taps, &lam, 0, &plane_pool));
+        });
+        let s8 = auto_segments(nplanes, w, seg_pool.threads()).unwrap_or(1);
+        let r_seg8 = suite.bench(
+            &format!("scan_l2r {tag} (fused auto seg={s8}, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_pool(&x, &taps, &lam, 0, &seg_pool));
+            },
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} seg8/plane"),
+            r_plane.mean_ns / r_seg8.mean_ns,
+            "x",
+        );
+        let gt = pool.threads();
+        let sg = auto_segments(nplanes, w, gt).unwrap_or(1);
+        let r_seg_host = suite.bench(
+            &format!("scan_l2r {tag} (fused auto seg={sg}, {gt} threads host)"),
+            || {
+                black_box(fused_scan_l2r_pool(&x, &taps, &lam, 0, pool));
+            },
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} host/plane"),
+            r_plane.mean_ns / r_seg_host.mean_ns,
             "x",
         );
     }
@@ -159,9 +206,10 @@ fn main() {
         });
     }
 
-    // Segment-parallel decomposition (the §5.1 extension): sequential vs
-    // split with 1 thread (pure overhead) vs split on the shared pool
-    // (t>1 submits to ThreadPool::global(), no per-call spawns).
+    // Segment-parallel decomposition (the §5.1 extension), now served by
+    // the fused engine: the unfused scan_l2r_split rows stay as the
+    // bit-identity reference; production callers route through the
+    // fused scheduler (`fused auto` row) or the forced-segment hook.
     {
         let (c, h, w) = (1usize, 256usize, 256usize);
         let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
@@ -170,13 +218,20 @@ fn main() {
         suite.bench("scan_l2r c1 256x256 (sequential)", || {
             black_box(scan_l2r(&x, &a, &lam, 0));
         });
-        suite.bench("scan_split c1 256x256 seg=8 t=1", || {
+        suite.bench("scan_split c1 256x256 seg=8 t=1 (unfused ref)", || {
             black_box(scan_l2r_split(&x, &a, &lam, 8, 1));
         });
         // threads > 1 bounds the job count submitted to the shared pool.
         let t = ThreadPool::global().threads().clamp(2, 8);
-        suite.bench(&format!("scan_split c1 256x256 seg=8 t={t} (pool)"), || {
+        suite.bench(&format!("scan_split c1 256x256 seg=8 t={t} (unfused ref)"), || {
             black_box(scan_l2r_split(&x, &a, &lam, 8, t));
+        });
+        let pool = ThreadPool::global();
+        suite.bench("scan_l2r c1 256x256 seg=8 (fused segmented)", || {
+            black_box(fused_scan_l2r_seg(&x, &a, &lam, 0, 8, pool));
+        });
+        suite.bench("scan_l2r c1 256x256 (fused auto)", || {
+            black_box(fused_scan_l2r_pool(&x, &a, &lam, 0, pool));
         });
     }
 

@@ -23,7 +23,10 @@ use crate::util::toml::Toml;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
-    /// Number of executor workers pulling batches.
+    /// Number of executor workers pulling batches. 0 (the default) means
+    /// auto: the coordinator sizes the executor set off the shared
+    /// `ThreadPool::global()` width, since executors fan their CPU work
+    /// into that pool.
     pub workers: usize,
     /// Dynamic batcher: max requests fused into one executable call.
     pub max_batch: usize,
@@ -49,7 +52,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
-            workers: 2,
+            workers: 0,
             max_batch: 4,
             max_wait_us: 2_000,
             queue_cap: 256,

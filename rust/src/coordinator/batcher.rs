@@ -24,8 +24,10 @@ pub struct BatchPolicy {
     /// Release partial batches immediately when a worker would otherwise
     /// idle: batch formation only pays when the executor is busy, so an
     /// idle worker takes whatever is queued instead of letting the head
-    /// request age out `max_wait` (latency-under-idleness; see
-    /// EXPERIMENTS.md §Perf).
+    /// request age out `max_wait` (latency-under-idleness). The serving
+    /// worker additionally sizes eager releases off shared-pool
+    /// occupancy via [`Batcher::pop_eager_min`]: a saturated pool holds
+    /// partials back so batches come out larger.
     pub eager_idle: bool,
 }
 
@@ -117,6 +119,14 @@ impl Batcher {
     /// requests (len <= fused size; len == fused size unless the bucket
     /// only offers larger artifacts — callers pad in that case).
     pub fn pop_batch(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
+        self.pop_releasable(now, 1)
+    }
+
+    fn pop_releasable(
+        &mut self,
+        now: Instant,
+        min_len: usize,
+    ) -> Option<(Bucket, usize, Vec<Request>)> {
         let keys: Vec<Bucket> = self.queues.keys().cloned().collect();
         if keys.is_empty() {
             return None;
@@ -125,7 +135,7 @@ impl Batcher {
         for i in 0..n {
             let k = &keys[(self.rr_cursor + i) % n];
             let q = self.queues.get_mut(k).unwrap();
-            if q.is_empty() {
+            if q.is_empty() || q.len() < min_len {
                 continue;
             }
             let head_aged =
@@ -160,7 +170,26 @@ impl Batcher {
     /// Pop regardless of head age (the eager-idle path): equivalent to
     /// `pop_batch` at a time when every head has aged out.
     pub fn pop_eager(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_batch(now + self.policy.max_wait + Duration::from_nanos(1))
+        self.pop_eager_min(now, 1)
+    }
+
+    /// Pool-occupancy-aware eager pop: like [`Batcher::pop_eager`], but
+    /// only releases buckets holding at least `min_len` requests. The
+    /// serving worker raises `min_len` to `max_batch` while the shared
+    /// thread pool is saturated — an eager partial release buys no
+    /// latency when the executor would only queue behind the pool, so
+    /// the batcher keeps accumulating toward a larger fused batch
+    /// instead. Truly aged heads are never starved: callers release them
+    /// through [`Batcher::pop_batch`] first, where age always wins.
+    /// `min_len` is clamped to `max_batch` so a full bucket always
+    /// releases.
+    pub fn pop_eager_min(
+        &mut self,
+        now: Instant,
+        min_len: usize,
+    ) -> Option<(Bucket, usize, Vec<Request>)> {
+        let min_len = min_len.clamp(1, self.policy.max_batch.max(1));
+        self.pop_releasable(now + self.policy.max_wait + Duration::from_nanos(1), min_len)
     }
 
     /// Drain everything regardless of age (shutdown path).
@@ -357,6 +386,64 @@ mod tests {
         let (r, _rx2) = req(2, 16, now);
         b.enqueue(bucket(16), r).expect("registered now");
         assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn eager_min_holds_small_batches_until_sized() {
+        let mut b = mk_batcher(4, 1_000_000);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r).expect("registered");
+            rxs.push(rx);
+        }
+        // Saturated-pool setting (min_len = max_batch): 3 of 4 queued
+        // are held back by the eager path.
+        assert!(b.pop_eager_min(now, 4).is_none());
+        assert_eq!(b.queued(), 3);
+        // The 4th request fills the bucket: the sized eager pop fires
+        // with the full fused batch.
+        let (r, rx) = req(9, 8, now);
+        b.enqueue(bucket(8), r).expect("registered");
+        rxs.push(rx);
+        let (_, fused, reqs) = b.pop_eager_min(now, 4).expect("sized release");
+        assert_eq!(fused, 4);
+        assert_eq!(reqs.len(), 4);
+        // An idle pool (min_len = 1) keeps releasing partials instantly.
+        let (r, rx) = req(10, 8, now);
+        b.enqueue(bucket(8), r).expect("registered");
+        rxs.push(rx);
+        let (_, fused, reqs) = b.pop_eager_min(now, 1).expect("idle release");
+        assert_eq!(fused, 1);
+        assert_eq!(reqs.len(), 1);
+    }
+
+    #[test]
+    fn eager_min_clamps_to_max_batch() {
+        // A min_len larger than max_batch must not wedge full queues.
+        let mut b = mk_batcher(2, 1_000_000);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r).expect("registered");
+            rxs.push(rx);
+        }
+        let (_, _, reqs) = b.pop_eager_min(now, 100).expect("clamped release");
+        assert_eq!(reqs.len(), 2);
+    }
+
+    #[test]
+    fn aged_heads_release_regardless_of_min_len_via_pop_batch() {
+        // The no-starvation invariant: pop_batch (the age path) ignores
+        // eager sizing entirely.
+        let mut b = mk_batcher(4, 1_000);
+        let t0 = Instant::now();
+        let (r, _rx) = req(1, 8, t0);
+        b.enqueue(bucket(8), r).expect("registered");
+        let later = t0 + Duration::from_micros(2_000);
+        assert!(b.pop_batch(later).is_some());
     }
 
     #[test]

@@ -69,8 +69,9 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start the coordinator: enumerate scan buckets from the manifest,
-    /// then spawn `cfg.workers` executor threads (each builds its own
-    /// PJRT engine).
+    /// then spawn the executor threads (each builds its own PJRT
+    /// engine); `cfg.workers == 0` auto-sizes the executor set off the
+    /// shared `ThreadPool::global()` width.
     pub fn start(cfg: &ServeConfig) -> anyhow::Result<Coordinator> {
         let backend = match cfg.backend.as_str() {
             "pjrt" => Backend::Pjrt,
@@ -82,6 +83,16 @@ impl Coordinator {
             max_wait: Duration::from_micros(cfg.max_wait_us),
             queue_cap: cfg.queue_cap,
             eager_idle: cfg.eager_idle,
+        };
+        // Executor sizing: `workers == 0` means auto — derived from the
+        // shared pool, since every executor fans its CPU work (scan
+        // plane/segment jobs, batch assembly) into ThreadPool::global();
+        // more than ~half the pool width of executors just queues behind
+        // the pool without improving throughput.
+        let n_workers = if cfg.workers == 0 {
+            (ThreadPool::global().threads() / 2).clamp(1, 8)
+        } else {
+            cfg.workers
         };
         let mut batcher = Batcher::new(policy);
         match backend {
@@ -106,7 +117,7 @@ impl Coordinator {
                 }
                 logging::info(
                     "coordinator",
-                    &format!("{} scan buckets, {} workers (pjrt)", n_buckets, cfg.workers),
+                    &format!("{} scan buckets, {} workers (pjrt)", n_buckets, n_workers),
                 );
             }
             Backend::CpuFused => {
@@ -114,7 +125,7 @@ impl Coordinator {
                 // batch size; buckets register on first submit.
                 logging::info(
                     "coordinator",
-                    &format!("cpu-fused backend, {} workers", cfg.workers),
+                    &format!("cpu-fused backend, {} workers", n_workers),
                 );
             }
         }
@@ -128,7 +139,7 @@ impl Coordinator {
             artifacts_dir: cfg.artifacts.clone(),
             backend,
         });
-        let workers = (0..cfg.workers.max(1))
+        let workers = (0..n_workers)
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
@@ -138,6 +149,12 @@ impl Coordinator {
             })
             .collect();
         Ok(Coordinator { shared, workers, next_id: AtomicU64::new(1) })
+    }
+
+    /// Number of executor worker threads actually running (resolves the
+    /// `workers = 0` auto sizing).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
     }
 
     /// Submit one single-sample scan; returns the response channel.
@@ -303,9 +320,19 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                 // Eager-idle release: this worker has nothing runnable, so
                 // waiting out max_wait would buy batching nothing — take
                 // the queue head now (only fires when queues are non-empty
-                // but un-aged and un-full).
+                // but un-aged and un-full). Sized off pool occupancy:
+                // when the shared pool is already saturated, an eager
+                // partial release would only queue behind it, so hold out
+                // for a full fused batch instead (aged heads still
+                // release through pop_batch above, bounding the delay by
+                // max_wait).
                 if b.policy.eager_idle {
-                    if let Some(batch) = b.pop_eager(now) {
+                    let min_len = if ThreadPool::global().saturated() {
+                        b.policy.max_batch
+                    } else {
+                        1
+                    };
+                    if let Some(batch) = b.pop_eager_min(now, min_len) {
                         break Some(batch);
                     }
                 }
@@ -379,8 +406,12 @@ fn reject_direct(sh: &Shared, req: Request) {
 /// the raw taps and run the column-staged fused scan with its plane
 /// blocks fanned out on the process-wide pool. No concat/pad/split —
 /// the CPU path has no shape-specialised executable to feed, so each
-/// request's tensors are consumed in place. Results are bit-identical
-/// to `scan_l2r` (the e2e tests pin this with exact equality).
+/// request's tensors are consumed in place. The engine's occupancy
+/// scheduler covers both serving regimes: many-plane requests run
+/// plane-parallel, bit-identical to `scan_l2r` (the e2e tests pin this
+/// with exact equality); a single large-resolution request — too few
+/// planes to occupy the pool — runs segment-parallel, bit-identical to
+/// `scan_l2r_split` at the scheduler's count (also e2e-pinned).
 fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
     let batch = reqs.len();
     for r in reqs {

@@ -177,7 +177,7 @@ fn serve(cfg: &Config) -> anyhow::Result<()> {
             "replaying {} requests at ~{:.0} rps over {} workers",
             trace.len(),
             cfg.serve.rate_rps,
-            cfg.serve.workers
+            coord.worker_count()
         ),
     );
     let t0 = Instant::now();

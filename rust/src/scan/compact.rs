@@ -174,7 +174,10 @@ impl CompactGspnUnit {
     /// ([`super::fused::fused_merged_canonical`]) — no directional scan
     /// output, `from_canonical` copy, merged intermediate, or modulation
     /// clone is ever materialized. Bit-identical to [`Self::forward_ref`]
-    /// (pinned by tests).
+    /// (pinned by tests) whenever the engine's occupancy scheduler stays
+    /// plane-parallel — always for canonical widths < 256; above that,
+    /// a low-occupancy forward may run segment-parallel, following the
+    /// `scan_l2r_split` reference arithmetic instead (±1e-4-equivalent).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.shape[1], self.c);
         let xp = self.down.apply(x);

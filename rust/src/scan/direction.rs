@@ -132,7 +132,11 @@ pub fn merged_4dir(
 /// sized off the pool width — not one per plane, and not one per
 /// direction: directions merge in-pass inside each plane job, which is
 /// what keeps the accumulation order, and therefore every bit, identical
-/// to the serial path).
+/// to the serial path). In the low-occupancy regime (fewer planes than
+/// pool workers, ≥ 256 canonical columns) the engine's scheduler
+/// switches to the segment-parallel decomposition, whose arithmetic
+/// follows the `scan_l2r_split` reference instead (same merge order,
+/// segment-reassociated scans).
 pub fn merged_4dir_pool(
     x: &Tensor,
     taps: [&Taps; 4],

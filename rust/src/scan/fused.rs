@@ -41,12 +41,31 @@
 //!    ever exists in memory, and scratch is O(SLAB·max(H, W)) per job
 //!    instead of O(H·W) panels.
 //!
+//! 4. **Low-occupancy geometries → segment-parallel decomposition.**
+//!    Plane-blocks are the only parallelism above, so a single
+//!    large-resolution request (few N·C planes, huge H·W — the §5.1
+//!    occupancy collapse) runs nearly serial. When the occupancy-aware
+//!    scheduler ([`auto_segments`]) sees fewer planes than pool workers
+//!    and enough canonical columns, the engine switches to the two-phase
+//!    segmented decomposition of [`super::split`], fused: phase 1 scans
+//!    every (plane, direction, segment) from a zero incoming carry in
+//!    parallel — the same pack/unit-stride-scan slab pipeline, retaining
+//!    the canonical columns instead of scattering them — and phase 2
+//!    (parallel over planes) chains the true carries across segment
+//!    boundaries as a linear correction scan ([`correct_col`]) before
+//!    draining each plane through the same fused scatter epilogue.
+//!    Segmented arithmetic is exactly `scan_l2r_split`'s two-phase order
+//!    (pinned `==` by tests); the plane-parallel regime is untouched and
+//!    stays bit-identical to the serial reference.
+//!
 //! Bit-exactness: per element the engine evaluates exactly the reference
 //! expression `up + ct + dn + (lam·x)` in the same association,
 //! accumulates directions in the same `k = 0..4` order, and multiplies
 //! the modulation gain after the full accumulation — memory layout
 //! changes, arithmetic does not (Rust never reassociates or contracts
-//! float ops, so vectorization cannot perturb results).
+//! float ops, so vectorization cannot perturb results). The segmented
+//! path reassociates only where the reference decomposition
+//! (`scan_l2r_split`) does, and reproduces *its* bits exactly.
 
 use super::direction::{merge_weights, Direction, DIRECTIONS};
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
@@ -320,6 +339,27 @@ fn scan_slab(
     carry[..hc].copy_from_slice(&hs[(sw - 1) * hc..sw * hc]);
 }
 
+/// One column of the carry-correction recurrence off staged
+/// (column-contiguous) slices: [`scan_col`] without the `b` term (the
+/// correction scan propagates an initial state through x ≡ 0, exact by
+/// linearity of Eq. 1). Evaluates exactly the `up + ct + dn` association
+/// of `split::phase2_plane`, so segment corrections are bit-identical to
+/// the reference decomposition.
+#[inline]
+fn correct_col(prev: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]) {
+    let h = out.len();
+    if h == 1 {
+        out[0] = 0.0 + tc[0] * prev[0] + 0.0;
+        return;
+    }
+    out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1];
+    for r in 1..h - 1 {
+        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1];
+    }
+    let r = h - 1;
+    out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0;
+}
+
 // ---------------------------------------------------------------------
 // Scatter-back epilogue: inverse orientation + merge + modulation
 // ---------------------------------------------------------------------
@@ -413,6 +453,61 @@ impl FusedScratch {
 /// blocks-per-worker policy has one source of truth.
 pub(crate) fn plane_blocks(nplanes: usize, threads: usize) -> usize {
     nplanes.min((2 * threads).max(1))
+}
+
+// ---------------------------------------------------------------------
+// Segment-parallel decomposition + the occupancy-aware scheduler
+// ---------------------------------------------------------------------
+
+/// Minimum canonical columns per segment. Below this the per-segment
+/// carry-correction and job dispatch dominate any occupancy gain. It is
+/// also the compatibility fence: every geometry the unit/e2e suites pin
+/// bit-identical is narrower than `2 * MIN_SEG_COLS`, so the scheduler
+/// can never move them off the bit-exact plane-parallel path regardless
+/// of how wide the host pool is.
+const MIN_SEG_COLS: usize = 128;
+
+/// The occupancy-aware scheduler: how many column segments (if any) each
+/// plane should be decomposed into, given the plane count, the smallest
+/// canonical width among the directions in the pass, and the pool width.
+///
+/// Plane-parallel work is bit-identical to the serial reference and has
+/// zero decomposition overhead, so it wins whenever the planes alone can
+/// occupy the pool (`nplanes >= threads`). Below that — the paper's
+/// §5.1 low-occupancy regime — segmenting buys parallel phase-1 scans at
+/// the cost of a serial-per-plane correction pass (~3 of the scan's 7
+/// flops/pixel over the corrected (S-1)/S fraction of columns; measured
+/// ~27% single-thread overhead at S = 8, 512²), so it only pays when
+/// phase 1 actually fans wider than the planes did. The segment count
+/// targets ~2 phase-1 jobs per worker and never drops a segment below
+/// [`MIN_SEG_COLS`] columns. Returns `None` for "stay plane-parallel".
+pub fn auto_segments(nplanes: usize, wc_min: usize, threads: usize) -> Option<usize> {
+    if threads < 2 || nplanes == 0 || nplanes >= threads {
+        return None;
+    }
+    let max_by_width = wc_min / MIN_SEG_COLS;
+    let want = (2 * threads).div_ceil(nplanes);
+    let s = want.min(max_by_width);
+    (s >= 2).then_some(s)
+}
+
+/// Segment bounds over `wc` canonical columns — the same decomposition
+/// formula as `scan_l2r_split`, so for equal counts the segmented
+/// arithmetic (and therefore every bit) matches the reference.
+fn segment_bounds(wc: usize, segments: usize) -> Vec<(usize, usize)> {
+    let segments = segments.clamp(1, wc.max(1));
+    let seg_len = wc.div_ceil(segments).max(1);
+    (0..wc).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(wc))).collect()
+}
+
+/// How an engine run decomposes its work across the pool.
+#[derive(Clone, Copy)]
+enum SegmentMode {
+    /// Let [`auto_segments`] decide from the geometry and pool width.
+    Auto,
+    /// Forced segment count (clamped per direction to its canonical
+    /// width) — the bit-identity testing / bench hook.
+    Force(usize),
 }
 
 // ---------------------------------------------------------------------
@@ -525,26 +620,38 @@ fn run_plane(
     }
 }
 
-/// Drive `run_plane` over all (N·C) planes — serially, or in
-/// block-granular jobs on the pool.
+/// Drive the fused pipeline over all (N·C) planes — serially, in
+/// block-granular plane jobs on the pool, or (when the scheduler or the
+/// caller asks for it) through the segment-parallel decomposition.
 fn run_engine(
     dirs: &[DirInput<'_>],
     wts: Option<&[f32; 4]>,
     gain: Option<&[f32]>,
     out_shape: &[usize],
     pool: Option<&ThreadPool>,
+    seg: SegmentMode,
 ) -> Tensor {
     let (n, c) = (out_shape[0], out_shape[1]);
     let (h, w) = (out_shape[2], out_shape[3]);
     let plane = h * w;
-    let mut out = Tensor::zeros(out_shape);
     let nplanes = n * c;
     if nplanes == 0 || plane == 0 {
-        return out;
+        return Tensor::zeros(out_shape);
     }
     let hmax = h.max(w);
     let staged: Vec<StagedTaps> =
         dirs.iter().map(|d| StagedTaps::build(d.taps, pool)).collect();
+    let segments = match seg {
+        SegmentMode::Force(s) => Some(s.max(1)),
+        SegmentMode::Auto => pool.and_then(|pool| {
+            let wc_min = dirs.iter().map(|di| di.taps.w).min().unwrap_or(0);
+            auto_segments(nplanes, wc_min, pool.threads())
+        }),
+    };
+    if let Some(segments) = segments {
+        return run_engine_segmented(dirs, &staged, wts, gain, out_shape, pool, segments);
+    }
+    let mut out = Tensor::zeros(out_shape);
     let gain_for = |ci: usize| gain.map(|g| g[ci]);
 
     match pool {
@@ -593,6 +700,187 @@ fn run_engine(
     out
 }
 
+/// The segment-parallel engine (the fused §5.1 decomposition).
+///
+/// Phase 1 fans one job per (plane, direction, segment) — each packs and
+/// unit-stride-scans its column range from a zero incoming carry with
+/// the very same slab pipeline as the plane path, but retains the
+/// canonical columns in a per-plane panel instead of scattering them
+/// (chunk resets still fire on global column indices inside
+/// [`scan_slab`]). Phase 2 fans one job per plane: for each direction it
+/// chains the true carry across segment boundaries — the corrected last
+/// column of segment k *is* segment k+1's carry — adding the linear
+/// correction scan ([`correct_col`]) in place, then drains the whole
+/// corrected panel through the same fused scatter epilogue (inverse
+/// orientation + weighted merge + modulation), so the directional
+/// output, merge, and modulation intermediates still never exist.
+///
+/// Arithmetic per element is exactly `scan_l2r_split`'s two-phase order
+/// (pinned `==` by tests); only the memory layout and the epilogue
+/// fusion differ. The retained panels cost
+/// O(nplanes · Σ_dirs hc·wc) floats — bounded in practice because the
+/// scheduler only picks this path when `nplanes < threads`.
+#[allow(clippy::too_many_arguments)]
+fn run_engine_segmented(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    segments: usize,
+) -> Tensor {
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = out_shape[0] * c;
+    let hmax = h.max(w);
+    let bounds: Vec<Vec<(usize, usize)>> =
+        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
+
+    // Retained phase-1 canonical columns: per plane, the directions'
+    // hc x wc column-major panels concatenated in direction order.
+    let dir_off: Vec<usize> = dirs
+        .iter()
+        .scan(0usize, |acc, di| {
+            let o = *acc;
+            *acc += di.taps.h * di.taps.w;
+            Some(o)
+        })
+        .collect();
+    let per_plane: usize = dirs.iter().map(|di| di.taps.h * di.taps.w).sum();
+    let mut hbufs = vec![0.0f32; nplanes * per_plane];
+
+    // Phase 1: every (plane, direction, segment) scans independently
+    // from a zero carry into its disjoint panel range.
+    {
+        let mut jobs: Vec<(usize, usize, usize, usize, &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = &mut hbufs;
+        for p in 0..nplanes {
+            for (k, di) in dirs.iter().enumerate() {
+                for &(lo, hi) in &bounds[k] {
+                    let (buf, tail) =
+                        std::mem::take(&mut rest).split_at_mut((hi - lo) * di.taps.h);
+                    rest = tail;
+                    jobs.push((p, k, lo, hi, buf));
+                }
+            }
+        }
+        let scan_piece = |(p, k, lo, hi, buf): (usize, usize, usize, usize, &mut [f32])| {
+            let di = &dirs[k];
+            let hc = di.taps.h;
+            let base = p * plane;
+            let xs = &di.x.data[base..base + plane];
+            let ls = &di.lam.data[base..base + plane];
+            let (tu, tc, td) = staged[k].panels(p / c, p % c);
+            let mut b = vec![0.0f32; SLAB * hmax];
+            let mut carry = vec![0.0f32; hmax];
+            let zeros = vec![0.0f32; hmax];
+            let mut i0 = lo;
+            while i0 < hi {
+                let sw = SLAB.min(hi - i0);
+                pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
+                let o = (i0 - lo) * hc;
+                scan_slab(
+                    hc,
+                    i0,
+                    sw,
+                    di.chunk,
+                    &b,
+                    tu,
+                    tc,
+                    td,
+                    &zeros,
+                    &mut carry,
+                    &mut buf[o..o + sw * hc],
+                );
+                i0 += sw;
+            }
+        };
+        match pool {
+            Some(pool) if pool.threads() > 1 && jobs.len() > 1 => {
+                pool.map(jobs, scan_piece);
+            }
+            _ => jobs.into_iter().for_each(scan_piece),
+        }
+    }
+
+    // Phase 2: per plane, chain carries + correction per direction, then
+    // drain through the fused epilogue in the same k = 0..dirs order as
+    // the plane path.
+    let mut out = Tensor::zeros(out_shape);
+    let gain_for = |ci: usize| gain.map(|g| g[ci]);
+    let last = dirs.len() - 1;
+    let planes: Vec<(usize, &mut [f32], &mut [f32])> = out
+        .data
+        .chunks_mut(plane)
+        .zip(hbufs.chunks_mut(per_plane))
+        .enumerate()
+        .map(|(p, (os, pb))| (p, os, pb))
+        .collect();
+    let correct_and_drain = |(p, os, pb): (usize, &mut [f32], &mut [f32])| {
+        let mut corr = vec![0.0f32; hmax];
+        let mut next = vec![0.0f32; hmax];
+        for (k, di) in dirs.iter().enumerate() {
+            let (hc, wc) = (di.taps.h, di.taps.w);
+            let (tu, tc, td) = staged[k].panels(p / c, p % c);
+            let panel = &mut pb[dir_off[k]..dir_off[k] + hc * wc];
+            for &(lo, hi) in bounds[k].iter().skip(1) {
+                let (done, todo) = panel.split_at_mut(lo * hc);
+                // Incoming carry: the previous segment's (corrected)
+                // last column. The reference decomposition skips
+                // all-zero carries; matching the skip keeps even -0.0
+                // pixels bit-identical.
+                let cin = &done[(lo - 1) * hc..];
+                if cin.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                corr[..hc].copy_from_slice(cin);
+                for (j, gi) in (lo..hi).enumerate() {
+                    if gi % di.chunk == 0 {
+                        // Chunk reset: the carry dies here and phase 1
+                        // was already exact from this column on.
+                        break;
+                    }
+                    let g0 = gi * hc;
+                    correct_col(
+                        &corr[..hc],
+                        &tu[g0..g0 + hc],
+                        &tc[g0..g0 + hc],
+                        &td[g0..g0 + hc],
+                        &mut next[..hc],
+                    );
+                    for (o, &v) in todo[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
+                        *o += v;
+                    }
+                    std::mem::swap(&mut corr, &mut next);
+                }
+            }
+            match wts {
+                None => scatter_slab(panel, h, w, di.d, 0, wc, hc, os, |_, v| v),
+                Some(wts) => {
+                    let wt = wts[k];
+                    match gain_for(p % c).filter(|_| k == last) {
+                        None => scatter_slab(panel, h, w, di.d, 0, wc, hc, os, |o, v| {
+                            o + wt * v
+                        }),
+                        Some(g) => scatter_slab(panel, h, w, di.d, 0, wc, hc, os, |o, v| {
+                            (o + wt * v) * g
+                        }),
+                    }
+                }
+            }
+        }
+    };
+    match pool {
+        Some(pool) if pool.threads() > 1 && planes.len() > 1 => {
+            pool.map(planes, correct_and_drain);
+        }
+        _ => planes.into_iter().for_each(correct_and_drain),
+    }
+    out
+}
+
 // ---------------------------------------------------------------------
 // Public entry points
 // ---------------------------------------------------------------------
@@ -635,7 +923,48 @@ fn fused_scan_dir_inner(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, pool)
+    run_engine(&dirs, None, None, &x.shape, pool, SegmentMode::Auto)
+}
+
+/// [`fused_scan_dir_pool`] with a *forced* segment-parallel
+/// decomposition: each plane's canonical columns are scanned as
+/// `segments` zero-carry segments and carry-corrected — bit-identical
+/// (exact `==`, pinned by tests) to running
+/// [`super::split::scan_l2r_split`] on the canonically reoriented
+/// tensors with the same count. The pooled entry points normally pick
+/// the decomposition (and the count) themselves via [`auto_segments`];
+/// this hook exists for tests, benches, and callers that know their
+/// geometry.
+pub fn fused_scan_dir_seg(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    validate_dir(x, taps, lam, d);
+    if x.data.is_empty() {
+        return Tensor::zeros(&x.shape);
+    }
+    let chunk = effective_chunk(taps.w, kchunk);
+    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
+    run_engine(&dirs, None, None, &x.shape, Some(pool), SegmentMode::Force(segments))
+}
+
+/// [`fused_scan_dir_seg`] for the canonical left-to-right scan: the
+/// segmented twin of [`fused_scan_l2r_pool`], exact `==` with
+/// [`super::split::scan_l2r_split`] at the same count.
+pub fn fused_scan_l2r_seg(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_seg(x, taps, lam, Direction::L2R, kchunk, segments, pool)
 }
 
 /// Fused canonical scan (serial): bit-identical to `scan_l2r`.
@@ -694,7 +1023,7 @@ pub fn fused_merged_4dir(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, None)
+    run_engine(&dirs, Some(&wts), None, &x.shape, None, SegmentMode::Auto)
 }
 
 /// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
@@ -708,7 +1037,26 @@ pub fn fused_merged_4dir_pool(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool))
+    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), SegmentMode::Auto)
+}
+
+/// [`fused_merged_4dir_pool`] with a *forced* segment count per
+/// direction (clamped to each direction's canonical width) — the
+/// segmented twin of the merged pass for tests and benches. Segment
+/// arithmetic follows the `scan_l2r_split` decomposition per direction;
+/// merge order and the epilogue fusion are unchanged.
+pub fn fused_merged_4dir_seg(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), SegmentMode::Force(segments))
 }
 
 /// [`fused_merged_4dir`] over the process-wide shared pool.
@@ -729,7 +1077,10 @@ pub fn fused_merged_4dir_par(
 /// modulation into the scatter — the unit never materializes a
 /// directional output, the merged tensor, or the modulation clone.
 /// Output is the spatial (N, Cp, H, W) modulated merge, bit-identical to
-/// the reference composition in `CompactGspnUnit::forward_ref`.
+/// the reference composition in `CompactGspnUnit::forward_ref` whenever
+/// the occupancy scheduler stays plane-parallel (always for canonical
+/// widths < 256; a low-occupancy wide forward follows the
+/// `scan_l2r_split` segmented arithmetic instead).
 #[allow(clippy::too_many_arguments)]
 pub fn fused_merged_canonical(
     xcs: [&Tensor; 4],
@@ -769,7 +1120,7 @@ pub fn fused_merged_canonical(
         .collect();
     assert_eq!(u.len(), out_shape[1], "gain length must be C");
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool))
+    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), SegmentMode::Auto)
 }
 
 #[cfg(test)]
@@ -986,5 +1337,231 @@ mod tests {
         assert_eq!(plane_blocks(3, 4), 3);
         assert_eq!(plane_blocks(0, 4), 0);
         assert_eq!(plane_blocks(16, 1), 2);
+    }
+
+    // -----------------------------------------------------------------
+    // Segment-parallel decomposition
+    // -----------------------------------------------------------------
+
+    use crate::scan::split::scan_l2r_split;
+
+    /// The tentpole pinning property for the segmented path: exact `==`
+    /// with the reference decomposition `scan_l2r_split` across segment
+    /// counts and boundaries — including W = 1, more segments than
+    /// columns, and a 1-thread pool (helping-wait execution).
+    #[test]
+    fn segmented_fused_exact_eq_scan_l2r_split() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(50);
+        for (n, c, h, w, cw) in [
+            (1, 1, 5, 12, 1),
+            (1, 2, 3, 64, 2),
+            (2, 3, 8, 40, 1),
+            (1, 1, 1, 7, 1),
+            (1, 2, 9, 1, 1),
+            (1, 1, 4, 2 * SLAB + 3, 1),
+        ] {
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = mk_taps(&mut rng, n, cw, h, w);
+            for segments in [1usize, 2, 3, 5, 8, w, w + 9, 500] {
+                let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
+                let seg1 = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool1);
+                let seg3 = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
+                assert_eq!(
+                    reference.data, seg1.data,
+                    "1-thread n{n} c{c} {h}x{w} cw{cw} S{segments}"
+                );
+                assert_eq!(
+                    reference.data, seg3.data,
+                    "3-thread n{n} c{c} {h}x{w} cw{cw} S{segments}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_fused_split_identity_property() {
+        let pool = crate::util::ThreadPool::new(2);
+        check("fused segmented == scan_l2r_split", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 3);
+            let h = g.int_in(1, 9);
+            let w = g.int_in(1, 40);
+            let segments = g.int_in(1, 7);
+            let cw = *g.pick(&[1, c]);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = mk_taps(&mut rng, n, cw, h, w);
+            let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
+            let seg = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool);
+            ensure(
+                reference.data == seg.data,
+                format!("segmented != split: n{n} c{c} {h}x{w} cw{cw} S{segments}"),
+            )
+        });
+    }
+
+    /// Segment boundaries landing on chunk resets carry nothing across,
+    /// so the segmented path collapses to the exact plane-path bits.
+    #[test]
+    fn segmented_chunk_aligned_is_exact_vs_reference() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(51);
+        let (n, c, h, w) = (1, 2, 6, 64);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        // S = 4 -> seg_len = 16; kchunk = 8 divides 16, so every segment
+        // starts on a reset.
+        let reference = scan_l2r(&x, &taps, &lam, 8);
+        let seg = fused_scan_l2r_seg(&x, &taps, &lam, 8, 4, &pool);
+        assert_eq!(reference.data, seg.data);
+    }
+
+    /// Unaligned chunk resets inside segments stay numerically
+    /// equivalent (the carry dies at the reset; only pre-reset columns
+    /// reassociate).
+    #[test]
+    fn segmented_chunk_unaligned_is_close() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(52);
+        let (n, c, h, w) = (1, 1, 7, 96);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let reference = scan_l2r(&x, &taps, &lam, 32);
+        // S = 5 -> seg_len = 20: boundaries at 20/40/60/80 never align
+        // with the resets at 32/64.
+        let seg = fused_scan_l2r_seg(&x, &taps, &lam, 32, 5, &pool);
+        assert!(
+            reference.allclose(&seg, 1e-4, 1e-4),
+            "max diff {}",
+            reference.max_abs_diff(&seg)
+        );
+    }
+
+    /// The merged 4-direction segmented pass: tolerance-pinned against
+    /// the serial reference composition, and bit-deterministic across
+    /// pool widths (scheduling never changes segmented arithmetic).
+    #[test]
+    fn segmented_merged_close_to_reference_and_deterministic() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(53);
+        let (n, c, h, w) = (1, 2, 24, 40);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.4f32, -0.2, 1.1, 0.0];
+        let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+        let a = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, 4, &pool1);
+        let b = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, 4, &pool3);
+        assert_eq!(a.data, b.data, "pool width changed segmented bits");
+        assert!(
+            reference.allclose(&a, 1e-4, 1e-4),
+            "max diff {}",
+            reference.max_abs_diff(&a)
+        );
+    }
+
+    /// The occupancy scheduler's decision rule.
+    #[test]
+    fn scheduler_decision_rule() {
+        // Saturated pool, narrow planes, or no pool: stay plane-parallel.
+        assert_eq!(auto_segments(8, 512, 8), None);
+        assert_eq!(auto_segments(16, 1024, 8), None);
+        assert_eq!(auto_segments(1, 255, 8), None);
+        assert_eq!(auto_segments(4, 512, 1), None);
+        assert_eq!(auto_segments(0, 512, 8), None);
+        // Low occupancy + wide planes: segment, bounded by width so no
+        // segment drops below MIN_SEG_COLS columns.
+        assert_eq!(auto_segments(1, 1024, 8), Some(8));
+        assert_eq!(auto_segments(4, 512, 8), Some(4));
+        assert_eq!(auto_segments(1, 512, 8), Some(4));
+        assert_eq!(auto_segments(2, 4096, 16), Some(16));
+    }
+
+    /// Whenever the scheduler picks plane-parallel, the pooled entry
+    /// points are exactly the PR 2 engine — bit-identical to the serial
+    /// reference. Any geometry narrower than 2 * MIN_SEG_COLS canonical
+    /// columns (everything the unit/e2e suites pin) can never be
+    /// segmented regardless of host pool width.
+    #[test]
+    fn auto_plane_regime_stays_bit_identical() {
+        let pool = crate::util::ThreadPool::new(7);
+        let mut rng = Rng::new(54);
+        let (n, c, h, w) = (1, 2, 32, 64);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        assert_eq!(auto_segments(n * c, w, pool.threads()), None);
+        let reference = scan_l2r(&x, &taps, &lam, 0);
+        let pooled = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+        assert_eq!(reference.data, pooled.data);
+    }
+
+    /// When the scheduler does segment, the pooled entry point produces
+    /// exactly the scan_l2r_split bits for the count it chose.
+    #[test]
+    fn auto_low_occupancy_matches_split_reference() {
+        let pool = crate::util::ThreadPool::new(4);
+        let mut rng = Rng::new(55);
+        let (n, c, h, w) = (1, 1, 8, 256);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let s = auto_segments(n * c, w, pool.threads()).expect("low occupancy must segment");
+        assert_eq!(s, 2);
+        let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+        let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
+        assert_eq!(reference.data, viapool.data);
+    }
+
+    /// Orientation folding in the segmented path, pinned exactly: the
+    /// segmented directional scan equals `scan_l2r_split` run on the
+    /// canonically reoriented tensors (data movement changes no bits).
+    #[test]
+    fn segmented_all_directions_match_canonical_split() {
+        use crate::scan::direction::{from_canonical, to_canonical};
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(56);
+        let (n, c, h, w) = (1, 2, 6, 9);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, 1, hc, wc);
+            let xc = to_canonical(&x, d);
+            let lamc = to_canonical(&lam, d);
+            for segments in [2usize, 3] {
+                let want =
+                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+                let got = fused_scan_dir_seg(&x, &taps, &lam, d, 0, segments, &pool);
+                assert_eq!(want.data, got.data, "{d:?} S{segments}");
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_empty_and_degenerate_geometries() {
+        let pool = crate::util::ThreadPool::new(2);
+        let x = Tensor::zeros(&[0, 3, 4, 5]);
+        let lam = Tensor::zeros(&[0, 3, 4, 5]);
+        let taps = Taps::normalize(&Tensor::zeros(&[0, 1, 3, 4, 5]));
+        let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
+        assert_eq!(out.shape, vec![0, 3, 4, 5]);
+
+        let x = Tensor::zeros(&[1, 2, 0, 5]);
+        let lam = Tensor::zeros(&[1, 2, 0, 5]);
+        let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
+        let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
+        assert!(out.data.is_empty());
     }
 }

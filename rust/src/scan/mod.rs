@@ -23,7 +23,12 @@
 //! submits to the shared [`crate::util::ThreadPool`] — nothing in this
 //! module spawns ad-hoc OS threads per call. Plane-level fan-out is
 //! bit-identical to the serial reference; only the segment decomposition
-//! of [`split`] reassociates (and is tested to 1e-4 against sequential).
+//! reassociates (and is tested to 1e-4 against sequential). The fused
+//! engine's occupancy-aware scheduler ([`fused::auto_segments`]) turns
+//! the segment decomposition on automatically when there are fewer
+//! planes than pool workers and ≥ 256 canonical columns — there the
+//! output is bit-identical to [`split::scan_l2r_split`] at the chosen
+//! count instead of to `scan_l2r` ([`split`] is kept as that reference).
 
 pub mod compact;
 pub mod core;
@@ -43,8 +48,9 @@ pub use direction::{
     to_canonical, Direction, DIRECTIONS,
 };
 pub use fused::{
-    fused_merged_4dir, fused_merged_4dir_par, fused_merged_4dir_pool, fused_scan_dir,
-    fused_scan_dir_pool, fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool,
+    auto_segments, fused_merged_4dir, fused_merged_4dir_par, fused_merged_4dir_pool,
+    fused_merged_4dir_seg, fused_scan_dir, fused_scan_dir_pool, fused_scan_dir_seg,
+    fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_seg,
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};

@@ -24,15 +24,21 @@
 //! column and only pays on massively parallel hardware — which is why
 //! the GPU-side model ([`crate::gpusim::KernelConfig::split`], selected
 //! by [`crate::gpusim::adaptive`]) charges 2.5x the per-step latency but
-//! still wins in the low-occupancy regime, while this CPU reference uses
-//! the carry-only form. EXPERIMENTS.md §Perf records the measured
-//! crossover (the operator form was 4-30x *slower* on CPU).
+//! still wins in the low-occupancy regime, while the CPU path uses the
+//! carry-only form (the operator form measured 4-30x *slower* on CPU).
 //!
-//! Parallel execution submits phase-1 (segment × plane) and phase-2
-//! (plane) tasks to the process-wide shared [`ThreadPool`] — the scoped
-//! per-call `std::thread` spawns this module used to do are gone, so a
-//! serving worker calling in at request rate pays zero thread-creation
-//! cost and the whole process keeps exactly one worker set.
+//! Role since the fused engine gained this decomposition: this module is
+//! the **bit-identity reference** for the segmented arithmetic order.
+//! Production callers — the pooled `fused_*` entry points, the compact
+//! unit, the cpu serving backend — route through
+//! [`super::fused`], whose occupancy-aware scheduler
+//! ([`super::fused::auto_segments`]) applies exactly this two-phase
+//! decomposition (pinned `==` against [`scan_l2r_split`] by the fused
+//! engine's tests) with the pack/scan/scatter stages fused. The
+//! implementation here stays deliberately unfused and simple;
+//! `threads > 1` still submits its (segment × plane) and (plane) task
+//! groups to the process-wide shared [`ThreadPool`] rather than
+//! spawning anything per call.
 
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;

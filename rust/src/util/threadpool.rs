@@ -22,15 +22,19 @@
 //!   the caller's frame: the call does not return until its latch
 //!   confirms every job has finished, so the borrows cannot dangle
 //!   (the queue erases the lifetime internally, `rayon::scope`-style).
-//! * **Work-helping (own-call only).** While its latch is closed, the
-//!   calling thread pulls *its own call's* jobs out of the queue and
-//!   runs them instead of sleeping. A job may therefore submit a nested
-//!   `map` to the same pool without deadlocking, even on a 1-thread
-//!   pool: every caller can always drive its own jobs to completion by
-//!   itself. Helping never executes another call's work, so a
-//!   latency-sensitive caller (e.g. a serving executor fanning out a
-//!   batch assembly) cannot be held hostage by a stranger's
-//!   long-running job.
+//! * **Work-helping (own-call only, O(1)).** While its latch is closed,
+//!   the calling thread pulls *its own call's* jobs and runs them
+//!   instead of sleeping. A job may therefore submit a nested `map` to
+//!   the same pool without deadlocking, even on a 1-thread pool: every
+//!   caller can always drive its own jobs to completion by itself.
+//!   Helping never executes another call's work, so a latency-sensitive
+//!   caller (e.g. a serving executor fanning out a batch assembly)
+//!   cannot be held hostage by a stranger's long-running job. Each call
+//!   keeps its jobs in its own list ([`CallJobs`]) and the global queue
+//!   holds one *ticket* per job pointing at that list, so both an
+//!   own-job pop (helper) and a next-job pop (worker) are O(1) — no
+//!   O(queue-length) tag scan under the queue mutex, however deep the
+//!   fan-out. A ticket whose call was fully helped is a no-op.
 //! * **Panic propagation.** A panicking `map` job no longer poisons the
 //!   pool or wedges the caller: `try_map` collects the first payload and
 //!   returns it as a [`MapError`]; `map` rethrows the payload in the
@@ -45,25 +49,34 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Queue tag identifying which `map`/`try_map` call a job belongs to
-/// (0 = fire-and-forget `execute`), so a waiting caller can selectively
-/// help with its own jobs.
-type CallId = u64;
+/// The job list of one `map`/`try_map` call. The submitting caller pops
+/// from here directly while it waits (an O(1) own-job pop); workers
+/// reach it through [`Work::Call`] tickets in the global queue.
+struct CallJobs {
+    jobs: Mutex<VecDeque<Job>>,
+}
+
+/// One entry of the global queue: a fire-and-forget job, or a ticket
+/// for one job of a `map` call (the ticket is a no-op if the caller
+/// already helped that job to completion).
+enum Work {
+    Exec(Job),
+    Call(Arc<CallJobs>),
+}
 
 struct Shared {
-    queue: Mutex<VecDeque<(CallId, Job)>>,
+    queue: Mutex<VecDeque<Work>>,
     available: Condvar,
     shutdown: AtomicBool,
     in_flight: AtomicUsize,
     done: Condvar,
     done_lock: Mutex<()>,
-    next_call: AtomicU64,
 }
 
 /// Per-`map`-call completion latch: counts its own jobs down to zero and
@@ -161,7 +174,6 @@ impl ThreadPool {
             in_flight: AtomicUsize::new(0),
             done: Condvar::new(),
             done_lock: Mutex::new(()),
-            next_call: AtomicU64::new(1),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -192,11 +204,25 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Jobs currently queued or running, across all submitters — the
+    /// pool-occupancy signal consumers like the serving batcher use to
+    /// size release decisions. A snapshot: it can be stale by the time
+    /// the caller acts on it, which is fine for scheduling heuristics.
+    pub fn load(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Whether the pool already holds at least as much queued/running
+    /// work as it has workers (no idle capacity right now).
+    pub fn saturated(&self) -> bool {
+        self.load() >= self.threads()
+    }
+
     /// Fire-and-forget. A panic in `job` is caught and logged; use
     /// [`ThreadPool::try_map`] when the caller needs the outcome.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.shared.queue.lock().unwrap().push_back((0, Box::new(job)));
+        self.shared.queue.lock().unwrap().push_back(Work::Exec(Box::new(job)));
         self.shared.available.notify_one();
     }
 
@@ -241,37 +267,41 @@ impl ThreadPool {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let call_id = self.shared.next_call.fetch_add(1, Ordering::Relaxed);
         let latch = Latch::new(n);
         let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let call = Arc::new(CallJobs { jobs: Mutex::new(VecDeque::with_capacity(n)) });
         {
             let f = &f;
             let slots = &slots;
             let latch = &latch;
-            let mut jobs: Vec<Job> = Vec::with_capacity(n);
-            for (i, item) in items.into_iter().enumerate() {
-                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    match catch_unwind(AssertUnwindSafe(|| f(item))) {
-                        Ok(r) => {
-                            *slots[i].lock().unwrap() = Some(r);
-                            latch.complete(None);
+            {
+                let mut cj = call.jobs.lock().unwrap();
+                for (i, item) in items.into_iter().enumerate() {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                            Ok(r) => {
+                                *slots[i].lock().unwrap() = Some(r);
+                                latch.complete(None);
+                            }
+                            Err(payload) => latch.complete(Some(payload)),
                         }
-                        Err(payload) => latch.complete(Some(payload)),
-                    }
-                });
-                // SAFETY: the latch wait below keeps this frame (and
-                // every borrow inside the job) alive until the job has
-                // finished running; the queue cannot drop a job unrun
-                // while `&self` borrows the pool (shutdown only happens
-                // in `Drop`).
-                jobs.push(unsafe {
-                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
-                });
+                    });
+                    // SAFETY: the latch wait below keeps this frame (and
+                    // every borrow inside the job) alive until the job
+                    // has finished running; nothing drops a job unrun —
+                    // the call's job list is drained by exactly this
+                    // call's helper and by ticket-holding workers while
+                    // `&self` borrows the pool, and any ticket outliving
+                    // this call finds the list already empty.
+                    cj.push_back(unsafe {
+                        std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                    });
+                }
             }
             self.shared.in_flight.fetch_add(n, Ordering::SeqCst);
             {
                 let mut q = self.shared.queue.lock().unwrap();
-                q.extend(jobs.into_iter().map(|j| (call_id, j)));
+                q.extend((0..n).map(|_| Work::Call(Arc::clone(&call))));
             }
             if n == 1 {
                 self.shared.available.notify_one();
@@ -279,26 +309,17 @@ impl ThreadPool {
                 self.shared.available.notify_all();
             }
 
-            // Work-helping wait: pull THIS call's jobs out of the queue
-            // and run them until the latch opens. Helping only our own
-            // jobs keeps nested submission deadlock-free (a caller can
-            // always drive its own jobs by itself, workers or not)
-            // without ever executing a stranger's long-running job on a
-            // latency-sensitive caller. Once none of our jobs are
-            // queued, the rest are running on other threads, so a plain
+            // Work-helping wait: pop THIS call's jobs straight off its
+            // own list — O(1) per job, no scan of the global queue — and
+            // run them until the latch opens. Helping only our own jobs
+            // keeps nested submission deadlock-free (a caller can always
+            // drive its own jobs by itself, workers or not) without ever
+            // executing a stranger's long-running job on a
+            // latency-sensitive caller. Once our list is empty, the
+            // remaining jobs are running on other threads, so a plain
             // latch wait cannot stall.
             loop {
-                // The tag scan is O(queue length) under the queue lock;
-                // fine at current fan-outs (hundreds of queued jobs).
-                // If pool traffic grows, move to per-call job lists so
-                // an own-job pop is O(1) (see ROADMAP).
-                let job = {
-                    let mut q = self.shared.queue.lock().unwrap();
-                    match q.iter().position(|(tag, _)| *tag == call_id) {
-                        Some(i) => q.remove(i).map(|(_, j)| j),
-                        None => None,
-                    }
-                };
+                let job = call.jobs.lock().unwrap().pop_front();
                 match job {
                     Some(job) => run_one(&self.shared, job),
                     None => {
@@ -357,11 +378,11 @@ fn run_one(sh: &Shared, job: Job) {
 
 fn worker_loop(sh: Arc<Shared>) {
     loop {
-        let job = {
+        let work = {
             let mut q = sh.queue.lock().unwrap();
             loop {
-                if let Some((_, job)) = q.pop_front() {
-                    break job;
+                if let Some(work) = q.pop_front() {
+                    break work;
                 }
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -369,7 +390,19 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.available.wait(q).unwrap();
             }
         };
-        run_one(&sh, job);
+        match work {
+            Work::Exec(job) => run_one(&sh, job),
+            // A map ticket: run one of that call's jobs. An empty list
+            // means the submitting caller already helped every job to
+            // completion — the stale ticket is a no-op (its jobs were
+            // accounted when they actually ran).
+            Work::Call(call) => {
+                let job = call.jobs.lock().unwrap().pop_front();
+                if let Some(job) = job {
+                    run_one(&sh, job);
+                }
+            }
+        }
     }
 }
 
@@ -514,6 +547,44 @@ mod tests {
             pool.map(vec![1u64, 2, 3], |d| base + d).iter().sum::<u64>()
         });
         assert_eq!(out, vec![36, 66]);
+    }
+
+    #[test]
+    fn load_and_saturation_signal() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.load(), 0);
+        assert!(!pool.saturated());
+        let barrier = Arc::new(std::sync::Barrier::new(3));
+        for _ in 0..2 {
+            let b = Arc::clone(&barrier);
+            pool.execute(move || {
+                b.wait();
+            });
+        }
+        assert!(pool.load() >= 2);
+        assert!(pool.saturated());
+        barrier.wait();
+        pool.wait_idle();
+        assert_eq!(pool.load(), 0);
+        assert!(!pool.saturated());
+    }
+
+    /// The per-call job-list regression: park the only worker so the
+    /// caller self-helps its whole map — every ticket it left in the
+    /// global queue goes stale. The worker must skip them and keep
+    /// serving fresh work.
+    #[test]
+    fn stale_tickets_are_noops() {
+        let pool = ThreadPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            let _ = rx.recv();
+        });
+        let out = pool.map((0..64u32).collect::<Vec<_>>(), |x| x + 1);
+        assert_eq!(out, (1..=64).collect::<Vec<u32>>());
+        tx.send(()).unwrap();
+        pool.wait_idle();
+        assert_eq!(pool.map(vec![7u32], |x| x * 2), vec![14]);
     }
 
     #[test]

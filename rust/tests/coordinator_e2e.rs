@@ -295,6 +295,43 @@ fn cpu_backend_fuses_batches() {
 }
 
 #[test]
+fn cpu_backend_low_occupancy_segments_and_matches_reference() {
+    // A single large-resolution request (one plane, 512 columns) — the
+    // §5.1 occupancy collapse. The cpu backend's fused engine splits it
+    // via the occupancy scheduler; the result must be exactly the
+    // scan_l2r_split reference at the scheduler's chosen count (or
+    // exactly scan_l2r when the host pool is too narrow to segment).
+    use gspn2::scan::{auto_segments, scan_l2r_split};
+    use gspn2::util::ThreadPool;
+    let coord = Coordinator::start(&cpu_cfg(1, 4, 500, 64)).unwrap();
+    let mut rng = Rng::new(15);
+    let (x, a, lam) = mk_case(&mut rng, 1, 64, 512);
+    let rx = coord.submit_scan(x.clone(), a.clone(), lam.clone(), 0).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let got = resp.result.unwrap()[0].as_f32().unwrap().clone();
+    let taps = Taps::normalize(&a);
+    let want = match auto_segments(1, 512, ThreadPool::global().threads()) {
+        Some(s) => scan_l2r_split(&x, &taps, &lam, s, 1),
+        None => scan_l2r(&x, &taps, &lam, 0),
+    };
+    assert_eq!(got.data, want.data, "low-occupancy serving diverged from its reference");
+    coord.shutdown();
+}
+
+#[test]
+fn workers_zero_auto_sizes_off_global_pool() {
+    use gspn2::util::ThreadPool;
+    let coord = Coordinator::start(&cpu_cfg(0, 4, 500, 64)).unwrap();
+    let expect = (ThreadPool::global().threads() / 2).clamp(1, 8);
+    assert_eq!(coord.worker_count(), expect);
+    let mut rng = Rng::new(16);
+    let (x, a, lam) = mk_case(&mut rng, 2, 8, 8);
+    let rx = coord.submit_scan(x, a, lam, 0).unwrap();
+    assert!(rx.recv_timeout(Duration::from_secs(120)).unwrap().result.is_ok());
+    coord.shutdown();
+}
+
+#[test]
 fn cpu_backend_rejects_direct_requests() {
     let coord = Coordinator::start(&cpu_cfg(1, 4, 500, 64)).unwrap();
     let rx = coord.submit_direct("classifier_fwd_b8", vec![]).unwrap();
