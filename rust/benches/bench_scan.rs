@@ -12,12 +12,12 @@
 use std::time::Duration;
 
 use gspn2::scan::fused::{
-    auto_segments, fused_merged_4dir, fused_merged_4dir_pool, fused_scan_l2r,
-    fused_scan_l2r_pool, fused_scan_l2r_seg,
+    fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_pool, fused_scan_l2r,
+    fused_scan_l2r_pool, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
 };
 use gspn2::scan::{
-    expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool, scan_l2r_split,
-    CompactGspnUnit, Taps,
+    auto_segments, expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool,
+    scan_l2r_split, CompactGspnUnit, Taps,
 };
 use gspn2::util::bench::{black_box, BenchConfig, BenchSuite};
 use gspn2::util::{Rng, ThreadPool};
@@ -125,6 +125,80 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup scan_l2r {tag} host/plane"),
             r_plane.mean_ns / r_seg_host.mean_ns,
+            "x",
+        );
+    }
+
+    // Barrier vs wavefront (the PR 4 acceptance row): the segmented
+    // decomposition with phase 2 as a global barrier vs as per-plane
+    // continuations, n2c2 512x512 at 8 threads — 4 planes, so each
+    // plane's correction chain has three other planes' phase-1 work to
+    // hide behind. Exact same jobs and bits; only the schedule differs.
+    {
+        let (n, c, h, w) = (2usize, 2usize, 512usize, 512usize);
+        let nplanes = n * c;
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = Taps::normalize(&Tensor::randn(&[n, 1, 3, h, w], &mut rng, 1.0));
+        let pool8 = ThreadPool::new(8);
+        let s = auto_segments(nplanes, w, pool8.threads()).unwrap_or(2);
+        let tag = format!("n{n}c{c} {h}x{w}");
+        let r_barrier = suite.bench(
+            &format!("scan_l2r {tag} (seg={s} barrier, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_seg(&x, &taps, &lam, 0, s, &pool8));
+            },
+        );
+        let r_wave = suite.bench(
+            &format!("scan_l2r {tag} (seg={s} wavefront, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool8));
+            },
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} wavefront/barrier"),
+            r_barrier.mean_ns / r_wave.mean_ns,
+            "x",
+        );
+    }
+
+    // Mid-occupancy direction fan (the regime that previously neither
+    // segmented nor fanned): a 4-direction merged pass with 2 planes on
+    // 8 threads. The "plane" row caps effective parallelism at nplanes
+    // threads (what the plane path achieves on any wider pool); the fan
+    // rows run the per-(plane, direction) decomposition — bit-identical
+    // output, 4x the width — barrier and wavefront.
+    {
+        let (n, c, h, w) = (1usize, 2usize, 384usize, 384usize);
+        let nplanes = n * c;
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = Taps::normalize(&Tensor::randn(&[n, 1, 3, h, w], &mut rng, 1.0));
+        let t_tb = Taps::normalize(&Tensor::randn(&[n, 1, 3, w, h], &mut rng, 1.0));
+        let tr = [&t_lr, &t_lr, &t_tb, &t_tb];
+        let logits = [0.3f32, -0.1, 0.6, 0.0];
+        let plane_pool = ThreadPool::new(nplanes);
+        let pool8 = ThreadPool::new(8);
+        let tag = format!("n{n}c{c} {h}x{w}");
+        let m_plane = suite.bench(&format!("merged_4dir {tag} (plane cap)"), || {
+            black_box(fused_merged_4dir_pool(&x, tr, &lam, &logits, 0, &plane_pool));
+        });
+        let m_fan_barrier =
+            suite.bench(&format!("merged_4dir {tag} (dirfan barrier, 8 threads)"), || {
+                black_box(fused_merged_4dir_fan(&x, tr, &lam, &logits, 0, false, &pool8));
+            });
+        let m_fan_wave =
+            suite.bench(&format!("merged_4dir {tag} (dirfan wavefront, 8 threads)"), || {
+                black_box(fused_merged_4dir_fan(&x, tr, &lam, &logits, 0, true, &pool8));
+            });
+        suite.record_value(
+            &format!("speedup merged_4dir {tag} dirfan/plane"),
+            m_plane.mean_ns / m_fan_wave.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("speedup merged_4dir {tag} dirfan wavefront/barrier"),
+            m_fan_barrier.mean_ns / m_fan_wave.mean_ns,
             "x",
         );
     }

@@ -105,11 +105,29 @@ impl Default for SimConfig {
     }
 }
 
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScanConfig {
+    /// Scan execution-planner override: `"auto"` (the cost-based
+    /// planner decides), `"plane"`, `"segment"`, or `"dirfan"` — forces
+    /// the named strategy wherever it is valid for the geometry. Applies
+    /// to serving and the benches. `"auto"` defers to the
+    /// `GSPN2_SCAN_PLAN` env var when that is set (the CI hook that
+    /// exercises non-default strategies across the whole suite).
+    pub plan: String,
+}
+
+impl Default for ScanConfig {
+    fn default() -> Self {
+        Self { plan: "auto".into() }
+    }
+}
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub serve: ServeConfig,
     pub train: TrainConfig,
     pub sim: SimConfig,
+    pub scan: ScanConfig,
 }
 
 impl Config {
@@ -147,6 +165,8 @@ impl Config {
 
         self.sim.device = t.str_or("sim.device", &self.sim.device);
         self.sim.out_dir = t.str_or("sim.out_dir", &self.sim.out_dir);
+
+        self.scan.plan = t.str_or("scan.plan", &self.scan.plan);
     }
 
     pub fn apply_args(&mut self, a: &Args) {
@@ -175,6 +195,8 @@ impl Config {
 
         self.sim.device = a.str_or("device", &self.sim.device);
         self.sim.out_dir = a.str_or("out-dir", &self.sim.out_dir);
+
+        self.scan.plan = a.str_or("scan-plan", &self.scan.plan);
     }
 }
 
@@ -230,5 +252,18 @@ mod tests {
     fn missing_config_file_errors() {
         let err = Config::from_args(&args(&["--config", "/no/such/file.toml"]));
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn scan_plan_from_toml_and_cli() {
+        let t = Toml::parse("[scan]\nplan = \"segment\"\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.scan.plan, "auto");
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.scan.plan, "segment");
+        cfg.apply_args(&args(&["--scan-plan", "dirfan"]));
+        assert_eq!(cfg.scan.plan, "dirfan"); // CLI wins
+        let cfg = Config::from_args(&args(&["--scan-plan", "plane"])).unwrap();
+        assert_eq!(cfg.scan.plan, "plane");
     }
 }

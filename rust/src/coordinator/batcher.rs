@@ -10,7 +10,7 @@
 //! The policy is deliberately separate from the execution loop so it can
 //! be unit-tested (and criterion-benched) without PJRT.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::time::{Duration, Instant};
 
 use super::request::{Bucket, Request};
@@ -25,9 +25,10 @@ pub struct BatchPolicy {
     /// idle: batch formation only pays when the executor is busy, so an
     /// idle worker takes whatever is queued instead of letting the head
     /// request age out `max_wait` (latency-under-idleness). The serving
-    /// worker additionally sizes eager releases off shared-pool
-    /// occupancy via [`Batcher::pop_eager_min`]: a saturated pool holds
-    /// partials back so batches come out larger.
+    /// worker additionally sizes eager releases off the bucket's scan
+    /// execution plan via [`Batcher::pop_eager_by`]: a request whose
+    /// planned fan exceeds the pool's idle capacity is held back so
+    /// batches come out larger exactly when batching is free.
     pub eager_idle: bool,
 }
 
@@ -43,11 +44,27 @@ impl Default for BatchPolicy {
 }
 
 /// Per-bucket queues + round-robin fairness cursor.
+///
+/// Scaling: poll-path operations ([`Batcher::pop_batch`],
+/// [`Batcher::next_deadline`]) walk a **non-empty index** instead of
+/// every registered bucket, so a server with the full dynamic
+/// registration cap (1024 buckets, mostly idle) polls in O(active
+/// buckets), not O(registered). Dynamically registered buckets
+/// ([`Batcher::register_bucket_dynamic`]) are additionally *pruned* when
+/// their queue drains — their registration cap measures live state, and
+/// a client cycling through geometries can no longer grow batcher state
+/// without bound. Statically registered (manifest/artifact) buckets are
+/// never pruned.
 pub struct Batcher {
     pub policy: BatchPolicy,
     queues: BTreeMap<Bucket, VecDeque<Request>>,
     /// Supported artifact batch sizes per bucket (sorted ascending).
     batch_sizes: BTreeMap<Bucket, Vec<usize>>,
+    /// Buckets whose queue currently holds at least one request — the
+    /// only buckets the poll paths touch.
+    nonempty: BTreeSet<Bucket>,
+    /// Dynamically registered buckets, pruned once drained.
+    dynamic: BTreeSet<Bucket>,
     rr_cursor: usize,
     queued: usize,
 }
@@ -58,25 +75,47 @@ impl Batcher {
             policy,
             queues: BTreeMap::new(),
             batch_sizes: BTreeMap::new(),
+            nonempty: BTreeSet::new(),
+            dynamic: BTreeSet::new(),
             rr_cursor: 0,
             queued: 0,
         }
     }
 
     /// Register a bucket with the artifact batch sizes available for it.
+    /// Static registration: the bucket stays registered for the
+    /// batcher's lifetime (manifest-backed artifacts).
     pub fn register_bucket(&mut self, bucket: Bucket, mut sizes: Vec<usize>) {
         sizes.sort_unstable();
+        self.dynamic.remove(&bucket);
         self.batch_sizes.insert(bucket.clone(), sizes);
         self.queues.entry(bucket).or_default();
+    }
+
+    /// Register a bucket discovered from traffic (the cpu backend's
+    /// on-first-use path): identical to [`Batcher::register_bucket`],
+    /// except the bucket is pruned — queue, sizes, and registration —
+    /// as soon as its queue drains, so idle geometries stop occupying
+    /// the registration cap and the poll paths.
+    pub fn register_bucket_dynamic(&mut self, bucket: Bucket, sizes: Vec<usize>) {
+        self.register_bucket(bucket.clone(), sizes);
+        self.dynamic.insert(bucket);
     }
 
     pub fn known_bucket(&self, bucket: &Bucket) -> bool {
         self.batch_sizes.contains_key(bucket)
     }
 
-    /// Number of registered buckets (used to cap dynamic registration).
+    /// Number of registered buckets (used to cap dynamic registration;
+    /// drained dynamic buckets no longer count).
     pub fn bucket_count(&self) -> usize {
         self.batch_sizes.len()
+    }
+
+    /// Buckets currently holding queued requests (the poll-path working
+    /// set).
+    pub fn nonempty_buckets(&self) -> usize {
+        self.nonempty.len()
     }
 
     pub fn queued(&self) -> usize {
@@ -97,6 +136,7 @@ impl Batcher {
             Some(q) => {
                 q.push_back(req);
                 self.queued += 1;
+                self.nonempty.insert(bucket);
                 Ok(())
             }
             None => Err(req),
@@ -104,11 +144,12 @@ impl Batcher {
     }
 
     /// Next deadline at which some queue becomes releasable by age (for
-    /// condvar timeouts). None when everything is empty.
+    /// condvar timeouts). None when everything is empty. Walks the
+    /// non-empty index only.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queues
-            .values()
-            .filter_map(|q| q.front())
+        self.nonempty
+            .iter()
+            .filter_map(|k| self.queues.get(k).and_then(|q| q.front()))
             .map(|r| r.arrived + self.policy.max_wait)
             .min()
     }
@@ -119,23 +160,31 @@ impl Batcher {
     /// requests (len <= fused size; len == fused size unless the bucket
     /// only offers larger artifacts — callers pad in that case).
     pub fn pop_batch(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_releasable(now, 1)
+        self.pop_releasable(now, |_, _| 1)
     }
 
-    fn pop_releasable(
+    /// The shared pop core: round-robin over the *non-empty* buckets
+    /// only, releasing the first that is full or whose head aged out and
+    /// that holds at least `min_for(bucket, queue_len)` requests
+    /// (clamped to `[1, max_batch]`). A bucket drained to empty leaves
+    /// the index; a drained *dynamic* bucket is pruned entirely.
+    fn pop_releasable<F: Fn(&Bucket, usize) -> usize>(
         &mut self,
         now: Instant,
-        min_len: usize,
+        min_for: F,
     ) -> Option<(Bucket, usize, Vec<Request>)> {
-        let keys: Vec<Bucket> = self.queues.keys().cloned().collect();
-        if keys.is_empty() {
+        if self.nonempty.is_empty() {
             return None;
         }
+        let keys: Vec<Bucket> = self.nonempty.iter().cloned().collect();
         let n = keys.len();
+        let max_batch = self.policy.max_batch.max(1);
         for i in 0..n {
             let k = &keys[(self.rr_cursor + i) % n];
             let q = self.queues.get_mut(k).unwrap();
-            if q.is_empty() || q.len() < min_len {
+            debug_assert!(!q.is_empty(), "indexed bucket with empty queue");
+            let min_len = min_for(k, q.len()).clamp(1, max_batch);
+            if q.len() < min_len {
                 continue;
             }
             let head_aged =
@@ -161,6 +210,13 @@ impl Batcher {
             let take = fused.min(q.len());
             let batch: Vec<Request> = q.drain(..take).collect();
             self.queued -= batch.len();
+            if q.is_empty() {
+                self.nonempty.remove(k);
+                if self.dynamic.remove(k) {
+                    self.queues.remove(k);
+                    self.batch_sizes.remove(k);
+                }
+            }
             self.rr_cursor = (self.rr_cursor + i + 1) % n;
             return Some((k.clone(), fused, batch));
         }
@@ -168,28 +224,42 @@ impl Batcher {
     }
 
     /// Pop regardless of head age (the eager-idle path): equivalent to
-    /// `pop_batch` at a time when every head has aged out.
+    /// `pop_batch` at a time when every head has aged out. Convenience
+    /// shim over [`Batcher::pop_eager_by`] — the serving worker uses
+    /// the per-bucket plan-cost form directly.
     pub fn pop_eager(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
         self.pop_eager_min(now, 1)
     }
 
-    /// Pool-occupancy-aware eager pop: like [`Batcher::pop_eager`], but
-    /// only releases buckets holding at least `min_len` requests. The
-    /// serving worker raises `min_len` to `max_batch` while the shared
-    /// thread pool is saturated — an eager partial release buys no
-    /// latency when the executor would only queue behind the pool, so
-    /// the batcher keeps accumulating toward a larger fused batch
-    /// instead. Truly aged heads are never starved: callers release them
-    /// through [`Batcher::pop_batch`] first, where age always wins.
-    /// `min_len` is clamped to `max_batch` so a full bucket always
-    /// releases.
+    /// Eager pop with one global minimum release size: like
+    /// [`Batcher::pop_eager`], but only releases buckets holding at
+    /// least `min_len` requests (clamped to `max_batch` so a full
+    /// bucket always releases). A fixed-threshold shim over
+    /// [`Batcher::pop_eager_by`], kept for tests and callers without a
+    /// per-bucket cost model; truly aged heads are never starved —
+    /// callers release them through [`Batcher::pop_batch`] first, where
+    /// age always wins.
     pub fn pop_eager_min(
         &mut self,
         now: Instant,
         min_len: usize,
     ) -> Option<(Bucket, usize, Vec<Request>)> {
-        let min_len = min_len.clamp(1, self.policy.max_batch.max(1));
-        self.pop_releasable(now + self.policy.max_wait + Duration::from_nanos(1), min_len)
+        self.pop_eager_by(now, |_, _| min_len)
+    }
+
+    /// Plan-cost-aware eager pop: like [`Batcher::pop_eager_min`], but
+    /// the minimum release size is computed *per bucket* by `min_for`
+    /// (given the bucket and its queue length). The serving worker
+    /// passes [`crate::scan::plan::eager_release_min`] over the
+    /// bucket-geometry's execution plan, so release sizing follows the
+    /// plan's cost estimate — how much of the pool one request's fan
+    /// would actually cover — instead of a global saturated/idle bool.
+    pub fn pop_eager_by<F: Fn(&Bucket, usize) -> usize>(
+        &mut self,
+        now: Instant,
+        min_for: F,
+    ) -> Option<(Bucket, usize, Vec<Request>)> {
+        self.pop_releasable(now + self.policy.max_wait + Duration::from_nanos(1), min_for)
     }
 
     /// Drain everything regardless of age (shutdown path).
@@ -455,5 +525,135 @@ mod tests {
         b.enqueue(bucket(8), r).expect("registered");
         let d = b.next_deadline().unwrap();
         assert_eq!(d, t0 + Duration::from_micros(5_000));
+    }
+
+    fn bucket_hw(i: usize) -> Bucket {
+        // Distinct geometries, like the cpu backend's dynamic traffic.
+        Bucket { c: 1 + i % 16, h: 8 + i / 16, w: 8, kchunk: 0, per_channel: false }
+    }
+
+    /// The scaling regression at the cpu backend's registration cap:
+    /// with 1024 dynamic buckets registered, the poll paths walk only
+    /// the non-empty index, and drained dynamic queues are pruned so
+    /// registration state tracks live traffic instead of history.
+    #[test]
+    fn dynamic_buckets_index_and_prune_at_1024() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(1),
+            queue_cap: 0,
+            eager_idle: false,
+        });
+        for i in 0..1024 {
+            b.register_bucket_dynamic(bucket_hw(i), vec![1, 2, 4]);
+        }
+        assert_eq!(b.bucket_count(), 1024);
+        assert_eq!(b.nonempty_buckets(), 0);
+        // All-idle polls are index-driven no-ops, not 1024-key scans.
+        let t0 = Instant::now();
+        assert!(b.pop_batch(t0).is_none());
+        assert!(b.next_deadline().is_none());
+        // Traffic lands in 3 of the 1024.
+        let mut rxs = Vec::new();
+        for (id, bi) in [(1u64, 5usize), (2, 700), (3, 1023), (4, 5), (5, 700), (6, 1023)] {
+            let (r, rx) = mk_req_for(id, bucket_hw(bi), t0);
+            b.enqueue(bucket_hw(bi), r).expect("registered");
+            rxs.push(rx);
+        }
+        assert_eq!(b.nonempty_buckets(), 3);
+        assert!(b.next_deadline().is_some());
+        // Drain (heads aged): exactly the three active buckets release.
+        let later = t0 + Duration::from_micros(10);
+        let mut seen = Vec::new();
+        while let Some((bk, _, reqs)) = b.pop_batch(later) {
+            assert_eq!(reqs.len(), 2);
+            seen.push(bk);
+        }
+        seen.sort();
+        let mut want = vec![bucket_hw(5), bucket_hw(700), bucket_hw(1023)];
+        want.sort();
+        assert_eq!(seen, want);
+        // Drained dynamic buckets are pruned: registration shrank and
+        // the index is empty again.
+        assert_eq!(b.nonempty_buckets(), 0);
+        assert_eq!(b.bucket_count(), 1021);
+        assert!(!b.known_bucket(&bucket_hw(5)));
+        // Pruned geometries re-register cleanly on their next use.
+        b.register_bucket_dynamic(bucket_hw(5), vec![1]);
+        let (r, _rx) = mk_req_for(7, bucket_hw(5), t0);
+        b.enqueue(bucket_hw(5), r).expect("re-registered");
+        assert_eq!(b.queued(), 1);
+    }
+
+    /// Static (manifest) buckets are never pruned, drained or not.
+    #[test]
+    fn static_buckets_survive_draining() {
+        let mut b = mk_batcher(4, 0);
+        let now = Instant::now();
+        let (r, _rx) = req(1, 8, now);
+        b.enqueue(bucket(8), r).expect("registered");
+        let (_, _, reqs) = b.pop_batch(now).expect("aged release");
+        assert_eq!(reqs.len(), 1);
+        assert!(b.known_bucket(&bucket(8)));
+        assert_eq!(b.bucket_count(), 1);
+        // And a re-registration as static un-marks a dynamic bucket.
+        b.register_bucket_dynamic(bucket(16), vec![1]);
+        b.register_bucket(bucket(16), vec![1]);
+        let (r, _rx2) = req(2, 16, now);
+        b.enqueue(bucket(16), r).expect("registered");
+        b.pop_batch(now).expect("release");
+        assert!(b.known_bucket(&bucket(16)), "static re-registration was pruned");
+    }
+
+    fn mk_req_for(id: u64, bk: Bucket, arrived: Instant) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let r = Request {
+            id,
+            payload: Payload::Scan {
+                x: Tensor::zeros(&[1, bk.c, bk.h, bk.w]),
+                a_raw: Tensor::zeros(&[1, 1, 3, bk.h, bk.w]),
+                lam: Tensor::zeros(&[1, bk.c, bk.h, bk.w]),
+            },
+            kchunk: 0,
+            arrived,
+            reply: tx,
+        };
+        (r, rx)
+    }
+
+    /// Per-bucket eager sizing (the plan-cost hook): a closure can hold
+    /// one bucket back for a full batch while releasing another's
+    /// partials immediately.
+    #[test]
+    fn eager_by_sizes_per_bucket() {
+        let mut b = mk_batcher(4, 1_000_000);
+        b.register_bucket(bucket(16), vec![1, 2, 4]);
+        let now = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r).expect("registered");
+            rxs.push(rx);
+        }
+        for i in 10..12 {
+            let (r, rx) = req(i, 16, now);
+            b.enqueue(bucket(16), r).expect("registered");
+            rxs.push(rx);
+        }
+        // Hold the c8 bucket for a full batch, release c16 partials.
+        let sized = |bk: &Bucket, _len: usize| if bk.c == 8 { 4 } else { 1 };
+        let (bk, _, reqs) = b.pop_eager_by(now, sized).expect("c16 releases");
+        assert_eq!(bk.c, 16);
+        assert_eq!(reqs.len(), 2);
+        assert!(b.pop_eager_by(now, sized).is_none(), "c8 held for a full batch");
+        assert_eq!(b.queued(), 2);
+        // Once full, the held bucket releases through the same closure.
+        for i in 2..4 {
+            let (r, rx) = req(i, 8, now);
+            b.enqueue(bucket(8), r).expect("registered");
+            rxs.push(rx);
+        }
+        let (bk, fused, reqs) = b.pop_eager_by(now, sized).expect("full c8");
+        assert_eq!((bk.c, fused, reqs.len()), (8, 4, 4));
     }
 }

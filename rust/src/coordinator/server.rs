@@ -40,6 +40,7 @@ use super::metrics::Metrics;
 use super::request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
+use crate::scan::plan::{eager_release_min, plan_scan, ScanGeometry};
 use crate::tensor::{concat_axis0, split_axis0};
 use crate::util::{logging, ThreadPool};
 use crate::Tensor;
@@ -199,13 +200,17 @@ impl Coordinator {
                 // and pop_batch's key scan — without bound; beyond the
                 // cap, novel geometries get the same structured
                 // rejection the pjrt backend gives.
+                // The cap measures *live* registrations: the batcher
+                // prunes a dynamic bucket once its queue drains, so
+                // steady traffic over shifting geometries recycles slots
+                // instead of exhausting them.
                 const MAX_DYNAMIC_BUCKETS: usize = 1024;
                 if b.bucket_count() >= MAX_DYNAMIC_BUCKETS {
                     self.shared.metrics.lock().unwrap().record_rejection();
                     return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
                 }
                 let max = b.policy.max_batch.max(1);
-                b.register_bucket(bucket.clone(), (1..=max).collect());
+                b.register_bucket_dynamic(bucket.clone(), (1..=max).collect());
             }
             let req = Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -320,19 +325,25 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                 // Eager-idle release: this worker has nothing runnable, so
                 // waiting out max_wait would buy batching nothing — take
                 // the queue head now (only fires when queues are non-empty
-                // but un-aged and un-full). Sized off pool occupancy:
-                // when the shared pool is already saturated, an eager
-                // partial release would only queue behind it, so hold out
-                // for a full fused batch instead (aged heads still
-                // release through pop_batch above, bounding the delay by
-                // max_wait).
+                // but un-aged and un-full). Sized off the execution
+                // plan's cost estimate, per bucket: one request's plan
+                // says how wide its phase-1 fan is; if the pool's idle
+                // capacity swallows that fan the release buys latency,
+                // otherwise the batcher holds out for enough requests to
+                // make the wait worthwhile — up to a full fused batch on
+                // a fully busy pool (aged heads still release through
+                // pop_batch above, bounding the delay by max_wait).
                 if b.policy.eager_idle {
-                    let min_len = if ThreadPool::global().saturated() {
-                        b.policy.max_batch
-                    } else {
-                        1
-                    };
-                    if let Some(batch) = b.pop_eager_min(now, min_len) {
+                    let pool = ThreadPool::global();
+                    let (load, threads) = (pool.load(), pool.threads());
+                    let max_batch = b.policy.max_batch;
+                    let released = b.pop_eager_by(now, |bucket, _qlen| {
+                        let geom =
+                            ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
+                        let plan = plan_scan(&geom, load, threads);
+                        eager_release_min(&plan, load, threads, max_batch)
+                    });
+                    if let Some(batch) = released {
                         break Some(batch);
                     }
                 }
@@ -406,12 +417,13 @@ fn reject_direct(sh: &Shared, req: Request) {
 /// the raw taps and run the column-staged fused scan with its plane
 /// blocks fanned out on the process-wide pool. No concat/pad/split —
 /// the CPU path has no shape-specialised executable to feed, so each
-/// request's tensors are consumed in place. The engine's occupancy
-/// scheduler covers both serving regimes: many-plane requests run
-/// plane-parallel, bit-identical to `scan_l2r` (the e2e tests pin this
-/// with exact equality); a single large-resolution request — too few
-/// planes to occupy the pool — runs segment-parallel, bit-identical to
-/// `scan_l2r_split` at the scheduler's count (also e2e-pinned).
+/// request's tensors are consumed in place. The execution planner
+/// ([`crate::scan::plan::plan_scan`]) covers both serving regimes:
+/// many-plane requests run plane-parallel, bit-identical to `scan_l2r`
+/// (the e2e tests pin this with exact equality); a single
+/// large-resolution request — too few planes to occupy the pool — runs
+/// segment-parallel with wavefront continuations, bit-identical to
+/// `scan_l2r_split` at the planned count (also e2e-pinned).
 fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
     let batch = reqs.len();
     for r in reqs {

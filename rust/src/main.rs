@@ -12,7 +12,9 @@
 //! gspn2 info   [--artifacts DIR]
 //! ```
 //!
-//! Any command also accepts `--config path.toml` (see `configs/`).
+//! Any command also accepts `--config path.toml` (see `configs/`) and
+//! `--scan-plan auto|plane|segment|dirfan` (the scan execution-planner
+//! override, `[scan] plan` in TOML).
 
 use gspn2::config::Config;
 use gspn2::coordinator::{Coordinator, SubmitError};
@@ -38,6 +40,13 @@ fn main() {
 
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     let cfg = Config::from_args(args).map_err(|e| anyhow::anyhow!(e))?;
+    // Scan planner override (`--scan-plan` / `[scan] plan`): an explicit
+    // setting pins every pooled scan in this process; the "auto" default
+    // defers to the planner (and the GSPN2_SCAN_PLAN env hook).
+    if cfg.scan.plan != "auto" {
+        gspn2::scan::plan::set_plan_override(&cfg.scan.plan)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
     match cmd {
         "repro" => {
             let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");

@@ -173,11 +173,14 @@ impl CompactGspnUnit {
     /// merge → `u ⊙ h` modulation all run as one fused pass
     /// ([`super::fused::fused_merged_canonical`]) — no directional scan
     /// output, `from_canonical` copy, merged intermediate, or modulation
-    /// clone is ever materialized. Bit-identical to [`Self::forward_ref`]
-    /// (pinned by tests) whenever the engine's occupancy scheduler stays
-    /// plane-parallel — always for canonical widths < 256; above that,
-    /// a low-occupancy forward may run segment-parallel, following the
-    /// `scan_l2r_split` reference arithmetic instead (±1e-4-equivalent).
+    /// clone is ever materialized. How the pass decomposes over the pool
+    /// is the execution planner's call ([`super::plan::plan_scan`]):
+    /// bit-identical to [`Self::forward_ref`] (pinned by tests) under
+    /// both bit-exact strategies — plane-parallel, and the mid-occupancy
+    /// per-direction fan (`DirFan`, wavefront-scheduled). Only a
+    /// low-occupancy forward wide enough to segment (canonical widths
+    /// ≥ 256) follows the `scan_l2r_split` reference arithmetic instead
+    /// (±1e-4-equivalent).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.shape[1], self.c);
         let xp = self.down.apply(x);

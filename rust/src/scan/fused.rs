@@ -41,22 +41,38 @@
 //!    ever exists in memory, and scratch is O(SLAB·max(H, W)) per job
 //!    instead of O(H·W) panels.
 //!
-//! 4. **Low-occupancy geometries → segment-parallel decomposition.**
-//!    Plane-blocks are the only parallelism above, so a single
+//! 4. **Low-occupancy geometries → planned decompositions.** Plane
+//!    blocks are the only parallelism above, so a single
 //!    large-resolution request (few N·C planes, huge H·W — the §5.1
-//!    occupancy collapse) runs nearly serial. When the occupancy-aware
-//!    scheduler ([`auto_segments`]) sees fewer planes than pool workers
-//!    and enough canonical columns, the engine switches to the two-phase
-//!    segmented decomposition of [`super::split`], fused: phase 1 scans
-//!    every (plane, direction, segment) from a zero incoming carry in
-//!    parallel — the same pack/unit-stride-scan slab pipeline, retaining
-//!    the canonical columns instead of scattering them — and phase 2
-//!    (parallel over planes) chains the true carries across segment
-//!    boundaries as a linear correction scan ([`correct_col`]) before
-//!    draining each plane through the same fused scatter epilogue.
-//!    Segmented arithmetic is exactly `scan_l2r_split`'s two-phase order
-//!    (pinned `==` by tests); the plane-parallel regime is untouched and
-//!    stays bit-identical to the serial reference.
+//!    occupancy collapse) runs nearly serial. Strategy selection lives
+//!    in the execution planner ([`super::plan::plan_scan`]) — this
+//!    module only *executes* whichever plan it is handed:
+//!
+//!    * `Segmented { s }` — the two-phase decomposition of
+//!      [`super::split`], fused: phase 1 scans every (plane, direction,
+//!      segment) from a zero incoming carry in parallel — the same
+//!      pack/unit-stride-scan slab pipeline, retaining the canonical
+//!      columns instead of scattering them — and phase 2 (per plane)
+//!      chains the true carries across segment boundaries as a linear
+//!      correction scan ([`correct_col`]) before draining the plane
+//!      through the same fused scatter epilogue. Segmented arithmetic
+//!      is exactly `scan_l2r_split`'s two-phase order (pinned `==` by
+//!      tests).
+//!    * `DirFan` — for merged passes: one phase-1 job per (plane,
+//!      direction) scanning its *full* width from the true zero carry
+//!      (already exact, no correction), then a fixed-k-order merge
+//!      drain per plane. Bit-identical to the plane path; executed as
+//!      the `s = 1` degenerate case of the segmented engine.
+//!    * The **wavefront** flag replaces the global barrier between the
+//!      phases with dependency-aware pool submission
+//!      ([`crate::util::ThreadPool::run_graph`]): each plane's
+//!      correction + drain runs as a continuation of that plane's own
+//!      phase-1 jobs, so it hides behind other planes' phase-1 scans.
+//!      Scheduling only — the arithmetic (and every bit) matches the
+//!      barrier path.
+//!
+//!    The plane-parallel regime is untouched and stays bit-identical to
+//!    the serial reference.
 //!
 //! Bit-exactness: per element the engine evaluates exactly the reference
 //! expression `up + ct + dn + (lam·x)` in the same association,
@@ -68,9 +84,11 @@
 //! (`scan_l2r_split`) does, and reproduces *its* bits exactly.
 
 use super::direction::{merge_weights, Direction, DIRECTIONS};
+use super::plan::{self, ScanGeometry, ScanStrategy};
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
-use crate::util::ThreadPool;
+use crate::util::{GraphBuilder, ThreadPool};
+use std::sync::Mutex;
 
 /// Canonical columns staged per slab. 32 columns keep the b/h slabs
 /// L1-resident up to H = 256 while amortizing the slab loop overhead;
@@ -456,40 +474,8 @@ pub(crate) fn plane_blocks(nplanes: usize, threads: usize) -> usize {
 }
 
 // ---------------------------------------------------------------------
-// Segment-parallel decomposition + the occupancy-aware scheduler
+// Segment-parallel decomposition (strategy selection lives in plan.rs)
 // ---------------------------------------------------------------------
-
-/// Minimum canonical columns per segment. Below this the per-segment
-/// carry-correction and job dispatch dominate any occupancy gain. It is
-/// also the compatibility fence: every geometry the unit/e2e suites pin
-/// bit-identical is narrower than `2 * MIN_SEG_COLS`, so the scheduler
-/// can never move them off the bit-exact plane-parallel path regardless
-/// of how wide the host pool is.
-const MIN_SEG_COLS: usize = 128;
-
-/// The occupancy-aware scheduler: how many column segments (if any) each
-/// plane should be decomposed into, given the plane count, the smallest
-/// canonical width among the directions in the pass, and the pool width.
-///
-/// Plane-parallel work is bit-identical to the serial reference and has
-/// zero decomposition overhead, so it wins whenever the planes alone can
-/// occupy the pool (`nplanes >= threads`). Below that — the paper's
-/// §5.1 low-occupancy regime — segmenting buys parallel phase-1 scans at
-/// the cost of a serial-per-plane correction pass (~3 of the scan's 7
-/// flops/pixel over the corrected (S-1)/S fraction of columns; measured
-/// ~27% single-thread overhead at S = 8, 512²), so it only pays when
-/// phase 1 actually fans wider than the planes did. The segment count
-/// targets ~2 phase-1 jobs per worker and never drops a segment below
-/// [`MIN_SEG_COLS`] columns. Returns `None` for "stay plane-parallel".
-pub fn auto_segments(nplanes: usize, wc_min: usize, threads: usize) -> Option<usize> {
-    if threads < 2 || nplanes == 0 || nplanes >= threads {
-        return None;
-    }
-    let max_by_width = wc_min / MIN_SEG_COLS;
-    let want = (2 * threads).div_ceil(nplanes);
-    let s = want.min(max_by_width);
-    (s >= 2).then_some(s)
-}
 
 /// Segment bounds over `wc` canonical columns — the same decomposition
 /// formula as `scan_l2r_split`, so for equal counts the segmented
@@ -500,14 +486,18 @@ fn segment_bounds(wc: usize, segments: usize) -> Vec<(usize, usize)> {
     (0..wc).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(wc))).collect()
 }
 
-/// How an engine run decomposes its work across the pool.
+/// How an engine run decomposes its work across the pool. The engine
+/// holds no selection heuristics of its own: `Auto` defers to the
+/// planner ([`plan::plan_scan`]), `Forced` carries a caller- or
+/// test-chosen plan verbatim.
 #[derive(Clone, Copy)]
-enum SegmentMode {
-    /// Let [`auto_segments`] decide from the geometry and pool width.
+enum ExecSpec {
+    /// Consult [`plan::plan_scan`] from the pass geometry + pool state.
     Auto,
-    /// Forced segment count (clamped per direction to its canonical
-    /// width) — the bit-identity testing / bench hook.
-    Force(usize),
+    /// Execute exactly this strategy (segment counts clamped per
+    /// direction to its canonical width) with the given wavefront flag
+    /// — the bit-identity testing / bench / plan-carrying hook.
+    Forced(ScanStrategy, bool),
 }
 
 // ---------------------------------------------------------------------
@@ -583,53 +573,56 @@ fn run_plane(
                 &mut scratch.carry,
                 &mut scratch.h,
             );
-            match wts {
-                None => {
-                    scatter_slab(&scratch.h, h, w, di.d, i0, sw, hc, os, |_, v| v);
-                }
-                Some(wts) => {
-                    let wt = wts[k];
-                    match gain.filter(|_| k == last) {
-                        None => scatter_slab(
-                            &scratch.h,
-                            h,
-                            w,
-                            di.d,
-                            i0,
-                            sw,
-                            hc,
-                            os,
-                            |o, v| o + wt * v,
-                        ),
-                        Some(g) => scatter_slab(
-                            &scratch.h,
-                            h,
-                            w,
-                            di.d,
-                            i0,
-                            sw,
-                            hc,
-                            os,
-                            |o, v| (o + wt * v) * g,
-                        ),
-                    }
-                }
-            }
+            drain_scatter(&scratch.h, h, w, di.d, i0, sw, hc, os, wts, k, last, gain);
             i0 += sw;
         }
     }
 }
 
+/// The one epilogue-op dispatch every drain site shares: scatter `hs`
+/// back to the spatial plane with the per-element op the pass calls for
+/// — assign (single direction), weighted merge accumulate, or, on the
+/// last direction of a modulated pass, merge + `u ⊙ h` gain. Keeping
+/// this in one place is what keeps the plane, barrier-segmented,
+/// wavefront, and dirfan drains bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn drain_scatter(
+    hs: &[f32],
+    h: usize,
+    w: usize,
+    d: Direction,
+    i0: usize,
+    sw: usize,
+    hc: usize,
+    os: &mut [f32],
+    wts: Option<&[f32; 4]>,
+    k: usize,
+    last: usize,
+    gain: Option<f32>,
+) {
+    match wts {
+        None => scatter_slab(hs, h, w, d, i0, sw, hc, os, |_, v| v),
+        Some(wts) => {
+            let wt = wts[k];
+            match gain.filter(|_| k == last) {
+                None => scatter_slab(hs, h, w, d, i0, sw, hc, os, |o, v| o + wt * v),
+                Some(g) => scatter_slab(hs, h, w, d, i0, sw, hc, os, |o, v| (o + wt * v) * g),
+            }
+        }
+    }
+}
+
 /// Drive the fused pipeline over all (N·C) planes — serially, in
-/// block-granular plane jobs on the pool, or (when the scheduler or the
-/// caller asks for it) through the segment-parallel decomposition.
+/// block-granular plane jobs on the pool, or (when the plan asks for
+/// it) through the segment-parallel / direction-fan decompositions,
+/// with or without wavefront continuations.
 fn run_engine(
     dirs: &[DirInput<'_>],
     wts: Option<&[f32; 4]>,
     gain: Option<&[f32]>,
     out_shape: &[usize],
     pool: Option<&ThreadPool>,
-    seg: SegmentMode,
+    exec: ExecSpec,
 ) -> Tensor {
     let (n, c) = (out_shape[0], out_shape[1]);
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -641,15 +634,35 @@ fn run_engine(
     let hmax = h.max(w);
     let staged: Vec<StagedTaps> =
         dirs.iter().map(|d| StagedTaps::build(d.taps, pool)).collect();
-    let segments = match seg {
-        SegmentMode::Force(s) => Some(s.max(1)),
-        SegmentMode::Auto => pool.and_then(|pool| {
-            let wc_min = dirs.iter().map(|di| di.taps.w).min().unwrap_or(0);
-            auto_segments(nplanes, wc_min, pool.threads())
-        }),
+    let (strategy, wavefront) = match exec {
+        ExecSpec::Forced(s, wf) => (s, wf),
+        ExecSpec::Auto => match pool {
+            Some(pool) => {
+                let geom = ScanGeometry {
+                    nplanes,
+                    ndirs: dirs.len(),
+                    wc_min: dirs.iter().map(|di| di.taps.w).min().unwrap_or(0),
+                    plane_px: plane,
+                };
+                let p = plan::plan_scan(&geom, pool.load(), pool.threads());
+                (p.strategy, p.wavefront)
+            }
+            None => (ScanStrategy::PlanePar, false),
+        },
+    };
+    let segments = match strategy {
+        ScanStrategy::PlanePar => None,
+        ScanStrategy::Segmented { s } => Some(s.max(1)),
+        // The direction fan is the s = 1 degenerate segmented run: one
+        // full-width zero-carry (i.e. exact) phase-1 job per (plane,
+        // direction), no correction, fixed-order merge drain. A
+        // single-direction pass has nothing to fan: plane path.
+        ScanStrategy::DirFan => (dirs.len() > 1).then_some(1),
     };
     if let Some(segments) = segments {
-        return run_engine_segmented(dirs, &staged, wts, gain, out_shape, pool, segments);
+        return run_engine_segmented(
+            dirs, &staged, wts, gain, out_shape, pool, segments, wavefront,
+        );
     }
     let mut out = Tensor::zeros(out_shape);
     let gain_for = |ci: usize| gain.map(|g| g[ci]);
@@ -719,7 +732,11 @@ fn run_engine(
 /// (pinned `==` by tests); only the memory layout and the epilogue
 /// fusion differ. The retained panels cost
 /// O(nplanes · Σ_dirs hc·wc) floats — bounded in practice because the
-/// scheduler only picks this path when `nplanes < threads`.
+/// planner only picks this path when `nplanes < threads`.
+///
+/// `wavefront` selects the dependency-graph schedule
+/// ([`run_engine_segmented_wave`]) in place of the two-`map` barrier
+/// below — same jobs, same bits, no global rendezvous between phases.
 #[allow(clippy::too_many_arguments)]
 fn run_engine_segmented(
     dirs: &[DirInput<'_>],
@@ -729,7 +746,15 @@ fn run_engine_segmented(
     out_shape: &[usize],
     pool: Option<&ThreadPool>,
     segments: usize,
+    wavefront: bool,
 ) -> Tensor {
+    if wavefront {
+        if let Some(pool) = pool {
+            return run_engine_segmented_wave(
+                dirs, staged, wts, gain, out_shape, pool, segments,
+            );
+        }
+    }
     let c = out_shape[1];
     let (h, w) = (out_shape[2], out_shape[3]);
     let plane = h * w;
@@ -767,35 +792,7 @@ fn run_engine_segmented(
             }
         }
         let scan_piece = |(p, k, lo, hi, buf): (usize, usize, usize, usize, &mut [f32])| {
-            let di = &dirs[k];
-            let hc = di.taps.h;
-            let base = p * plane;
-            let xs = &di.x.data[base..base + plane];
-            let ls = &di.lam.data[base..base + plane];
-            let (tu, tc, td) = staged[k].panels(p / c, p % c);
-            let mut b = vec![0.0f32; SLAB * hmax];
-            let mut carry = vec![0.0f32; hmax];
-            let zeros = vec![0.0f32; hmax];
-            let mut i0 = lo;
-            while i0 < hi {
-                let sw = SLAB.min(hi - i0);
-                pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
-                let o = (i0 - lo) * hc;
-                scan_slab(
-                    hc,
-                    i0,
-                    sw,
-                    di.chunk,
-                    &b,
-                    tu,
-                    tc,
-                    td,
-                    &zeros,
-                    &mut carry,
-                    &mut buf[o..o + sw * hc],
-                );
-                i0 += sw;
-            }
+            scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, buf);
         };
         match pool {
             Some(pool) if pool.threads() > 1 && jobs.len() > 1 => {
@@ -835,41 +832,21 @@ fn run_engine_segmented(
                 if cin.iter().all(|&v| v == 0.0) {
                     continue;
                 }
-                corr[..hc].copy_from_slice(cin);
-                for (j, gi) in (lo..hi).enumerate() {
-                    if gi % di.chunk == 0 {
-                        // Chunk reset: the carry dies here and phase 1
-                        // was already exact from this column on.
-                        break;
-                    }
-                    let g0 = gi * hc;
-                    correct_col(
-                        &corr[..hc],
-                        &tu[g0..g0 + hc],
-                        &tc[g0..g0 + hc],
-                        &td[g0..g0 + hc],
-                        &mut next[..hc],
-                    );
-                    for (o, &v) in todo[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
-                        *o += v;
-                    }
-                    std::mem::swap(&mut corr, &mut next);
-                }
+                correct_segment(
+                    hc,
+                    di.chunk,
+                    lo,
+                    hi,
+                    tu,
+                    tc,
+                    td,
+                    cin,
+                    &mut corr,
+                    &mut next,
+                    &mut todo[..(hi - lo) * hc],
+                );
             }
-            match wts {
-                None => scatter_slab(panel, h, w, di.d, 0, wc, hc, os, |_, v| v),
-                Some(wts) => {
-                    let wt = wts[k];
-                    match gain_for(p % c).filter(|_| k == last) {
-                        None => scatter_slab(panel, h, w, di.d, 0, wc, hc, os, |o, v| {
-                            o + wt * v
-                        }),
-                        Some(g) => scatter_slab(panel, h, w, di.d, 0, wc, hc, os, |o, v| {
-                            (o + wt * v) * g
-                        }),
-                    }
-                }
-            }
+            drain_scatter(panel, h, w, di.d, 0, wc, hc, os, wts, k, last, gain_for(p % c));
         }
     };
     match pool {
@@ -877,6 +854,232 @@ fn run_engine_segmented(
             pool.map(planes, correct_and_drain);
         }
         _ => planes.into_iter().for_each(correct_and_drain),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Shared phase bodies + wavefront scheduling (phase 2 as a per-plane
+// continuation)
+// ---------------------------------------------------------------------
+
+/// Phase 1 of one (plane, direction, segment) piece: pack and
+/// unit-stride-scan columns `[lo, hi)` from a zero incoming carry into
+/// `buf` (column-major, `(hi - lo) * hc`). The one shared phase-1 body
+/// — the barrier engine calls it on preallocated panel slices, the
+/// wavefront engine on owned piece buffers — so the two schedules
+/// cannot drift apart arithmetically.
+#[allow(clippy::too_many_arguments)]
+fn scan_piece_into(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps],
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    p: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    buf: &mut [f32],
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let di = &dirs[k];
+    let hc = di.taps.h;
+    let base = p * plane;
+    let xs = &di.x.data[base..base + plane];
+    let ls = &di.lam.data[base..base + plane];
+    let (tu, tc, td) = staged[k].panels(p / c, p % c);
+    let mut b = vec![0.0f32; SLAB * hmax];
+    let mut carry = vec![0.0f32; hmax];
+    let zeros = vec![0.0f32; hmax];
+    let mut i0 = lo;
+    while i0 < hi {
+        let sw = SLAB.min(hi - i0);
+        pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
+        let o = (i0 - lo) * hc;
+        scan_slab(
+            hc,
+            i0,
+            sw,
+            di.chunk,
+            &b,
+            tu,
+            tc,
+            td,
+            &zeros,
+            &mut carry,
+            &mut buf[o..o + sw * hc],
+        );
+        i0 += sw;
+    }
+}
+
+/// The one shared carry-correction body: add the linear correction scan
+/// seeded by `cin` onto segment columns `[lo, hi)` held in `seg`
+/// (column-major within the segment), dying at chunk resets. Callers
+/// own the zero-carry skip (the reference decomposition elides all-zero
+/// corrections, which keeps even -0.0 pixels bit-identical).
+#[allow(clippy::too_many_arguments)]
+fn correct_segment(
+    hc: usize,
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+    tu: &[f32],
+    tc: &[f32],
+    td: &[f32],
+    cin: &[f32],
+    corr: &mut Vec<f32>,
+    next: &mut Vec<f32>,
+    seg: &mut [f32],
+) {
+    corr[..hc].copy_from_slice(&cin[..hc]);
+    for (j, gi) in (lo..hi).enumerate() {
+        if gi % chunk == 0 {
+            // Chunk reset: the carry dies here and phase 1 was already
+            // exact from this column on.
+            break;
+        }
+        let g0 = gi * hc;
+        correct_col(
+            &corr[..hc],
+            &tu[g0..g0 + hc],
+            &tc[g0..g0 + hc],
+            &td[g0..g0 + hc],
+            &mut next[..hc],
+        );
+        for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
+            *o += v;
+        }
+        std::mem::swap(corr, next);
+    }
+}
+
+/// Phase 2 of one plane off per-segment panel pieces: chain the true
+/// carry across segment boundaries (the corrected last column of
+/// segment k *is* segment k+1's carry), add the linear correction scan
+/// in place, and drain each corrected segment through the fused scatter
+/// epilogue in the same k = 0..dirs order as the plane path. Exactly
+/// the barrier engine's `correct_and_drain`, re-expressed over the
+/// piece-per-slot layout (every element sees the same values in the
+/// same order, so the bits match).
+#[allow(clippy::too_many_arguments)]
+fn correct_and_drain_pieces(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps],
+    bounds: &[Vec<(usize, usize)>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<f32>,
+    p: usize,
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    slots: &[Mutex<Vec<f32>>],
+    os: &mut [f32],
+) {
+    let (h, w) = hw;
+    let last = dirs.len() - 1;
+    let mut corr = vec![0.0f32; hmax];
+    let mut next = vec![0.0f32; hmax];
+    let mut carry = vec![0.0f32; hmax];
+    let mut slot = 0usize;
+    for (k, di) in dirs.iter().enumerate() {
+        let hc = di.taps.h;
+        let (tu, tc, td) = staged[k].panels(p / c, p % c);
+        for (si, &(lo, hi)) in bounds[k].iter().enumerate() {
+            let mut buf = std::mem::take(&mut *slots[slot].lock().unwrap());
+            slot += 1;
+            // Incoming carry: the previous segment's (corrected) last
+            // column. The reference decomposition skips all-zero
+            // carries; matching the skip keeps even -0.0 pixels
+            // bit-identical.
+            if si > 0 && !carry[..hc].iter().all(|&v| v == 0.0) {
+                correct_segment(
+                    hc, di.chunk, lo, hi, tu, tc, td, &carry, &mut corr, &mut next, &mut buf,
+                );
+            }
+            carry[..hc].copy_from_slice(&buf[(hi - lo - 1) * hc..(hi - lo) * hc]);
+            drain_scatter(&buf, h, w, di.d, lo, hi - lo, hc, os, wts, k, last, gain);
+        }
+    }
+}
+
+/// The wavefront-scheduled segmented engine: the same (plane,
+/// direction, segment) phase-1 jobs and per-plane phase-2 jobs as the
+/// barrier engine, submitted as a dependency graph
+/// ([`ThreadPool::run_graph`]) in which each plane's correction + drain
+/// is a *continuation* of that plane's own phase-1 pieces. Plane A's
+/// serial correction chain therefore runs while planes B, C, … are
+/// still in phase 1 — the per-plane barrier the ROADMAP called the
+/// "next parallelism step" is gone, and no global rendezvous exists
+/// anywhere in the pass.
+///
+/// Phase-1 pieces hand their panels to the continuation through
+/// per-(plane, direction, segment) slots; the graph's dependency edges
+/// are what order the accesses, so the slot locks are uncontended.
+/// Arithmetic is untouched — output is exact `==` with the barrier
+/// engine (and hence `scan_l2r_split`), pinned by tests.
+#[allow(clippy::too_many_arguments)]
+fn run_engine_segmented_wave(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: &ThreadPool,
+    segments: usize,
+) -> Tensor {
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = out_shape[0] * c;
+    let hmax = h.max(w);
+    let bounds: Vec<Vec<(usize, usize)>> =
+        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
+    let per_plane_slots: usize = bounds.iter().map(|b| b.len()).sum();
+    let slots: Vec<Mutex<Vec<f32>>> =
+        (0..nplanes * per_plane_slots).map(|_| Mutex::new(Vec::new())).collect();
+
+    let mut out = Tensor::zeros(out_shape);
+    let mut graph = GraphBuilder::new();
+    let bounds_ref = &bounds;
+    let slots_ref = &slots;
+    for (p, os) in out.data.chunks_mut(plane).enumerate() {
+        let mut piece_ids = Vec::with_capacity(per_plane_slots);
+        let mut slot = p * per_plane_slots;
+        for (k, _) in dirs.iter().enumerate() {
+            for &(lo, hi) in &bounds[k] {
+                let dst = &slots_ref[slot];
+                slot += 1;
+                let hc = dirs[k].taps.h;
+                piece_ids.push(graph.submit(move || {
+                    let mut buf = vec![0.0f32; (hi - lo) * hc];
+                    scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, &mut buf);
+                    *dst.lock().unwrap() = buf;
+                }));
+            }
+        }
+        let plane_slots = &slots_ref[p * per_plane_slots..(p + 1) * per_plane_slots];
+        let gv = gain.map(|g| g[p % c]);
+        graph.submit_after(&piece_ids, move || {
+            correct_and_drain_pieces(
+                dirs,
+                staged,
+                bounds_ref,
+                wts,
+                gv,
+                p,
+                c,
+                (h, w),
+                hmax,
+                plane_slots,
+                os,
+            );
+        });
+    }
+    if let Err(e) = pool.run_graph(graph) {
+        std::panic::resume_unwind(e.into_payload());
     }
     out
 }
@@ -923,7 +1126,31 @@ fn fused_scan_dir_inner(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, pool, SegmentMode::Auto)
+    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto)
+}
+
+/// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
+/// wavefront flag. The pooled entry points normally consult the planner
+/// ([`plan::plan_scan`]); this hook exists for tests, benches, and
+/// plan-carrying callers that already decided.
+#[allow(clippy::too_many_arguments)]
+fn fused_scan_dir_forced(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    strategy: ScanStrategy,
+    wavefront: bool,
+    pool: &ThreadPool,
+) -> Tensor {
+    validate_dir(x, taps, lam, d);
+    if x.data.is_empty() {
+        return Tensor::zeros(&x.shape);
+    }
+    let chunk = effective_chunk(taps.w, kchunk);
+    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
+    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, wavefront))
 }
 
 /// [`fused_scan_dir_pool`] with a *forced* segment-parallel
@@ -931,10 +1158,8 @@ fn fused_scan_dir_inner(
 /// `segments` zero-carry segments and carry-corrected — bit-identical
 /// (exact `==`, pinned by tests) to running
 /// [`super::split::scan_l2r_split`] on the canonically reoriented
-/// tensors with the same count. The pooled entry points normally pick
-/// the decomposition (and the count) themselves via [`auto_segments`];
-/// this hook exists for tests, benches, and callers that know their
-/// geometry.
+/// tensors with the same count. Runs the barrier schedule; see
+/// [`fused_scan_dir_seg_wave`] for the wavefront twin.
 pub fn fused_scan_dir_seg(
     x: &Tensor,
     taps: &Taps,
@@ -944,13 +1169,26 @@ pub fn fused_scan_dir_seg(
     segments: usize,
     pool: &ThreadPool,
 ) -> Tensor {
-    validate_dir(x, taps, lam, d);
-    if x.data.is_empty() {
-        return Tensor::zeros(&x.shape);
-    }
-    let chunk = effective_chunk(taps.w, kchunk);
-    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, Some(pool), SegmentMode::Force(segments))
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, false, pool)
+}
+
+/// [`fused_scan_dir_seg`] under wavefront scheduling: each plane's
+/// carry correction + epilogue drain runs as a continuation of that
+/// plane's phase-1 segment jobs instead of behind a global barrier.
+/// Scheduling only — exact `==` with [`fused_scan_dir_seg`] (and the
+/// `scan_l2r_split` reference) at the same count, pinned by tests.
+pub fn fused_scan_dir_seg_wave(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, true, pool)
 }
 
 /// [`fused_scan_dir_seg`] for the canonical left-to-right scan: the
@@ -965,6 +1203,19 @@ pub fn fused_scan_l2r_seg(
     pool: &ThreadPool,
 ) -> Tensor {
     fused_scan_dir_seg(x, taps, lam, Direction::L2R, kchunk, segments, pool)
+}
+
+/// [`fused_scan_l2r_seg`] under wavefront scheduling (see
+/// [`fused_scan_dir_seg_wave`]).
+pub fn fused_scan_l2r_seg_wave(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_seg_wave(x, taps, lam, Direction::L2R, kchunk, segments, pool)
 }
 
 /// Fused canonical scan (serial): bit-identical to `scan_l2r`.
@@ -1023,7 +1274,7 @@ pub fn fused_merged_4dir(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, None, SegmentMode::Auto)
+    run_engine(&dirs, Some(&wts), None, &x.shape, None, ExecSpec::Auto)
 }
 
 /// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
@@ -1037,14 +1288,40 @@ pub fn fused_merged_4dir_pool(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), SegmentMode::Auto)
+    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), ExecSpec::Auto)
+}
+
+/// [`fused_merged_4dir_pool`] under an explicit strategy + wavefront
+/// flag (the forced hook behind the seg / fan variants below).
+#[allow(clippy::too_many_arguments)]
+fn fused_merged_4dir_forced(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    strategy: ScanStrategy,
+    wavefront: bool,
+    pool: &ThreadPool,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(
+        &dirs,
+        Some(&wts),
+        None,
+        &x.shape,
+        Some(pool),
+        ExecSpec::Forced(strategy, wavefront),
+    )
 }
 
 /// [`fused_merged_4dir_pool`] with a *forced* segment count per
 /// direction (clamped to each direction's canonical width) — the
 /// segmented twin of the merged pass for tests and benches. Segment
 /// arithmetic follows the `scan_l2r_split` decomposition per direction;
-/// merge order and the epilogue fusion are unchanged.
+/// merge order and the epilogue fusion are unchanged. Barrier schedule;
+/// [`fused_merged_4dir_seg_wave`] is the wavefront twin.
 pub fn fused_merged_4dir_seg(
     x: &Tensor,
     taps: [&Taps; 4],
@@ -1054,9 +1331,52 @@ pub fn fused_merged_4dir_seg(
     segments: usize,
     pool: &ThreadPool,
 ) -> Tensor {
-    let dirs = merged_dirs(x, taps, lam, kchunk);
-    let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), SegmentMode::Force(segments))
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, false, pool)
+}
+
+/// [`fused_merged_4dir_seg`] under wavefront scheduling: per-plane
+/// correction + merge drain as continuations of that plane's phase-1
+/// jobs. Exact `==` with the barrier twin, pinned by tests.
+pub fn fused_merged_4dir_seg_wave(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, true, pool)
+}
+
+/// [`fused_merged_4dir_pool`] with the *forced* per-direction phase-1
+/// fan-out ([`ScanStrategy::DirFan`]): one zero-carry full-width scan
+/// job per (plane, direction), drained through the fixed-k-order merge
+/// epilogue per plane — bit-identical (exact `==`, pinned by tests) to
+/// [`fused_merged_4dir`] and the serial reference, ×4 the parallel
+/// width. `wavefront` runs each plane's drain as a continuation of its
+/// four scans; `false` uses the two-phase barrier schedule.
+pub fn fused_merged_4dir_fan(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    wavefront: bool,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_merged_4dir_forced(
+        x,
+        taps,
+        lam,
+        merge_logits,
+        kchunk,
+        ScanStrategy::DirFan,
+        wavefront,
+        pool,
+    )
 }
 
 /// [`fused_merged_4dir`] over the process-wide shared pool.
@@ -1078,9 +1398,11 @@ pub fn fused_merged_4dir_par(
 /// directional output, the merged tensor, or the modulation clone.
 /// Output is the spatial (N, Cp, H, W) modulated merge, bit-identical to
 /// the reference composition in `CompactGspnUnit::forward_ref` whenever
-/// the occupancy scheduler stays plane-parallel (always for canonical
-/// widths < 256; a low-occupancy wide forward follows the
-/// `scan_l2r_split` segmented arithmetic instead).
+/// the planner ([`plan::plan_scan`]) picks a bit-exact strategy —
+/// `PlanePar` or, in the mid-occupancy regime, `DirFan` (the
+/// per-direction fan reassociates nothing). Only a low-occupancy
+/// forward wide enough to segment (canonical widths ≥ 256) follows the
+/// `scan_l2r_split` segmented arithmetic instead.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_merged_canonical(
     xcs: [&Tensor; 4],
@@ -1120,7 +1442,7 @@ pub fn fused_merged_canonical(
         .collect();
     assert_eq!(u.len(), out_shape[1], "gain length must be C");
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), SegmentMode::Auto)
+    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), ExecSpec::Auto)
 }
 
 #[cfg(test)]
@@ -1471,28 +1793,11 @@ mod tests {
         );
     }
 
-    /// The occupancy scheduler's decision rule.
-    #[test]
-    fn scheduler_decision_rule() {
-        // Saturated pool, narrow planes, or no pool: stay plane-parallel.
-        assert_eq!(auto_segments(8, 512, 8), None);
-        assert_eq!(auto_segments(16, 1024, 8), None);
-        assert_eq!(auto_segments(1, 255, 8), None);
-        assert_eq!(auto_segments(4, 512, 1), None);
-        assert_eq!(auto_segments(0, 512, 8), None);
-        // Low occupancy + wide planes: segment, bounded by width so no
-        // segment drops below MIN_SEG_COLS columns.
-        assert_eq!(auto_segments(1, 1024, 8), Some(8));
-        assert_eq!(auto_segments(4, 512, 8), Some(4));
-        assert_eq!(auto_segments(1, 512, 8), Some(4));
-        assert_eq!(auto_segments(2, 4096, 16), Some(16));
-    }
-
-    /// Whenever the scheduler picks plane-parallel, the pooled entry
+    /// Whenever the planner picks plane-parallel, the pooled entry
     /// points are exactly the PR 2 engine — bit-identical to the serial
-    /// reference. Any geometry narrower than 2 * MIN_SEG_COLS canonical
-    /// columns (everything the unit/e2e suites pin) can never be
-    /// segmented regardless of host pool width.
+    /// reference. Any geometry narrower than 2 * plan::MIN_SEG_COLS
+    /// canonical columns (everything the unit/e2e suites pin) can never
+    /// be segmented regardless of host pool width.
     #[test]
     fn auto_plane_regime_stays_bit_identical() {
         let pool = crate::util::ThreadPool::new(7);
@@ -1501,13 +1806,13 @@ mod tests {
         let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
         let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
         let taps = mk_taps(&mut rng, n, 1, h, w);
-        assert_eq!(auto_segments(n * c, w, pool.threads()), None);
+        assert_eq!(plan::auto_segments(n * c, w, pool.threads()), None);
         let reference = scan_l2r(&x, &taps, &lam, 0);
         let pooled = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
         assert_eq!(reference.data, pooled.data);
     }
 
-    /// When the scheduler does segment, the pooled entry point produces
+    /// When the planner does segment, the pooled entry point produces
     /// exactly the scan_l2r_split bits for the count it chose.
     #[test]
     fn auto_low_occupancy_matches_split_reference() {
@@ -1517,7 +1822,8 @@ mod tests {
         let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
         let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
         let taps = mk_taps(&mut rng, n, 1, h, w);
-        let s = auto_segments(n * c, w, pool.threads()).expect("low occupancy must segment");
+        let s = plan::auto_segments(n * c, w, pool.threads())
+            .expect("low occupancy must segment");
         assert_eq!(s, 2);
         let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
         let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
@@ -1563,5 +1869,196 @@ mod tests {
         let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
         let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
         assert!(out.data.is_empty());
+    }
+
+    // -----------------------------------------------------------------
+    // Wavefront scheduling + the direction fan
+    // -----------------------------------------------------------------
+
+    /// The tentpole pinning property for wavefront scheduling: the
+    /// dependency-graph schedule changes *when* jobs run, never what
+    /// they compute — exact `==` with the barrier engine and the
+    /// `scan_l2r_split` reference across segment counts, chunk resets,
+    /// pool widths (including the 1-thread all-helping case), and
+    /// slab-boundary widths.
+    #[test]
+    fn wavefront_exact_eq_barrier_and_split() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(60);
+        for (n, c, h, w, cw) in [
+            (1, 1, 5, 12, 1),
+            (2, 3, 8, 40, 1),
+            (1, 2, 9, 1, 1),
+            (1, 1, 4, 2 * SLAB + 3, 1),
+            (2, 2, 6, 96, 2),
+        ] {
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let taps = mk_taps(&mut rng, n, cw, h, w);
+            for segments in [1usize, 2, 3, 5, w + 9] {
+                let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
+                let barrier = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
+                let wave1 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool1);
+                let wave3 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool3);
+                assert_eq!(
+                    reference.data, barrier.data,
+                    "barrier n{n} c{c} {h}x{w} S{segments}"
+                );
+                assert_eq!(
+                    reference.data, wave1.data,
+                    "wave 1-thread n{n} c{c} {h}x{w} S{segments}"
+                );
+                assert_eq!(
+                    reference.data, wave3.data,
+                    "wave 3-thread n{n} c{c} {h}x{w} S{segments}"
+                );
+            }
+        }
+    }
+
+    /// Wavefront with chunk resets landing inside segments: the carry
+    /// dies at resets exactly like the barrier path.
+    #[test]
+    fn wavefront_chunked_matches_barrier_bits() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(61);
+        let (n, c, h, w) = (1, 2, 7, 96);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        for (kchunk, segments) in [(32usize, 5usize), (8, 4), (96, 3)] {
+            let barrier = fused_scan_l2r_seg(&x, &taps, &lam, kchunk, segments, &pool);
+            let wave = fused_scan_l2r_seg_wave(&x, &taps, &lam, kchunk, segments, &pool);
+            assert_eq!(barrier.data, wave.data, "k{kchunk} S{segments}");
+        }
+    }
+
+    /// The merged 4-direction pass under wavefront scheduling: exact
+    /// `==` with the barrier twin for every direction/orientation mix.
+    #[test]
+    fn wavefront_merged_exact_eq_barrier() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(62);
+        let (n, c, h, w) = (1, 2, 24, 40);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.4f32, -0.2, 1.1, 0.0];
+        for segments in [1usize, 4] {
+            let barrier = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
+            let wave1 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool1);
+            let wave3 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool3);
+            assert_eq!(barrier.data, wave1.data, "S{segments}");
+            assert_eq!(barrier.data, wave3.data, "S{segments}");
+        }
+    }
+
+    /// Directional scans under wavefront scheduling match the canonical
+    /// split reference exactly, per direction (orientation folding does
+    /// not interact with the schedule).
+    #[test]
+    fn wavefront_all_directions_match_canonical_split() {
+        use crate::scan::direction::{from_canonical, to_canonical};
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(63);
+        let (n, c, h, w) = (1, 2, 6, 9);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, 1, hc, wc);
+            let xc = to_canonical(&x, d);
+            let lamc = to_canonical(&lam, d);
+            for segments in [2usize, 3] {
+                let want =
+                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+                let got = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
+                assert_eq!(want.data, got.data, "{d:?} S{segments}");
+            }
+        }
+    }
+
+    /// The direction fan is bit-identical to the fused merge (and hence
+    /// the serial reference): a full-width zero-carry scan per (plane,
+    /// direction) reassociates nothing, and the drain replays the fixed
+    /// k = 0..4 merge order. Both schedules, several pool widths, tiny
+    /// and slab-crossing widths, H=1/W=1 edges.
+    #[test]
+    fn dirfan_exact_eq_fused_merge_reference() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(64);
+        for (n, c, h, w) in [(2, 3, 6, 7), (1, 1, 1, 6), (1, 2, 6, 1), (1, 2, 24, 2 * SLAB + 3)]
+        {
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let t_lr = mk_taps(&mut rng, n, 1, h, w);
+            let t_rl = mk_taps(&mut rng, n, 1, h, w);
+            let t_tb = mk_taps(&mut rng, n, 1, w, h);
+            let t_bt = mk_taps(&mut rng, n, 1, w, h);
+            let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+            let logits = [0.3f32, -0.7, 0.2, 1.0];
+            let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+            for pool in [&pool1, &pool3] {
+                for wavefront in [false, true] {
+                    let fan =
+                        fused_merged_4dir_fan(&x, taps, &lam, &logits, 0, wavefront, pool);
+                    assert_eq!(
+                        reference.data, fan.data,
+                        "n{n} c{c} {h}x{w} wf{wavefront}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// DirFan with chunk resets: the fan scans full width with resets
+    /// folded into phase 1, so chunked output equals the chunked
+    /// reference exactly too.
+    #[test]
+    fn dirfan_chunked_exact_eq_reference() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(65);
+        let (n, c, h, w) = (1, 2, 8, 8);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let taps = [&t_lr, &t_lr, &t_tb, &t_tb];
+        let logits = [0.1f32, 0.5, -0.3, 0.0];
+        for kchunk in [0usize, 4, 8] {
+            let reference = merged_4dir_ref(&x, taps, &lam, &logits, kchunk);
+            let fan = fused_merged_4dir_fan(&x, taps, &lam, &logits, kchunk, true, &pool);
+            assert_eq!(reference.data, fan.data, "k{kchunk}");
+        }
+    }
+
+    /// A planner-forced plan carried end to end through the forced hook
+    /// equals running the plan's strategy directly (the plan-carrying
+    /// path the serving/bench layers use).
+    #[test]
+    fn planned_execution_matches_direct_strategy_calls() {
+        use crate::scan::plan::{plan_scan_with, PlanOverride};
+        let pool = crate::util::ThreadPool::new(4);
+        let mut rng = Rng::new(66);
+        let (n, c, h, w) = (1, 1, 8, 256);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let geom = ScanGeometry::single_dir(n * c, h, w);
+        let p = plan_scan_with(&geom, 0, pool.threads(), PlanOverride::Auto);
+        let ScanStrategy::Segmented { s } = p.strategy else {
+            panic!("expected a segmented plan, got {:?}", p.strategy);
+        };
+        assert!(p.wavefront);
+        let via_auto = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+        let direct = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool);
+        assert_eq!(via_auto.data, direct.data);
     }
 }

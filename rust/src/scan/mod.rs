@@ -23,18 +23,22 @@
 //! submits to the shared [`crate::util::ThreadPool`] — nothing in this
 //! module spawns ad-hoc OS threads per call. Plane-level fan-out is
 //! bit-identical to the serial reference; only the segment decomposition
-//! reassociates (and is tested to 1e-4 against sequential). The fused
-//! engine's occupancy-aware scheduler ([`fused::auto_segments`]) turns
-//! the segment decomposition on automatically when there are fewer
-//! planes than pool workers and ≥ 256 canonical columns — there the
-//! output is bit-identical to [`split::scan_l2r_split`] at the chosen
-//! count instead of to `scan_l2r` ([`split`] is kept as that reference).
+//! reassociates (and is tested to 1e-4 against sequential). How a pooled
+//! pass decomposes is decided by the execution planner
+//! ([`plan::plan_scan`]): plane-parallel and the per-direction fan
+//! (`DirFan`) are bit-identical to `scan_l2r`; a low-occupancy pass with
+//! ≥ 256 canonical columns segments, and its output is bit-identical to
+//! [`split::scan_l2r_split`] at the planned count instead ([`split`] is
+//! kept as that reference). Segmented/fanned passes run wavefront by
+//! default: each plane's dependent stage is a pool continuation of its
+//! own phase-1 jobs, not a global barrier.
 
 pub mod compact;
 pub mod core;
 pub mod direction;
 pub mod fused;
 pub mod gmatrix;
+pub mod plan;
 pub mod split;
 pub mod taps;
 
@@ -48,10 +52,15 @@ pub use direction::{
     to_canonical, Direction, DIRECTIONS,
 };
 pub use fused::{
-    auto_segments, fused_merged_4dir, fused_merged_4dir_par, fused_merged_4dir_pool,
-    fused_merged_4dir_seg, fused_scan_dir, fused_scan_dir_pool, fused_scan_dir_seg,
-    fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_seg,
+    fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_par, fused_merged_4dir_pool,
+    fused_merged_4dir_seg, fused_merged_4dir_seg_wave, fused_scan_dir, fused_scan_dir_pool,
+    fused_scan_dir_seg, fused_scan_dir_seg_wave, fused_scan_l2r, fused_scan_l2r_par,
+    fused_scan_l2r_pool, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
 };
 pub use gmatrix::{attention_map, expand_g};
+pub use plan::{
+    auto_segments, eager_release_min, plan_scan, PlanOverride, ScanGeometry, ScanPlan,
+    ScanStrategy,
+};
 pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};
 pub use taps::Taps;

@@ -1,0 +1,665 @@
+//! The scan execution planner: *what* to launch, decided before anything
+//! is launched.
+//!
+//! GSPN-2's system claim is that propagation should be scheduled as one
+//! coherent launch rather than a sequence of synchronized micro-steps;
+//! FlashAttention-2 made the same point for attention by promoting work
+//! *partitioning* to its own design layer. This module is that layer for
+//! the CPU engine: every pooled scan entry point asks [`plan_scan`] for a
+//! [`ScanPlan`] — a strategy, a wavefront flag, and a cost estimate —
+//! instead of burying the decision inside the engine
+//! (`fused::auto_segments`, now absorbed here).
+//!
+//! ## Strategies
+//!
+//! * [`ScanStrategy::PlanePar`] — one job per block of (N·C) planes.
+//!   Bit-identical to the serial reference with zero decomposition
+//!   overhead; the only strategy whose arithmetic is `==` `scan_l2r`.
+//! * [`ScanStrategy::Segmented`] — the §5.1 two-phase carry-correction
+//!   decomposition: phase 1 scans `s` zero-carry column segments per
+//!   (plane, direction) in parallel, phase 2 chains the true carries as a
+//!   linear correction. Exact `==` with `scan_l2r_split` at the same
+//!   count; pays ~[`CORR_FLOPS_PER_PX`]/[`SCAN_FLOPS_PER_PX`] extra flops
+//!   over (s-1)/s of the columns.
+//! * [`ScanStrategy::DirFan`] — per-direction phase-1 fan-out for
+//!   multi-direction passes: each (plane, direction) scans its full
+//!   canonical width from the true zero carry (no correction — the scan
+//!   is already exact) into a retained panel, and a fixed-order merge
+//!   drain replays the k = 0..4 epilogue per plane. Bit-identical to
+//!   `PlanePar` (same arithmetic, different schedule), ×`ndirs` the
+//!   parallel width — the mid-occupancy fix for geometries too narrow to
+//!   segment.
+//!
+//! The `wavefront` flag asks the engine to run each plane's dependent
+//! stage (carry correction + epilogue drain) as a *continuation* of that
+//! plane's phase-1 jobs on the pool's task-graph API
+//! ([`crate::util::ThreadPool::run_graph`]) instead of behind a global
+//! barrier, so one plane's serial phase 2 hides behind other planes'
+//! phase 1 (LASP-2-style compute/dependency overlap).
+//!
+//! ## Decision rule (the planner, in order)
+//!
+//! 1. An override (`scan.plan` config / `GSPN2_SCAN_PLAN` env:
+//!    `plane|segment|dirfan`) short-circuits the auto rule — `segment`
+//!    and `dirfan` still respect validity fences (a too-narrow geometry
+//!    cannot be segmented; a single-direction pass cannot dir-fan).
+//! 2. `threads < 2`, no planes, or `nplanes >= threads`: `PlanePar`.
+//!    Planes alone occupy the pool; the bit-exact zero-overhead strategy
+//!    wins outright.
+//! 3. Multi-direction pass, `wc_min >= MIN_DIRFAN_COLS`, and the
+//!    direction fan (`nplanes * ndirs`) alone covers the workers:
+//!    `DirFan` — full occupancy without correction overhead, still
+//!    bit-exact.
+//! 4. [`auto_segments`] finds `s >= 2` (needs `wc_min >= 2 *`
+//!    [`MIN_SEG_COLS`]): `Segmented { s }` with wavefront on.
+//! 5. Multi-direction pass wide enough to dir-fan: `DirFan` (can't
+//!    segment, but ×4 width still helps).
+//! 6. Otherwise `PlanePar`.
+//!
+//! Strategy selection deliberately ignores the live pool load so
+//! identical requests produce identical bits run-to-run — `DirFan` and
+//! `Segmented` order their arithmetic differently, so letting a
+//! transient load flip between them would make serving output
+//! nondeterministic. `pool_load` feeds only the *cost estimate* (the
+//! span is computed against the capacity actually left) and the
+//! release-sizing consumers below.
+//!
+//! ## Cost model
+//!
+//! Flop units per pixel per direction: [`SCAN_FLOPS_PER_PX`] = 7 for the
+//! scan itself (`up + ct + dn + lam·x`: 5 mul + 3 add, counted as the
+//! reference's 7-op inner body), [`CORR_FLOPS_PER_PX`] = 3 for the
+//! correction (`up + ct + dn`). `work` is the total; `span` estimates
+//! the critical path given the pool width: phase 1 divides by the
+//! strategy's fan width, phase 2 by the plane count, and wavefront mode
+//! divides the phase-2 term by the plane count again (each plane's
+//! correction hides behind the other planes' phase 1; only the last
+//! plane's tail is exposed). Measured anchor: ~27% single-thread
+//! correction overhead at s = 8 on a 512² plane (ROADMAP, C-mirror),
+//! which is 3/7 · 7/8 of the scan work — the model above.
+//!
+//! Consumers beyond the engine: the serving coordinator sizes eager
+//! batch releases off the plan ([`eager_release_min`]) instead of the
+//! raw pool-saturated bool — a plan whose fan width fits the pool's idle
+//! capacity releases immediately, a wide plan on a busy pool holds out
+//! for a fused batch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Minimum canonical columns per segment. Below this the per-segment
+/// carry-correction and job dispatch dominate any occupancy gain. It is
+/// also the compatibility fence: every geometry the unit/e2e suites pin
+/// bit-identical is narrower than `2 * MIN_SEG_COLS`, so the planner can
+/// never move them off the bit-exact plane-parallel path regardless of
+/// how wide the host pool is.
+pub const MIN_SEG_COLS: usize = 128;
+
+/// Minimum canonical columns for the direction fan-out: below this a
+/// per-(plane, direction) job is too small to amortize the retained
+/// panel and the drain continuation. Small enough that the mid-occupancy
+/// band (64 ≤ wc < 256, where segmentation is fenced off) is covered.
+pub const MIN_DIRFAN_COLS: usize = 64;
+
+/// Scan-recurrence flops per pixel per direction (the `up + ct + dn +
+/// lam·x` inner body).
+pub const SCAN_FLOPS_PER_PX: f64 = 7.0;
+
+/// Carry-correction flops per pixel (the `up + ct + dn` body of the
+/// linear correction scan).
+pub const CORR_FLOPS_PER_PX: f64 = 3.0;
+
+/// How a scan pass decomposes its work across the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanStrategy {
+    /// Block-granular plane jobs; bit-identical to the serial reference.
+    PlanePar,
+    /// Two-phase segmented decomposition with `s` column segments per
+    /// (plane, direction); exact `==` `scan_l2r_split` at count `s`.
+    Segmented {
+        /// Column segments per plane per direction.
+        s: usize,
+    },
+    /// Per-(plane, direction) phase-1 fan with a fixed-order merge
+    /// drain; bit-identical to `PlanePar`.
+    DirFan,
+}
+
+/// The planner's cost estimate for one pass under one strategy, in the
+/// flop units of the module docs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCost {
+    /// Total work (all phases, all planes/directions).
+    pub work_flops: f64,
+    /// Estimated critical path given the pool width the plan was made
+    /// for — the number the coordinator compares across release options.
+    pub span_flops: f64,
+    /// Phase-1 parallel fan width (independent jobs the plan launches).
+    pub width: usize,
+}
+
+/// One scan pass's geometry, as the planner sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanGeometry {
+    /// N·C planes in the pass.
+    pub nplanes: usize,
+    /// Directions scanned and merged in the pass (1 or 4).
+    pub ndirs: usize,
+    /// Smallest canonical width among the pass's directions.
+    pub wc_min: usize,
+    /// Pixels per plane per direction (H·W).
+    pub plane_px: usize,
+}
+
+impl ScanGeometry {
+    /// Geometry of a single-direction scan over (N·C) = `nplanes`
+    /// planes of `h x w` pixels — the serving backend's request shape.
+    pub fn single_dir(nplanes: usize, h: usize, w: usize) -> ScanGeometry {
+        ScanGeometry { nplanes, ndirs: 1, wc_min: w, plane_px: h * w }
+    }
+
+    /// Geometry of a 4-direction merged pass (canonical widths `w` and
+    /// `h` across the direction pairs).
+    pub fn merged_4dir(nplanes: usize, h: usize, w: usize) -> ScanGeometry {
+        ScanGeometry { nplanes, ndirs: 4, wc_min: w.min(h), plane_px: h * w }
+    }
+}
+
+/// An execution plan: the strategy, whether dependent stages run as
+/// wavefront continuations, and the cost estimate that justified it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScanPlan {
+    pub strategy: ScanStrategy,
+    /// Run each plane's dependent stage as a continuation of that
+    /// plane's phase-1 jobs (task-graph scheduling) instead of behind a
+    /// global barrier. Meaningful for `Segmented` and `DirFan`.
+    pub wavefront: bool,
+    pub cost: PlanCost,
+}
+
+impl ScanPlan {
+    /// Forced plan constructors for tests, benches, and callers that
+    /// know their geometry. Costs are estimated for `threads` workers.
+    pub fn plane(geom: &ScanGeometry, threads: usize) -> ScanPlan {
+        ScanPlan::with(ScanStrategy::PlanePar, false, geom, threads)
+    }
+
+    pub fn segmented(s: usize, wavefront: bool, geom: &ScanGeometry, threads: usize) -> ScanPlan {
+        ScanPlan::with(ScanStrategy::Segmented { s: s.max(1) }, wavefront, geom, threads)
+    }
+
+    pub fn dir_fan(wavefront: bool, geom: &ScanGeometry, threads: usize) -> ScanPlan {
+        ScanPlan::with(ScanStrategy::DirFan, wavefront, geom, threads)
+    }
+
+    fn with(strategy: ScanStrategy, wavefront: bool, geom: &ScanGeometry, threads: usize) -> ScanPlan {
+        ScanPlan { strategy, wavefront, cost: plan_cost(geom, strategy, wavefront, threads) }
+    }
+}
+
+/// The cost model of the module docs, for one strategy on `threads`
+/// workers.
+pub fn plan_cost(
+    geom: &ScanGeometry,
+    strategy: ScanStrategy,
+    wavefront: bool,
+    threads: usize,
+) -> PlanCost {
+    let threads = threads.max(1) as f64;
+    let planes = geom.nplanes.max(1);
+    let px = (geom.nplanes * geom.ndirs * geom.plane_px) as f64;
+    let base = px * SCAN_FLOPS_PER_PX;
+    match strategy {
+        ScanStrategy::PlanePar => {
+            let width = planes;
+            PlanCost {
+                work_flops: base,
+                span_flops: base / threads.min(width as f64),
+                width,
+            }
+        }
+        ScanStrategy::DirFan => {
+            let width = planes * geom.ndirs.max(1);
+            PlanCost {
+                work_flops: base,
+                span_flops: base / threads.min(width as f64),
+                width,
+            }
+        }
+        ScanStrategy::Segmented { s } => {
+            let s = s.max(1);
+            let width = planes * geom.ndirs.max(1) * s;
+            let corr = px * CORR_FLOPS_PER_PX * (s as f64 - 1.0) / s as f64;
+            let p1 = base / threads.min(width as f64);
+            let p2 = corr / threads.min(planes as f64);
+            let span = if wavefront { p1 + p2 / planes as f64 } else { p1 + p2 };
+            PlanCost { work_flops: base + corr, span_flops: span, width }
+        }
+    }
+}
+
+/// The occupancy-aware segment-count rule (moved verbatim from
+/// `fused::auto_segments`, which the planner subsumes): how many column
+/// segments (if any) each plane should be decomposed into, given the
+/// plane count, the smallest canonical width among the directions in the
+/// pass, and the pool width.
+///
+/// Plane-parallel work is bit-identical to the serial reference and has
+/// zero decomposition overhead, so it wins whenever the planes alone can
+/// occupy the pool (`nplanes >= threads`). Below that — the paper's
+/// §5.1 low-occupancy regime — segmenting buys parallel phase-1 scans at
+/// the cost of a serial-per-plane correction pass, so it only pays when
+/// phase 1 actually fans wider than the planes did. The segment count
+/// targets ~2 phase-1 jobs per worker and never drops a segment below
+/// [`MIN_SEG_COLS`] columns. Returns `None` for "stay plane-parallel".
+pub fn auto_segments(nplanes: usize, wc_min: usize, threads: usize) -> Option<usize> {
+    if threads < 2 || nplanes == 0 || nplanes >= threads {
+        return None;
+    }
+    forced_segments(nplanes, wc_min, threads)
+}
+
+/// [`auto_segments`] without the occupancy bailout — the count the
+/// `segment` override uses. Same formula, so wherever the auto rule
+/// would segment, the forced rule picks the identical count.
+fn forced_segments(nplanes: usize, wc_min: usize, threads: usize) -> Option<usize> {
+    if threads < 2 || nplanes == 0 {
+        return None;
+    }
+    let max_by_width = wc_min / MIN_SEG_COLS;
+    let want = (2 * threads).div_ceil(nplanes);
+    let s = want.min(max_by_width);
+    (s >= 2).then_some(s)
+}
+
+// ---------------------------------------------------------------------
+// Override plumbing: config knob / env var
+// ---------------------------------------------------------------------
+
+/// Planner override selected by config (`scan.plan`) or the
+/// `GSPN2_SCAN_PLAN` env var.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanOverride {
+    /// No override: the full auto decision rule.
+    Auto,
+    /// Always `PlanePar`.
+    Plane,
+    /// `Segmented` wherever a valid count exists (width fence still
+    /// applies), ignoring pool occupancy; else `PlanePar`.
+    Segment,
+    /// `DirFan` for every multi-direction pass (bit-identical, so safe
+    /// at any width); single-direction passes keep the auto rule.
+    DirFan,
+}
+
+const OV_UNSET: u8 = u8::MAX;
+static PLAN_OVERRIDE: AtomicU8 = AtomicU8::new(OV_UNSET);
+
+fn parse_override(name: &str) -> Option<PlanOverride> {
+    match name {
+        "auto" => Some(PlanOverride::Auto),
+        "plane" => Some(PlanOverride::Plane),
+        "segment" => Some(PlanOverride::Segment),
+        "dirfan" => Some(PlanOverride::DirFan),
+        _ => None,
+    }
+}
+
+/// Set the process-wide planner override (the `scan.plan` config knob).
+/// Accepts `auto | plane | segment | dirfan`.
+pub fn set_plan_override(name: &str) -> Result<(), String> {
+    let ov = parse_override(name)
+        .ok_or_else(|| format!("unknown scan.plan {name:?} (want auto|plane|segment|dirfan)"))?;
+    PLAN_OVERRIDE.store(ov as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The active planner override: the config knob if set, else
+/// `GSPN2_SCAN_PLAN` (read once), else `Auto`. An *invalid* env value
+/// panics rather than silently planning `Auto` — the env hook exists so
+/// CI re-runs the suite under forced strategies, and a typo that
+/// quietly tested the default instead would be a green lie.
+pub fn plan_override() -> PlanOverride {
+    let v = PLAN_OVERRIDE.load(Ordering::Relaxed);
+    if v != OV_UNSET {
+        return from_u8(v);
+    }
+    let ov = match std::env::var("GSPN2_SCAN_PLAN") {
+        Ok(s) => parse_override(&s).unwrap_or_else(|| {
+            panic!("GSPN2_SCAN_PLAN={s:?} is not one of auto|plane|segment|dirfan")
+        }),
+        Err(_) => PlanOverride::Auto,
+    };
+    PLAN_OVERRIDE.store(ov as u8, Ordering::Relaxed);
+    ov
+}
+
+fn from_u8(v: u8) -> PlanOverride {
+    match v {
+        1 => PlanOverride::Plane,
+        2 => PlanOverride::Segment,
+        3 => PlanOverride::DirFan,
+        _ => PlanOverride::Auto,
+    }
+}
+
+// Discriminant values used by the atomic above.
+// (PlanOverride as u8: Auto=0, Plane=1, Segment=2, DirFan=3.)
+
+// ---------------------------------------------------------------------
+// The planner
+// ---------------------------------------------------------------------
+
+/// Plan one scan pass: the module-doc decision rule, honoring the
+/// process-wide override. `pool_load` is the pool's current queued +
+/// running job count ([`crate::util::ThreadPool::load`]); it feeds only
+/// the cost estimate — strategy selection is load-independent so
+/// identical requests produce identical bits.
+pub fn plan_scan(geom: &ScanGeometry, pool_load: usize, threads: usize) -> ScanPlan {
+    plan_scan_with(geom, pool_load, threads, plan_override())
+}
+
+/// [`plan_scan`] with an explicit override (the pure, testable core).
+/// The strategy + wavefront decision never reads `pool_load` (bit
+/// determinism — see the module docs); the returned cost estimate is
+/// computed against the capacity the pool actually has left.
+pub fn plan_scan_with(
+    geom: &ScanGeometry,
+    pool_load: usize,
+    threads: usize,
+    ov: PlanOverride,
+) -> ScanPlan {
+    let (strategy, wavefront) = decide(geom, threads, ov);
+    let avail = threads.saturating_sub(pool_load).max(1);
+    ScanPlan { strategy, wavefront, cost: plan_cost(geom, strategy, wavefront, avail) }
+}
+
+/// The load-independent strategy decision of the module docs.
+fn decide(geom: &ScanGeometry, threads: usize, ov: PlanOverride) -> (ScanStrategy, bool) {
+    let can_fan = geom.ndirs > 1;
+    match ov {
+        PlanOverride::Plane => return (ScanStrategy::PlanePar, false),
+        PlanOverride::Segment => {
+            return match forced_segments(geom.nplanes, geom.wc_min, threads) {
+                Some(s) => (ScanStrategy::Segmented { s }, true),
+                None => (ScanStrategy::PlanePar, false),
+            };
+        }
+        PlanOverride::DirFan if can_fan => {
+            return (ScanStrategy::DirFan, true);
+        }
+        PlanOverride::DirFan | PlanOverride::Auto => {}
+    }
+    // Auto rule (also the single-direction fallback of the dirfan
+    // override).
+    if threads < 2 || geom.nplanes == 0 || geom.nplanes >= threads {
+        return (ScanStrategy::PlanePar, false);
+    }
+    if can_fan && geom.wc_min >= MIN_DIRFAN_COLS {
+        let fan_width = geom.nplanes * geom.ndirs;
+        if fan_width >= threads {
+            // The direction fan alone covers the workers: full
+            // occupancy, zero overhead, exact bits.
+            return (ScanStrategy::DirFan, true);
+        }
+        if let Some(s) = auto_segments(geom.nplanes, geom.wc_min, threads) {
+            return (ScanStrategy::Segmented { s }, true);
+        }
+        return (ScanStrategy::DirFan, true);
+    }
+    match auto_segments(geom.nplanes, geom.wc_min, threads) {
+        Some(s) => (ScanStrategy::Segmented { s }, true),
+        None => (ScanStrategy::PlanePar, false),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator consumption: release sizing off the cost estimate
+// ---------------------------------------------------------------------
+
+/// How many queued requests an eager (idle-worker) release should hold
+/// out for, given one request's plan and the pool's occupancy. Replaces
+/// the raw pool-`saturated()` bool with a graded rule off the plan's
+/// cost estimate:
+///
+/// * idle pool (`load == 0`): release immediately — more requests add
+///   no capacity, so holding only costs latency;
+/// * no idle capacity: hold for a full fused `max_batch` (the old
+///   saturated behavior — the release would only queue);
+/// * partially busy: hold back in proportion to how badly the plan's
+///   phase-1 fan (`cost.width`) overflows the capacity left — a narrow
+///   plan slots into the gaps and releases eagerly, a wide one waits
+///   for the batch to be worth the contention.
+///
+/// Aged heads are unaffected (callers release them through the age path
+/// first, bounding any hold by `max_wait`).
+pub fn eager_release_min(
+    plan: &ScanPlan,
+    pool_load: usize,
+    threads: usize,
+    max_batch: usize,
+) -> usize {
+    let max_batch = max_batch.max(1);
+    if threads == 0 || pool_load == 0 {
+        return 1;
+    }
+    let idle = threads.saturating_sub(pool_load);
+    if idle == 0 {
+        return max_batch;
+    }
+    plan.cost.width.max(1).div_ceil(idle).clamp(1, max_batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strat(geom: &ScanGeometry, load: usize, threads: usize) -> ScanStrategy {
+        plan_scan_with(geom, load, threads, PlanOverride::Auto).strategy
+    }
+
+    /// The occupancy scheduler's decision rule (moved with the function
+    /// from fused.rs — same pins).
+    #[test]
+    fn auto_segments_decision_rule() {
+        // Saturated pool, narrow planes, or no pool: stay plane-parallel.
+        assert_eq!(auto_segments(8, 512, 8), None);
+        assert_eq!(auto_segments(16, 1024, 8), None);
+        assert_eq!(auto_segments(1, 255, 8), None);
+        assert_eq!(auto_segments(4, 512, 1), None);
+        assert_eq!(auto_segments(0, 512, 8), None);
+        // Low occupancy + wide planes: segment, bounded by width so no
+        // segment drops below MIN_SEG_COLS columns.
+        assert_eq!(auto_segments(1, 1024, 8), Some(8));
+        assert_eq!(auto_segments(4, 512, 8), Some(4));
+        assert_eq!(auto_segments(1, 512, 8), Some(4));
+        assert_eq!(auto_segments(2, 4096, 16), Some(16));
+    }
+
+    /// The planner decision table: geometry × threads × load → strategy.
+    #[test]
+    fn planner_decision_table() {
+        // Enough planes (or no pool): plane-parallel, regardless of size.
+        assert_eq!(strat(&ScanGeometry::single_dir(8, 512, 512), 0, 8), ScanStrategy::PlanePar);
+        assert_eq!(strat(&ScanGeometry::single_dir(4, 512, 512), 0, 1), ScanStrategy::PlanePar);
+        assert_eq!(strat(&ScanGeometry::merged_4dir(16, 384, 384), 0, 8), ScanStrategy::PlanePar);
+        assert_eq!(strat(&ScanGeometry::single_dir(0, 64, 64), 0, 8), ScanStrategy::PlanePar);
+        // Low-occupancy single-direction wide: segment at auto_segments'
+        // count.
+        assert_eq!(
+            strat(&ScanGeometry::single_dir(1, 8, 512), 0, 8),
+            ScanStrategy::Segmented { s: 4 }
+        );
+        assert_eq!(
+            strat(&ScanGeometry::single_dir(4, 512, 512), 0, 8),
+            ScanStrategy::Segmented { s: 4 }
+        );
+        // Mid-occupancy multi-direction: the fan covers the pool with
+        // bit-exact jobs — DirFan, even where segmentation was possible.
+        assert_eq!(strat(&ScanGeometry::merged_4dir(2, 384, 384), 0, 8), ScanStrategy::DirFan);
+        assert_eq!(strat(&ScanGeometry::merged_4dir(3, 64, 64), 0, 8), ScanStrategy::DirFan);
+        // Fan too narrow for the pool on its own: segmentation wins when
+        // valid.
+        assert_eq!(
+            strat(&ScanGeometry::merged_4dir(1, 512, 512), 0, 16),
+            ScanStrategy::Segmented { s: 4 }
+        );
+        // Too narrow to segment, multi-direction: fan anyway.
+        assert_eq!(strat(&ScanGeometry::merged_4dir(1, 128, 128), 0, 8), ScanStrategy::DirFan);
+        // Too narrow for either: plane.
+        assert_eq!(strat(&ScanGeometry::merged_4dir(2, 32, 32), 0, 8), ScanStrategy::PlanePar);
+        assert_eq!(strat(&ScanGeometry::single_dir(2, 64, 64), 0, 8), ScanStrategy::PlanePar);
+    }
+
+    /// Bit-determinism invariant: the strategy (and wavefront flag)
+    /// never depends on the live pool load — only the cost estimate
+    /// does, shrinking as capacity disappears.
+    #[test]
+    fn load_changes_cost_but_never_strategy() {
+        let geoms = [
+            ScanGeometry::single_dir(1, 8, 512),
+            ScanGeometry::single_dir(4, 512, 512),
+            ScanGeometry::merged_4dir(1, 512, 512),
+            ScanGeometry::merged_4dir(2, 384, 384),
+            ScanGeometry::single_dir(8, 64, 64),
+        ];
+        for geom in geoms {
+            for threads in [2usize, 8, 16] {
+                let base = plan_scan_with(&geom, 0, threads, PlanOverride::Auto);
+                for load in [1usize, 3, 7, 100] {
+                    let loaded = plan_scan_with(&geom, load, threads, PlanOverride::Auto);
+                    assert_eq!(base.strategy, loaded.strategy, "{geom:?} t{threads} l{load}");
+                    assert_eq!(base.wavefront, loaded.wavefront, "{geom:?} t{threads} l{load}");
+                    assert!(
+                        loaded.cost.span_flops >= base.cost.span_flops,
+                        "span must not shrink under load: {geom:?} t{threads} l{load}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Every geometry the unit/e2e suites pin bit-identical must plan
+    /// onto PlanePar on any realistic host width — the compatibility
+    /// fence that keeps exact-equality tests meaningful everywhere.
+    #[test]
+    fn e2e_pinned_geometries_stay_plane_parallel() {
+        let pinned = [
+            ScanGeometry::single_dir(8, 64, 64),   // serving bucket c8 64x64
+            ScanGeometry::single_dir(2, 8, 8),     // e2e small submits
+            ScanGeometry::single_dir(6, 8, 12),    // unit-test shapes
+            ScanGeometry::merged_4dir(6, 6, 7),    // pooled merged test
+            ScanGeometry::merged_4dir(6, 5, 6),    // canonical unit test
+            ScanGeometry::merged_4dir(4, 8, 8),    // compact unit forward
+        ];
+        for geom in pinned {
+            for threads in [1usize, 2, 4, 8, 16, 64, 256] {
+                for load in [0usize, 3, 1000] {
+                    assert_eq!(
+                        strat(&geom, load, threads),
+                        ScanStrategy::PlanePar,
+                        "{geom:?} t{threads} l{load}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overrides_respect_validity_fences() {
+        let wide1 = ScanGeometry::single_dir(1, 8, 512);
+        let narrow1 = ScanGeometry::single_dir(1, 8, 64);
+        let merged = ScanGeometry::merged_4dir(2, 16, 96);
+        // plane: always plane.
+        assert_eq!(
+            plan_scan_with(&wide1, 0, 8, PlanOverride::Plane).strategy,
+            ScanStrategy::PlanePar
+        );
+        // segment: forced wherever a count exists (same count as auto in
+        // the low-occupancy regime), fenced off below the width floor.
+        assert_eq!(
+            plan_scan_with(&wide1, 0, 8, PlanOverride::Segment).strategy,
+            ScanStrategy::Segmented { s: 4 }
+        );
+        assert_eq!(
+            plan_scan_with(&ScanGeometry::single_dir(8, 8, 512), 0, 8, PlanOverride::Segment)
+                .strategy,
+            ScanStrategy::Segmented { s: 2 }
+        );
+        assert_eq!(
+            plan_scan_with(&narrow1, 0, 8, PlanOverride::Segment).strategy,
+            ScanStrategy::PlanePar
+        );
+        // dirfan: any multi-direction pass (bit-identical at any width);
+        // single-direction passes keep the auto rule.
+        assert_eq!(
+            plan_scan_with(&merged, 0, 8, PlanOverride::DirFan).strategy,
+            ScanStrategy::DirFan
+        );
+        assert_eq!(
+            plan_scan_with(&ScanGeometry::merged_4dir(9, 4, 4), 0, 2, PlanOverride::DirFan)
+                .strategy,
+            ScanStrategy::DirFan
+        );
+        assert_eq!(
+            plan_scan_with(&wide1, 0, 8, PlanOverride::DirFan).strategy,
+            ScanStrategy::Segmented { s: 4 }
+        );
+    }
+
+    #[test]
+    fn cost_model_shapes() {
+        let geom = ScanGeometry::single_dir(1, 512, 512);
+        let plane = ScanPlan::plane(&geom, 8);
+        let seg = ScanPlan::segmented(4, false, &geom, 8);
+        let wave = ScanPlan::segmented(4, true, &geom, 8);
+        // Segmenting adds correction work but shortens the span for a
+        // single plane on a wide pool.
+        assert!(seg.cost.work_flops > plane.cost.work_flops);
+        assert!(seg.cost.span_flops < plane.cost.span_flops);
+        // Wavefront never lengthens the estimated span.
+        assert!(wave.cost.span_flops <= seg.cost.span_flops);
+        // A single plane has nothing to hide its correction behind; with
+        // more planes the wavefront discount kicks in.
+        let geom4 = ScanGeometry::single_dir(4, 512, 512);
+        let seg4 = ScanPlan::segmented(4, false, &geom4, 8);
+        let wave4 = ScanPlan::segmented(4, true, &geom4, 8);
+        assert!(wave4.cost.span_flops < seg4.cost.span_flops);
+        // Fan width bookkeeping.
+        let m = ScanGeometry::merged_4dir(2, 384, 384);
+        assert_eq!(ScanPlan::dir_fan(true, &m, 8).cost.width, 8);
+        assert_eq!(ScanPlan::segmented(3, true, &m, 8).cost.width, 24);
+        assert_eq!(ScanPlan::plane(&m, 8).cost.width, 2);
+    }
+
+    #[test]
+    fn eager_release_sizing_from_plan_cost() {
+        let geom = ScanGeometry::single_dir(8, 64, 64); // width 8 plan
+        let plan = ScanPlan::plane(&geom, 8);
+        // Idle pool swallows the fan: release immediately.
+        assert_eq!(eager_release_min(&plan, 0, 8, 4), 1);
+        // No idle capacity: hold for a full fused batch (the old
+        // saturated() behavior).
+        assert_eq!(eager_release_min(&plan, 8, 8, 4), 4);
+        assert_eq!(eager_release_min(&plan, 100, 8, 4), 4);
+        // Partial capacity: hold back proportionally to how badly the
+        // plan overflows it.
+        assert_eq!(eager_release_min(&plan, 6, 8, 4), 4); // 8 wide / 2 idle
+        assert_eq!(eager_release_min(&plan, 4, 8, 4), 2); // 8 wide / 4 idle
+        // Narrow plan on a mostly-idle pool: still eager.
+        let narrow = ScanPlan::plane(&ScanGeometry::single_dir(1, 64, 64), 8);
+        assert_eq!(eager_release_min(&narrow, 4, 8, 4), 1);
+        // Degenerate pools never wedge.
+        assert_eq!(eager_release_min(&plan, 0, 0, 4), 1);
+        assert_eq!(eager_release_min(&plan, 0, 8, 0), 1);
+    }
+
+    #[test]
+    fn override_parsing() {
+        assert_eq!(parse_override("auto"), Some(PlanOverride::Auto));
+        assert_eq!(parse_override("plane"), Some(PlanOverride::Plane));
+        assert_eq!(parse_override("segment"), Some(PlanOverride::Segment));
+        assert_eq!(parse_override("dirfan"), Some(PlanOverride::DirFan));
+        assert_eq!(parse_override("tpu"), None);
+        assert!(set_plan_override("bogus").is_err());
+    }
+}

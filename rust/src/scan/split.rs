@@ -31,10 +31,11 @@
 //! the **bit-identity reference** for the segmented arithmetic order.
 //! Production callers — the pooled `fused_*` entry points, the compact
 //! unit, the cpu serving backend — route through
-//! [`super::fused`], whose occupancy-aware scheduler
-//! ([`super::fused::auto_segments`]) applies exactly this two-phase
+//! [`super::fused`], whose execution planner
+//! ([`super::plan::plan_scan`]) applies exactly this two-phase
 //! decomposition (pinned `==` against [`scan_l2r_split`] by the fused
-//! engine's tests) with the pack/scan/scatter stages fused. The
+//! engine's tests, barrier and wavefront schedules alike) with the
+//! pack/scan/scatter stages fused. The
 //! implementation here stays deliberately unfused and simple;
 //! `threads > 1` still submits its (segment × plane) and (plane) task
 //! groups to the process-wide shared [`ThreadPool`] rather than

@@ -15,4 +15,4 @@ pub mod toml;
 
 pub use json::Json;
 pub use rng::Rng;
-pub use threadpool::{MapError, ThreadPool};
+pub use threadpool::{GraphBuilder, MapError, NodeId, ThreadPool};

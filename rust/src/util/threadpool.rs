@@ -40,6 +40,17 @@
 //!   returns it as a [`MapError`]; `map` rethrows the payload in the
 //!   calling thread via `resume_unwind`. `execute` jobs keep the old
 //!   log-and-continue behaviour.
+//! * **Dependency-aware submission.** [`ThreadPool::run_graph`] executes
+//!   a small task graph built with [`GraphBuilder::submit`] /
+//!   [`GraphBuilder::submit_after`]: continuations run the moment their
+//!   prerequisite jobs complete, with no global barrier in between —
+//!   what the fused scan engine uses to hide one plane's carry
+//!   correction behind other planes' phase-1 scans (wavefront
+//!   scheduling). The graph reuses the per-call machinery above: a
+//!   per-call ready list, stale-ticket no-ops, and the same helping
+//!   wait (the caller drives its own ready nodes, so graphs complete
+//!   even on a fully busy pool and nested submission stays
+//!   deadlock-free).
 //!
 //! Sharing model: [`ThreadPool::global`] lazily builds one host-sized
 //! pool for the lifetime of the process; `ThreadPool::new` remains for
@@ -62,12 +73,14 @@ struct CallJobs {
     jobs: Mutex<VecDeque<Job>>,
 }
 
-/// One entry of the global queue: a fire-and-forget job, or a ticket
-/// for one job of a `map` call (the ticket is a no-op if the caller
-/// already helped that job to completion).
+/// One entry of the global queue: a fire-and-forget job, a ticket for
+/// one job of a `map` call, or a ticket for one ready node of a
+/// `run_graph` call (either ticket is a no-op if the caller already
+/// helped that job to completion).
 enum Work {
     Exec(Job),
     Call(Arc<CallJobs>),
+    Graph(Arc<GraphCall>),
 }
 
 struct Shared {
@@ -113,6 +126,92 @@ impl Latch {
         if st.remaining == 0 {
             self.open.notify_all();
         }
+    }
+}
+
+/// The shared state of one `run_graph` call: the dependency-aware twin
+/// of [`CallJobs`]. All bookkeeping (pending jobs, per-node dependency
+/// counts, the ready list, and the completion count) lives under one
+/// mutex so enabling a node and waiting for progress can never miss
+/// each other; `progress` is notified whenever nodes become ready or
+/// the graph completes, which is what lets the submitting caller help
+/// newly-enabled continuations instead of sleeping through them.
+struct GraphCall {
+    state: Mutex<GraphState>,
+    progress: Condvar,
+}
+
+struct GraphState {
+    /// Node jobs, taken (`None`) once claimed by a runner.
+    jobs: Vec<Option<Job>>,
+    /// Unfinished-prerequisite count per node.
+    waiting: Vec<usize>,
+    /// Nodes unblocked by each node's completion.
+    dependents: Vec<Vec<usize>>,
+    /// Nodes whose prerequisites have all completed, not yet claimed.
+    ready: VecDeque<usize>,
+    /// Nodes not yet completed (runnable, running, or still blocked).
+    remaining: usize,
+    panicked: usize,
+    payload: Option<Box<dyn Any + Send + 'static>>,
+}
+
+/// Handle to a node added to a [`GraphBuilder`]; pass it to
+/// [`GraphBuilder::submit_after`] to order later nodes after it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+struct GraphNodeSpec<'env> {
+    job: Box<dyn FnOnce() + Send + 'env>,
+    deps: Vec<usize>,
+}
+
+/// Builder for a small dependency graph of jobs, executed by
+/// [`ThreadPool::run_graph`]. Nodes may only depend on previously added
+/// nodes, so the graph is acyclic by construction. Jobs may borrow from
+/// the caller's frame (no `'static` bound), exactly like
+/// [`ThreadPool::map`] jobs.
+pub struct GraphBuilder<'env> {
+    nodes: Vec<GraphNodeSpec<'env>>,
+}
+
+impl<'env> GraphBuilder<'env> {
+    pub fn new() -> GraphBuilder<'env> {
+        GraphBuilder { nodes: Vec::new() }
+    }
+
+    /// Add a root node (no prerequisites); runnable immediately.
+    pub fn submit<F: FnOnce() + Send + 'env>(&mut self, job: F) -> NodeId {
+        self.submit_after(&[], job)
+    }
+
+    /// Add a continuation: `job` runs only after every node in `deps`
+    /// has completed. Dependencies must be nodes already added to this
+    /// builder (the DAG invariant, checked).
+    pub fn submit_after<F: FnOnce() + Send + 'env>(&mut self, deps: &[NodeId], job: F) -> NodeId {
+        let id = self.nodes.len();
+        for d in deps {
+            assert!(d.0 < id, "graph dependency on a node not yet submitted");
+        }
+        self.nodes.push(GraphNodeSpec {
+            job: Box::new(job),
+            deps: deps.iter().map(|d| d.0).collect(),
+        });
+        NodeId(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+impl<'env> Default for GraphBuilder<'env> {
+    fn default() -> Self {
+        GraphBuilder::new()
     }
 }
 
@@ -213,7 +312,11 @@ impl ThreadPool {
     }
 
     /// Whether the pool already holds at least as much queued/running
-    /// work as it has workers (no idle capacity right now).
+    /// work as it has workers (no idle capacity right now). A coarse
+    /// introspection helper: the serving batcher no longer consumes
+    /// this bool — release sizing goes through the scan planner's
+    /// graded `eager_release_min`, which reads [`ThreadPool::load`]
+    /// directly.
     pub fn saturated(&self) -> bool {
         self.load() >= self.threads()
     }
@@ -353,6 +456,171 @@ impl ThreadPool {
             })
             .collect())
     }
+
+    /// Execute a dependency graph of jobs: every node runs exactly once,
+    /// a node only after all its prerequisites, independent nodes in
+    /// parallel. Blocks until the whole graph has completed (so, like
+    /// [`ThreadPool::map`], node jobs may borrow from the caller's
+    /// frame). Dependency-aware submission is what lets a dependent
+    /// stage start the moment *its* prerequisites finish instead of
+    /// behind a global barrier — wavefront scheduling.
+    ///
+    /// Execution reuses the `map` machinery: the graph keeps a per-call
+    /// ready list, the global queue holds one ticket per ready node
+    /// (stale tickets are no-ops), and the submitting caller
+    /// work-helps — it drains ready nodes itself, waking whenever a
+    /// completion enables new ones, so a graph completes even when every
+    /// worker is busy elsewhere (nested submission stays deadlock-free:
+    /// a node may itself call `map`/`run_graph` on the same pool).
+    ///
+    /// If any node panics the first payload is returned as a
+    /// [`MapError`]; the remaining nodes (including dependents of the
+    /// panicking node) still run to completion first, mirroring
+    /// `try_map`.
+    pub fn run_graph(&self, builder: GraphBuilder<'_>) -> Result<(), MapError> {
+        let n = builder.nodes.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let mut jobs: Vec<Option<Job>> = Vec::with_capacity(n);
+        let mut waiting = Vec::with_capacity(n);
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut ready = VecDeque::new();
+        for (i, node) in builder.nodes.into_iter().enumerate() {
+            // SAFETY: the wait loop below keeps this frame (and every
+            // borrow inside the job) alive until every node has run;
+            // nothing drops a node unrun — ready nodes are drained by
+            // exactly this call's helper and by ticket-holding workers
+            // while `&self` borrows the pool, and any ticket outliving
+            // this call finds the ready list empty.
+            jobs.push(Some(unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(node.job)
+            }));
+            let ndeps = node.deps.len();
+            for dep in node.deps {
+                dependents[dep].push(i);
+            }
+            waiting.push(ndeps);
+            if ndeps == 0 {
+                ready.push_back(i);
+            }
+        }
+        let n_ready = ready.len();
+        let call = Arc::new(GraphCall {
+            state: Mutex::new(GraphState {
+                jobs,
+                waiting,
+                dependents,
+                ready,
+                remaining: n,
+                panicked: 0,
+                payload: None,
+            }),
+            progress: Condvar::new(),
+        });
+        self.shared.in_flight.fetch_add(n, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.extend((0..n_ready).map(|_| Work::Graph(Arc::clone(&call))));
+        }
+        self.shared.available.notify_all();
+
+        // Work-helping wait: claim ready nodes of THIS graph and run
+        // them on the calling thread; when none are ready, sleep on the
+        // graph's progress condvar, which completions ping both when
+        // they enable new nodes and when the last node finishes. The
+        // ready check and the wait share one mutex, so a wakeup can
+        // never slip between them.
+        loop {
+            if !run_graph_node(&self.shared, &call) {
+                let mut st = call.state.lock().unwrap();
+                while st.remaining > 0 && st.ready.is_empty() {
+                    st = call.progress.wait(st).unwrap();
+                }
+                if st.remaining == 0 {
+                    break;
+                }
+                // New ready nodes appeared: loop back and help.
+            } else {
+                let st = call.state.lock().unwrap();
+                if st.remaining == 0 {
+                    break;
+                }
+            }
+        }
+
+        let mut st = call.state.lock().unwrap();
+        if st.panicked > 0 {
+            return Err(MapError {
+                panicked: st.panicked,
+                payload: st
+                    .payload
+                    .take()
+                    .expect("panicked > 0 implies a stored payload"),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Claim and run one ready node of `call` (used by both workers holding
+/// tickets and the submitting caller's helping wait). Returns false if
+/// no node was ready to claim. Completion bookkeeping — enabling
+/// dependents, pushing tickets for them, waking the helping caller —
+/// happens here, under the graph mutex.
+fn run_graph_node(sh: &Shared, call: &Arc<GraphCall>) -> bool {
+    let claimed = {
+        let mut st = call.state.lock().unwrap();
+        match st.ready.pop_front() {
+            Some(i) => st.jobs[i].take().map(|job| (i, job)),
+            None => None,
+        }
+    };
+    let Some((i, job)) = claimed else {
+        return false;
+    };
+    let payload = catch_unwind(AssertUnwindSafe(job)).err();
+    // Completion: enable dependents under the graph mutex, then mirror
+    // run_one's pool-global in-flight bookkeeping.
+    let newly_ready = {
+        let mut st = call.state.lock().unwrap();
+        st.remaining -= 1;
+        if let Some(p) = payload {
+            st.panicked += 1;
+            if st.payload.is_none() {
+                st.payload = Some(p);
+            }
+        }
+        let mut enabled = 0usize;
+        let deps: Vec<usize> = st.dependents[i].drain(..).collect();
+        for d in deps {
+            st.waiting[d] -= 1;
+            if st.waiting[d] == 0 {
+                st.ready.push_back(d);
+                enabled += 1;
+            }
+        }
+        if enabled > 0 || st.remaining == 0 {
+            call.progress.notify_all();
+        }
+        enabled
+    };
+    if newly_ready > 0 {
+        {
+            let mut q = sh.queue.lock().unwrap();
+            q.extend((0..newly_ready).map(|_| Work::Graph(Arc::clone(call))));
+        }
+        if newly_ready == 1 {
+            sh.available.notify_one();
+        } else {
+            sh.available.notify_all();
+        }
+    }
+    if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+        let _g = sh.done_lock.lock().unwrap();
+        sh.done.notify_all();
+    }
+    true
 }
 
 /// Execute one queued job with the in-flight bookkeeping shared by
@@ -401,6 +669,12 @@ fn worker_loop(sh: Arc<Shared>) {
                 if let Some(job) = job {
                     run_one(&sh, job);
                 }
+            }
+            // A graph ticket: claim one ready node of that graph (a
+            // stale ticket — the caller helped the node first — is a
+            // no-op, same as map tickets).
+            Work::Graph(call) => {
+                let _ = run_graph_node(&sh, &call);
             }
         }
     }
@@ -594,6 +868,175 @@ mod tests {
         assert!(std::ptr::eq(a, b));
         assert!(a.threads() >= 1);
         assert_eq!(a.map(vec![2u32, 3], |x| x * x), vec![4, 9]);
+    }
+
+    // -----------------------------------------------------------------
+    // Dependency-graph API
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn graph_empty_is_ok() {
+        let pool = ThreadPool::new(2);
+        pool.run_graph(GraphBuilder::new()).unwrap();
+    }
+
+    #[test]
+    fn graph_runs_continuations_after_prerequisites() {
+        let pool = ThreadPool::new(4);
+        let log = Mutex::new(Vec::<u32>::new());
+        let mut g = GraphBuilder::new();
+        let a = g.submit(|| log.lock().unwrap().push(1));
+        let b = g.submit_after(&[a], || log.lock().unwrap().push(2));
+        let _c = g.submit_after(&[b], || log.lock().unwrap().push(3));
+        pool.run_graph(g).unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn graph_diamond_joins_both_branches() {
+        // a -> (b, c) -> d: d must observe both branch effects.
+        let pool = ThreadPool::new(4);
+        let cell = Mutex::new((0u64, 0u64, 0u64));
+        let mut g = GraphBuilder::new();
+        let a = g.submit(|| cell.lock().unwrap().0 = 5);
+        let b = g.submit_after(&[a], || {
+            let mut c = cell.lock().unwrap();
+            c.1 = c.0 * 2;
+        });
+        let c = g.submit_after(&[a], || {
+            let mut c = cell.lock().unwrap();
+            c.2 = c.0 * 3;
+        });
+        let joined = Mutex::new(0u64);
+        g.submit_after(&[b, c], || {
+            let c = cell.lock().unwrap();
+            *joined.lock().unwrap() = c.1 + c.2;
+        });
+        pool.run_graph(g).unwrap();
+        assert_eq!(*joined.lock().unwrap(), 25);
+    }
+
+    #[test]
+    fn graph_wide_fan_in_and_out() {
+        // 32 roots -> 1 join -> 32 leaves, checking counts and ordering
+        // constraints (join sees all roots; every leaf sees the join).
+        let pool = ThreadPool::new(4);
+        let roots_done = Arc::new(AtomicU64::new(0));
+        let join_seen = Arc::new(AtomicU64::new(0));
+        let leaves_ok = Arc::new(AtomicU64::new(0));
+        let mut g = GraphBuilder::new();
+        let roots: Vec<NodeId> = (0..32)
+            .map(|_| {
+                let r = Arc::clone(&roots_done);
+                g.submit(move || {
+                    r.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        let join = {
+            let (r, j) = (Arc::clone(&roots_done), Arc::clone(&join_seen));
+            g.submit_after(&roots, move || {
+                j.store(r.load(Ordering::SeqCst), Ordering::SeqCst);
+            })
+        };
+        for _ in 0..32 {
+            let (j, l) = (Arc::clone(&join_seen), Arc::clone(&leaves_ok));
+            g.submit_after(&[join], move || {
+                if j.load(Ordering::SeqCst) == 32 {
+                    l.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        pool.run_graph(g).unwrap();
+        assert_eq!(join_seen.load(Ordering::SeqCst), 32);
+        assert_eq!(leaves_ok.load(Ordering::SeqCst), 32);
+        pool.wait_idle();
+        assert_eq!(pool.load(), 0);
+    }
+
+    /// The nested-continuation deadlock regression (the wavefront
+    /// engine's shape): a 1-thread pool whose only worker is parked on a
+    /// blocking job, so the submitting caller must self-drive the whole
+    /// graph — including continuations enabled mid-run — and a
+    /// continuation that itself submits a nested `map` to the same pool.
+    #[test]
+    fn graph_nested_continuations_complete_on_busy_single_thread_pool() {
+        let pool = ThreadPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            let _ = rx.recv();
+        });
+        let sum = Mutex::new(0u64);
+        let mut g = GraphBuilder::new();
+        let a = g.submit(|| *sum.lock().unwrap() += 1);
+        let b = g.submit_after(&[a], || {
+            // Nested fork-join from inside a graph continuation.
+            let part: u64 = pool.map(vec![10u64, 20, 30], |x| x + 1).iter().sum();
+            *sum.lock().unwrap() += part;
+        });
+        g.submit_after(&[b], || *sum.lock().unwrap() *= 2);
+        pool.run_graph(g).unwrap();
+        assert_eq!(*sum.lock().unwrap(), (1 + 63) * 2);
+        tx.send(()).unwrap();
+        pool.wait_idle();
+        // Stale graph tickets left in the queue are no-ops.
+        assert_eq!(pool.map(vec![4u32], |x| x * 2), vec![8]);
+    }
+
+    #[test]
+    fn graph_panic_reports_error_and_still_runs_rest() {
+        let pool = ThreadPool::new(2);
+        let ran = Arc::new(AtomicU64::new(0));
+        let mut g = GraphBuilder::new();
+        let a = g.submit(|| panic!("graph node exploded"));
+        let r = Arc::clone(&ran);
+        g.submit_after(&[a], move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        let r2 = Arc::clone(&ran);
+        g.submit(move || {
+            r2.fetch_add(1, Ordering::SeqCst);
+        });
+        let err = pool.run_graph(g).unwrap_err();
+        assert_eq!(err.panicked, 1);
+        assert!(err.message().contains("exploded"), "{}", err.message());
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+        // The pool is not poisoned.
+        assert_eq!(pool.map(vec![1u32], |x| x + 1), vec![2]);
+    }
+
+    #[test]
+    fn concurrent_graphs_with_interleaved_maps() {
+        let pool = ThreadPool::new(4);
+        for _ in 0..50 {
+            std::thread::scope(|s| {
+                let p = &pool;
+                let h1 = s.spawn(move || {
+                    let acc = Mutex::new(0u64);
+                    let mut g = GraphBuilder::new();
+                    let roots: Vec<NodeId> = (0..8u64)
+                        .map(|i| {
+                            let acc = &acc;
+                            g.submit(move || *acc.lock().unwrap() += i)
+                        })
+                        .collect();
+                    let joined = Mutex::new(0u64);
+                    g.submit_after(&roots, || {
+                        *joined.lock().unwrap() = *acc.lock().unwrap()
+                    });
+                    p.run_graph(g).unwrap();
+                    assert_eq!(*joined.lock().unwrap(), 28);
+                });
+                let h2 = s.spawn(move || {
+                    let out = p.map((0..32u64).collect::<Vec<_>>(), |x| x * 2);
+                    assert_eq!(out, (0..32).map(|x| x * 2).collect::<Vec<u64>>());
+                });
+                h1.join().unwrap();
+                h2.join().unwrap();
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(pool.load(), 0);
     }
 
     /// The regression for the completion race: two threads run `map`

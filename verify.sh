@@ -6,3 +6,10 @@ set -euo pipefail
 cd "$(dirname "$0")/rust"
 cargo build --release
 cargo test -q
+# Non-default scan execution plans: re-run the scan suite with the
+# planner forced to each alternate strategy (the GSPN2_SCAN_PLAN env
+# override behind the `scan.plan` config knob), so the segmented and
+# direction-fan paths are exercised as the *default* decision on every
+# push, not only where their dedicated tests force them.
+GSPN2_SCAN_PLAN=segment cargo test -q scan
+GSPN2_SCAN_PLAN=dirfan cargo test -q scan
