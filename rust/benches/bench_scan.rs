@@ -12,8 +12,9 @@
 use std::time::Duration;
 
 use gspn2::scan::fused::{
-    fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_pool, fused_scan_l2r,
-    fused_scan_l2r_pool, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
+    fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_pool,
+    fused_merged_4dir_seg_wave_twopass, fused_scan_l2r, fused_scan_l2r_pool, fused_scan_l2r_seg,
+    fused_scan_l2r_seg_wave, fused_scan_l2r_seg_wave_twopass,
 };
 use gspn2::scan::{
     auto_segments, expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool,
@@ -129,11 +130,19 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         );
     }
 
-    // Barrier vs wavefront (the PR 4 acceptance row): the segmented
-    // decomposition with phase 2 as a global barrier vs as per-plane
-    // continuations, n2c2 512x512 at 8 threads — 4 planes, so each
-    // plane's correction chain has three other planes' phase-1 work to
-    // hide behind. Exact same jobs and bits; only the schedule differs.
+    // Barrier vs wavefront vs the PR 4 two-pass (the PR 4 and PR 5
+    // acceptance rows): the segmented decomposition at n2c2 512x512 on
+    // 8 threads — 4 planes, so each plane's phase-2 work has three
+    // other planes' phase-1 scans to hide behind. "wavefront" is the
+    // production schedule (per-direction continuations, carry
+    // correction fused into the scatter drain: the retained panel is
+    // read once, never re-written); "two-pass" is the PR 4 schedule
+    // (one continuation per plane, correction as a separate in-place
+    // panel pass before the drain re-reads it). Exact same bits
+    // everywhere; only schedule and memory traffic differ. The
+    // fused-drain/two-pass row is the PR 5 acceptance comparison
+    // (>= 1.1x at 8 real cores; CI's 4-core runner shows the
+    // trajectory).
     {
         let (n, c, h, w) = (2usize, 2usize, 512usize, 512usize);
         let nplanes = n * c;
@@ -149,8 +158,14 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
                 black_box(fused_scan_l2r_seg(&x, &taps, &lam, 0, s, &pool8));
             },
         );
+        let r_twopass = suite.bench(
+            &format!("scan_l2r {tag} (seg={s} PR4 two-pass wavefront, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, s, &pool8));
+            },
+        );
         let r_wave = suite.bench(
-            &format!("scan_l2r {tag} (seg={s} wavefront, 8 threads)"),
+            &format!("scan_l2r {tag} (seg={s} fused-drain wavefront, 8 threads)"),
             || {
                 black_box(fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool8));
             },
@@ -158,6 +173,11 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup scan_l2r {tag} wavefront/barrier"),
             r_barrier.mean_ns / r_wave.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} fused-drain/two-pass"),
+            r_twopass.mean_ns / r_wave.mean_ns,
             "x",
         );
     }
@@ -187,10 +207,23 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
             suite.bench(&format!("merged_4dir {tag} (dirfan barrier, 8 threads)"), || {
                 black_box(fused_merged_4dir_fan(&x, tr, &lam, &logits, 0, false, &pool8));
             });
-        let m_fan_wave =
-            suite.bench(&format!("merged_4dir {tag} (dirfan wavefront, 8 threads)"), || {
+        // The PR 4 single-continuation fan (one two-pass drain per
+        // plane; s = 1, so the "two passes" are carry-free — this row
+        // isolates the per-direction continuation split).
+        let m_fan_twopass = suite.bench(
+            &format!("merged_4dir {tag} (dirfan PR4 single-cont, 8 threads)"),
+            || {
+                black_box(fused_merged_4dir_seg_wave_twopass(
+                    &x, tr, &lam, &logits, 0, 1, &pool8,
+                ));
+            },
+        );
+        let m_fan_wave = suite.bench(
+            &format!("merged_4dir {tag} (dirfan per-dir wavefront, 8 threads)"),
+            || {
                 black_box(fused_merged_4dir_fan(&x, tr, &lam, &logits, 0, true, &pool8));
-            });
+            },
+        );
         suite.record_value(
             &format!("speedup merged_4dir {tag} dirfan/plane"),
             m_plane.mean_ns / m_fan_wave.mean_ns,
@@ -199,6 +232,11 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup merged_4dir {tag} dirfan wavefront/barrier"),
             m_fan_barrier.mean_ns / m_fan_wave.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("speedup merged_4dir {tag} per-dir/PR4 single-cont"),
+            m_fan_twopass.mean_ns / m_fan_wave.mean_ns,
             "x",
         );
     }

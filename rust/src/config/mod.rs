@@ -108,11 +108,14 @@ impl Default for SimConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScanConfig {
     /// Scan execution-planner override: `"auto"` (the cost-based
-    /// planner decides), `"plane"`, `"segment"`, or `"dirfan"` — forces
-    /// the named strategy wherever it is valid for the geometry. Applies
-    /// to serving and the benches. `"auto"` defers to the
-    /// `GSPN2_SCAN_PLAN` env var when that is set (the CI hook that
-    /// exercises non-default strategies across the whole suite).
+    /// planner decides), `"plane"`, `"segment"` (the two-phase
+    /// decomposition under its production schedule — per-direction
+    /// wavefront continuations with the carry correction fused into the
+    /// scatter drain), or `"dirfan"` — forces the named strategy
+    /// wherever it is valid for the geometry. Applies to serving and
+    /// the benches. `"auto"` defers to the `GSPN2_SCAN_PLAN` env var
+    /// when that is set (the CI hook that exercises non-default
+    /// strategies across the whole suite).
     pub plan: String,
 }
 

@@ -160,17 +160,25 @@ impl Batcher {
     /// requests (len <= fused size; len == fused size unless the bucket
     /// only offers larger artifacts — callers pad in that case).
     pub fn pop_batch(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_releasable(now, |_, _| 1)
+        self.pop_releasable(Some(now), |_, _| 1)
     }
 
     /// The shared pop core: round-robin over the *non-empty* buckets
-    /// only, releasing the first that is full or whose head aged out and
-    /// that holds at least `min_for(bucket, queue_len)` requests
-    /// (clamped to `[1, max_batch]`). A bucket drained to empty leaves
-    /// the index; a drained *dynamic* bucket is pruned entirely.
+    /// only, releasing the first that is full or whose head aged out
+    /// (`now = None` treats every head as aged — the clock-free eager
+    /// path) and that holds at least `min_for(bucket, queue_len)`
+    /// requests (clamped to `[1, max_batch]`). A bucket drained to
+    /// empty leaves the index; a drained *dynamic* bucket is pruned
+    /// entirely.
+    ///
+    /// Instant comparisons saturate: callers race `Instant::now()`
+    /// against enqueuers taking timestamps under a different lock
+    /// ordering, so a `now` slightly earlier than a head's `arrived` is
+    /// legal and must read as "zero wait", not a
+    /// `duration_since` underflow panic that poisons the batcher.
     fn pop_releasable<F: Fn(&Bucket, usize) -> usize>(
         &mut self,
-        now: Instant,
+        now: Option<Instant>,
         min_for: F,
     ) -> Option<(Bucket, usize, Vec<Request>)> {
         if self.nonempty.is_empty() {
@@ -187,8 +195,13 @@ impl Batcher {
             if q.len() < min_len {
                 continue;
             }
-            let head_aged =
-                now.duration_since(q.front().unwrap().arrived) >= self.policy.max_wait;
+            let head_aged = match now {
+                None => true,
+                Some(now) => {
+                    now.saturating_duration_since(q.front().unwrap().arrived)
+                        >= self.policy.max_wait
+                }
+            };
             let full = q.len() >= self.policy.max_batch;
             if !(head_aged || full) {
                 continue;
@@ -223,12 +236,12 @@ impl Batcher {
         None
     }
 
-    /// Pop regardless of head age (the eager-idle path): equivalent to
-    /// `pop_batch` at a time when every head has aged out. Convenience
-    /// shim over [`Batcher::pop_eager_by`] — the serving worker uses
-    /// the per-bucket plan-cost form directly.
-    pub fn pop_eager(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_eager_min(now, 1)
+    /// Pop regardless of head age (the eager-idle path): `pop_batch`
+    /// with every head treated as aged, so it takes no clock at all.
+    /// Convenience shim over [`Batcher::pop_eager_by`] — the serving
+    /// worker uses the per-bucket plan-cost form directly.
+    pub fn pop_eager(&mut self) -> Option<(Bucket, usize, Vec<Request>)> {
+        self.pop_eager_min(1)
     }
 
     /// Eager pop with one global minimum release size: like
@@ -239,12 +252,8 @@ impl Batcher {
     /// per-bucket cost model; truly aged heads are never starved —
     /// callers release them through [`Batcher::pop_batch`] first, where
     /// age always wins.
-    pub fn pop_eager_min(
-        &mut self,
-        now: Instant,
-        min_len: usize,
-    ) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_eager_by(now, |_, _| min_len)
+    pub fn pop_eager_min(&mut self, min_len: usize) -> Option<(Bucket, usize, Vec<Request>)> {
+        self.pop_eager_by(|_, _| min_len)
     }
 
     /// Plan-cost-aware eager pop: like [`Batcher::pop_eager_min`], but
@@ -256,20 +265,20 @@ impl Batcher {
     /// would actually cover — instead of a global saturated/idle bool.
     pub fn pop_eager_by<F: Fn(&Bucket, usize) -> usize>(
         &mut self,
-        now: Instant,
         min_for: F,
     ) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_releasable(now + self.policy.max_wait + Duration::from_nanos(1), min_for)
+        // Age is ignored outright (previously emulated by shifting a
+        // caller-supplied `now` past max_wait, which silently broke for
+        // a stale `now` — eager pops take no clock at all).
+        self.pop_releasable(None, min_for)
     }
 
-    /// Drain everything regardless of age (shutdown path).
+    /// Drain everything regardless of age (shutdown path) — clock-free,
+    /// like the eager pops (the old far-future-instant emulation broke
+    /// for any `max_wait` past the shifted horizon).
     pub fn drain_all(&mut self, mut f: impl FnMut(Bucket, usize, Vec<Request>)) {
-        loop {
-            let far_future = Instant::now() + Duration::from_secs(3600);
-            match self.pop_batch(far_future) {
-                Some((b, fused, reqs)) => f(b, fused, reqs),
-                None => break,
-            }
+        while let Some((b, fused, reqs)) = self.pop_eager() {
+            f(b, fused, reqs);
         }
     }
 }
@@ -450,7 +459,7 @@ mod tests {
         let rejected = b.enqueue(bucket(16), r).unwrap_err();
         assert_eq!(rejected.id, 1);
         assert_eq!(b.queued(), 0);
-        assert!(b.pop_eager(now).is_none());
+        assert!(b.pop_eager().is_none());
         // After registration the same bucket is accepted.
         b.register_bucket(bucket(16), vec![1]);
         let (r, _rx2) = req(2, 16, now);
@@ -470,21 +479,21 @@ mod tests {
         }
         // Saturated-pool setting (min_len = max_batch): 3 of 4 queued
         // are held back by the eager path.
-        assert!(b.pop_eager_min(now, 4).is_none());
+        assert!(b.pop_eager_min(4).is_none());
         assert_eq!(b.queued(), 3);
         // The 4th request fills the bucket: the sized eager pop fires
         // with the full fused batch.
         let (r, rx) = req(9, 8, now);
         b.enqueue(bucket(8), r).expect("registered");
         rxs.push(rx);
-        let (_, fused, reqs) = b.pop_eager_min(now, 4).expect("sized release");
+        let (_, fused, reqs) = b.pop_eager_min(4).expect("sized release");
         assert_eq!(fused, 4);
         assert_eq!(reqs.len(), 4);
         // An idle pool (min_len = 1) keeps releasing partials instantly.
         let (r, rx) = req(10, 8, now);
         b.enqueue(bucket(8), r).expect("registered");
         rxs.push(rx);
-        let (_, fused, reqs) = b.pop_eager_min(now, 1).expect("idle release");
+        let (_, fused, reqs) = b.pop_eager_min(1).expect("idle release");
         assert_eq!(fused, 1);
         assert_eq!(reqs.len(), 1);
     }
@@ -500,7 +509,7 @@ mod tests {
             b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
-        let (_, _, reqs) = b.pop_eager_min(now, 100).expect("clamped release");
+        let (_, _, reqs) = b.pop_eager_min(100).expect("clamped release");
         assert_eq!(reqs.len(), 2);
     }
 
@@ -514,6 +523,33 @@ mod tests {
         b.enqueue(bucket(8), r).expect("registered");
         let later = t0 + Duration::from_micros(2_000);
         assert!(b.pop_batch(later).is_some());
+    }
+
+    /// The stale-`now` regression: a caller that took `Instant::now()`
+    /// *before* racing an enqueuer to the lock can hand the batcher a
+    /// `now` earlier than a head's `arrived`. Every compare must
+    /// saturate — not panic mid-poll (which poisoned the batcher mutex
+    /// and bricked the server) — and eager pops must still release
+    /// regardless of age.
+    #[test]
+    fn stale_now_never_panics_and_eager_still_releases() {
+        let mut b = mk_batcher(4, 1_000);
+        let now = Instant::now();
+        let arrived_later = now + Duration::from_millis(50);
+        let (r, _rx) = req(1, 8, arrived_later);
+        b.enqueue(bucket(8), r).expect("registered");
+        // Age path: a stale now reads as zero wait -> not aged, no panic.
+        assert!(b.pop_batch(now).is_none());
+        assert_eq!(b.queued(), 1);
+        // Eager path ignores age outright — releases even though the
+        // head "arrives" in the future relative to the wall clock (the
+        // old now + max_wait shift quietly failed exactly here).
+        let (_, fused, reqs) = b.pop_eager().expect("eager ignores age");
+        assert_eq!((fused, reqs.len()), (1, 1));
+        // And a stale now with queued heads keeps next_deadline sane.
+        let (r, _rx2) = req(2, 8, arrived_later);
+        b.enqueue(bucket(8), r).expect("registered");
+        assert_eq!(b.next_deadline().unwrap(), arrived_later + Duration::from_micros(1_000));
     }
 
     #[test]
@@ -642,10 +678,10 @@ mod tests {
         }
         // Hold the c8 bucket for a full batch, release c16 partials.
         let sized = |bk: &Bucket, _len: usize| if bk.c == 8 { 4 } else { 1 };
-        let (bk, _, reqs) = b.pop_eager_by(now, sized).expect("c16 releases");
+        let (bk, _, reqs) = b.pop_eager_by(sized).expect("c16 releases");
         assert_eq!(bk.c, 16);
         assert_eq!(reqs.len(), 2);
-        assert!(b.pop_eager_by(now, sized).is_none(), "c8 held for a full batch");
+        assert!(b.pop_eager_by(sized).is_none(), "c8 held for a full batch");
         assert_eq!(b.queued(), 2);
         // Once full, the held bucket releases through the same closure.
         for i in 2..4 {
@@ -653,7 +689,7 @@ mod tests {
             b.enqueue(bucket(8), r).expect("registered");
             rxs.push(rx);
         }
-        let (bk, fused, reqs) = b.pop_eager_by(now, sized).expect("full c8");
+        let (bk, fused, reqs) = b.pop_eager_by(sized).expect("full c8");
         assert_eq!((bk.c, fused, reqs.len()), (8, 4, 4));
     }
 }

@@ -42,7 +42,7 @@ use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
 use crate::scan::plan::{eager_release_min, plan_scan, ScanGeometry};
 use crate::tensor::{concat_axis0, split_axis0};
-use crate::util::{logging, ThreadPool};
+use crate::util::{lock_unpoisoned, logging, ThreadPool};
 use crate::Tensor;
 
 /// Execution backend selected by [`ServeConfig::backend`].
@@ -173,21 +173,21 @@ impl Coordinator {
         // structured error here rather than panicking a worker later
         // (e.g. scan_l2r's kchunk-divides-W assert).
         if let Err(why) = validate_scan_shapes(&x, &a_raw, &lam, kchunk) {
-            self.shared.metrics.lock().unwrap().record_rejection();
+            lock_unpoisoned(&self.shared.metrics).record_rejection();
             return Err(SubmitError::Invalid(why));
         }
         let payload = Payload::Scan { x, a_raw, lam };
         let bucket = payload.bucket(kchunk).expect("scan payload");
         let (tx, rx) = mpsc::channel();
         {
-            let mut b = self.shared.batcher.lock().unwrap();
+            let mut b = lock_unpoisoned(&self.shared.batcher);
             let known = b.known_bucket(&bucket);
             if !known && self.shared.backend != Backend::CpuFused {
-                self.shared.metrics.lock().unwrap().record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_rejection();
                 return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
             }
             if !b.has_capacity() {
-                self.shared.metrics.lock().unwrap().record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_rejection();
                 return Err(SubmitError::Backpressure);
             }
             if !known {
@@ -206,7 +206,7 @@ impl Coordinator {
                 // instead of exhausting them.
                 const MAX_DYNAMIC_BUCKETS: usize = 1024;
                 if b.bucket_count() >= MAX_DYNAMIC_BUCKETS {
-                    self.shared.metrics.lock().unwrap().record_rejection();
+                    lock_unpoisoned(&self.shared.metrics).record_rejection();
                     return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
                 }
                 let max = b.policy.max_batch.max(1);
@@ -223,7 +223,7 @@ impl Coordinator {
                 // Unreachable while the known_bucket check above holds
                 // (same lock), but the batcher no longer auto-creates
                 // queues — surface it as the structured rejection.
-                self.shared.metrics.lock().unwrap().record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_rejection();
                 return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
             }
         }
@@ -242,9 +242,9 @@ impl Coordinator {
         }
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.shared.direct.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.shared.direct);
             if q.len() >= 64 {
-                self.shared.metrics.lock().unwrap().record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_rejection();
                 return Err(SubmitError::Backpressure);
             }
             q.push_back(Request {
@@ -260,12 +260,12 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> Metrics {
-        self.shared.metrics.lock().unwrap().clone()
+        lock_unpoisoned(&self.shared.metrics).clone()
     }
 
     pub fn queued(&self) -> usize {
-        self.shared.batcher.lock().unwrap().queued()
-            + self.shared.direct.lock().unwrap().len()
+        lock_unpoisoned(&self.shared.batcher).queued()
+            + lock_unpoisoned(&self.shared.direct).len()
     }
 
     /// Graceful drain: stop admitting, process everything queued, join.
@@ -275,7 +275,7 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let m = self.shared.metrics.lock().unwrap().clone();
+        let m = lock_unpoisoned(&self.shared.metrics).clone();
         m
     }
 }
@@ -296,7 +296,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
     loop {
         // 1) Direct requests take priority (they are latency-sensitive
         //    whole-model calls).
-        let direct = sh.direct.lock().unwrap().pop_front();
+        let direct = lock_unpoisoned(&sh.direct).pop_front();
         if let Some(req) = direct {
             match &engine {
                 Some(engine) => run_direct(engine, &sh, req),
@@ -306,7 +306,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
         }
         // 2) Batched scan work.
         let batch = {
-            let mut b = sh.batcher.lock().unwrap();
+            let mut b = lock_unpoisoned(&sh.batcher);
             loop {
                 let now = Instant::now();
                 if let Some(batch) = b.pop_batch(now) {
@@ -314,13 +314,14 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                 }
                 // Direct work may have arrived while we waited; bounce out
                 // to the outer loop (which prioritises it).
-                if !sh.direct.lock().unwrap().is_empty() {
+                if !lock_unpoisoned(&sh.direct).is_empty() {
                     break None;
                 }
                 if sh.shutdown.load(Ordering::SeqCst) {
-                    // Drain leftovers younger than max_wait.
-                    let horizon = now + b.policy.max_wait + Duration::from_secs(1);
-                    break b.pop_batch(horizon);
+                    // Drain leftovers regardless of age (clock-free —
+                    // the shifted-horizon emulation this used to do is
+                    // the stale-instant pattern the batcher retired).
+                    break b.pop_eager();
                 }
                 // Eager-idle release: this worker has nothing runnable, so
                 // waiting out max_wait would buy batching nothing — take
@@ -337,7 +338,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                     let pool = ThreadPool::global();
                     let (load, threads) = (pool.load(), pool.threads());
                     let max_batch = b.policy.max_batch;
-                    let released = b.pop_eager_by(now, |bucket, _qlen| {
+                    let released = b.pop_eager_by(|bucket, _qlen| {
                         let geom =
                             ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
                         let plan = plan_scan(&geom, load, threads);
@@ -354,7 +355,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                 let (nb, _t) = sh
                     .work_ready
                     .wait_timeout(b, timeout.max(Duration::from_micros(100)))
-                    .unwrap();
+                    .unwrap_or_else(|e| e.into_inner());
                 b = nb;
             }
         };
@@ -365,7 +366,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
             },
             None => {
                 if sh.shutdown.load(Ordering::SeqCst)
-                    && sh.direct.lock().unwrap().is_empty()
+                    && lock_unpoisoned(&sh.direct).is_empty()
                 {
                     return;
                 }
@@ -377,7 +378,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
 
 fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
     let t0 = Instant::now();
-    let queue_ns = t0.duration_since(req.arrived).as_nanos() as u64;
+    let queue_ns = t0.saturating_duration_since(req.arrived).as_nanos() as u64;
     let (artifact, inputs) = match req.payload {
         Payload::Direct { artifact, inputs } => (artifact, inputs),
         _ => unreachable!("direct queue holds direct payloads"),
@@ -392,7 +393,7 @@ fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
         execute_us: exec_ns / 1000,
         batch: 1,
     });
-    let mut m = sh.metrics.lock().unwrap();
+    let mut m = lock_unpoisoned(&sh.metrics);
     if ok {
         m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
     } else {
@@ -403,7 +404,7 @@ fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
 /// Direct (whole-artifact) execution has no CPU fallback: reply with a
 /// structured error instead of hanging the client.
 fn reject_direct(sh: &Shared, req: Request) {
-    sh.metrics.lock().unwrap().record_error();
+    lock_unpoisoned(&sh.metrics).record_error();
     let _ = req.reply.send(Response {
         id: req.id,
         result: Err(anyhow!("direct execution requires the pjrt backend")),
@@ -432,25 +433,72 @@ fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
             Payload::Scan { x, a_raw, lam } => (x, a_raw, lam),
             _ => unreachable!("scan batch holds scan payloads"),
         };
-        let taps = crate::scan::Taps::normalize(&a_raw);
-        let h = crate::scan::fused::fused_scan_l2r_pool(
-            &x,
-            &taps,
-            &lam,
-            r.kchunk,
-            ThreadPool::global(),
-        );
+        // One panicking execution must cost exactly its own request: the
+        // client gets a structured error response (not a dropped
+        // channel), the error is counted, and the worker thread — and
+        // with it every queued and future request — survives. Without
+        // the catch, a panic here unwound the executor, leaked every
+        // reply channel in the batch, and left later requests to queue
+        // forever against a dead worker.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            #[cfg(test)]
+            test_hooks::maybe_fail_scan(x.shape[1], x.shape[2], x.shape[3]);
+            let taps = crate::scan::Taps::normalize(&a_raw);
+            crate::scan::fused::fused_scan_l2r_pool(
+                &x,
+                &taps,
+                &lam,
+                r.kchunk,
+                ThreadPool::global(),
+            )
+        }));
         let exec_ns = t0.elapsed().as_nanos() as u64;
-        let queue_ns = t0.duration_since(r.arrived).as_nanos() as u64;
-        let _ = r.reply.send(Response {
-            id: r.id,
-            result: Ok(vec![Value::F32(h)]),
-            queue_us: queue_ns / 1000,
-            execute_us: exec_ns / 1000,
-            batch,
-        });
-        let mut m = sh.metrics.lock().unwrap();
-        m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, batch);
+        let queue_ns = t0.saturating_duration_since(r.arrived).as_nanos() as u64;
+        match result {
+            Ok(h) => {
+                let _ = r.reply.send(Response {
+                    id: r.id,
+                    result: Ok(vec![Value::F32(h)]),
+                    queue_us: queue_ns / 1000,
+                    execute_us: exec_ns / 1000,
+                    batch,
+                });
+                let mut m = lock_unpoisoned(&sh.metrics);
+                m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, batch);
+            }
+            Err(payload) => {
+                let msg = crate::util::panic_message(&*payload);
+                logging::error("worker", &format!("scan execution panicked: {msg}"));
+                lock_unpoisoned(&sh.metrics).record_error();
+                let _ = r.reply.send(Response {
+                    id: r.id,
+                    result: Err(anyhow!("scan execution panicked: {msg}")),
+                    queue_us: queue_ns / 1000,
+                    execute_us: exec_ns / 1000,
+                    batch,
+                });
+            }
+        }
+    }
+}
+
+/// Test-only fault injection: lets the failed-batch regression test
+/// force the cpu scan execution of one specific (C, H, W) geometry to
+/// panic (one-shot, keyed so concurrently running tests — which use
+/// other geometries — can never consume or trip it).
+#[cfg(test)]
+pub(crate) mod test_hooks {
+    use std::sync::Mutex;
+
+    pub(crate) static FAIL_SCAN_FOR: Mutex<Option<(usize, usize, usize)>> = Mutex::new(None);
+
+    pub(crate) fn maybe_fail_scan(c: usize, h: usize, w: usize) {
+        let mut g = crate::util::lock_unpoisoned(&FAIL_SCAN_FOR);
+        if *g == Some((c, h, w)) {
+            *g = None;
+            drop(g);
+            panic!("injected scan execution failure");
+        }
     }
 }
 
@@ -476,7 +524,7 @@ fn run_scan_batch(
         let inputs = vec![Value::F32(x), Value::F32(a_raw), Value::F32(lam)];
         let result = engine.run(&artifact, &inputs);
         let exec_ns = t0.elapsed().as_nanos() as u64;
-        let queue_ns = t0.duration_since(r.arrived).as_nanos() as u64;
+        let queue_ns = t0.saturating_duration_since(r.arrived).as_nanos() as u64;
         let ok = result.is_ok();
         let _ = r.reply.send(Response {
             id: r.id,
@@ -485,7 +533,7 @@ fn run_scan_batch(
             execute_us: exec_ns / 1000,
             batch: 1,
         });
-        let mut m = sh.metrics.lock().unwrap();
+        let mut m = lock_unpoisoned(&sh.metrics);
         if ok {
             m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
         } else {
@@ -512,7 +560,7 @@ fn run_scan_batch(
         lams.push(lams[0]);
     }
     if pad > 0 {
-        sh.metrics.lock().unwrap().record_padding(pad);
+        lock_unpoisoned(&sh.metrics).record_padding(pad);
     }
     // Intra-batch parallelism on the shared pool: the three fused input
     // concats are independent memcpy-bound jobs (~hundreds of KB each at
@@ -552,9 +600,9 @@ fn run_scan_batch(
             let sizes = vec![1usize; fused];
             let mut parts = split_axis0(&h, &sizes);
             parts.truncate(reqs.len());
-            let mut m = sh.metrics.lock().unwrap();
+            let mut m = lock_unpoisoned(&sh.metrics);
             for (r, out) in reqs.iter().zip(parts.drain(..)) {
-                let queue_ns = t0.duration_since(r.arrived).as_nanos() as u64;
+                let queue_ns = t0.saturating_duration_since(r.arrived).as_nanos() as u64;
                 m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, fused);
                 let _ = r.reply.send(Response {
                     id: r.id,
@@ -567,7 +615,7 @@ fn run_scan_batch(
         }
         Err(e) => {
             let msg = format!("{e:#}");
-            let mut m = sh.metrics.lock().unwrap();
+            let mut m = lock_unpoisoned(&sh.metrics);
             for r in &reqs {
                 m.record_error();
                 let _ = r.reply.send(Response {
@@ -579,5 +627,87 @@ fn run_scan_batch(
                 });
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cpu_cfg(workers: usize) -> ServeConfig {
+        ServeConfig {
+            backend: "cpu".into(),
+            workers,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 64,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn mk_case(rng: &mut Rng, c: usize, h: usize, w: usize) -> (Tensor, Tensor, Tensor) {
+        (
+            Tensor::randn(&[1, c, h, w], rng, 1.0),
+            Tensor::randn(&[1, 1, 3, h, w], rng, 1.0),
+            Tensor::randn(&[1, c, h, w], rng, 1.0),
+        )
+    }
+
+    /// The failed-batch regression: one panicking scan execution must
+    /// come back as a structured error response (error counted in
+    /// metrics), and the server — same worker, same metrics mutex —
+    /// must keep serving later requests instead of dying poisoned.
+    #[test]
+    fn serving_survives_one_failed_batch() {
+        use std::time::Duration;
+        let coord = Coordinator::start(&cpu_cfg(1)).unwrap();
+        let mut rng = Rng::new(90);
+        // A geometry no other test submits, so the keyed hook can only
+        // fire for this request even with suites running in parallel.
+        let (x, a, lam) = mk_case(&mut rng, 3, 7, 11);
+        *lock_unpoisoned(&test_hooks::FAIL_SCAN_FOR) = Some((3, 7, 11));
+        let rx = coord.submit_scan(x, a, lam, 0).expect("submit");
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("worker must reply");
+        let err = resp.result.expect_err("injected failure must surface as an error");
+        assert!(
+            format!("{err:#}").contains("injected scan execution failure"),
+            "{err:#}"
+        );
+        // The same (only) worker serves the next request correctly.
+        let (x, a, lam) = mk_case(&mut rng, 2, 8, 8);
+        let want = crate::scan::scan_l2r(&x, &crate::scan::Taps::normalize(&a), &lam, 0);
+        let rx = coord.submit_scan(x, a, lam, 0).expect("submit after failure");
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("server survived");
+        let got = resp.result.expect("second request succeeds");
+        assert_eq!(got[0].as_f32().unwrap().data, want.data);
+        let m = coord.shutdown();
+        assert_eq!(m.errors, 1, "the failed execution must be counted");
+        assert_eq!(m.completed, 1);
+    }
+
+    /// Metrics reads recover from a poisoned mutex instead of
+    /// propagating PoisonError to every later caller.
+    #[test]
+    fn metrics_lock_recovers_from_poison() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let coord = Coordinator::start(&cpu_cfg(1)).unwrap();
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = coord.shared.metrics.lock().unwrap();
+            panic!("poison the metrics lock");
+        }));
+        assert!(coord.shared.metrics.is_poisoned());
+        // metrics() and a full request round-trip still work.
+        let m = coord.metrics();
+        assert_eq!(m.completed, 0);
+        let mut rng = Rng::new(91);
+        let (x, a, lam) = mk_case(&mut rng, 1, 6, 6);
+        let rx = coord.submit_scan(x, a, lam, 0).expect("submit");
+        assert!(rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .expect("reply")
+            .result
+            .is_ok());
+        coord.shutdown();
     }
 }

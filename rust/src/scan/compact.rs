@@ -177,9 +177,11 @@ impl CompactGspnUnit {
     /// is the execution planner's call ([`super::plan::plan_scan`]):
     /// bit-identical to [`Self::forward_ref`] (pinned by tests) under
     /// both bit-exact strategies — plane-parallel, and the mid-occupancy
-    /// per-direction fan (`DirFan`, wavefront-scheduled). Only a
-    /// low-occupancy forward wide enough to segment (canonical widths
-    /// ≥ 256) follows the `scan_l2r_split` reference arithmetic instead
+    /// per-direction fan (`DirFan`, wavefront-scheduled with one drain
+    /// continuation per direction). Only a low-occupancy forward wide
+    /// enough to segment (canonical widths ≥ 2 ·
+    /// [`super::plan::MIN_SEG_COLS`] = 128) follows the
+    /// `scan_l2r_split` reference arithmetic instead
     /// (±1e-4-equivalent).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.shape[1], self.c);

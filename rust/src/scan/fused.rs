@@ -49,15 +49,24 @@
 //!    module only *executes* whichever plan it is handed:
 //!
 //!    * `Segmented { s }` — the two-phase decomposition of
-//!      [`super::split`], fused: phase 1 scans every (plane, direction,
-//!      segment) from a zero incoming carry in parallel — the same
-//!      pack/unit-stride-scan slab pipeline, retaining the canonical
-//!      columns instead of scattering them — and phase 2 (per plane)
+//!      [`super::split`], fused end to end: phase 1 scans every (plane,
+//!      direction, segment) from a zero incoming carry in parallel —
+//!      the same pack/unit-stride-scan slab pipeline, retaining the
+//!      canonical columns instead of scattering them — and phase 2
 //!      chains the true carries across segment boundaries as a linear
-//!      correction scan ([`correct_col`]) before draining the plane
-//!      through the same fused scatter epilogue. Segmented arithmetic
-//!      is exactly `scan_l2r_split`'s two-phase order (pinned `==` by
-//!      tests).
+//!      correction scan ([`correct_col`]) **computed on the fly inside
+//!      the scatter drain** ([`drain_dir_fused`]): each panel element
+//!      is read exactly once, the per-column correction is added in
+//!      registers, and the corrected value goes straight through the
+//!      inverse-orientation + merge + modulation epilogue. The retained
+//!      panel is never re-written — the separate in-place correction
+//!      pass of the PR 3/4 engines (kept as
+//!      [`correct_and_drain_pieces`], the two-pass bench/bit reference)
+//!      re-touched the whole panel between phase 1 and the drain, the
+//!      exact global-memory round trip §5 eliminates on the GPU.
+//!      Segmented arithmetic is exactly `scan_l2r_split`'s two-phase
+//!      order (pinned `==` by tests): `phase1 + corr` is the same f32
+//!      add whether it lands in the panel or in the drain.
 //!    * `DirFan` — for merged passes: one phase-1 job per (plane,
 //!      direction) scanning its *full* width from the true zero carry
 //!      (already exact, no correction), then a fixed-k-order merge
@@ -65,11 +74,14 @@
 //!      the `s = 1` degenerate case of the segmented engine.
 //!    * The **wavefront** flag replaces the global barrier between the
 //!      phases with dependency-aware pool submission
-//!      ([`crate::util::ThreadPool::run_graph`]): each plane's
-//!      correction + drain runs as a continuation of that plane's own
-//!      phase-1 jobs, so it hides behind other planes' phase-1 scans.
-//!      Scheduling only — the arithmetic (and every bit) matches the
-//!      barrier path.
+//!      ([`crate::util::ThreadPool::run_graph`]). The drain of each
+//!      (plane, direction) is its own continuation — chained after the
+//!      same plane's previous direction to preserve the k = 0..4 merge
+//!      order, depending only on its *own* direction's phase-1 pieces —
+//!      so direction k's drain overlaps both other planes' phase 1 and
+//!      the same plane's direction-(k+1) scans (4 continuations per
+//!      plane instead of PR 4's 1). Scheduling only — the arithmetic
+//!      (and every bit) matches the barrier path.
 //!
 //!    The plane-parallel regime is untouched and stays bit-identical to
 //!    the serial reference.
@@ -87,7 +99,7 @@ use super::direction::{merge_weights, Direction, DIRECTIONS};
 use super::plan::{self, ScanGeometry, ScanStrategy};
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
-use crate::util::{GraphBuilder, ThreadPool};
+use crate::util::{lock_unpoisoned, GraphBuilder, NodeId, ThreadPool};
 use std::sync::Mutex;
 
 /// Canonical columns staged per slab. 32 columns keep the b/h slabs
@@ -486,6 +498,26 @@ fn segment_bounds(wc: usize, segments: usize) -> Vec<(usize, usize)> {
     (0..wc).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(wc))).collect()
 }
 
+/// How a segmented run's phase 2 (carry correction + epilogue drain) is
+/// scheduled and expressed. All three produce identical bits (pinned by
+/// tests); they differ in memory traffic and overlap.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase2 {
+    /// Global two-`map` barrier between the phases; correction fused
+    /// into the drain.
+    Barrier,
+    /// The PR 4 schedule: one continuation per plane running the
+    /// *two-pass* correct-then-drain ([`correct_and_drain_pieces`]) —
+    /// it re-touches the retained panel in place before the drain
+    /// re-reads it. Kept as the bit/bench reference the fused drain is
+    /// measured against (`BENCH_scan`'s "two-pass" rows).
+    WavePlane,
+    /// Per-direction wavefront continuations (4 per plane) with the
+    /// correction fused into the scatter drain — the production
+    /// schedule behind every `wavefront` plan.
+    WaveDir,
+}
+
 /// How an engine run decomposes its work across the pool. The engine
 /// holds no selection heuristics of its own: `Auto` defers to the
 /// planner ([`plan::plan_scan`]), `Forced` carries a caller- or
@@ -495,9 +527,10 @@ enum ExecSpec {
     /// Consult [`plan::plan_scan`] from the pass geometry + pool state.
     Auto,
     /// Execute exactly this strategy (segment counts clamped per
-    /// direction to its canonical width) with the given wavefront flag
-    /// — the bit-identity testing / bench / plan-carrying hook.
-    Forced(ScanStrategy, bool),
+    /// direction to its canonical width) with the given phase-2
+    /// schedule — the bit-identity testing / bench / plan-carrying
+    /// hook.
+    Forced(ScanStrategy, Phase2),
 }
 
 // ---------------------------------------------------------------------
@@ -634,8 +667,8 @@ fn run_engine(
     let hmax = h.max(w);
     let staged: Vec<StagedTaps> =
         dirs.iter().map(|d| StagedTaps::build(d.taps, pool)).collect();
-    let (strategy, wavefront) = match exec {
-        ExecSpec::Forced(s, wf) => (s, wf),
+    let (strategy, phase2) = match exec {
+        ExecSpec::Forced(s, p2) => (s, p2),
         ExecSpec::Auto => match pool {
             Some(pool) => {
                 let geom = ScanGeometry {
@@ -645,9 +678,13 @@ fn run_engine(
                     plane_px: plane,
                 };
                 let p = plan::plan_scan(&geom, pool.load(), pool.threads());
-                (p.strategy, p.wavefront)
+                // A wavefront plan means the per-direction continuation
+                // schedule; the PR 4 per-plane two-pass schedule is
+                // test/bench-only.
+                let p2 = if p.wavefront { Phase2::WaveDir } else { Phase2::Barrier };
+                (p.strategy, p2)
             }
-            None => (ScanStrategy::PlanePar, false),
+            None => (ScanStrategy::PlanePar, Phase2::Barrier),
         },
     };
     let segments = match strategy {
@@ -661,7 +698,7 @@ fn run_engine(
     };
     if let Some(segments) = segments {
         return run_engine_segmented(
-            dirs, &staged, wts, gain, out_shape, pool, segments, wavefront,
+            dirs, &staged, wts, gain, out_shape, pool, segments, phase2,
         );
     }
     let mut out = Tensor::zeros(out_shape);
@@ -722,11 +759,14 @@ fn run_engine(
 /// (chunk resets still fire on global column indices inside
 /// [`scan_slab`]). Phase 2 fans one job per plane: for each direction it
 /// chains the true carry across segment boundaries — the corrected last
-/// column of segment k *is* segment k+1's carry — adding the linear
-/// correction scan ([`correct_col`]) in place, then drains the whole
-/// corrected panel through the same fused scatter epilogue (inverse
-/// orientation + weighted merge + modulation), so the directional
-/// output, merge, and modulation intermediates still never exist.
+/// column of segment k *is* segment k+1's carry — with the linear
+/// correction scan ([`correct_col`]) computed **on the fly inside the
+/// scatter drain** ([`drain_dir_fused`]): the retained panel is read
+/// once and never re-written, and the corrected values flow straight
+/// through the fused scatter epilogue (inverse orientation + weighted
+/// merge + modulation), so the directional output, merge, and
+/// modulation intermediates still never exist — and neither does a
+/// corrected copy of the panel.
 ///
 /// Arithmetic per element is exactly `scan_l2r_split`'s two-phase order
 /// (pinned `==` by tests); only the memory layout and the epilogue
@@ -734,9 +774,10 @@ fn run_engine(
 /// O(nplanes · Σ_dirs hc·wc) floats — bounded in practice because the
 /// planner only picks this path when `nplanes < threads`.
 ///
-/// `wavefront` selects the dependency-graph schedule
-/// ([`run_engine_segmented_wave`]) in place of the two-`map` barrier
-/// below — same jobs, same bits, no global rendezvous between phases.
+/// `phase2` selects the schedule: the two-`map` barrier below, or one
+/// of the dependency-graph schedules of
+/// [`run_engine_segmented_wave`] — same jobs, same bits, no global
+/// rendezvous between phases.
 #[allow(clippy::too_many_arguments)]
 fn run_engine_segmented(
     dirs: &[DirInput<'_>],
@@ -746,12 +787,19 @@ fn run_engine_segmented(
     out_shape: &[usize],
     pool: Option<&ThreadPool>,
     segments: usize,
-    wavefront: bool,
+    phase2: Phase2,
 ) -> Tensor {
-    if wavefront {
+    if phase2 != Phase2::Barrier {
         if let Some(pool) = pool {
             return run_engine_segmented_wave(
-                dirs, staged, wts, gain, out_shape, pool, segments,
+                dirs,
+                staged,
+                wts,
+                gain,
+                out_shape,
+                pool,
+                segments,
+                phase2 == Phase2::WaveDir,
             );
         }
     }
@@ -802,51 +850,43 @@ fn run_engine_segmented(
         }
     }
 
-    // Phase 2: per plane, chain carries + correction per direction, then
-    // drain through the fused epilogue in the same k = 0..dirs order as
-    // the plane path.
+    // Phase 2: per plane, drain each direction's retained panel through
+    // the fused correction + scatter epilogue in the same k = 0..dirs
+    // order as the plane path. The panel is read-only from here on —
+    // the correction never lands back in it.
     let mut out = Tensor::zeros(out_shape);
     let gain_for = |ci: usize| gain.map(|g| g[ci]);
     let last = dirs.len() - 1;
-    let planes: Vec<(usize, &mut [f32], &mut [f32])> = out
+    let planes: Vec<(usize, &mut [f32], &[f32])> = out
         .data
         .chunks_mut(plane)
-        .zip(hbufs.chunks_mut(per_plane))
+        .zip(hbufs.chunks(per_plane))
         .enumerate()
         .map(|(p, (os, pb))| (p, os, pb))
         .collect();
-    let correct_and_drain = |(p, os, pb): (usize, &mut [f32], &mut [f32])| {
-        let mut corr = vec![0.0f32; hmax];
-        let mut next = vec![0.0f32; hmax];
+    let correct_and_drain = |(p, os, pb): (usize, &mut [f32], &[f32])| {
+        let mut scratch = DrainScratch::new(hmax);
         for (k, di) in dirs.iter().enumerate() {
             let (hc, wc) = (di.taps.h, di.taps.w);
             let (tu, tc, td) = staged[k].panels(p / c, p % c);
-            let panel = &mut pb[dir_off[k]..dir_off[k] + hc * wc];
-            for &(lo, hi) in bounds[k].iter().skip(1) {
-                let (done, todo) = panel.split_at_mut(lo * hc);
-                // Incoming carry: the previous segment's (corrected)
-                // last column. The reference decomposition skips
-                // all-zero carries; matching the skip keeps even -0.0
-                // pixels bit-identical.
-                let cin = &done[(lo - 1) * hc..];
-                if cin.iter().all(|&v| v == 0.0) {
-                    continue;
-                }
-                correct_segment(
-                    hc,
-                    di.chunk,
-                    lo,
-                    hi,
-                    tu,
-                    tc,
-                    td,
-                    cin,
-                    &mut corr,
-                    &mut next,
-                    &mut todo[..(hi - lo) * hc],
-                );
-            }
-            drain_scatter(panel, h, w, di.d, 0, wc, hc, os, wts, k, last, gain_for(p % c));
+            let panel = &pb[dir_off[k]..dir_off[k] + hc * wc];
+            let pieces: Vec<&[f32]> =
+                bounds[k].iter().map(|&(lo, hi)| &panel[lo * hc..hi * hc]).collect();
+            drain_dir_fused(
+                &pieces,
+                &bounds[k],
+                hc,
+                di.chunk,
+                (tu, tc, td),
+                (h, w),
+                di.d,
+                os,
+                wts,
+                k,
+                last,
+                gain_for(p % c),
+                &mut scratch,
+            );
         }
     };
     match pool {
@@ -956,14 +996,212 @@ fn correct_segment(
     }
 }
 
-/// Phase 2 of one plane off per-segment panel pieces: chain the true
-/// carry across segment boundaries (the corrected last column of
-/// segment k *is* segment k+1's carry), add the linear correction scan
-/// in place, and drain each corrected segment through the fused scatter
-/// epilogue in the same k = 0..dirs order as the plane path. Exactly
-/// the barrier engine's `correct_and_drain`, re-expressed over the
-/// piece-per-slot layout (every element sees the same values in the
-/// same order, so the bits match).
+/// Per-drain scratch: the correction ping-pong columns, the tracked
+/// inter-segment carry, and the slab used to stage corrected columns
+/// before they scatter. O(SLAB·max(H, W)) — the correction never needs
+/// panel-sized scratch. The staging slab is allocated lazily on the
+/// first corrected column, so drains that never stage (DirFan's s = 1
+/// runs, zero-carry planes) pay only the three small columns.
+struct DrainScratch {
+    corr: Vec<f32>,
+    next: Vec<f32>,
+    carry: Vec<f32>,
+    colb: Vec<f32>,
+}
+
+impl DrainScratch {
+    fn new(hmax: usize) -> DrainScratch {
+        DrainScratch {
+            corr: vec![0.0f32; hmax],
+            next: vec![0.0f32; hmax],
+            carry: vec![0.0f32; hmax],
+            colb: Vec::new(),
+        }
+    }
+}
+
+/// The fused-correction drain for one (plane, direction): walk the
+/// direction's phase-1 segment pieces in column order, computing the
+/// linear carry correction *on the fly* and scattering `phase1 + corr`
+/// straight through the epilogue op — the retained panel is read once
+/// and written zero extra times (the two-pass reference re-touched the
+/// whole corrected region in place first, then read it all again).
+///
+/// Bit-exactness vs the two-pass order ([`correct_segment`] +
+/// [`drain_scatter`], and hence `split::phase2_plane`): the correction
+/// recurrence `corr_i = w_i · corr_{i-1}` never reads panel values, so
+/// fusing changes no operand of any float op — `phase1 + corr` is the
+/// same f32 add whether it lands in the panel or in the drain, the
+/// all-zero carry skip is identical (eliding the correction keeps even
+/// -0.0 pixels bit-identical), and the carry handed to segment k+1 is
+/// the same corrected last column, tracked out of band instead of
+/// re-read from the panel. Chunk resets kill the correction exactly
+/// where the two-pass loop `break`s (including a reset landing on the
+/// segment's first column). Validated bitwise against the two-pass
+/// mirror in C over ~9k randomized geometry/chunk/zero-carry cases
+/// before porting, and pinned `==` by the schedule-matrix tests.
+///
+/// Corrected columns are staged through a [`SLAB`]-column buffer so the
+/// scatter keeps the slab pipeline's write locality; columns with no
+/// live correction (segment 0, a zero carry, or past a chunk reset —
+/// once dead, a correction never revives within a segment) scatter
+/// straight from the piece with no staging copy.
+#[allow(clippy::too_many_arguments)]
+fn drain_dir_fused(
+    pieces: &[&[f32]],
+    bounds: &[(usize, usize)],
+    hc: usize,
+    chunk: usize,
+    taps: (&[f32], &[f32], &[f32]),
+    hw: (usize, usize),
+    d: Direction,
+    os: &mut [f32],
+    wts: Option<&[f32; 4]>,
+    k: usize,
+    last: usize,
+    gain: Option<f32>,
+    s: &mut DrainScratch,
+) {
+    let (tu, tc, td) = taps;
+    let (h, w) = hw;
+    for (si, (&(lo, hi), piece)) in bounds.iter().zip(pieces).enumerate() {
+        let seglen = hi - lo;
+        // Incoming carry: the previous segment's (corrected) last
+        // column. The reference decomposition skips all-zero carries;
+        // matching the skip keeps even -0.0 pixels bit-identical.
+        let mut active = si > 0 && !s.carry[..hc].iter().all(|&v| v == 0.0);
+        if active {
+            s.corr[..hc].copy_from_slice(&s.carry[..hc]);
+        }
+        let mut j = 0;
+        while j < seglen {
+            if !active {
+                // Everything from here to the segment end is already
+                // exact (zero incoming carry, or a chunk reset killed
+                // the correction — it can never re-activate within a
+                // segment): scatter straight from the piece, no
+                // staging copy at all.
+                drain_scatter(
+                    &piece[j * hc..seglen * hc],
+                    h,
+                    w,
+                    d,
+                    lo + j,
+                    seglen - j,
+                    hc,
+                    os,
+                    wts,
+                    k,
+                    last,
+                    gain,
+                );
+                s.carry[..hc].copy_from_slice(&piece[(seglen - 1) * hc..seglen * hc]);
+                break;
+            }
+            let sw = SLAB.min(seglen - j);
+            if s.colb.len() < SLAB * hc {
+                s.colb.resize(SLAB * hc, 0.0);
+            }
+            for i in 0..sw {
+                let gi = lo + j + i;
+                let src = &piece[(j + i) * hc..(j + i + 1) * hc];
+                if active && gi % chunk == 0 {
+                    // Chunk reset: the carry dies here and phase 1 was
+                    // already exact from this column on.
+                    active = false;
+                }
+                let dst = &mut s.colb[i * hc..(i + 1) * hc];
+                if active {
+                    let g0 = gi * hc;
+                    correct_col(
+                        &s.corr[..hc],
+                        &tu[g0..g0 + hc],
+                        &tc[g0..g0 + hc],
+                        &td[g0..g0 + hc],
+                        &mut s.next[..hc],
+                    );
+                    for ((o, &p1), &cv) in dst.iter_mut().zip(src).zip(&s.next[..hc]) {
+                        *o = p1 + cv;
+                    }
+                    std::mem::swap(&mut s.corr, &mut s.next);
+                } else {
+                    dst.copy_from_slice(src);
+                }
+            }
+            drain_scatter(&s.colb, h, w, d, lo + j, sw, hc, os, wts, k, last, gain);
+            if j + sw == seglen {
+                // The corrected last column *is* segment k+1's carry.
+                s.carry[..hc].copy_from_slice(&s.colb[(sw - 1) * hc..sw * hc]);
+            }
+            j += sw;
+        }
+    }
+}
+
+/// [`drain_dir_fused`] over the wavefront engine's per-segment piece
+/// slots: the body of one per-direction drain continuation. Takes the
+/// direction's pieces out of their hand-off slots (the graph's
+/// dependency edges ordered the accesses, so the locks are uncontended;
+/// poisoned slots are recovered — see the module notes on panic
+/// hygiene) and runs the fused-correction drain for direction `k` of
+/// plane `p`.
+#[allow(clippy::too_many_arguments)]
+fn drain_dir_pieces_fused(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps],
+    bounds: &[Vec<(usize, usize)>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<f32>,
+    p: usize,
+    k: usize,
+    c: usize,
+    hw: (usize, usize),
+    slots: &[Mutex<Vec<f32>>],
+    os: &mut [f32],
+    scratch: &mut DrainScratch,
+) {
+    let di = &dirs[k];
+    let hc = di.taps.h;
+    let (tu, tc, td) = staged[k].panels(p / c, p % c);
+    let bufs: Vec<Vec<f32>> = slots
+        .iter()
+        .map(|s| std::mem::take(&mut *lock_unpoisoned(s)))
+        .collect();
+    // A wrong-size (empty) piece means its phase-1 job panicked before
+    // handing the panel over; `run_graph` already holds that payload —
+    // skip quietly so the caller reports the real panic, not a
+    // confusing secondary index/Poison error.
+    if bufs.iter().zip(&bounds[k]).any(|(b, &(lo, hi))| b.len() != (hi - lo) * hc) {
+        return;
+    }
+    let pieces: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    drain_dir_fused(
+        &pieces,
+        &bounds[k],
+        hc,
+        di.chunk,
+        (tu, tc, td),
+        hw,
+        di.d,
+        os,
+        wts,
+        k,
+        dirs.len() - 1,
+        gain,
+        scratch,
+    );
+}
+
+/// Phase 2 of one plane off per-segment panel pieces, in the retired
+/// PR 4 *two-pass* form: chain the true carry across segment boundaries
+/// (the corrected last column of segment k *is* segment k+1's carry),
+/// add the linear correction scan **in place** (a full read-modify-write
+/// of every corrected panel column), then drain each corrected segment
+/// through the fused scatter epilogue in the same k = 0..dirs order as
+/// the plane path. Kept as the bit/bench reference the fused-correction
+/// drain ([`drain_dir_fused`]) is pinned `==` against and measured
+/// over (every element sees the same values in the same order, so the
+/// bits match).
 #[allow(clippy::too_many_arguments)]
 fn correct_and_drain_pieces(
     dirs: &[DirInput<'_>],
@@ -988,8 +1226,15 @@ fn correct_and_drain_pieces(
         let hc = di.taps.h;
         let (tu, tc, td) = staged[k].panels(p / c, p % c);
         for (si, &(lo, hi)) in bounds[k].iter().enumerate() {
-            let mut buf = std::mem::take(&mut *slots[slot].lock().unwrap());
+            let mut buf = std::mem::take(&mut *lock_unpoisoned(&slots[slot]));
             slot += 1;
+            // A wrong-size (empty) piece means its phase-1 job panicked
+            // before handing the panel over; `run_graph` already holds
+            // that payload — bail quietly so the caller reports the
+            // real panic, not a secondary index/Poison error.
+            if buf.len() != (hi - lo) * hc {
+                return;
+            }
             // Incoming carry: the previous segment's (corrected) last
             // column. The reference decomposition skips all-zero
             // carries; matching the skip keeps even -0.0 pixels
@@ -1006,18 +1251,29 @@ fn correct_and_drain_pieces(
 }
 
 /// The wavefront-scheduled segmented engine: the same (plane,
-/// direction, segment) phase-1 jobs and per-plane phase-2 jobs as the
-/// barrier engine, submitted as a dependency graph
-/// ([`ThreadPool::run_graph`]) in which each plane's correction + drain
-/// is a *continuation* of that plane's own phase-1 pieces. Plane A's
-/// serial correction chain therefore runs while planes B, C, … are
-/// still in phase 1 — the per-plane barrier the ROADMAP called the
-/// "next parallelism step" is gone, and no global rendezvous exists
-/// anywhere in the pass.
+/// direction, segment) phase-1 jobs as the barrier engine, submitted as
+/// a dependency graph ([`ThreadPool::run_graph`]) so no global
+/// rendezvous exists anywhere in the pass. Two continuation shapes:
 ///
-/// Phase-1 pieces hand their panels to the continuation through
-/// per-(plane, direction, segment) slots; the graph's dependency edges
-/// are what order the accesses, so the slot locks are uncontended.
+/// * `per_dir = true` (production): **one drain continuation per
+///   (plane, direction)** — 4 per plane on a merged pass — running the
+///   fused-correction drain ([`drain_dir_pieces_fused`]). Direction k's
+///   drain depends on its *own* phase-1 pieces plus the same plane's
+///   direction-(k-1) drain (the chain preserves the k = 0..4 merge
+///   accumulation order on the shared output plane), so it overlaps
+///   both other planes' phase 1 and the same plane's later directions'
+///   scans.
+/// * `per_dir = false`: the PR 4 schedule — one continuation per plane
+///   over all directions, running the two-pass correct-then-drain
+///   ([`correct_and_drain_pieces`]). Kept as the bit/bench reference
+///   for the fused drain.
+///
+/// Phase-1 pieces hand their panels to the continuations through
+/// per-(plane, direction, segment) slots, and the per-direction drains
+/// share their output plane through a per-plane slot; the graph's
+/// dependency edges are what order the accesses, so the locks are
+/// uncontended (and recovered if poisoned — a panicking job must
+/// surface as the collected graph payload, not a `PoisonError`).
 /// Arithmetic is untouched — output is exact `==` with the barrier
 /// engine (and hence `scan_l2r_split`), pinned by tests.
 #[allow(clippy::too_many_arguments)]
@@ -1029,6 +1285,7 @@ fn run_engine_segmented_wave(
     out_shape: &[usize],
     pool: &ThreadPool,
     segments: usize,
+    per_dir: bool,
 ) -> Tensor {
     let c = out_shape[1];
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -1042,46 +1299,116 @@ fn run_engine_segmented_wave(
         (0..nplanes * per_plane_slots).map(|_| Mutex::new(Vec::new())).collect();
 
     let mut out = Tensor::zeros(out_shape);
-    let mut graph = GraphBuilder::new();
+    let conts = if per_dir { dirs.len() } else { 1 };
+    let mut graph = GraphBuilder::with_capacity(nplanes * (per_plane_slots + conts));
     let bounds_ref = &bounds;
     let slots_ref = &slots;
-    for (p, os) in out.data.chunks_mut(plane).enumerate() {
-        let mut piece_ids = Vec::with_capacity(per_plane_slots);
-        let mut slot = p * per_plane_slots;
-        for (k, _) in dirs.iter().enumerate() {
-            for &(lo, hi) in &bounds[k] {
-                let dst = &slots_ref[slot];
-                slot += 1;
+    // One phase-1 piece node per (plane, direction, segment), identical
+    // under both continuation shapes (the schedules cannot drift apart
+    // in what phase 1 computes).
+    macro_rules! submit_pieces {
+        ($ids:ident, $p:expr, $k:expr, $slot:ident) => {
+            for &(lo, hi) in &bounds_ref[$k] {
+                let dst = &slots_ref[$slot];
+                $slot += 1;
+                let (p, k) = ($p, $k);
                 let hc = dirs[k].taps.h;
-                piece_ids.push(graph.submit(move || {
+                $ids.push(graph.submit(move || {
+                    #[cfg(test)]
+                    test_hooks::maybe_panic(p, k, lo, hi);
                     let mut buf = vec![0.0f32; (hi - lo) * hc];
                     scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, &mut buf);
-                    *dst.lock().unwrap() = buf;
+                    *lock_unpoisoned(dst) = buf;
+                }));
+            }
+        };
+    }
+    if per_dir {
+        // Per-plane output + scratch hand-off slots: the per-direction
+        // drain chain of a plane shares its output plane and one drain
+        // scratch through a single slot, ordered by the drain-(k-1) →
+        // drain-k graph edges (one scratch allocation per plane, as in
+        // the barrier path).
+        let os_slots: Vec<Mutex<(&mut [f32], DrainScratch)>> = out
+            .data
+            .chunks_mut(plane)
+            .map(|os| Mutex::new((os, DrainScratch::new(hmax))))
+            .collect();
+        for (p, os_slot) in os_slots.iter().enumerate() {
+            let gv = gain.map(|g| g[p % c]);
+            let mut prev_drain: Option<NodeId> = None;
+            let mut slot = p * per_plane_slots;
+            for (k, _) in dirs.iter().enumerate() {
+                let mut deps = Vec::with_capacity(bounds[k].len() + 1);
+                let dir_slot0 = slot;
+                submit_pieces!(deps, p, k, slot);
+                if let Some(prev) = prev_drain {
+                    deps.push(prev);
+                }
+                let dir_slots = &slots_ref[dir_slot0..slot];
+                prev_drain = Some(graph.submit_after(&deps, move || {
+                    let mut guard = lock_unpoisoned(os_slot);
+                    let (os, scratch) = &mut *guard;
+                    drain_dir_pieces_fused(
+                        dirs, staged, bounds_ref, wts, gv, p, k, c, (h, w), dir_slots,
+                        os, scratch,
+                    );
                 }));
             }
         }
-        let plane_slots = &slots_ref[p * per_plane_slots..(p + 1) * per_plane_slots];
-        let gv = gain.map(|g| g[p % c]);
-        graph.submit_after(&piece_ids, move || {
-            correct_and_drain_pieces(
-                dirs,
-                staged,
-                bounds_ref,
-                wts,
-                gv,
-                p,
-                c,
-                (h, w),
-                hmax,
-                plane_slots,
-                os,
-            );
-        });
-    }
-    if let Err(e) = pool.run_graph(graph) {
-        std::panic::resume_unwind(e.into_payload());
+        if let Err(e) = pool.run_graph(graph) {
+            std::panic::resume_unwind(e.into_payload());
+        }
+    } else {
+        for (p, os) in out.data.chunks_mut(plane).enumerate() {
+            let mut piece_ids = Vec::with_capacity(per_plane_slots);
+            let mut slot = p * per_plane_slots;
+            for (k, _) in dirs.iter().enumerate() {
+                submit_pieces!(piece_ids, p, k, slot);
+            }
+            let plane_slots = &slots_ref[p * per_plane_slots..(p + 1) * per_plane_slots];
+            let gv = gain.map(|g| g[p % c]);
+            graph.submit_after(&piece_ids, move || {
+                correct_and_drain_pieces(
+                    dirs,
+                    staged,
+                    bounds_ref,
+                    wts,
+                    gv,
+                    p,
+                    c,
+                    (h, w),
+                    hmax,
+                    plane_slots,
+                    os,
+                );
+            });
+        }
+        if let Err(e) = pool.run_graph(graph) {
+            std::panic::resume_unwind(e.into_payload());
+        }
     }
     out
+}
+
+/// Test-only fault injection for the wavefront phase-1 pieces: lets the
+/// panic-propagation suite force exactly one (plane, dir, lo, hi) piece
+/// to panic and assert the payload surfaces as the collected graph
+/// error (not a `PoisonError` or a secondary index panic).
+#[cfg(test)]
+pub(crate) mod test_hooks {
+    use std::sync::Mutex;
+
+    pub(crate) static PANIC_PIECE: Mutex<Option<(usize, usize, usize, usize)>> =
+        Mutex::new(None);
+
+    pub(crate) fn maybe_panic(p: usize, k: usize, lo: usize, hi: usize) {
+        let hit = crate::util::lock_unpoisoned(&PANIC_PIECE)
+            .map_or(false, |t| t == (p, k, lo, hi));
+        if hit {
+            panic!("injected phase-1 panic at ({p},{k},{lo},{hi})");
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -1130,9 +1457,9 @@ fn fused_scan_dir_inner(
 }
 
 /// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
-/// wavefront flag. The pooled entry points normally consult the planner
-/// ([`plan::plan_scan`]); this hook exists for tests, benches, and
-/// plan-carrying callers that already decided.
+/// phase-2 schedule. The pooled entry points normally consult the
+/// planner ([`plan::plan_scan`]); this hook exists for tests, benches,
+/// and plan-carrying callers that already decided.
 #[allow(clippy::too_many_arguments)]
 fn fused_scan_dir_forced(
     x: &Tensor,
@@ -1141,7 +1468,7 @@ fn fused_scan_dir_forced(
     d: Direction,
     kchunk: usize,
     strategy: ScanStrategy,
-    wavefront: bool,
+    phase2: Phase2,
     pool: &ThreadPool,
 ) -> Tensor {
     validate_dir(x, taps, lam, d);
@@ -1150,7 +1477,7 @@ fn fused_scan_dir_forced(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, wavefront))
+    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, phase2))
 }
 
 /// [`fused_scan_dir_pool`] with a *forced* segment-parallel
@@ -1170,14 +1497,15 @@ pub fn fused_scan_dir_seg(
     pool: &ThreadPool,
 ) -> Tensor {
     let strategy = ScanStrategy::Segmented { s: segments };
-    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, false, pool)
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::Barrier, pool)
 }
 
-/// [`fused_scan_dir_seg`] under wavefront scheduling: each plane's
-/// carry correction + epilogue drain runs as a continuation of that
-/// plane's phase-1 segment jobs instead of behind a global barrier.
-/// Scheduling only — exact `==` with [`fused_scan_dir_seg`] (and the
-/// `scan_l2r_split` reference) at the same count, pinned by tests.
+/// [`fused_scan_dir_seg`] under per-direction wavefront scheduling:
+/// each (plane, direction)'s fused correction + epilogue drain runs as
+/// its own continuation of that direction's phase-1 segment jobs
+/// instead of behind a global barrier. Scheduling only — exact `==`
+/// with [`fused_scan_dir_seg`] (and the `scan_l2r_split` reference) at
+/// the same count, pinned by tests.
 pub fn fused_scan_dir_seg_wave(
     x: &Tensor,
     taps: &Taps,
@@ -1188,7 +1516,25 @@ pub fn fused_scan_dir_seg_wave(
     pool: &ThreadPool,
 ) -> Tensor {
     let strategy = ScanStrategy::Segmented { s: segments };
-    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, true, pool)
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WaveDir, pool)
+}
+
+/// [`fused_scan_dir_seg_wave`] under the retired PR 4 schedule: one
+/// continuation per plane running the *two-pass* correct-then-drain
+/// (the retained panel is corrected in place, then re-read by the
+/// drain). Exact `==` with both other schedules — kept as the bit and
+/// bench reference the fused-correction drain is measured against.
+pub fn fused_scan_dir_seg_wave_twopass(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WavePlane, pool)
 }
 
 /// [`fused_scan_dir_seg`] for the canonical left-to-right scan: the
@@ -1216,6 +1562,19 @@ pub fn fused_scan_l2r_seg_wave(
     pool: &ThreadPool,
 ) -> Tensor {
     fused_scan_dir_seg_wave(x, taps, lam, Direction::L2R, kchunk, segments, pool)
+}
+
+/// [`fused_scan_l2r_seg_wave`] under the PR 4 two-pass schedule (see
+/// [`fused_scan_dir_seg_wave_twopass`]).
+pub fn fused_scan_l2r_seg_wave_twopass(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_seg_wave_twopass(x, taps, lam, Direction::L2R, kchunk, segments, pool)
 }
 
 /// Fused canonical scan (serial): bit-identical to `scan_l2r`.
@@ -1291,8 +1650,8 @@ pub fn fused_merged_4dir_pool(
     run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), ExecSpec::Auto)
 }
 
-/// [`fused_merged_4dir_pool`] under an explicit strategy + wavefront
-/// flag (the forced hook behind the seg / fan variants below).
+/// [`fused_merged_4dir_pool`] under an explicit strategy + phase-2
+/// schedule (the forced hook behind the seg / fan variants below).
 #[allow(clippy::too_many_arguments)]
 fn fused_merged_4dir_forced(
     x: &Tensor,
@@ -1301,7 +1660,7 @@ fn fused_merged_4dir_forced(
     merge_logits: &[f32; 4],
     kchunk: usize,
     strategy: ScanStrategy,
-    wavefront: bool,
+    phase2: Phase2,
     pool: &ThreadPool,
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
@@ -1312,7 +1671,7 @@ fn fused_merged_4dir_forced(
         None,
         &x.shape,
         Some(pool),
-        ExecSpec::Forced(strategy, wavefront),
+        ExecSpec::Forced(strategy, phase2),
     )
 }
 
@@ -1332,12 +1691,15 @@ pub fn fused_merged_4dir_seg(
     pool: &ThreadPool,
 ) -> Tensor {
     let strategy = ScanStrategy::Segmented { s: segments };
-    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, false, pool)
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::Barrier, pool)
 }
 
-/// [`fused_merged_4dir_seg`] under wavefront scheduling: per-plane
-/// correction + merge drain as continuations of that plane's phase-1
-/// jobs. Exact `==` with the barrier twin, pinned by tests.
+/// [`fused_merged_4dir_seg`] under per-direction wavefront scheduling:
+/// 4 drain continuations per plane, each depending on its own
+/// direction's phase-1 jobs plus the previous direction's drain (the
+/// chain preserves the k = 0..4 merge order), with the correction fused
+/// into the merge drain. Exact `==` with the barrier twin, pinned by
+/// tests.
 pub fn fused_merged_4dir_seg_wave(
     x: &Tensor,
     taps: [&Taps; 4],
@@ -1348,7 +1710,24 @@ pub fn fused_merged_4dir_seg_wave(
     pool: &ThreadPool,
 ) -> Tensor {
     let strategy = ScanStrategy::Segmented { s: segments };
-    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, true, pool)
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WaveDir, pool)
+}
+
+/// [`fused_merged_4dir_seg_wave`] under the retired PR 4 schedule: one
+/// two-pass correct-then-drain continuation per plane (see
+/// [`fused_scan_dir_seg_wave_twopass`]). Exact `==` with both other
+/// schedules; the bench comparison row for the fused-correction drain.
+pub fn fused_merged_4dir_seg_wave_twopass(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WavePlane, pool)
 }
 
 /// [`fused_merged_4dir_pool`] with the *forced* per-direction phase-1
@@ -1356,8 +1735,10 @@ pub fn fused_merged_4dir_seg_wave(
 /// job per (plane, direction), drained through the fixed-k-order merge
 /// epilogue per plane — bit-identical (exact `==`, pinned by tests) to
 /// [`fused_merged_4dir`] and the serial reference, ×4 the parallel
-/// width. `wavefront` runs each plane's drain as a continuation of its
-/// four scans; `false` uses the two-phase barrier schedule.
+/// width. `wavefront` runs each (plane, direction)'s drain as its own
+/// continuation of that direction's scan, chained to keep the merge
+/// order — direction k's drain overlaps direction k+1's scan; `false`
+/// uses the two-phase barrier schedule.
 pub fn fused_merged_4dir_fan(
     x: &Tensor,
     taps: [&Taps; 4],
@@ -1367,6 +1748,7 @@ pub fn fused_merged_4dir_fan(
     wavefront: bool,
     pool: &ThreadPool,
 ) -> Tensor {
+    let phase2 = if wavefront { Phase2::WaveDir } else { Phase2::Barrier };
     fused_merged_4dir_forced(
         x,
         taps,
@@ -1374,7 +1756,7 @@ pub fn fused_merged_4dir_fan(
         merge_logits,
         kchunk,
         ScanStrategy::DirFan,
-        wavefront,
+        phase2,
         pool,
     )
 }
@@ -1401,8 +1783,9 @@ pub fn fused_merged_4dir_par(
 /// the planner ([`plan::plan_scan`]) picks a bit-exact strategy —
 /// `PlanePar` or, in the mid-occupancy regime, `DirFan` (the
 /// per-direction fan reassociates nothing). Only a low-occupancy
-/// forward wide enough to segment (canonical widths ≥ 256) follows the
-/// `scan_l2r_split` segmented arithmetic instead.
+/// forward wide enough to segment (canonical widths ≥ 2 ·
+/// [`plan::MIN_SEG_COLS`] = 128) follows the `scan_l2r_split`
+/// segmented arithmetic instead.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_merged_canonical(
     xcs: [&Tensor; 4],
@@ -1824,7 +2207,27 @@ mod tests {
         let taps = mk_taps(&mut rng, n, 1, h, w);
         let s = plan::auto_segments(n * c, w, pool.threads())
             .expect("low occupancy must segment");
-        assert_eq!(s, 2);
+        assert_eq!(s, 4);
+        let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+        let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
+        assert_eq!(reference.data, viapool.data);
+    }
+
+    /// The single-direction serving band the fused-correction drain
+    /// opened (128 <= wc < 256, previously fenced onto the plane path):
+    /// the planner now segments it, and the pooled entry point produces
+    /// exactly the scan_l2r_split bits at the planned count.
+    #[test]
+    fn auto_midwidth_band_segments_and_matches_split() {
+        let pool = crate::util::ThreadPool::new(4);
+        let mut rng = Rng::new(57);
+        let (n, c, h, w) = (1, 1, 8, 192);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let s = plan::auto_segments(n * c, w, pool.threads())
+            .expect("the 128..256 band must segment now");
+        assert_eq!(s, 3);
         let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
         let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
         assert_eq!(reference.data, viapool.data);
@@ -1875,12 +2278,14 @@ mod tests {
     // Wavefront scheduling + the direction fan
     // -----------------------------------------------------------------
 
-    /// The tentpole pinning property for wavefront scheduling: the
-    /// dependency-graph schedule changes *when* jobs run, never what
-    /// they compute — exact `==` with the barrier engine and the
-    /// `scan_l2r_split` reference across segment counts, chunk resets,
-    /// pool widths (including the 1-thread all-helping case), and
-    /// slab-boundary widths.
+    /// The tentpole pinning property for wavefront scheduling and the
+    /// fused-correction drain: neither the dependency-graph schedule nor
+    /// fusing the correction into the drain changes what is computed —
+    /// exact `==` across the full schedule matrix (barrier,
+    /// per-direction wavefront, PR 4 two-pass single-continuation) with
+    /// the `scan_l2r_split` reference, across segment counts, chunk
+    /// resets, pool widths (including the 1-thread all-helping case),
+    /// and slab-boundary widths.
     #[test]
     fn wavefront_exact_eq_barrier_and_split() {
         let pool1 = crate::util::ThreadPool::new(1);
@@ -1901,6 +2306,8 @@ mod tests {
                 let barrier = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
                 let wave1 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool1);
                 let wave3 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool3);
+                let twopass =
+                    fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, segments, &pool3);
                 assert_eq!(
                     reference.data, barrier.data,
                     "barrier n{n} c{c} {h}x{w} S{segments}"
@@ -1912,6 +2319,10 @@ mod tests {
                 assert_eq!(
                     reference.data, wave3.data,
                     "wave 3-thread n{n} c{c} {h}x{w} S{segments}"
+                );
+                assert_eq!(
+                    reference.data, twopass.data,
+                    "PR4 two-pass n{n} c{c} {h}x{w} S{segments}"
                 );
             }
         }
@@ -1930,7 +2341,10 @@ mod tests {
         for (kchunk, segments) in [(32usize, 5usize), (8, 4), (96, 3)] {
             let barrier = fused_scan_l2r_seg(&x, &taps, &lam, kchunk, segments, &pool);
             let wave = fused_scan_l2r_seg_wave(&x, &taps, &lam, kchunk, segments, &pool);
+            let twopass =
+                fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, kchunk, segments, &pool);
             assert_eq!(barrier.data, wave.data, "k{kchunk} S{segments}");
+            assert_eq!(barrier.data, twopass.data, "two-pass k{kchunk} S{segments}");
         }
     }
 
@@ -1954,8 +2368,11 @@ mod tests {
             let barrier = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
             let wave1 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool1);
             let wave3 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool3);
+            let twopass =
+                fused_merged_4dir_seg_wave_twopass(&x, taps, &lam, &logits, 0, segments, &pool3);
             assert_eq!(barrier.data, wave1.data, "S{segments}");
             assert_eq!(barrier.data, wave3.data, "S{segments}");
+            assert_eq!(barrier.data, twopass.data, "two-pass S{segments}");
         }
     }
 
@@ -1979,7 +2396,10 @@ mod tests {
                 let want =
                     from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
                 let got = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
+                let twopass =
+                    fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, 0, segments, &pool);
                 assert_eq!(want.data, got.data, "{d:?} S{segments}");
+                assert_eq!(want.data, twopass.data, "two-pass {d:?} S{segments}");
             }
         }
     }
@@ -2060,5 +2480,102 @@ mod tests {
         let via_auto = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
         let direct = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool);
         assert_eq!(via_auto.data, direct.data);
+    }
+
+    // -----------------------------------------------------------------
+    // The fused-correction drain
+    // -----------------------------------------------------------------
+
+    /// The fused-correction drain property: exact `==` against the
+    /// `scan_l2r_split` reference across random shapes (including H=1,
+    /// W=1, and slab-crossing widths), all 4 directions, segment
+    /// counts, and the full schedule matrix — per-direction wavefront,
+    /// barrier, and the PR 4 two-pass single-continuation. Plus, under
+    /// random kchunk divisors (split has no chunk form), all three
+    /// schedules stay bit-identical to each other.
+    #[test]
+    fn fused_correction_drain_schedule_matrix_property() {
+        use crate::scan::direction::{from_canonical, to_canonical};
+        let pool = crate::util::ThreadPool::new(3);
+        check("fused drain == split across schedules", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 2);
+            let h = g.int_in(1, 9);
+            let w = g.int_in(1, 2 * SLAB + 8);
+            let segments = g.int_in(1, 5);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            for d in DIRECTIONS {
+                let (hc, wc) = hw_src(h, w, d);
+                let taps = mk_taps(&mut rng, n, 1, hc, wc);
+                let xc = to_canonical(&x, d);
+                let lamc = to_canonical(&lam, d);
+                let want =
+                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+                let barrier = fused_scan_dir_seg(&x, &taps, &lam, d, 0, segments, &pool);
+                let wave = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
+                let twopass =
+                    fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, 0, segments, &pool);
+                let tag = format!("n{n} c{c} {h}x{w} {d:?} S{segments}");
+                ensure(want.data == barrier.data, format!("barrier != split: {tag}"))?;
+                ensure(want.data == wave.data, format!("wave != split: {tag}"))?;
+                ensure(want.data == twopass.data, format!("two-pass != split: {tag}"))?;
+                // Chunk resets inside segments: the three schedules must
+                // agree bit-for-bit (the chunked split reference is the
+                // barrier engine itself).
+                let kchunk = *g.pick(&divisors(wc));
+                let cb = fused_scan_dir_seg(&x, &taps, &lam, d, kchunk, segments, &pool);
+                let cw_ = fused_scan_dir_seg_wave(&x, &taps, &lam, d, kchunk, segments, &pool);
+                let ct =
+                    fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, kchunk, segments, &pool);
+                ensure(cb.data == cw_.data, format!("chunked wave != barrier: {tag} k{kchunk}"))?;
+                ensure(cb.data == ct.data, format!("chunked two-pass != barrier: {tag} k{kchunk}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite regression: a panicking phase-1 job in the wavefront
+    /// path must surface as the original panic payload (collected
+    /// MapError-style through `run_graph`), not as a `PoisonError` or a
+    /// secondary index panic from a dependent drain reading a missing
+    /// piece — and the engine/pool must stay healthy afterwards.
+    #[test]
+    fn wavefront_phase1_panic_propagates_original_payload() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let pool = crate::util::ThreadPool::new(2);
+        let mut rng = Rng::new(70);
+        let (n, c, h, w) = (1, 2, 5, 160);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        // w=160, S=2 -> bounds (0,80),(80,160). Inject into the second
+        // piece of plane 0 — a (plane, dir, lo, hi) tuple no other
+        // test's geometry produces (every other suite's segment ends
+        // are < 80 or land elsewhere), so concurrently running tests
+        // never trip the hook.
+        for schedule in ["wave-dir", "two-pass"] {
+            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some((0, 0, 80, 160));
+            let caught = catch_unwind(AssertUnwindSafe(|| match schedule {
+                "wave-dir" => fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool),
+                _ => fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, 2, &pool),
+            }));
+            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
+            let payload = match caught {
+                Ok(_) => panic!("{schedule}: wavefront must rethrow the phase-1 panic"),
+                Err(p) => p,
+            };
+            let msg = crate::util::panic_message(&*payload);
+            assert!(
+                msg.contains("injected phase-1 panic"),
+                "{schedule}: expected the injected payload, got {msg:?}"
+            );
+        }
+        // Poisoned hand-off slots are recovered; the next run is clean
+        // and exact.
+        let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
+        let after = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool);
+        assert_eq!(reference.data, after.data);
     }
 }

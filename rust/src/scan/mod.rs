@@ -27,11 +27,14 @@
 //! pass decomposes is decided by the execution planner
 //! ([`plan::plan_scan`]): plane-parallel and the per-direction fan
 //! (`DirFan`) are bit-identical to `scan_l2r`; a low-occupancy pass with
-//! ≥ 256 canonical columns segments, and its output is bit-identical to
+//! ≥ 128 canonical columns segments, and its output is bit-identical to
 //! [`split::scan_l2r_split`] at the planned count instead ([`split`] is
 //! kept as that reference). Segmented/fanned passes run wavefront by
-//! default: each plane's dependent stage is a pool continuation of its
-//! own phase-1 jobs, not a global barrier.
+//! default: each (plane, direction)'s fused correction + drain is its
+//! own pool continuation of that direction's phase-1 jobs (chained to
+//! preserve the merge order), not a global barrier — and the carry
+//! correction is computed inside the scatter drain, so the retained
+//! phase-1 panel is read once and never re-written.
 
 pub mod compact;
 pub mod core;
@@ -53,9 +56,10 @@ pub use direction::{
 };
 pub use fused::{
     fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_par, fused_merged_4dir_pool,
-    fused_merged_4dir_seg, fused_merged_4dir_seg_wave, fused_scan_dir, fused_scan_dir_pool,
-    fused_scan_dir_seg, fused_scan_dir_seg_wave, fused_scan_l2r, fused_scan_l2r_par,
-    fused_scan_l2r_pool, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
+    fused_merged_4dir_seg, fused_merged_4dir_seg_wave, fused_merged_4dir_seg_wave_twopass,
+    fused_scan_dir, fused_scan_dir_pool, fused_scan_dir_seg, fused_scan_dir_seg_wave,
+    fused_scan_dir_seg_wave_twopass, fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool,
+    fused_scan_l2r_seg, fused_scan_l2r_seg_wave, fused_scan_l2r_seg_wave_twopass,
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use plan::{

@@ -31,11 +31,13 @@
 //!   segment.
 //!
 //! The `wavefront` flag asks the engine to run each plane's dependent
-//! stage (carry correction + epilogue drain) as a *continuation* of that
-//! plane's phase-1 jobs on the pool's task-graph API
-//! ([`crate::util::ThreadPool::run_graph`]) instead of behind a global
-//! barrier, so one plane's serial phase 2 hides behind other planes'
-//! phase 1 (LASP-2-style compute/dependency overlap).
+//! stage (the fused correction + epilogue drain) as *per-direction
+//! continuations* of that plane's phase-1 jobs on the pool's task-graph
+//! API ([`crate::util::ThreadPool::run_graph`]) instead of behind a
+//! global barrier: direction k's drain starts the moment direction k's
+//! own pieces finish (chained after drain k-1 to keep the merge order),
+//! so it overlaps both other planes' phase 1 and the same plane's later
+//! directions (LASP-2-style compute/dependency overlap).
 //!
 //! ## Decision rule (the planner, in order)
 //!
@@ -68,15 +70,23 @@
 //!
 //! Flop units per pixel per direction: [`SCAN_FLOPS_PER_PX`] = 7 for the
 //! scan itself (`up + ct + dn + lam·x`: 5 mul + 3 add, counted as the
-//! reference's 7-op inner body), [`CORR_FLOPS_PER_PX`] = 3 for the
-//! correction (`up + ct + dn`). `work` is the total; `span` estimates
-//! the critical path given the pool width: phase 1 divides by the
-//! strategy's fan width, phase 2 by the plane count, and wavefront mode
-//! divides the phase-2 term by the plane count again (each plane's
-//! correction hides behind the other planes' phase 1; only the last
-//! plane's tail is exposed). Measured anchor: ~27% single-thread
-//! correction overhead at s = 8 on a 512² plane (ROADMAP, C-mirror),
-//! which is 3/7 · 7/8 of the scan work — the model above.
+//! reference's 7-op inner body). The correction used to be a separate
+//! 3-flop/px in-place pass ([`CORR_FLOPS_PER_PX`], kept as the two-pass
+//! reference anchor: ~27% single-thread overhead at s = 8 on a 512²
+//! plane, which is 3/7 · 7/8 of the scan work); with the correction
+//! *fused into the scatter drain* the retained panel is read once and
+//! written zero extra times, the recurrence runs on L1-hot columns the
+//! epilogue was touching anyway, and the effective cost collapses to
+//! [`FUSED_CORR_FLOPS_PER_PX`] ≈ 1 flop/px over the corrected
+//! (s-1)/s of the columns — the memory-traffic elimination of the
+//! paper's §5 kernel redesign, FlashAttention-2-style. `work` is the
+//! total; `span` estimates the critical path given the pool width:
+//! phase 1 divides by the strategy's fan width, the correction term by
+//! the plane count, and wavefront mode divides that term by the
+//! per-plane continuation count (`nplanes · ndirs` — drains are
+//! per-direction continuations, so direction k's drain hides behind
+//! both other planes' phase 1 and the same plane's later directions;
+//! only the last drain's tail is exposed).
 //!
 //! Consumers beyond the engine: the serving coordinator sizes eager
 //! batch releases off the plan ([`eager_release_min`]) instead of the
@@ -87,26 +97,43 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Minimum canonical columns per segment. Below this the per-segment
-/// carry-correction and job dispatch dominate any occupancy gain. It is
-/// also the compatibility fence: every geometry the unit/e2e suites pin
-/// bit-identical is narrower than `2 * MIN_SEG_COLS`, so the planner can
-/// never move them off the bit-exact plane-parallel path regardless of
-/// how wide the host pool is.
-pub const MIN_SEG_COLS: usize = 128;
+/// job dispatch dominates any occupancy gain. Lowered from 128 to 64
+/// when the carry correction was fused into the scatter drain (the
+/// correction no longer re-touches the retained panel, so the overhead
+/// a segment must amortize shrank) — this opens the previously
+/// plane-parallel-only single-direction serving band of 128–255
+/// canonical columns to segmentation. It is also the compatibility
+/// fence: every geometry the unit/e2e suites pin bit-identical is
+/// narrower than `2 * MIN_SEG_COLS` (all are ≤ 64 columns), so the
+/// planner can never move them off the bit-exact plane-parallel path
+/// regardless of how wide the host pool is.
+pub const MIN_SEG_COLS: usize = 64;
 
 /// Minimum canonical columns for the direction fan-out: below this a
 /// per-(plane, direction) job is too small to amortize the retained
-/// panel and the drain continuation. Small enough that the mid-occupancy
-/// band (64 ≤ wc < 256, where segmentation is fenced off) is covered.
+/// panel and the drain continuation. Covers the 64 ≤ wc < 128 band
+/// where segmentation is still fenced off (since the fused-correction
+/// drain lowered [`MIN_SEG_COLS`] to 64, geometries with ≥ 128 columns
+/// can segment instead when the fan alone can't fill the pool).
 pub const MIN_DIRFAN_COLS: usize = 64;
 
 /// Scan-recurrence flops per pixel per direction (the `up + ct + dn +
 /// lam·x` inner body).
 pub const SCAN_FLOPS_PER_PX: f64 = 7.0;
 
-/// Carry-correction flops per pixel (the `up + ct + dn` body of the
-/// linear correction scan).
+/// Carry-correction flops per pixel of the retired *two-pass* phase 2
+/// (the `up + ct + dn` body run as a separate in-place panel pass).
+/// Kept as the reference anchor the fused model below is measured
+/// against; the production span formula uses
+/// [`FUSED_CORR_FLOPS_PER_PX`].
 pub const CORR_FLOPS_PER_PX: f64 = 3.0;
+
+/// Effective carry-correction cost per pixel with the correction fused
+/// into the scatter drain: the panel element is already in registers
+/// for the epilogue, the correction recurrence runs on L1-hot columns,
+/// and the only extra full-width op is the `phase1 + corr` add — ~1
+/// flop/px over the corrected (s-1)/s of the columns.
+pub const FUSED_CORR_FLOPS_PER_PX: f64 = 1.0;
 
 /// How a scan pass decomposes its work across the pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -228,10 +255,14 @@ pub fn plan_cost(
         ScanStrategy::Segmented { s } => {
             let s = s.max(1);
             let width = planes * geom.ndirs.max(1) * s;
-            let corr = px * CORR_FLOPS_PER_PX * (s as f64 - 1.0) / s as f64;
+            let corr = px * FUSED_CORR_FLOPS_PER_PX * (s as f64 - 1.0) / s as f64;
             let p1 = base / threads.min(width as f64);
             let p2 = corr / threads.min(planes as f64);
-            let span = if wavefront { p1 + p2 / planes as f64 } else { p1 + p2 };
+            // Wavefront: drains are per-direction continuations, so the
+            // correction tail hides behind nplanes * ndirs other
+            // in-flight stages instead of running after a barrier.
+            let conts = (planes * geom.ndirs.max(1)) as f64;
+            let span = if wavefront { p1 + p2 / conts } else { p1 + p2 };
             PlanCost { work_flops: base + corr, span_flops: span, width }
         }
     }
@@ -464,15 +495,19 @@ mod tests {
         // Saturated pool, narrow planes, or no pool: stay plane-parallel.
         assert_eq!(auto_segments(8, 512, 8), None);
         assert_eq!(auto_segments(16, 1024, 8), None);
-        assert_eq!(auto_segments(1, 255, 8), None);
+        assert_eq!(auto_segments(1, 127, 8), None);
         assert_eq!(auto_segments(4, 512, 1), None);
         assert_eq!(auto_segments(0, 512, 8), None);
         // Low occupancy + wide planes: segment, bounded by width so no
         // segment drops below MIN_SEG_COLS columns.
-        assert_eq!(auto_segments(1, 1024, 8), Some(8));
+        assert_eq!(auto_segments(1, 1024, 8), Some(16));
         assert_eq!(auto_segments(4, 512, 8), Some(4));
-        assert_eq!(auto_segments(1, 512, 8), Some(4));
+        assert_eq!(auto_segments(1, 512, 8), Some(8));
         assert_eq!(auto_segments(2, 4096, 16), Some(16));
+        // The band the fused-correction drain opened (128 <= wc < 256):
+        // previously fenced onto the plane path, now width-capped counts.
+        assert_eq!(auto_segments(1, 255, 8), Some(3));
+        assert_eq!(auto_segments(1, 128, 8), Some(2));
     }
 
     /// The planner decision table: geometry × threads × load → strategy.
@@ -487,11 +522,17 @@ mod tests {
         // count.
         assert_eq!(
             strat(&ScanGeometry::single_dir(1, 8, 512), 0, 8),
-            ScanStrategy::Segmented { s: 4 }
+            ScanStrategy::Segmented { s: 8 }
         );
         assert_eq!(
             strat(&ScanGeometry::single_dir(4, 512, 512), 0, 8),
             ScanStrategy::Segmented { s: 4 }
+        );
+        // The single-direction serving band the fused-correction drain
+        // opened (128 <= wc < 256; previously plane-parallel-only).
+        assert_eq!(
+            strat(&ScanGeometry::single_dir(1, 8, 192), 0, 8),
+            ScanStrategy::Segmented { s: 3 }
         );
         // Mid-occupancy multi-direction: the fan covers the pool with
         // bit-exact jobs — DirFan, even where segmentation was possible.
@@ -501,10 +542,14 @@ mod tests {
         // valid.
         assert_eq!(
             strat(&ScanGeometry::merged_4dir(1, 512, 512), 0, 16),
-            ScanStrategy::Segmented { s: 4 }
+            ScanStrategy::Segmented { s: 8 }
+        );
+        assert_eq!(
+            strat(&ScanGeometry::merged_4dir(1, 128, 128), 0, 8),
+            ScanStrategy::Segmented { s: 2 }
         );
         // Too narrow to segment, multi-direction: fan anyway.
-        assert_eq!(strat(&ScanGeometry::merged_4dir(1, 128, 128), 0, 8), ScanStrategy::DirFan);
+        assert_eq!(strat(&ScanGeometry::merged_4dir(1, 64, 64), 0, 8), ScanStrategy::DirFan);
         // Too narrow for either: plane.
         assert_eq!(strat(&ScanGeometry::merged_4dir(2, 32, 32), 0, 8), ScanStrategy::PlanePar);
         assert_eq!(strat(&ScanGeometry::single_dir(2, 64, 64), 0, 8), ScanStrategy::PlanePar);
@@ -578,7 +623,7 @@ mod tests {
         // the low-occupancy regime), fenced off below the width floor.
         assert_eq!(
             plan_scan_with(&wide1, 0, 8, PlanOverride::Segment).strategy,
-            ScanStrategy::Segmented { s: 4 }
+            ScanStrategy::Segmented { s: 8 }
         );
         assert_eq!(
             plan_scan_with(&ScanGeometry::single_dir(8, 8, 512), 0, 8, PlanOverride::Segment)
@@ -602,7 +647,7 @@ mod tests {
         );
         assert_eq!(
             plan_scan_with(&wide1, 0, 8, PlanOverride::DirFan).strategy,
-            ScanStrategy::Segmented { s: 4 }
+            ScanStrategy::Segmented { s: 8 }
         );
     }
 

@@ -34,8 +34,11 @@
 //! [`super::fused`], whose execution planner
 //! ([`super::plan::plan_scan`]) applies exactly this two-phase
 //! decomposition (pinned `==` against [`scan_l2r_split`] by the fused
-//! engine's tests, barrier and wavefront schedules alike) with the
-//! pack/scan/scatter stages fused. The
+//! engine's tests — barrier, per-direction wavefront, and the retained
+//! PR 4 two-pass schedule alike) with the pack/scan/scatter stages
+//! fused and, since the fused-correction drain, [`phase2_plane`]'s
+//! correction computed inside the scatter epilogue rather than as this
+//! module's separate in-place pass (same adds, same order, same bits). The
 //! implementation here stays deliberately unfused and simple;
 //! `threads > 1` still submits its (segment × plane) and (plane) task
 //! groups to the process-wide shared [`ThreadPool`] rather than

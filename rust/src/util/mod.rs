@@ -16,3 +16,31 @@ pub mod toml;
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::{GraphBuilder, MapError, NodeId, ThreadPool};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// `Mutex::lock().unwrap()` turns one panicking job into a cascade: the
+/// first panic poisons the lock, and every later accessor dies with a
+/// `PoisonError` that buries the original payload (a serving worker's
+/// metrics mutex, or a scan graph's hand-off slot). Everything in this
+/// crate that locks shared state across panic boundaries — pool
+/// hand-off slots, coordinator metrics/queues — wants the data anyway:
+/// the guarded values are plain counters/buffers whose invariants do
+/// not span the panic, so recovering the guard is always safe here.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Best-effort text of a panic payload (`String` or `&'static str`
+/// panics; anything else gets a placeholder). The one payload-to-text
+/// policy shared by [`MapError::message`] and the serving worker's
+/// caught-panic responses, so the two can't drift.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

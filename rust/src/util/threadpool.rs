@@ -180,6 +180,13 @@ impl<'env> GraphBuilder<'env> {
         GraphBuilder { nodes: Vec::new() }
     }
 
+    /// [`GraphBuilder::new`] with room for `n` nodes — callers like the
+    /// wavefront scan engine know their node count (pieces +
+    /// per-direction continuations per plane) up front.
+    pub fn with_capacity(n: usize) -> GraphBuilder<'env> {
+        GraphBuilder { nodes: Vec::with_capacity(n) }
+    }
+
     /// Add a root node (no prerequisites); runnable immediately.
     pub fn submit<F: FnOnce() + Send + 'env>(&mut self, job: F) -> NodeId {
         self.submit_after(&[], job)
@@ -227,13 +234,7 @@ pub struct MapError {
 impl MapError {
     /// Best-effort text of the first panic payload.
     pub fn message(&self) -> String {
-        if let Some(s) = self.payload.downcast_ref::<&'static str>() {
-            (*s).to_string()
-        } else if let Some(s) = self.payload.downcast_ref::<String>() {
-            s.clone()
-        } else {
-            "non-string panic payload".to_string()
-        }
+        super::panic_message(&*self.payload)
     }
 
     /// The first panic payload, e.g. for `std::panic::resume_unwind`.
@@ -981,6 +982,63 @@ mod tests {
         pool.wait_idle();
         // Stale graph tickets left in the queue are no-ops.
         assert_eq!(pool.map(vec![4u32], |x| x * 2), vec![8]);
+    }
+
+    /// The per-direction wavefront shape (the fused scan engine's
+    /// production graph): per "plane", K chained drain continuations,
+    /// each depending on its own fan of piece nodes plus the previous
+    /// drain. Asserts the ordering contract the engine relies on —
+    /// drain k sees all of its own pieces and every earlier drain of
+    /// its plane — across planes running concurrently.
+    #[test]
+    fn graph_per_direction_continuation_chains() {
+        let pool = ThreadPool::new(4);
+        const PLANES: usize = 3;
+        const DIRS: usize = 4;
+        const PIECES: usize = 2;
+        let pieces_done = Arc::new(AtomicU64::new(0)); // bit per (p, k, s)
+        let drain_order: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let ok = Arc::new(AtomicU64::new(0));
+        let mut g = GraphBuilder::with_capacity(PLANES * DIRS * (PIECES + 1));
+        for p in 0..PLANES {
+            let mut prev: Option<NodeId> = None;
+            for k in 0..DIRS {
+                let mut deps = Vec::with_capacity(PIECES + 1);
+                for s in 0..PIECES {
+                    let done = Arc::clone(&pieces_done);
+                    deps.push(g.submit(move || {
+                        done.fetch_or(1 << (p * DIRS * PIECES + k * PIECES + s), Ordering::SeqCst);
+                    }));
+                }
+                if let Some(prev) = prev {
+                    deps.push(prev);
+                }
+                let (done, order, okc) = (
+                    Arc::clone(&pieces_done),
+                    Arc::clone(&drain_order),
+                    Arc::clone(&ok),
+                );
+                prev = Some(g.submit_after(&deps, move || {
+                    // Own pieces (and, transitively, all earlier
+                    // directions' pieces of this plane) must be done.
+                    let want: u64 = ((1 << ((k + 1) * PIECES)) - 1) << (p * DIRS * PIECES);
+                    let have = done.load(Ordering::SeqCst);
+                    if have & want == want {
+                        okc.fetch_add(1, Ordering::SeqCst);
+                    }
+                    order.lock().unwrap().push((p, k));
+                }));
+            }
+        }
+        pool.run_graph(g).unwrap();
+        assert_eq!(ok.load(Ordering::SeqCst), (PLANES * DIRS) as u64);
+        // Within each plane the drains ran in direction order.
+        let order = drain_order.lock().unwrap();
+        for p in 0..PLANES {
+            let ks: Vec<usize> =
+                order.iter().filter(|&&(pp, _)| pp == p).map(|&(_, k)| k).collect();
+            assert_eq!(ks, vec![0, 1, 2, 3], "plane {p} drains out of order");
+        }
     }
 
     #[test]

@@ -8,8 +8,10 @@ cargo build --release
 cargo test -q
 # Non-default scan execution plans: re-run the scan suite with the
 # planner forced to each alternate strategy (the GSPN2_SCAN_PLAN env
-# override behind the `scan.plan` config knob), so the segmented and
-# direction-fan paths are exercised as the *default* decision on every
-# push, not only where their dedicated tests force them.
+# override behind the `scan.plan` config knob). `segment` forces the
+# segmented strategy *with the per-direction wavefront schedule and the
+# fused-correction drain* — the production phase-2 path — as the
+# default decision on every geometry wide enough to segment, so that
+# path (not just its dedicated tests) carries the whole scan suite.
 GSPN2_SCAN_PLAN=segment cargo test -q scan
 GSPN2_SCAN_PLAN=dirfan cargo test -q scan
