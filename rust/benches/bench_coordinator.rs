@@ -2,13 +2,21 @@
 //! metrics hot path, trace generation, and — when artifacts exist — the
 //! PJRT execute path raw vs through the full serving stack (the
 //! "coordinator overhead" number EXPERIMENTS.md §Perf tracks).
+//!
+//! Always emits `bench_out/BENCH_serve.json` first: trace-driven
+//! steady and bursty serving rows (p50/p99/p999/max, throughput,
+//! workspace pool hit rate) against the cpu-fused backend — no
+//! artifacts required. `GSPN2_BENCH_SMOKE=1` runs only that suite with
+//! a short trace, the CI mode that keeps BENCH_serve.json accumulating
+//! next to BENCH_scan.json on every push.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use gspn2::config::ServeConfig;
 use gspn2::coordinator::{
-    BatchPolicy, Batcher, Bucket, Coordinator, Metrics, Payload, Request, TraceConfig,
+    generate_trace, BatchPolicy, Batcher, Bucket, BurstConfig, Coordinator, Metrics,
+    Payload, Request, TraceConfig,
 };
 use gspn2::runtime::{artifacts_available, Engine, Value};
 use gspn2::tensor::concat_axis0;
@@ -34,7 +42,68 @@ fn mk_req(id: u64, tx: &mpsc::Sender<gspn2::coordinator::Response>) -> Request {
     }
 }
 
+/// Trace-driven serving rows: replay a deterministic arrival trace
+/// (open-loop, with real sleeps) against a fresh cpu-backend
+/// coordinator per phase — Metrics histograms are cumulative, so
+/// per-phase latency numbers need a per-phase server.
+fn bench_serve_json() {
+    let smoke = std::env::var("GSPN2_BENCH_SMOKE").is_ok();
+    let mut suite = BenchSuite::new("BENCH_serve");
+    let requests = if smoke { 60 } else { 400 };
+    let rate = if smoke { 400.0 } else { 300.0 };
+    for (label, burst) in [("steady", None), ("bursty", Some(BurstConfig::default()))] {
+        let coord = Coordinator::start(&ServeConfig {
+            backend: "cpu".into(),
+            workers: 1,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 0, // unbounded: rejections would skew the rows
+            ..ServeConfig::default()
+        })
+        .expect("cpu coordinator");
+        let trace = generate_trace(&TraceConfig {
+            rate_rps: rate,
+            requests,
+            shapes: vec![((8, 64, 64), 0.8), ((8, 96, 96), 0.2)],
+            seed: 0,
+            burst,
+        });
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(trace.len());
+        for ev in trace {
+            if let Some(wait) = ev.at.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            if let Ok(rx) = coord.submit_scan(ev.x, ev.a_raw, ev.lam, 0) {
+                rxs.push(rx);
+            }
+        }
+        for rx in &rxs {
+            let _ = rx.recv_timeout(Duration::from_secs(60));
+        }
+        let m = coord.shutdown();
+        let h = &m.total;
+        suite.record_value(&format!("serve {label} p50"), h.percentile_ns(50.0) / 1e3, "µs");
+        suite.record_value(&format!("serve {label} p99"), h.percentile_ns(99.0) / 1e3, "µs");
+        suite.record_value(&format!("serve {label} p999"), h.percentile_ns(99.9) / 1e3, "µs");
+        suite.record_value(&format!("serve {label} max"), h.max_ns() as f64 / 1e3, "µs");
+        suite.record_value(&format!("serve {label} throughput"), m.throughput_rps(), "req/s");
+        suite.record_value(&format!("serve {label} completed"), m.completed as f64, "req");
+        suite.record_value(
+            &format!("serve {label} pool hit rate"),
+            m.ws_hit_rate() * 100.0,
+            "%",
+        );
+    }
+    suite.finish();
+}
+
 fn main() {
+    bench_serve_json();
+    if std::env::var("GSPN2_BENCH_SMOKE").is_ok() {
+        return;
+    }
+
     let mut suite = BenchSuite::new("coordinator");
 
     // Batching policy throughput (no PJRT): enqueue + pop cycles.

@@ -9,6 +9,10 @@
 //! workers = 4
 //! max_batch = 4
 //! max_wait_us = 2000
+//! # Workspace pool for the cpu-fused backend's scan scratch:
+//! # retention cap (MiB) and whether buckets pre-warm at registration.
+//! workspace_cap_mb = 512
+//! workspace_prewarm = true
 //!
 //! [train]
 //! steps = 200
@@ -47,6 +51,13 @@ pub struct ServeConfig {
     /// artifacts required).
     pub backend: String,
     pub seed: u64,
+    /// Retention cap of the coordinator's workspace pool (MiB): scan
+    /// scratch released over this total is dropped instead of pooled.
+    /// 0 disables retention entirely (every release frees).
+    pub workspace_cap_mb: usize,
+    /// Pre-warm the workspace at bucket registration so even the first
+    /// request of a bucket leases from the pool (cpu backend only).
+    pub workspace_prewarm: bool,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +73,8 @@ impl Default for ServeConfig {
             artifacts: "artifacts".into(),
             backend: "pjrt".into(),
             seed: 0,
+            workspace_cap_mb: 512,
+            workspace_prewarm: true,
         }
     }
 }
@@ -156,6 +169,8 @@ impl Config {
         s.artifacts = t.str_or("serve.artifacts", &s.artifacts);
         s.backend = t.str_or("serve.backend", &s.backend);
         s.seed = t.usize_or("serve.seed", s.seed as usize) as u64;
+        s.workspace_cap_mb = t.usize_or("serve.workspace_cap_mb", s.workspace_cap_mb);
+        s.workspace_prewarm = t.bool_or("serve.workspace_prewarm", s.workspace_prewarm);
 
         let tr = &mut self.train;
         tr.steps = t.usize_or("train.steps", tr.steps);
@@ -186,6 +201,10 @@ impl Config {
         s.artifacts = a.str_or("artifacts", &s.artifacts);
         s.backend = a.str_or("backend", &s.backend);
         s.seed = a.u64_or("seed", s.seed);
+        s.workspace_cap_mb = a.usize_or("workspace-cap-mb", s.workspace_cap_mb);
+        if a.flag("no-workspace-prewarm") {
+            s.workspace_prewarm = false;
+        }
 
         let tr = &mut self.train;
         tr.steps = a.usize_or("steps", tr.steps);
@@ -249,6 +268,26 @@ mod tests {
         cfg.apply_args(&args(&["--workers", "2"]));
         assert_eq!(cfg.serve.workers, 2); // CLI wins
         assert_eq!(cfg.serve.max_batch, 16); // TOML preserved
+    }
+
+    #[test]
+    fn workspace_knobs_from_toml_and_cli() {
+        let t = Toml::parse("[serve]\nworkspace_cap_mb = 64\nworkspace_prewarm = false\n")
+            .unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.serve.workspace_cap_mb, 512);
+        assert!(cfg.serve.workspace_prewarm);
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.serve.workspace_cap_mb, 64);
+        assert!(!cfg.serve.workspace_prewarm);
+        let cfg = Config::from_args(&args(&[
+            "--workspace-cap-mb",
+            "128",
+            "--no-workspace-prewarm",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.serve.workspace_cap_mb, 128);
+        assert!(!cfg.serve.workspace_prewarm);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use std::time::Instant;
 
 use crate::util::stats::{fmt_time_ns, LatencyHistogram, Summary};
+use crate::util::PoolStats;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -16,6 +17,14 @@ pub struct Metrics {
     pub rejected: u64,
     pub errors: u64,
     pub padded_slots: u64,
+    /// Workspace pool counters, snapshotted once per served batch (the
+    /// pool's counters are cumulative, so the latest snapshot is the
+    /// current truth; `ws_peak_leased` keeps its own high-water mark so
+    /// a late snapshot cannot lower it).
+    pub ws_hits: u64,
+    pub ws_misses: u64,
+    pub ws_bytes_pooled: u64,
+    pub ws_peak_leased: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -49,6 +58,25 @@ impl Metrics {
         self.padded_slots += slots as u64;
     }
 
+    /// Fold in a workspace pool snapshot (called once per served batch).
+    pub fn record_workspace(&mut self, ws: PoolStats) {
+        self.ws_hits = ws.hits;
+        self.ws_misses = ws.misses;
+        self.ws_bytes_pooled = ws.bytes_pooled;
+        self.ws_peak_leased = self.ws_peak_leased.max(ws.peak_leased);
+    }
+
+    /// Fraction of workspace acquires served from the pool (0.0 before
+    /// any batch has recorded).
+    pub fn ws_hit_rate(&self) -> f64 {
+        let total = self.ws_hits + self.ws_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.ws_hits as f64 / total as f64
+        }
+    }
+
     /// Completed requests per second over the serving window.
     pub fn throughput_rps(&self) -> f64 {
         match (self.started, self.finished) {
@@ -77,14 +105,38 @@ impl Metrics {
             ("total ", &self.total),
         ] {
             s.push_str(&format!(
-                "{name}: p50 {} | p95 {} | p99 {} | max-ish {}\n",
+                "{name}: p50 {} | p95 {} | p99 {} | p999 {} | max {}\n",
                 fmt_time_ns(h.percentile_ns(50.0)),
                 fmt_time_ns(h.percentile_ns(95.0)),
                 fmt_time_ns(h.percentile_ns(99.0)),
-                fmt_time_ns(h.percentile_ns(100.0)),
+                fmt_time_ns(h.percentile_ns(99.9)),
+                fmt_time_ns(h.max_ns() as f64),
             ));
         }
+        s.push_str(&format!(
+            "workspace: {:.1}% hit rate ({} hits, {} misses); {} pooled, {} peak leased\n",
+            self.ws_hit_rate() * 100.0,
+            self.ws_hits,
+            self.ws_misses,
+            fmt_bytes(self.ws_bytes_pooled),
+            fmt_bytes(self.ws_peak_leased),
+        ));
         s
+    }
+}
+
+/// Pretty-print byte counts: B/KiB/MiB/GiB.
+fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b < KIB {
+        format!("{b:.0} B")
+    } else if b < KIB * KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.1} MiB", b / (KIB * KIB))
+    } else {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
     }
 }
 
@@ -112,7 +164,46 @@ mod tests {
         let r = m.report();
         assert!(r.contains("completed"));
         assert!(r.contains("p95"));
+        assert!(r.contains("p999"));
         assert!(r.contains("throughput"));
+        assert!(r.contains("workspace"));
+    }
+
+    #[test]
+    fn report_max_is_exact_not_bucket_bound() {
+        let mut m = Metrics::new();
+        // 1.5 ms lands mid-bucket: the log-bucketed p100 would round up,
+        // the true max must print the recorded value exactly.
+        m.record_request(100, 1_500_000, 1_500_100, 1);
+        assert_eq!(m.execute.max_ns(), 1_500_000);
+        assert!(m.report().contains("max 1.50 ms"), "{}", m.report());
+    }
+
+    #[test]
+    fn workspace_counters_snapshot_and_keep_peak() {
+        let mut m = Metrics::new();
+        assert_eq!(m.ws_hit_rate(), 0.0);
+        m.record_workspace(PoolStats {
+            hits: 3,
+            misses: 1,
+            bytes_pooled: 4096,
+            bytes_leased: 0,
+            peak_leased: 8192,
+        });
+        m.record_workspace(PoolStats {
+            hits: 9,
+            misses: 1,
+            bytes_pooled: 2048,
+            bytes_leased: 0,
+            peak_leased: 1024,
+        });
+        assert_eq!((m.ws_hits, m.ws_misses), (9, 1));
+        assert_eq!(m.ws_bytes_pooled, 2048);
+        assert_eq!(m.ws_peak_leased, 8192, "peak must never regress");
+        assert!((m.ws_hit_rate() - 0.9).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("90.0% hit rate"), "{r}");
+        assert!(r.contains("2.0 KiB pooled"), "{r}");
     }
 
     #[test]

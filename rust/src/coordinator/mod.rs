@@ -6,7 +6,8 @@
 //!   it is unit-tested and benched without PJRT).
 //! * [`server`]  — admission control + worker pool driving PJRT engines.
 //! * [`metrics`] — latency histograms, throughput, batching stats.
-//! * [`trace`]   — synthetic Poisson load generator.
+//! * [`trace`]   — synthetic load generator: open-loop Poisson, plus a
+//!   Markov-modulated bursty mode for tail-latency benchmarking.
 
 pub mod batcher;
 pub mod metrics;
@@ -18,4 +19,4 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
 pub use server::Coordinator;
-pub use trace::{generate as generate_trace, TraceConfig, TraceEvent};
+pub use trace::{generate as generate_trace, BurstConfig, TraceConfig, TraceEvent};

@@ -40,9 +40,9 @@ use super::metrics::Metrics;
 use super::request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
-use crate::scan::plan::{eager_release_min, plan_scan, ScanGeometry};
+use crate::scan::plan::{eager_release_min_mem, plan_scan, workspace_footprint, ScanGeometry};
 use crate::tensor::{concat_axis0, split_axis0};
-use crate::util::{lock_unpoisoned, logging, ThreadPool};
+use crate::util::{lock_unpoisoned, logging, BufferPool, PoolStats, ThreadPool};
 use crate::Tensor;
 
 /// Execution backend selected by [`ServeConfig::backend`].
@@ -60,6 +60,12 @@ struct Shared {
     shutdown: AtomicBool,
     artifacts_dir: String,
     backend: Backend,
+    /// Per-coordinator scratch pool: the cpu-fused path leases every
+    /// scan-engine buffer from here, so the allocation-free invariant
+    /// (and its hit/miss counters) are isolated per coordinator instead
+    /// of shared process-wide.
+    workspace: BufferPool,
+    workspace_prewarm: bool,
 }
 
 pub struct Coordinator {
@@ -139,6 +145,8 @@ impl Coordinator {
             shutdown: AtomicBool::new(false),
             artifacts_dir: cfg.artifacts.clone(),
             backend,
+            workspace: BufferPool::new(cfg.workspace_cap_mb << 20),
+            workspace_prewarm: cfg.workspace_prewarm,
         });
         let workers = (0..n_workers)
             .map(|i| {
@@ -179,6 +187,7 @@ impl Coordinator {
         let payload = Payload::Scan { x, a_raw, lam };
         let bucket = payload.bucket(kchunk).expect("scan payload");
         let (tx, rx) = mpsc::channel();
+        let mut newly_registered = false;
         {
             let mut b = lock_unpoisoned(&self.shared.batcher);
             let known = b.known_bucket(&bucket);
@@ -211,6 +220,7 @@ impl Coordinator {
                 }
                 let max = b.policy.max_batch.max(1);
                 b.register_bucket_dynamic(bucket.clone(), (1..=max).collect());
+                newly_registered = true;
             }
             let req = Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -227,8 +237,37 @@ impl Coordinator {
                 return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
             }
         }
+        // Pre-warm outside the batcher lock: pricing the plan and
+        // filling free lists must not stall concurrent submitters.
+        if newly_registered && self.shared.workspace_prewarm {
+            self.prewarm_bucket(&bucket);
+        }
         self.shared.work_ready.notify_one();
         Ok(rx)
+    }
+
+    /// Fill the workspace free lists with the scratch the cpu-fused
+    /// path will lease for `bucket`, priced by the planner's
+    /// [`workspace_footprint`] model, so the bucket's very first
+    /// request is already allocation-free. Pre-warming counts neither
+    /// as hits nor misses and respects the pool's retention cap.
+    fn prewarm_bucket(&self, bucket: &Bucket) {
+        let pool = ThreadPool::global();
+        let geom = ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
+        let plan = plan_scan(&geom, 0, pool.threads());
+        let tap_blocks = if bucket.per_channel { bucket.c.max(1) } else { 1 };
+        for (len, count) in
+            workspace_footprint(&geom, plan.strategy, pool.threads(), tap_blocks)
+        {
+            self.shared.workspace.prewarm(len, count);
+        }
+    }
+
+    /// Snapshot of the coordinator's workspace pool counters — the
+    /// observable behind the allocation-free serving invariant (a warm
+    /// bucket's repeat request must add zero misses).
+    pub fn workspace_stats(&self) -> PoolStats {
+        self.shared.workspace.stats()
     }
 
     /// Submit a direct whole-artifact execution (not batched).
@@ -338,11 +377,23 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                     let pool = ThreadPool::global();
                     let (load, threads) = (pool.load(), pool.threads());
                     let max_batch = b.policy.max_batch;
+                    // Release sizing sees memory pressure too: with most
+                    // of the workspace cap already on lease, extra
+                    // concurrent scans would just churn the allocator.
+                    let ws = sh.workspace.stats();
+                    let ws_cap = sh.workspace.cap_bytes();
                     let released = b.pop_eager_by(|bucket, _qlen| {
                         let geom =
                             ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
                         let plan = plan_scan(&geom, load, threads);
-                        eager_release_min(&plan, load, threads, max_batch)
+                        eager_release_min_mem(
+                            &plan,
+                            load,
+                            threads,
+                            max_batch,
+                            ws.bytes_leased,
+                            ws_cap,
+                        )
                     });
                     if let Some(batch) = released {
                         break Some(batch);
@@ -425,6 +476,12 @@ fn reject_direct(sh: &Shared, req: Request) {
 /// large-resolution request — too few planes to occupy the pool — runs
 /// segment-parallel with wavefront continuations, bit-identical to
 /// `scan_l2r_split` at the planned count (also e2e-pinned).
+///
+/// All engine scratch leases from the coordinator's workspace
+/// ([`Shared::workspace`]); after one warm-up request per bucket the
+/// hot path performs no heap allocation except the reply tensor
+/// itself, which escapes to the client and therefore cannot be pooled.
+/// Pool counters are snapshotted into [`Metrics`] once per batch.
 fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
     let batch = reqs.len();
     for r in reqs {
@@ -444,12 +501,13 @@ fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
             #[cfg(test)]
             test_hooks::maybe_fail_scan(x.shape[1], x.shape[2], x.shape[3]);
             let taps = crate::scan::Taps::normalize(&a_raw);
-            crate::scan::fused::fused_scan_l2r_pool(
+            crate::scan::fused::fused_scan_l2r_pool_ws(
                 &x,
                 &taps,
                 &lam,
                 r.kchunk,
                 ThreadPool::global(),
+                &sh.workspace,
             )
         }));
         let exec_ns = t0.elapsed().as_nanos() as u64;
@@ -480,6 +538,7 @@ fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
             }
         }
     }
+    lock_unpoisoned(&sh.metrics).record_workspace(sh.workspace.stats());
 }
 
 /// Test-only fault injection: lets the failed-batch regression test
@@ -684,6 +743,68 @@ mod tests {
         let m = coord.shutdown();
         assert_eq!(m.errors, 1, "the failed execution must be counted");
         assert_eq!(m.completed, 1);
+    }
+
+    /// The allocation-free serving invariant, end to end: after one
+    /// warm-up request, a repeated identical request leases every
+    /// scratch buffer from the coordinator's workspace — zero new pool
+    /// misses, and nothing left on lease between requests.
+    #[test]
+    fn warm_bucket_repeat_request_records_zero_misses() {
+        use std::time::Duration;
+        let coord = Coordinator::start(&cpu_cfg(1)).unwrap();
+        let mut rng = Rng::new(92);
+        // Unique geometry; nplanes = c = 1 with a narrow plane keeps the
+        // engine on its serial plane-parallel branch, so the lease
+        // pattern is deterministic across runs.
+        let (x, a, lam) = mk_case(&mut rng, 1, 9, 13);
+        let want = crate::scan::scan_l2r(&x, &crate::scan::Taps::normalize(&a), &lam, 0);
+        let rx = coord.submit_scan(x.clone(), a.clone(), lam.clone(), 0).expect("submit");
+        let got =
+            rx.recv_timeout(Duration::from_secs(120)).expect("reply").result.expect("ok");
+        assert_eq!(got[0].as_f32().unwrap().data, want.data);
+        let s1 = coord.workspace_stats();
+        assert_eq!(s1.bytes_leased, 0, "all leases must return between requests");
+        let rx = coord.submit_scan(x, a, lam, 0).expect("submit warm");
+        let got =
+            rx.recv_timeout(Duration::from_secs(120)).expect("reply").result.expect("ok");
+        assert_eq!(got[0].as_f32().unwrap().data, want.data);
+        let s2 = coord.workspace_stats();
+        assert_eq!(s2.misses, s1.misses, "warm bucket repeat must add zero pool misses");
+        assert!(s2.hits > s1.hits, "warm pass must serve from the pool");
+        let m = coord.shutdown();
+        assert_eq!(m.ws_misses, s2.misses, "metrics must surface the pool counters");
+    }
+
+    /// Workspace integrity across a panicking execution: the injected
+    /// failure must leave zero bytes on lease, and a bucket that was
+    /// already warm stays allocation-free afterwards.
+    #[test]
+    fn panicking_request_leaks_no_workspace_leases() {
+        use std::time::Duration;
+        let coord = Coordinator::start(&cpu_cfg(1)).unwrap();
+        let mut rng = Rng::new(93);
+        // Warm one bucket (unique geometry).
+        let (x, a, lam) = mk_case(&mut rng, 1, 10, 14);
+        let rx = coord.submit_scan(x.clone(), a.clone(), lam.clone(), 0).expect("submit");
+        rx.recv_timeout(Duration::from_secs(120)).expect("reply").result.expect("ok");
+        let warm = coord.workspace_stats();
+        assert_eq!(warm.bytes_leased, 0);
+        // Panic a different geometry's execution (keyed one-shot hook).
+        let (px, pa, plam) = mk_case(&mut rng, 5, 7, 13);
+        *lock_unpoisoned(&test_hooks::FAIL_SCAN_FOR) = Some((5, 7, 13));
+        let rx = coord.submit_scan(px, pa, plam, 0).expect("submit");
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+        resp.result.expect_err("injected failure must surface as an error");
+        let s = coord.workspace_stats();
+        assert_eq!(s.bytes_leased, 0, "a panicking execution must not leak leases");
+        // The warm bucket still serves miss-free.
+        let rx = coord.submit_scan(x, a, lam, 0).expect("submit warm");
+        rx.recv_timeout(Duration::from_secs(120)).expect("reply").result.expect("ok");
+        let s2 = coord.workspace_stats();
+        assert_eq!(s2.misses, warm.misses, "warm bucket must stay miss-free after a panic");
+        assert_eq!(s2.bytes_leased, 0);
+        coord.shutdown();
     }
 
     /// Metrics reads recover from a poisoned mutex instead of

@@ -184,10 +184,19 @@ impl CompactGspnUnit {
     /// `scan_l2r_split` reference arithmetic instead
     /// (±1e-4-equivalent).
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_ws(x, crate::util::BufferPool::global())
+    }
+
+    /// [`Self::forward`] drawing all fused-pass scratch from an explicit
+    /// workspace instead of the process-global pool. The serving
+    /// coordinator calls this with its per-instance pool so the
+    /// allocation-free invariant (and its miss counters) stay isolated
+    /// per coordinator; results are bit-identical to [`Self::forward`].
+    pub fn forward_ws(&self, x: &Tensor, ws: &crate::util::BufferPool) -> Tensor {
         assert_eq!(x.shape[1], self.c);
         let xp = self.down.apply(x);
         let dirs = self.project_directions(&xp);
-        let merged = super::fused::fused_merged_canonical(
+        let merged = super::fused::fused_merged_canonical_ws(
             [&dirs[0].0, &dirs[1].0, &dirs[2].0, &dirs[3].0],
             [&dirs[0].1, &dirs[1].1, &dirs[2].1, &dirs[3].1],
             [&dirs[0].2, &dirs[1].2, &dirs[2].2, &dirs[3].2],
@@ -196,6 +205,7 @@ impl CompactGspnUnit {
             self.kchunk,
             &xp.shape,
             ThreadPool::global(),
+            ws,
         );
         self.up.apply(&merged)
     }
@@ -325,6 +335,25 @@ mod tests {
             let reference = unit.forward_ref(&x);
             assert_eq!(fused.data, reference.data, "c{c} p{cp} k{kchunk} pc{per_channel}");
         }
+    }
+
+    #[test]
+    fn forward_ws_matches_forward_and_reuses_workspace() {
+        // An explicit (private) workspace must not change a bit vs the
+        // global-pool path, and a warm rerun must lease nothing new.
+        let mut rng = Rng::new(9);
+        let unit = CompactGspnUnit::init(&mut rng, 8, 4, 0, false);
+        let x = Tensor::randn(&[2, 8, 8, 8], &mut rng, 1.0);
+        let ws = crate::util::BufferPool::new(usize::MAX);
+        let want = unit.forward(&x);
+        let cold = unit.forward_ws(&x, &ws);
+        assert_eq!(cold.data, want.data);
+        let s1 = ws.stats();
+        assert_eq!(s1.bytes_leased, 0, "all leases must return");
+        let warm = unit.forward_ws(&x, &ws);
+        assert_eq!(warm.data, want.data);
+        let s2 = ws.stats();
+        assert!(s2.hits > s1.hits, "warm pass must reuse pooled buffers");
     }
 
     #[test]

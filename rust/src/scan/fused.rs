@@ -94,18 +94,38 @@
 //! float ops, so vectorization cannot perturb results). The segmented
 //! path reassociates only where the reference decomposition
 //! (`scan_l2r_split`) does, and reproduces *its* bits exactly.
+//!
+//! **Workspace pooling.** Every per-call scratch buffer — staged-tap
+//! panels, pack/scan slabs, retained phase-1 panels (`hbufs`), wavefront
+//! piece buffers, and the correction columns — is leased from a
+//! [`BufferPool`] workspace instead of `vec!`-allocated, so steady-state
+//! serving of a warm bucket performs zero heap allocations in the scan
+//! hot path (pinned by the pool-miss counter tests). Leases return on
+//! drop, *including during unwinding*, so a panicking piece job cannot
+//! leak scratch. Buffers the old code relied on being zeroed (carry and
+//! `zeros` columns, correction ping-pong, retained panels) are
+//! re-acquired through [`BufferPool::acquire_zeroed`]; fully-overwritten
+//! buffers (pack/scan slabs, staged taps, staging columns) skip the
+//! reset — bit-exactness is unchanged either way, pinned by the
+//! pooled-vs-fresh property tests. The one deliberate non-pooled
+//! allocation is the output tensor itself: it escapes to the caller (the
+//! serving reply), so its storage cannot return to the pool.
 
 use super::direction::{merge_weights, Direction, DIRECTIONS};
 use super::plan::{self, ScanGeometry, ScanStrategy};
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
+use crate::util::workspace::{BufferPool, Lease};
 use crate::util::{lock_unpoisoned, GraphBuilder, NodeId, ThreadPool};
 use std::sync::Mutex;
 
 /// Canonical columns staged per slab. 32 columns keep the b/h slabs
 /// L1-resident up to H = 256 while amortizing the slab loop overhead;
 /// measured best among {8, 16, 32} at both acceptance geometries.
-const SLAB: usize = 32;
+/// Crate-visible so the planner's workspace-footprint model
+/// ([`plan::workspace_footprint`]) sizes slab leases with the engine's
+/// real constant.
+pub(crate) const SLAB: usize = 32;
 
 // ---------------------------------------------------------------------
 // Taps staging: full column-major panels, shared across channel planes
@@ -153,20 +173,22 @@ fn transpose_plane(src: &[f32], h: usize, w: usize, dst: &mut [f32]) {
 /// read-only across all plane jobs. With the channel-shared weights of
 /// §4.2 (`Cw == 1`) each tap plane is staged once per batch item and
 /// every channel plane reuses it.
-struct StagedTaps {
+struct StagedTaps<'w> {
     /// Layout: per (ni*cw + ci), three `hc x wc` column-major panels in
-    /// tap order (up, center, down).
-    data: Vec<f32>,
+    /// tap order (up, center, down). Leased from the workspace; every
+    /// element is written by `transpose_plane` before any read, so the
+    /// lease is not zero-reset.
+    data: Lease<'w>,
     cw: usize,
     plane: usize,
 }
 
-impl StagedTaps {
-    fn build(taps: &Taps, pool: Option<&ThreadPool>) -> StagedTaps {
+impl<'w> StagedTaps<'w> {
+    fn build(taps: &Taps, pool: Option<&ThreadPool>, ws: &'w BufferPool) -> StagedTaps<'w> {
         let (hc, wc) = (taps.h, taps.w);
         let plane = hc * wc;
         let blocks = taps.n * taps.cw;
-        let mut data = vec![0.0f32; blocks * 3 * plane];
+        let mut data = ws.acquire(blocks * 3 * plane);
         let stage_block = |(b, dst): (usize, &mut [f32])| {
             let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
             for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
@@ -457,21 +479,24 @@ fn scatter_slab(
 
 /// Per-job scratch: the b and h column slabs, the carry column, and the
 /// zero column used at chunk resets. One per pool job, reused across
-/// every plane (and direction) the job owns.
-struct FusedScratch {
-    b: Vec<f32>,
-    h: Vec<f32>,
-    carry: Vec<f32>,
-    zeros: Vec<f32>,
+/// every plane (and direction) the job owns. Leased from the workspace:
+/// the slabs are fully overwritten before every read, the carry/zeros
+/// columns must start zero (the reference semantics), so only those two
+/// are zero-reset.
+struct FusedScratch<'w> {
+    b: Lease<'w>,
+    h: Lease<'w>,
+    carry: Lease<'w>,
+    zeros: Lease<'w>,
 }
 
-impl FusedScratch {
-    fn new(hmax: usize) -> FusedScratch {
+impl<'w> FusedScratch<'w> {
+    fn new(hmax: usize, ws: &'w BufferPool) -> FusedScratch<'w> {
         FusedScratch {
-            b: vec![0.0f32; SLAB * hmax],
-            h: vec![0.0f32; SLAB * hmax],
-            carry: vec![0.0f32; hmax],
-            zeros: vec![0.0f32; hmax],
+            b: ws.acquire(SLAB * hmax),
+            h: ws.acquire(SLAB * hmax),
+            carry: ws.acquire_zeroed(hmax),
+            zeros: ws.acquire_zeroed(hmax),
         }
     }
 }
@@ -570,7 +595,7 @@ fn validate_dir(x: &Tensor, taps: &Taps, lam: &Tensor, d: Direction) {
 #[allow(clippy::too_many_arguments)]
 fn run_plane(
     dirs: &[DirInput<'_>],
-    staged: &[StagedTaps],
+    staged: &[StagedTaps<'_>],
     wts: Option<&[f32; 4]>,
     gain: Option<f32>,
     ni: usize,
@@ -578,7 +603,7 @@ fn run_plane(
     c: usize,
     hw: (usize, usize),
     os: &mut [f32],
-    scratch: &mut FusedScratch,
+    scratch: &mut FusedScratch<'_>,
 ) {
     let (h, w) = hw;
     let plane = h * w;
@@ -656,6 +681,7 @@ fn run_engine(
     out_shape: &[usize],
     pool: Option<&ThreadPool>,
     exec: ExecSpec,
+    ws: &BufferPool,
 ) -> Tensor {
     let (n, c) = (out_shape[0], out_shape[1]);
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -665,8 +691,8 @@ fn run_engine(
         return Tensor::zeros(out_shape);
     }
     let hmax = h.max(w);
-    let staged: Vec<StagedTaps> =
-        dirs.iter().map(|d| StagedTaps::build(d.taps, pool)).collect();
+    let staged: Vec<StagedTaps<'_>> =
+        dirs.iter().map(|d| StagedTaps::build(d.taps, pool, ws)).collect();
     let (strategy, phase2) = match exec {
         ExecSpec::Forced(s, p2) => (s, p2),
         ExecSpec::Auto => match pool {
@@ -676,6 +702,7 @@ fn run_engine(
                     ndirs: dirs.len(),
                     wc_min: dirs.iter().map(|di| di.taps.w).min().unwrap_or(0),
                     plane_px: plane,
+                    hmax,
                 };
                 let p = plan::plan_scan(&geom, pool.load(), pool.threads());
                 // A wavefront plan means the per-direction continuation
@@ -698,7 +725,7 @@ fn run_engine(
     };
     if let Some(segments) = segments {
         return run_engine_segmented(
-            dirs, &staged, wts, gain, out_shape, pool, segments, phase2,
+            dirs, &staged, wts, gain, out_shape, pool, segments, phase2, ws,
         );
     }
     let mut out = Tensor::zeros(out_shape);
@@ -711,7 +738,7 @@ fn run_engine(
             let jobs: Vec<(usize, &mut [f32])> =
                 out.data.chunks_mut(per_block * plane).enumerate().collect();
             pool.map(jobs, |(bi, block)| {
-                let mut scratch = FusedScratch::new(hmax);
+                let mut scratch = FusedScratch::new(hmax, ws);
                 for (j, os) in block.chunks_mut(plane).enumerate() {
                     let p = bi * per_block + j;
                     run_plane(
@@ -730,7 +757,7 @@ fn run_engine(
             });
         }
         _ => {
-            let mut scratch = FusedScratch::new(hmax);
+            let mut scratch = FusedScratch::new(hmax, ws);
             for (p, os) in out.data.chunks_mut(plane).enumerate() {
                 run_plane(
                     dirs,
@@ -781,13 +808,14 @@ fn run_engine(
 #[allow(clippy::too_many_arguments)]
 fn run_engine_segmented(
     dirs: &[DirInput<'_>],
-    staged: &[StagedTaps],
+    staged: &[StagedTaps<'_>],
     wts: Option<&[f32; 4]>,
     gain: Option<&[f32]>,
     out_shape: &[usize],
     pool: Option<&ThreadPool>,
     segments: usize,
     phase2: Phase2,
+    ws: &BufferPool,
 ) -> Tensor {
     if phase2 != Phase2::Barrier {
         if let Some(pool) = pool {
@@ -800,6 +828,7 @@ fn run_engine_segmented(
                 pool,
                 segments,
                 phase2 == Phase2::WaveDir,
+                ws,
             );
         }
     }
@@ -822,7 +851,11 @@ fn run_engine_segmented(
         })
         .collect();
     let per_plane: usize = dirs.iter().map(|di| di.taps.h * di.taps.w).sum();
-    let mut hbufs = vec![0.0f32; nplanes * per_plane];
+    // Zero-reset like the fresh `vec!` it replaces: phase 1 overwrites
+    // every panel element, but keeping the fresh-allocation semantics
+    // makes the panels' contents independent of pool history by
+    // construction (bit-exactness needs no full-coverage argument).
+    let mut hbufs = ws.acquire_zeroed(nplanes * per_plane);
 
     // Phase 1: every (plane, direction, segment) scans independently
     // from a zero carry into its disjoint panel range.
@@ -840,7 +873,7 @@ fn run_engine_segmented(
             }
         }
         let scan_piece = |(p, k, lo, hi, buf): (usize, usize, usize, usize, &mut [f32])| {
-            scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, buf);
+            scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, buf, ws);
         };
         match pool {
             Some(pool) if pool.threads() > 1 && jobs.len() > 1 => {
@@ -865,7 +898,7 @@ fn run_engine_segmented(
         .map(|(p, (os, pb))| (p, os, pb))
         .collect();
     let correct_and_drain = |(p, os, pb): (usize, &mut [f32], &[f32])| {
-        let mut scratch = DrainScratch::new(hmax);
+        let mut scratch = DrainScratch::new(hmax, ws);
         for (k, di) in dirs.iter().enumerate() {
             let (hc, wc) = (di.taps.h, di.taps.w);
             let (tu, tc, td) = staged[k].panels(p / c, p % c);
@@ -912,7 +945,7 @@ fn run_engine_segmented(
 #[allow(clippy::too_many_arguments)]
 fn scan_piece_into(
     dirs: &[DirInput<'_>],
-    staged: &[StagedTaps],
+    staged: &[StagedTaps<'_>],
     c: usize,
     hw: (usize, usize),
     hmax: usize,
@@ -921,6 +954,7 @@ fn scan_piece_into(
     lo: usize,
     hi: usize,
     buf: &mut [f32],
+    ws: &BufferPool,
 ) {
     let (h, w) = hw;
     let plane = h * w;
@@ -930,9 +964,13 @@ fn scan_piece_into(
     let xs = &di.x.data[base..base + plane];
     let ls = &di.lam.data[base..base + plane];
     let (tu, tc, td) = staged[k].panels(p / c, p % c);
-    let mut b = vec![0.0f32; SLAB * hmax];
-    let mut carry = vec![0.0f32; hmax];
-    let zeros = vec![0.0f32; hmax];
+    // The pack slab is fully overwritten per slab; the carry must start
+    // zero (a piece scans from a zero incoming carry and READS the carry
+    // on its first column when `lo` is off a chunk boundary), and the
+    // reset column must stay zero.
+    let mut b = ws.acquire(SLAB * hmax);
+    let mut carry = ws.acquire_zeroed(hmax);
+    let zeros = ws.acquire_zeroed(hmax);
     let mut i0 = lo;
     while i0 < hi {
         let sw = SLAB.min(hi - i0);
@@ -961,7 +999,7 @@ fn scan_piece_into(
 /// own the zero-carry skip (the reference decomposition elides all-zero
 /// corrections, which keeps even -0.0 pixels bit-identical).
 #[allow(clippy::too_many_arguments)]
-fn correct_segment(
+fn correct_segment<'w>(
     hc: usize,
     chunk: usize,
     lo: usize,
@@ -970,8 +1008,8 @@ fn correct_segment(
     tc: &[f32],
     td: &[f32],
     cin: &[f32],
-    corr: &mut Vec<f32>,
-    next: &mut Vec<f32>,
+    corr: &mut Lease<'w>,
+    next: &mut Lease<'w>,
     seg: &mut [f32],
 ) {
     corr[..hc].copy_from_slice(&cin[..hc]);
@@ -999,23 +1037,27 @@ fn correct_segment(
 /// Per-drain scratch: the correction ping-pong columns, the tracked
 /// inter-segment carry, and the slab used to stage corrected columns
 /// before they scatter. O(SLAB·max(H, W)) — the correction never needs
-/// panel-sized scratch. The staging slab is allocated lazily on the
-/// first corrected column, so drains that never stage (DirFan's s = 1
-/// runs, zero-carry planes) pay only the three small columns.
-struct DrainScratch {
-    corr: Vec<f32>,
-    next: Vec<f32>,
-    carry: Vec<f32>,
-    colb: Vec<f32>,
+/// panel-sized scratch. The staging slab is leased lazily on the first
+/// corrected column, so drains that never stage (DirFan's s = 1 runs,
+/// zero-carry planes) pay only the three small columns. The three
+/// columns are zero-reset (the zero-carry skip reads them); the staging
+/// slab is fully overwritten before every read, so it is not.
+struct DrainScratch<'w> {
+    ws: &'w BufferPool,
+    corr: Lease<'w>,
+    next: Lease<'w>,
+    carry: Lease<'w>,
+    colb: Option<Lease<'w>>,
 }
 
-impl DrainScratch {
-    fn new(hmax: usize) -> DrainScratch {
+impl<'w> DrainScratch<'w> {
+    fn new(hmax: usize, ws: &'w BufferPool) -> DrainScratch<'w> {
         DrainScratch {
-            corr: vec![0.0f32; hmax],
-            next: vec![0.0f32; hmax],
-            carry: vec![0.0f32; hmax],
-            colb: Vec::new(),
+            ws,
+            corr: ws.acquire_zeroed(hmax),
+            next: ws.acquire_zeroed(hmax),
+            carry: ws.acquire_zeroed(hmax),
+            colb: None,
         }
     }
 }
@@ -1060,7 +1102,7 @@ fn drain_dir_fused(
     k: usize,
     last: usize,
     gain: Option<f32>,
-    s: &mut DrainScratch,
+    s: &mut DrainScratch<'_>,
 ) {
     let (tu, tc, td) = taps;
     let (h, w) = hw;
@@ -1099,9 +1141,12 @@ fn drain_dir_fused(
                 break;
             }
             let sw = SLAB.min(seglen - j);
-            if s.colb.len() < SLAB * hc {
-                s.colb.resize(SLAB * hc, 0.0);
+            if s.colb.as_ref().map_or(true, |cb| cb.len() < SLAB * hc) {
+                // Staging slab: every column is fully written before the
+                // scatter reads it, so a plain (non-zeroed) lease.
+                s.colb = Some(s.ws.acquire(SLAB * hc));
             }
+            let colb = s.colb.as_mut().unwrap();
             for i in 0..sw {
                 let gi = lo + j + i;
                 let src = &piece[(j + i) * hc..(j + i + 1) * hc];
@@ -1110,7 +1155,7 @@ fn drain_dir_fused(
                     // already exact from this column on.
                     active = false;
                 }
-                let dst = &mut s.colb[i * hc..(i + 1) * hc];
+                let dst = &mut colb[i * hc..(i + 1) * hc];
                 if active {
                     let g0 = gi * hc;
                     correct_col(
@@ -1128,10 +1173,10 @@ fn drain_dir_fused(
                     dst.copy_from_slice(src);
                 }
             }
-            drain_scatter(&s.colb, h, w, d, lo + j, sw, hc, os, wts, k, last, gain);
+            drain_scatter(&colb[..], h, w, d, lo + j, sw, hc, os, wts, k, last, gain);
             if j + sw == seglen {
                 // The corrected last column *is* segment k+1's carry.
-                s.carry[..hc].copy_from_slice(&s.colb[(sw - 1) * hc..sw * hc]);
+                s.carry[..hc].copy_from_slice(&colb[(sw - 1) * hc..sw * hc]);
             }
             j += sw;
         }
@@ -1148,7 +1193,7 @@ fn drain_dir_fused(
 #[allow(clippy::too_many_arguments)]
 fn drain_dir_pieces_fused(
     dirs: &[DirInput<'_>],
-    staged: &[StagedTaps],
+    staged: &[StagedTaps<'_>],
     bounds: &[Vec<(usize, usize)>],
     wts: Option<&[f32; 4]>,
     gain: Option<f32>,
@@ -1156,25 +1201,30 @@ fn drain_dir_pieces_fused(
     k: usize,
     c: usize,
     hw: (usize, usize),
-    slots: &[Mutex<Vec<f32>>],
+    slots: &[Mutex<Option<Lease<'_>>>],
     os: &mut [f32],
-    scratch: &mut DrainScratch,
+    scratch: &mut DrainScratch<'_>,
 ) {
     let di = &dirs[k];
     let hc = di.taps.h;
     let (tu, tc, td) = staged[k].panels(p / c, p % c);
-    let bufs: Vec<Vec<f32>> = slots
+    // Taking the leases out of the slots moves ownership here: they
+    // return to the workspace pool when `bufs` drops, on every exit
+    // path — including the early return below.
+    let bufs: Vec<Option<Lease<'_>>> =
+        slots.iter().map(|s| lock_unpoisoned(s).take()).collect();
+    // A missing or wrong-size piece means its phase-1 job panicked
+    // before handing the panel over; `run_graph` already holds that
+    // payload — skip quietly so the caller reports the real panic, not
+    // a confusing secondary index/Poison error.
+    if bufs
         .iter()
-        .map(|s| std::mem::take(&mut *lock_unpoisoned(s)))
-        .collect();
-    // A wrong-size (empty) piece means its phase-1 job panicked before
-    // handing the panel over; `run_graph` already holds that payload —
-    // skip quietly so the caller reports the real panic, not a
-    // confusing secondary index/Poison error.
-    if bufs.iter().zip(&bounds[k]).any(|(b, &(lo, hi))| b.len() != (hi - lo) * hc) {
+        .zip(&bounds[k])
+        .any(|(b, &(lo, hi))| b.as_ref().map_or(true, |b| b.len() != (hi - lo) * hc))
+    {
         return;
     }
-    let pieces: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    let pieces: Vec<&[f32]> = bufs.iter().map(|b| b.as_deref().unwrap()).collect();
     drain_dir_fused(
         &pieces,
         &bounds[k],
@@ -1205,7 +1255,7 @@ fn drain_dir_pieces_fused(
 #[allow(clippy::too_many_arguments)]
 fn correct_and_drain_pieces(
     dirs: &[DirInput<'_>],
-    staged: &[StagedTaps],
+    staged: &[StagedTaps<'_>],
     bounds: &[Vec<(usize, usize)>],
     wts: Option<&[f32; 4]>,
     gain: Option<f32>,
@@ -1213,25 +1263,32 @@ fn correct_and_drain_pieces(
     c: usize,
     hw: (usize, usize),
     hmax: usize,
-    slots: &[Mutex<Vec<f32>>],
+    slots: &[Mutex<Option<Lease<'_>>>],
     os: &mut [f32],
+    ws: &BufferPool,
 ) {
     let (h, w) = hw;
     let last = dirs.len() - 1;
-    let mut corr = vec![0.0f32; hmax];
-    let mut next = vec![0.0f32; hmax];
-    let mut carry = vec![0.0f32; hmax];
+    // Zero-reset: the zero-carry skip below reads `carry` before any
+    // write, and the correction columns keep fresh-`vec!` semantics.
+    let mut corr = ws.acquire_zeroed(hmax);
+    let mut next = ws.acquire_zeroed(hmax);
+    let mut carry = ws.acquire_zeroed(hmax);
     let mut slot = 0usize;
     for (k, di) in dirs.iter().enumerate() {
         let hc = di.taps.h;
         let (tu, tc, td) = staged[k].panels(p / c, p % c);
         for (si, &(lo, hi)) in bounds[k].iter().enumerate() {
-            let mut buf = std::mem::take(&mut *lock_unpoisoned(&slots[slot]));
+            // Taking the lease moves ownership here; it returns to the
+            // pool when `buf` drops, even on the early return below.
+            let taken = lock_unpoisoned(&slots[slot]).take();
             slot += 1;
-            // A wrong-size (empty) piece means its phase-1 job panicked
-            // before handing the panel over; `run_graph` already holds
-            // that payload — bail quietly so the caller reports the
-            // real panic, not a secondary index/Poison error.
+            // A missing or wrong-size piece means its phase-1 job
+            // panicked before handing the panel over; `run_graph`
+            // already holds that payload — bail quietly so the caller
+            // reports the real panic, not a secondary index/Poison
+            // error.
+            let Some(mut buf) = taken else { return };
             if buf.len() != (hi - lo) * hc {
                 return;
             }
@@ -1279,13 +1336,14 @@ fn correct_and_drain_pieces(
 #[allow(clippy::too_many_arguments)]
 fn run_engine_segmented_wave(
     dirs: &[DirInput<'_>],
-    staged: &[StagedTaps],
+    staged: &[StagedTaps<'_>],
     wts: Option<&[f32; 4]>,
     gain: Option<&[f32]>,
     out_shape: &[usize],
     pool: &ThreadPool,
     segments: usize,
     per_dir: bool,
+    ws: &BufferPool,
 ) -> Tensor {
     let c = out_shape[1];
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -1295,8 +1353,11 @@ fn run_engine_segmented_wave(
     let bounds: Vec<Vec<(usize, usize)>> =
         dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
     let per_plane_slots: usize = bounds.iter().map(|b| b.len()).sum();
-    let slots: Vec<Mutex<Vec<f32>>> =
-        (0..nplanes * per_plane_slots).map(|_| Mutex::new(Vec::new())).collect();
+    // Piece hand-off slots hold *leased* panels: whatever is still in a
+    // slot when this vec drops (e.g. drains skipped after a phase-1
+    // panic) returns to the workspace pool instead of leaking.
+    let slots: Vec<Mutex<Option<Lease<'_>>>> =
+        (0..nplanes * per_plane_slots).map(|_| Mutex::new(None)).collect();
 
     let mut out = Tensor::zeros(out_shape);
     let conts = if per_dir { dirs.len() } else { 1 };
@@ -1314,11 +1375,15 @@ fn run_engine_segmented_wave(
                 let (p, k) = ($p, $k);
                 let hc = dirs[k].taps.h;
                 $ids.push(graph.submit(move || {
+                    // Lease before the (test-only) fault hook so an
+                    // injected panic unwinds while scratch is out on
+                    // lease — the leak test covers the window that
+                    // matters. Zeroed like the fresh `vec!` it replaces.
+                    let mut buf = ws.acquire_zeroed((hi - lo) * hc);
                     #[cfg(test)]
                     test_hooks::maybe_panic(p, k, lo, hi);
-                    let mut buf = vec![0.0f32; (hi - lo) * hc];
-                    scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, &mut buf);
-                    *lock_unpoisoned(dst) = buf;
+                    scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, &mut buf, ws);
+                    *lock_unpoisoned(dst) = Some(buf);
                 }));
             }
         };
@@ -1329,10 +1394,10 @@ fn run_engine_segmented_wave(
         // scratch through a single slot, ordered by the drain-(k-1) →
         // drain-k graph edges (one scratch allocation per plane, as in
         // the barrier path).
-        let os_slots: Vec<Mutex<(&mut [f32], DrainScratch)>> = out
+        let os_slots: Vec<Mutex<(&mut [f32], DrainScratch<'_>)>> = out
             .data
             .chunks_mut(plane)
-            .map(|os| Mutex::new((os, DrainScratch::new(hmax))))
+            .map(|os| Mutex::new((os, DrainScratch::new(hmax, ws))))
             .collect();
         for (p, os_slot) in os_slots.iter().enumerate() {
             let gv = gain.map(|g| g[p % c]);
@@ -1381,6 +1446,7 @@ fn run_engine_segmented_wave(
                     hmax,
                     plane_slots,
                     os,
+                    ws,
                 );
             });
         }
@@ -1424,7 +1490,7 @@ pub fn fused_scan_dir(
     d: Direction,
     kchunk: usize,
 ) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, None)
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, None, BufferPool::global())
 }
 
 /// [`fused_scan_dir`] with block-granular plane jobs on `pool`.
@@ -1436,7 +1502,23 @@ pub fn fused_scan_dir_pool(
     kchunk: usize,
     pool: &ThreadPool,
 ) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool))
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), BufferPool::global())
+}
+
+/// [`fused_scan_dir_pool`] drawing all per-call scratch from an explicit
+/// workspace pool instead of the process-global one — the serving entry:
+/// the coordinator owns one pool so its hit/miss counters are isolated
+/// and pre-warmable per bucket.
+pub fn fused_scan_dir_pool_ws(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), ws)
 }
 
 fn fused_scan_dir_inner(
@@ -1446,6 +1528,7 @@ fn fused_scan_dir_inner(
     d: Direction,
     kchunk: usize,
     pool: Option<&ThreadPool>,
+    ws: &BufferPool,
 ) -> Tensor {
     validate_dir(x, taps, lam, d);
     if x.data.is_empty() {
@@ -1453,7 +1536,7 @@ fn fused_scan_dir_inner(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto)
+    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws)
 }
 
 /// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
@@ -1471,13 +1554,40 @@ fn fused_scan_dir_forced(
     phase2: Phase2,
     pool: &ThreadPool,
 ) -> Tensor {
+    fused_scan_dir_forced_ws(
+        x,
+        taps,
+        lam,
+        d,
+        kchunk,
+        strategy,
+        phase2,
+        pool,
+        BufferPool::global(),
+    )
+}
+
+/// [`fused_scan_dir_forced`] over an explicit workspace — the hook the
+/// pooled-vs-fresh bit-exactness and zero-miss tests drive per strategy.
+#[allow(clippy::too_many_arguments)]
+fn fused_scan_dir_forced_ws(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    strategy: ScanStrategy,
+    phase2: Phase2,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
     validate_dir(x, taps, lam, d);
     if x.data.is_empty() {
         return Tensor::zeros(&x.shape);
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, phase2))
+    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, phase2), ws)
 }
 
 /// [`fused_scan_dir_pool`] with a *forced* segment-parallel
@@ -1593,6 +1703,21 @@ pub fn fused_scan_l2r_pool(
     fused_scan_dir_pool(x, taps, lam, Direction::L2R, kchunk, pool)
 }
 
+/// [`fused_scan_l2r_pool`] over an explicit workspace pool (see
+/// [`fused_scan_dir_pool_ws`]) — what the coordinator's CPU batch path
+/// calls so steady-state serving of a warm bucket allocates nothing in
+/// the scan hot path.
+pub fn fused_scan_l2r_pool_ws(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
+    fused_scan_dir_pool_ws(x, taps, lam, Direction::L2R, kchunk, pool, ws)
+}
+
 /// [`fused_scan_l2r`] over the process-wide shared pool.
 pub fn fused_scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
     fused_scan_l2r_pool(x, taps, lam, kchunk, ThreadPool::global())
@@ -1633,7 +1758,7 @@ pub fn fused_merged_4dir(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, None, ExecSpec::Auto)
+    run_engine(&dirs, Some(&wts), None, &x.shape, None, ExecSpec::Auto, BufferPool::global())
 }
 
 /// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
@@ -1647,7 +1772,15 @@ pub fn fused_merged_4dir_pool(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, Some(pool), ExecSpec::Auto)
+    run_engine(
+        &dirs,
+        Some(&wts),
+        None,
+        &x.shape,
+        Some(pool),
+        ExecSpec::Auto,
+        BufferPool::global(),
+    )
 }
 
 /// [`fused_merged_4dir_pool`] under an explicit strategy + phase-2
@@ -1663,6 +1796,33 @@ fn fused_merged_4dir_forced(
     phase2: Phase2,
     pool: &ThreadPool,
 ) -> Tensor {
+    fused_merged_4dir_forced_ws(
+        x,
+        taps,
+        lam,
+        merge_logits,
+        kchunk,
+        strategy,
+        phase2,
+        pool,
+        BufferPool::global(),
+    )
+}
+
+/// [`fused_merged_4dir_forced`] over an explicit workspace — the merged
+/// twin of [`fused_scan_dir_forced_ws`] for the pooled-vs-fresh tests.
+#[allow(clippy::too_many_arguments)]
+fn fused_merged_4dir_forced_ws(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    strategy: ScanStrategy,
+    phase2: Phase2,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
     run_engine(
@@ -1672,6 +1832,7 @@ fn fused_merged_4dir_forced(
         &x.shape,
         Some(pool),
         ExecSpec::Forced(strategy, phase2),
+        ws,
     )
 }
 
@@ -1797,6 +1958,35 @@ pub fn fused_merged_canonical(
     out_shape: &[usize],
     pool: &ThreadPool,
 ) -> Tensor {
+    fused_merged_canonical_ws(
+        xcs,
+        taps,
+        lamcs,
+        merge_logits,
+        u,
+        kchunk,
+        out_shape,
+        pool,
+        BufferPool::global(),
+    )
+}
+
+/// [`fused_merged_canonical`] over an explicit workspace pool — what
+/// [`CompactGspnUnit::forward_ws`](super::compact::CompactGspnUnit::forward_ws)
+/// threads through so a serving coordinator's unit forwards draw from
+/// its pre-warmed per-bucket pool.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_merged_canonical_ws(
+    xcs: [&Tensor; 4],
+    taps: [&Taps; 4],
+    lamcs: [&Tensor; 4],
+    merge_logits: &[f32; 4],
+    u: &[f32],
+    kchunk: usize,
+    out_shape: &[usize],
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
     let dirs: Vec<DirInput<'_>> = DIRECTIONS
         .iter()
         .enumerate()
@@ -1825,7 +2015,7 @@ pub fn fused_merged_canonical(
         .collect();
     assert_eq!(u.len(), out_shape[1], "gain length must be C");
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), ExecSpec::Auto)
+    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), ExecSpec::Auto, ws)
 }
 
 #[cfg(test)]
@@ -2577,5 +2767,208 @@ mod tests {
         let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
         let after = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool);
         assert_eq!(reference.data, after.data);
+    }
+
+    // -----------------------------------------------------------------
+    // Workspace pooling
+    // -----------------------------------------------------------------
+
+    /// Pooled scratch changes no bits: every strategy/schedule produces
+    /// the same output from a cold workspace (all misses), a warm one
+    /// (reused, dirty buffers), and equals the `scan_l2r_split` /
+    /// serial reference. This is the pooled-vs-fresh half of the
+    /// allocation-free acceptance invariant.
+    #[test]
+    fn pooled_output_bit_identical_to_fresh_workspace_across_strategies() {
+        let pool = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(71);
+        let (n, c, h, w) = (1, 2, 7, 96);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let cases = [
+            (ScanStrategy::PlanePar, Phase2::Barrier),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
+        ];
+        for (strategy, phase2) in cases {
+            let reference = match strategy {
+                ScanStrategy::Segmented { s } => scan_l2r_split(&x, &taps, &lam, s, 1),
+                _ => scan_l2r(&x, &taps, &lam, 0),
+            };
+            let warm_ws = BufferPool::new(usize::MAX);
+            for round in 0..3 {
+                let cold_ws = BufferPool::new(usize::MAX);
+                let cold = fused_scan_dir_forced_ws(
+                    &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &cold_ws,
+                );
+                let warm = fused_scan_dir_forced_ws(
+                    &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &warm_ws,
+                );
+                assert_eq!(
+                    reference.data, cold.data,
+                    "cold != ref: {strategy:?} {phase2:?} round {round}"
+                );
+                assert_eq!(
+                    reference.data, warm.data,
+                    "warm != ref: {strategy:?} {phase2:?} round {round}"
+                );
+            }
+            // Everything leased came back.
+            assert_eq!(warm_ws.stats().bytes_leased, 0, "{strategy:?} {phase2:?}");
+        }
+        // The merged direction fan (the strategy the single-direction
+        // matrix above cannot reach).
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.4f32, -0.2, 1.1, 0.0];
+        let reference = merged_4dir_ref(&x, mtaps, &lam, &logits, 0);
+        let warm_ws = BufferPool::new(usize::MAX);
+        for phase2 in [Phase2::Barrier, Phase2::WaveDir] {
+            for round in 0..2 {
+                let fan = fused_merged_4dir_forced_ws(
+                    &x,
+                    mtaps,
+                    &lam,
+                    &logits,
+                    0,
+                    ScanStrategy::DirFan,
+                    phase2,
+                    &pool,
+                    &warm_ws,
+                );
+                assert_eq!(reference.data, fan.data, "dirfan {phase2:?} round {round}");
+            }
+        }
+        assert_eq!(warm_ws.stats().bytes_leased, 0);
+    }
+
+    /// The allocation-free invariant at the engine level: on the
+    /// deterministic (serial-execution) paths, repeating an identical
+    /// call against a warm workspace records ZERO pool misses — the
+    /// second run's every acquire is served from buffers the first run
+    /// returned. A 1-thread pool takes the serial branches of every
+    /// barrier strategy, so the lease sequence is reproducible.
+    #[test]
+    fn warm_workspace_rerun_records_zero_misses() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let mut rng = Rng::new(72);
+        let (n, c, h, w) = (1, 2, 6, 48);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        for strategy in [ScanStrategy::PlanePar, ScanStrategy::Segmented { s: 3 }] {
+            let ws = BufferPool::new(usize::MAX);
+            let first = fused_scan_dir_forced_ws(
+                &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
+            );
+            let s1 = ws.stats();
+            assert!(s1.misses > 0, "{strategy:?}: cold run must allocate");
+            assert_eq!(s1.bytes_leased, 0, "{strategy:?}: leases must all return");
+            let second = fused_scan_dir_forced_ws(
+                &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
+            );
+            let s2 = ws.stats();
+            assert_eq!(
+                s2.misses, s1.misses,
+                "{strategy:?}: warm rerun allocated from the heap"
+            );
+            assert!(s2.hits > s1.hits, "{strategy:?}: warm rerun must hit the pool");
+            assert_eq!(first.data, second.data);
+        }
+        // The merged fan on the barrier schedule is serial on a 1-thread
+        // pool too.
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let mtaps = [&t_lr, &t_lr, &t_tb, &t_tb];
+        let logits = [0.3f32, -0.7, 0.2, 1.0];
+        let ws = BufferPool::new(usize::MAX);
+        let first = fused_merged_4dir_forced_ws(
+            &x,
+            mtaps,
+            &lam,
+            &logits,
+            0,
+            ScanStrategy::DirFan,
+            Phase2::Barrier,
+            &pool1,
+            &ws,
+        );
+        let s1 = ws.stats();
+        let second = fused_merged_4dir_forced_ws(
+            &x,
+            mtaps,
+            &lam,
+            &logits,
+            0,
+            ScanStrategy::DirFan,
+            Phase2::Barrier,
+            &pool1,
+            &ws,
+        );
+        assert_eq!(ws.stats().misses, s1.misses, "dirfan warm rerun allocated");
+        assert_eq!(first.data, second.data);
+    }
+
+    /// RAII under unwinding: a phase-1 piece job that panics while
+    /// holding leased scratch (the injection fires *after* the piece
+    /// lease is acquired) must return every lease to the workspace —
+    /// nothing stays out on lease, and the buffers parked in the
+    /// abandoned hand-off slots come back when the engine's slot vec
+    /// drops. The pool serves the next run without leaking.
+    #[test]
+    fn wavefront_panic_returns_all_leases_to_workspace() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let pool = crate::util::ThreadPool::new(2);
+        let ws = BufferPool::new(usize::MAX);
+        let mut rng = Rng::new(73);
+        let (n, c, h, w) = (1, 2, 5, 224);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        // w=224, S=2 -> bounds (0,112),(112,224). A (plane, dir, lo, hi)
+        // tuple unique to this test's geometry, so concurrently running
+        // suites never trip the hook.
+        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some((0, 0, 112, 224));
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            fused_scan_dir_forced_ws(
+                &x,
+                &taps,
+                &lam,
+                Direction::L2R,
+                0,
+                ScanStrategy::Segmented { s: 2 },
+                Phase2::WaveDir,
+                &pool,
+                &ws,
+            )
+        }));
+        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
+        assert!(caught.is_err(), "the injected panic must propagate");
+        let s = ws.stats();
+        assert_eq!(
+            s.bytes_leased, 0,
+            "a panicking scan leaked workspace leases: {s:?}"
+        );
+        assert!(s.bytes_pooled > 0, "returned buffers must be pooled for reuse");
+        // The pool still serves bit-exact scans afterwards.
+        let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
+        let after = fused_scan_dir_forced_ws(
+            &x,
+            &taps,
+            &lam,
+            Direction::L2R,
+            0,
+            ScanStrategy::Segmented { s: 2 },
+            Phase2::WaveDir,
+            &pool,
+            &ws,
+        );
+        assert_eq!(reference.data, after.data);
+        assert_eq!(ws.stats().bytes_leased, 0);
     }
 }

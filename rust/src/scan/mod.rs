@@ -35,6 +35,21 @@
 //! preserve the merge order), not a global barrier — and the carry
 //! correction is computed inside the scatter drain, so the retained
 //! phase-1 panel is read once and never re-written.
+//!
+//! Scratch memory: every execution strategy leases its per-call
+//! buffers (pack slabs, retained panels, staging columns, correction
+//! buffers) from a [`crate::util::BufferPool`] workspace instead of
+//! allocating. The public entry points use the process-global pool; the
+//! `_ws` variants (`fused_scan_l2r_pool_ws`, `fused_scan_dir_pool_ws`,
+//! `fused_merged_canonical_ws`) take an explicit workspace so callers —
+//! the serving coordinator above all — can isolate and observe their
+//! own pool. Pooling is bit-transparent: leases are zero-reset exactly
+//! where the old fresh-`vec!` code relied on zeroing, so pooled output
+//! is `==` fresh output under every strategy (property-tested). The
+//! planner prices a plan's workspace demand per size class
+//! ([`plan::workspace_footprint`]) so pools can be pre-warmed at bucket
+//! registration, and [`plan::eager_release_min_mem`] folds pool memory
+//! pressure into batch-release sizing.
 
 pub mod compact;
 pub mod core;
@@ -57,14 +72,15 @@ pub use direction::{
 pub use fused::{
     fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_par, fused_merged_4dir_pool,
     fused_merged_4dir_seg, fused_merged_4dir_seg_wave, fused_merged_4dir_seg_wave_twopass,
-    fused_scan_dir, fused_scan_dir_pool, fused_scan_dir_seg, fused_scan_dir_seg_wave,
-    fused_scan_dir_seg_wave_twopass, fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool,
+    fused_merged_canonical_ws, fused_scan_dir, fused_scan_dir_pool, fused_scan_dir_pool_ws,
+    fused_scan_dir_seg, fused_scan_dir_seg_wave, fused_scan_dir_seg_wave_twopass,
+    fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_pool_ws,
     fused_scan_l2r_seg, fused_scan_l2r_seg_wave, fused_scan_l2r_seg_wave_twopass,
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use plan::{
-    auto_segments, eager_release_min, plan_scan, PlanOverride, ScanGeometry, ScanPlan,
-    ScanStrategy,
+    auto_segments, eager_release_min, eager_release_min_mem, plan_scan, workspace_footprint,
+    PlanOverride, ScanGeometry, ScanPlan, ScanStrategy,
 };
 pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};
 pub use taps::Taps;

@@ -175,19 +175,22 @@ pub struct ScanGeometry {
     pub wc_min: usize,
     /// Pixels per plane per direction (H·W).
     pub plane_px: usize,
+    /// max(H, W) — the engine's column length, which sizes every
+    /// workspace column and slab lease ([`workspace_footprint`]).
+    pub hmax: usize,
 }
 
 impl ScanGeometry {
     /// Geometry of a single-direction scan over (N·C) = `nplanes`
     /// planes of `h x w` pixels — the serving backend's request shape.
     pub fn single_dir(nplanes: usize, h: usize, w: usize) -> ScanGeometry {
-        ScanGeometry { nplanes, ndirs: 1, wc_min: w, plane_px: h * w }
+        ScanGeometry { nplanes, ndirs: 1, wc_min: w, plane_px: h * w, hmax: h.max(w) }
     }
 
     /// Geometry of a 4-direction merged pass (canonical widths `w` and
     /// `h` across the direction pairs).
     pub fn merged_4dir(nplanes: usize, h: usize, w: usize) -> ScanGeometry {
-        ScanGeometry { nplanes, ndirs: 4, wc_min: w.min(h), plane_px: h * w }
+        ScanGeometry { nplanes, ndirs: 4, wc_min: w.min(h), plane_px: h * w, hmax: h.max(w) }
     }
 }
 
@@ -204,6 +207,18 @@ pub struct ScanPlan {
 }
 
 impl ScanPlan {
+    /// Total workspace bytes this plan's strategy leases at peak, in the
+    /// pool's size classes ([`workspace_footprint`] summed). The
+    /// coordinator compares this against a bucket pool's retention cap
+    /// when sizing eager releases under memory pressure
+    /// ([`eager_release_min_mem`]).
+    pub fn workspace_bytes(&self, geom: &ScanGeometry, threads: usize, tap_blocks: usize) -> usize {
+        workspace_footprint(geom, self.strategy, threads, tap_blocks)
+            .iter()
+            .map(|&(class, count)| class * 4 * count)
+            .sum()
+    }
+
     /// Forced plan constructors for tests, benches, and callers that
     /// know their geometry. Costs are estimated for `threads` workers.
     pub fn plane(geom: &ScanGeometry, threads: usize) -> ScanPlan {
@@ -444,6 +459,83 @@ fn decide(geom: &ScanGeometry, threads: usize, ov: PlanOverride) -> (ScanStrateg
 }
 
 // ---------------------------------------------------------------------
+// Workspace footprint: what a strategy leases, by pool size class
+// ---------------------------------------------------------------------
+
+/// The workspace demand of one pass under `strategy`, aggregated by the
+/// pool's size classes: `(class_len, peak_count)` pairs, where
+/// `class_len` is a buffer length already rounded to the
+/// [`crate::util::workspace::BufferPool`] class it lands in and
+/// `peak_count` the number of such buffers concurrently on lease at the
+/// strategy's peak (for `threads` workers; `tap_blocks` is the pass's
+/// N · Cw staged-tap block count).
+///
+/// This is how the coordinator pre-warms a bucket's pool at
+/// registration — one `prewarm(class_len, count)` call per pair makes
+/// the bucket's very first request allocation-free — and how
+/// [`ScanPlan::workspace_bytes`] prices a plan for the memory-pressure
+/// release rule. The model mirrors the engine's lease sites
+/// (`FusedScratch`, staged taps, retained panels, phase-1 piece
+/// scratch, `DrainScratch`) and is deliberately a slight over-estimate
+/// for the wavefront schedules (it prices the barrier form's retained
+/// panel block, which dominates the piece buffers).
+pub fn workspace_footprint(
+    geom: &ScanGeometry,
+    strategy: ScanStrategy,
+    threads: usize,
+    tap_blocks: usize,
+) -> Vec<(usize, usize)> {
+    use crate::util::workspace::size_class;
+    let threads = threads.max(1);
+    let planes = geom.nplanes;
+    let ndirs = geom.ndirs.max(1);
+    if planes == 0 || geom.plane_px == 0 {
+        return Vec::new();
+    }
+    let hmax = geom.hmax.max(1);
+    let slab = crate::scan::fused::SLAB * hmax;
+    let mut demand: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+    let mut add = |len: usize, count: usize| {
+        if len > 0 && count > 0 {
+            *demand.entry(size_class(len)).or_default() += count;
+        }
+    };
+    // Staged taps: one panel lease per direction, alive for the pass.
+    add(tap_blocks.max(1) * 3 * geom.plane_px, ndirs);
+    // Mirror run_engine's strategy dispatch: DirFan degenerates to the
+    // plane path for single-direction passes, else runs segmented s=1.
+    let segments = match strategy {
+        ScanStrategy::PlanePar => None,
+        ScanStrategy::Segmented { s } => Some(s.max(1)),
+        ScanStrategy::DirFan => (ndirs > 1).then_some(1),
+    };
+    match segments {
+        None => {
+            // One FusedScratch (b + h slabs, carry + zeros columns) per
+            // concurrent plane-block job.
+            let jobs = crate::scan::fused::plane_blocks(planes, threads).min(threads).max(1);
+            add(slab, 2 * jobs);
+            add(hmax, 2 * jobs);
+        }
+        Some(s) => {
+            // Retained phase-1 panels (the barrier form's single block).
+            add(planes * ndirs * geom.plane_px, 1);
+            // Phase-1 piece scratch (pack slab + carry + zeros) per
+            // concurrent job.
+            let p1 = threads.min(planes * ndirs * s.max(1)).max(1);
+            add(slab, p1);
+            add(hmax, 2 * p1);
+            // DrainScratch (3 columns + lazy staging slab) per
+            // concurrent phase-2 plane.
+            let p2 = threads.min(planes).max(1);
+            add(slab, p2);
+            add(hmax, 3 * p2);
+        }
+    }
+    demand.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------
 // Coordinator consumption: release sizing off the cost estimate
 // ---------------------------------------------------------------------
 
@@ -478,6 +570,34 @@ pub fn eager_release_min(
         return max_batch;
     }
     plan.cost.width.max(1).div_ceil(idle).clamp(1, max_batch)
+}
+
+/// [`eager_release_min`] extended with workspace memory pressure: when
+/// the coordinator's pool already has most of its retention cap out on
+/// lease, releasing more concurrent scans just churns the allocator
+/// (over-cap buffers are dropped on return, so every extra in-flight
+/// scan becomes misses next round). The hold scales with the leased
+/// fraction of `cap_bytes` — at or past the cap the worker holds for a
+/// full fused `max_batch`, exactly like a saturated pool. `cap_bytes ==
+/// 0` (no cap / no workspace) keeps the pure occupancy rule. Aged heads
+/// still bypass this through the age path, so the hold never adds more
+/// than `max_wait` latency.
+pub fn eager_release_min_mem(
+    plan: &ScanPlan,
+    pool_load: usize,
+    threads: usize,
+    max_batch: usize,
+    leased_bytes: u64,
+    cap_bytes: usize,
+) -> usize {
+    let base = eager_release_min(plan, pool_load, threads, max_batch);
+    if cap_bytes == 0 {
+        return base;
+    }
+    let max_batch = max_batch.max(1);
+    let frac = (leased_bytes as f64 / cap_bytes as f64).clamp(0.0, 1.0);
+    let mem = ((frac * max_batch as f64).ceil() as usize).clamp(1, max_batch);
+    base.max(mem)
 }
 
 #[cfg(test)]
@@ -696,6 +816,85 @@ mod tests {
         // Degenerate pools never wedge.
         assert_eq!(eager_release_min(&plan, 0, 0, 4), 1);
         assert_eq!(eager_release_min(&plan, 0, 8, 0), 1);
+    }
+
+    #[test]
+    fn workspace_footprint_classes_and_scaling() {
+        // Degenerate geometries have no footprint.
+        assert!(workspace_footprint(
+            &ScanGeometry::single_dir(0, 64, 64),
+            ScanStrategy::PlanePar,
+            8,
+            4
+        )
+        .is_empty());
+        assert!(workspace_footprint(
+            &ScanGeometry::single_dir(4, 0, 0),
+            ScanStrategy::PlanePar,
+            8,
+            4
+        )
+        .is_empty());
+        // Every entry is a power-of-two class >= the pool minimum, with a
+        // positive count, and classes are unique (aggregated).
+        let geom = ScanGeometry::single_dir(4, 96, 512);
+        for strategy in
+            [ScanStrategy::PlanePar, ScanStrategy::Segmented { s: 4 }, ScanStrategy::DirFan]
+        {
+            let fp = workspace_footprint(&geom, strategy, 8, 4);
+            assert!(!fp.is_empty(), "{strategy:?}");
+            for &(class, count) in &fp {
+                assert!(class.is_power_of_two() && class >= 64, "{strategy:?} class {class}");
+                assert!(count > 0, "{strategy:?}");
+            }
+            let mut classes: Vec<usize> = fp.iter().map(|&(c, _)| c).collect();
+            classes.dedup();
+            assert_eq!(classes.len(), fp.len(), "{strategy:?} classes must be aggregated");
+        }
+        // Segmented passes retain phase-1 panels on top of the plane
+        // path's scratch, so they can only cost more bytes.
+        let bytes = |s: ScanStrategy| {
+            workspace_footprint(&geom, s, 8, 4)
+                .iter()
+                .map(|&(class, count)| class * 4 * count)
+                .sum::<usize>()
+        };
+        assert!(bytes(ScanStrategy::Segmented { s: 4 }) > bytes(ScanStrategy::PlanePar));
+        // Tiny geometry: SLAB*hmax and hmax collapse into one class —
+        // the aggregation the prewarm path depends on.
+        let tiny = ScanGeometry::single_dir(2, 1, 2);
+        let fp = workspace_footprint(&tiny, ScanStrategy::PlanePar, 4, 1);
+        for &(class, _) in &fp {
+            assert!(class.is_power_of_two() && class >= 64);
+        }
+        // The plan-level helper prices the same model in bytes.
+        let plan = ScanPlan::plane(&geom, 8);
+        assert_eq!(plan.workspace_bytes(&geom, 8, 4), bytes(ScanStrategy::PlanePar));
+        assert!(plan.workspace_bytes(&geom, 8, 4) > 0);
+    }
+
+    #[test]
+    fn eager_release_memory_pressure() {
+        let geom = ScanGeometry::single_dir(8, 64, 64);
+        let plan = ScanPlan::plane(&geom, 8);
+        // No cap configured: pure occupancy rule.
+        assert_eq!(eager_release_min_mem(&plan, 0, 8, 4, u64::MAX, 0), 1);
+        // Idle pool, nothing leased: still eager.
+        assert_eq!(eager_release_min_mem(&plan, 0, 8, 4, 0, 1 << 20), 1);
+        // Pool fully leased against its cap: hold for a full batch even
+        // though threads are idle.
+        assert_eq!(eager_release_min_mem(&plan, 0, 8, 4, 1 << 20, 1 << 20), 4);
+        // Monotone in leased bytes.
+        let cap = 1usize << 20;
+        let mut last = 0usize;
+        for leased in [0u64, 1 << 18, 1 << 19, 3 << 18, 1 << 20, 1 << 21] {
+            let hold = eager_release_min_mem(&plan, 0, 8, 4, leased, cap);
+            assert!(hold >= last, "hold must not shrink as leased grows");
+            assert!((1..=4).contains(&hold));
+            last = hold;
+        }
+        // Memory pressure never lowers the occupancy floor.
+        assert_eq!(eager_release_min_mem(&plan, 8, 8, 4, 0, cap), 4);
     }
 
     #[test]

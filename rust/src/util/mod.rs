@@ -12,10 +12,12 @@ pub mod rng;
 pub mod stats;
 pub mod threadpool;
 pub mod toml;
+pub mod workspace;
 
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::{GraphBuilder, MapError, NodeId, ThreadPool};
+pub use workspace::{BufferPool, Lease, PoolStats};
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 ///

@@ -152,6 +152,14 @@ impl LatencyHistogram {
         }
     }
 
+    /// The exact maximum recorded sample, in nanoseconds. Unlike
+    /// `percentile_ns(100.0)` — which reads a log-bucket upper bound and
+    /// is only "max-ish" — this is tracked per sample and carries no
+    /// bucketing error.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
     /// Percentile in nanoseconds (upper bucket bound; <= 4.6% error).
     pub fn percentile_ns(&self, p: f64) -> f64 {
         if self.count == 0 {
@@ -247,6 +255,22 @@ mod tests {
         let p99 = h.percentile_ns(99.0);
         assert!((p99 / 9_900_000.0 - 1.0).abs() < 0.06, "p99={p99}");
         assert!(h.percentile_ns(100.0) <= 10_000_000.0);
+        let p999 = h.percentile_ns(99.9);
+        assert!((p999 / 9_990_000.0 - 1.0).abs() < 0.06, "p999={p999}");
+        // The max is exact, not bucket-rounded.
+        assert_eq!(h.max_ns(), 10_000_000);
+    }
+
+    #[test]
+    fn histogram_max_is_exact_and_merges() {
+        let mut a = LatencyHistogram::new();
+        a.record_ns(1_234_567);
+        assert_eq!(a.max_ns(), 1_234_567);
+        let mut b = LatencyHistogram::new();
+        b.record_ns(7_654_321);
+        a.merge(&b);
+        assert_eq!(a.max_ns(), 7_654_321);
+        assert_eq!(LatencyHistogram::new().max_ns(), 0);
     }
 
     #[test]

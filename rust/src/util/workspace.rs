@@ -1,0 +1,334 @@
+//! Size-classed workspace pool: leased f32 scratch buffers with RAII return.
+//!
+//! The scan engine's hot path used to build every slab, retained panel, and
+//! correction column from a fresh `vec!`; under steady-state serving that is
+//! pure allocator tax on every request. [`BufferPool`] keeps freed buffers in
+//! power-of-two size classes and hands them back out as [`Lease`]s whose
+//! `Drop` returns the buffer to the pool — including during unwinding, so the
+//! pool composes with the engine's panic-containment paths (a panicking batch
+//! member cannot leak its scratch).
+//!
+//! Zeroing discipline (bit-exactness): [`BufferPool::acquire`] returns a
+//! buffer with arbitrary contents and is only used where the engine fully
+//! overwrites before reading (pack slabs, staged-tap panels, staging
+//! columns). [`BufferPool::acquire_zeroed`] zero-resets the visible prefix
+//! and is used exactly where the old fresh-`vec!` code relied on zero
+//! initialization (carry columns, `zeros` reset columns, correction
+//! buffers, retained phase-1 panels).
+//!
+//! Counters ([`BufferPool::stats`]) make the allocation-free serving
+//! invariant testable: after one warm-up call per bucket, a repeated
+//! identical request must record zero pool misses.
+
+use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::lock_unpoisoned;
+
+/// Smallest size class, in elements. Tiny requests share one class so the
+/// free lists stay short.
+const MIN_CLASS: usize = 64;
+
+/// Default retention cap for the process-global pool: 512 MiB of f32s.
+const DEFAULT_CAP_BYTES: usize = 512 << 20;
+
+/// The size class a request for `len` elements lands in. Crate-visible
+/// so the scan planner's workspace-footprint model aggregates demand by
+/// the pool's real classes instead of re-deriving the rounding rule.
+pub(crate) fn size_class(len: usize) -> usize {
+    len.max(MIN_CLASS).next_power_of_two()
+}
+
+/// Snapshot of pool counters. `hits`/`misses` are cumulative acquire
+/// outcomes; `bytes_pooled` / `bytes_leased` are current gauges;
+/// `peak_leased` is the high-water mark of bytes out on lease.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub bytes_pooled: u64,
+    pub bytes_leased: u64,
+    pub peak_leased: u64,
+}
+
+impl PoolStats {
+    /// Fraction of acquires served from the pool (1.0 when no traffic yet
+    /// would be misleading, so an idle pool reports 0.0).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A pool of reusable f32 buffers, keyed by power-of-two size class.
+///
+/// Thread-safe: acquire/release take a short mutex over the free lists;
+/// counters are atomics. Buffers released while the retained total would
+/// exceed `cap_bytes` are dropped instead of pooled, bounding memory.
+pub struct BufferPool {
+    classes: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
+    cap_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_pooled: AtomicU64,
+    bytes_leased: AtomicU64,
+    peak_leased: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new(cap_bytes: usize) -> Self {
+        Self {
+            classes: Mutex::new(BTreeMap::new()),
+            cap_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_pooled: AtomicU64::new(0),
+            bytes_leased: AtomicU64::new(0),
+            peak_leased: AtomicU64::new(0),
+        }
+    }
+
+    /// Process-global pool used by the public scan entry points that do not
+    /// take an explicit workspace.
+    pub fn global() -> &'static BufferPool {
+        static POOL: OnceLock<BufferPool> = OnceLock::new();
+        POOL.get_or_init(|| BufferPool::new(DEFAULT_CAP_BYTES))
+    }
+
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Lease a buffer of at least `len` elements with ARBITRARY contents.
+    /// Callers must fully overwrite before reading.
+    pub fn acquire(&self, len: usize) -> Lease<'_> {
+        self.acquire_inner(len, false)
+    }
+
+    /// Lease a buffer whose visible `len` prefix is zeroed — the drop-in
+    /// replacement for `vec![0.0f32; len]`.
+    pub fn acquire_zeroed(&self, len: usize) -> Lease<'_> {
+        self.acquire_inner(len, true)
+    }
+
+    fn acquire_inner(&self, len: usize, zero: bool) -> Lease<'_> {
+        let class = size_class(len);
+        let reused = {
+            let mut map = lock_unpoisoned(&self.classes);
+            map.get_mut(&class).and_then(|v| v.pop())
+        };
+        let buf = match reused {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_pooled.fetch_sub((class * 4) as u64, Ordering::Relaxed);
+                if zero {
+                    b[..len].fill(0.0);
+                }
+                b
+            }
+            // A fresh vec is already zeroed; no extra fill needed.
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; class]
+            }
+        };
+        let leased =
+            self.bytes_leased.fetch_add((class * 4) as u64, Ordering::Relaxed) + (class * 4) as u64;
+        self.peak_leased.fetch_max(leased, Ordering::Relaxed);
+        Lease { buf, len, pool: self }
+    }
+
+    /// Ensure at least `count` free buffers of `len`'s size class exist,
+    /// respecting the retention cap. Counts neither as hit nor miss.
+    pub fn prewarm(&self, len: usize, count: usize) {
+        let class = size_class(len);
+        let mut map = lock_unpoisoned(&self.classes);
+        let have = map.get(&class).map_or(0, |v| v.len());
+        for _ in have..count {
+            if self.bytes_pooled.load(Ordering::Relaxed) as usize + class * 4 > self.cap_bytes {
+                break;
+            }
+            self.bytes_pooled.fetch_add((class * 4) as u64, Ordering::Relaxed);
+            map.entry(class).or_default().push(vec![0.0f32; class]);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_pooled: self.bytes_pooled.load(Ordering::Relaxed),
+            bytes_leased: self.bytes_leased.load(Ordering::Relaxed),
+            peak_leased: self.peak_leased.load(Ordering::Relaxed),
+        }
+    }
+
+    fn release(&self, buf: Vec<f32>) {
+        // Leases never resize the vec, so its length IS the size class.
+        let class = buf.len();
+        self.bytes_leased.fetch_sub((class * 4) as u64, Ordering::Relaxed);
+        if self.bytes_pooled.load(Ordering::Relaxed) as usize + class * 4 > self.cap_bytes {
+            return; // over cap: drop instead of retaining
+        }
+        self.bytes_pooled.fetch_add((class * 4) as u64, Ordering::Relaxed);
+        lock_unpoisoned(&self.classes).entry(class).or_default().push(buf);
+    }
+}
+
+/// RAII lease over a pooled buffer. Derefs to exactly the requested length
+/// (the size-class tail stays hidden); `Drop` returns the buffer to the
+/// pool, including when dropped during unwinding.
+pub struct Lease<'p> {
+    buf: Vec<f32>,
+    len: usize,
+    pool: &'p BufferPool,
+}
+
+impl Lease<'_> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Deref for Lease<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf[..self.len]
+    }
+}
+
+impl DerefMut for Lease<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf[..self.len]
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if !buf.is_empty() {
+            self.pool.release(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Lease<'static>>();
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<BufferPool>();
+    }
+
+    #[test]
+    fn reuse_hits_same_class() {
+        let p = BufferPool::new(usize::MAX);
+        {
+            let l = p.acquire(100);
+            assert_eq!(l.len(), 100);
+        }
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        assert_eq!(s.bytes_pooled, 128 * 4); // class of 100 is 128
+        {
+            let _l = p.acquire(97); // same class -> hit
+        }
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_leased, 0);
+        assert!(s.peak_leased >= 128 * 4);
+    }
+
+    #[test]
+    fn acquire_zeroed_resets_reused_buffer() {
+        let p = BufferPool::new(usize::MAX);
+        {
+            let mut l = p.acquire(64);
+            l.iter_mut().for_each(|v| *v = 7.0);
+        }
+        let l = p.acquire_zeroed(64);
+        assert_eq!(p.stats().hits, 1);
+        assert!(l.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn plain_acquire_does_not_rezero() {
+        let p = BufferPool::new(usize::MAX);
+        {
+            let mut l = p.acquire(64);
+            l[0] = 3.5;
+        }
+        let l = p.acquire(64);
+        assert_eq!(l[0], 3.5); // pooled contents are arbitrary by contract
+    }
+
+    #[test]
+    fn lease_returns_on_unwind() {
+        let p = BufferPool::new(usize::MAX);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _l = p.acquire(256);
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        let s = p.stats();
+        assert_eq!(s.bytes_leased, 0);
+        assert_eq!(s.bytes_pooled, 256 * 4);
+        let _l = p.acquire(256);
+        assert_eq!(p.stats().hits, 1);
+    }
+
+    #[test]
+    fn cap_drops_excess_buffers() {
+        let p = BufferPool::new(256); // 64 f32s
+        {
+            let _a = p.acquire(64);
+            let _b = p.acquire(64);
+        }
+        let s = p.stats();
+        assert_eq!(s.bytes_pooled, 256); // only one buffer retained
+        {
+            let _a = p.acquire(64); // hit
+            let _b = p.acquire(64); // miss (second was dropped)
+        }
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (1, 3));
+    }
+
+    #[test]
+    fn prewarm_avoids_misses() {
+        let p = BufferPool::new(usize::MAX);
+        p.prewarm(1000, 3);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        assert_eq!(s.bytes_pooled, 3 * 1024 * 4);
+        let _a = p.acquire(1000);
+        let _b = p.acquire(1024);
+        let _c = p.acquire(513);
+        assert_eq!(p.stats().misses, 0);
+        assert_eq!(p.stats().hits, 3);
+    }
+
+    #[test]
+    fn hit_rate_reporting() {
+        let p = BufferPool::new(usize::MAX);
+        assert_eq!(p.stats().hit_rate(), 0.0);
+        {
+            let _l = p.acquire(64);
+        }
+        let _l = p.acquire(64);
+        assert!((p.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+}
