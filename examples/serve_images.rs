@@ -61,7 +61,9 @@ fn open_loop(serve: &ServeConfig) -> anyhow::Result<()> {
         }
         match coord.submit_scan(ev.x, ev.a_raw, ev.lam, 0) {
             Ok(rx) => pending.push(rx),
-            Err(SubmitError::Backpressure) => rejected += 1,
+            Err(
+                SubmitError::Backpressure | SubmitError::Shed | SubmitError::Quota(_),
+            ) => rejected += 1,
             Err(e) => return Err(e.into()),
         }
     }
@@ -98,7 +100,9 @@ fn closed_loop(serve: &ServeConfig) -> anyhow::Result<()> {
                     inflight.push_back(rx);
                     submitted += 1;
                 }
-                Err(SubmitError::Backpressure) => break,
+                Err(
+                    SubmitError::Backpressure | SubmitError::Shed | SubmitError::Quota(_),
+                ) => break,
                 Err(e) => return Err(e.into()),
             }
         }

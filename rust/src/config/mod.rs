@@ -13,6 +13,23 @@
 //! # retention cap (MiB) and whether buckets pre-warm at registration.
 //! workspace_cap_mb = 512
 //! workspace_prewarm = true
+//! # SLO / overload policy: per-class latency budgets (µs; 0 = none)
+//! # become default deadlines for requests that do not set one; a
+//! # request whose deadline passes before execution is shed with a
+//! # structured Deadline reply. slo_p99_us is the observed-latency
+//! # target behind the rolling error budget: when more than
+//! # slo_error_budget of the recent completions violate it — or the
+//! # queue sits above shed_queue_frac of queue_cap — low-priority
+//! # admissions are shed (structured Shed) until the overload clears.
+//! slo_high_us = 0
+//! slo_normal_us = 0
+//! slo_low_us = 0
+//! slo_p99_us = 0
+//! slo_error_budget = 0.05
+//! shed_queue_frac = 0.75
+//! # Per-tenant token-bucket admission quota (0 rps = unlimited).
+//! quota_rps = 0.0
+//! quota_burst = 32
 //!
 //! [train]
 //! steps = 200
@@ -58,6 +75,28 @@ pub struct ServeConfig {
     /// Pre-warm the workspace at bucket registration so even the first
     /// request of a bucket leases from the pool (cpu backend only).
     pub workspace_prewarm: bool,
+    /// Default deadline budget (µs) for high-priority requests without
+    /// an explicit deadline. 0 = no implicit deadline.
+    pub slo_high_us: u64,
+    /// Default deadline budget (µs) for normal-priority requests.
+    pub slo_normal_us: u64,
+    /// Default deadline budget (µs) for low-priority requests.
+    pub slo_low_us: u64,
+    /// Observed p99 latency target (µs) behind the rolling error
+    /// budget. 0 disables latency-based shedding.
+    pub slo_p99_us: u64,
+    /// Error-budget threshold: shed low-priority traffic when more
+    /// than this fraction of recent completions violated `slo_p99_us`.
+    pub slo_error_budget: f64,
+    /// Queue-depth shed watermark as a fraction of `queue_cap`: queued
+    /// >= ceil(frac * cap) sheds low-priority admissions. <= 0 (or
+    /// `queue_cap` 0) disables depth-based shedding.
+    pub shed_queue_frac: f64,
+    /// Per-tenant token-bucket refill rate (requests/second). 0 =
+    /// quotas disabled.
+    pub quota_rps: f64,
+    /// Per-tenant token-bucket burst capacity (tokens).
+    pub quota_burst: usize,
 }
 
 impl Default for ServeConfig {
@@ -75,6 +114,14 @@ impl Default for ServeConfig {
             seed: 0,
             workspace_cap_mb: 512,
             workspace_prewarm: true,
+            slo_high_us: 0,
+            slo_normal_us: 0,
+            slo_low_us: 0,
+            slo_p99_us: 0,
+            slo_error_budget: 0.05,
+            shed_queue_frac: 0.75,
+            quota_rps: 0.0,
+            quota_burst: 32,
         }
     }
 }
@@ -171,6 +218,14 @@ impl Config {
         s.seed = t.usize_or("serve.seed", s.seed as usize) as u64;
         s.workspace_cap_mb = t.usize_or("serve.workspace_cap_mb", s.workspace_cap_mb);
         s.workspace_prewarm = t.bool_or("serve.workspace_prewarm", s.workspace_prewarm);
+        s.slo_high_us = t.usize_or("serve.slo_high_us", s.slo_high_us as usize) as u64;
+        s.slo_normal_us = t.usize_or("serve.slo_normal_us", s.slo_normal_us as usize) as u64;
+        s.slo_low_us = t.usize_or("serve.slo_low_us", s.slo_low_us as usize) as u64;
+        s.slo_p99_us = t.usize_or("serve.slo_p99_us", s.slo_p99_us as usize) as u64;
+        s.slo_error_budget = t.f64_or("serve.slo_error_budget", s.slo_error_budget);
+        s.shed_queue_frac = t.f64_or("serve.shed_queue_frac", s.shed_queue_frac);
+        s.quota_rps = t.f64_or("serve.quota_rps", s.quota_rps);
+        s.quota_burst = t.usize_or("serve.quota_burst", s.quota_burst);
 
         let tr = &mut self.train;
         tr.steps = t.usize_or("train.steps", tr.steps);
@@ -205,6 +260,14 @@ impl Config {
         if a.flag("no-workspace-prewarm") {
             s.workspace_prewarm = false;
         }
+        s.slo_high_us = a.u64_or("slo-high-us", s.slo_high_us);
+        s.slo_normal_us = a.u64_or("slo-normal-us", s.slo_normal_us);
+        s.slo_low_us = a.u64_or("slo-low-us", s.slo_low_us);
+        s.slo_p99_us = a.u64_or("slo-p99-us", s.slo_p99_us);
+        s.slo_error_budget = a.f64_or("slo-error-budget", s.slo_error_budget);
+        s.shed_queue_frac = a.f64_or("shed-queue-frac", s.shed_queue_frac);
+        s.quota_rps = a.f64_or("quota-rps", s.quota_rps);
+        s.quota_burst = a.usize_or("quota-burst", s.quota_burst);
 
         let tr = &mut self.train;
         tr.steps = a.usize_or("steps", tr.steps);
@@ -288,6 +351,37 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.serve.workspace_cap_mb, 128);
         assert!(!cfg.serve.workspace_prewarm);
+    }
+
+    #[test]
+    fn slo_and_quota_knobs_from_toml_and_cli() {
+        let t = Toml::parse(
+            "[serve]\nslo_p99_us = 20000\nslo_low_us = 2000\nquota_rps = 50.5\nshed_queue_frac = 0.5\n",
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.serve.slo_p99_us, 0);
+        assert_eq!(cfg.serve.quota_rps, 0.0);
+        assert_eq!(cfg.serve.quota_burst, 32);
+        assert_eq!(cfg.serve.slo_error_budget, 0.05);
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.serve.slo_p99_us, 20_000);
+        assert_eq!(cfg.serve.slo_low_us, 2_000);
+        assert_eq!(cfg.serve.quota_rps, 50.5);
+        assert_eq!(cfg.serve.shed_queue_frac, 0.5);
+        let cfg = Config::from_args(&args(&[
+            "--slo-high-us",
+            "500",
+            "--quota-rps=10",
+            "--quota-burst",
+            "8",
+            "--slo-error-budget=0.1",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.serve.slo_high_us, 500);
+        assert_eq!(cfg.serve.quota_rps, 10.0);
+        assert_eq!(cfg.serve.quota_burst, 8);
+        assert_eq!(cfg.serve.slo_error_budget, 0.1);
     }
 
     #[test]

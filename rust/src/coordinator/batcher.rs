@@ -1,11 +1,21 @@
 //! Shape-bucketed dynamic batching policy.
 //!
-//! Requests accumulate in per-bucket FIFO queues. A batch is released
-//! when (a) the head request has waited `max_wait`, or (b) the queue
-//! holds at least `max_batch` requests. Released batches are fused to
-//! the largest compiled batch size that fits (artifact batch sizes come
+//! Requests accumulate in per-bucket queues ordered by *effective
+//! release instant* (earliest-deadline-first): a deadline-less request
+//! releases when it has aged `max_wait`, a deadlined one releases at
+//! least `max_wait` before its deadline (see
+//! [`Request::release_at`]), so latency-critical requests jump the
+//! line without starving aged peers. A batch is released when (a) the
+//! head request's release instant has passed, or (b) the queue holds
+//! at least `max_batch` requests. Released batches are fused to the
+//! largest compiled batch size that fits (artifact batch sizes come
 //! from the manifest, e.g. {1, 2, 4}), splitting greedily: 7 queued ->
 //! 4 + 2 + 1 if the caller keeps draining.
+//!
+//! Expired requests (deadline already passed at pop time) are never
+//! executed dead: the clocked pop paths shed them into an internal
+//! side list the serving worker drains via [`Batcher::take_expired`]
+//! and answers with a structured `Deadline` reply.
 //!
 //! The policy is deliberately separate from the execution loop so it can
 //! be unit-tested (and criterion-benched) without PJRT.
@@ -65,6 +75,9 @@ pub struct Batcher {
     nonempty: BTreeSet<Bucket>,
     /// Dynamically registered buckets, pruned once drained.
     dynamic: BTreeSet<Bucket>,
+    /// Requests whose deadline passed before release: shed out of the
+    /// queues by the clocked pop paths, awaiting [`Batcher::take_expired`].
+    expired: Vec<Request>,
     rr_cursor: usize,
     queued: usize,
 }
@@ -77,6 +90,7 @@ impl Batcher {
             batch_sizes: BTreeMap::new(),
             nonempty: BTreeSet::new(),
             dynamic: BTreeSet::new(),
+            expired: Vec::new(),
             rr_cursor: 0,
             queued: 0,
         }
@@ -132,9 +146,19 @@ impl Batcher {
     /// artifact batch size of 1 in `pop_batch` and produced executions
     /// against artifacts that do not exist).
     pub fn enqueue(&mut self, bucket: Bucket, req: Request) -> Result<(), Request> {
+        let max_wait = self.policy.max_wait;
         match self.queues.get_mut(&bucket) {
             Some(q) => {
-                q.push_back(req);
+                // Earliest-deadline-first insert: keep the queue sorted
+                // by effective release instant, stable (FIFO) for equal
+                // keys — deadline-less traffic at the same arrival
+                // keeps its age order, a tight deadline moves up.
+                let key = req.release_at(max_wait);
+                let mut at = q.len();
+                while at > 0 && q[at - 1].release_at(max_wait) > key {
+                    at -= 1;
+                }
+                q.insert(at, req);
                 self.queued += 1;
                 self.nonempty.insert(bucket);
                 Ok(())
@@ -143,15 +167,22 @@ impl Batcher {
         }
     }
 
-    /// Next deadline at which some queue becomes releasable by age (for
-    /// condvar timeouts). None when everything is empty. Walks the
-    /// non-empty index only.
+    /// Next instant at which some queue head becomes releasable —
+    /// by age or by deadline pressure (for condvar timeouts). None when
+    /// everything is empty. Walks the non-empty index only.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.nonempty
             .iter()
             .filter_map(|k| self.queues.get(k).and_then(|q| q.front()))
-            .map(|r| r.arrived + self.policy.max_wait)
+            .map(|r| r.release_at(self.policy.max_wait))
             .min()
+    }
+
+    /// Drain the requests the clocked pop paths shed for passing their
+    /// deadline while queued. The serving worker answers each with a
+    /// structured `Deadline` reply; tests use it to observe shedding.
+    pub fn take_expired(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.expired)
     }
 
     /// Pop a releasable batch, preferring (fairly, round-robin) buckets
@@ -160,23 +191,30 @@ impl Batcher {
     /// requests (len <= fused size; len == fused size unless the bucket
     /// only offers larger artifacts — callers pad in that case).
     pub fn pop_batch(&mut self, now: Instant) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_releasable(Some(now), |_, _| 1)
+        self.pop_releasable(Some(now), |_, _, _| 1)
     }
 
     /// The shared pop core: round-robin over the *non-empty* buckets
-    /// only, releasing the first that is full or whose head aged out
-    /// (`now = None` treats every head as aged — the clock-free eager
-    /// path) and that holds at least `min_for(bucket, queue_len)`
-    /// requests (clamped to `[1, max_batch]`). A bucket drained to
-    /// empty leaves the index; a drained *dynamic* bucket is pruned
-    /// entirely.
+    /// only, releasing the first that is full or whose head's effective
+    /// release instant has passed (`now = None` treats every head as
+    /// releasable — the clock-free eager path) and that holds at least
+    /// `min_for(bucket, queue_len, head_deadline)` requests (clamped to
+    /// `[1, max_batch]`; `head_deadline` is the head request's explicit
+    /// deadline, the hook eager release sizing uses for deadline
+    /// pressure). A bucket drained to empty leaves the index; a drained
+    /// *dynamic* bucket is pruned entirely.
     ///
-    /// Instant comparisons saturate: callers race `Instant::now()`
-    /// against enqueuers taking timestamps under a different lock
-    /// ordering, so a `now` slightly earlier than a head's `arrived` is
-    /// legal and must read as "zero wait", not a
-    /// `duration_since` underflow panic that poisons the batcher.
-    fn pop_releasable<F: Fn(&Bucket, usize) -> usize>(
+    /// Clocked pops first shed every *expired* request in each visited
+    /// bucket into the [`Batcher::take_expired`] side list — a dead
+    /// request must never be executed, and must not hold a batch slot.
+    ///
+    /// Instant comparisons stay order-based (never `duration_since`
+    /// subtraction): callers race `Instant::now()` against enqueuers
+    /// taking timestamps under a different lock ordering, so a `now`
+    /// slightly earlier than a head's `arrived` is legal and must read
+    /// as "not yet releasable", not an underflow panic that poisons the
+    /// batcher.
+    fn pop_releasable<F: Fn(&Bucket, usize, Option<Instant>) -> usize>(
         &mut self,
         now: Option<Instant>,
         min_for: F,
@@ -187,20 +225,40 @@ impl Batcher {
         let keys: Vec<Bucket> = self.nonempty.iter().cloned().collect();
         let n = keys.len();
         let max_batch = self.policy.max_batch.max(1);
+        let max_wait = self.policy.max_wait;
         for i in 0..n {
             let k = &keys[(self.rr_cursor + i) % n];
             let q = self.queues.get_mut(k).unwrap();
             debug_assert!(!q.is_empty(), "indexed bucket with empty queue");
-            let min_len = min_for(k, q.len()).clamp(1, max_batch);
+            if let Some(now) = now {
+                // Shed expired requests before sizing the release.
+                let mut j = 0;
+                while j < q.len() {
+                    if q[j].expired(now) {
+                        let r = q.remove(j).expect("index in bounds");
+                        self.queued -= 1;
+                        self.expired.push(r);
+                    } else {
+                        j += 1;
+                    }
+                }
+                if q.is_empty() {
+                    self.nonempty.remove(k);
+                    if self.dynamic.remove(k) {
+                        self.queues.remove(k);
+                        self.batch_sizes.remove(k);
+                    }
+                    continue;
+                }
+            }
+            let head_deadline = q.front().and_then(|r| r.deadline);
+            let min_len = min_for(k, q.len(), head_deadline).clamp(1, max_batch);
             if q.len() < min_len {
                 continue;
             }
             let head_aged = match now {
                 None => true,
-                Some(now) => {
-                    now.saturating_duration_since(q.front().unwrap().arrived)
-                        >= self.policy.max_wait
-                }
+                Some(now) => now >= q.front().unwrap().release_at(max_wait),
             };
             let full = q.len() >= self.policy.max_batch;
             if !(head_aged || full) {
@@ -253,17 +311,20 @@ impl Batcher {
     /// callers release them through [`Batcher::pop_batch`] first, where
     /// age always wins.
     pub fn pop_eager_min(&mut self, min_len: usize) -> Option<(Bucket, usize, Vec<Request>)> {
-        self.pop_eager_by(|_, _| min_len)
+        self.pop_eager_by(|_, _, _| min_len)
     }
 
     /// Plan-cost-aware eager pop: like [`Batcher::pop_eager_min`], but
     /// the minimum release size is computed *per bucket* by `min_for`
-    /// (given the bucket and its queue length). The serving worker
-    /// passes [`crate::scan::plan::eager_release_min`] over the
+    /// (given the bucket, its queue length, and the head request's
+    /// explicit deadline if any). The serving worker passes
+    /// [`crate::scan::plan::eager_release_min_slo`] over the
     /// bucket-geometry's execution plan, so release sizing follows the
     /// plan's cost estimate — how much of the pool one request's fan
-    /// would actually cover — instead of a global saturated/idle bool.
-    pub fn pop_eager_by<F: Fn(&Bucket, usize) -> usize>(
+    /// would actually cover — tightened by deadline pressure: a head
+    /// close to its deadline releases early instead of holding for a
+    /// fuller batch.
+    pub fn pop_eager_by<F: Fn(&Bucket, usize, Option<Instant>) -> usize>(
         &mut self,
         min_for: F,
     ) -> Option<(Bucket, usize, Vec<Request>)> {
@@ -295,6 +356,15 @@ mod tests {
     }
 
     fn req(id: u64, c: usize, arrived: Instant) -> (Request, mpsc::Receiver<Response>) {
+        req_deadline(id, c, arrived, None)
+    }
+
+    fn req_deadline(
+        id: u64,
+        c: usize,
+        arrived: Instant,
+        deadline: Option<Instant>,
+    ) -> (Request, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
         let r = Request {
             id,
@@ -305,6 +375,9 @@ mod tests {
             },
             kchunk: 0,
             arrived,
+            priority: Default::default(),
+            deadline,
+            tenant: 0,
             reply: tx,
         };
         (r, rx)
@@ -652,6 +725,9 @@ mod tests {
             },
             kchunk: 0,
             arrived,
+            priority: Default::default(),
+            deadline: None,
+            tenant: 0,
             reply: tx,
         };
         (r, rx)
@@ -677,7 +753,8 @@ mod tests {
             rxs.push(rx);
         }
         // Hold the c8 bucket for a full batch, release c16 partials.
-        let sized = |bk: &Bucket, _len: usize| if bk.c == 8 { 4 } else { 1 };
+        let sized =
+            |bk: &Bucket, _len: usize, _dl: Option<Instant>| if bk.c == 8 { 4 } else { 1 };
         let (bk, _, reqs) = b.pop_eager_by(sized).expect("c16 releases");
         assert_eq!(bk.c, 16);
         assert_eq!(reqs.len(), 2);
@@ -691,5 +768,122 @@ mod tests {
         }
         let (bk, fused, reqs) = b.pop_eager_by(sized).expect("full c8");
         assert_eq!((bk.c, fused, reqs.len()), (8, 4, 4));
+    }
+
+    /// Earliest-deadline-first release: a later-arriving request with a
+    /// tight deadline jumps ahead of an older deadline-less peer, and
+    /// becomes releasable `max_wait` before its deadline.
+    #[test]
+    fn deadline_orders_release_ahead_of_age() {
+        // Artifact sizes {1} so every pop releases exactly the head,
+        // while max_batch 4 keeps the queue from counting as full.
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(1_000),
+            queue_cap: 16,
+            eager_idle: false,
+        });
+        b.register_bucket(bucket(8), vec![1]);
+        let t0 = Instant::now();
+        let (r1, _rx1) = req(1, 8, t0);
+        b.enqueue(bucket(8), r1).expect("registered");
+        // Arrives after r1 but must release first: deadline t0+1500µs
+        // -> effective release t0+500µs, vs r1's aged t0+1000µs.
+        let (r2, _rx2) = req_deadline(2, 8, t0, Some(t0 + Duration::from_micros(1_500)));
+        b.enqueue(bucket(8), r2).expect("registered");
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_micros(500));
+        // Before either release instant: nothing pops.
+        assert!(b.pop_batch(t0 + Duration::from_micros(400)).is_none());
+        // Past the deadlined head's release instant (but before its
+        // deadline and before r1 ages): r2 releases first.
+        let (_, _, reqs) = b.pop_batch(t0 + Duration::from_micros(600)).expect("EDF head");
+        assert_eq!(reqs[0].id, 2);
+        assert!(b.pop_batch(t0 + Duration::from_micros(600)).is_none(), "r1 not aged yet");
+        let (_, _, reqs) = b.pop_batch(t0 + Duration::from_micros(1_100)).expect("aged");
+        assert_eq!(reqs[0].id, 1);
+        assert!(b.take_expired().is_empty(), "nothing expired in this run");
+    }
+
+    /// Expired requests are shed at pop time — never handed out as a
+    /// batch — including ones already expired when they were enqueued.
+    #[test]
+    fn expired_requests_shed_at_pop_not_executed() {
+        let mut b = mk_batcher(4, 1_000);
+        let t0 = Instant::now();
+        // Expired at enqueue (deadline == arrival).
+        let (dead, _rx) = req_deadline(1, 8, t0, Some(t0));
+        b.enqueue(bucket(8), dead).expect("registered");
+        // A live peer in the same bucket.
+        let (live, _rx2) = req(2, 8, t0);
+        b.enqueue(bucket(8), live).expect("registered");
+        assert_eq!(b.queued(), 2);
+        let (_, _, reqs) = b.pop_batch(t0 + Duration::from_micros(2_000)).expect("live head");
+        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        let shed = b.take_expired();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 1);
+        assert_eq!(b.queued(), 0);
+        assert!(b.take_expired().is_empty(), "take_expired drains");
+    }
+
+    /// A dynamic bucket whose queue expires wholesale is pruned from the
+    /// non-empty index *and* its registration, exactly like a drained
+    /// one — expiry must not leave ghost index entries behind.
+    #[test]
+    fn all_expired_dynamic_bucket_pruned_from_index() {
+        let mut b = mk_batcher(4, 1_000);
+        b.register_bucket_dynamic(bucket(16), vec![1, 2, 4]);
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req_deadline(i, 16, t0, Some(t0 + Duration::from_micros(10)));
+            b.enqueue(bucket(16), r).expect("registered");
+            rxs.push(rx);
+        }
+        assert_eq!(b.nonempty_buckets(), 1);
+        // All three expired: the pop sheds them, finds the bucket empty,
+        // prunes it, and returns None (nothing releasable).
+        assert!(b.pop_batch(t0 + Duration::from_micros(50)).is_none());
+        assert_eq!(b.take_expired().len(), 3);
+        assert_eq!((b.queued(), b.nonempty_buckets()), (0, 0));
+        assert!(!b.known_bucket(&bucket(16)), "expired-out dynamic bucket pruned");
+        // Static buckets survive wholesale expiry (bucket(8) is static).
+        let (r, _rx) = req_deadline(9, 8, t0, Some(t0 + Duration::from_micros(10)));
+        b.enqueue(bucket(8), r).expect("registered");
+        assert!(b.pop_batch(t0 + Duration::from_micros(50)).is_none());
+        assert_eq!(b.take_expired().len(), 1);
+        assert!(b.known_bucket(&bucket(8)));
+    }
+
+    /// `next_deadline` with mixed deadline/no-deadline heads: always the
+    /// minimum effective release instant, and non-increasing as more
+    /// urgent requests join (the stale-`now` regression family — a
+    /// deadline in the past must yield a past instant, not a panic).
+    #[test]
+    fn next_deadline_mixed_heads_is_min_and_monotone() {
+        let mut b = mk_batcher(4, 1_000);
+        b.register_bucket(bucket(16), vec![1]);
+        let t0 = Instant::now();
+        let (r, _rx1) = req(1, 8, t0);
+        b.enqueue(bucket(8), r).expect("registered");
+        let d1 = b.next_deadline().unwrap();
+        assert_eq!(d1, t0 + Duration::from_micros(1_000));
+        // A deadlined head in another bucket pulls the minimum down.
+        let (r, _rx2) = req_deadline(2, 16, t0, Some(t0 + Duration::from_micros(1_400)));
+        b.enqueue(bucket(16), r).expect("registered");
+        let d2 = b.next_deadline().unwrap();
+        assert_eq!(d2, t0 + Duration::from_micros(400));
+        assert!(d2 <= d1, "next_deadline must be non-increasing as urgency joins");
+        // An even tighter deadline (already releasable — effective
+        // instant at or before arrival) pulls it past t0, no panic.
+        let (r, _rx3) = req_deadline(3, 8, t0, Some(t0 + Duration::from_micros(500)));
+        b.enqueue(bucket(8), r).expect("registered");
+        let d3 = b.next_deadline().unwrap();
+        assert!(d3 <= t0, "tight deadline clamps to arrival");
+        assert!(d3 <= d2);
+        // A later, deadline-less arrival must not move it at all.
+        let (r, _rx4) = req(4, 16, t0 + Duration::from_micros(300));
+        b.enqueue(bucket(16), r).expect("registered");
+        assert_eq!(b.next_deadline().unwrap(), d3);
     }
 }

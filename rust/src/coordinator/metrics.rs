@@ -1,11 +1,24 @@
-//! Serving metrics: latency histograms per stage, throughput, queue and
-//! batching statistics. Shared across workers behind a mutex; snapshots
+//! Serving metrics: latency histograms per stage (aggregate, per
+//! priority class, and per shape bucket), throughput, queue/batching
+//! statistics, split rejection counters (backpressure / shed / expired
+//! / quota / invalid), and a rolling SLO error budget — the fraction of
+//! recently completed requests whose total latency violated the
+//! configured p99 SLO. Shared across workers behind a mutex; snapshots
 //! are cheap copies for reporting.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
+use super::request::{Bucket, Priority};
 use crate::util::stats::{fmt_time_ns, LatencyHistogram, Summary};
 use crate::util::PoolStats;
+
+/// Completed-request window the error budget is computed over.
+const SLO_WINDOW: usize = 512;
+/// Per-bucket histogram cap: beyond this many distinct buckets, new
+/// geometries fold into the aggregate only (bounds snapshot cost under
+/// the dynamic-registration churn the batcher allows).
+const MAX_BUCKET_HISTS: usize = 128;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -14,9 +27,28 @@ pub struct Metrics {
     pub total: LatencyHistogram,
     pub batch_sizes: Summary,
     pub completed: u64,
+    /// Aggregate admission rejections (back-compat): the sum of the
+    /// split counters below.
     pub rejected: u64,
     pub errors: u64,
     pub padded_slots: u64,
+    /// Split rejection counters — why traffic was refused.
+    pub rej_backpressure: u64,
+    pub rej_shed: u64,
+    pub rej_expired: u64,
+    pub rej_quota: u64,
+    pub rej_invalid: u64,
+    /// Requests answered with a structured `Closed` reply at shutdown
+    /// (not an admission rejection: they were admitted, then drained).
+    pub closed: u64,
+    /// Per-priority-class total-latency histograms and outcome counters
+    /// (indexed by [`Priority::index`]).
+    pub class_total: [LatencyHistogram; 3],
+    pub class_completed: [u64; 3],
+    pub class_shed: [u64; 3],
+    pub class_expired: [u64; 3],
+    /// Per-shape-bucket total-latency histograms (capped).
+    pub bucket_total: BTreeMap<Bucket, LatencyHistogram>,
     /// Workspace pool counters, snapshotted once per served batch (the
     /// pool's counters are cumulative, so the latest snapshot is the
     /// current truth; `ws_peak_leased` keeps its own high-water mark so
@@ -25,6 +57,12 @@ pub struct Metrics {
     pub ws_misses: u64,
     pub ws_bytes_pooled: u64,
     pub ws_peak_leased: u64,
+    /// p99 SLO threshold the error budget is measured against (0 = no
+    /// SLO configured, budget always 0).
+    slo_ns: u64,
+    /// Ring of the last [`SLO_WINDOW`] completions: did each violate
+    /// the SLO?
+    slo_window: VecDeque<bool>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -34,7 +72,20 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_request(&mut self, queue_ns: u64, execute_ns: u64, total_ns: u64, batch: usize) {
+    /// Metrics with an SLO threshold for the rolling error budget.
+    pub fn with_slo(slo_ns: u64) -> Metrics {
+        Metrics { slo_ns, ..Metrics::default() }
+    }
+
+    pub fn record_request(
+        &mut self,
+        class: Priority,
+        bucket: Option<&Bucket>,
+        queue_ns: u64,
+        execute_ns: u64,
+        total_ns: u64,
+        batch: usize,
+    ) {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
@@ -44,10 +95,58 @@ impl Metrics {
         self.total.record_ns(total_ns);
         self.batch_sizes.add(batch as f64);
         self.completed += 1;
+        self.class_total[class.index()].record_ns(total_ns);
+        self.class_completed[class.index()] += 1;
+        if let Some(b) = bucket {
+            if let Some(h) = self.bucket_total.get_mut(b) {
+                h.record_ns(total_ns);
+            } else if self.bucket_total.len() < MAX_BUCKET_HISTS {
+                let mut h = LatencyHistogram::default();
+                h.record_ns(total_ns);
+                self.bucket_total.insert(b.clone(), h);
+            }
+        }
+        if self.slo_ns > 0 {
+            if self.slo_window.len() == SLO_WINDOW {
+                self.slo_window.pop_front();
+            }
+            self.slo_window.push_back(total_ns > self.slo_ns);
+        }
     }
 
-    pub fn record_rejection(&mut self) {
+    pub fn record_backpressure(&mut self) {
         self.rejected += 1;
+        self.rej_backpressure += 1;
+    }
+
+    /// Admission-time load shed (low-priority traffic under overload).
+    pub fn record_shed(&mut self, class: Priority) {
+        self.rejected += 1;
+        self.rej_shed += 1;
+        self.class_shed[class.index()] += 1;
+    }
+
+    /// Deadline expiry: the request was shed from the queue (or at the
+    /// executor) after its deadline passed, answered `Deadline`.
+    pub fn record_expired(&mut self, class: Priority) {
+        self.rejected += 1;
+        self.rej_expired += 1;
+        self.class_expired[class.index()] += 1;
+    }
+
+    pub fn record_quota(&mut self) {
+        self.rejected += 1;
+        self.rej_quota += 1;
+    }
+
+    pub fn record_invalid(&mut self) {
+        self.rejected += 1;
+        self.rej_invalid += 1;
+    }
+
+    /// A queued/in-flight request resolved with `Closed` at shutdown.
+    pub fn record_closed(&mut self) {
+        self.closed += 1;
     }
 
     pub fn record_error(&mut self) {
@@ -77,6 +176,22 @@ impl Metrics {
         }
     }
 
+    /// Rolling error budget: the fraction of the last [`SLO_WINDOW`]
+    /// completions whose total latency exceeded the configured SLO.
+    /// 0.0 with no SLO configured or before any completion.
+    pub fn error_budget(&self) -> f64 {
+        if self.slo_window.is_empty() {
+            return 0.0;
+        }
+        let bad = self.slo_window.iter().filter(|&&v| v).count();
+        bad as f64 / self.slo_window.len() as f64
+    }
+
+    /// The configured p99 SLO threshold (0 = none).
+    pub fn slo_ns(&self) -> u64 {
+        self.slo_ns
+    }
+
     /// Completed requests per second over the serving window.
     pub fn throughput_rps(&self) -> f64 {
         match (self.started, self.finished) {
@@ -90,9 +205,19 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "requests: {} completed, {} rejected, {} errors\n",
-            self.completed, self.rejected, self.errors
+            "requests: {} completed, {} rejected, {} errors, {} closed\n",
+            self.completed, self.rejected, self.errors, self.closed
         ));
+        if self.rejected > 0 {
+            s.push_str(&format!(
+                "rejections: {} backpressure, {} shed, {} expired, {} quota, {} invalid\n",
+                self.rej_backpressure,
+                self.rej_shed,
+                self.rej_expired,
+                self.rej_quota,
+                self.rej_invalid
+            ));
+        }
         s.push_str(&format!(
             "throughput: {:.1} req/s; mean batch {:.2} (padded slots {})\n",
             self.throughput_rps(),
@@ -111,6 +236,31 @@ impl Metrics {
                 fmt_time_ns(h.percentile_ns(99.0)),
                 fmt_time_ns(h.percentile_ns(99.9)),
                 fmt_time_ns(h.max_ns() as f64),
+            ));
+        }
+        for p in Priority::ALL {
+            let i = p.index();
+            if self.class_completed[i] + self.class_shed[i] + self.class_expired[i] == 0 {
+                continue;
+            }
+            let h = &self.class_total[i];
+            s.push_str(&format!(
+                "class {:<6}: {} completed, {} shed, {} expired | p50 {} | p99 {} | p999 {}\n",
+                p.label(),
+                self.class_completed[i],
+                self.class_shed[i],
+                self.class_expired[i],
+                fmt_time_ns(h.percentile_ns(50.0)),
+                fmt_time_ns(h.percentile_ns(99.0)),
+                fmt_time_ns(h.percentile_ns(99.9)),
+            ));
+        }
+        if self.slo_ns > 0 {
+            s.push_str(&format!(
+                "slo: p99 target {}, error budget spent {:.1}% (window {})\n",
+                fmt_time_ns(self.slo_ns as f64),
+                self.error_budget() * 100.0,
+                self.slo_window.len(),
             ));
         }
         s.push_str(&format!(
@@ -144,29 +294,62 @@ fn fmt_bytes(b: u64) -> String {
 mod tests {
     use super::*;
 
+    fn bucket() -> Bucket {
+        Bucket { c: 8, h: 64, w: 64, kchunk: 0, per_channel: false }
+    }
+
     #[test]
     fn records_accumulate() {
         let mut m = Metrics::new();
         for i in 0..100u64 {
-            m.record_request(1000 + i, 5000, 7000 + i, 4);
+            m.record_request(Priority::Normal, Some(&bucket()), 1000 + i, 5000, 7000 + i, 4);
         }
-        m.record_rejection();
+        m.record_backpressure();
         assert_eq!(m.completed, 100);
         assert_eq!(m.rejected, 1);
+        assert_eq!(m.rej_backpressure, 1);
         assert_eq!(m.batch_sizes.mean(), 4.0);
         assert!(m.total.percentile_ns(50.0) > 6000.0);
+        assert_eq!(m.class_completed[Priority::Normal.index()], 100);
+        assert_eq!(m.bucket_total[&bucket()].max_ns(), 7099);
+    }
+
+    #[test]
+    fn split_rejection_counters_sum_into_aggregate() {
+        let mut m = Metrics::new();
+        m.record_backpressure();
+        m.record_shed(Priority::Low);
+        m.record_shed(Priority::Low);
+        m.record_expired(Priority::Normal);
+        m.record_quota();
+        m.record_invalid();
+        m.record_closed();
+        assert_eq!(m.rejected, 6, "aggregate = sum of split counters");
+        assert_eq!(
+            (m.rej_backpressure, m.rej_shed, m.rej_expired, m.rej_quota, m.rej_invalid),
+            (1, 2, 1, 1, 1)
+        );
+        assert_eq!(m.closed, 1, "closed is not an admission rejection");
+        assert_eq!(m.class_shed[Priority::Low.index()], 2);
+        assert_eq!(m.class_expired[Priority::Normal.index()], 1);
+        let r = m.report();
+        assert!(r.contains("1 backpressure, 2 shed, 1 expired, 1 quota, 1 invalid"), "{r}");
+        assert!(r.contains("1 closed"), "{r}");
     }
 
     #[test]
     fn report_contains_key_lines() {
         let mut m = Metrics::new();
-        m.record_request(100, 200, 400, 2);
+        m.record_request(Priority::Normal, None, 100, 200, 400, 2);
         let r = m.report();
         assert!(r.contains("completed"));
         assert!(r.contains("p95"));
         assert!(r.contains("p999"));
         assert!(r.contains("throughput"));
         assert!(r.contains("workspace"));
+        assert!(r.contains("class normal"), "{r}");
+        assert!(!r.contains("class high"), "classes without traffic stay silent: {r}");
+        assert!(!r.contains("slo:"), "no SLO configured: {r}");
     }
 
     #[test]
@@ -174,9 +357,47 @@ mod tests {
         let mut m = Metrics::new();
         // 1.5 ms lands mid-bucket: the log-bucketed p100 would round up,
         // the true max must print the recorded value exactly.
-        m.record_request(100, 1_500_000, 1_500_100, 1);
+        m.record_request(Priority::Normal, None, 100, 1_500_000, 1_500_100, 1);
         assert_eq!(m.execute.max_ns(), 1_500_000);
         assert!(m.report().contains("max 1.50 ms"), "{}", m.report());
+    }
+
+    #[test]
+    fn error_budget_tracks_slo_violations_over_window() {
+        let mut m = Metrics::with_slo(1_000_000); // 1 ms SLO
+        assert_eq!(m.error_budget(), 0.0);
+        for _ in 0..90 {
+            m.record_request(Priority::High, None, 0, 500_000, 500_000, 1);
+        }
+        for _ in 0..10 {
+            m.record_request(Priority::Low, None, 0, 2_000_000, 2_000_000, 1);
+        }
+        assert!((m.error_budget() - 0.1).abs() < 1e-9, "{}", m.error_budget());
+        let r = m.report();
+        assert!(r.contains("slo:"), "{r}");
+        assert!(r.contains("error budget"), "{r}");
+        // The window is bounded: flooding with good completions washes
+        // the violations out.
+        for _ in 0..SLO_WINDOW {
+            m.record_request(Priority::High, None, 0, 1, 2, 1);
+        }
+        assert_eq!(m.error_budget(), 0.0);
+        assert_eq!(m.slo_ns(), 1_000_000);
+        // No-SLO metrics never accumulate a window.
+        let mut plain = Metrics::new();
+        plain.record_request(Priority::Low, None, 0, u64::MAX / 2, u64::MAX / 2, 1);
+        assert_eq!(plain.error_budget(), 0.0);
+    }
+
+    #[test]
+    fn bucket_histograms_are_capped() {
+        let mut m = Metrics::new();
+        for i in 0..(MAX_BUCKET_HISTS + 40) {
+            let b = Bucket { c: 1 + i, h: 8, w: 8, kchunk: 0, per_channel: false };
+            m.record_request(Priority::Normal, Some(&b), 0, 100, 100, 1);
+        }
+        assert_eq!(m.bucket_total.len(), MAX_BUCKET_HISTS);
+        assert_eq!(m.completed as usize, MAX_BUCKET_HISTS + 40, "aggregate still counts all");
     }
 
     #[test]

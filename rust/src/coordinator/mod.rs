@@ -1,13 +1,20 @@
 //! The L3 serving coordinator (the paper is pitched at high-resolution
 //! inference, so L3 takes the vLLM-router shape; DESIGN.md §4):
 //!
-//! * [`request`] — request/response types and shape buckets.
+//! * [`request`] — request/response types, shape buckets, priority
+//!   classes, deadlines, and structured per-request errors.
 //! * [`batcher`] — the shape-bucketed dynamic batching policy (pure, so
-//!   it is unit-tested and benched without PJRT).
-//! * [`server`]  — admission control + worker pool driving PJRT engines.
-//! * [`metrics`] — latency histograms, throughput, batching stats.
+//!   it is unit-tested and benched without PJRT); releases by earliest
+//!   effective deadline and sheds expired requests at pop time.
+//! * [`server`]  — SLO-aware admission control (per-tenant quotas,
+//!   low-priority load shedding under overload) + worker pool driving
+//!   PJRT engines, with a shutdown drain that resolves every pending
+//!   request.
+//! * [`metrics`] — latency histograms (aggregate, per-class, and
+//!   per-bucket), typed rejection counters, rolling SLO error budget.
 //! * [`trace`]   — synthetic load generator: open-loop Poisson, plus a
-//!   Markov-modulated bursty mode for tail-latency benchmarking.
+//!   Markov-modulated bursty mode for tail-latency benchmarking and a
+//!   priority/tenant mix for overload experiments.
 
 pub mod batcher;
 pub mod metrics;
@@ -17,6 +24,11 @@ pub mod trace;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
+pub use request::{
+    validate_scan_shapes, Bucket, Payload, Priority, Request, RequestError, Response,
+    SubmitError, SubmitOptions,
+};
 pub use server::Coordinator;
-pub use trace::{generate as generate_trace, BurstConfig, TraceConfig, TraceEvent};
+pub use trace::{
+    generate as generate_trace, BurstConfig, ClassMix, TraceConfig, TraceEvent,
+};

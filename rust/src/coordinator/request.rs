@@ -7,11 +7,87 @@
 //! manifest).
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::runtime::Value;
 use crate::scan::kchunk_valid;
 use crate::Tensor;
+
+/// Priority class carried by every request. Admission-time load
+/// shedding only ever drops [`Priority::Low`] traffic; `High` and
+/// `Normal` keep their latency budget and are refused only by the hard
+/// queue cap (backpressure).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Normal
+    }
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Dense index for per-class metric arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// Per-request submission options: priority class, an optional explicit
+/// deadline (relative to submission; defaults to the class SLO budget
+/// from the `[serve]` config when unset), and a tenant id for quota
+/// accounting. `Default` is a normal-priority, deadline-less request of
+/// tenant 0 — exactly the behaviour `submit_scan` always had.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    pub deadline: Option<Duration>,
+    pub tenant: u64,
+}
+
+/// Structured per-request failure delivered *through the reply channel*
+/// (unlike [`SubmitError`], which rejects at the submit call). Clients
+/// recover it with `err.downcast_ref::<RequestError>()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request's deadline passed before execution started; it was
+    /// shed instead of being executed dead.
+    Deadline,
+    /// Load shedding dropped this request under overload.
+    Shed,
+    /// The coordinator shut down before this request could execute.
+    Closed,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Deadline => write!(f, "deadline exceeded before execution"),
+            RequestError::Shed => write!(f, "shed under overload"),
+            RequestError::Closed => write!(f, "coordinator closed before execution"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// Scan-geometry bucket key.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -113,7 +189,32 @@ pub struct Request {
     pub payload: Payload,
     pub kchunk: usize,
     pub arrived: Instant,
+    pub priority: Priority,
+    /// Absolute deadline, resolved at admission from
+    /// [`SubmitOptions::deadline`] or the class SLO budget. `None` =
+    /// no deadline (never expires, releases purely by age).
+    pub deadline: Option<Instant>,
+    pub tenant: u64,
     pub reply: mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// Effective release instant for deadline-aware batching: a
+    /// deadline-less request releases when it has aged `max_wait`; a
+    /// deadlined one releases at least `max_wait` *before* its deadline
+    /// (clamped to its arrival), so it still has the wait budget left
+    /// to execute rather than being released exactly as it expires.
+    pub fn release_at(&self, max_wait: Duration) -> Instant {
+        let aged = self.arrived + max_wait;
+        match self.deadline {
+            Some(d) => aged.min(d.checked_sub(max_wait).unwrap_or(self.arrived)),
+            None => aged,
+        }
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
 }
 
 #[derive(Debug)]
@@ -139,6 +240,11 @@ pub enum SubmitError {
     UnknownBucket(String),
     /// Malformed request (bad shapes or kchunk), rejected at admission.
     Invalid(String),
+    /// Load shedding: the coordinator is over its SLO watermark and
+    /// this request's class is sheddable (low priority).
+    Shed,
+    /// The tenant's token-bucket quota is exhausted.
+    Quota(u64),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -148,6 +254,8 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Closed => write!(f, "coordinator closed"),
             SubmitError::UnknownBucket(b) => write!(f, "no artifact for bucket {b}"),
             SubmitError::Invalid(why) => write!(f, "invalid request: {why}"),
+            SubmitError::Shed => write!(f, "shed under overload"),
+            SubmitError::Quota(t) => write!(f, "tenant {t} over quota"),
         }
     }
 }
@@ -252,5 +360,63 @@ mod tests {
     fn invalid_submit_error_displays_reason() {
         let e = SubmitError::Invalid("kchunk=7 must be 0 or divide W=64".into());
         assert!(e.to_string().contains("kchunk=7"));
+        assert!(SubmitError::Shed.to_string().contains("shed"));
+        assert!(SubmitError::Quota(7).to_string().contains("tenant 7"));
+    }
+
+    fn mk_request(arrived: Instant, deadline: Option<Instant>) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id: 0,
+            payload: Payload::Direct { artifact: "t".into(), inputs: vec![] },
+            kchunk: 0,
+            arrived,
+            priority: Priority::default(),
+            deadline,
+            tenant: 0,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn release_at_orders_by_effective_deadline() {
+        let t0 = Instant::now();
+        let w = Duration::from_micros(1_000);
+        // No deadline: release by age.
+        let r = mk_request(t0, None);
+        assert_eq!(r.release_at(w), t0 + w);
+        assert!(!r.expired(t0 + Duration::from_secs(3600)));
+        // Far deadline: age still wins (min).
+        let far = mk_request(t0, Some(t0 + Duration::from_secs(1)));
+        assert_eq!(far.release_at(w), t0 + w);
+        // Tight deadline: release a max_wait margin before it.
+        let tight = mk_request(t0, Some(t0 + Duration::from_micros(1_500)));
+        assert_eq!(tight.release_at(w), t0 + Duration::from_micros(500));
+        // Deadline inside one max_wait of arrival: release immediately
+        // (clamped to arrival, never later than the aged instant).
+        let hot = mk_request(t0, Some(t0 + Duration::from_micros(200)));
+        assert!(hot.release_at(w) <= t0);
+        assert!(hot.expired(t0 + Duration::from_micros(200)));
+        assert!(!hot.expired(t0));
+    }
+
+    #[test]
+    fn priority_index_and_labels_are_dense() {
+        assert_eq!(Priority::default(), Priority::Normal);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Priority::High.label(), "high");
+        assert_eq!(Priority::Low.label(), "low");
+        let opts = SubmitOptions::default();
+        assert_eq!((opts.priority, opts.deadline, opts.tenant), (Priority::Normal, None, 0));
+    }
+
+    #[test]
+    fn request_error_displays_and_downcasts() {
+        let e = anyhow::Error::new(RequestError::Shed);
+        assert_eq!(e.downcast_ref::<RequestError>(), Some(&RequestError::Shed));
+        assert!(RequestError::Deadline.to_string().contains("deadline"));
+        assert!(RequestError::Closed.to_string().contains("closed"));
     }
 }

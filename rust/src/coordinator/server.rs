@@ -15,6 +15,26 @@
 //! malformed shape or kchunk comes back as [`SubmitError::Invalid`]
 //! instead of panicking an executor.
 //!
+//! ## Overload robustness (SLO-aware admission and degradation)
+//!
+//! Every request carries a priority class, an optional deadline, and a
+//! tenant id ([`SubmitOptions`] via [`Coordinator::submit_scan_with`]);
+//! deadlines default to the class SLO budget (`[serve] slo_*_us`).
+//! Admission applies, in order: shape validation, per-tenant
+//! token-bucket quotas (`quota_rps`/`quota_burst` →
+//! [`SubmitError::Quota`]), and load shedding — when the queue sits
+//! above `shed_queue_frac` of `queue_cap` *or* the rolling error budget
+//! (fraction of recent completions violating `slo_p99_us`) exceeds
+//! `slo_error_budget`, low-priority requests are refused with
+//! [`SubmitError::Shed`]. High/normal traffic is never shed; it is only
+//! bounded by the hard `queue_cap` backpressure, which is how
+//! high-priority p99 stays bounded while low-priority degrades first.
+//! Queued requests whose deadline passes are shed by the batcher at pop
+//! time and answered with a structured `Deadline` error reply through
+//! their channel — never executed dead, never left hanging — and
+//! [`Coordinator::shutdown`] resolves every request still queued after
+//! the workers drain with a structured `Closed` reply.
+//!
 //! Two execution backends ([`ServeConfig::backend`]):
 //!
 //! * `"pjrt"` — compiled HLO artifacts; buckets come from the manifest
@@ -26,7 +46,7 @@
 //!   the pure-Rust serving path — bit-identical to `scan_l2r` — and
 //!   what the coordinator e2e tests exercise without artifacts.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -37,10 +57,13 @@ use anyhow::anyhow;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{validate_scan_shapes, Bucket, Payload, Request, Response, SubmitError};
+use super::request::{
+    validate_scan_shapes, Bucket, Payload, Priority, Request, RequestError, Response,
+    SubmitError, SubmitOptions,
+};
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
-use crate::scan::plan::{eager_release_min_mem, plan_scan, workspace_footprint, ScanGeometry};
+use crate::scan::plan::{eager_release_min_slo, plan_scan, workspace_footprint, ScanGeometry};
 use crate::tensor::{concat_axis0, split_axis0};
 use crate::util::{lock_unpoisoned, logging, BufferPool, PoolStats, ThreadPool};
 use crate::Tensor;
@@ -52,6 +75,103 @@ enum Backend {
     CpuFused,
 }
 
+/// Compiled view of the `[serve]` SLO knobs: per-class latency budgets
+/// (zero ⇒ no default deadline for that class), the tolerated fraction
+/// of SLO-violating completions, and the queue depth above which
+/// low-priority admission starts shedding (zero ⇒ depth shedding off).
+struct SloPolicy {
+    high: Option<Duration>,
+    normal: Option<Duration>,
+    low: Option<Duration>,
+    error_budget: f64,
+    shed_depth: usize,
+    /// Whether `slo_p99_us` is configured — gates the error-budget
+    /// overload check so unconfigured servers never take the metrics
+    /// lock on the admission path.
+    p99_set: bool,
+}
+
+impl SloPolicy {
+    fn from_cfg(cfg: &ServeConfig) -> SloPolicy {
+        let budget = |us: u64| (us > 0).then(|| Duration::from_micros(us));
+        let shed_depth = if cfg.queue_cap > 0 && cfg.shed_queue_frac > 0.0 {
+            ((cfg.queue_cap as f64 * cfg.shed_queue_frac).ceil() as usize).max(1)
+        } else {
+            0
+        };
+        SloPolicy {
+            high: budget(cfg.slo_high_us),
+            normal: budget(cfg.slo_normal_us),
+            low: budget(cfg.slo_low_us),
+            error_budget: cfg.slo_error_budget,
+            shed_depth,
+            p99_set: cfg.slo_p99_us > 0,
+        }
+    }
+
+    fn class_budget(&self, p: Priority) -> Option<Duration> {
+        match p {
+            Priority::High => self.high,
+            Priority::Normal => self.normal,
+            Priority::Low => self.low,
+        }
+    }
+}
+
+/// Per-tenant token buckets for admission quotas (`quota_rps` refill,
+/// `quota_burst` capacity). `rate <= 0` disables quotas entirely.
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+struct QuotaState {
+    rate: f64,
+    burst: f64,
+    buckets: HashMap<u64, TokenBucket>,
+}
+
+/// Cap on tracked tenants. Fully-refilled buckets are evicted first —
+/// forgetting one is lossless (a fresh bucket starts at full burst).
+const MAX_TENANTS: usize = 4096;
+
+impl QuotaState {
+    fn new(rate: f64, burst: usize) -> QuotaState {
+        QuotaState { rate, burst: burst.max(1) as f64, buckets: HashMap::new() }
+    }
+
+    fn admit(&mut self, tenant: u64, now: Instant) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let (rate, burst) = (self.rate, self.burst);
+        if self.buckets.len() >= MAX_TENANTS && !self.buckets.contains_key(&tenant) {
+            self.buckets.retain(|_, b| {
+                let dt = now.saturating_duration_since(b.last).as_secs_f64();
+                b.tokens = (b.tokens + dt * rate).min(burst);
+                b.last = now;
+                b.tokens < burst
+            });
+            if self.buckets.len() >= MAX_TENANTS {
+                // Every tracked tenant is actively draining its bucket;
+                // admit the newcomer untracked (best effort) rather
+                // than deny service on table pressure.
+                return true;
+            }
+        }
+        let b = self.buckets.entry(tenant).or_insert(TokenBucket { tokens: burst, last: now });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.last = now;
+        b.tokens = (b.tokens + dt * rate).min(burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
 struct Shared {
     batcher: Mutex<Batcher>,
     direct: Mutex<VecDeque<Request>>,
@@ -60,6 +180,8 @@ struct Shared {
     shutdown: AtomicBool,
     artifacts_dir: String,
     backend: Backend,
+    slo: SloPolicy,
+    quotas: Mutex<QuotaState>,
     /// Per-coordinator scratch pool: the cpu-fused path leases every
     /// scan-engine buffer from here, so the allocation-free invariant
     /// (and its hit/miss counters) are isolated per coordinator instead
@@ -141,10 +263,12 @@ impl Coordinator {
             batcher: Mutex::new(batcher),
             direct: Mutex::new(VecDeque::new()),
             work_ready: Condvar::new(),
-            metrics: Mutex::new(Metrics::new()),
+            metrics: Mutex::new(Metrics::with_slo(cfg.slo_p99_us.saturating_mul(1_000))),
             shutdown: AtomicBool::new(false),
             artifacts_dir: cfg.artifacts.clone(),
             backend,
+            slo: SloPolicy::from_cfg(cfg),
+            quotas: Mutex::new(QuotaState::new(cfg.quota_rps, cfg.quota_burst)),
             workspace: BufferPool::new(cfg.workspace_cap_mb << 20),
             workspace_prewarm: cfg.workspace_prewarm,
         });
@@ -166,13 +290,47 @@ impl Coordinator {
         self.workers.len()
     }
 
-    /// Submit one single-sample scan; returns the response channel.
+    /// Submit one single-sample scan with default options (normal
+    /// priority, no deadline beyond the class SLO budget, tenant 0);
+    /// returns the response channel.
     pub fn submit_scan(
         &self,
         x: Tensor,
         a_raw: Tensor,
         lam: Tensor,
         kchunk: usize,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit_scan_with(x, a_raw, lam, kchunk, SubmitOptions::default())
+    }
+
+    /// True when the coordinator should start refusing sheddable
+    /// traffic: queue depth sits at/above the shed watermark, or the
+    /// rolling error budget (fraction of recent completions violating
+    /// the p99 SLO) is overspent. Both locks are taken briefly and
+    /// never nested.
+    fn overloaded(&self) -> bool {
+        if self.shared.slo.shed_depth > 0
+            && lock_unpoisoned(&self.shared.batcher).queued() >= self.shared.slo.shed_depth
+        {
+            return true;
+        }
+        self.shared.slo.p99_set
+            && lock_unpoisoned(&self.shared.metrics).error_budget()
+                > self.shared.slo.error_budget
+    }
+
+    /// Submit one single-sample scan with explicit priority, deadline,
+    /// and tenant. Admission order: shutdown gate, shape validation,
+    /// per-tenant quota, overload shedding (low priority only), then
+    /// the bucket/backpressure checks. Every refusal is a structured
+    /// [`SubmitError`] and a typed rejection counter — never a hang.
+    pub fn submit_scan_with(
+        &self,
+        x: Tensor,
+        a_raw: Tensor,
+        lam: Tensor,
+        kchunk: usize,
+        opts: SubmitOptions,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::Closed);
@@ -181,9 +339,25 @@ impl Coordinator {
         // structured error here rather than panicking a worker later
         // (e.g. scan_l2r's kchunk-divides-W assert).
         if let Err(why) = validate_scan_shapes(&x, &a_raw, &lam, kchunk) {
-            lock_unpoisoned(&self.shared.metrics).record_rejection();
+            lock_unpoisoned(&self.shared.metrics).record_invalid();
             return Err(SubmitError::Invalid(why));
         }
+        let now = Instant::now();
+        if !lock_unpoisoned(&self.shared.quotas).admit(opts.tenant, now) {
+            lock_unpoisoned(&self.shared.metrics).record_quota();
+            return Err(SubmitError::Quota(opts.tenant));
+        }
+        // Only the low class sheds — high/normal keep their latency
+        // budget through overload and are bounded only by the hard
+        // queue_cap backpressure below.
+        if opts.priority == Priority::Low && self.overloaded() {
+            lock_unpoisoned(&self.shared.metrics).record_shed(Priority::Low);
+            return Err(SubmitError::Shed);
+        }
+        let deadline = opts
+            .deadline
+            .or_else(|| self.shared.slo.class_budget(opts.priority))
+            .map(|budget| now + budget);
         let payload = Payload::Scan { x, a_raw, lam };
         let bucket = payload.bucket(kchunk).expect("scan payload");
         let (tx, rx) = mpsc::channel();
@@ -192,11 +366,11 @@ impl Coordinator {
             let mut b = lock_unpoisoned(&self.shared.batcher);
             let known = b.known_bucket(&bucket);
             if !known && self.shared.backend != Backend::CpuFused {
-                lock_unpoisoned(&self.shared.metrics).record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_invalid();
                 return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
             }
             if !b.has_capacity() {
-                lock_unpoisoned(&self.shared.metrics).record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_backpressure();
                 return Err(SubmitError::Backpressure);
             }
             if !known {
@@ -215,7 +389,7 @@ impl Coordinator {
                 // instead of exhausting them.
                 const MAX_DYNAMIC_BUCKETS: usize = 1024;
                 if b.bucket_count() >= MAX_DYNAMIC_BUCKETS {
-                    lock_unpoisoned(&self.shared.metrics).record_rejection();
+                    lock_unpoisoned(&self.shared.metrics).record_invalid();
                     return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
                 }
                 let max = b.policy.max_batch.max(1);
@@ -226,14 +400,17 @@ impl Coordinator {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 payload,
                 kchunk,
-                arrived: Instant::now(),
+                arrived: now,
+                priority: opts.priority,
+                deadline,
+                tenant: opts.tenant,
                 reply: tx,
             };
             if b.enqueue(bucket.clone(), req).is_err() {
                 // Unreachable while the known_bucket check above holds
                 // (same lock), but the batcher no longer auto-creates
                 // queues — surface it as the structured rejection.
-                lock_unpoisoned(&self.shared.metrics).record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_invalid();
                 return Err(SubmitError::UnknownBucket(bucket.artifact(1)));
             }
         }
@@ -283,7 +460,7 @@ impl Coordinator {
         {
             let mut q = lock_unpoisoned(&self.shared.direct);
             if q.len() >= 64 {
-                lock_unpoisoned(&self.shared.metrics).record_rejection();
+                lock_unpoisoned(&self.shared.metrics).record_backpressure();
                 return Err(SubmitError::Backpressure);
             }
             q.push_back(Request {
@@ -291,6 +468,9 @@ impl Coordinator {
                 payload: Payload::Direct { artifact: artifact.to_string(), inputs },
                 kchunk: 0,
                 arrived: Instant::now(),
+                priority: Priority::default(),
+                deadline: None,
+                tenant: 0,
                 reply: tx,
             });
         }
@@ -308,14 +488,65 @@ impl Coordinator {
     }
 
     /// Graceful drain: stop admitting, process everything queued, join.
+    /// Every request still pending after the workers exit — including
+    /// any that raced past admission during the drain — resolves with a
+    /// structured [`RequestError::Closed`] reply; no client ever hangs
+    /// on a receiver across shutdown.
     pub fn shutdown(mut self) -> Metrics {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.work_ready.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        close_pending(&self.shared);
         let m = lock_unpoisoned(&self.shared.metrics).clone();
         m
+    }
+}
+
+/// Reply to a request with a structured typed error (downcastable from
+/// the `anyhow::Error` via `err.downcast_ref::<RequestError>()`).
+fn reply_request_error(r: &Request, err: RequestError) {
+    let _ = r.reply.send(Response {
+        id: r.id,
+        result: Err(anyhow::Error::new(err)),
+        queue_us: Instant::now().saturating_duration_since(r.arrived).as_micros() as u64,
+        execute_us: 0,
+        batch: 0,
+    });
+}
+
+/// Resolve expired requests the batcher shed at pop time: counted per
+/// class and answered with a `Deadline` reply — never executed dead.
+fn shed_expired(sh: &Shared, reqs: Vec<Request>) {
+    if reqs.is_empty() {
+        return;
+    }
+    let mut m = lock_unpoisoned(&sh.metrics);
+    for r in reqs {
+        m.record_expired(r.priority);
+        reply_request_error(&r, RequestError::Deadline);
+    }
+}
+
+/// Final shutdown sweep: anything still queued (a submit that raced the
+/// workers' last pop) gets a structured `Closed` reply so its receiver
+/// resolves instead of hanging on a dropped-but-never-answered channel.
+fn close_pending(sh: &Shared) {
+    let mut leftovers: Vec<Request> = Vec::new();
+    {
+        let mut b = lock_unpoisoned(&sh.batcher);
+        b.drain_all(|_, _, reqs| leftovers.extend(reqs));
+        leftovers.extend(b.take_expired());
+    }
+    leftovers.extend(lock_unpoisoned(&sh.direct).drain(..));
+    if leftovers.is_empty() {
+        return;
+    }
+    let mut m = lock_unpoisoned(&sh.metrics);
+    for r in &leftovers {
+        m.record_closed();
+        reply_request_error(r, RequestError::Closed);
     }
 }
 
@@ -343,24 +574,28 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
             }
             continue;
         }
-        // 2) Batched scan work.
-        let batch = {
+        // 2) Batched scan work. Each clocked pop may also shed expired
+        //    requests into the batcher's side-list; carry them out of
+        //    the lock scope and answer them below.
+        let (batch, expired) = {
             let mut b = lock_unpoisoned(&sh.batcher);
             loop {
                 let now = Instant::now();
-                if let Some(batch) = b.pop_batch(now) {
-                    break Some(batch);
+                let popped = b.pop_batch(now);
+                let expired = b.take_expired();
+                if popped.is_some() || !expired.is_empty() {
+                    break (popped, expired);
                 }
                 // Direct work may have arrived while we waited; bounce out
                 // to the outer loop (which prioritises it).
                 if !lock_unpoisoned(&sh.direct).is_empty() {
-                    break None;
+                    break (None, Vec::new());
                 }
                 if sh.shutdown.load(Ordering::SeqCst) {
                     // Drain leftovers regardless of age (clock-free —
                     // the shifted-horizon emulation this used to do is
                     // the stale-instant pattern the batcher retired).
-                    break b.pop_eager();
+                    break (b.pop_eager(), Vec::new());
                 }
                 // Eager-idle release: this worker has nothing runnable, so
                 // waiting out max_wait would buy batching nothing — take
@@ -377,26 +612,32 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                     let pool = ThreadPool::global();
                     let (load, threads) = (pool.load(), pool.threads());
                     let max_batch = b.policy.max_batch;
+                    let max_wait = b.policy.max_wait;
                     // Release sizing sees memory pressure too: with most
                     // of the workspace cap already on lease, extra
                     // concurrent scans would just churn the allocator.
+                    // And deadline pressure: a head running out of SLO
+                    // slack releases immediately instead of holding for
+                    // a wider fuse.
                     let ws = sh.workspace.stats();
                     let ws_cap = sh.workspace.cap_bytes();
-                    let released = b.pop_eager_by(|bucket, _qlen| {
+                    let released = b.pop_eager_by(|bucket, _qlen, head_deadline| {
                         let geom =
                             ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
                         let plan = plan_scan(&geom, load, threads);
-                        eager_release_min_mem(
+                        eager_release_min_slo(
                             &plan,
                             load,
                             threads,
                             max_batch,
                             ws.bytes_leased,
                             ws_cap,
+                            head_deadline.map(|d| d.saturating_duration_since(now)),
+                            max_wait,
                         )
                     });
                     if let Some(batch) = released {
-                        break Some(batch);
+                        break (Some(batch), Vec::new());
                     }
                 }
                 let timeout = b
@@ -410,10 +651,11 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
                 b = nb;
             }
         };
+        shed_expired(&sh, expired);
         match batch {
             Some((bucket, fused, reqs)) => match &engine {
                 Some(engine) => run_scan_batch(engine, &sh, bucket, fused, reqs),
-                None => run_scan_batch_cpu(&sh, reqs),
+                None => run_scan_batch_cpu(&sh, &bucket, reqs),
             },
             None => {
                 if sh.shutdown.load(Ordering::SeqCst)
@@ -430,6 +672,7 @@ fn worker_main(idx: usize, sh: Arc<Shared>) {
 fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
     let t0 = Instant::now();
     let queue_ns = t0.saturating_duration_since(req.arrived).as_nanos() as u64;
+    let class = req.priority;
     let (artifact, inputs) = match req.payload {
         Payload::Direct { artifact, inputs } => (artifact, inputs),
         _ => unreachable!("direct queue holds direct payloads"),
@@ -446,7 +689,7 @@ fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
     });
     let mut m = lock_unpoisoned(&sh.metrics);
     if ok {
-        m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
+        m.record_request(class, None, queue_ns, exec_ns, queue_ns + exec_ns, 1);
     } else {
         m.record_error();
     }
@@ -482,10 +725,20 @@ fn reject_direct(sh: &Shared, req: Request) {
 /// hot path performs no heap allocation except the reply tensor
 /// itself, which escapes to the client and therefore cannot be pooled.
 /// Pool counters are snapshotted into [`Metrics`] once per batch.
-fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
+fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
     let batch = reqs.len();
     for r in reqs {
         let t0 = Instant::now();
+        // Belt and braces: a request whose deadline lapsed between
+        // release and execution (e.g. while earlier batch members ran)
+        // is answered with the structured Deadline reply, not executed
+        // dead.
+        if r.expired(t0) {
+            lock_unpoisoned(&sh.metrics).record_expired(r.priority);
+            reply_request_error(&r, RequestError::Deadline);
+            continue;
+        }
+        let class = r.priority;
         let (x, a_raw, lam) = match r.payload {
             Payload::Scan { x, a_raw, lam } => (x, a_raw, lam),
             _ => unreachable!("scan batch holds scan payloads"),
@@ -522,7 +775,7 @@ fn run_scan_batch_cpu(sh: &Shared, reqs: Vec<Request>) {
                     batch,
                 });
                 let mut m = lock_unpoisoned(&sh.metrics);
-                m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, batch);
+                m.record_request(class, Some(bucket), queue_ns, exec_ns, queue_ns + exec_ns, batch);
             }
             Err(payload) => {
                 let msg = crate::util::panic_message(&*payload);
@@ -570,12 +823,30 @@ fn run_scan_batch(
 ) {
     let t0 = Instant::now();
     let artifact = bucket.artifact(fused);
+    // Shed anything that expired between release and execution before
+    // assembling the fused inputs — a dead request must neither burn
+    // executor time nor hang its client.
+    let mut reqs = {
+        let mut live = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            if r.expired(t0) {
+                lock_unpoisoned(&sh.metrics).record_expired(r.priority);
+                reply_request_error(&r, RequestError::Deadline);
+            } else {
+                live.push(r);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        live
+    };
     // Fast path: single request into a batch-1 artifact — move the
     // payload tensors straight into the input Values, no concat/split
     // copies (saves ~450 KB of memcpy per request at the 64^2 c8 bucket).
     if fused == 1 && reqs.len() == 1 {
-        let mut reqs = reqs;
         let r = reqs.pop().unwrap();
+        let class = r.priority;
         let (x, a_raw, lam) = match r.payload {
             Payload::Scan { x, a_raw, lam } => (x, a_raw, lam),
             _ => unreachable!("scan batch holds scan payloads"),
@@ -594,7 +865,7 @@ fn run_scan_batch(
         });
         let mut m = lock_unpoisoned(&sh.metrics);
         if ok {
-            m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, 1);
+            m.record_request(class, Some(&bucket), queue_ns, exec_ns, queue_ns + exec_ns, 1);
         } else {
             m.record_error();
         }
@@ -662,7 +933,14 @@ fn run_scan_batch(
             let mut m = lock_unpoisoned(&sh.metrics);
             for (r, out) in reqs.iter().zip(parts.drain(..)) {
                 let queue_ns = t0.saturating_duration_since(r.arrived).as_nanos() as u64;
-                m.record_request(queue_ns, exec_ns, queue_ns + exec_ns, fused);
+                m.record_request(
+                    r.priority,
+                    Some(&bucket),
+                    queue_ns,
+                    exec_ns,
+                    queue_ns + exec_ns,
+                    fused,
+                );
                 let _ = r.reply.send(Response {
                     id: r.id,
                     result: Ok(vec![Value::F32(out)]),
@@ -805,6 +1083,91 @@ mod tests {
         assert_eq!(s2.misses, warm.misses, "warm bucket must stay miss-free after a panic");
         assert_eq!(s2.bytes_leased, 0);
         coord.shutdown();
+    }
+
+    /// The shutdown sweep: requests still queued after the workers are
+    /// gone (the submit-races-final-pop window) must resolve with a
+    /// structured `Closed` reply — no receiver may hang. Exercised
+    /// race-free against a hand-built `Shared` with no workers at all.
+    #[test]
+    fn close_pending_resolves_queued_with_closed() {
+        use std::time::Duration;
+        let mut rng = Rng::new(94);
+        let (x, a_raw, lam) = mk_case(&mut rng, 2, 5, 9);
+        let payload = Payload::Scan { x, a_raw, lam };
+        let bucket = payload.bucket(0).unwrap();
+        let mut batcher = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 64,
+            eager_idle: false,
+        });
+        batcher.register_bucket(bucket.clone(), vec![1]);
+        let sh = Shared {
+            batcher: Mutex::new(batcher),
+            direct: Mutex::new(VecDeque::new()),
+            work_ready: Condvar::new(),
+            metrics: Mutex::new(Metrics::new()),
+            shutdown: AtomicBool::new(true),
+            artifacts_dir: String::new(),
+            backend: Backend::CpuFused,
+            slo: SloPolicy::from_cfg(&ServeConfig::default()),
+            quotas: Mutex::new(QuotaState::new(0.0, 1)),
+            workspace: BufferPool::new(1 << 20),
+            workspace_prewarm: false,
+        };
+        let (tx, rx_scan) = mpsc::channel();
+        let req = Request {
+            id: 1,
+            payload,
+            kchunk: 0,
+            arrived: Instant::now(),
+            priority: Priority::Low,
+            deadline: None,
+            tenant: 0,
+            reply: tx,
+        };
+        lock_unpoisoned(&sh.batcher).enqueue(bucket, req).unwrap();
+        let (tx, rx_direct) = mpsc::channel();
+        lock_unpoisoned(&sh.direct).push_back(Request {
+            id: 2,
+            payload: Payload::Direct { artifact: "m".into(), inputs: vec![] },
+            kchunk: 0,
+            arrived: Instant::now(),
+            priority: Priority::High,
+            deadline: None,
+            tenant: 0,
+            reply: tx,
+        });
+        close_pending(&sh);
+        for rx in [rx_scan, rx_direct] {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("sweep must reply");
+            let err = resp.result.expect_err("closed, not executed");
+            assert_eq!(err.downcast_ref::<RequestError>(), Some(&RequestError::Closed));
+        }
+        let m = lock_unpoisoned(&sh.metrics);
+        assert_eq!(m.closed, 2);
+        assert_eq!(m.rejected, 0, "closed requests are not rejections");
+        assert_eq!(lock_unpoisoned(&sh.batcher).queued(), 0);
+    }
+
+    /// An already-dead deadline still gets admitted (the queue had
+    /// room) but must come back as a structured `Deadline` reply
+    /// without ever executing.
+    #[test]
+    fn deadline_zero_request_gets_structured_deadline_reply() {
+        use std::time::Duration;
+        let coord = Coordinator::start(&cpu_cfg(1)).unwrap();
+        let mut rng = Rng::new(95);
+        let (x, a, lam) = mk_case(&mut rng, 2, 6, 10);
+        let opts = SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() };
+        let rx = coord.submit_scan_with(x, a, lam, 0, opts).expect("admitted");
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("must resolve");
+        let err = resp.result.expect_err("expired before execution");
+        assert_eq!(err.downcast_ref::<RequestError>(), Some(&RequestError::Deadline));
+        let m = coord.shutdown();
+        assert_eq!(m.class_expired[Priority::Normal.index()], 1);
+        assert_eq!(m.completed, 0, "a dead request must never execute");
     }
 
     /// Metrics reads recover from a poisoned mutex instead of

@@ -15,6 +15,7 @@
 
 use std::time::Duration;
 
+use super::request::Priority;
 use crate::util::Rng;
 use crate::Tensor;
 
@@ -25,6 +26,11 @@ pub struct TraceEvent {
     pub x: Tensor,
     pub a_raw: Tensor,
     pub lam: Tensor,
+    /// Priority class for SLO-aware serving (always `Normal` unless
+    /// [`TraceConfig::classes`] is set).
+    pub priority: Priority,
+    /// Tenant id for quota accounting (0 unless classes are sampled).
+    pub tenant: u64,
 }
 
 /// Burst modulation on top of the base arrival rate: a two-state
@@ -45,6 +51,25 @@ impl Default for BurstConfig {
     }
 }
 
+/// Priority/tenant mix for SLO-aware traces: each event draws a class
+/// (`high` / `low` fractions, remainder normal) and a tenant id
+/// uniform in `0..tenants`.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassMix {
+    /// Fraction of high-priority arrivals.
+    pub high: f64,
+    /// Fraction of low-priority (sheddable) arrivals.
+    pub low: f64,
+    /// Number of distinct tenant ids to sample from.
+    pub tenants: u64,
+}
+
+impl Default for ClassMix {
+    fn default() -> Self {
+        Self { high: 0.25, low: 0.5, tenants: 4 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TraceConfig {
     pub rate_rps: f64,
@@ -54,6 +79,10 @@ pub struct TraceConfig {
     pub seed: u64,
     /// `Some` switches arrivals to the bursty (modulated) process.
     pub burst: Option<BurstConfig>,
+    /// `Some` samples a priority class and tenant per event (from an
+    /// independent RNG stream, so arrivals and tensors stay
+    /// byte-identical to the classless trace at the same seed).
+    pub classes: Option<ClassMix>,
 }
 
 impl Default for TraceConfig {
@@ -64,6 +93,7 @@ impl Default for TraceConfig {
             shapes: vec![((8, 64, 64), 0.8), ((8, 128, 128), 0.2)],
             seed: 0,
             burst: None,
+            classes: None,
         }
     }
 }
@@ -73,6 +103,11 @@ impl Default for TraceConfig {
 /// output is identical to the pre-burst generator for the same seed.
 pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
     let mut rng = Rng::new(cfg.seed ^ 0x7ace);
+    // Class/tenant draws come from their own stream (seeded off the
+    // trace seed, never forked from — and never advancing — the main
+    // stream), so enabling `classes` leaves arrival times and tensor
+    // contents byte-identical to the legacy trace.
+    let mut class_rng = Rng::new(cfg.seed ^ 0xc1a5_5e5);
     let weights: Vec<f64> = cfg.shapes.iter().map(|(_, w)| *w).collect();
     let mut t = 0.0f64;
     // Burst state machine: trace starts in a gap; `boundary` is the next
@@ -106,11 +141,27 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
             boundary = t + rng.exponential(1.0 / mean_dwell);
         }
         let (c, h, w) = cfg.shapes[rng.weighted(&weights)].0;
+        let (priority, tenant) = match cfg.classes {
+            None => (Priority::Normal, 0),
+            Some(mix) => {
+                let u = class_rng.uniform();
+                let p = if u < mix.high {
+                    Priority::High
+                } else if u < mix.high + mix.low {
+                    Priority::Low
+                } else {
+                    Priority::Normal
+                };
+                (p, class_rng.below(mix.tenants.max(1)))
+            }
+        };
         out.push(TraceEvent {
             at: Duration::from_secs_f64(t),
             x: Tensor::randn(&[1, c, h, w], &mut rng, 1.0),
             a_raw: Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0),
             lam: Tensor::randn(&[1, c, h, w], &mut rng, 1.0),
+            priority,
+            tenant,
         });
     }
     out
@@ -174,6 +225,35 @@ mod tests {
                 .count()
         };
         assert!(tight(&a) > 2 * tight(&s), "{} vs {}", tight(&a), tight(&s));
+    }
+
+    /// Class sampling must be a pure overlay: the same seed yields
+    /// byte-identical arrivals and tensors with classes on or off (the
+    /// class stream is independent, so the legacy trace is unchanged),
+    /// the mix fractions are roughly honoured, and tenants stay in
+    /// range.
+    #[test]
+    fn class_sampling_leaves_legacy_stream_untouched() {
+        let plain = TraceConfig { requests: 400, ..Default::default() };
+        let classed = TraceConfig {
+            classes: Some(ClassMix { high: 0.25, low: 0.5, tenants: 4 }),
+            ..plain.clone()
+        };
+        let a = generate(&plain);
+        let b = generate(&classed);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.x, y.x);
+            assert_eq!(x.a_raw, y.a_raw);
+            assert_eq!(x.lam, y.lam);
+        }
+        assert!(a.iter().all(|e| e.priority == Priority::Normal && e.tenant == 0));
+        let count = |p: Priority| b.iter().filter(|e| e.priority == p).count();
+        let (hi, lo) = (count(Priority::High), count(Priority::Low));
+        assert!((60..140).contains(&hi), "high fraction {hi}/400");
+        assert!((140..260).contains(&lo), "low fraction {lo}/400");
+        assert!(b.iter().all(|e| e.tenant < 4));
+        assert!((0..4).all(|t| b.iter().any(|e| e.tenant == t)));
     }
 
     #[test]

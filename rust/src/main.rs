@@ -199,7 +199,9 @@ fn serve(cfg: &Config) -> anyhow::Result<()> {
         }
         match coord.submit_scan(ev.x, ev.a_raw, ev.lam, 0) {
             Ok(rx) => pending.push(rx),
-            Err(SubmitError::Backpressure) => rejected += 1,
+            Err(
+                SubmitError::Backpressure | SubmitError::Shed | SubmitError::Quota(_),
+            ) => rejected += 1,
             Err(e) => return Err(e.into()),
         }
     }

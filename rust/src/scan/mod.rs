@@ -79,8 +79,8 @@ pub use fused::{
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use plan::{
-    auto_segments, eager_release_min, eager_release_min_mem, plan_scan, workspace_footprint,
-    PlanOverride, ScanGeometry, ScanPlan, ScanStrategy,
+    auto_segments, eager_release_min, eager_release_min_mem, eager_release_min_slo, plan_scan,
+    workspace_footprint, PlanOverride, ScanGeometry, ScanPlan, ScanStrategy,
 };
 pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};
 pub use taps::Taps;

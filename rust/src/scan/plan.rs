@@ -600,6 +600,36 @@ pub fn eager_release_min_mem(
     base.max(mem)
 }
 
+/// [`eager_release_min_mem`] extended with *deadline pressure*: the
+/// serving batcher hands the head request's remaining slack (time to
+/// its explicit deadline; `None` for deadline-less traffic). A head
+/// with at most one `max_wait` of slack releases immediately — holding
+/// for a fuller batch would burn the entire execution budget queueing;
+/// moderate slack (within 4x `max_wait`) halves the hold; comfortable
+/// slack keeps the plan/memory-derived sizing unchanged. Occupancy and
+/// memory pressure never override an urgent deadline: a request that
+/// can still make its SLO goes now, a request with time to spare still
+/// batches for throughput.
+pub fn eager_release_min_slo(
+    plan: &ScanPlan,
+    pool_load: usize,
+    threads: usize,
+    max_batch: usize,
+    leased_bytes: u64,
+    cap_bytes: usize,
+    head_slack: Option<std::time::Duration>,
+    max_wait: std::time::Duration,
+) -> usize {
+    let base =
+        eager_release_min_mem(plan, pool_load, threads, max_batch, leased_bytes, cap_bytes);
+    match head_slack {
+        None => base,
+        Some(s) if s <= max_wait => 1,
+        Some(s) if s <= max_wait * 4 => base.div_ceil(2),
+        Some(_) => base,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -895,6 +925,35 @@ mod tests {
         }
         // Memory pressure never lowers the occupancy floor.
         assert_eq!(eager_release_min_mem(&plan, 8, 8, 4, 0, cap), 4);
+    }
+
+    #[test]
+    fn eager_release_sizing_with_deadline_pressure() {
+        use std::time::Duration;
+        let geom = ScanGeometry::single_dir(8, 64, 64); // width 8 plan
+        let plan = ScanPlan::plane(&geom, 8);
+        let w = Duration::from_micros(1_000);
+        let slo = |load, slack: Option<Duration>| {
+            eager_release_min_slo(&plan, load, 8, 4, 0, 1 << 20, slack, w)
+        };
+        // Deadline-less heads keep the plan/memory sizing exactly.
+        assert_eq!(slo(8, None), 4);
+        assert_eq!(slo(0, None), 1);
+        // Urgent head (slack <= max_wait): release now, even on a
+        // saturated pool.
+        assert_eq!(slo(8, Some(Duration::from_micros(500))), 1);
+        assert_eq!(slo(8, Some(w)), 1);
+        assert_eq!(slo(8, Some(Duration::ZERO)), 1);
+        // Moderate slack (<= 4x max_wait): halve the hold.
+        assert_eq!(slo(8, Some(Duration::from_micros(3_000))), 2);
+        // Comfortable slack: unchanged.
+        assert_eq!(slo(8, Some(Duration::from_micros(10_000))), 4);
+        // Memory pressure is likewise overridden by urgency and only
+        // softened by moderate slack.
+        let mem = |slack| eager_release_min_slo(&plan, 0, 8, 4, 1 << 20, 1 << 20, slack, w);
+        assert_eq!(mem(None), 4);
+        assert_eq!(mem(Some(Duration::from_micros(100))), 1);
+        assert_eq!(mem(Some(Duration::from_micros(3_000))), 2);
     }
 
     #[test]

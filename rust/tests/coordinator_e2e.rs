@@ -6,7 +6,7 @@
 use std::time::Duration;
 
 use gspn2::config::ServeConfig;
-use gspn2::coordinator::{Coordinator, SubmitError};
+use gspn2::coordinator::{Coordinator, Priority, RequestError, SubmitError, SubmitOptions};
 use gspn2::runtime::artifacts_available;
 use gspn2::scan::{scan_l2r, Taps};
 use gspn2::util::Rng;
@@ -345,4 +345,168 @@ fn cpu_backend_rejects_direct_requests() {
 fn unknown_backend_rejected_at_start() {
     let bad = ServeConfig { backend: "tpu".into(), ..ServeConfig::default() };
     assert!(Coordinator::start(&bad).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Overload robustness: SLO-aware admission, shedding, quotas, and the
+// shutdown drain — all on the cpu backend, no artifacts required.
+// ---------------------------------------------------------------------
+
+/// Sustained overload (tight-loop submission, far beyond one worker's
+/// capacity) with mixed priorities: low traffic is shed at admission,
+/// high traffic is never shed and never blows its (generous) deadline,
+/// and every single admitted request resolves — success or a structured
+/// typed error, zero hangs, zero panics.
+#[test]
+fn overload_sheds_low_never_high_and_everything_resolves() {
+    let coord = Coordinator::start(&ServeConfig {
+        backend: "cpu".into(),
+        workers: 1,
+        max_batch: 4,
+        max_wait_us: 200,
+        queue_cap: 16,
+        shed_queue_frac: 0.5,
+        slo_low_us: 2_000,
+        slo_high_us: 10_000_000,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(40);
+    let total = 240usize;
+    let cases: Vec<_> = (0..total).map(|_| mk_case(&mut rng, 8, 64, 64)).collect();
+    let mut rxs = Vec::new();
+    let (mut shed_low, mut shed_other, mut backpressure) = (0u64, 0u64, 0u64);
+    for (i, (x, a, lam)) in cases.into_iter().enumerate() {
+        let priority = if i % 2 == 0 { Priority::High } else { Priority::Low };
+        let opts = SubmitOptions { priority, ..Default::default() };
+        match coord.submit_scan_with(x, a, lam, 0, opts) {
+            Ok(rx) => rxs.push((priority, rx)),
+            Err(SubmitError::Shed) => {
+                if priority == Priority::Low {
+                    shed_low += 1;
+                } else {
+                    shed_other += 1;
+                }
+            }
+            Err(SubmitError::Backpressure) => backpressure += 1,
+            Err(e) => panic!("unexpected admission error: {e:?}"),
+        }
+    }
+    assert_eq!(shed_other, 0, "only low-priority traffic may be shed");
+    assert!(shed_low > 0, "sustained overload must shed low-priority traffic");
+    assert_eq!(
+        rxs.len() as u64 + shed_low + backpressure,
+        total as u64,
+        "every submission is accounted for"
+    );
+    // Every admitted request resolves with a definite outcome.
+    let mut high_deadline_misses = 0u64;
+    for (priority, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(180))
+            .expect("every admitted request must resolve — no hung receivers");
+        if let Err(e) = resp.result {
+            let typed = e
+                .downcast_ref::<RequestError>()
+                .copied()
+                .unwrap_or_else(|| panic!("untyped error under overload: {e:#}"));
+            assert_ne!(typed, RequestError::Shed, "admitted requests are never shed");
+            if priority == Priority::High && typed == RequestError::Deadline {
+                high_deadline_misses += 1;
+            }
+        }
+    }
+    assert_eq!(
+        high_deadline_misses, 0,
+        "high class must keep its 10 s latency budget at this depth-capped load"
+    );
+    let m = coord.shutdown();
+    assert_eq!(m.class_shed[Priority::High.index()], 0);
+    assert_eq!(m.class_expired[Priority::High.index()], 0);
+    assert!(m.class_completed[Priority::High.index()] > 0);
+    assert!(m.rej_shed >= shed_low);
+}
+
+/// Per-tenant token buckets: a tenant bursting past its quota gets the
+/// structured `Quota` rejection while other tenants are untouched.
+#[test]
+fn overload_quota_rejects_heavy_tenant() {
+    let coord = Coordinator::start(&ServeConfig {
+        backend: "cpu".into(),
+        workers: 1,
+        max_batch: 4,
+        max_wait_us: 200,
+        queue_cap: 64,
+        quota_rps: 0.001, // negligible refill within the test
+        quota_burst: 3,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(41);
+    let mut rxs = Vec::new();
+    let mut quota_hits = 0u64;
+    for _ in 0..6 {
+        let (x, a, lam) = mk_case(&mut rng, 2, 8, 8);
+        let opts = SubmitOptions { tenant: 7, ..Default::default() };
+        match coord.submit_scan_with(x, a, lam, 0, opts) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::Quota(t)) => {
+                assert_eq!(t, 7, "the rejection names the offending tenant");
+                quota_hits += 1;
+            }
+            Err(e) => panic!("unexpected admission error: {e:?}"),
+        }
+    }
+    assert_eq!(rxs.len(), 3, "burst capacity admits exactly quota_burst requests");
+    assert_eq!(quota_hits, 3);
+    // A different tenant draws from its own bucket.
+    let (x, a, lam) = mk_case(&mut rng, 2, 8, 8);
+    let opts = SubmitOptions { tenant: 8, ..Default::default() };
+    rxs.push(coord.submit_scan_with(x, a, lam, 0, opts).expect("fresh tenant admitted"));
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).unwrap().result.is_ok());
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.rej_quota, 3);
+    assert_eq!(m.completed, 4);
+}
+
+/// Graceful-drain guarantee: enqueue well past one batch, shut down,
+/// and every receiver resolves — executed during the drain or answered
+/// with the structured `Closed` reply. No receiver may hang.
+#[test]
+fn overload_shutdown_resolves_every_receiver() {
+    let coord = Coordinator::start(&ServeConfig {
+        backend: "cpu".into(),
+        workers: 1,
+        max_batch: 2,
+        max_wait_us: 2_000_000,
+        queue_cap: 64,
+        eager_idle: false,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(42);
+    let mut rxs = Vec::new();
+    for _ in 0..12 {
+        let (x, a, lam) = mk_case(&mut rng, 2, 8, 8);
+        rxs.push(coord.submit_scan(x, a, lam, 0).unwrap());
+    }
+    let m = coord.shutdown();
+    let mut completed = 0u64;
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("every receiver must resolve across shutdown");
+        match resp.result {
+            Ok(_) => completed += 1,
+            Err(e) => assert_eq!(
+                e.downcast_ref::<RequestError>(),
+                Some(&RequestError::Closed),
+                "shutdown replies must be the structured Closed error: {e:#}"
+            ),
+        }
+    }
+    assert_eq!(completed, m.completed);
+    assert_eq!(completed + m.closed, 12, "completed + closed accounts for every request");
 }

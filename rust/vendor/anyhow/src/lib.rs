@@ -11,25 +11,52 @@
 //! * The [`Context`] extension trait (`context` / `with_context`) on
 //!   `Result`s whose error converts into [`Error`] — including every
 //!   `std::error::Error` via the blanket `From`.
+//! * Typed-payload downcasting for errors built through [`Error::new`]:
+//!   [`Error::downcast_ref`] recovers the original value, so callers
+//!   (the serving coordinator's structured `Deadline`/`Shed`/`Closed`
+//!   replies) can match on the concrete error type instead of parsing
+//!   the message string. Errors built from messages or via the blanket
+//!   `From` carry no payload and downcast to `None`.
 //!
-//! Not implemented (unused here): downcasting, backtraces, `ensure!`.
+//! Not implemented (unused here): backtraces, `ensure!`.
 
+use std::any::Any;
 use std::fmt;
 
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// A dynamic error: outermost message first, then its causes.
+/// A dynamic error: outermost message first, then its causes, plus an
+/// optional typed payload (the concrete error `Error::new` was built
+/// from) for downcasting.
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a printable message.
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { chain: vec![m.to_string()] }
+        Error { chain: vec![m.to_string()], payload: None }
     }
 
-    /// Wrap with an outer context message (innermost stays last).
+    /// Build an error from a concrete `std::error::Error`, keeping the
+    /// value itself for [`Error::downcast_ref`] alongside the rendered
+    /// source chain.
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain, payload: Some(Box::new(e)) }
+    }
+
+    /// Wrap with an outer context message (innermost stays last; the
+    /// typed payload, if any, rides along).
     pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
         self.chain.insert(0, c.to_string());
         self
@@ -38,6 +65,17 @@ impl Error {
     /// The cause chain, outermost first.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The typed payload, when this error was built via [`Error::new`]
+    /// from a `T`.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref())
+    }
+
+    /// Whether the payload is a `T` (anyhow's `is`).
+    pub fn is<T: 'static>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 }
 
@@ -76,7 +114,7 @@ impl<E: std::error::Error> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, payload: None }
     }
 }
 
@@ -155,6 +193,32 @@ mod tests {
             bail!("nope {}", 1);
         }
         assert_eq!(format!("{}", bails().unwrap_err()), "nope 1");
+    }
+
+    #[test]
+    fn typed_payload_downcasts() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let e = Error::new(Marker(7));
+        assert_eq!(format!("{e}"), "marker 7");
+        assert!(e.is::<Marker>());
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // Context wrapping keeps the payload.
+        let e = e.context("outer");
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert_eq!(format!("{e:#}"), "outer: marker 7");
+        // Message-built and From-converted errors carry no payload.
+        assert!(!Error::msg("plain").is::<Marker>());
+        let from: Error = io_fail().unwrap_err().into();
+        assert!(from.downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]

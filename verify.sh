@@ -15,3 +15,7 @@ cargo test -q
 # path (not just its dedicated tests) carries the whole scan suite.
 GSPN2_SCAN_PLAN=segment cargo test -q scan
 GSPN2_SCAN_PLAN=dirfan cargo test -q scan
+# Overload robustness: the SLO-aware admission / shedding / drain e2e
+# suite, re-run explicitly so a change that only breaks the overload
+# path can't hide behind the broad suite's pass/fail summary.
+cargo test -q --test coordinator_e2e overload
