@@ -12,9 +12,10 @@
 use std::time::Duration;
 
 use gspn2::scan::fused::{
-    fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_pool,
-    fused_merged_4dir_seg_wave_twopass, fused_scan_l2r, fused_scan_l2r_pool, fused_scan_l2r_seg,
-    fused_scan_l2r_seg_wave, fused_scan_l2r_seg_wave_twopass,
+    fused_merged_4dir, fused_merged_4dir_chained, fused_merged_4dir_fan, fused_merged_4dir_pool,
+    fused_merged_4dir_seg_wave_twopass, fused_scan_l2r, fused_scan_l2r_chained,
+    fused_scan_l2r_pool, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
+    fused_scan_l2r_seg_wave_twopass,
 };
 use gspn2::scan::{
     auto_segments, expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool,
@@ -180,6 +181,27 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
             r_twopass.mean_ns / r_wave.mean_ns,
             "x",
         );
+        // The PR 8 acceptance row: the single-pass chained engine
+        // (decoupled look-back — no phase barrier, no retained-panel
+        // array, no second panel read) vs the PR 5 fused-drain
+        // wavefront, same bits, same chunk count. Target >= 1.15x at 8
+        // real cores; CI's runner shows the trajectory.
+        let r_chained = suite.bench(
+            &format!("scan_l2r {tag} (seg={s} chained single-pass, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_chained(&x, &taps, &lam, 0, s, &pool8));
+            },
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} chained/fused-drain"),
+            r_wave.mean_ns / r_chained.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} chained/barrier"),
+            r_barrier.mean_ns / r_chained.mean_ns,
+            "x",
+        );
     }
 
     // Mid-occupancy direction fan (the regime that previously neither
@@ -237,6 +259,21 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup merged_4dir {tag} per-dir/PR4 single-cont"),
             m_fan_twopass.mean_ns / m_fan_wave.mean_ns,
+            "x",
+        );
+        // The chained engine in the dirfan band: per-direction chunk
+        // chains at the forced count (what `scan.plan = chained` runs
+        // here), against the production per-direction wavefront fan.
+        let sc = auto_segments(nplanes, w.min(h), pool8.threads()).unwrap_or(2);
+        let m_chained = suite.bench(
+            &format!("merged_4dir {tag} (chained seg={sc}, 8 threads)"),
+            || {
+                black_box(fused_merged_4dir_chained(&x, tr, &lam, &logits, 0, sc, &pool8));
+            },
+        );
+        suite.record_value(
+            &format!("speedup merged_4dir {tag} chained/dirfan-wavefront"),
+            m_fan_wave.mean_ns / m_chained.mean_ns,
             "x",
         );
     }

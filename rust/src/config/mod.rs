@@ -171,11 +171,13 @@ pub struct ScanConfig {
     /// planner decides), `"plane"`, `"segment"` (the two-phase
     /// decomposition under its production schedule — per-direction
     /// wavefront continuations with the carry correction fused into the
-    /// scatter drain), or `"dirfan"` — forces the named strategy
-    /// wherever it is valid for the geometry. Applies to serving and
-    /// the benches. `"auto"` defers to the `GSPN2_SCAN_PLAN` env var
-    /// when that is set (the CI hook that exercises non-default
-    /// strategies across the whole suite).
+    /// scatter drain), `"dirfan"`, or `"chained"` (the single-pass
+    /// chained engine with decoupled look-back — bit-identical to
+    /// `"segment"` at the same chunk count, no phase barrier) — forces
+    /// the named strategy wherever it is valid for the geometry.
+    /// Applies to serving and the benches. `"auto"` defers to the
+    /// `GSPN2_SCAN_PLAN` env var when that is set (the CI hook that
+    /// exercises non-default strategies across the whole suite).
     pub plan: String,
 }
 
@@ -401,5 +403,7 @@ mod tests {
         assert_eq!(cfg.scan.plan, "dirfan"); // CLI wins
         let cfg = Config::from_args(&args(&["--scan-plan", "plane"])).unwrap();
         assert_eq!(cfg.scan.plan, "plane");
+        let cfg = Config::from_args(&args(&["--scan-plan", "chained"])).unwrap();
+        assert_eq!(cfg.scan.plan, "chained");
     }
 }

@@ -25,8 +25,8 @@ pub mod trace;
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use request::{
-    validate_scan_shapes, Bucket, Payload, Priority, Request, RequestError, Response,
-    SubmitError, SubmitOptions,
+    validate_scan_shapes, Bucket, Payload, Priority, ReplyLease, Request, RequestError,
+    Response, SubmitError, SubmitOptions,
 };
 pub use server::Coordinator;
 pub use trace::{

@@ -6,11 +6,13 @@
 //! batch artifact that fits (`scan_h{H}w{W}c{C}n{N}` entries from the
 //! manifest).
 
-use std::sync::mpsc;
+use std::ops::Deref;
+use std::sync::{mpsc, Weak};
 use std::time::{Duration, Instant};
 
 use crate::runtime::Value;
 use crate::scan::kchunk_valid;
+use crate::util::BufferPool;
 use crate::Tensor;
 
 /// Priority class carried by every request. Admission-time load
@@ -217,10 +219,82 @@ impl Request {
     }
 }
 
+/// A successful reply's output values, with their f32 storage on loan
+/// from the coordinator's workspace pool.
+///
+/// Derefs to the value slice, so clients index it exactly like the
+/// plain `Vec<Value>` it replaces (`resp.result?[0].as_f32()`). What
+/// changes is the buffer's afterlife: on drop, each tensor's backing
+/// vec is donated back to the workspace it was taken from
+/// ([`BufferPool::donate`]) — if the coordinator is still alive — so
+/// the *next* same-bucket reply is served from the pool instead of the
+/// allocator. Together with [`BufferPool::take_zeroed`] on the server
+/// side this closes the last per-request allocation: client drops the
+/// reply, the buffer circles back, the warm bucket stays miss-free.
+///
+/// Holding the lease past coordinator shutdown is fine (the `Weak`
+/// handle just fails to upgrade and the buffer frees normally), as is
+/// keeping the values forever via [`ReplyLease::into_values`].
+pub struct ReplyLease {
+    values: Vec<Value>,
+    pool: Weak<BufferPool>,
+}
+
+impl ReplyLease {
+    pub(crate) fn new(values: Vec<Value>, pool: Weak<BufferPool>) -> ReplyLease {
+        ReplyLease { values, pool }
+    }
+
+    /// A lease with no pool behind it — replies whose buffers did not
+    /// come from a workspace (e.g. PJRT direct execution). Dropping it
+    /// is a plain deallocation.
+    pub(crate) fn unpooled(values: Vec<Value>) -> ReplyLease {
+        ReplyLease { values, pool: Weak::new() }
+    }
+
+    /// Keep the values, skip the donation — the escape hatch for
+    /// clients that need the tensors to outlive the reply cheaply.
+    pub fn into_values(mut self) -> Vec<Value> {
+        std::mem::take(&mut self.values)
+    }
+}
+
+impl Deref for ReplyLease {
+    type Target = [Value];
+    fn deref(&self) -> &[Value] {
+        &self.values
+    }
+}
+
+impl std::fmt::Debug for ReplyLease {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("ReplyLease").field(&self.values).finish()
+    }
+}
+
+impl Drop for ReplyLease {
+    fn drop(&mut self) {
+        if self.values.is_empty() {
+            return;
+        }
+        let Some(pool) = self.pool.upgrade() else { return };
+        for v in self.values.drain(..) {
+            // `donate` drops foreign-capacity buffers itself, so any
+            // tensor is safe to offer.
+            if let Value::F32(t) = v {
+                pool.donate(t.data);
+            }
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct Response {
     pub id: u64,
-    pub result: anyhow::Result<Vec<Value>>,
+    /// Output values of a successful execution, their storage leased
+    /// from the coordinator workspace (see [`ReplyLease`] — indexes
+    /// like the plain `Vec<Value>` and recycles itself on drop).
+    pub result: anyhow::Result<ReplyLease>,
     /// Time spent waiting in the queue.
     pub queue_us: u64,
     /// Time in the executor (per-batch, shared across the batch).

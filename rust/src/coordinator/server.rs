@@ -58,8 +58,8 @@ use anyhow::anyhow;
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{
-    validate_scan_shapes, Bucket, Payload, Priority, Request, RequestError, Response,
-    SubmitError, SubmitOptions,
+    validate_scan_shapes, Bucket, Payload, Priority, ReplyLease, Request, RequestError,
+    Response, SubmitError, SubmitOptions,
 };
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
@@ -185,8 +185,10 @@ struct Shared {
     /// Per-coordinator scratch pool: the cpu-fused path leases every
     /// scan-engine buffer from here, so the allocation-free invariant
     /// (and its hit/miss counters) are isolated per coordinator instead
-    /// of shared process-wide.
-    workspace: BufferPool,
+    /// of shared process-wide. `Arc` so client-held [`ReplyLease`]s can
+    /// donate reply buffers back via a `Weak` handle without keeping a
+    /// dead coordinator's pool alive.
+    workspace: Arc<BufferPool>,
     workspace_prewarm: bool,
 }
 
@@ -269,7 +271,7 @@ impl Coordinator {
             backend,
             slo: SloPolicy::from_cfg(cfg),
             quotas: Mutex::new(QuotaState::new(cfg.quota_rps, cfg.quota_burst)),
-            workspace: BufferPool::new(cfg.workspace_cap_mb << 20),
+            workspace: Arc::new(BufferPool::new(cfg.workspace_cap_mb << 20)),
             workspace_prewarm: cfg.workspace_prewarm,
         });
         let workers = (0..n_workers)
@@ -438,6 +440,11 @@ impl Coordinator {
         {
             self.shared.workspace.prewarm(len, count);
         }
+        // The reply tensor's class too (one n=1 request's output): the
+        // output buffer is taken from this pool and donated back by the
+        // client's ReplyLease drop, so the footprint model's scratch
+        // classes alone don't cover it.
+        self.shared.workspace.prewarm(geom.nplanes * geom.plane_px, 1);
     }
 
     /// Snapshot of the coordinator's workspace pool counters — the
@@ -682,7 +689,9 @@ fn run_direct(engine: &Engine, sh: &Shared, req: Request) {
     let ok = result.is_ok();
     let _ = req.reply.send(Response {
         id: req.id,
-        result,
+        // PJRT output buffers did not come from the workspace pool:
+        // an unpooled lease drops them normally.
+        result: result.map(ReplyLease::unpooled),
         queue_us: queue_ns / 1000,
         execute_us: exec_ns / 1000,
         batch: 1,
@@ -721,10 +730,12 @@ fn reject_direct(sh: &Shared, req: Request) {
 /// `scan_l2r_split` at the planned count (also e2e-pinned).
 ///
 /// All engine scratch leases from the coordinator's workspace
-/// ([`Shared::workspace`]); after one warm-up request per bucket the
-/// hot path performs no heap allocation except the reply tensor
-/// itself, which escapes to the client and therefore cannot be pooled.
-/// Pool counters are snapshotted into [`Metrics`] once per batch.
+/// ([`Shared::workspace`]) — and so does the reply tensor itself: its
+/// buffer is taken from the pool ([`BufferPool::take_zeroed`]), written
+/// in place by the engine, and donated back when the client drops the
+/// [`ReplyLease`] it receives, so after one warm-up request per bucket
+/// the hot path performs no heap allocation at all. Pool counters are
+/// snapshotted into [`Metrics`] once per batch.
 fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
     let batch = reqs.len();
     for r in reqs {
@@ -754,13 +765,18 @@ fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
             #[cfg(test)]
             test_hooks::maybe_fail_scan(x.shape[1], x.shape[2], x.shape[3]);
             let taps = crate::scan::Taps::normalize(&a_raw);
-            crate::scan::fused::fused_scan_l2r_pool_ws(
+            // Output buffer from the pool: a panic between here and the
+            // reply just frees it (take transfers ownership; no gauge
+            // to unwind).
+            let out_buf = sh.workspace.take_zeroed(x.data.len());
+            crate::scan::fused::fused_scan_l2r_pool_ws_into(
                 &x,
                 &taps,
                 &lam,
                 r.kchunk,
                 ThreadPool::global(),
                 &sh.workspace,
+                out_buf,
             )
         }));
         let exec_ns = t0.elapsed().as_nanos() as u64;
@@ -769,7 +785,10 @@ fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
             Ok(h) => {
                 let _ = r.reply.send(Response {
                     id: r.id,
-                    result: Ok(vec![Value::F32(h)]),
+                    result: Ok(ReplyLease::new(
+                        vec![Value::F32(h)],
+                        Arc::downgrade(&sh.workspace),
+                    )),
                     queue_us: queue_ns / 1000,
                     execute_us: exec_ns / 1000,
                     batch,
@@ -858,7 +877,7 @@ fn run_scan_batch(
         let ok = result.is_ok();
         let _ = r.reply.send(Response {
             id: r.id,
-            result,
+            result: result.map(ReplyLease::unpooled),
             queue_us: queue_ns / 1000,
             execute_us: exec_ns / 1000,
             batch: 1,
@@ -943,7 +962,7 @@ fn run_scan_batch(
                 );
                 let _ = r.reply.send(Response {
                     id: r.id,
-                    result: Ok(vec![Value::F32(out)]),
+                    result: Ok(ReplyLease::unpooled(vec![Value::F32(out)])),
                     queue_us: queue_ns / 1000,
                     execute_us: exec_ns / 1000,
                     batch: fused,
@@ -1026,7 +1045,12 @@ mod tests {
     /// The allocation-free serving invariant, end to end: after one
     /// warm-up request, a repeated identical request leases every
     /// scratch buffer from the coordinator's workspace — zero new pool
-    /// misses, and nothing left on lease between requests.
+    /// misses, and nothing left on lease between requests. The reply
+    /// tensor is covered too: its buffer is taken from the same pool
+    /// (`take_zeroed` counts the same hit/miss ledger) and comes back
+    /// when the client drops the `ReplyLease`, so the zero-miss
+    /// assertion proves the *whole request* — reply included — runs
+    /// allocation-free once warm.
     #[test]
     fn warm_bucket_repeat_request_records_zero_misses() {
         use std::time::Duration;
@@ -1041,14 +1065,21 @@ mod tests {
         let got =
             rx.recv_timeout(Duration::from_secs(120)).expect("reply").result.expect("ok");
         assert_eq!(got[0].as_f32().unwrap().data, want.data);
+        // Dropping the reply lease donates the reply buffer back to the
+        // coordinator's pool — the client half of the recycling loop.
+        drop(got);
         let s1 = coord.workspace_stats();
         assert_eq!(s1.bytes_leased, 0, "all leases must return between requests");
         let rx = coord.submit_scan(x, a, lam, 0).expect("submit warm");
         let got =
             rx.recv_timeout(Duration::from_secs(120)).expect("reply").result.expect("ok");
         assert_eq!(got[0].as_f32().unwrap().data, want.data);
+        drop(got);
         let s2 = coord.workspace_stats();
-        assert_eq!(s2.misses, s1.misses, "warm bucket repeat must add zero pool misses");
+        assert_eq!(
+            s2.misses, s1.misses,
+            "warm bucket repeat must add zero pool misses (reply take included)"
+        );
         assert!(s2.hits > s1.hits, "warm pass must serve from the pool");
         let m = coord.shutdown();
         assert_eq!(m.ws_misses, s2.misses, "metrics must surface the pool counters");
@@ -1113,7 +1144,7 @@ mod tests {
             backend: Backend::CpuFused,
             slo: SloPolicy::from_cfg(&ServeConfig::default()),
             quotas: Mutex::new(QuotaState::new(0.0, 1)),
-            workspace: BufferPool::new(1 << 20),
+            workspace: Arc::new(BufferPool::new(1 << 20)),
             workspace_prewarm: false,
         };
         let (tx, rx_scan) = mpsc::channel();

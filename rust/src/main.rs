@@ -13,8 +13,8 @@
 //! ```
 //!
 //! Any command also accepts `--config path.toml` (see `configs/`) and
-//! `--scan-plan auto|plane|segment|dirfan` (the scan execution-planner
-//! override, `[scan] plan` in TOML).
+//! `--scan-plan auto|plane|segment|dirfan|chained` (the scan
+//! execution-planner override, `[scan] plan` in TOML).
 
 use gspn2::config::Config;
 use gspn2::coordinator::{Coordinator, SubmitError};

@@ -72,6 +72,20 @@
 //!      (already exact, no correction), then a fixed-k-order merge
 //!      drain per plane. Bit-identical to the plane path; executed as
 //!      the `s = 1` degenerate case of the segmented engine.
+//!    * `Chained { s }` — the single-pass decoupled-look-back engine
+//!      ([`run_engine_chained`]): the same (plane, direction, segment)
+//!      decomposition, but each chunk is ONE job that scans from a
+//!      zero carry, publishes its aggregate on a [`BlockBoard`],
+//!      resolves its true incoming carry by looking back over
+//!      predecessors' published prefixes/aggregates (helping with
+//!      other chunks or assisting the pool while it waits), corrects
+//!      its own panel while still cache-hot, publishes its inclusive
+//!      prefix, and drains through the same fused epilogue. No phase
+//!      barrier, no retained-panel array, no second panel read —
+//!      two-phase engine overhead retired, bits unchanged (the fold
+//!      replays the exact `correct_col` recurrence + skip rules of the
+//!      two-phase order; pinned `==` against `scan_l2r_split` and the
+//!      segmented engine by the chained property suite).
 //!    * The **wavefront** flag replaces the global barrier between the
 //!      phases with dependency-aware pool submission
 //!      ([`crate::util::ThreadPool::run_graph`]). The drain of each
@@ -115,8 +129,12 @@ use super::direction::{merge_weights, Direction, DIRECTIONS};
 use super::plan::{self, ScanGeometry, ScanStrategy};
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
-use crate::util::workspace::{BufferPool, Lease};
+use crate::util::workspace::{
+    BlockBoard, BufferPool, Lease, BLOCK_AGG, BLOCK_POISONED, BLOCK_PREFIX,
+};
 use crate::util::{lock_unpoisoned, GraphBuilder, NodeId, ThreadPool};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Canonical columns staged per slab. 32 columns keep the b/h slabs
@@ -670,10 +688,28 @@ fn drain_scatter(
     }
 }
 
+/// Materialize the engine's output tensor: the caller-recycled buffer
+/// (must be zeroed and exactly `numel` long — the coordinator's
+/// reply-recycling path, see [`fused_scan_l2r_pool_ws_into`]) or a
+/// fresh zeroed allocation. The recycled buffer only replaces
+/// `Tensor::zeros`, so every drain writes the same bits either way.
+fn out_tensor(shape: &[usize], recycled: Option<Vec<f32>>) -> Tensor {
+    match recycled {
+        Some(buf) => {
+            debug_assert!(buf.iter().all(|&v| v == 0.0), "recycled output must be zeroed");
+            Tensor::from_vec(shape, buf)
+        }
+        None => Tensor::zeros(shape),
+    }
+}
+
 /// Drive the fused pipeline over all (N·C) planes — serially, in
 /// block-granular plane jobs on the pool, or (when the plan asks for
 /// it) through the segment-parallel / direction-fan decompositions,
-/// with or without wavefront continuations.
+/// with or without wavefront continuations. `out_buf`, when given, is a
+/// recycled zeroed buffer the output tensor is built over instead of a
+/// fresh allocation.
+#[allow(clippy::too_many_arguments)]
 fn run_engine(
     dirs: &[DirInput<'_>],
     wts: Option<&[f32; 4]>,
@@ -682,13 +718,14 @@ fn run_engine(
     pool: Option<&ThreadPool>,
     exec: ExecSpec,
     ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
 ) -> Tensor {
     let (n, c) = (out_shape[0], out_shape[1]);
     let (h, w) = (out_shape[2], out_shape[3]);
     let plane = h * w;
     let nplanes = n * c;
     if nplanes == 0 || plane == 0 {
-        return Tensor::zeros(out_shape);
+        return out_tensor(out_shape, out_buf);
     }
     let hmax = h.max(w);
     let staged: Vec<StagedTaps<'_>> =
@@ -717,6 +754,13 @@ fn run_engine(
     let segments = match strategy {
         ScanStrategy::PlanePar => None,
         ScanStrategy::Segmented { s } => Some(s.max(1)),
+        // The chained strategy runs its own single-pass engine: there
+        // are no phases, so the phase-2 schedule does not apply.
+        ScanStrategy::Chained { s } => {
+            return run_engine_chained(
+                dirs, &staged, wts, gain, out_shape, pool, s.max(1), ws, out_buf,
+            );
+        }
         // The direction fan is the s = 1 degenerate segmented run: one
         // full-width zero-carry (i.e. exact) phase-1 job per (plane,
         // direction), no correction, fixed-order merge drain. A
@@ -725,10 +769,10 @@ fn run_engine(
     };
     if let Some(segments) = segments {
         return run_engine_segmented(
-            dirs, &staged, wts, gain, out_shape, pool, segments, phase2, ws,
+            dirs, &staged, wts, gain, out_shape, pool, segments, phase2, ws, out_buf,
         );
     }
-    let mut out = Tensor::zeros(out_shape);
+    let mut out = out_tensor(out_shape, out_buf);
     let gain_for = |ci: usize| gain.map(|g| g[ci]);
 
     match pool {
@@ -816,6 +860,7 @@ fn run_engine_segmented(
     segments: usize,
     phase2: Phase2,
     ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
 ) -> Tensor {
     if phase2 != Phase2::Barrier {
         if let Some(pool) = pool {
@@ -829,6 +874,7 @@ fn run_engine_segmented(
                 segments,
                 phase2 == Phase2::WaveDir,
                 ws,
+                out_buf,
             );
         }
     }
@@ -887,7 +933,7 @@ fn run_engine_segmented(
     // the fused correction + scatter epilogue in the same k = 0..dirs
     // order as the plane path. The panel is read-only from here on —
     // the correction never lands back in it.
-    let mut out = Tensor::zeros(out_shape);
+    let mut out = out_tensor(out_shape, out_buf);
     let gain_for = |ci: usize| gain.map(|g| g[ci]);
     let last = dirs.len() - 1;
     let planes: Vec<(usize, &mut [f32], &[f32])> = out
@@ -1344,6 +1390,7 @@ fn run_engine_segmented_wave(
     segments: usize,
     per_dir: bool,
     ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
 ) -> Tensor {
     let c = out_shape[1];
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -1359,7 +1406,7 @@ fn run_engine_segmented_wave(
     let slots: Vec<Mutex<Option<Lease<'_>>>> =
         (0..nplanes * per_plane_slots).map(|_| Mutex::new(None)).collect();
 
-    let mut out = Tensor::zeros(out_shape);
+    let mut out = out_tensor(out_shape, out_buf);
     let conts = if per_dir { dirs.len() } else { 1 };
     let mut graph = GraphBuilder::with_capacity(nplanes * (per_plane_slots + conts));
     let bounds_ref = &bounds;
@@ -1457,10 +1504,465 @@ fn run_engine_segmented_wave(
     out
 }
 
-/// Test-only fault injection for the wavefront phase-1 pieces: lets the
-/// panic-propagation suite force exactly one (plane, dir, lo, hi) piece
-/// to panic and assert the payload surfaces as the collected graph
-/// error (not a `PoisonError` or a secondary index panic).
+// ---------------------------------------------------------------------
+// Single-pass chained engine (decoupled look-back)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// The chained-scan helping bound of the current thread: while a
+    /// chunk job is on the stack, a wait loop inside it may only
+    /// claim-and-run jobs with a *strictly lower* claim index. The
+    /// nested-job stack is therefore strictly decreasing in claim
+    /// index, so helping can never re-enter (or transitively depend
+    /// on) the job that is waiting — the deadlock an unbounded
+    /// work-steal here would hit. Fresh pool tickets start unbounded
+    /// (`usize::MAX`).
+    static CHAIN_BOUND: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Scoped setter for [`CHAIN_BOUND`]: restores the previous bound on
+/// drop, including during unwinding (a panicking chunk must not leave
+/// a stale bound on a pool worker's thread-local).
+struct BoundGuard {
+    prev: usize,
+}
+
+impl BoundGuard {
+    fn set(j: usize) -> BoundGuard {
+        BoundGuard { prev: CHAIN_BOUND.with(|b| b.replace(j)) }
+    }
+}
+
+impl Drop for BoundGuard {
+    fn drop(&mut self) {
+        CHAIN_BOUND.with(|b| b.set(self.prev));
+    }
+}
+
+/// Claim the lowest unclaimed job with index `< bound`. Lowest-first
+/// matches the claim order's topology (see [`run_engine_chained`]), so
+/// a fresh runner always picks a job whose predecessors are already
+/// claimed or complete, and a blocked job only helps jobs it can never
+/// transitively wait on.
+fn chain_claim(claimed: &[AtomicBool], bound: usize) -> Option<usize> {
+    let n = claimed.len().min(bound);
+    (0..n).find(|&j| {
+        !claimed[j].load(Ordering::Relaxed)
+            && claimed[j]
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+    })
+}
+
+/// Whether a chunk reset (`gi % chunk == 0`) lands inside block columns
+/// `[lo, hi)`. If so, any incoming carry dies before the block's last
+/// column, its inclusive prefix equals its zero-carry aggregate no
+/// matter what precedes it, and a look-back can terminate there.
+fn chain_broken(lo: usize, hi: usize, chunk: usize) -> bool {
+    lo.div_ceil(chunk) * chunk < hi
+}
+
+/// One (plane, direction, segment) chunk of the chained engine, plus
+/// its publication-board block index.
+struct ChainJob {
+    p: usize,
+    k: usize,
+    si: usize,
+    lo: usize,
+    hi: usize,
+    bidx: usize,
+}
+
+/// Shared state of one chained-engine call: the job table in claim
+/// order, the claim flags, the publication board, the merge-order
+/// drain counters, and the per-plane output slots.
+struct ChainState<'e, 'w> {
+    dirs: &'e [DirInput<'e>],
+    staged: &'e [StagedTaps<'w>],
+    wts: Option<&'e [f32; 4]>,
+    gain: Option<&'e [f32]>,
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    bounds: &'e [Vec<(usize, usize)>],
+    jobs: Vec<ChainJob>,
+    claimed: Vec<AtomicBool>,
+    /// Completed-drain counters per `(plane, direction)` — the
+    /// merge-order gate of merged passes: direction k's chunks scatter
+    /// only after all `bounds[k-1].len()` chunks of the same plane
+    /// drained, preserving the fixed k = 0..4 accumulation order.
+    drained: Vec<AtomicUsize>,
+    board: BlockBoard<'e>,
+    os_slots: Vec<Mutex<&'e mut [f32]>>,
+    /// Call-wide abort flag: set (with the block poisoned) by any
+    /// panicking chunk so every spinning waiter unwinds instead of
+    /// waiting on a publication that will never come.
+    poisoned: AtomicBool,
+    pool: Option<&'e ThreadPool>,
+    ws: &'w BufferPool,
+}
+
+impl ChainState<'_, '_> {
+    /// Wait until `pred` holds, productively: claim-and-run another
+    /// chain job below the current helping bound, or assist the pool's
+    /// global queue, before falling back to spin/yield. Panics
+    /// (unwinding the waiting job) once any chunk of this call has
+    /// poisoned the board.
+    fn wait_until(&self, what: &str, pred: impl Fn(&Self) -> bool) {
+        let mut spins = 0u32;
+        while !pred(self) {
+            if self.poisoned.load(Ordering::Acquire) {
+                panic!("chained scan: waiting on {what}, but a chunk panicked");
+            }
+            let bound = CHAIN_BOUND.with(|b| b.get());
+            if let Some(j) = chain_claim(&self.claimed, bound) {
+                run_chain_job(self, j);
+            } else if self.pool.map_or(false, |p| p.try_assist()) {
+                spins = 0;
+            } else {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// One chained runner: claim the lowest unclaimed job under the
+/// thread's current helping bound and run it, until nothing claimable
+/// remains. Fresh pool tickets run unbounded; a runner ticket executed
+/// from inside a blocked job's wait loop (via
+/// [`ThreadPool::try_assist`]) inherits that job's bound and may exit
+/// early — the caller's mop-up pass finishes the tail.
+fn chain_runner(st: &ChainState<'_, '_>) {
+    loop {
+        let bound = CHAIN_BOUND.with(|b| b.get());
+        match chain_claim(&st.claimed, bound) {
+            Some(j) => run_chain_job(st, j),
+            None => break,
+        }
+    }
+}
+
+/// Run one claimed chain job with the helping bound scoped to its claim
+/// index, and panic containment: a panicking chunk poisons its board
+/// block and the call-wide flag — so look-back waiters unwind through
+/// the normal panic path instead of deadlocking on a publication that
+/// will never arrive — then rethrows for the pool to collect as a
+/// `MapError`.
+fn run_chain_job(st: &ChainState<'_, '_>, j: usize) {
+    let _bound = BoundGuard::set(j);
+    if let Err(payload) =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chain_job_body(st, j)))
+    {
+        st.board.poison(st.jobs[j].bidx);
+        st.poisoned.store(true, Ordering::Release);
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// The single-pass chunk body: scan once from a zero carry into
+/// job-local scratch, publish the aggregate, resolve the true incoming
+/// carry by decoupled look-back, fold the correction into the still
+/// cache-hot local panel, publish the inclusive prefix, and scatter the
+/// corrected panel through the unchanged fused epilogue. No phase
+/// barrier, no retained panel array, no second DRAM read of the panel.
+fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
+    let &ChainJob { p, k, si, lo, hi, bidx } = &st.jobs[j];
+    let di = &st.dirs[k];
+    let hc = di.taps.h;
+    let chunk = di.chunk;
+    let (h, w) = st.hw;
+    let seglen = hi - lo;
+    let (tu, tc, td) = st.staged[k].panels(p / st.c, p % st.c);
+    // Job-local panel, fully overwritten by the scan below. Leased
+    // before the (test-only) fault hook so an injected panic unwinds
+    // while scratch is out on lease — the leak test covers the window
+    // that matters.
+    let mut panel = st.ws.acquire(seglen * hc);
+    #[cfg(test)]
+    test_hooks::maybe_panic(p, k, lo, hi);
+    scan_piece_into(
+        st.dirs, st.staged, st.c, (h, w), st.hmax, p, k, lo, hi, &mut panel, st.ws,
+    );
+    // Publish the zero-carry aggregate (the chunk's last column)
+    // immediately: successors' look-backs can fold over it while this
+    // chunk is still resolving its own carry.
+    st.board.publish_agg(bidx, &panel[(seglen - 1) * hc..]);
+
+    // Decoupled look-back: walk predecessor blocks back to the nearest
+    // *final* value — a published inclusive PREFIX, block 0 (whose
+    // aggregate is its prefix), or a chain-breaker — then fold forward
+    // over the skipped blocks' aggregates with the exact
+    // [`correct_col`] recurrence and zero-carry/chunk-reset skips of
+    // the two-phase engine, so the resolved carry is bit-identical to
+    // the sequentially chained one.
+    let mut corr = st.ws.acquire_zeroed(st.hmax);
+    let mut next = st.ws.acquire_zeroed(st.hmax);
+    let mut carry = st.ws.acquire_zeroed(st.hmax);
+    let mut active = false;
+    if si > 0 {
+        let sbounds = &st.bounds[k];
+        let base = bidx - si; // board index of (p, k, si = 0)
+        let mut t = si - 1;
+        loop {
+            let b = base + t;
+            st.wait_until("a predecessor's published column", |s| {
+                s.board.state(b) >= BLOCK_AGG
+            });
+            let state = st.board.state(b);
+            assert!(state != BLOCK_POISONED, "chained scan: predecessor chunk panicked");
+            if state == BLOCK_PREFIX {
+                st.board.read_prefix(b, &mut carry[..hc]);
+                break;
+            }
+            let (tlo, thi) = sbounds[t];
+            if t == 0 || chain_broken(tlo, thi, chunk) {
+                st.board.read_agg(b, &mut carry[..hc]);
+                break;
+            }
+            t -= 1;
+        }
+        let mut agg = st.ws.acquire(st.hmax);
+        for u in t + 1..si {
+            let (ulo, uhi) = sbounds[u];
+            let b = base + u;
+            assert!(
+                st.board.state(b) != BLOCK_POISONED,
+                "chained scan: predecessor chunk panicked"
+            );
+            st.board.read_agg(b, &mut agg[..hc]);
+            if carry[..hc].iter().all(|&v| v == 0.0) {
+                // Zero incoming carry: block u needed no correction, so
+                // its prefix is its aggregate (the reference
+                // decomposition's skip — keeps even -0.0 pixels
+                // bit-identical).
+                carry[..hc].copy_from_slice(&agg[..hc]);
+                continue;
+            }
+            // The carry is the full corrected value of column ulo - 1
+            // (phase 1 scanned from zero there), so it seeds the linear
+            // correction directly — the same association
+            // [`correct_segment`] walks, minus the panel adds.
+            corr[..hc].copy_from_slice(&carry[..hc]);
+            let mut died = false;
+            for gi in ulo..uhi {
+                if gi % chunk == 0 {
+                    died = true;
+                    break;
+                }
+                let g0 = gi * hc;
+                correct_col(
+                    &corr[..hc],
+                    &tu[g0..g0 + hc],
+                    &tc[g0..g0 + hc],
+                    &td[g0..g0 + hc],
+                    &mut next[..hc],
+                );
+                std::mem::swap(&mut corr, &mut next);
+            }
+            if died {
+                carry[..hc].copy_from_slice(&agg[..hc]);
+            } else {
+                // prefix_u = agg_u + corr(last column): the identical
+                // f32 add [`drain_dir_fused`] performs on the panel's
+                // last column.
+                for ((cv, &av), &co) in
+                    carry[..hc].iter_mut().zip(&agg[..hc]).zip(&corr[..hc])
+                {
+                    *cv = av + co;
+                }
+            }
+        }
+        active = !carry[..hc].iter().all(|&v| v == 0.0);
+    }
+
+    // Fold the resolved carry into the job-local panel while it is
+    // still cache-hot — exactly the two-pass correction arithmetic
+    // (`phase1 + corr`, dying at chunk resets).
+    if active {
+        correct_segment(
+            hc, chunk, lo, hi, tu, tc, td, &carry, &mut corr, &mut next, &mut panel,
+        );
+    }
+
+    // Publish the inclusive prefix (the corrected last column) BEFORE
+    // the merge-order gate: successors' look-backs terminate here even
+    // while this chunk is queued behind the previous direction's
+    // drains.
+    st.board.publish_prefix(bidx, &panel[(seglen - 1) * hc..]);
+
+    // Merged passes: direction k's contributions land on the shared
+    // output plane only after every direction-(k-1) chunk of the same
+    // plane has drained — the fixed k = 0..4 merge order the serial
+    // reference accumulates in.
+    let ndirs = st.dirs.len();
+    if k > 0 {
+        let want = st.bounds[k - 1].len();
+        let gate = p * ndirs + (k - 1);
+        st.wait_until("the previous direction's drains", |s| {
+            s.drained[gate].load(Ordering::Acquire) >= want
+        });
+    }
+
+    // Pure scatter of the already-corrected panel through the shared
+    // epilogue op — no correction work happens under the plane lock.
+    {
+        let gain = st.gain.map(|g| g[p % st.c]);
+        let mut guard = lock_unpoisoned(&st.os_slots[p]);
+        let os: &mut [f32] = &mut guard;
+        let mut j0 = 0;
+        while j0 < seglen {
+            let sw = SLAB.min(seglen - j0);
+            drain_scatter(
+                &panel[j0 * hc..(j0 + sw) * hc],
+                h,
+                w,
+                di.d,
+                lo + j0,
+                sw,
+                hc,
+                os,
+                st.wts,
+                k,
+                ndirs - 1,
+                gain,
+            );
+            j0 += sw;
+        }
+    }
+    st.drained[p * ndirs + k].fetch_add(1, Ordering::Release);
+}
+
+/// The single-pass chained engine ([`ScanStrategy::Chained`]): the same
+/// (plane, direction, segment) decomposition as the segmented engine,
+/// but each chunk is ONE self-contained job — scan from a zero carry,
+/// publish the aggregate, resolve the true carry by decoupled look-back
+/// over a publication board ([`BlockBoard`]), correct in place while
+/// the panel is L2-hot, publish the inclusive prefix, drain through the
+/// unchanged fused epilogue. What the two-phase engines pay and this
+/// one does not: the global phase rendezvous (barrier) or dependency-
+/// graph machinery (wavefront), the retained-panel array and its extra
+/// DRAM round trip, and the per-piece lease hand-offs.
+///
+/// Bit-exactness: chunk bounds come from the same [`segment_bounds`],
+/// phase-1 arithmetic is the shared [`scan_piece_into`], and the
+/// look-back fold replays the exact [`correct_col`] recurrence order
+/// with the reference's zero-carry and chunk-reset skips — so the
+/// resolved carry, the corrected panel, and hence every output bit
+/// match `scan_l2r_split` and the segmented engine exactly (validated
+/// bitwise against a two-phase mirror over ~9.4k randomized
+/// geometry/chunk/zero-carry cases before porting, and pinned `==` by
+/// the chained property suite).
+///
+/// Scheduling: jobs are claimed lowest-index-first from a direction-
+/// major (k, p, si) order — a valid topological order of the chain's
+/// dependencies, since block (p, k, si) waits only on (p, k, < si)
+/// (look-back) and (p, k-1, *) (merge-order gate). A blocked chunk
+/// helps by claiming jobs strictly below its own index
+/// ([`CHAIN_BOUND`]), assists the pool's global queue, or spins;
+/// deadlock-freedom follows by induction on the lowest incomplete
+/// index. On a serial pool the claim order degrades to the plain
+/// sequential two-phase order, every wait instantly satisfied.
+#[allow(clippy::too_many_arguments)]
+fn run_engine_chained(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    segments: usize,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+) -> Tensor {
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = out_shape[0] * c;
+    let hmax = h.max(w);
+    let bounds: Vec<Vec<(usize, usize)>> =
+        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
+    let seg_off: Vec<usize> = bounds
+        .iter()
+        .scan(0usize, |acc, b| {
+            let o = *acc;
+            *acc += b.len();
+            Some(o)
+        })
+        .collect();
+    let per_plane: usize = bounds.iter().map(|b| b.len()).sum();
+    let total_blocks = nplanes * per_plane;
+    // Publication board payload: one pooled lease holding an
+    // [aggregate | prefix] column pair per block. Every slot range is
+    // fully written before its state permits a read, so the lease is
+    // not zero-reset.
+    let mut board_payload = ws.acquire(2 * hmax * total_blocks);
+    let board = BlockBoard::new(&mut board_payload, total_blocks, hmax);
+    // Claim order (k, p, si), direction-major: dependencies of every
+    // job sit at strictly lower indices, and ordering directions
+    // outermost keeps every plane's direction-k chain moving instead of
+    // camping all workers on one plane's serial look-back chain.
+    let mut jobs = Vec::with_capacity(total_blocks);
+    for (k, b) in bounds.iter().enumerate() {
+        for p in 0..nplanes {
+            for (si, &(lo, hi)) in b.iter().enumerate() {
+                jobs.push(ChainJob { p, k, si, lo, hi, bidx: p * per_plane + seg_off[k] + si });
+            }
+        }
+    }
+    let njobs = jobs.len();
+    let mut out = out_tensor(out_shape, out_buf);
+    let st = ChainState {
+        dirs,
+        staged,
+        wts,
+        gain,
+        c,
+        hw: (h, w),
+        hmax,
+        bounds: &bounds,
+        jobs,
+        claimed: (0..njobs).map(|_| AtomicBool::new(false)).collect(),
+        drained: (0..nplanes * dirs.len()).map(|_| AtomicUsize::new(0)).collect(),
+        board,
+        os_slots: out.data.chunks_mut(plane).map(Mutex::new).collect(),
+        poisoned: AtomicBool::new(false),
+        pool: pool.filter(|p| p.threads() > 1 && njobs > 1),
+        ws,
+    };
+    match st.pool {
+        Some(pool) => {
+            // min(threads, jobs) self-scheduling runner tickets; the
+            // caller participates through `try_map`'s own-call helping.
+            let runners: Vec<usize> = (0..pool.threads().min(njobs)).collect();
+            if let Err(e) = pool.try_map(runners, |_| chain_runner(&st)) {
+                std::panic::resume_unwind(e.into_payload());
+            }
+            // A runner ticket drained from inside a blocked job's wait
+            // loop inherits that job's helping bound and may have
+            // exited early; one unbounded mop-up pass completes any
+            // unclaimed tail.
+            chain_runner(&st);
+        }
+        // Serial path: claim in order on the caller thread — every
+        // wait's predecessor has already completed, so the chain
+        // degrades to the plain sequential two-phase order, bit for
+        // bit and with a deterministic lease sequence.
+        None => chain_runner(&st),
+    }
+    drop(st);
+    out
+}
+
+/// Test-only fault injection for the wavefront phase-1 pieces and the
+/// chained chunk jobs: lets the panic-propagation suites force exactly
+/// one (plane, dir, lo, hi) piece to panic and assert the payload
+/// surfaces as the collected graph/map error (not a `PoisonError`, a
+/// secondary index panic, or a hung look-back waiter).
 #[cfg(test)]
 pub(crate) mod test_hooks {
     use std::sync::Mutex;
@@ -1490,7 +1992,7 @@ pub fn fused_scan_dir(
     d: Direction,
     kchunk: usize,
 ) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, None, BufferPool::global())
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, None, BufferPool::global(), None)
 }
 
 /// [`fused_scan_dir`] with block-granular plane jobs on `pool`.
@@ -1502,7 +2004,7 @@ pub fn fused_scan_dir_pool(
     kchunk: usize,
     pool: &ThreadPool,
 ) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), BufferPool::global())
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), BufferPool::global(), None)
 }
 
 /// [`fused_scan_dir_pool`] drawing all per-call scratch from an explicit
@@ -1518,7 +2020,7 @@ pub fn fused_scan_dir_pool_ws(
     pool: &ThreadPool,
     ws: &BufferPool,
 ) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), ws)
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), ws, None)
 }
 
 fn fused_scan_dir_inner(
@@ -1529,14 +2031,15 @@ fn fused_scan_dir_inner(
     kchunk: usize,
     pool: Option<&ThreadPool>,
     ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
 ) -> Tensor {
     validate_dir(x, taps, lam, d);
     if x.data.is_empty() {
-        return Tensor::zeros(&x.shape);
+        return out_tensor(&x.shape, out_buf);
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws)
+    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws, out_buf)
 }
 
 /// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
@@ -1587,7 +2090,7 @@ fn fused_scan_dir_forced_ws(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, phase2), ws)
+    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, phase2), ws, None)
 }
 
 /// [`fused_scan_dir_pool`] with a *forced* segment-parallel
@@ -1645,6 +2148,37 @@ pub fn fused_scan_dir_seg_wave_twopass(
 ) -> Tensor {
     let strategy = ScanStrategy::Segmented { s: segments };
     fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WavePlane, pool)
+}
+
+/// [`fused_scan_dir_seg`] executed by the single-pass chained engine
+/// ([`ScanStrategy::Chained`], [`run_engine_chained`]): one decoupled
+/// look-back job per (plane, direction, segment), no phase barrier, no
+/// retained panels. Exact `==` with [`fused_scan_dir_seg`] (and hence
+/// `scan_l2r_split`) at the same count, pinned by tests.
+pub fn fused_scan_dir_chained(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Chained { s: segments };
+    // The chained engine has no phase 2; the schedule arg is inert.
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::Barrier, pool)
+}
+
+/// [`fused_scan_dir_chained`] for the canonical left-to-right scan.
+pub fn fused_scan_l2r_chained(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_chained(x, taps, lam, Direction::L2R, kchunk, segments, pool)
 }
 
 /// [`fused_scan_dir_seg`] for the canonical left-to-right scan: the
@@ -1718,6 +2252,26 @@ pub fn fused_scan_l2r_pool_ws(
     fused_scan_dir_pool_ws(x, taps, lam, Direction::L2R, kchunk, pool, ws)
 }
 
+/// [`fused_scan_l2r_pool_ws`] writing its output into a caller-recycled
+/// buffer — zeroed, exactly `x` elements long, typically
+/// [`BufferPool::take_zeroed`] from the same workspace. This is the
+/// coordinator's reply-recycling hook: with the output buffer taken
+/// from (and, via the client's `ReplyLease` drop, donated back to) the
+/// request workspace, a warm bucket's hot path performs no heap
+/// allocation at all, reply tensor included. Bit-identical to the plain
+/// entry — the buffer only replaces the fresh `Tensor::zeros`.
+pub fn fused_scan_l2r_pool_ws_into(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+    out_buf: Vec<f32>,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, Direction::L2R, kchunk, Some(pool), ws, Some(out_buf))
+}
+
 /// [`fused_scan_l2r`] over the process-wide shared pool.
 pub fn fused_scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
     fused_scan_l2r_pool(x, taps, lam, kchunk, ThreadPool::global())
@@ -1758,7 +2312,7 @@ pub fn fused_merged_4dir(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, None, ExecSpec::Auto, BufferPool::global())
+    run_engine(&dirs, Some(&wts), None, &x.shape, None, ExecSpec::Auto, BufferPool::global(), None)
 }
 
 /// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
@@ -1780,6 +2334,7 @@ pub fn fused_merged_4dir_pool(
         Some(pool),
         ExecSpec::Auto,
         BufferPool::global(),
+        None,
     )
 }
 
@@ -1833,6 +2388,7 @@ fn fused_merged_4dir_forced_ws(
         Some(pool),
         ExecSpec::Forced(strategy, phase2),
         ws,
+        None,
     )
 }
 
@@ -1889,6 +2445,24 @@ pub fn fused_merged_4dir_seg_wave_twopass(
 ) -> Tensor {
     let strategy = ScanStrategy::Segmented { s: segments };
     fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WavePlane, pool)
+}
+
+/// [`fused_merged_4dir_seg`] executed by the single-pass chained engine
+/// (see [`fused_scan_dir_chained`]): per-direction chunk chains with
+/// decoupled look-back, the k = 0..4 merge order preserved by the
+/// per-plane drain gates. Exact `==` with the barrier twin, pinned by
+/// tests.
+pub fn fused_merged_4dir_chained(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Chained { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::Barrier, pool)
 }
 
 /// [`fused_merged_4dir_pool`] with the *forced* per-direction phase-1
@@ -2015,7 +2589,7 @@ pub fn fused_merged_canonical_ws(
         .collect();
     assert_eq!(u.len(), out_shape[1], "gain length must be C");
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), ExecSpec::Auto, ws)
+    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), ExecSpec::Auto, ws, None)
 }
 
 #[cfg(test)]
@@ -2663,13 +3237,17 @@ mod tests {
         let taps = mk_taps(&mut rng, n, 1, h, w);
         let geom = ScanGeometry::single_dir(n * c, h, w);
         let p = plan_scan_with(&geom, 0, pool.threads(), PlanOverride::Auto);
-        let ScanStrategy::Segmented { s } = p.strategy else {
-            panic!("expected a segmented plan, got {:?}", p.strategy);
+        let ScanStrategy::Chained { s } = p.strategy else {
+            panic!("expected a chained plan, got {:?}", p.strategy);
         };
-        assert!(p.wavefront);
+        assert!(!p.wavefront, "the chained engine has no phases to wavefront");
         let via_auto = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
-        let direct = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool);
+        let direct = fused_scan_l2r_chained(&x, &taps, &lam, 0, s, &pool);
         assert_eq!(via_auto.data, direct.data);
+        // The chained engine replaced the two-phase Segmented plan at
+        // the same count bit-for-bit.
+        let twophase = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool);
+        assert_eq!(via_auto.data, twophase.data);
     }
 
     // -----------------------------------------------------------------
@@ -2724,6 +3302,101 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // -----------------------------------------------------------------
+    // The single-pass chained engine
+    // -----------------------------------------------------------------
+
+    /// The tentpole exactness property: the single-pass chained engine
+    /// (decoupled look-back, no phase barrier) is exact `==` against
+    /// `scan_l2r_split` across random shapes (including H=1, W=1, and
+    /// slab-crossing widths), all 4 directions, chunk counts, shared
+    /// and per-channel taps, and both the serial path (1-thread pool)
+    /// and concurrent chains with work-assist (3-thread pool). Under
+    /// random kchunk divisors (split has no chunk form) chained must
+    /// equal the two-phase barrier engine bit-for-bit — the claim that
+    /// retiring the barrier changed the schedule and nothing else.
+    #[test]
+    fn chained_engine_exact_eq_split_property() {
+        use crate::scan::direction::{from_canonical, to_canonical};
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        check("chained == split across shapes", |g| {
+            let n = g.int_in(1, 2);
+            let c = g.int_in(1, 2);
+            let h = g.int_in(1, 9);
+            let w = g.int_in(1, 2 * SLAB + 8);
+            let segments = g.int_in(1, 5);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            for d in DIRECTIONS {
+                let (hc, wc) = hw_src(h, w, d);
+                let cw = *g.pick(&[1, c]);
+                let taps = mk_taps(&mut rng, n, cw, hc, wc);
+                let xc = to_canonical(&x, d);
+                let lamc = to_canonical(&lam, d);
+                let want =
+                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+                let tag = format!("n{n} c{c} cw{cw} {h}x{w} {d:?} S{segments}");
+                for (pname, pool) in [("pool1", &pool1), ("pool3", &pool3)] {
+                    let got = fused_scan_dir_chained(&x, &taps, &lam, d, 0, segments, pool);
+                    ensure(want.data == got.data, format!("chained != split: {tag} {pname}"))?;
+                }
+                // Chunk resets inside chunks: the chunked split
+                // reference is the two-phase barrier engine itself.
+                let kchunk = *g.pick(&divisors(wc));
+                let barrier = fused_scan_dir_seg(&x, &taps, &lam, d, kchunk, segments, &pool3);
+                let chained =
+                    fused_scan_dir_chained(&x, &taps, &lam, d, kchunk, segments, &pool3);
+                ensure(
+                    barrier.data == chained.data,
+                    format!("chunked chained != barrier: {tag} k{kchunk}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The merged 4-direction pass under the chained engine: the
+    /// per-plane drain gates preserve the k = 0..4 merge order, so
+    /// chained output is exact `==` the two-phase barrier merged engine
+    /// at every chunk count (and, at S = 1, the serial merged
+    /// reference) — on the degenerate H=1 / W=1 geometries and a
+    /// slab-crossing width too.
+    #[test]
+    fn chained_merged_4dir_exact_eq_segmented() {
+        let pool1 = crate::util::ThreadPool::new(1);
+        let pool3 = crate::util::ThreadPool::new(3);
+        let mut rng = Rng::new(74);
+        for (n, c, h, w) in [(2, 3, 6, 7), (1, 1, 1, 6), (1, 2, 6, 1), (1, 2, 24, 2 * SLAB + 3)]
+        {
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let t_lr = mk_taps(&mut rng, n, 1, h, w);
+            let t_rl = mk_taps(&mut rng, n, 1, h, w);
+            let t_tb = mk_taps(&mut rng, n, 1, w, h);
+            let t_bt = mk_taps(&mut rng, n, 1, w, h);
+            let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+            let logits = [0.3f32, -0.7, 0.2, 1.0];
+            let serial = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+            for segments in [1usize, 2, 3] {
+                let reference =
+                    fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
+                for (pname, pool) in [("pool1", &pool1), ("pool3", &pool3)] {
+                    let got =
+                        fused_merged_4dir_chained(&x, taps, &lam, &logits, 0, segments, pool);
+                    assert_eq!(
+                        reference.data, got.data,
+                        "n{n} c{c} {h}x{w} S{segments} {pname}"
+                    );
+                }
+                if segments == 1 {
+                    assert_eq!(serial.data, reference.data, "n{n} c{c} {h}x{w} S1 serial");
+                }
+            }
+        }
     }
 
     /// Satellite regression: a panicking phase-1 job in the wavefront
@@ -2791,10 +3464,13 @@ mod tests {
             (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
             (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
             (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
+            (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
         ];
         for (strategy, phase2) in cases {
             let reference = match strategy {
-                ScanStrategy::Segmented { s } => scan_l2r_split(&x, &taps, &lam, s, 1),
+                ScanStrategy::Segmented { s } | ScanStrategy::Chained { s } => {
+                    scan_l2r_split(&x, &taps, &lam, s, 1)
+                }
                 _ => scan_l2r(&x, &taps, &lam, 0),
             };
             let warm_ws = BufferPool::new(usize::MAX);
@@ -2847,6 +3523,56 @@ mod tests {
         assert_eq!(warm_ws.stats().bytes_leased, 0);
     }
 
+    /// The reply-recycling entry: an output buffer taken from the
+    /// workspace produces bit-identical results to the fresh-allocating
+    /// entry, and donating the result's storage back makes the next
+    /// take a pool hit — the coordinator's whole-request
+    /// allocation-free loop, exercised at the engine level.
+    #[test]
+    fn recycled_output_buffer_bit_identical_and_donated() {
+        // 1 thread: the serial lease sequence makes the zero-miss
+        // assertion deterministic (the 2+-thread schedules are covered
+        // by the bit-exactness suites).
+        let pool = crate::util::ThreadPool::new(1);
+        let mut rng = Rng::new(77);
+        let (n, c, h, w) = (1, 3, 7, 40);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let want = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+        let ws = BufferPool::new(usize::MAX);
+        let out = fused_scan_l2r_pool_ws_into(
+            &x,
+            &taps,
+            &lam,
+            0,
+            &pool,
+            &ws,
+            ws.take_zeroed(x.data.len()),
+        );
+        assert_eq!(out.data, want.data);
+        assert_eq!(ws.stats().bytes_leased, 0);
+        // Donate the reply storage back; the rerun's take must hit.
+        ws.donate(out.data);
+        let before = ws.stats();
+        let out = fused_scan_l2r_pool_ws_into(
+            &x,
+            &taps,
+            &lam,
+            0,
+            &pool,
+            &ws,
+            ws.take_zeroed(x.data.len()),
+        );
+        let after = ws.stats();
+        assert_eq!(out.data, want.data);
+        assert!(after.hits > before.hits, "recycled take must be served from the pool");
+        assert_eq!(
+            after.misses, before.misses,
+            "a donated reply buffer must make the next take allocation-free"
+        );
+    }
+
     /// The allocation-free invariant at the engine level: on the
     /// deterministic (serial-execution) paths, repeating an identical
     /// call against a warm workspace records ZERO pool misses — the
@@ -2861,7 +3587,11 @@ mod tests {
         let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
         let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
         let taps = mk_taps(&mut rng, n, 1, h, w);
-        for strategy in [ScanStrategy::PlanePar, ScanStrategy::Segmented { s: 3 }] {
+        for strategy in [
+            ScanStrategy::PlanePar,
+            ScanStrategy::Segmented { s: 3 },
+            ScanStrategy::Chained { s: 3 },
+        ] {
             let ws = BufferPool::new(usize::MAX);
             let first = fused_scan_dir_forced_ws(
                 &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
@@ -2965,6 +3695,78 @@ mod tests {
             0,
             ScanStrategy::Segmented { s: 2 },
             Phase2::WaveDir,
+            &pool,
+            &ws,
+        );
+        assert_eq!(reference.data, after.data);
+        assert_eq!(ws.stats().bytes_leased, 0);
+    }
+
+    /// Spin-safety of the chained engine (the look-back satellite): a
+    /// chunk that panics mid-chain poisons its board block, so every
+    /// chunk spinning on that chain unwinds through `MapError` instead
+    /// of deadlocking on a prefix that will never be published. Both
+    /// injection points matter — the chain head (everyone downstream
+    /// waits on it) and a mid-chain chunk (upstream already published,
+    /// downstream mid-wait). Afterwards every lease is back, the
+    /// returned buffers are pooled, and the same pool + workspace serve
+    /// a bit-exact rerun.
+    #[test]
+    fn chained_panic_poisons_board_and_returns_leases() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let pool = crate::util::ThreadPool::new(2);
+        let ws = BufferPool::new(usize::MAX);
+        let mut rng = Rng::new(75);
+        let (n, c, h, w) = (1, 2, 5, 320);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        // w=320, S=2 -> bounds (0,160),(160,320), planes {0,1}. Plane
+        // 1's tuples are unique to this geometry (no other suite
+        // produces segment ends at 160/320), so concurrently running
+        // tests never trip the hook.
+        for inject in [(1, 0, 160, 320), (1, 0, 0, 160)] {
+            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some(inject);
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                fused_scan_dir_forced_ws(
+                    &x,
+                    &taps,
+                    &lam,
+                    Direction::L2R,
+                    0,
+                    ScanStrategy::Chained { s: 2 },
+                    Phase2::Barrier,
+                    &pool,
+                    &ws,
+                )
+            }));
+            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
+            let payload = match caught {
+                Ok(_) => panic!("{inject:?}: the chained engine must rethrow the panic"),
+                Err(p) => p,
+            };
+            // The surfaced payload is the injected one, or a waiter's
+            // secondary poisoned-chain panic when that lands in the
+            // MapError first — never a deadlock or a PoisonError.
+            let msg = crate::util::panic_message(&*payload);
+            assert!(
+                msg.contains("injected phase-1 panic") || msg.contains("chained scan"),
+                "{inject:?}: unexpected payload {msg:?}"
+            );
+            let s = ws.stats();
+            assert_eq!(s.bytes_leased, 0, "{inject:?}: leaked leases: {s:?}");
+            assert!(s.bytes_pooled > 0, "{inject:?}: returned buffers must be pooled");
+        }
+        // The pool and workspace still serve bit-exact chained scans.
+        let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
+        let after = fused_scan_dir_forced_ws(
+            &x,
+            &taps,
+            &lam,
+            Direction::L2R,
+            0,
+            ScanStrategy::Chained { s: 2 },
+            Phase2::Barrier,
             &pool,
             &ws,
         );

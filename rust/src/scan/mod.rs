@@ -27,14 +27,23 @@
 //! pass decomposes is decided by the execution planner
 //! ([`plan::plan_scan`]): plane-parallel and the per-direction fan
 //! (`DirFan`) are bit-identical to `scan_l2r`; a low-occupancy pass with
-//! ≥ 128 canonical columns segments, and its output is bit-identical to
-//! [`split::scan_l2r_split`] at the planned count instead ([`split`] is
-//! kept as that reference). Segmented/fanned passes run wavefront by
-//! default: each (plane, direction)'s fused correction + drain is its
-//! own pool continuation of that direction's phase-1 jobs (chained to
-//! preserve the merge order), not a global barrier — and the carry
-//! correction is computed inside the scatter drain, so the retained
-//! phase-1 panel is read once and never re-written.
+//! ≥ 128 canonical columns is chunk-decomposed, and its output is
+//! bit-identical to [`split::scan_l2r_split`] at the planned count
+//! instead ([`split`] is kept as that reference). The planner's
+//! production decomposition is the single-pass *chained* engine
+//! (`Chained`): each column chunk is one job that scans from a zero
+//! carry, publishes its aggregate on a look-back board, resolves its
+//! true carry from predecessors' published prefixes, folds the
+//! correction into its still-hot panel, and drains — no phase barrier,
+//! no retained-panel array, no second panel read. The two-phase
+//! `Segmented` engine (forced via `scan.plan = segment` or the `_seg` /
+//! `_seg_wave` entry points) is kept as the bit/bench reference; its
+//! passes run wavefront by default — each (plane, direction)'s fused
+//! correction + drain is its own pool continuation of that direction's
+//! phase-1 jobs (chained to preserve the merge order), not a global
+//! barrier — and in both engines the carry correction is computed
+//! inside the scatter drain, so each panel is read once and never
+//! re-written.
 //!
 //! Scratch memory: every execution strategy leases its per-call
 //! buffers (pack slabs, retained panels, staging columns, correction
@@ -43,7 +52,11 @@
 //! `_ws` variants (`fused_scan_l2r_pool_ws`, `fused_scan_dir_pool_ws`,
 //! `fused_merged_canonical_ws`) take an explicit workspace so callers —
 //! the serving coordinator above all — can isolate and observe their
-//! own pool. Pooling is bit-transparent: leases are zero-reset exactly
+//! own pool; `fused_scan_l2r_pool_ws_into` additionally writes the
+//! *output* into a workspace-recycled buffer
+//! ([`crate::util::BufferPool::take_zeroed`]), which is how the
+//! coordinator's reply tensors stop being the hot path's last per-
+//! request allocation. Pooling is bit-transparent: leases are zero-reset exactly
 //! where the old fresh-`vec!` code relied on zeroing, so pooled output
 //! is `==` fresh output under every strategy (property-tested). The
 //! planner prices a plan's workspace demand per size class
@@ -70,12 +83,14 @@ pub use direction::{
     to_canonical, Direction, DIRECTIONS,
 };
 pub use fused::{
-    fused_merged_4dir, fused_merged_4dir_fan, fused_merged_4dir_par, fused_merged_4dir_pool,
-    fused_merged_4dir_seg, fused_merged_4dir_seg_wave, fused_merged_4dir_seg_wave_twopass,
-    fused_merged_canonical_ws, fused_scan_dir, fused_scan_dir_pool, fused_scan_dir_pool_ws,
-    fused_scan_dir_seg, fused_scan_dir_seg_wave, fused_scan_dir_seg_wave_twopass,
-    fused_scan_l2r, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_pool_ws,
-    fused_scan_l2r_seg, fused_scan_l2r_seg_wave, fused_scan_l2r_seg_wave_twopass,
+    fused_merged_4dir, fused_merged_4dir_chained, fused_merged_4dir_fan, fused_merged_4dir_par,
+    fused_merged_4dir_pool, fused_merged_4dir_seg, fused_merged_4dir_seg_wave,
+    fused_merged_4dir_seg_wave_twopass, fused_merged_canonical_ws, fused_scan_dir,
+    fused_scan_dir_chained, fused_scan_dir_pool, fused_scan_dir_pool_ws, fused_scan_dir_seg,
+    fused_scan_dir_seg_wave, fused_scan_dir_seg_wave_twopass, fused_scan_l2r,
+    fused_scan_l2r_chained, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_pool_ws,
+    fused_scan_l2r_pool_ws_into, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
+    fused_scan_l2r_seg_wave_twopass,
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use plan::{

@@ -29,6 +29,16 @@
 //!   `PlanePar` (same arithmetic, different schedule), ×`ndirs` the
 //!   parallel width — the mid-occupancy fix for geometries too narrow to
 //!   segment.
+//! * [`ScanStrategy::Chained`] — the single-pass chained decomposition
+//!   (`fused::run_engine_chained`): the same column chunks as
+//!   `Segmented`, but each chunk is ONE job that scans from a zero
+//!   carry, publishes its aggregate, resolves its true carry by
+//!   decoupled look-back over predecessors' published prefixes, folds
+//!   the correction into its still-cache-hot panel, and drains. Exact
+//!   `==` with `Segmented` (and `scan_l2r_split`) at the same count —
+//!   same arithmetic, no phase barrier, no retained-panel array, no
+//!   second panel read. The production low-occupancy strategy; the
+//!   two-phase `Segmented` engine is kept as the bit/bench reference.
 //!
 //! The `wavefront` flag asks the engine to run each plane's dependent
 //! stage (the fused correction + epilogue drain) as *per-direction
@@ -42,9 +52,10 @@
 //! ## Decision rule (the planner, in order)
 //!
 //! 1. An override (`scan.plan` config / `GSPN2_SCAN_PLAN` env:
-//!    `plane|segment|dirfan`) short-circuits the auto rule — `segment`
-//!    and `dirfan` still respect validity fences (a too-narrow geometry
-//!    cannot be segmented; a single-direction pass cannot dir-fan).
+//!    `plane|segment|dirfan|chained`) short-circuits the auto rule —
+//!    `segment`, `dirfan`, and `chained` still respect validity fences
+//!    (a too-narrow geometry cannot be segmented or chained; a
+//!    single-direction pass cannot dir-fan).
 //! 2. `threads < 2`, no planes, or `nplanes >= threads`: `PlanePar`.
 //!    Planes alone occupy the pool; the bit-exact zero-overhead strategy
 //!    wins outright.
@@ -53,15 +64,18 @@
 //!    `DirFan` — full occupancy without correction overhead, still
 //!    bit-exact.
 //! 4. [`auto_segments`] finds `s >= 2` (needs `wc_min >= 2 *`
-//!    [`MIN_SEG_COLS`]): `Segmented { s }` with wavefront on.
+//!    [`MIN_SEG_COLS`]): `Chained { s }` — bit-identical to the
+//!    two-phase `Segmented { s }` it replaced at the same count, minus
+//!    the phase barrier and the retained-panel traffic. The wavefront
+//!    flag is off: the chained engine has no phases to overlap.
 //! 5. Multi-direction pass wide enough to dir-fan: `DirFan` (can't
 //!    segment, but ×4 width still helps).
 //! 6. Otherwise `PlanePar`.
 //!
 //! Strategy selection deliberately ignores the live pool load so
 //! identical requests produce identical bits run-to-run — `DirFan` and
-//! `Segmented` order their arithmetic differently, so letting a
-//! transient load flip between them would make serving output
+//! `Segmented`/`Chained` order their arithmetic differently, so letting
+//! a transient load flip between them would make serving output
 //! nondeterministic. `pool_load` feeds only the *cost estimate* (the
 //! span is computed against the capacity actually left) and the
 //! release-sizing consumers below.
@@ -86,7 +100,12 @@
 //! per-plane continuation count (`nplanes · ndirs` — drains are
 //! per-direction continuations, so direction k's drain hides behind
 //! both other planes' phase 1 and the same plane's later directions;
-//! only the last drain's tail is exposed).
+//! only the last drain's tail is exposed). `Chained` does the same
+//! work as `Segmented` (identical arithmetic), but its correction is
+//! look-back folding inside each chunk job rather than a second pass:
+//! the exposed tail is one serial correction chain per (plane,
+//! direction), and the `nplanes · ndirs` chains run concurrently — no
+//! barrier, no continuation machinery, no retained-panel re-read.
 //!
 //! Consumers beyond the engine: the serving coordinator sizes eager
 //! batch releases off the plan ([`eager_release_min`]) instead of the
@@ -149,6 +168,14 @@ pub enum ScanStrategy {
     /// Per-(plane, direction) phase-1 fan with a fixed-order merge
     /// drain; bit-identical to `PlanePar`.
     DirFan,
+    /// Single-pass chained decomposition with decoupled look-back and
+    /// `s` column chunks per (plane, direction); exact `==`
+    /// `Segmented { s }` (and `scan_l2r_split` at count `s`) with no
+    /// phase barrier, retained panels, or second panel read.
+    Chained {
+        /// Column chunks per plane per direction.
+        s: usize,
+    },
 }
 
 /// The planner's cost estimate for one pass under one strategy, in the
@@ -233,6 +260,10 @@ impl ScanPlan {
         ScanPlan::with(ScanStrategy::DirFan, wavefront, geom, threads)
     }
 
+    pub fn chained(s: usize, geom: &ScanGeometry, threads: usize) -> ScanPlan {
+        ScanPlan::with(ScanStrategy::Chained { s: s.max(1) }, false, geom, threads)
+    }
+
     fn with(strategy: ScanStrategy, wavefront: bool, geom: &ScanGeometry, threads: usize) -> ScanPlan {
         ScanPlan { strategy, wavefront, cost: plan_cost(geom, strategy, wavefront, threads) }
     }
@@ -279,6 +310,19 @@ pub fn plan_cost(
             let conts = (planes * geom.ndirs.max(1)) as f64;
             let span = if wavefront { p1 + p2 / conts } else { p1 + p2 };
             PlanCost { work_flops: base + corr, span_flops: span, width }
+        }
+        ScanStrategy::Chained { s } => {
+            // Same arithmetic as Segmented at the same count; the
+            // correction is folded into the chunk jobs, so the exposed
+            // tail is one serial look-back chain per (plane, direction)
+            // and the chains run concurrently — never longer than the
+            // barrier form's correction pass, and there is no barrier.
+            let s = s.max(1);
+            let width = planes * geom.ndirs.max(1) * s;
+            let corr = px * FUSED_CORR_FLOPS_PER_PX * (s as f64 - 1.0) / s as f64;
+            let p1 = base / threads.min(width as f64);
+            let chains = (planes * geom.ndirs.max(1)) as f64;
+            PlanCost { work_flops: base + corr, span_flops: p1 + corr / chains, width }
         }
     }
 }
@@ -335,6 +379,9 @@ pub enum PlanOverride {
     /// `DirFan` for every multi-direction pass (bit-identical, so safe
     /// at any width); single-direction passes keep the auto rule.
     DirFan,
+    /// `Chained` wherever a valid chunk count exists (same width fence
+    /// as `Segment`), ignoring pool occupancy; else `PlanePar`.
+    Chained,
 }
 
 const OV_UNSET: u8 = u8::MAX;
@@ -346,15 +393,17 @@ fn parse_override(name: &str) -> Option<PlanOverride> {
         "plane" => Some(PlanOverride::Plane),
         "segment" => Some(PlanOverride::Segment),
         "dirfan" => Some(PlanOverride::DirFan),
+        "chained" => Some(PlanOverride::Chained),
         _ => None,
     }
 }
 
 /// Set the process-wide planner override (the `scan.plan` config knob).
-/// Accepts `auto | plane | segment | dirfan`.
+/// Accepts `auto | plane | segment | dirfan | chained`.
 pub fn set_plan_override(name: &str) -> Result<(), String> {
-    let ov = parse_override(name)
-        .ok_or_else(|| format!("unknown scan.plan {name:?} (want auto|plane|segment|dirfan)"))?;
+    let ov = parse_override(name).ok_or_else(|| {
+        format!("unknown scan.plan {name:?} (want auto|plane|segment|dirfan|chained)")
+    })?;
     PLAN_OVERRIDE.store(ov as u8, Ordering::Relaxed);
     Ok(())
 }
@@ -371,7 +420,7 @@ pub fn plan_override() -> PlanOverride {
     }
     let ov = match std::env::var("GSPN2_SCAN_PLAN") {
         Ok(s) => parse_override(&s).unwrap_or_else(|| {
-            panic!("GSPN2_SCAN_PLAN={s:?} is not one of auto|plane|segment|dirfan")
+            panic!("GSPN2_SCAN_PLAN={s:?} is not one of auto|plane|segment|dirfan|chained")
         }),
         Err(_) => PlanOverride::Auto,
     };
@@ -384,12 +433,13 @@ fn from_u8(v: u8) -> PlanOverride {
         1 => PlanOverride::Plane,
         2 => PlanOverride::Segment,
         3 => PlanOverride::DirFan,
+        4 => PlanOverride::Chained,
         _ => PlanOverride::Auto,
     }
 }
 
 // Discriminant values used by the atomic above.
-// (PlanOverride as u8: Auto=0, Plane=1, Segment=2, DirFan=3.)
+// (PlanOverride as u8: Auto=0, Plane=1, Segment=2, DirFan=3, Chained=4.)
 
 // ---------------------------------------------------------------------
 // The planner
@@ -430,6 +480,12 @@ fn decide(geom: &ScanGeometry, threads: usize, ov: PlanOverride) -> (ScanStrateg
                 None => (ScanStrategy::PlanePar, false),
             };
         }
+        PlanOverride::Chained => {
+            return match forced_segments(geom.nplanes, geom.wc_min, threads) {
+                Some(s) => (ScanStrategy::Chained { s }, false),
+                None => (ScanStrategy::PlanePar, false),
+            };
+        }
         PlanOverride::DirFan if can_fan => {
             return (ScanStrategy::DirFan, true);
         }
@@ -448,12 +504,12 @@ fn decide(geom: &ScanGeometry, threads: usize, ov: PlanOverride) -> (ScanStrateg
             return (ScanStrategy::DirFan, true);
         }
         if let Some(s) = auto_segments(geom.nplanes, geom.wc_min, threads) {
-            return (ScanStrategy::Segmented { s }, true);
+            return (ScanStrategy::Chained { s }, false);
         }
         return (ScanStrategy::DirFan, true);
     }
     match auto_segments(geom.nplanes, geom.wc_min, threads) {
-        Some(s) => (ScanStrategy::Segmented { s }, true),
+        Some(s) => (ScanStrategy::Chained { s }, false),
         None => (ScanStrategy::PlanePar, false),
     }
 }
@@ -476,7 +532,9 @@ fn decide(geom: &ScanGeometry, threads: usize, ov: PlanOverride) -> (ScanStrateg
 /// [`ScanPlan::workspace_bytes`] prices a plan for the memory-pressure
 /// release rule. The model mirrors the engine's lease sites
 /// (`FusedScratch`, staged taps, retained panels, phase-1 piece
-/// scratch, `DrainScratch`) and is deliberately a slight over-estimate
+/// scratch, `DrainScratch`; for `Chained` the look-back board payload,
+/// per-chunk panels, and fold columns) and is deliberately a slight
+/// over-estimate
 /// for the wavefront schedules (it prices the barrier form's retained
 /// panel block, which dominates the piece buffers).
 pub fn workspace_footprint(
@@ -502,12 +560,28 @@ pub fn workspace_footprint(
     };
     // Staged taps: one panel lease per direction, alive for the pass.
     add(tap_blocks.max(1) * 3 * geom.plane_px, ndirs);
+    if let ScanStrategy::Chained { s } = strategy {
+        let s = s.max(1);
+        // The look-back board: one [aggregate|prefix] slot of 2·hmax
+        // floats per chunk, leased as a single payload for the pass.
+        add(2 * hmax * planes * ndirs * s, 1);
+        // Per concurrent chunk job: the local panel (~1/s of a plane),
+        // the zero-carry scan scratch (pack slab + carry + zeros), and
+        // the look-back fold columns (corr + next + carry + agg).
+        let jobs = threads.min(planes * ndirs * s).max(1);
+        add(geom.plane_px.div_ceil(s), jobs);
+        add(slab, jobs);
+        add(hmax, 2 * jobs);
+        add(hmax, 4 * jobs);
+        return demand.into_iter().collect();
+    }
     // Mirror run_engine's strategy dispatch: DirFan degenerates to the
     // plane path for single-direction passes, else runs segmented s=1.
     let segments = match strategy {
         ScanStrategy::PlanePar => None,
         ScanStrategy::Segmented { s } => Some(s.max(1)),
         ScanStrategy::DirFan => (ndirs > 1).then_some(1),
+        ScanStrategy::Chained { .. } => unreachable!("handled above"),
     };
     match segments {
         None => {
@@ -668,35 +742,36 @@ mod tests {
         assert_eq!(strat(&ScanGeometry::single_dir(4, 512, 512), 0, 1), ScanStrategy::PlanePar);
         assert_eq!(strat(&ScanGeometry::merged_4dir(16, 384, 384), 0, 8), ScanStrategy::PlanePar);
         assert_eq!(strat(&ScanGeometry::single_dir(0, 64, 64), 0, 8), ScanStrategy::PlanePar);
-        // Low-occupancy single-direction wide: segment at auto_segments'
-        // count.
+        // Low-occupancy single-direction wide: the single-pass chained
+        // engine at auto_segments' count (bit-identical to the
+        // two-phase Segmented it replaced).
         assert_eq!(
             strat(&ScanGeometry::single_dir(1, 8, 512), 0, 8),
-            ScanStrategy::Segmented { s: 8 }
+            ScanStrategy::Chained { s: 8 }
         );
         assert_eq!(
             strat(&ScanGeometry::single_dir(4, 512, 512), 0, 8),
-            ScanStrategy::Segmented { s: 4 }
+            ScanStrategy::Chained { s: 4 }
         );
         // The single-direction serving band the fused-correction drain
         // opened (128 <= wc < 256; previously plane-parallel-only).
         assert_eq!(
             strat(&ScanGeometry::single_dir(1, 8, 192), 0, 8),
-            ScanStrategy::Segmented { s: 3 }
+            ScanStrategy::Chained { s: 3 }
         );
         // Mid-occupancy multi-direction: the fan covers the pool with
         // bit-exact jobs — DirFan, even where segmentation was possible.
         assert_eq!(strat(&ScanGeometry::merged_4dir(2, 384, 384), 0, 8), ScanStrategy::DirFan);
         assert_eq!(strat(&ScanGeometry::merged_4dir(3, 64, 64), 0, 8), ScanStrategy::DirFan);
-        // Fan too narrow for the pool on its own: segmentation wins when
-        // valid.
+        // Fan too narrow for the pool on its own: chunked decomposition
+        // wins when valid.
         assert_eq!(
             strat(&ScanGeometry::merged_4dir(1, 512, 512), 0, 16),
-            ScanStrategy::Segmented { s: 8 }
+            ScanStrategy::Chained { s: 8 }
         );
         assert_eq!(
             strat(&ScanGeometry::merged_4dir(1, 128, 128), 0, 8),
-            ScanStrategy::Segmented { s: 2 }
+            ScanStrategy::Chained { s: 2 }
         );
         // Too narrow to segment, multi-direction: fan anyway.
         assert_eq!(strat(&ScanGeometry::merged_4dir(1, 64, 64), 0, 8), ScanStrategy::DirFan);
@@ -784,6 +859,21 @@ mod tests {
             plan_scan_with(&narrow1, 0, 8, PlanOverride::Segment).strategy,
             ScanStrategy::PlanePar
         );
+        // chained: same width fence and forced count as segment, same
+        // bits as segment at that count, but single-pass (no wavefront
+        // phases — the flag stays off).
+        let chained = plan_scan_with(&wide1, 0, 8, PlanOverride::Chained);
+        assert_eq!(chained.strategy, ScanStrategy::Chained { s: 8 });
+        assert!(!chained.wavefront);
+        assert_eq!(
+            plan_scan_with(&ScanGeometry::single_dir(8, 8, 512), 0, 8, PlanOverride::Chained)
+                .strategy,
+            ScanStrategy::Chained { s: 2 }
+        );
+        assert_eq!(
+            plan_scan_with(&narrow1, 0, 8, PlanOverride::Chained).strategy,
+            ScanStrategy::PlanePar
+        );
         // dirfan: any multi-direction pass (bit-identical at any width);
         // single-direction passes keep the auto rule.
         assert_eq!(
@@ -797,7 +887,7 @@ mod tests {
         );
         assert_eq!(
             plan_scan_with(&wide1, 0, 8, PlanOverride::DirFan).strategy,
-            ScanStrategy::Segmented { s: 8 }
+            ScanStrategy::Chained { s: 8 }
         );
     }
 
@@ -819,10 +909,21 @@ mod tests {
         let seg4 = ScanPlan::segmented(4, false, &geom4, 8);
         let wave4 = ScanPlan::segmented(4, true, &geom4, 8);
         assert!(wave4.cost.span_flops < seg4.cost.span_flops);
+        // Chained: identical work to Segmented at the same count (same
+        // arithmetic), span never worse than the barrier form — the
+        // correction chains run concurrently with no phase boundary.
+        let chained = ScanPlan::chained(4, &geom, 8);
+        assert_eq!(chained.cost.work_flops, seg.cost.work_flops);
+        assert!(chained.cost.span_flops <= seg.cost.span_flops);
+        assert!(chained.cost.span_flops < plane.cost.span_flops);
+        let chained4 = ScanPlan::chained(4, &geom4, 8);
+        assert_eq!(chained4.cost.work_flops, seg4.cost.work_flops);
+        assert!(chained4.cost.span_flops <= seg4.cost.span_flops);
         // Fan width bookkeeping.
         let m = ScanGeometry::merged_4dir(2, 384, 384);
         assert_eq!(ScanPlan::dir_fan(true, &m, 8).cost.width, 8);
         assert_eq!(ScanPlan::segmented(3, true, &m, 8).cost.width, 24);
+        assert_eq!(ScanPlan::chained(3, &m, 8).cost.width, 24);
         assert_eq!(ScanPlan::plane(&m, 8).cost.width, 2);
     }
 
@@ -868,9 +969,12 @@ mod tests {
         // Every entry is a power-of-two class >= the pool minimum, with a
         // positive count, and classes are unique (aggregated).
         let geom = ScanGeometry::single_dir(4, 96, 512);
-        for strategy in
-            [ScanStrategy::PlanePar, ScanStrategy::Segmented { s: 4 }, ScanStrategy::DirFan]
-        {
+        for strategy in [
+            ScanStrategy::PlanePar,
+            ScanStrategy::Segmented { s: 4 },
+            ScanStrategy::DirFan,
+            ScanStrategy::Chained { s: 4 },
+        ] {
             let fp = workspace_footprint(&geom, strategy, 8, 4);
             assert!(!fp.is_empty(), "{strategy:?}");
             for &(class, count) in &fp {
@@ -890,6 +994,11 @@ mod tests {
                 .sum::<usize>()
         };
         assert!(bytes(ScanStrategy::Segmented { s: 4 }) > bytes(ScanStrategy::PlanePar));
+        // The chained engine drops the retained-panel array (each chunk
+        // holds only its own ~1/s panel), so it prices strictly below
+        // the two-phase form at the same count.
+        assert!(bytes(ScanStrategy::Chained { s: 4 }) < bytes(ScanStrategy::Segmented { s: 4 }));
+        assert!(bytes(ScanStrategy::Chained { s: 4 }) > 0);
         // Tiny geometry: SLAB*hmax and hmax collapse into one class —
         // the aggregation the prewarm path depends on.
         let tiny = ScanGeometry::single_dir(2, 1, 2);
@@ -962,6 +1071,7 @@ mod tests {
         assert_eq!(parse_override("plane"), Some(PlanOverride::Plane));
         assert_eq!(parse_override("segment"), Some(PlanOverride::Segment));
         assert_eq!(parse_override("dirfan"), Some(PlanOverride::DirFan));
+        assert_eq!(parse_override("chained"), Some(PlanOverride::Chained));
         assert_eq!(parse_override("tpu"), None);
         assert!(set_plan_override("bogus").is_err());
     }

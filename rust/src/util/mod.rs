@@ -17,7 +17,7 @@ pub mod workspace;
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::{GraphBuilder, MapError, NodeId, ThreadPool};
-pub use workspace::{BufferPool, Lease, PoolStats};
+pub use workspace::{BlockBoard, BufferPool, Lease, PoolStats};
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 ///

@@ -322,6 +322,42 @@ impl ThreadPool {
         self.load() >= self.threads()
     }
 
+    /// Non-blocking work-assist: pop ONE entry off the global queue and
+    /// run it on the calling thread, dispatching exactly as a worker
+    /// would (`Exec` jobs run directly; `Call`/`Graph` tickets claim one
+    /// job of their call, and a stale ticket — the submitting caller
+    /// already helped its jobs to completion — is a no-op). Returns
+    /// `false` when the queue was empty.
+    ///
+    /// This is what lets a thread that must *wait on a condition another
+    /// pool job will establish* (e.g. a chained-scan chunk spinning on
+    /// its predecessor's published prefix) drain the queue instead of
+    /// burning a core: `while !done { if !pool.try_assist() { spin } }`.
+    /// Unlike the own-call helping inside [`ThreadPool::try_map`], this
+    /// runs *any* submitter's work, so only call it from code prepared
+    /// to execute a stranger's job (workers' own loop semantics).
+    pub fn try_assist(&self) -> bool {
+        let work = self.shared.queue.lock().unwrap().pop_front();
+        match work {
+            None => false,
+            Some(Work::Exec(job)) => {
+                run_one(&self.shared, job);
+                true
+            }
+            Some(Work::Call(call)) => {
+                let job = call.jobs.lock().unwrap().pop_front();
+                if let Some(job) = job {
+                    run_one(&self.shared, job);
+                }
+                true
+            }
+            Some(Work::Graph(call)) => {
+                let _ = run_graph_node(&self.shared, &call);
+                true
+            }
+        }
+    }
+
     /// Fire-and-forget. A panic in `job` is caught and logged; use
     /// [`ThreadPool::try_map`] when the caller needs the outcome.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
@@ -1126,5 +1162,74 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(noise.load(Ordering::SeqCst), 100 * 16);
+    }
+
+    #[test]
+    fn try_assist_on_empty_queue_is_false() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+        assert!(!pool.try_assist());
+    }
+
+    /// A non-worker thread drains queued work via `try_assist` while the
+    /// only worker is parked — the chained-scan wait loop's contract.
+    #[test]
+    fn try_assist_drains_queue_from_caller_thread() {
+        let pool = ThreadPool::new(1);
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel::<()>();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            entered_tx.send(()).unwrap();
+            let _ = release_rx.recv();
+        });
+        // The worker is provably inside the blocking job before we queue
+        // more, so every later pop below is ours.
+        entered_rx.recv().unwrap();
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for _ in 0..5 {
+            assert!(pool.try_assist());
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+        assert!(!pool.try_assist());
+        release_tx.send(()).unwrap();
+        pool.wait_idle();
+    }
+
+    /// `try_assist` dispatches map tickets like a worker: a parked-pool
+    /// map submitted from another thread completes when a third thread
+    /// assists, and stale tickets (if the submitting caller helped
+    /// first) stay harmless no-ops.
+    #[test]
+    fn try_assist_runs_map_tickets() {
+        let pool = ThreadPool::new(1);
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel::<()>();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            entered_tx.send(()).unwrap();
+            let _ = release_rx.recv();
+        });
+        entered_rx.recv().unwrap();
+        std::thread::scope(|s| {
+            let p = &pool;
+            let mapper = s.spawn(move || p.map((0..8u64).collect::<Vec<_>>(), |x| x + 1));
+            // Assist until the mapper's jobs are gone; its own helping
+            // races us, so both false and stale-ticket pops are fine.
+            let out = loop {
+                let _ = p.try_assist();
+                if mapper.is_finished() {
+                    break mapper.join().unwrap();
+                }
+                std::hint::spin_loop();
+            };
+            assert_eq!(out, (1..=8).collect::<Vec<u64>>());
+        });
+        release_tx.send(()).unwrap();
+        pool.wait_idle();
     }
 }

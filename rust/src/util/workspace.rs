@@ -22,7 +22,7 @@
 
 use std::collections::BTreeMap;
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use super::lock_unpoisoned;
@@ -144,6 +144,61 @@ impl BufferPool {
         Lease { buf, len, pool: self }
     }
 
+    /// Take a zeroed buffer of exactly `len` elements *out* of the pool:
+    /// ownership transfers to the caller, nothing is counted as on
+    /// lease. This is the escape hatch for buffers that leave the engine
+    /// entirely — the coordinator's reply tensors — where a borrowed
+    /// [`Lease`] cannot follow. The vec keeps its full size-class
+    /// capacity (only its visible length is `len`), so a later
+    /// [`BufferPool::donate`] can put it back on the same free list.
+    /// Counts a hit or miss exactly like `acquire`, which is what lets
+    /// the warm-bucket zero-miss tests cover the reply path too.
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        let class = size_class(len);
+        let reused = {
+            let mut map = lock_unpoisoned(&self.classes);
+            map.get_mut(&class).and_then(|v| v.pop())
+        };
+        match reused {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_pooled.fetch_sub((class * 4) as u64, Ordering::Relaxed);
+                b[..len].fill(0.0);
+                b.truncate(len);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let mut b = Vec::with_capacity(class);
+                b.resize(len, 0.0);
+                b
+            }
+        }
+    }
+
+    /// Give an owned buffer back to the pool — the return half of
+    /// [`BufferPool::take_zeroed`]. Accepts any vec whose *capacity* is
+    /// exactly one of the pool's size classes (every taken buffer keeps
+    /// its class capacity through `truncate`); a foreign-capacity vec,
+    /// or one that would push retention past the cap, is simply dropped.
+    /// Never touches the lease gauges: donated buffers were never on
+    /// lease.
+    pub fn donate(&self, mut buf: Vec<f32>) {
+        let class = buf.capacity();
+        if class < MIN_CLASS || !class.is_power_of_two() {
+            return;
+        }
+        if self.bytes_pooled.load(Ordering::Relaxed) as usize + class * 4 > self.cap_bytes {
+            return;
+        }
+        // Restore the len == class invariant of pooled buffers. The
+        // tail fill never reallocates (len grows only to capacity);
+        // contents stay arbitrary per the `acquire` contract.
+        buf.resize(class, 0.0);
+        self.bytes_pooled.fetch_add((class * 4) as u64, Ordering::Relaxed);
+        lock_unpoisoned(&self.classes).entry(class).or_default().push(buf);
+    }
+
     /// Ensure at least `count` free buffers of `len`'s size class exist,
     /// respecting the retention cap. Counts neither as hit nor miss.
     pub fn prewarm(&self, len: usize, count: usize) {
@@ -218,6 +273,105 @@ impl Drop for Lease<'_> {
         if !buf.is_empty() {
             self.pool.release(buf);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// BlockBoard: the chained scan's decoupled look-back publication board
+// ---------------------------------------------------------------------
+
+/// Block states of a [`BlockBoard`] slot, in publication order. A block
+/// moves `EMPTY -> AGG -> PREFIX` (its owner is the only writer), or to
+/// `POISONED` from any state when the owning job panics so waiters can
+/// unwind instead of spinning forever.
+pub const BLOCK_EMPTY: u32 = 0;
+pub const BLOCK_AGG: u32 = 1;
+pub const BLOCK_PREFIX: u32 = 2;
+pub const BLOCK_POISONED: u32 = 3;
+
+/// The decoupled look-back publication board of the chained scan
+/// (`multi_chained.rs`-style `BlockInfo { state, aggregate, prefix }`,
+/// with the u64-packed payload widened to two f32 columns): per block,
+/// an atomic state plus a payload slot holding the block's *aggregate*
+/// (its zero-carry final column) and *prefix* (its corrected final
+/// column — the true carry into the next block).
+///
+/// The payload lives in ONE caller-held pooled buffer (`2 * hmax`
+/// floats per block: `[aggregate | prefix]`), so the whole board is a
+/// single [`BufferPool`] lease — allocation-free in steady state and
+/// returned to the pool even when a job unwinds. Publication protocol:
+/// the owner locks the slot, copies its column in, then Release-stores
+/// the new state; readers Acquire-load the state first and only then
+/// lock + copy out, so the column bytes are always ordered-after the
+/// state that advertises them. The per-slot mutex is uncontended in
+/// steady state (the owner writes once, successors copy once each) and
+/// exists to keep the aliasing safe in the racing case — a successor
+/// copying the aggregate while the owner publishes its prefix into the
+/// same slot.
+pub struct BlockBoard<'a> {
+    states: Vec<AtomicU32>,
+    slots: Vec<Mutex<&'a mut [f32]>>,
+    hmax: usize,
+}
+
+impl<'a> BlockBoard<'a> {
+    /// Split `payload` (at least `2 * hmax * nblocks` floats, typically
+    /// a pooled lease held by the caller) into per-block slots.
+    pub fn new(payload: &'a mut [f32], nblocks: usize, hmax: usize) -> BlockBoard<'a> {
+        let hmax = hmax.max(1);
+        assert!(payload.len() >= 2 * hmax * nblocks, "BlockBoard payload too small");
+        let slots = payload[..2 * hmax * nblocks].chunks_mut(2 * hmax).map(Mutex::new).collect();
+        BlockBoard { states: (0..nblocks).map(|_| AtomicU32::new(BLOCK_EMPTY)).collect(), slots, hmax }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Current state of block `i` (Acquire: a state `>= BLOCK_AGG`
+    /// guarantees the matching column reads back the published bytes).
+    pub fn state(&self, i: usize) -> u32 {
+        self.states[i].load(Ordering::Acquire)
+    }
+
+    /// Publish block `i`'s aggregate (owner only).
+    pub fn publish_agg(&self, i: usize, col: &[f32]) {
+        debug_assert!(col.len() <= self.hmax);
+        lock_unpoisoned(&self.slots[i])[..col.len()].copy_from_slice(col);
+        self.states[i].store(BLOCK_AGG, Ordering::Release);
+    }
+
+    /// Publish block `i`'s prefix (owner only, after its aggregate).
+    pub fn publish_prefix(&self, i: usize, col: &[f32]) {
+        debug_assert!(col.len() <= self.hmax);
+        let h = self.hmax;
+        lock_unpoisoned(&self.slots[i])[h..h + col.len()].copy_from_slice(col);
+        self.states[i].store(BLOCK_PREFIX, Ordering::Release);
+    }
+
+    /// Copy out block `i`'s aggregate. Caller must have observed
+    /// `state(i) >= BLOCK_AGG`.
+    pub fn read_agg(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(self.state(i) >= BLOCK_AGG && self.state(i) != BLOCK_POISONED);
+        out.copy_from_slice(&lock_unpoisoned(&self.slots[i])[..out.len()]);
+    }
+
+    /// Copy out block `i`'s prefix. Caller must have observed
+    /// `state(i) == BLOCK_PREFIX`.
+    pub fn read_prefix(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(self.state(i) == BLOCK_PREFIX);
+        let h = self.hmax;
+        out.copy_from_slice(&lock_unpoisoned(&self.slots[i])[h..h + out.len()]);
+    }
+
+    /// Mark block `i` dead because its owning job is unwinding; any
+    /// waiter observing this must panic rather than keep spinning.
+    pub fn poison(&self, i: usize) {
+        self.states[i].store(BLOCK_POISONED, Ordering::Release);
     }
 }
 
@@ -308,6 +462,43 @@ mod tests {
     }
 
     #[test]
+    fn take_donate_roundtrip_hits_same_class() {
+        let p = BufferPool::new(usize::MAX);
+        let buf = p.take_zeroed(100);
+        assert_eq!(buf.len(), 100);
+        assert_eq!(buf.capacity(), 128); // class capacity survives truncate
+        assert!(buf.iter().all(|&v| v == 0.0));
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        assert_eq!(s.bytes_leased, 0, "taken buffers are owned, not leased");
+        p.donate(buf);
+        assert_eq!(p.stats().bytes_pooled, 128 * 4);
+        // Same class back out: a hit, zeroed again.
+        let mut buf = p.take_zeroed(97);
+        assert_eq!((p.stats().hits, p.stats().misses), (1, 1));
+        assert!(buf.iter().all(|&v| v == 0.0));
+        buf[0] = 5.0;
+        p.donate(buf);
+        // donate/acquire interoperate: a Lease can reuse a donated vec.
+        let l = p.acquire(120);
+        assert_eq!(p.stats().hits, 2);
+        drop(l);
+    }
+
+    #[test]
+    fn donate_rejects_foreign_capacity_and_respects_cap() {
+        let p = BufferPool::new(256); // one 64-f32 class buffer
+        p.donate(vec![0.0f32; 100]); // capacity 100: not a size class
+        assert_eq!(p.stats().bytes_pooled, 0);
+        let a = p.take_zeroed(64);
+        let b = p.take_zeroed(64);
+        p.donate(a);
+        assert_eq!(p.stats().bytes_pooled, 256);
+        p.donate(b); // over cap: dropped
+        assert_eq!(p.stats().bytes_pooled, 256);
+    }
+
+    #[test]
     fn prewarm_avoids_misses() {
         let p = BufferPool::new(usize::MAX);
         p.prewarm(1000, 3);
@@ -330,5 +521,59 @@ mod tests {
         }
         let _l = p.acquire(64);
         assert!((p.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_board_publication_roundtrip() {
+        let p = BufferPool::new(usize::MAX);
+        let mut payload = p.acquire(2 * 4 * 3);
+        let board = BlockBoard::new(&mut payload, 3, 4);
+        assert_eq!(board.len(), 3);
+        assert_eq!(board.state(0), BLOCK_EMPTY);
+        board.publish_agg(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(board.state(1), BLOCK_AGG);
+        assert_eq!(board.state(0), BLOCK_EMPTY);
+        let mut out = [0.0f32; 3];
+        board.read_agg(1, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        board.publish_prefix(1, &[4.0, 5.0, 6.0]);
+        assert_eq!(board.state(1), BLOCK_PREFIX);
+        board.read_prefix(1, &mut out);
+        assert_eq!(out, [4.0, 5.0, 6.0]);
+        // The aggregate survives the prefix publication (disjoint halves
+        // of the slot) — look-back reads both.
+        board.read_agg(1, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        board.poison(2);
+        assert_eq!(board.state(2), BLOCK_POISONED);
+    }
+
+    #[test]
+    fn block_board_cross_thread_visibility() {
+        // Publisher thread writes agg then prefix; a spinning reader that
+        // observes the state must read exactly the published bytes.
+        let p = BufferPool::new(usize::MAX);
+        let mut payload = p.acquire(2 * 8);
+        let board = BlockBoard::new(&mut payload, 1, 8);
+        std::thread::scope(|s| {
+            let b = &board;
+            s.spawn(move || {
+                b.publish_agg(0, &[7.0; 8]);
+                b.publish_prefix(0, &[9.0; 8]);
+            });
+            s.spawn(move || {
+                while b.state(0) < BLOCK_AGG {
+                    std::hint::spin_loop();
+                }
+                let mut out = [0.0f32; 8];
+                b.read_agg(0, &mut out);
+                assert_eq!(out, [7.0; 8]);
+                while b.state(0) < BLOCK_PREFIX {
+                    std::hint::spin_loop();
+                }
+                b.read_prefix(0, &mut out);
+                assert_eq!(out, [9.0; 8]);
+            });
+        });
     }
 }

@@ -15,6 +15,11 @@ cargo test -q
 # path (not just its dedicated tests) carries the whole scan suite.
 GSPN2_SCAN_PLAN=segment cargo test -q scan
 GSPN2_SCAN_PLAN=dirfan cargo test -q scan
+# `chained` forces the single-pass chained engine (decoupled look-back,
+# no phase barrier) on every geometry wide enough to chunk — the
+# production low-occupancy path, bit-identical to `segment` at the same
+# count — so the whole scan suite runs through its state machine.
+GSPN2_SCAN_PLAN=chained cargo test -q scan
 # Overload robustness: the SLO-aware admission / shedding / drain e2e
 # suite, re-run explicitly so a change that only breaks the overload
 # path can't hide behind the broad suite's pass/fail summary.
