@@ -52,6 +52,14 @@ fn mk_req(id: u64, tx: &mpsc::Sender<gspn2::coordinator::Response>) -> Request {
 fn bench_serve_json() {
     let smoke = std::env::var("GSPN2_BENCH_SMOKE").is_ok();
     let mut suite = BenchSuite::new("BENCH_serve");
+    // Host header mirrors BENCH_scan: serving rows run the fused scan
+    // engine underneath, so record which lane kernel served them.
+    {
+        use gspn2::scan::simd;
+        suite.stamp_host("simd", simd::kernel().name().into());
+        suite.stamp_host("simd_lanes", simd::lanes().into());
+        suite.stamp_host("features", simd::detected_features().into());
+    }
     let requests = if smoke { 60 } else { 400 };
     let rate = if smoke { 400.0 } else { 300.0 };
     for (label, burst) in [("steady", None), ("bursty", Some(BurstConfig::default()))] {

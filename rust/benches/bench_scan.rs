@@ -19,7 +19,7 @@ use gspn2::scan::fused::{
 };
 use gspn2::scan::{
     auto_segments, expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool,
-    scan_l2r_split, CompactGspnUnit, Taps,
+    scan_l2r_split, simd, CompactGspnUnit, Taps,
 };
 use gspn2::util::bench::{black_box, BenchConfig, BenchSuite};
 use gspn2::util::{Rng, ThreadPool};
@@ -31,6 +31,12 @@ use gspn2::Tensor;
 /// greppable without post-processing.
 fn bench_fused_vs_reference(cfg: BenchConfig) {
     let mut suite = BenchSuite::with_config("BENCH_scan", cfg);
+    // Host header: which lane kernel this run's rows were measured
+    // under (and what the host exposes), so SIMD rows are
+    // interpretable across runners.
+    suite.stamp_host("simd", simd::kernel().name().into());
+    suite.stamp_host("simd_lanes", simd::lanes().into());
+    suite.stamp_host("features", simd::detected_features().into());
     let mut rng = Rng::new(7);
     let pool = ThreadPool::global();
 
@@ -202,6 +208,45 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
             r_barrier.mean_ns / r_chained.mean_ns,
             "x",
         );
+        // The SIMD acceptance rows: the same chained pass with the lane
+        // kernels forced off (every inner loop through the pinned scalar
+        // reference — same bits, no vector issue). The detected-kernel
+        // row above is `r_chained`; the ratio is the measured lane win
+        // on this host. Safe to flip process-globally here: the bench
+        // binary is one thread of control and scalar vs vector is
+        // bit-identical anyway.
+        let kern = simd::kernel();
+        simd::set_simd_override("scalar").unwrap();
+        let r_chained_scalar = suite.bench(
+            &format!("scan_l2r {tag} (seg={s} chained, forced scalar, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_chained(&x, &taps, &lam, 0, s, &pool8));
+            },
+        );
+        simd::set_simd_override("auto").unwrap();
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} chained {}/scalar", kern.name()),
+            r_chained_scalar.mean_ns / r_chained.mean_ns,
+            "x",
+        );
+        // The bf16 panel-mode rows: same chained pass with staged taps
+        // and job-local panels stored as bf16 words (recurrence and
+        // carries stay f32). Process-global is safe for the same
+        // single-threaded reason; restored to the exact f32 default
+        // before the next block.
+        simd::set_precision_override("bf16").unwrap();
+        let r_chained_bf16 = suite.bench(
+            &format!("scan_l2r {tag} (seg={s} chained, bf16 panels, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_chained(&x, &taps, &lam, 0, s, &pool8));
+            },
+        );
+        simd::set_precision_override("f32").unwrap();
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} chained bf16/f32"),
+            r_chained.mean_ns / r_chained_bf16.mean_ns,
+            "x",
+        );
     }
 
     // Mid-occupancy direction fan (the regime that previously neither
@@ -274,6 +319,22 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup merged_4dir {tag} chained/dirfan-wavefront"),
             m_fan_wave.mean_ns / m_chained.mean_ns,
+            "x",
+        );
+        // SIMD acceptance rows in the dirfan band: the production
+        // per-direction wavefront fan with the lane kernels forced off.
+        let kern = simd::kernel();
+        simd::set_simd_override("scalar").unwrap();
+        let m_fan_scalar = suite.bench(
+            &format!("merged_4dir {tag} (dirfan wavefront, forced scalar, 8 threads)"),
+            || {
+                black_box(fused_merged_4dir_fan(&x, tr, &lam, &logits, 0, true, &pool8));
+            },
+        );
+        simd::set_simd_override("auto").unwrap();
+        suite.record_value(
+            &format!("speedup merged_4dir {tag} dirfan {}/scalar", kern.name()),
+            m_fan_scalar.mean_ns / m_fan_wave.mean_ns,
             "x",
         );
     }

@@ -179,11 +179,27 @@ pub struct ScanConfig {
     /// `GSPN2_SCAN_PLAN` env var when that is set (the CI hook that
     /// exercises non-default strategies across the whole suite).
     pub plan: String,
+    /// SIMD kernel override for the fused engine's inner loops:
+    /// `"auto"` (detect once per process — AVX2 on x86_64, NEON on
+    /// aarch64, scalar otherwise), `"scalar"`, `"avx2"`, or `"neon"`.
+    /// Forcing a kernel the host does not support is an error at
+    /// startup. Every vector kernel is pinned bit-identical to the
+    /// scalar reference, so this knob moves throughput only. `"auto"`
+    /// defers to the `GSPN2_SCAN_SIMD` env var when set (the CI hook
+    /// that re-runs the scan suite under each kernel).
+    pub simd: String,
+    /// Storage precision for the staged tap panels and the chained
+    /// engine's job-local panels: `"f32"` (bit-exact default) or
+    /// `"bf16"` (half the staged working set; taps decode in the SIMD
+    /// lanes, panel stores round to nearest even, every accumulation
+    /// stays f32 — outputs match f32 to `(|f32| + 1)·2⁻⁶` elementwise).
+    /// `"f32"` defers to the `GSPN2_SCAN_PRECISION` env var when set.
+    pub precision: String,
 }
 
 impl Default for ScanConfig {
     fn default() -> Self {
-        Self { plan: "auto".into() }
+        Self { plan: "auto".into(), simd: "auto".into(), precision: "f32".into() }
     }
 }
 
@@ -242,6 +258,8 @@ impl Config {
         self.sim.out_dir = t.str_or("sim.out_dir", &self.sim.out_dir);
 
         self.scan.plan = t.str_or("scan.plan", &self.scan.plan);
+        self.scan.simd = t.str_or("scan.simd", &self.scan.simd);
+        self.scan.precision = t.str_or("scan.precision", &self.scan.precision);
     }
 
     pub fn apply_args(&mut self, a: &Args) {
@@ -284,6 +302,8 @@ impl Config {
         self.sim.out_dir = a.str_or("out-dir", &self.sim.out_dir);
 
         self.scan.plan = a.str_or("scan-plan", &self.scan.plan);
+        self.scan.simd = a.str_or("scan-simd", &self.scan.simd);
+        self.scan.precision = a.str_or("scan-precision", &self.scan.precision);
     }
 }
 
@@ -405,5 +425,22 @@ mod tests {
         assert_eq!(cfg.scan.plan, "plane");
         let cfg = Config::from_args(&args(&["--scan-plan", "chained"])).unwrap();
         assert_eq!(cfg.scan.plan, "chained");
+    }
+
+    #[test]
+    fn scan_simd_and_precision_from_toml_and_cli() {
+        let t = Toml::parse("[scan]\nsimd = \"scalar\"\nprecision = \"bf16\"\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.scan.simd, "auto");
+        assert_eq!(cfg.scan.precision, "f32");
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.scan.simd, "scalar");
+        assert_eq!(cfg.scan.precision, "bf16");
+        cfg.apply_args(&args(&["--scan-simd", "avx2", "--scan-precision", "f32"]));
+        assert_eq!(cfg.scan.simd, "avx2"); // CLI wins
+        assert_eq!(cfg.scan.precision, "f32");
+        let cfg = Config::from_args(&args(&["--scan-simd", "neon"])).unwrap();
+        assert_eq!(cfg.scan.simd, "neon");
+        assert_eq!(cfg.scan.precision, "f32");
     }
 }

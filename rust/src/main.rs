@@ -12,9 +12,12 @@
 //! gspn2 info   [--artifacts DIR]
 //! ```
 //!
-//! Any command also accepts `--config path.toml` (see `configs/`) and
+//! Any command also accepts `--config path.toml` (see `configs/`),
 //! `--scan-plan auto|plane|segment|dirfan|chained` (the scan
-//! execution-planner override, `[scan] plan` in TOML).
+//! execution-planner override, `[scan] plan` in TOML),
+//! `--scan-simd auto|scalar|avx2|neon` (the fused engine's lane-kernel
+//! override, `[scan] simd`), and `--scan-precision f32|bf16` (staged
+//! panel storage precision, `[scan] precision`).
 
 use gspn2::config::Config;
 use gspn2::coordinator::{Coordinator, SubmitError};
@@ -45,6 +48,19 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     // defers to the planner (and the GSPN2_SCAN_PLAN env hook).
     if cfg.scan.plan != "auto" {
         gspn2::scan::plan::set_plan_override(&cfg.scan.plan)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    // SIMD kernel override (`--scan-simd` / `[scan] simd`): an explicit
+    // setting pins the lane kernel (and errors if the host lacks it);
+    // "auto" keeps runtime detection (and the GSPN2_SCAN_SIMD env hook).
+    if cfg.scan.simd != "auto" {
+        gspn2::scan::set_simd_override(&cfg.scan.simd).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    // Panel storage precision (`--scan-precision` / `[scan] precision`):
+    // "f32" keeps the bit-exact default (and the GSPN2_SCAN_PRECISION
+    // env hook); "bf16" halves the staged working set.
+    if cfg.scan.precision != "f32" {
+        gspn2::scan::set_precision_override(&cfg.scan.precision)
             .map_err(|e| anyhow::anyhow!(e))?;
     }
     match cmd {

@@ -26,7 +26,9 @@
 //!    `to_canonical`/`from_canonical`/`flip_last` tensor is ever
 //!    materialized. The previous column is read straight out of the slab
 //!    (a carry column crosses slab boundaries), and the scan inner loop
-//!    is unit-stride over four L1-resident columns and auto-vectorizes.
+//!    is unit-stride over four L1-resident columns and runs in explicit
+//!    SIMD lanes ([`super::simd`]) with a scalar fallback pinned
+//!    bit-identical.
 //!    Taps are staged once per (batch, weight-channel) and — with the
 //!    §4.2 channel-shared weights — reused by every channel plane.
 //!
@@ -54,7 +56,8 @@
 //!      the same pack/unit-stride-scan slab pipeline, retaining the
 //!      canonical columns instead of scattering them — and phase 2
 //!      chains the true carries across segment boundaries as a linear
-//!      correction scan ([`correct_col`]) **computed on the fly inside
+//!      correction scan (`correct_col` in [`super::simd`]) **computed
+//!      on the fly inside
 //!      the scatter drain** ([`drain_dir_fused`]): each panel element
 //!      is read exactly once, the per-column correction is added in
 //!      registers, and the corrected value goes straight through the
@@ -105,9 +108,14 @@
 //! accumulates directions in the same `k = 0..4` order, and multiplies
 //! the modulation gain after the full accumulation — memory layout
 //! changes, arithmetic does not (Rust never reassociates or contracts
-//! float ops, so vectorization cannot perturb results). The segmented
-//! path reassociates only where the reference decomposition
-//! (`scan_l2r_split`) does, and reproduces *its* bits exactly.
+//! float ops, and the explicit SIMD kernels of [`super::simd`] evaluate
+//! the same association per lane with no FMA, so vectorization cannot
+//! perturb results). The segmented path reassociates only where the
+//! reference decomposition (`scan_l2r_split`) does, and reproduces *its*
+//! bits exactly. The opt-in `scan.precision = bf16` mode (see
+//! [`super::simd`]) narrows staged taps and chained panels to bf16
+//! storage and is the one deliberate exception: tolerance-pinned, never
+//! the default.
 //!
 //! **Workspace pooling.** Every per-call scratch buffer — staged-tap
 //! panels, pack/scan slabs, retained phase-1 panels (`hbufs`), wavefront
@@ -127,6 +135,7 @@
 
 use super::direction::{merge_weights, Direction, DIRECTIONS};
 use super::plan::{self, ScanGeometry, ScanStrategy};
+use super::simd::{self, bf16_narrow, bf16_widen, EpOp, Precision, TapPanels};
 use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
 use crate::tensor::Tensor;
 use crate::util::workspace::{
@@ -187,6 +196,48 @@ fn transpose_plane(src: &[f32], h: usize, w: usize, dst: &mut [f32]) {
     }
 }
 
+/// Narrowing twin of [`transpose_plane`]: the same 8x8 tile walk, but
+/// each store rounds to bf16 through the tile buffer, so the
+/// reduced-precision mode writes its staged panels directly at half
+/// width — no full-width f32 staging temporary ever exists, which is
+/// what actually halves the staged footprint.
+fn transpose_plane_bf16(src: &[f32], h: usize, w: usize, dst: &mut [u16]) {
+    const T: usize = 8;
+    let mut tmp = [0.0f32; T * T];
+    let mut r0 = 0;
+    while r0 + T <= h {
+        let mut i0 = 0;
+        while i0 + T <= w {
+            for r in 0..T {
+                let row = &src[(r0 + r) * w + i0..(r0 + r) * w + i0 + T];
+                for i in 0..T {
+                    tmp[i * T + r] = row[i];
+                }
+            }
+            for i in 0..T {
+                let col = &mut dst[(i0 + i) * h + r0..(i0 + i) * h + r0 + T];
+                for (o, &v) in col.iter_mut().zip(&tmp[i * T..i * T + T]) {
+                    *o = bf16_narrow(v);
+                }
+            }
+            i0 += T;
+        }
+        while i0 < w {
+            for r in r0..r0 + T {
+                dst[i0 * h + r] = bf16_narrow(src[r * w + i0]);
+            }
+            i0 += 1;
+        }
+        r0 += T;
+    }
+    while r0 < h {
+        for i in 0..w {
+            dst[i * h + r0] = bf16_narrow(src[r0 * w + i]);
+        }
+        r0 += 1;
+    }
+}
+
 /// Taps of one direction re-staged into column-major panels, shared
 /// read-only across all plane jobs. With the channel-shared weights of
 /// §4.2 (`Cw == 1`) each tap plane is staged once per batch item and
@@ -194,57 +245,109 @@ fn transpose_plane(src: &[f32], h: usize, w: usize, dst: &mut [f32]) {
 struct StagedTaps<'w> {
     /// Layout: per (ni*cw + ci), three `hc x wc` column-major panels in
     /// tap order (up, center, down). Leased from the workspace; every
-    /// element is written by `transpose_plane` before any read, so the
-    /// lease is not zero-reset.
+    /// element is written by the staging transpose before any read, so
+    /// the lease is not zero-reset. At `Precision::Bf16` the panels are
+    /// bf16 words packed two-per-f32-slot ([`Lease::as_u16`]) and the
+    /// lease is `bf16_len` of the f32 size — half the bytes.
     data: Lease<'w>,
     cw: usize,
     plane: usize,
+    prec: Precision,
 }
 
 impl<'w> StagedTaps<'w> {
-    fn build(taps: &Taps, pool: Option<&ThreadPool>, ws: &'w BufferPool) -> StagedTaps<'w> {
+    fn build(
+        taps: &Taps,
+        pool: Option<&ThreadPool>,
+        ws: &'w BufferPool,
+        prec: Precision,
+    ) -> StagedTaps<'w> {
         let (hc, wc) = (taps.h, taps.w);
         let plane = hc * wc;
         let blocks = taps.n * taps.cw;
-        let mut data = ws.acquire(blocks * 3 * plane);
-        let stage_block = |(b, dst): (usize, &mut [f32])| {
-            let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
-            for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
-                transpose_plane(
-                    &src[tap * plane..(tap + 1) * plane],
-                    hc,
-                    wc,
-                    &mut dst[tap * plane..(tap + 1) * plane],
-                );
-            }
-        };
-        match pool {
-            Some(pool) if blocks > 1 && plane >= 1 << 12 => {
-                let jobs: Vec<(usize, &mut [f32])> =
-                    data.chunks_mut(3 * plane).enumerate().collect();
-                pool.map(jobs, stage_block);
-            }
-            _ => {
-                for job in data.chunks_mut(3 * plane).enumerate() {
-                    stage_block(job);
+        match prec {
+            Precision::F32 => {
+                let mut data = ws.acquire(blocks * 3 * plane);
+                let stage_block = |(b, dst): (usize, &mut [f32])| {
+                    let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
+                    for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
+                        transpose_plane(
+                            &src[tap * plane..(tap + 1) * plane],
+                            hc,
+                            wc,
+                            &mut dst[tap * plane..(tap + 1) * plane],
+                        );
+                    }
+                };
+                match pool {
+                    Some(pool) if blocks > 1 && plane >= 1 << 12 => {
+                        let jobs: Vec<(usize, &mut [f32])> =
+                            data.chunks_mut(3 * plane).enumerate().collect();
+                        pool.map(jobs, stage_block);
+                    }
+                    _ => {
+                        for job in data.chunks_mut(3 * plane).enumerate() {
+                            stage_block(job);
+                        }
+                    }
                 }
+                StagedTaps { data, cw: taps.cw, plane, prec }
+            }
+            Precision::Bf16 => {
+                let mut data = ws.acquire(simd::bf16_len(blocks * 3 * plane));
+                let stage_block = |(b, dst): (usize, &mut [u16])| {
+                    let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
+                    for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
+                        transpose_plane_bf16(
+                            &src[tap * plane..(tap + 1) * plane],
+                            hc,
+                            wc,
+                            &mut dst[tap * plane..(tap + 1) * plane],
+                        );
+                    }
+                };
+                let words = &mut data.as_u16_mut()[..blocks * 3 * plane];
+                match pool {
+                    Some(pool) if blocks > 1 && plane >= 1 << 12 => {
+                        let jobs: Vec<(usize, &mut [u16])> =
+                            words.chunks_mut(3 * plane).enumerate().collect();
+                        pool.map(jobs, stage_block);
+                    }
+                    _ => {
+                        for job in words.chunks_mut(3 * plane).enumerate() {
+                            stage_block(job);
+                        }
+                    }
+                }
+                StagedTaps { data, cw: taps.cw, plane, prec }
             }
         }
-        StagedTaps { data, cw: taps.cw, plane }
     }
 
     /// The three staged panels for channel `ci` of batch item `ni`
-    /// (clamped for shared mode).
+    /// (clamped for shared mode), at the staging precision.
     #[inline]
-    fn panels(&self, ni: usize, ci: usize) -> (&[f32], &[f32], &[f32]) {
+    fn panels(&self, ni: usize, ci: usize) -> TapPanels<'_> {
         let c = if self.cw == 1 { 0 } else { ci };
         let base = (ni * self.cw + c) * 3 * self.plane;
-        let s = &self.data[base..base + 3 * self.plane];
-        (
-            &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
-            &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
-            &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
-        )
+        match self.prec {
+            Precision::F32 => {
+                let s = &self.data[base..base + 3 * self.plane];
+                TapPanels::F32 {
+                    tu: &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
+                    tc: &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
+                    td: &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
+                }
+            }
+            Precision::Bf16 => {
+                let s = &self.data.as_u16()[base..base + 3 * self.plane];
+                TapPanels::Bf16 {
+                    tu: &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
+                    tc: &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
+                    td: &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
+                }
+            }
+        }
     }
 }
 
@@ -346,24 +449,14 @@ fn hw_src(h: usize, w: usize, d: Direction) -> (usize, usize) {
 // Scan: the unit-stride staged kernel
 // ---------------------------------------------------------------------
 
-/// One column of the recurrence off staged (column-contiguous) slices.
-/// Evaluates exactly the reference expression of `core::scan_plane` —
-/// `up + ct + dn + (lam·x)` with `up`/`dn` literal `0.0` at the boundary
-/// rows — so the result is bit-identical; only the stride changed.
-#[inline]
-fn scan_col(prev: &[f32], b: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]) {
-    let h = out.len();
-    if h == 1 {
-        out[0] = 0.0 + tc[0] * prev[0] + 0.0 + b[0];
-        return;
-    }
-    out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1] + b[0];
-    for r in 1..h - 1 {
-        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1] + b[r];
-    }
-    let r = h - 1;
-    out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0 + b[r];
-}
+// The per-column kernels — the scan recurrence (`up + ct + dn + b` with
+// literal `0.0` boundary terms, exactly `core::scan_plane`'s expression)
+// and the carry-correction fold (the same recurrence without the `b`
+// term, exactly `split::phase2_plane`'s association) — live in
+// [`super::simd`] as `scan_col` / `correct_col`: a pinned scalar
+// reference plus runtime-dispatched AVX2/NEON lane kernels that are
+// bit-identical to it. The engine calls them through the dispatcher so
+// every strategy path picks up the active kernel and tap precision.
 
 /// Scan one slab of canonical columns. `carry` holds the previous
 /// slab's last column on entry and this slab's last column on return —
@@ -377,9 +470,7 @@ fn scan_slab(
     sw: usize,
     chunk: usize,
     b: &[f32],
-    tu: &[f32],
-    tc: &[f32],
-    td: &[f32],
+    taps: TapPanels,
     zeros: &[f32],
     carry: &mut [f32],
     hs: &mut [f32],
@@ -387,7 +478,6 @@ fn scan_slab(
     for i in 0..sw {
         let gi = i0 + i;
         let col = i * hc;
-        let gcol = gi * hc;
         let (done, rest) = hs.split_at_mut(col);
         let cur = &mut rest[..hc];
         let prev: &[f32] = if gi % chunk == 0 {
@@ -397,37 +487,9 @@ fn scan_slab(
         } else {
             &done[col - hc..]
         };
-        scan_col(
-            prev,
-            &b[col..col + hc],
-            &tu[gcol..gcol + hc],
-            &tc[gcol..gcol + hc],
-            &td[gcol..gcol + hc],
-            cur,
-        );
+        simd::scan_col(prev, &b[col..col + hc], taps.col(gi, hc), cur);
     }
     carry[..hc].copy_from_slice(&hs[(sw - 1) * hc..sw * hc]);
-}
-
-/// One column of the carry-correction recurrence off staged
-/// (column-contiguous) slices: [`scan_col`] without the `b` term (the
-/// correction scan propagates an initial state through x ≡ 0, exact by
-/// linearity of Eq. 1). Evaluates exactly the `up + ct + dn` association
-/// of `split::phase2_plane`, so segment corrections are bit-identical to
-/// the reference decomposition.
-#[inline]
-fn correct_col(prev: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]) {
-    let h = out.len();
-    if h == 1 {
-        out[0] = 0.0 + tc[0] * prev[0] + 0.0;
-        return;
-    }
-    out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1];
-    for r in 1..h - 1 {
-        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1];
-    }
-    let r = h - 1;
-    out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0;
 }
 
 // ---------------------------------------------------------------------
@@ -439,6 +501,14 @@ fn correct_col(prev: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]
 /// (assign, weighted merge, or merge + modulation) per element. This is
 /// the step that deletes the directional intermediates, the separate
 /// accumulation loop, and `output_modulation`'s clone.
+///
+/// The op is a [`EpOp`] value, not a closure: the T2B/B2T arms drain in
+/// contiguous `w`-length runs on *both* sides and dispatch to the batch
+/// lane kernels ([`simd::ep_apply`]), while the L2R/R2L arms read the
+/// slab with stride `hc` and apply the same pinned per-element
+/// expression ([`EpOp::apply`]) scalar — bit-identical either way (a
+/// strided gather was measured not worth the complexity on the row
+/// arms; the column arms are where the epilogue bytes move).
 fn scatter_slab(
     hs: &[f32],
     h: usize,
@@ -448,14 +518,14 @@ fn scatter_slab(
     sw: usize,
     hc: usize,
     out: &mut [f32],
-    f: impl Fn(f32, f32) -> f32,
+    op: EpOp,
 ) {
     match d {
         Direction::L2R => {
             for r in 0..h {
                 let orow = &mut out[r * w + i0..r * w + i0 + sw];
-                for i in 0..sw {
-                    orow[i] = f(orow[i], hs[i * hc + r]);
+                for (i, o) in orow.iter_mut().enumerate() {
+                    *o = op.apply(*o, hs[i * hc + r]);
                 }
             }
         }
@@ -464,7 +534,7 @@ fn scatter_slab(
                 let row = r * w;
                 for i in 0..sw {
                     let p = row + w - 1 - (i0 + i);
-                    out[p] = f(out[p], hs[i * hc + r]);
+                    out[p] = op.apply(out[p], hs[i * hc + r]);
                 }
             }
         }
@@ -473,9 +543,7 @@ fn scatter_slab(
                 let row = (i0 + i) * w;
                 let orow = &mut out[row..row + w];
                 let hcol = &hs[i * hc..i * hc + hc];
-                for r in 0..w {
-                    orow[r] = f(orow[r], hcol[r]);
-                }
+                simd::ep_apply(op, orow, &hcol[..w]);
             }
         }
         Direction::B2T => {
@@ -483,9 +551,7 @@ fn scatter_slab(
                 let row = (h - 1 - (i0 + i)) * w;
                 let orow = &mut out[row..row + w];
                 let hcol = &hs[i * hc..i * hc + hc];
-                for r in 0..w {
-                    orow[r] = f(orow[r], hcol[r]);
-                }
+                simd::ep_apply(op, orow, &hcol[..w]);
             }
         }
     }
@@ -631,7 +697,7 @@ fn run_plane(
         let base = (ni * c + ci) * plane;
         let xs = &di.x.data[base..base + plane];
         let ls = &di.lam.data[base..base + plane];
-        let (tu, tc, td) = staged[k].panels(ni, ci);
+        let taps = staged[k].panels(ni, ci);
         let mut i0 = 0;
         while i0 < wc {
             let sw = SLAB.min(wc - i0);
@@ -642,9 +708,7 @@ fn run_plane(
                 sw,
                 di.chunk,
                 &scratch.b,
-                tu,
-                tc,
-                td,
+                taps,
                 &scratch.zeros,
                 &mut scratch.carry,
                 &mut scratch.h,
@@ -676,16 +740,17 @@ fn drain_scatter(
     last: usize,
     gain: Option<f32>,
 ) {
-    match wts {
-        None => scatter_slab(hs, h, w, d, i0, sw, hc, os, |_, v| v),
+    let op = match wts {
+        None => EpOp::Assign,
         Some(wts) => {
             let wt = wts[k];
             match gain.filter(|_| k == last) {
-                None => scatter_slab(hs, h, w, d, i0, sw, hc, os, |o, v| o + wt * v),
-                Some(g) => scatter_slab(hs, h, w, d, i0, sw, hc, os, |o, v| (o + wt * v) * g),
+                None => EpOp::Merge(wt),
+                Some(g) => EpOp::MergeGain(wt, g),
             }
         }
-    }
+    };
+    scatter_slab(hs, h, w, d, i0, sw, hc, os, op);
 }
 
 /// Materialize the engine's output tensor: the caller-recycled buffer
@@ -719,6 +784,7 @@ fn run_engine(
     exec: ExecSpec,
     ws: &BufferPool,
     out_buf: Option<Vec<f32>>,
+    prec: Option<Precision>,
 ) -> Tensor {
     let (n, c) = (out_shape[0], out_shape[1]);
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -728,8 +794,9 @@ fn run_engine(
         return out_tensor(out_shape, out_buf);
     }
     let hmax = h.max(w);
+    let prec = prec.unwrap_or_else(simd::precision);
     let staged: Vec<StagedTaps<'_>> =
-        dirs.iter().map(|d| StagedTaps::build(d.taps, pool, ws)).collect();
+        dirs.iter().map(|d| StagedTaps::build(d.taps, pool, ws, prec)).collect();
     let (strategy, phase2) = match exec {
         ExecSpec::Forced(s, p2) => (s, p2),
         ExecSpec::Auto => match pool {
@@ -758,7 +825,7 @@ fn run_engine(
         // are no phases, so the phase-2 schedule does not apply.
         ScanStrategy::Chained { s } => {
             return run_engine_chained(
-                dirs, &staged, wts, gain, out_shape, pool, s.max(1), ws, out_buf,
+                dirs, &staged, wts, gain, out_shape, pool, s.max(1), ws, out_buf, prec,
             );
         }
         // The direction fan is the s = 1 degenerate segmented run: one
@@ -831,7 +898,7 @@ fn run_engine(
 /// [`scan_slab`]). Phase 2 fans one job per plane: for each direction it
 /// chains the true carry across segment boundaries — the corrected last
 /// column of segment k *is* segment k+1's carry — with the linear
-/// correction scan ([`correct_col`]) computed **on the fly inside the
+/// correction scan (`correct_col` in [`super::simd`]) computed **on the fly inside the
 /// scatter drain** ([`drain_dir_fused`]): the retained panel is read
 /// once and never re-written, and the corrected values flow straight
 /// through the fused scatter epilogue (inverse orientation + weighted
@@ -947,7 +1014,7 @@ fn run_engine_segmented(
         let mut scratch = DrainScratch::new(hmax, ws);
         for (k, di) in dirs.iter().enumerate() {
             let (hc, wc) = (di.taps.h, di.taps.w);
-            let (tu, tc, td) = staged[k].panels(p / c, p % c);
+            let taps = staged[k].panels(p / c, p % c);
             let panel = &pb[dir_off[k]..dir_off[k] + hc * wc];
             let pieces: Vec<&[f32]> =
                 bounds[k].iter().map(|&(lo, hi)| &panel[lo * hc..hi * hc]).collect();
@@ -956,7 +1023,7 @@ fn run_engine_segmented(
                 &bounds[k],
                 hc,
                 di.chunk,
-                (tu, tc, td),
+                taps,
                 (h, w),
                 di.d,
                 os,
@@ -1009,7 +1076,7 @@ fn scan_piece_into(
     let base = p * plane;
     let xs = &di.x.data[base..base + plane];
     let ls = &di.lam.data[base..base + plane];
-    let (tu, tc, td) = staged[k].panels(p / c, p % c);
+    let taps = staged[k].panels(p / c, p % c);
     // The pack slab is fully overwritten per slab; the carry must start
     // zero (a piece scans from a zero incoming carry and READS the carry
     // on its first column when `lo` is off a chunk boundary), and the
@@ -1028,15 +1095,74 @@ fn scan_piece_into(
             sw,
             di.chunk,
             &b,
-            tu,
-            tc,
-            td,
+            taps,
             &zeros,
             &mut carry,
             &mut buf[o..o + sw * hc],
         );
         i0 += sw;
     }
+}
+
+/// [`scan_piece_into`] retaining the piece as packed bf16 words — the
+/// chained engine's reduced-precision panel path. The recurrence is
+/// untouched: every slab scans in f32 through the very same
+/// [`scan_slab`] (the f32 carry column crosses slab boundaries exactly
+/// as in f32 mode), and only the *store* into the retained panel
+/// narrows, via round-to-nearest-even. `agg` receives the piece's last
+/// column at full f32 precision — the publication-board aggregate, so
+/// look-back folds lose nothing to the panel narrowing.
+#[allow(clippy::too_many_arguments)]
+fn scan_piece_into_bf16(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    p: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    panel: &mut [u16],
+    agg: &mut [f32],
+    ws: &BufferPool,
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let di = &dirs[k];
+    let hc = di.taps.h;
+    let base = p * plane;
+    let xs = &di.x.data[base..base + plane];
+    let ls = &di.lam.data[base..base + plane];
+    let taps = staged[k].panels(p / c, p % c);
+    let mut b = ws.acquire(SLAB * hmax);
+    // f32 staging slab the scan lands in before narrowing; fully
+    // overwritten per slab.
+    let mut hslab = ws.acquire(SLAB * hmax);
+    let mut carry = ws.acquire_zeroed(hmax);
+    let zeros = ws.acquire_zeroed(hmax);
+    let mut i0 = lo;
+    while i0 < hi {
+        let sw = SLAB.min(hi - i0);
+        pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
+        scan_slab(
+            hc,
+            i0,
+            sw,
+            di.chunk,
+            &b,
+            taps,
+            &zeros,
+            &mut carry,
+            &mut hslab[..sw * hc],
+        );
+        let o = (i0 - lo) * hc;
+        for (dst, &v) in panel[o..o + sw * hc].iter_mut().zip(&hslab[..sw * hc]) {
+            *dst = bf16_narrow(v);
+        }
+        i0 += sw;
+    }
+    agg.copy_from_slice(&carry[..agg.len()]);
 }
 
 /// The one shared carry-correction body: add the linear correction scan
@@ -1050,9 +1176,7 @@ fn correct_segment<'w>(
     chunk: usize,
     lo: usize,
     hi: usize,
-    tu: &[f32],
-    tc: &[f32],
-    td: &[f32],
+    taps: TapPanels<'_>,
     cin: &[f32],
     corr: &mut Lease<'w>,
     next: &mut Lease<'w>,
@@ -1065,16 +1189,42 @@ fn correct_segment<'w>(
             // exact from this column on.
             break;
         }
-        let g0 = gi * hc;
-        correct_col(
-            &corr[..hc],
-            &tu[g0..g0 + hc],
-            &tc[g0..g0 + hc],
-            &td[g0..g0 + hc],
-            &mut next[..hc],
-        );
+        simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
         for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
             *o += v;
+        }
+        std::mem::swap(corr, next);
+    }
+}
+
+/// [`correct_segment`] over a bf16-stored segment: the correction
+/// recurrence itself runs in f32 (it never reads panel values), and
+/// each corrected element decodes, adds in f32, and re-encodes with
+/// round-to-nearest-even — the chained engine's reduced-precision
+/// panel path. Chunk-reset and zero-carry semantics are identical to
+/// the f32 body.
+#[allow(clippy::too_many_arguments)]
+fn correct_segment_bf16<'w>(
+    hc: usize,
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+    taps: TapPanels<'_>,
+    cin: &[f32],
+    corr: &mut Lease<'w>,
+    next: &mut Lease<'w>,
+    seg: &mut [u16],
+) {
+    corr[..hc].copy_from_slice(&cin[..hc]);
+    for (j, gi) in (lo..hi).enumerate() {
+        if gi % chunk == 0 {
+            // Chunk reset: the carry dies here and phase 1 was already
+            // exact from this column on.
+            break;
+        }
+        simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
+        for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
+            *o = bf16_narrow(bf16_widen(*o) + v);
         }
         std::mem::swap(corr, next);
     }
@@ -1140,7 +1290,7 @@ fn drain_dir_fused(
     bounds: &[(usize, usize)],
     hc: usize,
     chunk: usize,
-    taps: (&[f32], &[f32], &[f32]),
+    taps: TapPanels<'_>,
     hw: (usize, usize),
     d: Direction,
     os: &mut [f32],
@@ -1150,7 +1300,6 @@ fn drain_dir_fused(
     gain: Option<f32>,
     s: &mut DrainScratch<'_>,
 ) {
-    let (tu, tc, td) = taps;
     let (h, w) = hw;
     for (si, (&(lo, hi), piece)) in bounds.iter().zip(pieces).enumerate() {
         let seglen = hi - lo;
@@ -1203,14 +1352,7 @@ fn drain_dir_fused(
                 }
                 let dst = &mut colb[i * hc..(i + 1) * hc];
                 if active {
-                    let g0 = gi * hc;
-                    correct_col(
-                        &s.corr[..hc],
-                        &tu[g0..g0 + hc],
-                        &tc[g0..g0 + hc],
-                        &td[g0..g0 + hc],
-                        &mut s.next[..hc],
-                    );
+                    simd::correct_col(&s.corr[..hc], taps.col(gi, hc), &mut s.next[..hc]);
                     for ((o, &p1), &cv) in dst.iter_mut().zip(src).zip(&s.next[..hc]) {
                         *o = p1 + cv;
                     }
@@ -1253,7 +1395,7 @@ fn drain_dir_pieces_fused(
 ) {
     let di = &dirs[k];
     let hc = di.taps.h;
-    let (tu, tc, td) = staged[k].panels(p / c, p % c);
+    let taps = staged[k].panels(p / c, p % c);
     // Taking the leases out of the slots moves ownership here: they
     // return to the workspace pool when `bufs` drops, on every exit
     // path — including the early return below.
@@ -1276,7 +1418,7 @@ fn drain_dir_pieces_fused(
         &bounds[k],
         hc,
         di.chunk,
-        (tu, tc, td),
+        taps,
         hw,
         di.d,
         os,
@@ -1323,7 +1465,7 @@ fn correct_and_drain_pieces(
     let mut slot = 0usize;
     for (k, di) in dirs.iter().enumerate() {
         let hc = di.taps.h;
-        let (tu, tc, td) = staged[k].panels(p / c, p % c);
+        let taps = staged[k].panels(p / c, p % c);
         for (si, &(lo, hi)) in bounds[k].iter().enumerate() {
             // Taking the lease moves ownership here; it returns to the
             // pool when `buf` drops, even on the early return below.
@@ -1344,7 +1486,7 @@ fn correct_and_drain_pieces(
             // bit-identical.
             if si > 0 && !carry[..hc].iter().all(|&v| v == 0.0) {
                 correct_segment(
-                    hc, di.chunk, lo, hi, tu, tc, td, &carry, &mut corr, &mut next, &mut buf,
+                    hc, di.chunk, lo, hi, taps, &carry, &mut corr, &mut next, &mut buf,
                 );
             }
             carry[..hc].copy_from_slice(&buf[(hi - lo - 1) * hc..(hi - lo) * hc]);
@@ -1600,6 +1742,10 @@ struct ChainState<'e, 'w> {
     poisoned: AtomicBool,
     pool: Option<&'e ThreadPool>,
     ws: &'w BufferPool,
+    /// Storage precision of the job-local panels (the staged taps carry
+    /// their own): [`Precision::Bf16`] halves the retained bytes while
+    /// the recurrence and the publication board stay f32.
+    prec: Precision,
 }
 
 impl ChainState<'_, '_> {
@@ -1677,27 +1823,58 @@ fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
     let chunk = di.chunk;
     let (h, w) = st.hw;
     let seglen = hi - lo;
-    let (tu, tc, td) = st.staged[k].panels(p / st.c, p % st.c);
-    // Job-local panel, fully overwritten by the scan below. Leased
-    // before the (test-only) fault hook so an injected panic unwinds
-    // while scratch is out on lease — the leak test covers the window
-    // that matters.
-    let mut panel = st.ws.acquire(seglen * hc);
+    let taps = st.staged[k].panels(p / st.c, p % st.c);
+    let bf16 = st.prec == Precision::Bf16;
+    // Job-local panel — half-width (packed bf16 words in the f32 lease)
+    // in reduced-precision mode, fully overwritten by the scan below.
+    // Leased before the (test-only) fault hook so an injected panic
+    // unwinds while scratch is out on lease — the leak test covers the
+    // window that matters.
+    let mut panel = if bf16 {
+        st.ws.acquire(simd::bf16_len(seglen * hc))
+    } else {
+        st.ws.acquire(seglen * hc)
+    };
+    // The f32 aggregate column of a bf16 chunk: the recurrence runs in
+    // f32 (only the *stored* panel narrows), so the board still carries
+    // full-precision columns and the look-back fold loses nothing.
+    let mut aggbuf = bf16.then(|| st.ws.acquire(st.hmax));
     #[cfg(test)]
     test_hooks::maybe_panic(p, k, lo, hi);
-    scan_piece_into(
-        st.dirs, st.staged, st.c, (h, w), st.hmax, p, k, lo, hi, &mut panel, st.ws,
-    );
-    // Publish the zero-carry aggregate (the chunk's last column)
-    // immediately: successors' look-backs can fold over it while this
-    // chunk is still resolving its own carry.
-    st.board.publish_agg(bidx, &panel[(seglen - 1) * hc..]);
+    match aggbuf.as_mut() {
+        Some(agg) => {
+            scan_piece_into_bf16(
+                st.dirs,
+                st.staged,
+                st.c,
+                (h, w),
+                st.hmax,
+                p,
+                k,
+                lo,
+                hi,
+                &mut panel.as_u16_mut()[..seglen * hc],
+                &mut agg[..hc],
+                st.ws,
+            );
+            // Publish the zero-carry aggregate (the chunk's last
+            // column) immediately: successors' look-backs can fold over
+            // it while this chunk is still resolving its own carry.
+            st.board.publish_agg(bidx, &agg[..hc]);
+        }
+        None => {
+            scan_piece_into(
+                st.dirs, st.staged, st.c, (h, w), st.hmax, p, k, lo, hi, &mut panel, st.ws,
+            );
+            st.board.publish_agg(bidx, &panel[(seglen - 1) * hc..]);
+        }
+    }
 
     // Decoupled look-back: walk predecessor blocks back to the nearest
     // *final* value — a published inclusive PREFIX, block 0 (whose
     // aggregate is its prefix), or a chain-breaker — then fold forward
     // over the skipped blocks' aggregates with the exact
-    // [`correct_col`] recurrence and zero-carry/chunk-reset skips of
+    // `correct_col` recurrence and zero-carry/chunk-reset skips of
     // the two-phase engine, so the resolved carry is bit-identical to
     // the sequentially chained one.
     let mut corr = st.ws.acquire_zeroed(st.hmax);
@@ -1754,14 +1931,7 @@ fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
                     died = true;
                     break;
                 }
-                let g0 = gi * hc;
-                correct_col(
-                    &corr[..hc],
-                    &tu[g0..g0 + hc],
-                    &tc[g0..g0 + hc],
-                    &td[g0..g0 + hc],
-                    &mut next[..hc],
-                );
+                simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
                 std::mem::swap(&mut corr, &mut next);
             }
             if died {
@@ -1782,18 +1952,46 @@ fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
 
     // Fold the resolved carry into the job-local panel while it is
     // still cache-hot — exactly the two-pass correction arithmetic
-    // (`phase1 + corr`, dying at chunk resets).
+    // (`phase1 + corr`, dying at chunk resets; bf16 panels decode, add
+    // in f32, and re-encode per element).
     if active {
-        correct_segment(
-            hc, chunk, lo, hi, tu, tc, td, &carry, &mut corr, &mut next, &mut panel,
-        );
+        match aggbuf.as_mut() {
+            Some(_) => correct_segment_bf16(
+                hc,
+                chunk,
+                lo,
+                hi,
+                taps,
+                &carry,
+                &mut corr,
+                &mut next,
+                &mut panel.as_u16_mut()[..seglen * hc],
+            ),
+            None => correct_segment(
+                hc, chunk, lo, hi, taps, &carry, &mut corr, &mut next, &mut panel,
+            ),
+        }
     }
 
     // Publish the inclusive prefix (the corrected last column) BEFORE
     // the merge-order gate: successors' look-backs terminate here even
     // while this chunk is queued behind the previous direction's
     // drains.
-    st.board.publish_prefix(bidx, &panel[(seglen - 1) * hc..]);
+    match aggbuf.as_mut() {
+        Some(agg) => {
+            if active {
+                // Decode the corrected bf16 last column; an uncorrected
+                // chunk republishes its exact f32 aggregate instead
+                // (prefix == aggregate, bit for bit, as in f32 mode).
+                let last = &panel.as_u16()[(seglen - 1) * hc..seglen * hc];
+                for (o, &v) in agg[..hc].iter_mut().zip(last) {
+                    *o = bf16_widen(v);
+                }
+            }
+            st.board.publish_prefix(bidx, &agg[..hc]);
+        }
+        None => st.board.publish_prefix(bidx, &panel[(seglen - 1) * hc..]),
+    }
 
     // Merged passes: direction k's contributions land on the shared
     // output plane only after every direction-(k-1) chunk of the same
@@ -1810,27 +2008,27 @@ fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
 
     // Pure scatter of the already-corrected panel through the shared
     // epilogue op — no correction work happens under the plane lock.
+    // bf16 panels decode slab-by-slab into an f32 staging slab (leased
+    // before the lock) so the scatter arms stay f32-only.
     {
+        let mut dec = bf16.then(|| st.ws.acquire(SLAB * hc.max(1)));
         let gain = st.gain.map(|g| g[p % st.c]);
         let mut guard = lock_unpoisoned(&st.os_slots[p]);
         let os: &mut [f32] = &mut guard;
         let mut j0 = 0;
         while j0 < seglen {
             let sw = SLAB.min(seglen - j0);
-            drain_scatter(
-                &panel[j0 * hc..(j0 + sw) * hc],
-                h,
-                w,
-                di.d,
-                lo + j0,
-                sw,
-                hc,
-                os,
-                st.wts,
-                k,
-                ndirs - 1,
-                gain,
-            );
+            let hs: &[f32] = match dec.as_mut() {
+                Some(dec) => {
+                    let words = &panel.as_u16()[j0 * hc..(j0 + sw) * hc];
+                    for (o, &v) in dec[..sw * hc].iter_mut().zip(words) {
+                        *o = bf16_widen(v);
+                    }
+                    &dec[..sw * hc]
+                }
+                None => &panel[j0 * hc..(j0 + sw) * hc],
+            };
+            drain_scatter(hs, h, w, di.d, lo + j0, sw, hc, os, st.wts, k, ndirs - 1, gain);
             j0 += sw;
         }
     }
@@ -1850,7 +2048,7 @@ fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
 ///
 /// Bit-exactness: chunk bounds come from the same [`segment_bounds`],
 /// phase-1 arithmetic is the shared [`scan_piece_into`], and the
-/// look-back fold replays the exact [`correct_col`] recurrence order
+/// look-back fold replays the exact `correct_col` recurrence order
 /// with the reference's zero-carry and chunk-reset skips — so the
 /// resolved carry, the corrected panel, and hence every output bit
 /// match `scan_l2r_split` and the segmented engine exactly (validated
@@ -1878,6 +2076,7 @@ fn run_engine_chained(
     segments: usize,
     ws: &BufferPool,
     out_buf: Option<Vec<f32>>,
+    prec: Precision,
 ) -> Tensor {
     let c = out_shape[1];
     let (h, w) = (out_shape[2], out_shape[3]);
@@ -1933,6 +2132,7 @@ fn run_engine_chained(
         poisoned: AtomicBool::new(false),
         pool: pool.filter(|p| p.threads() > 1 && njobs > 1),
         ws,
+        prec,
     };
     match st.pool {
         Some(pool) => {
@@ -2039,7 +2239,7 @@ fn fused_scan_dir_inner(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws, out_buf)
+    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws, out_buf, None)
 }
 
 /// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
@@ -2067,11 +2267,15 @@ fn fused_scan_dir_forced(
         phase2,
         pool,
         BufferPool::global(),
+        None,
     )
 }
 
 /// [`fused_scan_dir_forced`] over an explicit workspace — the hook the
 /// pooled-vs-fresh bit-exactness and zero-miss tests drive per strategy.
+/// `prec` overrides the panel/tap storage precision *for this call
+/// only* (tests must never flip the process-global precision override:
+/// concurrently running `==` suites would observe it).
 #[allow(clippy::too_many_arguments)]
 fn fused_scan_dir_forced_ws(
     x: &Tensor,
@@ -2083,6 +2287,7 @@ fn fused_scan_dir_forced_ws(
     phase2: Phase2,
     pool: &ThreadPool,
     ws: &BufferPool,
+    prec: Option<Precision>,
 ) -> Tensor {
     validate_dir(x, taps, lam, d);
     if x.data.is_empty() {
@@ -2090,7 +2295,17 @@ fn fused_scan_dir_forced_ws(
     }
     let chunk = effective_chunk(taps.w, kchunk);
     let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, Some(pool), ExecSpec::Forced(strategy, phase2), ws, None)
+    run_engine(
+        &dirs,
+        None,
+        None,
+        &x.shape,
+        Some(pool),
+        ExecSpec::Forced(strategy, phase2),
+        ws,
+        None,
+        prec,
+    )
 }
 
 /// [`fused_scan_dir_pool`] with a *forced* segment-parallel
@@ -2312,7 +2527,17 @@ pub fn fused_merged_4dir(
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), None, &x.shape, None, ExecSpec::Auto, BufferPool::global(), None)
+    run_engine(
+        &dirs,
+        Some(&wts),
+        None,
+        &x.shape,
+        None,
+        ExecSpec::Auto,
+        BufferPool::global(),
+        None,
+        None,
+    )
 }
 
 /// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
@@ -2334,6 +2559,7 @@ pub fn fused_merged_4dir_pool(
         Some(pool),
         ExecSpec::Auto,
         BufferPool::global(),
+        None,
         None,
     )
 }
@@ -2361,11 +2587,13 @@ fn fused_merged_4dir_forced(
         phase2,
         pool,
         BufferPool::global(),
+        None,
     )
 }
 
 /// [`fused_merged_4dir_forced`] over an explicit workspace — the merged
-/// twin of [`fused_scan_dir_forced_ws`] for the pooled-vs-fresh tests.
+/// twin of [`fused_scan_dir_forced_ws`] for the pooled-vs-fresh tests,
+/// with the same per-call `prec` override.
 #[allow(clippy::too_many_arguments)]
 fn fused_merged_4dir_forced_ws(
     x: &Tensor,
@@ -2377,6 +2605,7 @@ fn fused_merged_4dir_forced_ws(
     phase2: Phase2,
     pool: &ThreadPool,
     ws: &BufferPool,
+    prec: Option<Precision>,
 ) -> Tensor {
     let dirs = merged_dirs(x, taps, lam, kchunk);
     let wts = merge_weights(merge_logits);
@@ -2389,6 +2618,7 @@ fn fused_merged_4dir_forced_ws(
         ExecSpec::Forced(strategy, phase2),
         ws,
         None,
+        prec,
     )
 }
 
@@ -2589,7 +2819,17 @@ pub fn fused_merged_canonical_ws(
         .collect();
     assert_eq!(u.len(), out_shape[1], "gain length must be C");
     let wts = merge_weights(merge_logits);
-    run_engine(&dirs, Some(&wts), Some(u), out_shape, Some(pool), ExecSpec::Auto, ws, None)
+    run_engine(
+        &dirs,
+        Some(&wts),
+        Some(u),
+        out_shape,
+        Some(pool),
+        ExecSpec::Auto,
+        ws,
+        None,
+        None,
+    )
 }
 
 #[cfg(test)]
@@ -3478,9 +3718,11 @@ mod tests {
                 let cold_ws = BufferPool::new(usize::MAX);
                 let cold = fused_scan_dir_forced_ws(
                     &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &cold_ws,
+                    None,
                 );
                 let warm = fused_scan_dir_forced_ws(
                     &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &warm_ws,
+                    None,
                 );
                 assert_eq!(
                     reference.data, cold.data,
@@ -3516,6 +3758,7 @@ mod tests {
                     phase2,
                     &pool,
                     &warm_ws,
+                    None,
                 );
                 assert_eq!(reference.data, fan.data, "dirfan {phase2:?} round {round}");
             }
@@ -3595,12 +3838,14 @@ mod tests {
             let ws = BufferPool::new(usize::MAX);
             let first = fused_scan_dir_forced_ws(
                 &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
+                None,
             );
             let s1 = ws.stats();
             assert!(s1.misses > 0, "{strategy:?}: cold run must allocate");
             assert_eq!(s1.bytes_leased, 0, "{strategy:?}: leases must all return");
             let second = fused_scan_dir_forced_ws(
                 &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
+                None,
             );
             let s2 = ws.stats();
             assert_eq!(
@@ -3627,6 +3872,7 @@ mod tests {
             Phase2::Barrier,
             &pool1,
             &ws,
+            None,
         );
         let s1 = ws.stats();
         let second = fused_merged_4dir_forced_ws(
@@ -3639,6 +3885,7 @@ mod tests {
             Phase2::Barrier,
             &pool1,
             &ws,
+            None,
         );
         assert_eq!(ws.stats().misses, s1.misses, "dirfan warm rerun allocated");
         assert_eq!(first.data, second.data);
@@ -3675,6 +3922,7 @@ mod tests {
                 Phase2::WaveDir,
                 &pool,
                 &ws,
+                None,
             )
         }));
         *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
@@ -3697,6 +3945,7 @@ mod tests {
             Phase2::WaveDir,
             &pool,
             &ws,
+            None,
         );
         assert_eq!(reference.data, after.data);
         assert_eq!(ws.stats().bytes_leased, 0);
@@ -3738,6 +3987,7 @@ mod tests {
                     Phase2::Barrier,
                     &pool,
                     &ws,
+                    None,
                 )
             }));
             *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
@@ -3769,8 +4019,228 @@ mod tests {
             Phase2::Barrier,
             &pool,
             &ws,
+            None,
         );
         assert_eq!(reference.data, after.data);
+        assert_eq!(ws.stats().bytes_leased, 0);
+    }
+
+    /// The SIMD pin at the engine level: every vector kernel this host
+    /// supports produces output exactly `==` the scalar kernel's across
+    /// all four directions, every strategy/schedule, kchunk resets, and
+    /// slab-boundary / degenerate widths. (The scalar kernel itself is
+    /// pinned `==` the unfused reference by the suites above, so this
+    /// transitively pins the vector kernels to the reference.) Flipping
+    /// the process-global kernel override is safe even under concurrent
+    /// tests precisely because of this property — any kernel produces
+    /// the same bits.
+    #[test]
+    fn simd_kernels_pinned_bit_identical_to_scalar_across_engine_matrix() {
+        let kernels: Vec<&str> = ["avx2", "neon"]
+            .into_iter()
+            .filter(|k| simd::set_simd_override(k).is_ok())
+            .collect();
+        simd::set_simd_override("auto").unwrap();
+        if kernels.is_empty() {
+            // Scalar-only host: the vector kernels are pinned by the
+            // x86_64/aarch64 CI legs; nothing to compare here.
+            return;
+        }
+        let pool = crate::util::ThreadPool::new(4);
+        let ws = BufferPool::new(usize::MAX);
+        let mut rng = Rng::new(91);
+        // Slab crossings, the partial last slab, H=1 and W=1 columns.
+        let geoms = [
+            (1usize, 2usize, 5usize, SLAB - 1),
+            (1, 2, 5, SLAB + 1),
+            (1, 1, 1, 2 * SLAB + 3),
+            (1, 2, 2 * SLAB + 3, 1),
+            (2, 2, 9, 48),
+        ];
+        let cases = [
+            (ScanStrategy::PlanePar, Phase2::Barrier),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
+            (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
+        ];
+        for (n, c, h, w) in geoms {
+            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+            for d in DIRECTIONS {
+                let (hc, wc) = hw_src(h, w, d);
+                let taps = mk_taps(&mut rng, n, 1, hc, wc);
+                // Full width plus one mid-column carry reset.
+                let kchunks =
+                    if wc >= 2 && wc % 2 == 0 { vec![0usize, wc / 2] } else { vec![0usize] };
+                for &k in &kchunks {
+                    for (strategy, phase2) in cases {
+                        simd::set_simd_override("scalar").unwrap();
+                        let base = fused_scan_dir_forced_ws(
+                            &x, &taps, &lam, d, k, strategy, phase2, &pool, &ws, None,
+                        );
+                        for kern in &kernels {
+                            simd::set_simd_override(kern).unwrap();
+                            let got = fused_scan_dir_forced_ws(
+                                &x, &taps, &lam, d, k, strategy, phase2, &pool, &ws, None,
+                            );
+                            assert_eq!(
+                                base.data, got.data,
+                                "{kern} != scalar: n{n} c{c} {h}x{w} {d:?} k{k} \
+                                 {strategy:?} {phase2:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // The merged path: softmax-merge + modulation epilogue under
+        // DirFan (unreachable from the single-direction matrix) and the
+        // chained engine.
+        let (n, c, h, w) = (1usize, 2usize, 6usize, SLAB + 5);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.4f32, -0.2, 1.1, 0.0];
+        for (strategy, phase2) in [
+            (ScanStrategy::DirFan, Phase2::Barrier),
+            (ScanStrategy::DirFan, Phase2::WaveDir),
+            (ScanStrategy::Segmented { s: 2 }, Phase2::WaveDir),
+            (ScanStrategy::Chained { s: 2 }, Phase2::Barrier),
+        ] {
+            simd::set_simd_override("scalar").unwrap();
+            let base = fused_merged_4dir_forced_ws(
+                &x, mtaps, &lam, &logits, 0, strategy, phase2, &pool, &ws, None,
+            );
+            for kern in &kernels {
+                simd::set_simd_override(kern).unwrap();
+                let got = fused_merged_4dir_forced_ws(
+                    &x, mtaps, &lam, &logits, 0, strategy, phase2, &pool, &ws, None,
+                );
+                assert_eq!(
+                    base.data, got.data,
+                    "merged {kern} != scalar: {strategy:?} {phase2:?}"
+                );
+            }
+        }
+        simd::set_simd_override("auto").unwrap();
+        assert_eq!(ws.stats().bytes_leased, 0);
+    }
+
+    /// The bf16 panel-mode pin: with taps and chained panels stored as
+    /// bf16 (threaded per call — never via the process-global override,
+    /// which concurrently running `==` suites would observe), every
+    /// strategy's output matches the f32 run elementwise within the
+    /// documented tolerance `|bf16 - f32| <= (|f32| + 1) * 2^-6`, and
+    /// the narrowing actually engages (bits differ from f32).
+    #[test]
+    fn bf16_panels_within_documented_tolerance_of_f32() {
+        let pool = crate::util::ThreadPool::new(4);
+        let ws = BufferPool::new(usize::MAX);
+        let mut rng = Rng::new(92);
+        // 2^-6, the documented pin; the merged rows get one extra bit
+        // of slack (2^-5) because the softmax merge can cancel |f32|
+        // while the per-direction errors it averages do not cancel.
+        let tol_ok = |f: &[f32], b: &[f32], eps: f32| {
+            f.iter().zip(b).all(|(&a, &o)| (a - o).abs() <= (a.abs() + 1.0) * eps)
+        };
+        let (n, c, h, w) = (1usize, 2usize, 7usize, 2 * SLAB + 3);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, 1, hc, wc);
+            for (strategy, phase2) in [
+                (ScanStrategy::PlanePar, Phase2::Barrier),
+                (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
+                (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
+            ] {
+                let full = fused_scan_dir_forced_ws(
+                    &x,
+                    &taps,
+                    &lam,
+                    d,
+                    0,
+                    strategy,
+                    phase2,
+                    &pool,
+                    &ws,
+                    Some(Precision::F32),
+                );
+                let half = fused_scan_dir_forced_ws(
+                    &x,
+                    &taps,
+                    &lam,
+                    d,
+                    0,
+                    strategy,
+                    phase2,
+                    &pool,
+                    &ws,
+                    Some(Precision::Bf16),
+                );
+                assert!(
+                    tol_ok(&full.data, &half.data, 0.015_625),
+                    "bf16 out of tolerance: {d:?} {strategy:?} {phase2:?}"
+                );
+                assert_ne!(
+                    full.data, half.data,
+                    "bf16 did not engage: {d:?} {strategy:?} {phase2:?}"
+                );
+                // An explicit F32 equals the default (None) bits.
+                let default = fused_scan_dir_forced_ws(
+                    &x, &taps, &lam, d, 0, strategy, phase2, &pool, &ws, None,
+                );
+                assert_eq!(full.data, default.data, "{d:?} {strategy:?} {phase2:?}");
+            }
+        }
+        // The merged epilogue (softmax merge + modulation) on top of
+        // bf16-staged scans, across the fan and chained engines.
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.3f32, -0.7, 0.2, 1.0];
+        for (strategy, phase2) in [
+            (ScanStrategy::DirFan, Phase2::WaveDir),
+            (ScanStrategy::Segmented { s: 2 }, Phase2::Barrier),
+            (ScanStrategy::Chained { s: 2 }, Phase2::Barrier),
+        ] {
+            let full = fused_merged_4dir_forced_ws(
+                &x,
+                mtaps,
+                &lam,
+                &logits,
+                0,
+                strategy,
+                phase2,
+                &pool,
+                &ws,
+                Some(Precision::F32),
+            );
+            let half = fused_merged_4dir_forced_ws(
+                &x,
+                mtaps,
+                &lam,
+                &logits,
+                0,
+                strategy,
+                phase2,
+                &pool,
+                &ws,
+                Some(Precision::Bf16),
+            );
+            assert!(
+                tol_ok(&full.data, &half.data, 0.031_25),
+                "merged bf16 out of tolerance: {strategy:?} {phase2:?}"
+            );
+            assert_ne!(full.data, half.data, "merged bf16 did not engage: {strategy:?}");
+        }
         assert_eq!(ws.stats().bytes_leased, 0);
     }
 }

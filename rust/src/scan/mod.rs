@@ -45,6 +45,36 @@
 //! inside the scatter drain, so each panel is read once and never
 //! re-written.
 //!
+//! # SIMD dispatch & precision
+//!
+//! The three inner loops of the fused engine — the `scan_col`
+//! recurrence, the `correct_col` look-back/correction fold, and the
+//! scatter epilogue's merge/modulate — live in [`simd`] as explicit
+//! lane kernels: runtime-dispatched AVX2 (x86_64, 8 lanes) and NEON
+//! (aarch64, 4 lanes) beside a scalar reference the vector kernels are
+//! pinned **bit-identical** to (same association, no FMA — every lane
+//! computes the exact scalar expression). The lane axis is the row
+//! index within a canonical column: the previous column is read at
+//! r-1/r/r+1, so there is no loop-carried dependency across rows, while
+//! the column-to-column carry stays sequential in f32 exactly as the
+//! recurrence demands. The kernel is detected once per process and can
+//! be forced with `scan.simd = auto|scalar|avx2|neon` (env
+//! `GSPN2_SCAN_SIMD`), mirroring the `scan.plan` override, so every
+//! exact-pinned suite runs under any kernel.
+//!
+//! Orthogonally, `scan.precision = f32|bf16` (env
+//! `GSPN2_SCAN_PRECISION`, default `f32`) stores the *staged tap
+//! panels* and the chained engine's *job-local panels* as bf16 words
+//! packed two per f32 pool slot — halving the staged working set and
+//! the corresponding [`plan::workspace_footprint`] classes. Only
+//! storage narrows: the scan recurrence, the carry columns, the
+//! publication board, and every accumulation stay f32 (taps decode in
+//! the lanes; panel stores round to nearest even). `f32` remains the
+//! bit-exact default; `bf16` is fenced behind tolerance-pinned tests
+//! (`|bf16 − f32| ≤ (|f32| + 1)·2⁻⁶` elementwise, documented in
+//! [`simd`]) and is safe to enable when outputs feed activations or
+//! attention maps rather than bit-compared artifacts.
+//!
 //! Scratch memory: every execution strategy leases its per-call
 //! buffers (pack slabs, retained panels, staging columns, correction
 //! buffers) from a [`crate::util::BufferPool`] workspace instead of
@@ -70,6 +100,7 @@ pub mod direction;
 pub mod fused;
 pub mod gmatrix;
 pub mod plan;
+pub mod simd;
 pub mod split;
 pub mod taps;
 
@@ -95,7 +126,11 @@ pub use fused::{
 pub use gmatrix::{attention_map, expand_g};
 pub use plan::{
     auto_segments, eager_release_min, eager_release_min_mem, eager_release_min_slo, plan_scan,
-    workspace_footprint, PlanOverride, ScanGeometry, ScanPlan, ScanStrategy,
+    workspace_footprint, workspace_footprint_prec, PlanOverride, ScanGeometry, ScanPlan,
+    ScanStrategy,
+};
+pub use simd::{
+    bf16_narrow, bf16_widen, set_precision_override, set_simd_override, Precision, SimdKernel,
 };
 pub use split::{scan_l2r_split, scan_l2r_split_pool, segment_transfer, Banded};
 pub use taps::Taps;

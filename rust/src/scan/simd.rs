@@ -1,0 +1,1184 @@
+//! Runtime-dispatched SIMD lane kernels for the fused scan engine, plus
+//! the opt-in reduced-precision (bf16) tap/panel storage they decode.
+//!
+//! # Lane layout
+//!
+//! The engine's inner loops all run over one *canonical column* of `hc`
+//! contiguous f32s (staged column-major by `fused::StagedTaps` /
+//! `pack_slab`). Along the propagation direction the recurrence is
+//! sequential — column `i` needs column `i-1` — but *within* a column the
+//! three-tap stencil reads the previous column at rows `r-1`, `r`, `r+1`
+//! only: there is no loop-carried dependency over `r`. So the lanes run
+//! along the row axis of a column (unit stride in every operand), the
+//! boundary rows `r = 0` and `r = h-1` stay scalar with their literal
+//! `0.0` terms, and the column-to-column carry stays a sequential hot
+//! column exactly as in the scalar engine. This is the CPU analog of the
+//! paper's "one warp per channel slice with the previous column staged in
+//! shared memory": the warp is the vector register, the shared-memory
+//! column is the L1-resident carry.
+//!
+//! # Bit-exactness
+//!
+//! Every vector kernel evaluates the *same association* as the pinned
+//! scalar expression — `((tu*pm + tc*pc) + td*pp) + b`, element-wise IEEE
+//! mul/add, **no FMA contraction** — so each lane computes bit-identically
+//! to the scalar loop and the suite-wide `==` pins hold under any kernel.
+//! The active kernel is chosen once per process from CPU detection and
+//! can be forced via `scan.simd = auto|scalar|avx2|neon` or the
+//! `GSPN2_SCAN_SIMD` env hook (mirroring `GSPN2_SCAN_PLAN`), so CI re-runs
+//! the exact-pinned suites under every kernel the host supports.
+//!
+//! # Reduced precision (`scan.precision = bf16`)
+//!
+//! bf16 is f32 with the low 16 mantissa bits dropped: widening is an
+//! exact bit shift, narrowing rounds to nearest-even. The opt-in mode
+//! stores *read-mostly* operands — staged tap panels and the chained
+//! scan's thread-local panels — as bf16 words packed two-per-f32-slot in
+//! ordinary [`crate::util::workspace::BufferPool`] leases, halving the
+//! staged working set. All arithmetic still happens in f32: taps widen in
+//! the lanes, the recurrence carry and every accumulation stay f32, and
+//! only storage narrows. The mode is NOT bit-exact and is fenced behind
+//! tolerance-pinned tests; `f32` stays the default.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+// ---------------------------------------------------------------------
+// Kernel selection: detection, override plumbing
+// ---------------------------------------------------------------------
+
+/// An inner-kernel implementation the dispatcher can select. All three
+/// are pinned bit-identical; they differ only in lane width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdKernel {
+    /// Pinned scalar loops — the portable reference every vector kernel
+    /// must match bit-for-bit.
+    Scalar = 0,
+    /// 8 x f32 AVX2 lanes (x86_64, runtime-detected).
+    Avx2 = 1,
+    /// 4 x f32 NEON lanes (aarch64).
+    Neon = 2,
+}
+
+impl SimdKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdKernel::Scalar => "scalar",
+            SimdKernel::Avx2 => "avx2",
+            SimdKernel::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector op (1 for scalar). Feeds the planner's
+    /// effective-lanes cost discount and the bench host header.
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdKernel::Scalar => 1,
+            SimdKernel::Avx2 => 8,
+            SimdKernel::Neon => 4,
+        }
+    }
+
+    /// Whether this host can run the kernel. Forcing an unsupported
+    /// kernel is rejected at set time (config) or panics (env hook).
+    pub fn supported(self) -> bool {
+        match self {
+            SimdKernel::Scalar => true,
+            SimdKernel::Avx2 => avx2_supported(),
+            SimdKernel::Neon => neon_supported(),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_supported() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_supported() -> bool {
+    false
+}
+
+/// The widest kernel this host supports.
+fn detect() -> SimdKernel {
+    if SimdKernel::Avx2.supported() {
+        SimdKernel::Avx2
+    } else if SimdKernel::Neon.supported() {
+        SimdKernel::Neon
+    } else {
+        SimdKernel::Scalar
+    }
+}
+
+const OV_UNSET: u8 = u8::MAX;
+static SIMD_OVERRIDE: AtomicU8 = AtomicU8::new(OV_UNSET);
+
+fn parse_kernel(name: &str) -> Option<SimdKernel> {
+    match name {
+        "scalar" => Some(SimdKernel::Scalar),
+        "avx2" => Some(SimdKernel::Avx2),
+        "neon" => Some(SimdKernel::Neon),
+        _ => None,
+    }
+}
+
+/// Set the process-wide kernel override (the `scan.simd` config knob).
+/// Accepts `auto | scalar | avx2 | neon`; `auto` clears the override so
+/// the `GSPN2_SCAN_SIMD` env hook (then CPU detection) applies again.
+/// Forcing a kernel this host cannot run is an error — a forced kernel
+/// that silently fell back would turn the CI kernel-matrix legs into
+/// no-ops.
+pub fn set_simd_override(name: &str) -> Result<(), String> {
+    if name == "auto" {
+        SIMD_OVERRIDE.store(OV_UNSET, Ordering::Relaxed);
+        return Ok(());
+    }
+    let k = parse_kernel(name)
+        .ok_or_else(|| format!("unknown scan.simd {name:?} (want auto|scalar|avx2|neon)"))?;
+    if !k.supported() {
+        return Err(format!(
+            "scan.simd = {name:?} is not supported on this host (detected: {})",
+            detect().name()
+        ));
+    }
+    SIMD_OVERRIDE.store(k as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The active kernel: the config knob if set, else `GSPN2_SCAN_SIMD`
+/// (read once), else CPU detection. As with `GSPN2_SCAN_PLAN`, an
+/// *invalid* env value panics rather than silently dispatching the
+/// default — the hook exists so CI re-runs the suite under forced
+/// kernels, and a typo that quietly tested auto-detection instead would
+/// be a green lie. An env value naming an unsupported kernel also
+/// panics, for the same reason.
+pub fn kernel() -> SimdKernel {
+    let v = SIMD_OVERRIDE.load(Ordering::Relaxed);
+    if v != OV_UNSET {
+        return kernel_from_u8(v);
+    }
+    let k = match std::env::var("GSPN2_SCAN_SIMD") {
+        Ok(s) if s == "auto" => detect(),
+        Ok(s) => {
+            let k = parse_kernel(&s).unwrap_or_else(|| {
+                panic!("GSPN2_SCAN_SIMD={s:?} is not one of auto|scalar|avx2|neon")
+            });
+            if !k.supported() {
+                panic!(
+                    "GSPN2_SCAN_SIMD={s:?} is not supported on this host (detected: {})",
+                    detect().name()
+                );
+            }
+            k
+        }
+        Err(_) => detect(),
+    };
+    SIMD_OVERRIDE.store(k as u8, Ordering::Relaxed);
+    k
+}
+
+fn kernel_from_u8(v: u8) -> SimdKernel {
+    match v {
+        1 => SimdKernel::Avx2,
+        2 => SimdKernel::Neon,
+        _ => SimdKernel::Scalar,
+    }
+}
+
+/// f32 lanes of the active kernel — the planner's cost-model input.
+pub fn lanes() -> usize {
+    kernel().lanes()
+}
+
+/// Comma-joined list of the vector features this host reports, for the
+/// bench JSON host header (`BENCH_scan` / `BENCH_serve`), so crossover
+/// retuning can read lane context straight from CI artifacts.
+pub fn detected_features() -> String {
+    let mut fs: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, have) in [
+            ("sse2", std::arch::is_x86_feature_detected!("sse2")),
+            ("avx", std::arch::is_x86_feature_detected!("avx")),
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+        ] {
+            if have {
+                fs.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            fs.push("neon");
+        }
+    }
+    if fs.is_empty() {
+        fs.push("none");
+    }
+    fs.join(",")
+}
+
+// ---------------------------------------------------------------------
+// Precision selection
+// ---------------------------------------------------------------------
+
+/// Storage precision for staged tap panels and chained thread-local
+/// panels. Arithmetic is always f32; this only narrows what is *stored*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full-width storage — bit-exact, the default.
+    F32 = 0,
+    /// bf16 storage, f32 accumulation — halves staged bytes, tolerance-
+    /// pinned (see the module docs) rather than `==`.
+    Bf16 = 1,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+}
+
+static PREC_OVERRIDE: AtomicU8 = AtomicU8::new(OV_UNSET);
+
+fn parse_precision(name: &str) -> Option<Precision> {
+    match name {
+        "f32" => Some(Precision::F32),
+        "bf16" => Some(Precision::Bf16),
+        _ => None,
+    }
+}
+
+/// Set the process-wide storage precision (the `scan.precision` config
+/// knob). Accepts `f32 | bf16`. NOTE: flipping this changes result bits
+/// process-wide; unlike the kernel override it must never be toggled
+/// around individual exact-pinned tests (the engine's bf16 tests thread
+/// an explicit precision instead).
+pub fn set_precision_override(name: &str) -> Result<(), String> {
+    let p = parse_precision(name)
+        .ok_or_else(|| format!("unknown scan.precision {name:?} (want f32|bf16)"))?;
+    PREC_OVERRIDE.store(p as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The active storage precision: config knob, else `GSPN2_SCAN_PRECISION`
+/// (read once; invalid values panic like the other scan env hooks), else
+/// the bit-exact `f32` default.
+pub fn precision() -> Precision {
+    let v = PREC_OVERRIDE.load(Ordering::Relaxed);
+    if v != OV_UNSET {
+        return if v == Precision::Bf16 as u8 { Precision::Bf16 } else { Precision::F32 };
+    }
+    let p = match std::env::var("GSPN2_SCAN_PRECISION") {
+        Ok(s) => parse_precision(&s)
+            .unwrap_or_else(|| panic!("GSPN2_SCAN_PRECISION={s:?} is not one of f32|bf16")),
+        Err(_) => Precision::F32,
+    };
+    PREC_OVERRIDE.store(p as u8, Ordering::Relaxed);
+    p
+}
+
+// ---------------------------------------------------------------------
+// bf16 scalar conversions
+// ---------------------------------------------------------------------
+
+/// f32 elements needed to store `n` bf16 words in a pooled f32 lease
+/// (two words per slot; see `Lease::as_u16`).
+pub(crate) fn bf16_len(n: usize) -> usize {
+    n.div_ceil(2)
+}
+
+/// Narrow an f32 to bf16 with round-to-nearest-even; NaN keeps its sign
+/// and top mantissa bits with the quiet bit forced so it cannot round to
+/// infinity.
+#[inline]
+pub fn bf16_narrow(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 1;
+    }
+    // Cannot overflow: the largest non-NaN payload is 0xff80_0000 (-inf).
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// Widen a bf16 word to f32 — exact (a pure bit shift).
+#[inline]
+pub fn bf16_widen(hbits: u16) -> f32 {
+    f32::from_bits((hbits as u32) << 16)
+}
+
+// ---------------------------------------------------------------------
+// Tap views: one type the kernels accept at either storage precision
+// ---------------------------------------------------------------------
+
+/// Borrowed staged tap panels (up, center, down) at the active storage
+/// precision. Panels are column-major; [`TapPanels::col`] slices out one
+/// canonical column for the kernels.
+#[derive(Clone, Copy)]
+pub(crate) enum TapPanels<'a> {
+    F32 { tu: &'a [f32], tc: &'a [f32], td: &'a [f32] },
+    Bf16 { tu: &'a [u16], tc: &'a [u16], td: &'a [u16] },
+}
+
+impl<'a> TapPanels<'a> {
+    /// Column `j` of each tap panel (`hc` rows per column).
+    #[inline]
+    pub(crate) fn col(self, j: usize, hc: usize) -> TapCols<'a> {
+        let (a, b) = (j * hc, (j + 1) * hc);
+        match self {
+            TapPanels::F32 { tu, tc, td } => {
+                TapCols::F32 { tu: &tu[a..b], tc: &tc[a..b], td: &td[a..b] }
+            }
+            TapPanels::Bf16 { tu, tc, td } => {
+                TapCols::Bf16 { tu: &tu[a..b], tc: &tc[a..b], td: &td[a..b] }
+            }
+        }
+    }
+}
+
+/// One canonical column of taps, ready for a kernel call.
+#[derive(Clone, Copy)]
+pub(crate) enum TapCols<'a> {
+    F32 { tu: &'a [f32], tc: &'a [f32], td: &'a [f32] },
+    Bf16 { tu: &'a [u16], tc: &'a [u16], td: &'a [u16] },
+}
+
+// ---------------------------------------------------------------------
+// Epilogue ops
+// ---------------------------------------------------------------------
+
+/// The fused scatter epilogue's per-element operation: first-direction
+/// assign, softmax-weighted merge, or last-direction merge + u⊙h
+/// modulation. An enum (not a closure) so contiguous drain runs can
+/// dispatch to batch lane kernels while strided runs apply it per
+/// element with the same arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum EpOp {
+    Assign,
+    Merge(f32),
+    MergeGain(f32, f32),
+}
+
+impl EpOp {
+    /// The pinned per-element expression; every batch kernel must match
+    /// it bit-for-bit.
+    #[inline]
+    pub(crate) fn apply(self, o: f32, v: f32) -> f32 {
+        match self {
+            EpOp::Assign => v,
+            EpOp::Merge(wt) => o + wt * v,
+            EpOp::MergeGain(wt, g) => (o + wt * v) * g,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------
+
+/// One column of the scan recurrence (`up + ct + dn + b` with literal
+/// `0.0` boundary terms), dispatched to the active kernel. Bit-identical
+/// across kernels by construction.
+#[inline]
+pub(crate) fn scan_col(prev: &[f32], b: &[f32], taps: TapCols, out: &mut [f32]) {
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selectable on hosts that report AVX2.
+        SimdKernel::Avx2 => unsafe { avx2::scan_col(prev, b, taps, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only selectable on hosts that report NEON.
+        SimdKernel::Neon => unsafe { neon::scan_col(prev, b, taps, out) },
+        _ => scalar::scan_col(prev, b, taps, out),
+    }
+}
+
+/// One column of the carry-correction recurrence ([`scan_col`] without
+/// the `b` term), dispatched to the active kernel.
+#[inline]
+pub(crate) fn correct_col(prev: &[f32], taps: TapCols, out: &mut [f32]) {
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `scan_col`.
+        SimdKernel::Avx2 => unsafe { avx2::correct_col(prev, taps, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as in `scan_col`.
+        SimdKernel::Neon => unsafe { neon::correct_col(prev, taps, out) },
+        _ => scalar::correct_col(prev, taps, out),
+    }
+}
+
+/// Apply an epilogue op over one contiguous run (`out[i] = op(out[i],
+/// src[i])`), dispatched to the active kernel.
+#[inline]
+pub(crate) fn ep_apply(op: EpOp, out: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(out.len(), src.len());
+    if let EpOp::Assign = op {
+        // Bitwise copy regardless of kernel.
+        out.copy_from_slice(src);
+        return;
+    }
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `scan_col`.
+        SimdKernel::Avx2 => unsafe { avx2::ep_apply(op, out, src) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as in `scan_col`.
+        SimdKernel::Neon => unsafe { neon::ep_apply(op, out, src) },
+        _ => scalar::ep_apply(op, out, src),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar kernels: the pinned reference every vector kernel must match
+// ---------------------------------------------------------------------
+
+pub(crate) mod scalar {
+    use super::{bf16_widen, EpOp, TapCols};
+
+    /// The reference association, generic over tap storage (`wf` widens a
+    /// stored tap to f32; for f32 taps it is the identity, which keeps the
+    /// expression literally the pre-SIMD engine's).
+    #[inline]
+    fn scan_col_t<T: Copy>(
+        prev: &[f32],
+        b: &[f32],
+        tu: &[T],
+        tc: &[T],
+        td: &[T],
+        out: &mut [f32],
+        wf: impl Fn(T) -> f32,
+    ) {
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + wf(tc[0]) * prev[0] + 0.0 + b[0];
+            return;
+        }
+        out[0] = 0.0 + wf(tc[0]) * prev[0] + wf(td[0]) * prev[1] + b[0];
+        for r in 1..h - 1 {
+            out[r] =
+                wf(tu[r]) * prev[r - 1] + wf(tc[r]) * prev[r] + wf(td[r]) * prev[r + 1] + b[r];
+        }
+        let r = h - 1;
+        out[r] = wf(tu[r]) * prev[r - 1] + wf(tc[r]) * prev[r] + 0.0 + b[r];
+    }
+
+    #[inline]
+    fn correct_col_t<T: Copy>(
+        prev: &[f32],
+        tu: &[T],
+        tc: &[T],
+        td: &[T],
+        out: &mut [f32],
+        wf: impl Fn(T) -> f32,
+    ) {
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + wf(tc[0]) * prev[0] + 0.0;
+            return;
+        }
+        out[0] = 0.0 + wf(tc[0]) * prev[0] + wf(td[0]) * prev[1];
+        for r in 1..h - 1 {
+            out[r] = wf(tu[r]) * prev[r - 1] + wf(tc[r]) * prev[r] + wf(td[r]) * prev[r + 1];
+        }
+        let r = h - 1;
+        out[r] = wf(tu[r]) * prev[r - 1] + wf(tc[r]) * prev[r] + 0.0;
+    }
+
+    pub(crate) fn scan_col(prev: &[f32], b: &[f32], taps: TapCols, out: &mut [f32]) {
+        match taps {
+            TapCols::F32 { tu, tc, td } => scan_col_t(prev, b, tu, tc, td, out, |v| v),
+            TapCols::Bf16 { tu, tc, td } => scan_col_t(prev, b, tu, tc, td, out, bf16_widen),
+        }
+    }
+
+    pub(crate) fn correct_col(prev: &[f32], taps: TapCols, out: &mut [f32]) {
+        match taps {
+            TapCols::F32 { tu, tc, td } => correct_col_t(prev, tu, tc, td, out, |v| v),
+            TapCols::Bf16 { tu, tc, td } => correct_col_t(prev, tu, tc, td, out, bf16_widen),
+        }
+    }
+
+    pub(crate) fn ep_apply(op: EpOp, out: &mut [f32], src: &[f32]) {
+        match op {
+            EpOp::Assign => out.copy_from_slice(src),
+            _ => {
+                for (o, &v) in out.iter_mut().zip(src.iter()) {
+                    *o = op.apply(*o, v);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 kernels (x86_64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::{EpOp, TapCols};
+    use core::arch::x86_64::*;
+
+    /// Widen 8 bf16 words starting at `p` to f32 lanes: zero-extend each
+    /// u16 to u32, shift into the high half — exactly `bf16_widen` per
+    /// lane.
+    ///
+    /// # Safety
+    /// AVX2 must be available and `p..p+8` readable.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen8(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+    }
+
+    /// # Safety
+    /// AVX2 must be available; slice lengths as in the scalar kernel
+    /// (`prev.len() == out.len()`, taps/b at least `out.len()`).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn scan_col(prev: &[f32], b: &[f32], taps: TapCols, out: &mut [f32]) {
+        match taps {
+            TapCols::F32 { tu, tc, td } => scan_col_f32(prev, b, tu, tc, td, out),
+            TapCols::Bf16 { tu, tc, td } => scan_col_bf16(prev, b, tu, tc, td, out),
+        }
+    }
+
+    /// # Safety
+    /// As in [`scan_col`].
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn correct_col(prev: &[f32], taps: TapCols, out: &mut [f32]) {
+        match taps {
+            TapCols::F32 { tu, tc, td } => correct_col_f32(prev, tu, tc, td, out),
+            TapCols::Bf16 { tu, tc, td } => correct_col_bf16(prev, tu, tc, td, out),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scan_col_f32(
+        prev: &[f32],
+        b: &[f32],
+        tu: &[f32],
+        tc: &[f32],
+        td: &[f32],
+        out: &mut [f32],
+    ) {
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + tc[0] * prev[0] + 0.0 + b[0];
+            return;
+        }
+        out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1] + b[0];
+        let mut r = 1;
+        // In-bounds: r+8 <= h-1 keeps the furthest load (prev[r+1..r+9])
+        // inside prev[..h] and the store inside out[1..h-1].
+        while r + 8 <= h - 1 {
+            let pm = _mm256_loadu_ps(prev.as_ptr().add(r - 1));
+            let pc = _mm256_loadu_ps(prev.as_ptr().add(r));
+            let pp = _mm256_loadu_ps(prev.as_ptr().add(r + 1));
+            // Same association as the scalar loop; separate mul/add ops,
+            // never FMA, so every lane is bit-identical.
+            let mut acc = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(tu.as_ptr().add(r)), pm),
+                _mm256_mul_ps(_mm256_loadu_ps(tc.as_ptr().add(r)), pc),
+            );
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(td.as_ptr().add(r)), pp));
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(b.as_ptr().add(r)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(r), acc);
+            r += 8;
+        }
+        while r < h - 1 {
+            out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1] + b[r];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0 + b[r];
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scan_col_bf16(
+        prev: &[f32],
+        b: &[f32],
+        tu: &[u16],
+        tc: &[u16],
+        td: &[u16],
+        out: &mut [f32],
+    ) {
+        let w = super::bf16_widen;
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + w(tc[0]) * prev[0] + 0.0 + b[0];
+            return;
+        }
+        out[0] = 0.0 + w(tc[0]) * prev[0] + w(td[0]) * prev[1] + b[0];
+        let mut r = 1;
+        while r + 8 <= h - 1 {
+            let pm = _mm256_loadu_ps(prev.as_ptr().add(r - 1));
+            let pc = _mm256_loadu_ps(prev.as_ptr().add(r));
+            let pp = _mm256_loadu_ps(prev.as_ptr().add(r + 1));
+            let mut acc = _mm256_add_ps(
+                _mm256_mul_ps(widen8(tu.as_ptr().add(r)), pm),
+                _mm256_mul_ps(widen8(tc.as_ptr().add(r)), pc),
+            );
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(widen8(td.as_ptr().add(r)), pp));
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(b.as_ptr().add(r)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(r), acc);
+            r += 8;
+        }
+        while r < h - 1 {
+            out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + w(td[r]) * prev[r + 1] + b[r];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + 0.0 + b[r];
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn correct_col_f32(prev: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]) {
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + tc[0] * prev[0] + 0.0;
+            return;
+        }
+        out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1];
+        let mut r = 1;
+        while r + 8 <= h - 1 {
+            let pm = _mm256_loadu_ps(prev.as_ptr().add(r - 1));
+            let pc = _mm256_loadu_ps(prev.as_ptr().add(r));
+            let pp = _mm256_loadu_ps(prev.as_ptr().add(r + 1));
+            let mut acc = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(tu.as_ptr().add(r)), pm),
+                _mm256_mul_ps(_mm256_loadu_ps(tc.as_ptr().add(r)), pc),
+            );
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(td.as_ptr().add(r)), pp));
+            _mm256_storeu_ps(out.as_mut_ptr().add(r), acc);
+            r += 8;
+        }
+        while r < h - 1 {
+            out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0;
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn correct_col_bf16(prev: &[f32], tu: &[u16], tc: &[u16], td: &[u16], out: &mut [f32]) {
+        let w = super::bf16_widen;
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + w(tc[0]) * prev[0] + 0.0;
+            return;
+        }
+        out[0] = 0.0 + w(tc[0]) * prev[0] + w(td[0]) * prev[1];
+        let mut r = 1;
+        while r + 8 <= h - 1 {
+            let pm = _mm256_loadu_ps(prev.as_ptr().add(r - 1));
+            let pc = _mm256_loadu_ps(prev.as_ptr().add(r));
+            let pp = _mm256_loadu_ps(prev.as_ptr().add(r + 1));
+            let mut acc = _mm256_add_ps(
+                _mm256_mul_ps(widen8(tu.as_ptr().add(r)), pm),
+                _mm256_mul_ps(widen8(tc.as_ptr().add(r)), pc),
+            );
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(widen8(td.as_ptr().add(r)), pp));
+            _mm256_storeu_ps(out.as_mut_ptr().add(r), acc);
+            r += 8;
+        }
+        while r < h - 1 {
+            out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + w(td[r]) * prev[r + 1];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + 0.0;
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `out.len() == src.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn ep_apply(op: EpOp, out: &mut [f32], src: &[f32]) {
+        let n = out.len();
+        match op {
+            EpOp::Assign => out.copy_from_slice(src),
+            EpOp::Merge(wt) => {
+                let vw = _mm256_set1_ps(wt);
+                let mut i = 0;
+                while i + 8 <= n {
+                    let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                    let vs = _mm256_loadu_ps(src.as_ptr().add(i));
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm256_add_ps(vo, _mm256_mul_ps(vw, vs)),
+                    );
+                    i += 8;
+                }
+                while i < n {
+                    out[i] += wt * src[i];
+                    i += 1;
+                }
+            }
+            EpOp::MergeGain(wt, g) => {
+                let vw = _mm256_set1_ps(wt);
+                let vg = _mm256_set1_ps(g);
+                let mut i = 0;
+                while i + 8 <= n {
+                    let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                    let vs = _mm256_loadu_ps(src.as_ptr().add(i));
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm256_mul_ps(_mm256_add_ps(vo, _mm256_mul_ps(vw, vs)), vg),
+                    );
+                    i += 8;
+                }
+                while i < n {
+                    out[i] = (out[i] + wt * src[i]) * g;
+                    i += 1;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON kernels (aarch64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::{EpOp, TapCols};
+    use core::arch::aarch64::*;
+
+    /// Widen 4 bf16 words starting at `p` to f32 lanes — exactly
+    /// `bf16_widen` per lane.
+    ///
+    /// # Safety
+    /// NEON must be available and `p..p+4` readable.
+    #[target_feature(enable = "neon")]
+    unsafe fn widen4(p: *const u16) -> float32x4_t {
+        vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vld1_u16(p))))
+    }
+
+    /// # Safety
+    /// NEON must be available; slice lengths as in the scalar kernel.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn scan_col(prev: &[f32], b: &[f32], taps: TapCols, out: &mut [f32]) {
+        match taps {
+            TapCols::F32 { tu, tc, td } => scan_col_f32(prev, b, tu, tc, td, out),
+            TapCols::Bf16 { tu, tc, td } => scan_col_bf16(prev, b, tu, tc, td, out),
+        }
+    }
+
+    /// # Safety
+    /// As in [`scan_col`].
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn correct_col(prev: &[f32], taps: TapCols, out: &mut [f32]) {
+        match taps {
+            TapCols::F32 { tu, tc, td } => correct_col_f32(prev, tu, tc, td, out),
+            TapCols::Bf16 { tu, tc, td } => correct_col_bf16(prev, tu, tc, td, out),
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scan_col_f32(
+        prev: &[f32],
+        b: &[f32],
+        tu: &[f32],
+        tc: &[f32],
+        td: &[f32],
+        out: &mut [f32],
+    ) {
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + tc[0] * prev[0] + 0.0 + b[0];
+            return;
+        }
+        out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1] + b[0];
+        let mut r = 1;
+        while r + 4 <= h - 1 {
+            let pm = vld1q_f32(prev.as_ptr().add(r - 1));
+            let pc = vld1q_f32(prev.as_ptr().add(r));
+            let pp = vld1q_f32(prev.as_ptr().add(r + 1));
+            // Separate mul/add (no fused vmla), same association as scalar.
+            let mut acc = vaddq_f32(
+                vmulq_f32(vld1q_f32(tu.as_ptr().add(r)), pm),
+                vmulq_f32(vld1q_f32(tc.as_ptr().add(r)), pc),
+            );
+            acc = vaddq_f32(acc, vmulq_f32(vld1q_f32(td.as_ptr().add(r)), pp));
+            acc = vaddq_f32(acc, vld1q_f32(b.as_ptr().add(r)));
+            vst1q_f32(out.as_mut_ptr().add(r), acc);
+            r += 4;
+        }
+        while r < h - 1 {
+            out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1] + b[r];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0 + b[r];
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scan_col_bf16(
+        prev: &[f32],
+        b: &[f32],
+        tu: &[u16],
+        tc: &[u16],
+        td: &[u16],
+        out: &mut [f32],
+    ) {
+        let w = super::bf16_widen;
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + w(tc[0]) * prev[0] + 0.0 + b[0];
+            return;
+        }
+        out[0] = 0.0 + w(tc[0]) * prev[0] + w(td[0]) * prev[1] + b[0];
+        let mut r = 1;
+        while r + 4 <= h - 1 {
+            let pm = vld1q_f32(prev.as_ptr().add(r - 1));
+            let pc = vld1q_f32(prev.as_ptr().add(r));
+            let pp = vld1q_f32(prev.as_ptr().add(r + 1));
+            let mut acc = vaddq_f32(
+                vmulq_f32(widen4(tu.as_ptr().add(r)), pm),
+                vmulq_f32(widen4(tc.as_ptr().add(r)), pc),
+            );
+            acc = vaddq_f32(acc, vmulq_f32(widen4(td.as_ptr().add(r)), pp));
+            acc = vaddq_f32(acc, vld1q_f32(b.as_ptr().add(r)));
+            vst1q_f32(out.as_mut_ptr().add(r), acc);
+            r += 4;
+        }
+        while r < h - 1 {
+            out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + w(td[r]) * prev[r + 1] + b[r];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + 0.0 + b[r];
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn correct_col_f32(prev: &[f32], tu: &[f32], tc: &[f32], td: &[f32], out: &mut [f32]) {
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + tc[0] * prev[0] + 0.0;
+            return;
+        }
+        out[0] = 0.0 + tc[0] * prev[0] + td[0] * prev[1];
+        let mut r = 1;
+        while r + 4 <= h - 1 {
+            let pm = vld1q_f32(prev.as_ptr().add(r - 1));
+            let pc = vld1q_f32(prev.as_ptr().add(r));
+            let pp = vld1q_f32(prev.as_ptr().add(r + 1));
+            let mut acc = vaddq_f32(
+                vmulq_f32(vld1q_f32(tu.as_ptr().add(r)), pm),
+                vmulq_f32(vld1q_f32(tc.as_ptr().add(r)), pc),
+            );
+            acc = vaddq_f32(acc, vmulq_f32(vld1q_f32(td.as_ptr().add(r)), pp));
+            vst1q_f32(out.as_mut_ptr().add(r), acc);
+            r += 4;
+        }
+        while r < h - 1 {
+            out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + td[r] * prev[r + 1];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = tu[r] * prev[r - 1] + tc[r] * prev[r] + 0.0;
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn correct_col_bf16(prev: &[f32], tu: &[u16], tc: &[u16], td: &[u16], out: &mut [f32]) {
+        let w = super::bf16_widen;
+        let h = out.len();
+        if h == 1 {
+            out[0] = 0.0 + w(tc[0]) * prev[0] + 0.0;
+            return;
+        }
+        out[0] = 0.0 + w(tc[0]) * prev[0] + w(td[0]) * prev[1];
+        let mut r = 1;
+        while r + 4 <= h - 1 {
+            let pm = vld1q_f32(prev.as_ptr().add(r - 1));
+            let pc = vld1q_f32(prev.as_ptr().add(r));
+            let pp = vld1q_f32(prev.as_ptr().add(r + 1));
+            let mut acc = vaddq_f32(
+                vmulq_f32(widen4(tu.as_ptr().add(r)), pm),
+                vmulq_f32(widen4(tc.as_ptr().add(r)), pc),
+            );
+            acc = vaddq_f32(acc, vmulq_f32(widen4(td.as_ptr().add(r)), pp));
+            vst1q_f32(out.as_mut_ptr().add(r), acc);
+            r += 4;
+        }
+        while r < h - 1 {
+            out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + w(td[r]) * prev[r + 1];
+            r += 1;
+        }
+        let r = h - 1;
+        out[r] = w(tu[r]) * prev[r - 1] + w(tc[r]) * prev[r] + 0.0;
+    }
+
+    /// # Safety
+    /// NEON must be available; `out.len() == src.len()`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn ep_apply(op: EpOp, out: &mut [f32], src: &[f32]) {
+        let n = out.len();
+        match op {
+            EpOp::Assign => out.copy_from_slice(src),
+            EpOp::Merge(wt) => {
+                let vw = vdupq_n_f32(wt);
+                let mut i = 0;
+                while i + 4 <= n {
+                    let vo = vld1q_f32(out.as_ptr().add(i));
+                    let vs = vld1q_f32(src.as_ptr().add(i));
+                    vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(vw, vs)));
+                    i += 4;
+                }
+                while i < n {
+                    out[i] += wt * src[i];
+                    i += 1;
+                }
+            }
+            EpOp::MergeGain(wt, g) => {
+                let vw = vdupq_n_f32(wt);
+                let vg = vdupq_n_f32(g);
+                let mut i = 0;
+                while i + 4 <= n {
+                    let vo = vld1q_f32(out.as_ptr().add(i));
+                    let vs = vld1q_f32(src.as_ptr().add(i));
+                    vst1q_f32(
+                        out.as_mut_ptr().add(i),
+                        vmulq_f32(vaddq_f32(vo, vmulq_f32(vw, vs)), vg),
+                    );
+                    i += 4;
+                }
+                while i < n {
+                    out[i] = (out[i] + wt * src[i]) * g;
+                    i += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Values that stress rounding and special-case handling: signed
+    /// zeros, subnormals, huge/tiny magnitudes, ordinary mixed signs.
+    fn adversarial_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.next_u64() % 8 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 1.0e-39,
+                3 => -1.0e-39,
+                4 => 1.0e20,
+                5 => -1.0e20,
+                6 => 1.0e-20,
+                _ => rng.uniform_in(-2.0, 2.0),
+            })
+            .collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: lane {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn names_lanes_and_detection() {
+        assert_eq!(SimdKernel::Scalar.lanes(), 1);
+        assert_eq!(SimdKernel::Avx2.lanes(), 8);
+        assert_eq!(SimdKernel::Neon.lanes(), 4);
+        assert!(SimdKernel::Scalar.supported());
+        assert!(kernel().supported());
+        assert_eq!(lanes(), kernel().lanes());
+        assert!(!detected_features().is_empty());
+    }
+
+    #[test]
+    fn override_parse_and_validity() {
+        assert!(set_simd_override("bogus").is_err());
+        // Forcing each named kernel succeeds exactly when the host
+        // supports it. Flipping between bit-identical kernels is benign
+        // for concurrently-running tests by construction.
+        for k in [SimdKernel::Scalar, SimdKernel::Avx2, SimdKernel::Neon] {
+            assert_eq!(set_simd_override(k.name()).is_ok(), k.supported(), "{}", k.name());
+        }
+        set_simd_override("scalar").unwrap();
+        assert_eq!(kernel(), SimdKernel::Scalar);
+        set_simd_override("auto").unwrap();
+        assert!(kernel().supported());
+
+        // Precision: only parse-level checks here. Storing bf16 in the
+        // process-wide knob would corrupt concurrently-running `==`
+        // tests, so the engine's bf16 tests thread an explicit precision
+        // instead (see fused.rs) and benches own the global setter.
+        assert!(set_precision_override("f64").is_err());
+        assert_eq!(parse_precision("bf16"), Some(Precision::Bf16));
+        assert_eq!(parse_precision("f32"), Some(Precision::F32));
+        assert_eq!(Precision::Bf16.name(), "bf16");
+        set_precision_override("f32").unwrap();
+        assert_eq!(precision(), Precision::F32);
+    }
+
+    #[test]
+    fn bf16_narrow_rounds_to_nearest_even() {
+        assert_eq!(bf16_narrow(1.0), 0x3f80);
+        assert_eq!(bf16_narrow(f32::from_bits(0x3f80_7fff)), 0x3f80); // below half: down
+        assert_eq!(bf16_narrow(f32::from_bits(0x3f80_8001)), 0x3f81); // above half: up
+        assert_eq!(bf16_narrow(f32::from_bits(0x3f80_8000)), 0x3f80); // tie: keep even
+        assert_eq!(bf16_narrow(f32::from_bits(0x3f81_8000)), 0x3f82); // tie: round to even
+        assert_eq!(bf16_narrow(f32::INFINITY), 0x7f80);
+        assert_eq!(bf16_narrow(f32::NEG_INFINITY), 0xff80);
+        assert_eq!(bf16_narrow(-0.0), 0x8000);
+        assert_eq!(bf16_narrow(0.0), 0x0000);
+        // f32::MAX is nearer 2^128 than the largest bf16: rounds to inf.
+        assert_eq!(bf16_narrow(f32::MAX), 0x7f80);
+        assert!(bf16_widen(bf16_narrow(f32::NAN)).is_nan());
+        assert_eq!(bf16_len(0), 0);
+        assert_eq!(bf16_len(1), 1);
+        assert_eq!(bf16_len(7), 4);
+        assert_eq!(bf16_len(8), 4);
+    }
+
+    #[test]
+    fn bf16_widen_roundtrips_every_value() {
+        for hb in 0..=u16::MAX {
+            let f = bf16_widen(hb);
+            if f.is_nan() {
+                assert!(bf16_widen(bf16_narrow(f)).is_nan());
+            } else {
+                // Widening is exact, so narrowing must give back the word.
+                assert_eq!(bf16_narrow(f), hb, "bf16 word {hb:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_narrow_error_is_bounded() {
+        let mut rng = Rng::new(0xbf16);
+        for _ in 0..20_000 {
+            let v = rng.uniform_in(-100.0, 100.0);
+            let w = bf16_widen(bf16_narrow(v));
+            // Relative error of one bf16 rounding step is at most 2^-8.
+            assert!((w - v).abs() <= v.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE);
+        }
+    }
+
+    /// The vector kernels must match the scalar reference bit-for-bit at
+    /// every size (remainder handling) and under adversarial values, for
+    /// both tap storage precisions and all epilogue ops.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_bit_identical_to_scalar() {
+        if !SimdKernel::Avx2.supported() {
+            return;
+        }
+        let mut rng = Rng::new(0x51D1);
+        let sizes =
+            [1usize, 2, 3, 5, 8, 9, 10, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 129, 256, 511];
+        for &h in &sizes {
+            for _rep in 0..8 {
+                let prev = adversarial_vec(&mut rng, h);
+                let b = adversarial_vec(&mut rng, h);
+                let tu = adversarial_vec(&mut rng, h);
+                let tc = adversarial_vec(&mut rng, h);
+                let td = adversarial_vec(&mut rng, h);
+                let mut o1 = vec![0.0f32; h];
+                let mut o2 = vec![0.0f32; h];
+
+                let taps = TapCols::F32 { tu: &tu, tc: &tc, td: &td };
+                scalar::scan_col(&prev, &b, taps, &mut o1);
+                unsafe { avx2::scan_col(&prev, &b, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "scan_col f32");
+                scalar::correct_col(&prev, taps, &mut o1);
+                unsafe { avx2::correct_col(&prev, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "correct_col f32");
+
+                let hu: Vec<u16> = tu.iter().map(|&v| bf16_narrow(v)).collect();
+                let hc: Vec<u16> = tc.iter().map(|&v| bf16_narrow(v)).collect();
+                let hd: Vec<u16> = td.iter().map(|&v| bf16_narrow(v)).collect();
+                let taps = TapCols::Bf16 { tu: &hu, tc: &hc, td: &hd };
+                scalar::scan_col(&prev, &b, taps, &mut o1);
+                unsafe { avx2::scan_col(&prev, &b, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "scan_col bf16");
+                scalar::correct_col(&prev, taps, &mut o1);
+                unsafe { avx2::correct_col(&prev, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "correct_col bf16");
+
+                for op in [EpOp::Assign, EpOp::Merge(0.257), EpOp::MergeGain(0.257, 1.37)] {
+                    let base = adversarial_vec(&mut rng, h);
+                    let src = adversarial_vec(&mut rng, h);
+                    let mut a = base.clone();
+                    let mut c = base.clone();
+                    scalar::ep_apply(op, &mut a, &src);
+                    unsafe { avx2::ep_apply(op, &mut c, &src) };
+                    assert_bits_eq(&a, &c, "ep_apply");
+                }
+            }
+        }
+    }
+
+    /// NEON twin of the AVX2 pin, compiled and run only on aarch64.
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_kernels_bit_identical_to_scalar() {
+        if !SimdKernel::Neon.supported() {
+            return;
+        }
+        let mut rng = Rng::new(0x51D2);
+        let sizes = [1usize, 2, 3, 4, 5, 6, 9, 16, 17, 31, 32, 33, 64, 65, 100, 129, 256, 511];
+        for &h in &sizes {
+            for _rep in 0..8 {
+                let prev = adversarial_vec(&mut rng, h);
+                let b = adversarial_vec(&mut rng, h);
+                let tu = adversarial_vec(&mut rng, h);
+                let tc = adversarial_vec(&mut rng, h);
+                let td = adversarial_vec(&mut rng, h);
+                let mut o1 = vec![0.0f32; h];
+                let mut o2 = vec![0.0f32; h];
+
+                let taps = TapCols::F32 { tu: &tu, tc: &tc, td: &td };
+                scalar::scan_col(&prev, &b, taps, &mut o1);
+                unsafe { neon::scan_col(&prev, &b, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "scan_col f32");
+                scalar::correct_col(&prev, taps, &mut o1);
+                unsafe { neon::correct_col(&prev, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "correct_col f32");
+
+                let hu: Vec<u16> = tu.iter().map(|&v| bf16_narrow(v)).collect();
+                let hc: Vec<u16> = tc.iter().map(|&v| bf16_narrow(v)).collect();
+                let hd: Vec<u16> = td.iter().map(|&v| bf16_narrow(v)).collect();
+                let taps = TapCols::Bf16 { tu: &hu, tc: &hc, td: &hd };
+                scalar::scan_col(&prev, &b, taps, &mut o1);
+                unsafe { neon::scan_col(&prev, &b, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "scan_col bf16");
+                scalar::correct_col(&prev, taps, &mut o1);
+                unsafe { neon::correct_col(&prev, taps, &mut o2) };
+                assert_bits_eq(&o1, &o2, "correct_col bf16");
+
+                for op in [EpOp::Assign, EpOp::Merge(0.257), EpOp::MergeGain(0.257, 1.37)] {
+                    let base = adversarial_vec(&mut rng, h);
+                    let src = adversarial_vec(&mut rng, h);
+                    let mut a = base.clone();
+                    let mut c = base.clone();
+                    scalar::ep_apply(op, &mut a, &src);
+                    unsafe { neon::ep_apply(op, &mut c, &src) };
+                    assert_bits_eq(&a, &c, "ep_apply");
+                }
+            }
+        }
+    }
+}

@@ -63,12 +63,18 @@ pub struct BenchSuite {
     cfg: BenchConfig,
     results: Vec<BenchResult>,
     out_dir: String,
+    host: Vec<(&'static str, Json)>,
 }
 
 /// Prevent the optimizer from deleting a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Logical core count of the host, for the suite's `host` header.
+pub fn core_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl BenchSuite {
@@ -83,7 +89,20 @@ impl BenchSuite {
             cfg,
             results: Vec::new(),
             out_dir: std::env::var("GSPN2_BENCH_OUT").unwrap_or_else(|_| "bench_out".into()),
+            host: vec![
+                ("cores", core_count().into()),
+                ("arch", std::env::consts::ARCH.into()),
+            ],
         }
+    }
+
+    /// Stamp an extra `host` header field into the suite JSON (e.g. the
+    /// detected SIMD kernel and lane width — injected by the bench
+    /// binaries so this module stays independent of the scan crate).
+    /// Later stamps of the same key win.
+    pub fn stamp_host(&mut self, key: &'static str, value: Json) {
+        self.host.retain(|(k, _)| *k != key);
+        self.host.push((key, value));
     }
 
     /// Time `f`, which performs ONE logical operation per call.
@@ -163,6 +182,7 @@ impl BenchSuite {
         let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         let doc = Json::from_pairs(vec![
             ("suite", self.suite.as_str().into()),
+            ("host", Json::from_pairs(self.host)),
             ("results", arr),
         ]);
         let path = format!("{}/{}.json", self.out_dir, self.suite);
@@ -196,6 +216,20 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.samples >= 5);
+    }
+
+    #[test]
+    fn host_header_stamps() {
+        assert!(core_count() >= 1);
+        let mut suite = BenchSuite::with_config("selftest3", fast_cfg());
+        // Defaults are present; re-stamping a key replaces it.
+        assert!(suite.host.iter().any(|(k, _)| *k == "cores"));
+        assert!(suite.host.iter().any(|(k, _)| *k == "arch"));
+        suite.stamp_host("simd", "avx2".into());
+        suite.stamp_host("simd", "scalar".into());
+        let simd: Vec<_> = suite.host.iter().filter(|(k, _)| *k == "simd").collect();
+        assert_eq!(simd.len(), 1);
+        assert_eq!(simd[0].1, Json::from("scalar"));
     }
 
     #[test]

@@ -252,6 +252,31 @@ impl Lease<'_> {
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
+
+    /// View the leased storage as `u16` words — twice as many elements as
+    /// the f32 view. This is how the scan engine's reduced-precision mode
+    /// packs two bf16 values into each pooled f32 slot without growing the
+    /// pool beyond its single element type: a lease of
+    /// `bf16_len(n) = ceil(n/2)` f32s holds `n` bf16 words.
+    ///
+    /// Sound because `align_of::<u16>() <= align_of::<f32>()` and every bit
+    /// pattern is a valid `u16`. The word order within an f32 slot is
+    /// endianness-dependent but irrelevant: the pack and unpack sides share
+    /// this view, and `acquire` contents are arbitrary by contract anyway.
+    pub fn as_u16(&self) -> &[u16] {
+        let s: &[f32] = self;
+        // SAFETY: same allocation, halved element size, compatible
+        // alignment; lifetime tied to &self.
+        unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u16, s.len() * 2) }
+    }
+
+    /// Mutable twin of [`Lease::as_u16`].
+    pub fn as_u16_mut(&mut self) -> &mut [u16] {
+        let s: &mut [f32] = self;
+        let (ptr, n) = (s.as_mut_ptr(), s.len());
+        // SAFETY: as in `as_u16`; the &mut self borrow gives exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(ptr as *mut u16, n * 2) }
+    }
 }
 
 impl Deref for Lease<'_> {
@@ -404,6 +429,23 @@ mod tests {
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(s.bytes_leased, 0);
         assert!(s.peak_leased >= 128 * 4);
+    }
+
+    #[test]
+    fn u16_view_roundtrips_and_tracks_len() {
+        let p = BufferPool::new(usize::MAX);
+        let mut l = p.acquire(100);
+        assert_eq!(l.as_u16().len(), 200);
+        let w = l.as_u16_mut();
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = i as u16;
+        }
+        assert_eq!(l.as_u16()[199], 199);
+        // The u16 words live in the same storage as the f32 view: the pair
+        // (198, 199) occupies f32 slot 99, whichever endianness orders it.
+        let hi = l[99].to_bits();
+        let (a, b) = ((hi & 0xffff) as u16, (hi >> 16) as u16);
+        assert!((a == 198 && b == 199) || (a == 199 && b == 198));
     }
 
     #[test]

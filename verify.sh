@@ -20,6 +20,17 @@ GSPN2_SCAN_PLAN=dirfan cargo test -q scan
 # production low-occupancy path, bit-identical to `segment` at the same
 # count — so the whole scan suite runs through its state machine.
 GSPN2_SCAN_PLAN=chained cargo test -q scan
+# SIMD kernel matrix: the scan suite is `==`-pinned against the scalar
+# reference, so re-run it with the lane kernels forced off (every inner
+# loop through the scalar path) and — where the host supports it — with
+# the vector kernel forced on, exercising the GSPN2_SCAN_SIMD override
+# behind the `scan.simd` config knob.
+GSPN2_SCAN_SIMD=scalar cargo test -q scan
+if [ "$(uname -m)" = "x86_64" ]; then
+  GSPN2_SCAN_SIMD=avx2 cargo test -q scan
+elif [ "$(uname -m)" = "aarch64" ]; then
+  GSPN2_SCAN_SIMD=neon cargo test -q scan
+fi
 # Overload robustness: the SLO-aware admission / shedding / drain e2e
 # suite, re-run explicitly so a change that only breaks the overload
 # path can't hide behind the broad suite's pass/fail summary.
