@@ -14,9 +14,11 @@ use std::time::Duration;
 use gspn2::scan::fused::{
     fused_merged_4dir, fused_merged_4dir_chained, fused_merged_4dir_fan, fused_merged_4dir_pool,
     fused_merged_4dir_seg_wave_twopass, fused_scan_l2r, fused_scan_l2r_chained,
-    fused_scan_l2r_pool, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
+    fused_scan_l2r_pool, fused_scan_l2r_pool_ws, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
     fused_scan_l2r_seg_wave_twopass,
 };
+use gspn2::scan::plan::set_plan_override;
+use gspn2::util::BufferPool;
 use gspn2::scan::{
     auto_segments, expand_g, merged_4dir_pool, merged_4dir_ref, scan_l2r, scan_l2r_pool,
     scan_l2r_split, simd, CompactGspnUnit, Taps,
@@ -335,6 +337,65 @@ fn bench_fused_vs_reference(cfg: BenchConfig) {
         suite.record_value(
             &format!("speedup merged_4dir {tag} dirfan {}/scalar", kern.name()),
             m_fan_scalar.mean_ns / m_fan_wave.mean_ns,
+            "x",
+        );
+    }
+
+    // Bounded-memory tiled streaming at high resolution (the PR 10
+    // acceptance rows): one 2048x2048 plane, a fresh workspace pool
+    // per mode so each mode's `peak_leased` high-water mark is its own,
+    // recorded alongside latency. The plan override is forced so the
+    // untiled row can never auto-tile (the pool cap is generous enough
+    // that the tiling guard would stay quiet anyway) and the tiled row
+    // streams the same chained engine through row bands joined by
+    // serialized External carries. Same bits; acceptance is the memory
+    // row — tiled peak bytes on lease <= 1/2 untiled. Process-global
+    // override is safe here for the same single-thread-of-control
+    // reason as the SIMD flips above.
+    {
+        let (c, h, w) = (1usize, 2048usize, 2048usize);
+        let x = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[1, c, h, w], &mut rng, 1.0);
+        let taps = Taps::normalize(&Tensor::randn(&[1, 1, 3, h, w], &mut rng, 1.0));
+        let pool8 = ThreadPool::new(8);
+        let tag = format!("c{c} {h}x{w}");
+        set_plan_override("chained").unwrap();
+        let ws_untiled = BufferPool::new(512 << 20);
+        let r_untiled = suite.bench(
+            &format!("scan_l2r {tag} (untiled chained, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_pool_ws(&x, &taps, &lam, 0, &pool8, &ws_untiled));
+            },
+        );
+        let untiled_peak = ws_untiled.stats().peak_leased;
+        set_plan_override("tiled-chained").unwrap();
+        let ws_tiled = BufferPool::new(512 << 20);
+        let r_tiled = suite.bench(
+            &format!("scan_l2r {tag} (tiled-chained stream, 8 threads)"),
+            || {
+                black_box(fused_scan_l2r_pool_ws(&x, &taps, &lam, 0, &pool8, &ws_tiled));
+            },
+        );
+        set_plan_override("auto").unwrap();
+        let tiled_peak = ws_tiled.stats().peak_leased;
+        suite.record_value(
+            &format!("speedup scan_l2r {tag} tiled/untiled"),
+            r_untiled.mean_ns / r_tiled.mean_ns,
+            "x",
+        );
+        suite.record_value(
+            &format!("peak bytes_leased scan_l2r {tag} untiled"),
+            untiled_peak as f64,
+            "B",
+        );
+        suite.record_value(
+            &format!("peak bytes_leased scan_l2r {tag} tiled"),
+            tiled_peak as f64,
+            "B",
+        );
+        suite.record_value(
+            &format!("mem shrink scan_l2r {tag} untiled/tiled"),
+            untiled_peak as f64 / tiled_peak.max(1) as f64,
             "x",
         );
     }

@@ -30,6 +30,10 @@
 //! # Per-tenant token-bucket admission quota (0 rps = unlimited).
 //! quota_rps = 0.0
 //! quota_burst = 32
+//! # Per-request workspace admission cap (MiB; 0 = none). Over-cap
+//! # geometries are admitted only when tiling can bound their peak
+//! # memory; otherwise they get a structured TooLarge reply.
+//! max_request_mb = 0
 //!
 //! [train]
 //! steps = 200
@@ -97,6 +101,13 @@ pub struct ServeConfig {
     pub quota_rps: f64,
     /// Per-tenant token-bucket burst capacity (tokens).
     pub quota_burst: usize,
+    /// Per-request workspace admission cap (MiB): a scan whose planned
+    /// workspace footprint exceeds this is only admitted if tiling can
+    /// bound its peak memory (auto-tiling against the workspace cap, or
+    /// a forced tiled plan); with tiling disabled it is answered with a
+    /// structured `RequestError::TooLarge` reply. 0 = no per-request
+    /// cap.
+    pub max_request_mb: usize,
 }
 
 impl Default for ServeConfig {
@@ -122,6 +133,7 @@ impl Default for ServeConfig {
             shed_queue_frac: 0.75,
             quota_rps: 0.0,
             quota_burst: 32,
+            max_request_mb: 0,
         }
     }
 }
@@ -171,9 +183,12 @@ pub struct ScanConfig {
     /// planner decides), `"plane"`, `"segment"` (the two-phase
     /// decomposition under its production schedule — per-direction
     /// wavefront continuations with the carry correction fused into the
-    /// scatter drain), `"dirfan"`, or `"chained"` (the single-pass
+    /// scatter drain), `"dirfan"`, `"chained"` (the single-pass
     /// chained engine with decoupled look-back — bit-identical to
-    /// `"segment"` at the same chunk count, no phase barrier) — forces
+    /// `"segment"` at the same chunk count, no phase barrier), or
+    /// `"tiled"` / `"tiled-chained"` (the bounded-memory streaming
+    /// mode: row-band tiles around the auto-planned / chained inner
+    /// engine, band height from `tile_band_rows`) — forces
     /// the named strategy wherever it is valid for the geometry.
     /// Applies to serving and the benches. `"auto"` defers to the
     /// `GSPN2_SCAN_PLAN` env var when that is set (the CI hook that
@@ -195,11 +210,22 @@ pub struct ScanConfig {
     /// stays f32 — outputs match f32 to `(|f32| + 1)·2⁻⁶` elementwise).
     /// `"f32"` defers to the `GSPN2_SCAN_PRECISION` env var when set.
     pub precision: String,
+    /// Row-band height (canonical columns per band) of the tiled
+    /// streaming mode — used when the planner auto-tiles an over-cap
+    /// geometry or when `plan` forces `"tiled"`/`"tiled-chained"`.
+    /// 0 (the default) defers to the `GSPN2_SCAN_TILE_BAND_ROWS` env
+    /// var, then the engine default (128).
+    pub tile_band_rows: usize,
 }
 
 impl Default for ScanConfig {
     fn default() -> Self {
-        Self { plan: "auto".into(), simd: "auto".into(), precision: "f32".into() }
+        Self {
+            plan: "auto".into(),
+            simd: "auto".into(),
+            precision: "f32".into(),
+            tile_band_rows: 0,
+        }
     }
 }
 
@@ -244,6 +270,7 @@ impl Config {
         s.shed_queue_frac = t.f64_or("serve.shed_queue_frac", s.shed_queue_frac);
         s.quota_rps = t.f64_or("serve.quota_rps", s.quota_rps);
         s.quota_burst = t.usize_or("serve.quota_burst", s.quota_burst);
+        s.max_request_mb = t.usize_or("serve.max_request_mb", s.max_request_mb);
 
         let tr = &mut self.train;
         tr.steps = t.usize_or("train.steps", tr.steps);
@@ -260,6 +287,8 @@ impl Config {
         self.scan.plan = t.str_or("scan.plan", &self.scan.plan);
         self.scan.simd = t.str_or("scan.simd", &self.scan.simd);
         self.scan.precision = t.str_or("scan.precision", &self.scan.precision);
+        self.scan.tile_band_rows =
+            t.usize_or("scan.tile_band_rows", self.scan.tile_band_rows);
     }
 
     pub fn apply_args(&mut self, a: &Args) {
@@ -288,6 +317,7 @@ impl Config {
         s.shed_queue_frac = a.f64_or("shed-queue-frac", s.shed_queue_frac);
         s.quota_rps = a.f64_or("quota-rps", s.quota_rps);
         s.quota_burst = a.usize_or("quota-burst", s.quota_burst);
+        s.max_request_mb = a.usize_or("max-request-mb", s.max_request_mb);
 
         let tr = &mut self.train;
         tr.steps = a.usize_or("steps", tr.steps);
@@ -304,6 +334,8 @@ impl Config {
         self.scan.plan = a.str_or("scan-plan", &self.scan.plan);
         self.scan.simd = a.str_or("scan-simd", &self.scan.simd);
         self.scan.precision = a.str_or("scan-precision", &self.scan.precision);
+        self.scan.tile_band_rows =
+            a.usize_or("scan-tile-band-rows", self.scan.tile_band_rows);
     }
 }
 
@@ -425,6 +457,31 @@ mod tests {
         assert_eq!(cfg.scan.plan, "plane");
         let cfg = Config::from_args(&args(&["--scan-plan", "chained"])).unwrap();
         assert_eq!(cfg.scan.plan, "chained");
+    }
+
+    #[test]
+    fn tiling_knobs_from_toml_and_cli() {
+        let t = Toml::parse(
+            "[serve]\nmax_request_mb = 256\n[scan]\nplan = \"tiled\"\ntile_band_rows = 64\n",
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.serve.max_request_mb, 0);
+        assert_eq!(cfg.scan.tile_band_rows, 0);
+        cfg.apply_toml(&t);
+        assert_eq!(cfg.serve.max_request_mb, 256);
+        assert_eq!(cfg.scan.plan, "tiled");
+        assert_eq!(cfg.scan.tile_band_rows, 64);
+        cfg.apply_args(&args(&[
+            "--max-request-mb",
+            "128",
+            "--scan-tile-band-rows=32",
+            "--scan-plan",
+            "tiled-chained",
+        ]));
+        assert_eq!(cfg.serve.max_request_mb, 128); // CLI wins
+        assert_eq!(cfg.scan.tile_band_rows, 32);
+        assert_eq!(cfg.scan.plan, "tiled-chained");
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct Metrics {
     pub rej_expired: u64,
     pub rej_quota: u64,
     pub rej_invalid: u64,
+    /// Requests whose workspace footprint exceeded `serve.max_request_mb`
+    /// while tiling was disabled, answered with a structured
+    /// `RequestError::TooLarge` reply.
+    pub rej_too_large: u64,
     /// Requests answered with a structured `Closed` reply at shutdown
     /// (not an admission rejection: they were admitted, then drained).
     pub closed: u64,
@@ -57,6 +61,14 @@ pub struct Metrics {
     pub ws_misses: u64,
     pub ws_bytes_pooled: u64,
     pub ws_peak_leased: u64,
+    /// Per-request peak-workspace accounting: the distribution of each
+    /// served request's peak bytes on lease (from the pool's rebased
+    /// high-water windows — see `BufferPool::rebase_peak`). Under
+    /// tiling this is what stays bounded by one band while the
+    /// geometry itself is over-cap; its max also feeds
+    /// `ws_peak_leased` so the lifetime high-water mark survives the
+    /// per-request rebasing.
+    pub ws_req_peak: Summary,
     /// p99 SLO threshold the error budget is measured against (0 = no
     /// SLO configured, budget always 0).
     slo_ns: u64,
@@ -144,6 +156,20 @@ impl Metrics {
         self.rej_invalid += 1;
     }
 
+    /// Admission guard: the request's workspace footprint exceeded
+    /// `serve.max_request_mb` with tiling disabled.
+    pub fn record_too_large(&mut self) {
+        self.rejected += 1;
+        self.rej_too_large += 1;
+    }
+
+    /// One served request's peak workspace bytes (a rebased pool
+    /// high-water window around its execution).
+    pub fn record_request_ws_peak(&mut self, bytes: u64) {
+        self.ws_req_peak.add(bytes as f64);
+        self.ws_peak_leased = self.ws_peak_leased.max(bytes);
+    }
+
     /// A queued/in-flight request resolved with `Closed` at shutdown.
     pub fn record_closed(&mut self) {
         self.closed += 1;
@@ -210,12 +236,14 @@ impl Metrics {
         ));
         if self.rejected > 0 {
             s.push_str(&format!(
-                "rejections: {} backpressure, {} shed, {} expired, {} quota, {} invalid\n",
+                "rejections: {} backpressure, {} shed, {} expired, {} quota, {} invalid, \
+                 {} too-large\n",
                 self.rej_backpressure,
                 self.rej_shed,
                 self.rej_expired,
                 self.rej_quota,
-                self.rej_invalid
+                self.rej_invalid,
+                self.rej_too_large
             ));
         }
         s.push_str(&format!(
@@ -271,6 +299,14 @@ impl Metrics {
             fmt_bytes(self.ws_bytes_pooled),
             fmt_bytes(self.ws_peak_leased),
         ));
+        if self.ws_req_peak.count() > 0 {
+            s.push_str(&format!(
+                "per-request peak workspace: mean {}, max {} over {} requests\n",
+                fmt_bytes(self.ws_req_peak.mean() as u64),
+                fmt_bytes(self.ws_req_peak.max() as u64),
+                self.ws_req_peak.count(),
+            ));
+        }
         s
     }
 }
@@ -323,17 +359,22 @@ mod tests {
         m.record_expired(Priority::Normal);
         m.record_quota();
         m.record_invalid();
+        m.record_too_large();
         m.record_closed();
-        assert_eq!(m.rejected, 6, "aggregate = sum of split counters");
+        assert_eq!(m.rejected, 7, "aggregate = sum of split counters");
         assert_eq!(
             (m.rej_backpressure, m.rej_shed, m.rej_expired, m.rej_quota, m.rej_invalid),
             (1, 2, 1, 1, 1)
         );
+        assert_eq!(m.rej_too_large, 1);
         assert_eq!(m.closed, 1, "closed is not an admission rejection");
         assert_eq!(m.class_shed[Priority::Low.index()], 2);
         assert_eq!(m.class_expired[Priority::Normal.index()], 1);
         let r = m.report();
-        assert!(r.contains("1 backpressure, 2 shed, 1 expired, 1 quota, 1 invalid"), "{r}");
+        assert!(
+            r.contains("1 backpressure, 2 shed, 1 expired, 1 quota, 1 invalid, 1 too-large"),
+            "{r}"
+        );
         assert!(r.contains("1 closed"), "{r}");
     }
 
@@ -425,6 +466,30 @@ mod tests {
         let r = m.report();
         assert!(r.contains("90.0% hit rate"), "{r}");
         assert!(r.contains("2.0 KiB pooled"), "{r}");
+        assert!(!r.contains("per-request peak"), "no per-request peaks recorded yet: {r}");
+    }
+
+    #[test]
+    fn per_request_peaks_accumulate_and_raise_the_high_water_mark() {
+        let mut m = Metrics::new();
+        m.record_workspace(PoolStats {
+            hits: 1,
+            misses: 1,
+            bytes_pooled: 0,
+            bytes_leased: 0,
+            peak_leased: 1024,
+        });
+        m.record_request_ws_peak(4096);
+        m.record_request_ws_peak(2048);
+        assert_eq!(m.ws_req_peak.count(), 2);
+        assert_eq!(m.ws_req_peak.max(), 4096.0);
+        assert_eq!(
+            m.ws_peak_leased, 4096,
+            "per-request peaks must feed the lifetime high-water mark"
+        );
+        let r = m.report();
+        assert!(r.contains("per-request peak workspace"), "{r}");
+        assert!(r.contains("max 4.0 KiB"), "{r}");
     }
 
     #[test]

@@ -77,6 +77,18 @@ pub enum RequestError {
     Shed,
     /// The coordinator shut down before this request could execute.
     Closed,
+    /// The request's scan-workspace footprint exceeds
+    /// `serve.max_request_mb` and tiling is disabled, so the
+    /// coordinator cannot bound its peak memory. Enabling tiling (a
+    /// non-zero workspace cap with `scan.plan = auto`, or forcing
+    /// `scan.plan = tiled`) admits the same geometry as a stream of
+    /// row-band tiles instead.
+    TooLarge {
+        /// The untiled footprint the planner priced (MiB, rounded up).
+        need_mb: u64,
+        /// The configured `serve.max_request_mb` admission cap.
+        cap_mb: u64,
+    },
 }
 
 impl std::fmt::Display for RequestError {
@@ -85,6 +97,11 @@ impl std::fmt::Display for RequestError {
             RequestError::Deadline => write!(f, "deadline exceeded before execution"),
             RequestError::Shed => write!(f, "shed under overload"),
             RequestError::Closed => write!(f, "coordinator closed before execution"),
+            RequestError::TooLarge { need_mb, cap_mb } => write!(
+                f,
+                "request workspace footprint {need_mb} MiB exceeds \
+                 serve.max_request_mb = {cap_mb} and tiling is disabled"
+            ),
         }
     }
 }
@@ -492,5 +509,11 @@ mod tests {
         assert_eq!(e.downcast_ref::<RequestError>(), Some(&RequestError::Shed));
         assert!(RequestError::Deadline.to_string().contains("deadline"));
         assert!(RequestError::Closed.to_string().contains("closed"));
+        let big = RequestError::TooLarge { need_mb: 600, cap_mb: 256 };
+        let e = anyhow::Error::new(big);
+        assert_eq!(e.downcast_ref::<RequestError>(), Some(&big));
+        let msg = big.to_string();
+        assert!(msg.contains("600 MiB"), "{msg}");
+        assert!(msg.contains("max_request_mb = 256"), "{msg}");
     }
 }

@@ -45,6 +45,32 @@
 //!   first use), plane-block parallelism on the shared pool. This is
 //!   the pure-Rust serving path — bit-identical to `scan_l2r` — and
 //!   what the coordinator e2e tests exercise without artifacts.
+//!
+//! ## Bounded-memory high-resolution serving (tiled streaming)
+//!
+//! The cpu-fused path prices every bucket's workspace demand on one
+//! path ([`Coordinator::planned_bucket`]): the planner's decision
+//! wrapped by the engine's own tiling guard
+//! ([`crate::scan::plan::maybe_tile`]) against the coordinator's
+//! workspace cap (`workspace_cap_mb`). A geometry whose full-frame
+//! footprint exceeds the cap therefore executes as a stream of
+//! row-band tiles ([`crate::scan::plan::ScanStrategy::Tiled`], band
+//! height `[scan] tile_band_rows`), each band leasing and returning
+//! its scratch before the next begins, so the request's peak workspace
+//! is bounded by one band instead of the frame — bit-identical output,
+//! the carry crossing bands through the serialized
+//! [`crate::scan::engine::ExternalCarry`] boundary.
+//!
+//! `serve.max_request_mb` adds the per-request admission cap on that
+//! same planned (post-tiling) demand: an over-cap request is answered
+//! with a structured [`RequestError::TooLarge`] *reply* naming the
+//! demand and the cap — counted under `rej_too_large`, refused before
+//! bucket registration and pre-warm so it can never fill free lists
+//! past the pool cap. With tiling enabled the same geometry prices at
+//! its per-band footprint and is admitted. Per-request peak workspace
+//! is measured by bracketing each execution with
+//! [`BufferPool::rebase_peak`] and surfaces in the metrics report
+//! (`per-request peak workspace: mean/max`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -63,7 +89,9 @@ use super::request::{
 };
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, Manifest, Value};
-use crate::scan::plan::{eager_release_min_slo, plan_scan, workspace_footprint, ScanGeometry};
+use crate::scan::plan::{
+    eager_release_min_slo, maybe_tile, plan_scan, workspace_footprint, ScanGeometry, ScanPlan,
+};
 use crate::tensor::{concat_axis0, split_axis0};
 use crate::util::{lock_unpoisoned, logging, BufferPool, PoolStats, ThreadPool};
 use crate::Tensor;
@@ -190,6 +218,12 @@ struct Shared {
     /// dead coordinator's pool alive.
     workspace: Arc<BufferPool>,
     workspace_prewarm: bool,
+    /// Per-request workspace admission cap (`serve.max_request_mb`,
+    /// bytes; 0 = none). A request whose planned demand — priced the
+    /// way the executor will actually run it, tiling included — exceeds
+    /// this is answered with a structured [`RequestError::TooLarge`]
+    /// reply instead of queued.
+    max_request_bytes: usize,
 }
 
 pub struct Coordinator {
@@ -273,6 +307,7 @@ impl Coordinator {
             quotas: Mutex::new(QuotaState::new(cfg.quota_rps, cfg.quota_burst)),
             workspace: Arc::new(BufferPool::new(cfg.workspace_cap_mb << 20)),
             workspace_prewarm: cfg.workspace_prewarm,
+            max_request_bytes: cfg.max_request_mb << 20,
         });
         let workers = (0..n_workers)
             .map(|i| {
@@ -362,6 +397,34 @@ impl Coordinator {
             .map(|budget| now + budget);
         let payload = Payload::Scan { x, a_raw, lam };
         let bucket = payload.bucket(kchunk).expect("scan payload");
+        // Per-request workspace admission cap (`serve.max_request_mb`):
+        // price the request the way the executor will actually run it —
+        // tiling included, so an over-cap geometry that the engine can
+        // stream in row bands is admitted at its bounded per-band
+        // footprint. Only a demand tiling cannot bound is refused, and
+        // by a structured *reply* (like Deadline/Closed) rather than a
+        // submit error: the caller holds a normal receiver and learns
+        // the cap from the typed [`RequestError::TooLarge`]. Crucially
+        // this runs before bucket registration and pre-warm, so an
+        // oversized geometry never fills free lists past the pool cap.
+        if self.shared.max_request_bytes > 0 {
+            let need = self.planned_request_bytes(&bucket);
+            if need > self.shared.max_request_bytes as u64 {
+                lock_unpoisoned(&self.shared.metrics).record_too_large();
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Response {
+                    id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                    result: Err(anyhow::Error::new(RequestError::TooLarge {
+                        need_mb: need.div_ceil(1 << 20),
+                        cap_mb: (self.shared.max_request_bytes >> 20) as u64,
+                    })),
+                    queue_us: 0,
+                    execute_us: 0,
+                    batch: 0,
+                });
+                return Ok(rx);
+            }
+        }
         let (tx, rx) = mpsc::channel();
         let mut newly_registered = false;
         {
@@ -425,6 +488,42 @@ impl Coordinator {
         Ok(rx)
     }
 
+    /// Resolve the execution plan the cpu-fused path will actually run
+    /// for `bucket`'s geometry: the planner's decision, wrapped by the
+    /// same bounded-memory tiling guard ([`maybe_tile`]) the engine
+    /// applies against this coordinator's workspace cap. Keeping
+    /// admission, pre-warm, and execution on one pricing path is what
+    /// makes the `TooLarge` guard and the warm-bucket zero-miss
+    /// invariant agree with what the workers lease.
+    fn planned_bucket(&self, bucket: &Bucket) -> (ScanGeometry, ScanPlan, usize) {
+        let pool = ThreadPool::global();
+        let geom = ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
+        let tap_blocks = if bucket.per_channel { bucket.c.max(1) } else { 1 };
+        let plan = plan_scan(&geom, 0, pool.threads());
+        let plan = maybe_tile(
+            plan,
+            &geom,
+            pool.threads(),
+            tap_blocks,
+            self.shared.workspace.cap_bytes(),
+            crate::scan::simd::precision() == crate::scan::simd::Precision::Bf16,
+        );
+        (geom, plan, tap_blocks)
+    }
+
+    /// Planned peak workspace demand for one n=1 request of `bucket`,
+    /// in bytes — the scratch classes from [`workspace_footprint`] for
+    /// the resolved (possibly tiled) plan. This is the quantity the
+    /// `serve.max_request_mb` admission cap compares against.
+    fn planned_request_bytes(&self, bucket: &Bucket) -> u64 {
+        let pool = ThreadPool::global();
+        let (geom, plan, tap_blocks) = self.planned_bucket(bucket);
+        workspace_footprint(&geom, plan.strategy, pool.threads(), tap_blocks)
+            .into_iter()
+            .map(|(len, count)| (len * count * 4) as u64)
+            .sum()
+    }
+
     /// Fill the workspace free lists with the scratch the cpu-fused
     /// path will lease for `bucket`, priced by the planner's
     /// [`workspace_footprint`] model, so the bucket's very first
@@ -432,9 +531,7 @@ impl Coordinator {
     /// as hits nor misses and respects the pool's retention cap.
     fn prewarm_bucket(&self, bucket: &Bucket) {
         let pool = ThreadPool::global();
-        let geom = ScanGeometry::single_dir(bucket.c.max(1), bucket.h, bucket.w);
-        let plan = plan_scan(&geom, 0, pool.threads());
-        let tap_blocks = if bucket.per_channel { bucket.c.max(1) } else { 1 };
+        let (geom, plan, tap_blocks) = self.planned_bucket(bucket);
         for (len, count) in
             workspace_footprint(&geom, plan.strategy, pool.threads(), tap_blocks)
         {
@@ -761,6 +858,14 @@ fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
         // the catch, a panic here unwound the executor, leaked every
         // reply channel in the batch, and left later requests to queue
         // forever against a dead worker.
+        // Per-request peak-workspace window: rebase the pool's
+        // high-water mark here so the matching rebase after the run
+        // reads this execution's own peak — the observable behind the
+        // bounded-memory claim of the tiled streaming path (a tiled
+        // over-cap request must peak at one band, not the full frame).
+        // Approximate when other pool users overlap the window; see
+        // [`BufferPool::rebase_peak`].
+        sh.workspace.rebase_peak();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             #[cfg(test)]
             test_hooks::maybe_fail_scan(x.shape[1], x.shape[2], x.shape[3]);
@@ -779,6 +884,7 @@ fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
                 out_buf,
             )
         }));
+        let req_peak = sh.workspace.rebase_peak();
         let exec_ns = t0.elapsed().as_nanos() as u64;
         let queue_ns = t0.saturating_duration_since(r.arrived).as_nanos() as u64;
         match result {
@@ -795,6 +901,7 @@ fn run_scan_batch_cpu(sh: &Shared, bucket: &Bucket, reqs: Vec<Request>) {
                 });
                 let mut m = lock_unpoisoned(&sh.metrics);
                 m.record_request(class, Some(bucket), queue_ns, exec_ns, queue_ns + exec_ns, batch);
+                m.record_request_ws_peak(req_peak);
             }
             Err(payload) => {
                 let msg = crate::util::panic_message(&*payload);
@@ -1146,6 +1253,7 @@ mod tests {
             quotas: Mutex::new(QuotaState::new(0.0, 1)),
             workspace: Arc::new(BufferPool::new(1 << 20)),
             workspace_prewarm: false,
+            max_request_bytes: 0,
         };
         let (tx, rx_scan) = mpsc::channel();
         let req = Request {
@@ -1224,5 +1332,96 @@ mod tests {
             .result
             .is_ok());
         coord.shutdown();
+    }
+
+    /// The per-request admission cap with tiling disabled (workspace
+    /// cap 0, so [`maybe_tile`] is a no-op): a geometry whose planned
+    /// demand exceeds `max_request_mb` must come back as a structured
+    /// `TooLarge` *reply* naming the cap — counted as a rejection,
+    /// never queued, never pre-warmed — and the coordinator must keep
+    /// serving in-cap traffic afterwards.
+    #[test]
+    fn oversize_request_gets_structured_too_large_reply() {
+        use std::time::Duration;
+        let cfg = ServeConfig {
+            max_request_mb: 1,
+            workspace_cap_mb: 0,
+            workspace_prewarm: false,
+            ..cpu_cfg(1)
+        };
+        let coord = Coordinator::start(&cfg).unwrap();
+        let mut rng = Rng::new(96);
+        // 128x1024 single-plane: the staged tap panels alone price at
+        // 3*128*1024 floats (2 MiB after class rounding) — over the
+        // 1 MiB per-request cap, and untileable with workspace cap 0.
+        let (x, a, lam) = mk_case(&mut rng, 1, 128, 1024);
+        let rx = coord.submit_scan(x, a, lam, 0).expect("admission returns a receiver");
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("guard must reply");
+        let err = resp.result.expect_err("over-cap demand must be refused");
+        match err.downcast_ref::<RequestError>() {
+            Some(RequestError::TooLarge { need_mb, cap_mb }) => {
+                assert_eq!(*cap_mb, 1);
+                assert!(*need_mb > *cap_mb, "priced demand must exceed the cap");
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // In-cap traffic still serves, bit-exact.
+        let (x, a, lam) = mk_case(&mut rng, 1, 6, 12);
+        let want = crate::scan::scan_l2r(&x, &crate::scan::Taps::normalize(&a), &lam, 0);
+        let rx = coord.submit_scan(x, a, lam, 0).expect("submit small");
+        let got = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("reply")
+            .result
+            .expect("in-cap request succeeds");
+        assert_eq!(got[0].as_f32().unwrap().data, want.data);
+        drop(got);
+        let m = coord.shutdown();
+        assert_eq!(m.rej_too_large, 1);
+        assert_eq!(m.completed, 1);
+        assert!(m.report().contains("1 too-large"), "{}", m.report());
+    }
+
+    /// Bounded-memory high-res serving, end to end: the same geometry
+    /// the too-large test refuses is *admitted* once the workspace cap
+    /// enables tiling — priced at its per-band footprint, executed as a
+    /// row-band stream, bit-identical to the monolithic `scan_l2r`
+    /// reference — and the per-request peak-workspace metric shows the
+    /// peak stayed below the full-frame staging cost.
+    #[test]
+    fn overcap_geometry_streams_in_bands_within_budget() {
+        use std::time::Duration;
+        let cfg = ServeConfig {
+            max_request_mb: 8,
+            workspace_cap_mb: 1,
+            ..cpu_cfg(1)
+        };
+        let coord = Coordinator::start(&cfg).unwrap();
+        let mut rng = Rng::new(97);
+        let (x, a, lam) = mk_case(&mut rng, 1, 128, 1024);
+        let want = crate::scan::scan_l2r(&x, &crate::scan::Taps::normalize(&a), &lam, 0);
+        let rx = coord.submit_scan(x, a, lam, 0).expect("tiling admits the geometry");
+        let got = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("reply")
+            .result
+            .expect("tiled execution succeeds");
+        assert_eq!(got[0].as_f32().unwrap().data, want.data, "banded == monolithic");
+        drop(got);
+        let m = coord.shutdown();
+        assert_eq!(m.rej_too_large, 0, "tiling must admit, not reject");
+        assert_eq!(m.completed, 1);
+        // Full-frame staging alone is 3*128*1024 floats -> 2 MiB after
+        // class rounding; a banded run must peak well under that.
+        let untiled_staged_bytes = (3 * 128 * 1024 * 4) as f64;
+        assert_eq!(m.ws_req_peak.count(), 1);
+        assert!(m.ws_req_peak.max() > 0.0, "execution must lease workspace");
+        assert!(
+            m.ws_req_peak.max() < untiled_staged_bytes,
+            "peak {} must stay below full-frame staging {}",
+            m.ws_req_peak.max(),
+            untiled_staged_bytes
+        );
+        assert!(m.report().contains("per-request peak workspace"), "{}", m.report());
     }
 }

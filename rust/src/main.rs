@@ -13,11 +13,14 @@
 //! ```
 //!
 //! Any command also accepts `--config path.toml` (see `configs/`),
-//! `--scan-plan auto|plane|segment|dirfan|chained` (the scan
-//! execution-planner override, `[scan] plan` in TOML),
+//! `--scan-plan auto|plane|segment|dirfan|chained|tiled|tiled-chained`
+//! (the scan execution-planner override, `[scan] plan` in TOML),
 //! `--scan-simd auto|scalar|avx2|neon` (the fused engine's lane-kernel
-//! override, `[scan] simd`), and `--scan-precision f32|bf16` (staged
-//! panel storage precision, `[scan] precision`).
+//! override, `[scan] simd`), `--scan-precision f32|bf16` (staged
+//! panel storage precision, `[scan] precision`),
+//! `--scan-tile-band-rows N` (row-band height of the tiled streaming
+//! mode, `[scan] tile_band_rows`), and `--max-request-mb N` (serving
+//! per-request workspace admission cap, `[serve] max_request_mb`).
 
 use gspn2::config::Config;
 use gspn2::coordinator::{Coordinator, SubmitError};
@@ -61,6 +64,13 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     // env hook); "bf16" halves the staged working set.
     if cfg.scan.precision != "f32" {
         gspn2::scan::set_precision_override(&cfg.scan.precision)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    // Tiled-band height (`--scan-tile-band-rows` / `[scan]
+    // tile_band_rows`): 0 keeps the GSPN2_SCAN_TILE_BAND_ROWS env hook
+    // and the engine default.
+    if cfg.scan.tile_band_rows != 0 {
+        gspn2::scan::set_tile_band_rows(cfg.scan.tile_band_rows)
             .map_err(|e| anyhow::anyhow!(e))?;
     }
     match cmd {

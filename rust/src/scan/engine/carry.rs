@@ -1,0 +1,857 @@
+//! Carry resolution: the algebra that turns zero-carry pieces into the
+//! true sequential scan.
+//!
+//! Everything cross-chunk in the line-scan recurrence is one tiny carry
+//! column, and this module owns every way the engine obtains one.
+//! [`CarrySource`] names the four provenances — `Zero` (the true origin
+//! of the scan axis), `Resolved` (a caller-tracked column), `Lookback`
+//! (a publication-board prefix), and `External` (a serialized band /
+//! shard hand-off) — and [`correct_segment`] / [`correct_segment_bf16`]
+//! are the one shared correction body that folds a resolved carry into
+//! a zero-carry piece. The bottom half is the single-pass chained
+//! engine, whose decoupled look-back resolves carries through a
+//! [`BlockBoard`] with no phase barrier.
+//!
+//! [`ExternalCarry`] is deliberately a plain owned buffer with a
+//! little-endian wire format: it is the serialization seam the tiled
+//! streaming mode hands across band boundaries today, and the one a
+//! LASP-2-style multi-node split would hand across processes tomorrow.
+
+use super::chunk::{scan_piece_into, scan_piece_into_bf16, segment_bounds};
+use super::drain::drain_scatter;
+use super::pack::{StagedTaps, TapView, SLAB};
+#[cfg(test)]
+use super::test_hooks;
+use super::{out_tensor, DirInput};
+use crate::scan::simd::{self, bf16_narrow, bf16_widen, Precision};
+use crate::tensor::Tensor;
+use crate::util::workspace::{
+    BlockBoard, BufferPool, Lease, BLOCK_AGG, BLOCK_POISONED, BLOCK_PREFIX,
+};
+use crate::util::{lock_unpoisoned, ThreadPool};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------
+// CarrySource: where a pass's entry carry comes from
+// ---------------------------------------------------------------------
+
+/// Per-plane entry/exit carry columns of ONE direction of one band —
+/// the cross-band (and, later, cross-process) hand-off of the tiled
+/// streaming mode. `data` is plane-major: plane `p`'s column is
+/// `data[p*hc..(p+1)*hc]`. Deliberately a plain owned `Vec` rather than
+/// a pooled lease: a carry set is `nplanes * hc` floats (KiB-scale), it
+/// lives *across* band executions (a lease would pin pool classes
+/// across the very boundary tiling exists to bound — excluded from pool
+/// accounting by design), and it is the object a multi-node LASP-2
+/// split would serialize — see [`ExternalCarry::to_bytes`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExternalCarry {
+    hc: usize,
+    nplanes: usize,
+    data: Vec<f32>,
+}
+
+impl ExternalCarry {
+    /// All-zero carries: the state before the first band (the full
+    /// geometry's column 0 scans from zero, exactly like untiled).
+    pub fn zeros(hc: usize, nplanes: usize) -> ExternalCarry {
+        ExternalCarry { hc, nplanes, data: vec![0.0; hc * nplanes] }
+    }
+
+    pub fn hc(&self) -> usize {
+        self.hc
+    }
+
+    pub fn nplanes(&self) -> usize {
+        self.nplanes
+    }
+
+    /// Plane `p`'s carry column.
+    pub fn column(&self, p: usize) -> &[f32] {
+        &self.data[p * self.hc..(p + 1) * self.hc]
+    }
+
+    pub(crate) fn column_mut(&mut self, p: usize) -> &mut [f32] {
+        &mut self.data[p * self.hc..(p + 1) * self.hc]
+    }
+
+    /// Per-plane columns, mutably — lets a parallel band run hand each
+    /// plane job its own (disjoint) exit column.
+    pub(crate) fn columns_mut(&mut self) -> impl Iterator<Item = &mut [f32]> {
+        self.data.chunks_mut(self.hc.max(1))
+    }
+
+    /// Serialize as `[hc: u32 LE][nplanes: u32 LE][data: f32 LE ...]` —
+    /// the wire format a cross-process band hand-off sends. f32 bits
+    /// round-trip exactly, so a deserialized carry seeds a bit-identical
+    /// continuation.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 * self.data.len());
+        out.extend_from_slice(&(self.hc as u32).to_le_bytes());
+        out.extend_from_slice(&(self.nplanes as u32).to_le_bytes());
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`ExternalCarry::to_bytes`]; `None` on a malformed
+    /// buffer.
+    pub fn from_bytes(bytes: &[u8]) -> Option<ExternalCarry> {
+        let hc = u32::from_le_bytes(bytes.get(0..4)?.try_into().ok()?) as usize;
+        let nplanes = u32::from_le_bytes(bytes.get(4..8)?.try_into().ok()?) as usize;
+        let body = bytes.get(8..)?;
+        if body.len() != 4 * hc * nplanes {
+            return None;
+        }
+        let data =
+            body.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        Some(ExternalCarry { hc, nplanes, data })
+    }
+}
+
+/// Where a pass obtains the carry that *enters* its first column — the
+/// seam every engine strategy now shares. The contract: [`seed`] writes
+/// the entry carry into the caller's column (returning whether it
+/// seeded at all), and the caller applies the reference decomposition's
+/// all-zero *skip* afterwards — a seeded-but-zero carry must behave
+/// exactly like [`CarrySource::Zero`], which keeps even -0.0 pixels
+/// bit-identical to the untiled scan.
+///
+/// [`seed`]: CarrySource::seed
+#[derive(Clone, Copy)]
+pub(crate) enum CarrySource<'a> {
+    /// The true origin of the scan axis: nothing precedes this pass.
+    Zero,
+    /// A caller-tracked, already-resolved carry column.
+    Resolved(&'a [f32]),
+    /// The published inclusive prefix of block `.1` on a publication
+    /// board — the chained engine's decoupled hand-off. The block must
+    /// have reached `BLOCK_PREFIX`; the caller owns that rendezvous.
+    Lookback(&'a BlockBoard<'a>, usize),
+    /// Plane `.1`'s column of a (de)serialized band/shard hand-off.
+    External(&'a ExternalCarry, usize),
+}
+
+impl CarrySource<'_> {
+    /// Seed `dst` with the entry carry. Returns `false` for
+    /// [`CarrySource::Zero`] with `dst` untouched (the zero-carry fast
+    /// path stays byte-identical to the pre-refactor engines), `true`
+    /// otherwise.
+    pub(crate) fn seed(&self, dst: &mut [f32]) -> bool {
+        match *self {
+            CarrySource::Zero => false,
+            CarrySource::Resolved(col) => {
+                let n = dst.len();
+                dst.copy_from_slice(&col[..n]);
+                true
+            }
+            CarrySource::Lookback(board, bidx) => {
+                board.read_prefix(bidx, dst);
+                true
+            }
+            CarrySource::External(ec, p) => {
+                let n = dst.len();
+                dst.copy_from_slice(&ec.column(p)[..n]);
+                true
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The shared correction body
+// ---------------------------------------------------------------------
+
+/// The one shared carry-correction body: add the linear correction scan
+/// seeded by `cin` onto segment columns `[lo, hi)` held in `seg`
+/// (column-major within the segment), dying at chunk resets. Callers
+/// own the zero-carry skip (the reference decomposition elides all-zero
+/// corrections, which keeps even -0.0 pixels bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn correct_segment<'w>(
+    hc: usize,
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+    taps: TapView<'_>,
+    cin: &[f32],
+    corr: &mut Lease<'w>,
+    next: &mut Lease<'w>,
+    seg: &mut [f32],
+) {
+    corr[..hc].copy_from_slice(&cin[..hc]);
+    for (j, gi) in (lo..hi).enumerate() {
+        if gi % chunk == 0 {
+            // Chunk reset: the carry dies here and phase 1 was already
+            // exact from this column on.
+            break;
+        }
+        simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
+        for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
+            *o += v;
+        }
+        std::mem::swap(corr, next);
+    }
+}
+
+/// [`correct_segment`] over a bf16-stored segment: the correction
+/// recurrence itself runs in f32 (it never reads panel values), and
+/// each corrected element decodes, adds in f32, and re-encodes with
+/// round-to-nearest-even — the chained engine's reduced-precision
+/// panel path. Chunk-reset and zero-carry semantics are identical to
+/// the f32 body.
+#[allow(clippy::too_many_arguments)]
+fn correct_segment_bf16<'w>(
+    hc: usize,
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+    taps: TapView<'_>,
+    cin: &[f32],
+    corr: &mut Lease<'w>,
+    next: &mut Lease<'w>,
+    seg: &mut [u16],
+) {
+    corr[..hc].copy_from_slice(&cin[..hc]);
+    for (j, gi) in (lo..hi).enumerate() {
+        if gi % chunk == 0 {
+            // Chunk reset: the carry dies here and phase 1 was already
+            // exact from this column on.
+            break;
+        }
+        simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
+        for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
+            *o = bf16_narrow(bf16_widen(*o) + v);
+        }
+        std::mem::swap(corr, next);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Single-pass chained engine (decoupled look-back)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// The chained-scan helping bound of the current thread: while a
+    /// chunk job is on the stack, a wait loop inside it may only
+    /// claim-and-run jobs with a *strictly lower* claim index. The
+    /// nested-job stack is therefore strictly decreasing in claim
+    /// index, so helping can never re-enter (or transitively depend
+    /// on) the job that is waiting — the deadlock an unbounded
+    /// work-steal here would hit. Fresh pool tickets start unbounded
+    /// (`usize::MAX`).
+    static CHAIN_BOUND: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Scoped setter for [`CHAIN_BOUND`]: restores the previous bound on
+/// drop, including during unwinding (a panicking chunk must not leave
+/// a stale bound on a pool worker's thread-local).
+struct BoundGuard {
+    prev: usize,
+}
+
+impl BoundGuard {
+    fn set(j: usize) -> BoundGuard {
+        BoundGuard { prev: CHAIN_BOUND.with(|b| b.replace(j)) }
+    }
+}
+
+impl Drop for BoundGuard {
+    fn drop(&mut self) {
+        CHAIN_BOUND.with(|b| b.set(self.prev));
+    }
+}
+
+/// Claim the lowest unclaimed job with index `< bound`. Lowest-first
+/// matches the claim order's topology (see [`run_engine_chained`]), so
+/// a fresh runner always picks a job whose predecessors are already
+/// claimed or complete, and a blocked job only helps jobs it can never
+/// transitively wait on.
+fn chain_claim(claimed: &[AtomicBool], bound: usize) -> Option<usize> {
+    let n = claimed.len().min(bound);
+    (0..n).find(|&j| {
+        !claimed[j].load(Ordering::Relaxed)
+            && claimed[j]
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+    })
+}
+
+/// Whether a chunk reset (`gi % chunk == 0`) lands inside block columns
+/// `[lo, hi)`. If so, any incoming carry dies before the block's last
+/// column, its inclusive prefix equals its zero-carry aggregate no
+/// matter what precedes it, and a look-back can terminate there.
+fn chain_broken(lo: usize, hi: usize, chunk: usize) -> bool {
+    lo.div_ceil(chunk) * chunk < hi
+}
+
+/// One (plane, direction, segment) chunk of the chained engine, plus
+/// its publication-board block index.
+struct ChainJob {
+    p: usize,
+    k: usize,
+    si: usize,
+    lo: usize,
+    hi: usize,
+    bidx: usize,
+}
+
+/// Shared state of one chained-engine call: the job table in claim
+/// order, the claim flags, the publication board, the merge-order
+/// drain counters, and the per-plane output slots.
+struct ChainState<'e, 'w> {
+    dirs: &'e [DirInput<'e>],
+    staged: &'e [StagedTaps<'w>],
+    wts: Option<&'e [f32; 4]>,
+    gain: Option<&'e [f32]>,
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    bounds: &'e [Vec<(usize, usize)>],
+    jobs: Vec<ChainJob>,
+    claimed: Vec<AtomicBool>,
+    /// Completed-drain counters per `(plane, direction)` — the
+    /// merge-order gate of merged passes: direction k's chunks scatter
+    /// only after all `bounds[k-1].len()` chunks of the same plane
+    /// drained, preserving the fixed k = 0..4 accumulation order.
+    drained: Vec<AtomicUsize>,
+    board: BlockBoard<'e>,
+    os_slots: Vec<Mutex<&'e mut [f32]>>,
+    /// Call-wide abort flag: set (with the block poisoned) by any
+    /// panicking chunk so every spinning waiter unwinds instead of
+    /// waiting on a publication that will never come.
+    poisoned: AtomicBool,
+    pool: Option<&'e ThreadPool>,
+    ws: &'w BufferPool,
+    /// Storage precision of the job-local panels (the staged taps carry
+    /// their own): [`Precision::Bf16`] halves the retained bytes while
+    /// the recurrence and the publication board stay f32.
+    prec: Precision,
+    /// External entry carries seeding every plane's first block — the
+    /// tiled mode's band hand-off ([`ChainOpts::entry`]). `None` in a
+    /// whole-axis run (block 0 scans from the true zero origin).
+    entry: Option<&'e ExternalCarry>,
+    /// Global `(direction, last)` epilogue indices when this call runs a
+    /// single direction of a larger pass ([`ChainOpts::ep`]); `None`
+    /// uses the local indices.
+    ep: Option<(usize, usize)>,
+}
+
+impl ChainState<'_, '_> {
+    /// Wait until `pred` holds, productively: claim-and-run another
+    /// chain job below the current helping bound, or assist the pool's
+    /// global queue, before falling back to spin/yield. Panics
+    /// (unwinding the waiting job) once any chunk of this call has
+    /// poisoned the board.
+    fn wait_until(&self, what: &str, pred: impl Fn(&Self) -> bool) {
+        let mut spins = 0u32;
+        while !pred(self) {
+            if self.poisoned.load(Ordering::Acquire) {
+                panic!("chained scan: waiting on {what}, but a chunk panicked");
+            }
+            let bound = CHAIN_BOUND.with(|b| b.get());
+            if let Some(j) = chain_claim(&self.claimed, bound) {
+                run_chain_job(self, j);
+            } else if self.pool.map_or(false, |p| p.try_assist()) {
+                spins = 0;
+            } else {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// One chained runner: claim the lowest unclaimed job under the
+/// thread's current helping bound and run it, until nothing claimable
+/// remains. Fresh pool tickets run unbounded; a runner ticket executed
+/// from inside a blocked job's wait loop (via
+/// [`ThreadPool::try_assist`]) inherits that job's bound and may exit
+/// early — the caller's mop-up pass finishes the tail.
+fn chain_runner(st: &ChainState<'_, '_>) {
+    loop {
+        let bound = CHAIN_BOUND.with(|b| b.get());
+        match chain_claim(&st.claimed, bound) {
+            Some(j) => run_chain_job(st, j),
+            None => break,
+        }
+    }
+}
+
+/// Run one claimed chain job with the helping bound scoped to its claim
+/// index, and panic containment: a panicking chunk poisons its board
+/// block and the call-wide flag — so look-back waiters unwind through
+/// the normal panic path instead of deadlocking on a publication that
+/// will never arrive — then rethrows for the pool to collect as a
+/// `MapError`.
+fn run_chain_job(st: &ChainState<'_, '_>, j: usize) {
+    let _bound = BoundGuard::set(j);
+    if let Err(payload) =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chain_job_body(st, j)))
+    {
+        st.board.poison(st.jobs[j].bidx);
+        st.poisoned.store(true, Ordering::Release);
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// The single-pass chunk body: scan once from a zero carry into
+/// job-local scratch, publish the aggregate, resolve the true incoming
+/// carry by decoupled look-back, fold the correction into the still
+/// cache-hot local panel, publish the inclusive prefix, and scatter the
+/// corrected panel through the unchanged fused epilogue. No phase
+/// barrier, no retained panel array, no second DRAM read of the panel.
+fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
+    let &ChainJob { p, k, si, lo, hi, bidx } = &st.jobs[j];
+    let di = &st.dirs[k];
+    let hc = di.taps.h;
+    let chunk = di.chunk;
+    let (h, w) = st.hw;
+    let seglen = hi - lo;
+    let taps = st.staged[k].panels(p / st.c, p % st.c);
+    let bf16 = st.prec == Precision::Bf16;
+    // Job-local panel — half-width (packed bf16 words in the f32 lease)
+    // in reduced-precision mode, fully overwritten by the scan below.
+    // Leased before the (test-only) fault hook so an injected panic
+    // unwinds while scratch is out on lease — the leak test covers the
+    // window that matters.
+    let mut panel = if bf16 {
+        st.ws.acquire(simd::bf16_len(seglen * hc))
+    } else {
+        st.ws.acquire(seglen * hc)
+    };
+    // The f32 aggregate column of a bf16 chunk: the recurrence runs in
+    // f32 (only the *stored* panel narrows), so the board still carries
+    // full-precision columns and the look-back fold loses nothing.
+    let mut aggbuf = bf16.then(|| st.ws.acquire(st.hmax));
+    #[cfg(test)]
+    test_hooks::maybe_panic(p, k, lo, hi);
+    match aggbuf.as_mut() {
+        Some(agg) => {
+            scan_piece_into_bf16(
+                st.dirs,
+                st.staged,
+                st.c,
+                (h, w),
+                st.hmax,
+                p,
+                k,
+                lo,
+                hi,
+                &mut panel.as_u16_mut()[..seglen * hc],
+                &mut agg[..hc],
+                st.ws,
+            );
+            // Publish the zero-carry aggregate (the chunk's last
+            // column) immediately: successors' look-backs can fold over
+            // it while this chunk is still resolving its own carry.
+            st.board.publish_agg(bidx, &agg[..hc]);
+        }
+        None => {
+            scan_piece_into(
+                st.dirs, st.staged, st.c, (h, w), st.hmax, p, k, lo, hi, &mut panel, st.ws,
+            );
+            st.board.publish_agg(bidx, &panel[(seglen - 1) * hc..]);
+        }
+    }
+
+    // Decoupled look-back: walk predecessor blocks back to the nearest
+    // *final* value — a published inclusive PREFIX, block 0 (whose
+    // aggregate is its prefix), or a chain-breaker — then fold forward
+    // over the skipped blocks' aggregates with the exact
+    // `correct_col` recurrence and zero-carry/chunk-reset skips of
+    // the two-phase engine, so the resolved carry is bit-identical to
+    // the sequentially chained one.
+    let mut corr = st.ws.acquire_zeroed(st.hmax);
+    let mut next = st.ws.acquire_zeroed(st.hmax);
+    let mut carry = st.ws.acquire_zeroed(st.hmax);
+    // A nonzero external entry carry means block 0's zero-carry
+    // aggregate is NOT its inclusive prefix (its own job corrects it
+    // from the band carry first) — look-backs reaching block 0 must
+    // then wait for the published PREFIX instead of folding the AGG.
+    let entry_seeded =
+        st.entry.map_or(false, |ec| !ec.column(p)[..hc].iter().all(|&v| v == 0.0));
+    let mut active = false;
+    if si == 0 {
+        if let Some(ec) = st.entry {
+            // Band entry: the previous band's corrected last column
+            // seeds this block exactly as an earlier segment's carry
+            // would — the reference's all-zero skip applies unchanged.
+            CarrySource::External(ec, p).seed(&mut carry[..hc]);
+            active = !carry[..hc].iter().all(|&v| v == 0.0);
+        }
+    } else {
+        let sbounds = &st.bounds[k];
+        let base = bidx - si; // board index of (p, k, si = 0)
+        let mut t = si - 1;
+        loop {
+            let b = base + t;
+            st.wait_until("a predecessor's published column", |s| {
+                s.board.state(b) >= BLOCK_AGG
+            });
+            let state = st.board.state(b);
+            assert!(state != BLOCK_POISONED, "chained scan: predecessor chunk panicked");
+            if state == BLOCK_PREFIX {
+                st.board.read_prefix(b, &mut carry[..hc]);
+                break;
+            }
+            let (tlo, thi) = sbounds[t];
+            if chain_broken(tlo, thi, chunk) {
+                // A chunk reset inside the block: any incoming carry
+                // dies before its last column, so prefix == aggregate
+                // no matter what precedes it (seeded bands included).
+                st.board.read_agg(b, &mut carry[..hc]);
+                break;
+            }
+            if t == 0 {
+                if entry_seeded {
+                    st.wait_until("the first block's band-corrected prefix", |s| {
+                        s.board.state(b) >= BLOCK_PREFIX
+                    });
+                    assert!(
+                        st.board.state(b) != BLOCK_POISONED,
+                        "chained scan: predecessor chunk panicked"
+                    );
+                    st.board.read_prefix(b, &mut carry[..hc]);
+                } else {
+                    // No entry carry: block 0's aggregate IS its prefix.
+                    st.board.read_agg(b, &mut carry[..hc]);
+                }
+                break;
+            }
+            t -= 1;
+        }
+        let mut agg = st.ws.acquire(st.hmax);
+        for u in t + 1..si {
+            let (ulo, uhi) = sbounds[u];
+            let b = base + u;
+            assert!(
+                st.board.state(b) != BLOCK_POISONED,
+                "chained scan: predecessor chunk panicked"
+            );
+            st.board.read_agg(b, &mut agg[..hc]);
+            if carry[..hc].iter().all(|&v| v == 0.0) {
+                // Zero incoming carry: block u needed no correction, so
+                // its prefix is its aggregate (the reference
+                // decomposition's skip — keeps even -0.0 pixels
+                // bit-identical).
+                carry[..hc].copy_from_slice(&agg[..hc]);
+                continue;
+            }
+            // The carry is the full corrected value of column ulo - 1
+            // (phase 1 scanned from zero there), so it seeds the linear
+            // correction directly — the same association
+            // [`correct_segment`] walks, minus the panel adds.
+            corr[..hc].copy_from_slice(&carry[..hc]);
+            let mut died = false;
+            for gi in ulo..uhi {
+                if gi % chunk == 0 {
+                    died = true;
+                    break;
+                }
+                simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
+                std::mem::swap(&mut corr, &mut next);
+            }
+            if died {
+                carry[..hc].copy_from_slice(&agg[..hc]);
+            } else {
+                // prefix_u = agg_u + corr(last column): the identical
+                // f32 add [`drain_dir_fused`] performs on the panel's
+                // last column.
+                for ((cv, &av), &co) in
+                    carry[..hc].iter_mut().zip(&agg[..hc]).zip(&corr[..hc])
+                {
+                    *cv = av + co;
+                }
+            }
+        }
+        active = !carry[..hc].iter().all(|&v| v == 0.0);
+    }
+
+    // Fold the resolved carry into the job-local panel while it is
+    // still cache-hot — exactly the two-pass correction arithmetic
+    // (`phase1 + corr`, dying at chunk resets; bf16 panels decode, add
+    // in f32, and re-encode per element).
+    if active {
+        match aggbuf.as_mut() {
+            Some(_) => correct_segment_bf16(
+                hc,
+                chunk,
+                lo,
+                hi,
+                taps,
+                &carry,
+                &mut corr,
+                &mut next,
+                &mut panel.as_u16_mut()[..seglen * hc],
+            ),
+            None => correct_segment(
+                hc, chunk, lo, hi, taps, &carry, &mut corr, &mut next, &mut panel,
+            ),
+        }
+    }
+
+    // Publish the inclusive prefix (the corrected last column) BEFORE
+    // the merge-order gate: successors' look-backs terminate here even
+    // while this chunk is queued behind the previous direction's
+    // drains.
+    match aggbuf.as_mut() {
+        Some(agg) => {
+            if active {
+                // Decode the corrected bf16 last column; an uncorrected
+                // chunk republishes its exact f32 aggregate instead
+                // (prefix == aggregate, bit for bit, as in f32 mode).
+                let last = &panel.as_u16()[(seglen - 1) * hc..seglen * hc];
+                for (o, &v) in agg[..hc].iter_mut().zip(last) {
+                    *o = bf16_widen(v);
+                }
+            }
+            st.board.publish_prefix(bidx, &agg[..hc]);
+        }
+        None => st.board.publish_prefix(bidx, &panel[(seglen - 1) * hc..]),
+    }
+
+    // Merged passes: direction k's contributions land on the shared
+    // output plane only after every direction-(k-1) chunk of the same
+    // plane has drained — the fixed k = 0..4 merge order the serial
+    // reference accumulates in.
+    let ndirs = st.dirs.len();
+    if k > 0 {
+        let want = st.bounds[k - 1].len();
+        let gate = p * ndirs + (k - 1);
+        st.wait_until("the previous direction's drains", |s| {
+            s.drained[gate].load(Ordering::Acquire) >= want
+        });
+    }
+
+    // Pure scatter of the already-corrected panel through the shared
+    // epilogue op — no correction work happens under the plane lock.
+    // bf16 panels decode slab-by-slab into an f32 staging slab (leased
+    // before the lock) so the scatter arms stay f32-only.
+    {
+        let mut dec = bf16.then(|| st.ws.acquire(SLAB * hc.max(1)));
+        let gain = st.gain.map(|g| g[p % st.c]);
+        // Epilogue indices: a band call runs ONE direction of a larger
+        // merged pass, so the op selection (assign vs merge vs
+        // merge+gain) must use the pass-global (k, last), not this
+        // call's local ones.
+        let (gk, glast) = st.ep.unwrap_or((k, ndirs - 1));
+        let mut guard = lock_unpoisoned(&st.os_slots[p]);
+        let os: &mut [f32] = &mut guard;
+        let mut j0 = 0;
+        while j0 < seglen {
+            let sw = SLAB.min(seglen - j0);
+            let hs: &[f32] = match dec.as_mut() {
+                Some(dec) => {
+                    let words = &panel.as_u16()[j0 * hc..(j0 + sw) * hc];
+                    for (o, &v) in dec[..sw * hc].iter_mut().zip(words) {
+                        *o = bf16_widen(v);
+                    }
+                    &dec[..sw * hc]
+                }
+                None => &panel[j0 * hc..(j0 + sw) * hc],
+            };
+            drain_scatter(hs, h, w, di.d, lo + j0, sw, hc, os, st.wts, gk, glast, gain);
+            j0 += sw;
+        }
+    }
+    st.drained[p * ndirs + k].fetch_add(1, Ordering::Release);
+}
+
+/// The single-pass chained engine ([`ScanStrategy::Chained`]): the same
+/// (plane, direction, segment) decomposition as the segmented engine,
+/// but each chunk is ONE self-contained job — scan from a zero carry,
+/// publish the aggregate, resolve the true carry by decoupled look-back
+/// over a publication board ([`BlockBoard`]), correct in place while
+/// the panel is L2-hot, publish the inclusive prefix, drain through the
+/// unchanged fused epilogue. What the two-phase engines pay and this
+/// one does not: the global phase rendezvous (barrier) or dependency-
+/// graph machinery (wavefront), the retained-panel array and its extra
+/// DRAM round trip, and the per-piece lease hand-offs.
+///
+/// Bit-exactness: chunk bounds come from the same [`segment_bounds`],
+/// phase-1 arithmetic is the shared [`scan_piece_into`], and the
+/// look-back fold replays the exact `correct_col` recurrence order
+/// with the reference's zero-carry and chunk-reset skips — so the
+/// resolved carry, the corrected panel, and hence every output bit
+/// match `scan_l2r_split` and the segmented engine exactly (validated
+/// bitwise against a two-phase mirror over ~9.4k randomized
+/// geometry/chunk/zero-carry cases before porting, and pinned `==` by
+/// the chained property suite).
+///
+/// Scheduling: jobs are claimed lowest-index-first from a direction-
+/// major (k, p, si) order — a valid topological order of the chain's
+/// dependencies, since block (p, k, si) waits only on (p, k, < si)
+/// (look-back) and (p, k-1, *) (merge-order gate). A blocked chunk
+/// helps by claiming jobs strictly below its own index
+/// ([`CHAIN_BOUND`]), assists the pool's global queue, or spins;
+/// deadlock-freedom follows by induction on the lowest incomplete
+/// index. On a serial pool the claim order degrades to the plain
+/// sequential two-phase order, every wait instantly satisfied.
+/// Band/hand-off options for [`run_engine_chained`] — all `None` for a
+/// whole-axis call (the plain `ScanStrategy::Chained` path). The Tiled
+/// engine sets them to run one direction's band of pieces between two
+/// [`ExternalCarry`] hand-offs; `band`/`entry`/`exit`/`ep` are only
+/// meaningful on a single-direction call (`dirs.len() == 1`).
+#[derive(Default)]
+pub(crate) struct ChainOpts<'a> {
+    /// Run only pieces `[b0, b1)` of the direction's segment list.
+    pub(crate) band: Option<(usize, usize)>,
+    /// Entry carries seeding each plane's first piece (si = 0).
+    pub(crate) entry: Option<&'a ExternalCarry>,
+    /// Receives each plane's corrected last column on return — the next
+    /// band's `entry`.
+    pub(crate) exit: Option<&'a mut ExternalCarry>,
+    /// Pass-global `(direction, last)` epilogue indices.
+    pub(crate) ep: Option<(usize, usize)>,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine_chained(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    segments: usize,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+    prec: Precision,
+    opts: ChainOpts<'_>,
+) -> Tensor {
+    let mut out = out_tensor(out_shape, out_buf);
+    run_engine_chained_into(
+        dirs, staged, wts, gain, out_shape, pool, segments, ws, prec, opts, &mut out.data,
+    );
+    out
+}
+
+/// [`run_engine_chained`] writing into a caller-owned output slice — the
+/// Tiled engine's per-band entry (bands accumulate into ONE shared
+/// output tensor across calls, so the engine cannot own it).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine_chained_into(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    segments: usize,
+    ws: &BufferPool,
+    prec: Precision,
+    opts: ChainOpts<'_>,
+    out_data: &mut [f32],
+) {
+    debug_assert!(
+        opts.band.is_none() && opts.entry.is_none() && opts.exit.is_none() && opts.ep.is_none()
+            || dirs.len() == 1,
+        "chained band options require a single-direction call"
+    );
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = out_shape[0] * c;
+    let hmax = h.max(w);
+    let bounds: Vec<Vec<(usize, usize)>> = dirs
+        .iter()
+        .map(|di| {
+            let b = segment_bounds(di.taps.w, segments);
+            match opts.band {
+                Some((b0, b1)) => b[b0.min(b.len())..b1.min(b.len())].to_vec(),
+                None => b,
+            }
+        })
+        .collect();
+    let seg_off: Vec<usize> = bounds
+        .iter()
+        .scan(0usize, |acc, b| {
+            let o = *acc;
+            *acc += b.len();
+            Some(o)
+        })
+        .collect();
+    let per_plane: usize = bounds.iter().map(|b| b.len()).sum();
+    let total_blocks = nplanes * per_plane;
+    // Publication board payload: one pooled lease holding an
+    // [aggregate | prefix] column pair per block. Every slot range is
+    // fully written before its state permits a read, so the lease is
+    // not zero-reset.
+    let mut board_payload = ws.acquire(2 * hmax * total_blocks);
+    let board = BlockBoard::new(&mut board_payload, total_blocks, hmax);
+    // Claim order (k, p, si), direction-major: dependencies of every
+    // job sit at strictly lower indices, and ordering directions
+    // outermost keeps every plane's direction-k chain moving instead of
+    // camping all workers on one plane's serial look-back chain.
+    let mut jobs = Vec::with_capacity(total_blocks);
+    for (k, b) in bounds.iter().enumerate() {
+        for p in 0..nplanes {
+            for (si, &(lo, hi)) in b.iter().enumerate() {
+                jobs.push(ChainJob { p, k, si, lo, hi, bidx: p * per_plane + seg_off[k] + si });
+            }
+        }
+    }
+    let njobs = jobs.len();
+    let st = ChainState {
+        dirs,
+        staged,
+        wts,
+        gain,
+        c,
+        hw: (h, w),
+        hmax,
+        bounds: &bounds,
+        jobs,
+        claimed: (0..njobs).map(|_| AtomicBool::new(false)).collect(),
+        drained: (0..nplanes * dirs.len()).map(|_| AtomicUsize::new(0)).collect(),
+        board,
+        os_slots: out_data.chunks_mut(plane).map(Mutex::new).collect(),
+        poisoned: AtomicBool::new(false),
+        pool: pool.filter(|p| p.threads() > 1 && njobs > 1),
+        ws,
+        prec,
+        entry: opts.entry,
+        ep: opts.ep,
+    };
+    match st.pool {
+        Some(pool) => {
+            // min(threads, jobs) self-scheduling runner tickets; the
+            // caller participates through `try_map`'s own-call helping.
+            let runners: Vec<usize> = (0..pool.threads().min(njobs)).collect();
+            if let Err(e) = pool.try_map(runners, |_| chain_runner(&st)) {
+                std::panic::resume_unwind(e.into_payload());
+            }
+            // A runner ticket drained from inside a blocked job's wait
+            // loop inherits that job's helping bound and may have
+            // exited early; one unbounded mop-up pass completes any
+            // unclaimed tail.
+            chain_runner(&st);
+        }
+        // Serial path: claim in order on the caller thread — every
+        // wait's predecessor has already completed, so the chain
+        // degrades to the plain sequential two-phase order, bit for
+        // bit and with a deterministic lease sequence.
+        None => chain_runner(&st),
+    }
+    if let Some(exit) = opts.exit {
+        // The band's outgoing carry: each plane's corrected last column
+        // — the inclusive prefix of its last block, read through the
+        // same [`CarrySource`] plumbing a successor band seeds from.
+        // Every block reached `BLOCK_PREFIX` above (a panic resumed
+        // before this point), so the reads are immediate.
+        let hc = dirs[0].taps.h;
+        for p in 0..nplanes {
+            CarrySource::Lookback(&st.board, p * per_plane + (per_plane - 1))
+                .seed(&mut exit.column_mut(p)[..hc]);
+        }
+    }
+    drop(st);
+}

@@ -1,0 +1,283 @@
+//! Chunk execution: the zero-/carried-state column scans every strategy
+//! is built from.
+//!
+//! A *chunk* is a contiguous range of canonical columns of one (plane,
+//! direction). [`scan_slab`] advances the recurrence across one SLAB of
+//! columns with an explicit carry column; [`scan_piece_into`] (and its
+//! bf16 twin) runs a whole `[lo, hi)` piece from a zero incoming carry —
+//! the phase-1 body shared by the Segmented, Chained, DirFan, and Tiled
+//! strategies; [`run_plane`] is the plane-parallel pipeline that scans a
+//! full plane sequentially (pack → scan → drain per slab). Carry
+//! *resolution* — turning a zero-carry piece into the true sequential
+//! result — lives in `super::carry`.
+
+use super::drain::drain_scatter;
+use super::pack::{pack_slab, StagedTaps, TapView, SLAB};
+use super::DirInput;
+use crate::scan::simd::{self, bf16_narrow};
+use crate::util::workspace::{BufferPool, Lease};
+
+// ---------------------------------------------------------------------
+// Scan: the unit-stride staged kernel
+// ---------------------------------------------------------------------
+
+// The per-column kernels — the scan recurrence (`up + ct + dn + b` with
+// literal `0.0` boundary terms, exactly `core::scan_plane`'s expression)
+// and the carry-correction fold (the same recurrence without the `b`
+// term, exactly `split::phase2_plane`'s association) — live in
+// [`super::simd`] as `scan_col` / `correct_col`: a pinned scalar
+// reference plus runtime-dispatched AVX2/NEON lane kernels that are
+// bit-identical to it. The engine calls them through the dispatcher so
+// every strategy path picks up the active kernel and tap precision.
+
+/// Scan one slab of canonical columns. `carry` holds the previous
+/// slab's last column on entry and this slab's last column on return —
+/// the "shared-memory" column handed across slab boundaries. Chunk
+/// resets (`gi % chunk == 0`) substitute the zero column, exactly like
+/// the reference's `hprev` reset.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scan_slab(
+    hc: usize,
+    i0: usize,
+    sw: usize,
+    chunk: usize,
+    b: &[f32],
+    taps: TapView,
+    zeros: &[f32],
+    carry: &mut [f32],
+    hs: &mut [f32],
+) {
+    for i in 0..sw {
+        let gi = i0 + i;
+        let col = i * hc;
+        let (done, rest) = hs.split_at_mut(col);
+        let cur = &mut rest[..hc];
+        let prev: &[f32] = if gi % chunk == 0 {
+            &zeros[..hc]
+        } else if i == 0 {
+            &carry[..hc]
+        } else {
+            &done[col - hc..]
+        };
+        simd::scan_col(prev, &b[col..col + hc], taps.col(gi, hc), cur);
+    }
+    carry[..hc].copy_from_slice(&hs[(sw - 1) * hc..sw * hc]);
+}
+
+// ---------------------------------------------------------------------
+// Per-job scratch + block sizing
+// ---------------------------------------------------------------------
+
+/// Per-job scratch: the b and h column slabs, the carry column, and the
+/// zero column used at chunk resets. One per pool job, reused across
+/// every plane (and direction) the job owns. Leased from the workspace:
+/// the slabs are fully overwritten before every read, the carry/zeros
+/// columns must start zero (the reference semantics), so only those two
+/// are zero-reset.
+pub(crate) struct FusedScratch<'w> {
+    pub(crate) b: Lease<'w>,
+    pub(crate) h: Lease<'w>,
+    pub(crate) carry: Lease<'w>,
+    pub(crate) zeros: Lease<'w>,
+}
+
+impl<'w> FusedScratch<'w> {
+    pub(crate) fn new(hmax: usize, ws: &'w BufferPool) -> FusedScratch<'w> {
+        FusedScratch {
+            b: ws.acquire(SLAB * hmax),
+            h: ws.acquire(SLAB * hmax),
+            carry: ws.acquire_zeroed(hmax),
+            zeros: ws.acquire_zeroed(hmax),
+        }
+    }
+}
+
+/// Number of plane-blocks to submit for `nplanes` planes: about two
+/// blocks per worker for load balance, never more blocks than planes.
+/// This is the "one kernel launch" fix: job count scales with the pool,
+/// not with N·C. Shared with `Proj::apply`'s block dispatch so the
+/// blocks-per-worker policy has one source of truth.
+pub(crate) fn plane_blocks(nplanes: usize, threads: usize) -> usize {
+    nplanes.min((2 * threads).max(1))
+}
+
+// ---------------------------------------------------------------------
+// Segment-parallel decomposition (strategy selection lives in plan.rs)
+// ---------------------------------------------------------------------
+
+/// Segment bounds over `wc` canonical columns — the same decomposition
+/// formula as `scan_l2r_split`, so for equal counts the segmented
+/// arithmetic (and therefore every bit) matches the reference.
+pub(crate) fn segment_bounds(wc: usize, segments: usize) -> Vec<(usize, usize)> {
+    let segments = segments.clamp(1, wc.max(1));
+    let seg_len = wc.div_ceil(segments).max(1);
+    (0..wc).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(wc))).collect()
+}
+
+/// The fused per-plane pipeline: for each direction in order, walk the
+/// plane in column slabs — pack `b = lam ⊙ x`, scan, scatter with the
+/// epilogue op (assign / weighted merge / merge + modulate) — so every
+/// staged value is consumed while still L1-hot.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_plane(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<f32>,
+    ni: usize,
+    ci: usize,
+    c: usize,
+    hw: (usize, usize),
+    os: &mut [f32],
+    scratch: &mut FusedScratch<'_>,
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let last = dirs.len() - 1;
+    for (k, di) in dirs.iter().enumerate() {
+        let (hc, wc) = (di.taps.h, di.taps.w);
+        let base = (ni * c + ci) * plane;
+        let xs = &di.x.data[base..base + plane];
+        let ls = &di.lam.data[base..base + plane];
+        let taps = staged[k].panels(ni, ci);
+        let mut i0 = 0;
+        while i0 < wc {
+            let sw = SLAB.min(wc - i0);
+            pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut scratch.b);
+            scan_slab(
+                hc,
+                i0,
+                sw,
+                di.chunk,
+                &scratch.b,
+                taps,
+                &scratch.zeros,
+                &mut scratch.carry,
+                &mut scratch.h,
+            );
+            drain_scatter(&scratch.h, h, w, di.d, i0, sw, hc, os, wts, k, last, gain);
+            i0 += sw;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared phase bodies + wavefront scheduling (phase 2 as a per-plane
+// continuation)
+// ---------------------------------------------------------------------
+
+/// Phase 1 of one (plane, direction, segment) piece: pack and
+/// unit-stride-scan columns `[lo, hi)` from a zero incoming carry into
+/// `buf` (column-major, `(hi - lo) * hc`). The one shared phase-1 body
+/// — the barrier engine calls it on preallocated panel slices, the
+/// wavefront engine on owned piece buffers — so the two schedules
+/// cannot drift apart arithmetically.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scan_piece_into(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    p: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    buf: &mut [f32],
+    ws: &BufferPool,
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let di = &dirs[k];
+    let hc = di.taps.h;
+    let base = p * plane;
+    let xs = &di.x.data[base..base + plane];
+    let ls = &di.lam.data[base..base + plane];
+    let taps = staged[k].panels(p / c, p % c);
+    // The pack slab is fully overwritten per slab; the carry must start
+    // zero (a piece scans from a zero incoming carry and READS the carry
+    // on its first column when `lo` is off a chunk boundary), and the
+    // reset column must stay zero.
+    let mut b = ws.acquire(SLAB * hmax);
+    let mut carry = ws.acquire_zeroed(hmax);
+    let zeros = ws.acquire_zeroed(hmax);
+    let mut i0 = lo;
+    while i0 < hi {
+        let sw = SLAB.min(hi - i0);
+        pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
+        let o = (i0 - lo) * hc;
+        scan_slab(
+            hc,
+            i0,
+            sw,
+            di.chunk,
+            &b,
+            taps,
+            &zeros,
+            &mut carry,
+            &mut buf[o..o + sw * hc],
+        );
+        i0 += sw;
+    }
+}
+
+/// [`scan_piece_into`] retaining the piece as packed bf16 words — the
+/// chained engine's reduced-precision panel path. The recurrence is
+/// untouched: every slab scans in f32 through the very same
+/// [`scan_slab`] (the f32 carry column crosses slab boundaries exactly
+/// as in f32 mode), and only the *store* into the retained panel
+/// narrows, via round-to-nearest-even. `agg` receives the piece's last
+/// column at full f32 precision — the publication-board aggregate, so
+/// look-back folds lose nothing to the panel narrowing.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scan_piece_into_bf16(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    p: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    panel: &mut [u16],
+    agg: &mut [f32],
+    ws: &BufferPool,
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let di = &dirs[k];
+    let hc = di.taps.h;
+    let base = p * plane;
+    let xs = &di.x.data[base..base + plane];
+    let ls = &di.lam.data[base..base + plane];
+    let taps = staged[k].panels(p / c, p % c);
+    let mut b = ws.acquire(SLAB * hmax);
+    // f32 staging slab the scan lands in before narrowing; fully
+    // overwritten per slab.
+    let mut hslab = ws.acquire(SLAB * hmax);
+    let mut carry = ws.acquire_zeroed(hmax);
+    let zeros = ws.acquire_zeroed(hmax);
+    let mut i0 = lo;
+    while i0 < hi {
+        let sw = SLAB.min(hi - i0);
+        pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
+        scan_slab(
+            hc,
+            i0,
+            sw,
+            di.chunk,
+            &b,
+            taps,
+            &zeros,
+            &mut carry,
+            &mut hslab[..sw * hc],
+        );
+        let o = (i0 - lo) * hc;
+        for (dst, &v) in panel[o..o + sw * hc].iter_mut().zip(&hslab[..sw * hc]) {
+            *dst = bf16_narrow(v);
+        }
+        i0 += sw;
+    }
+    agg.copy_from_slice(&carry[..agg.len()]);
+}

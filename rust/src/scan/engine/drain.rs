@@ -1,0 +1,704 @@
+//! Epilogue drain: scatter scanned/corrected columns back to spatial
+//! planes, and the two-phase (segmented) engines built on it.
+//!
+//! [`drain_scatter`] is the one epilogue-op dispatch every strategy
+//! shares (assign / weighted merge / merge + modulate);
+//! [`drain_dir_fused`] walks a direction's zero-carry pieces computing
+//! the carry correction on the fly, seeded from an explicit
+//! [`CarrySource`] — `Zero` for a pass that starts at the true origin
+//! of the scan axis, `External` when a tiled band (or, later, a remote
+//! shard) hands in the corrected carry of everything before it. The
+//! barrier and wavefront segmented engines at the bottom compose these
+//! with the phase-1 bodies from `super::chunk`.
+
+use super::carry::{correct_segment, CarrySource};
+use super::chunk::{scan_piece_into, segment_bounds};
+use super::pack::{StagedTaps, TapView, SLAB};
+#[cfg(test)]
+use super::test_hooks;
+use super::{out_tensor, DirInput, Phase2};
+use crate::scan::direction::Direction;
+use crate::scan::simd::{self, EpOp};
+use crate::tensor::Tensor;
+use crate::util::workspace::{BufferPool, Lease};
+use crate::util::{lock_unpoisoned, GraphBuilder, NodeId, ThreadPool};
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------
+// Scatter-back epilogue: inverse orientation + merge + modulation
+// ---------------------------------------------------------------------
+
+/// Drain a scanned slab back to the spatial plane, mapping canonical
+/// (r, i0+i) to its spatial position and applying the epilogue op
+/// (assign, weighted merge, or merge + modulation) per element. This is
+/// the step that deletes the directional intermediates, the separate
+/// accumulation loop, and `output_modulation`'s clone.
+///
+/// The op is a [`EpOp`] value, not a closure: the T2B/B2T arms drain in
+/// contiguous `w`-length runs on *both* sides and dispatch to the batch
+/// lane kernels ([`simd::ep_apply`]), while the L2R/R2L arms read the
+/// slab with stride `hc` and apply the same pinned per-element
+/// expression ([`EpOp::apply`]) scalar — bit-identical either way (a
+/// strided gather was measured not worth the complexity on the row
+/// arms; the column arms are where the epilogue bytes move).
+fn scatter_slab(
+    hs: &[f32],
+    h: usize,
+    w: usize,
+    d: Direction,
+    i0: usize,
+    sw: usize,
+    hc: usize,
+    out: &mut [f32],
+    op: EpOp,
+) {
+    match d {
+        Direction::L2R => {
+            for r in 0..h {
+                let orow = &mut out[r * w + i0..r * w + i0 + sw];
+                for (i, o) in orow.iter_mut().enumerate() {
+                    *o = op.apply(*o, hs[i * hc + r]);
+                }
+            }
+        }
+        Direction::R2L => {
+            for r in 0..h {
+                let row = r * w;
+                for i in 0..sw {
+                    let p = row + w - 1 - (i0 + i);
+                    out[p] = op.apply(out[p], hs[i * hc + r]);
+                }
+            }
+        }
+        Direction::T2B => {
+            for i in 0..sw {
+                let row = (i0 + i) * w;
+                let orow = &mut out[row..row + w];
+                let hcol = &hs[i * hc..i * hc + hc];
+                simd::ep_apply(op, orow, &hcol[..w]);
+            }
+        }
+        Direction::B2T => {
+            for i in 0..sw {
+                let row = (h - 1 - (i0 + i)) * w;
+                let orow = &mut out[row..row + w];
+                let hcol = &hs[i * hc..i * hc + hc];
+                simd::ep_apply(op, orow, &hcol[..w]);
+            }
+        }
+    }
+}
+/// The one epilogue-op dispatch every drain site shares: scatter `hs`
+/// back to the spatial plane with the per-element op the pass calls for
+/// — assign (single direction), weighted merge accumulate, or, on the
+/// last direction of a modulated pass, merge + `u ⊙ h` gain. Keeping
+/// this in one place is what keeps the plane, barrier-segmented,
+/// wavefront, and dirfan drains bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drain_scatter(
+    hs: &[f32],
+    h: usize,
+    w: usize,
+    d: Direction,
+    i0: usize,
+    sw: usize,
+    hc: usize,
+    os: &mut [f32],
+    wts: Option<&[f32; 4]>,
+    k: usize,
+    last: usize,
+    gain: Option<f32>,
+) {
+    let op = match wts {
+        None => EpOp::Assign,
+        Some(wts) => {
+            let wt = wts[k];
+            match gain.filter(|_| k == last) {
+                None => EpOp::Merge(wt),
+                Some(g) => EpOp::MergeGain(wt, g),
+            }
+        }
+    };
+    scatter_slab(hs, h, w, d, i0, sw, hc, os, op);
+}
+
+/// Per-drain scratch: the correction ping-pong columns, the tracked
+/// inter-segment carry, and the slab used to stage corrected columns
+/// before they scatter. O(SLAB·max(H, W)) — the correction never needs
+/// panel-sized scratch. The staging slab is leased lazily on the first
+/// corrected column, so drains that never stage (DirFan's s = 1 runs,
+/// zero-carry planes) pay only the three small columns. The three
+/// columns are zero-reset (the zero-carry skip reads them); the staging
+/// slab is fully overwritten before every read, so it is not.
+pub(crate) struct DrainScratch<'w> {
+    pub(crate) ws: &'w BufferPool,
+    pub(crate) corr: Lease<'w>,
+    pub(crate) next: Lease<'w>,
+    pub(crate) carry: Lease<'w>,
+    pub(crate) colb: Option<Lease<'w>>,
+}
+
+impl<'w> DrainScratch<'w> {
+    pub(crate) fn new(hmax: usize, ws: &'w BufferPool) -> DrainScratch<'w> {
+        DrainScratch {
+            ws,
+            corr: ws.acquire_zeroed(hmax),
+            next: ws.acquire_zeroed(hmax),
+            carry: ws.acquire_zeroed(hmax),
+            colb: None,
+        }
+    }
+}
+
+/// The fused-correction drain for one (plane, direction): walk the
+/// direction's phase-1 segment pieces in column order, computing the
+/// linear carry correction *on the fly* and scattering `phase1 + corr`
+/// straight through the epilogue op — the retained panel is read once
+/// and written zero extra times (the two-pass reference re-touched the
+/// whole corrected region in place first, then read it all again).
+///
+/// Bit-exactness vs the two-pass order ([`correct_segment`] +
+/// [`drain_scatter`], and hence `split::phase2_plane`): the correction
+/// recurrence `corr_i = w_i · corr_{i-1}` never reads panel values, so
+/// fusing changes no operand of any float op — `phase1 + corr` is the
+/// same f32 add whether it lands in the panel or in the drain, the
+/// all-zero carry skip is identical (eliding the correction keeps even
+/// -0.0 pixels bit-identical), and the carry handed to segment k+1 is
+/// the same corrected last column, tracked out of band instead of
+/// re-read from the panel. Chunk resets kill the correction exactly
+/// where the two-pass loop `break`s (including a reset landing on the
+/// segment's first column). Validated bitwise against the two-pass
+/// mirror in C over ~9k randomized geometry/chunk/zero-carry cases
+/// before porting, and pinned `==` by the schedule-matrix tests.
+///
+/// Corrected columns are staged through a [`SLAB`]-column buffer so the
+/// scatter keeps the slab pipeline's write locality; columns with no
+/// live correction (segment 0, a zero carry, or past a chunk reset —
+/// once dead, a correction never revives within a segment) scatter
+/// straight from the piece with no staging copy.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drain_dir_fused(
+    pieces: &[&[f32]],
+    bounds: &[(usize, usize)],
+    hc: usize,
+    chunk: usize,
+    taps: TapView<'_>,
+    hw: (usize, usize),
+    d: Direction,
+    os: &mut [f32],
+    wts: Option<&[f32; 4]>,
+    k: usize,
+    last: usize,
+    gain: Option<f32>,
+    entry: CarrySource<'_>,
+    s: &mut DrainScratch<'_>,
+) {
+    let (h, w) = hw;
+    // Entry carry: where the drain's carry chain *starts*. `Zero` is the
+    // whole-row case (nothing seeded, segment 0 is already exact); any
+    // other source seeds the carry column so segment 0 corrects exactly
+    // like a later segment would — the seam the Tiled engine hands its
+    // `External` band carries through.
+    let seeded = entry.seed(&mut s.carry[..hc]);
+    for (si, (&(lo, hi), piece)) in bounds.iter().zip(pieces).enumerate() {
+        let seglen = hi - lo;
+        // Incoming carry: the previous segment's (corrected) last
+        // column. The reference decomposition skips all-zero carries;
+        // matching the skip keeps even -0.0 pixels bit-identical.
+        let mut active = (si > 0 || seeded) && !s.carry[..hc].iter().all(|&v| v == 0.0);
+        if active {
+            s.corr[..hc].copy_from_slice(&s.carry[..hc]);
+        }
+        let mut j = 0;
+        while j < seglen {
+            if !active {
+                // Everything from here to the segment end is already
+                // exact (zero incoming carry, or a chunk reset killed
+                // the correction — it can never re-activate within a
+                // segment): scatter straight from the piece, no
+                // staging copy at all.
+                drain_scatter(
+                    &piece[j * hc..seglen * hc],
+                    h,
+                    w,
+                    d,
+                    lo + j,
+                    seglen - j,
+                    hc,
+                    os,
+                    wts,
+                    k,
+                    last,
+                    gain,
+                );
+                s.carry[..hc].copy_from_slice(&piece[(seglen - 1) * hc..seglen * hc]);
+                break;
+            }
+            let sw = SLAB.min(seglen - j);
+            if s.colb.as_ref().map_or(true, |cb| cb.len() < SLAB * hc) {
+                // Staging slab: every column is fully written before the
+                // scatter reads it, so a plain (non-zeroed) lease.
+                s.colb = Some(s.ws.acquire(SLAB * hc));
+            }
+            let colb = s.colb.as_mut().unwrap();
+            for i in 0..sw {
+                let gi = lo + j + i;
+                let src = &piece[(j + i) * hc..(j + i + 1) * hc];
+                if active && gi % chunk == 0 {
+                    // Chunk reset: the carry dies here and phase 1 was
+                    // already exact from this column on.
+                    active = false;
+                }
+                let dst = &mut colb[i * hc..(i + 1) * hc];
+                if active {
+                    simd::correct_col(&s.corr[..hc], taps.col(gi, hc), &mut s.next[..hc]);
+                    for ((o, &p1), &cv) in dst.iter_mut().zip(src).zip(&s.next[..hc]) {
+                        *o = p1 + cv;
+                    }
+                    std::mem::swap(&mut s.corr, &mut s.next);
+                } else {
+                    dst.copy_from_slice(src);
+                }
+            }
+            drain_scatter(&colb[..], h, w, d, lo + j, sw, hc, os, wts, k, last, gain);
+            if j + sw == seglen {
+                // The corrected last column *is* segment k+1's carry.
+                s.carry[..hc].copy_from_slice(&colb[(sw - 1) * hc..sw * hc]);
+            }
+            j += sw;
+        }
+    }
+}
+
+/// [`drain_dir_fused`] over the wavefront engine's per-segment piece
+/// slots: the body of one per-direction drain continuation. Takes the
+/// direction's pieces out of their hand-off slots (the graph's
+/// dependency edges ordered the accesses, so the locks are uncontended;
+/// poisoned slots are recovered — see the module notes on panic
+/// hygiene) and runs the fused-correction drain for direction `k` of
+/// plane `p`.
+#[allow(clippy::too_many_arguments)]
+fn drain_dir_pieces_fused(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    bounds: &[Vec<(usize, usize)>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<f32>,
+    p: usize,
+    k: usize,
+    c: usize,
+    hw: (usize, usize),
+    slots: &[Mutex<Option<Lease<'_>>>],
+    os: &mut [f32],
+    scratch: &mut DrainScratch<'_>,
+) {
+    let di = &dirs[k];
+    let hc = di.taps.h;
+    let taps = staged[k].panels(p / c, p % c);
+    // Taking the leases out of the slots moves ownership here: they
+    // return to the workspace pool when `bufs` drops, on every exit
+    // path — including the early return below.
+    let bufs: Vec<Option<Lease<'_>>> =
+        slots.iter().map(|s| lock_unpoisoned(s).take()).collect();
+    // A missing or wrong-size piece means its phase-1 job panicked
+    // before handing the panel over; `run_graph` already holds that
+    // payload — skip quietly so the caller reports the real panic, not
+    // a confusing secondary index/Poison error.
+    if bufs
+        .iter()
+        .zip(&bounds[k])
+        .any(|(b, &(lo, hi))| b.as_ref().map_or(true, |b| b.len() != (hi - lo) * hc))
+    {
+        return;
+    }
+    let pieces: Vec<&[f32]> = bufs.iter().map(|b| b.as_deref().unwrap()).collect();
+    drain_dir_fused(
+        &pieces,
+        &bounds[k],
+        hc,
+        di.chunk,
+        taps,
+        hw,
+        di.d,
+        os,
+        wts,
+        k,
+        dirs.len() - 1,
+        gain,
+        CarrySource::Zero,
+        scratch,
+    );
+}
+
+/// Phase 2 of one plane off per-segment panel pieces, in the retired
+/// PR 4 *two-pass* form: chain the true carry across segment boundaries
+/// (the corrected last column of segment k *is* segment k+1's carry),
+/// add the linear correction scan **in place** (a full read-modify-write
+/// of every corrected panel column), then drain each corrected segment
+/// through the fused scatter epilogue in the same k = 0..dirs order as
+/// the plane path. Kept as the bit/bench reference the fused-correction
+/// drain ([`drain_dir_fused`]) is pinned `==` against and measured
+/// over (every element sees the same values in the same order, so the
+/// bits match).
+#[allow(clippy::too_many_arguments)]
+fn correct_and_drain_pieces(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    bounds: &[Vec<(usize, usize)>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<f32>,
+    p: usize,
+    c: usize,
+    hw: (usize, usize),
+    hmax: usize,
+    slots: &[Mutex<Option<Lease<'_>>>],
+    os: &mut [f32],
+    ws: &BufferPool,
+) {
+    let (h, w) = hw;
+    let last = dirs.len() - 1;
+    // Zero-reset: the zero-carry skip below reads `carry` before any
+    // write, and the correction columns keep fresh-`vec!` semantics.
+    let mut corr = ws.acquire_zeroed(hmax);
+    let mut next = ws.acquire_zeroed(hmax);
+    let mut carry = ws.acquire_zeroed(hmax);
+    let mut slot = 0usize;
+    for (k, di) in dirs.iter().enumerate() {
+        let hc = di.taps.h;
+        let taps = staged[k].panels(p / c, p % c);
+        for (si, &(lo, hi)) in bounds[k].iter().enumerate() {
+            // Taking the lease moves ownership here; it returns to the
+            // pool when `buf` drops, even on the early return below.
+            let taken = lock_unpoisoned(&slots[slot]).take();
+            slot += 1;
+            // A missing or wrong-size piece means its phase-1 job
+            // panicked before handing the panel over; `run_graph`
+            // already holds that payload — bail quietly so the caller
+            // reports the real panic, not a secondary index/Poison
+            // error.
+            let Some(mut buf) = taken else { return };
+            if buf.len() != (hi - lo) * hc {
+                return;
+            }
+            // Incoming carry: the previous segment's (corrected) last
+            // column. The reference decomposition skips all-zero
+            // carries; matching the skip keeps even -0.0 pixels
+            // bit-identical.
+            if si > 0 && !carry[..hc].iter().all(|&v| v == 0.0) {
+                correct_segment(
+                    hc, di.chunk, lo, hi, taps, &carry, &mut corr, &mut next, &mut buf,
+                );
+            }
+            carry[..hc].copy_from_slice(&buf[(hi - lo - 1) * hc..(hi - lo) * hc]);
+            drain_scatter(&buf, h, w, di.d, lo, hi - lo, hc, os, wts, k, last, gain);
+        }
+    }
+}
+
+/// The segment-parallel engine (the fused §5.1 decomposition).
+///
+/// Phase 1 fans one job per (plane, direction, segment) — each packs and
+/// unit-stride-scans its column range from a zero incoming carry with
+/// the very same slab pipeline as the plane path, but retains the
+/// canonical columns in a per-plane panel instead of scattering them
+/// (chunk resets still fire on global column indices inside
+/// [`scan_slab`]). Phase 2 fans one job per plane: for each direction it
+/// chains the true carry across segment boundaries — the corrected last
+/// column of segment k *is* segment k+1's carry — with the linear
+/// correction scan (`correct_col` in [`super::simd`]) computed **on the fly inside the
+/// scatter drain** ([`drain_dir_fused`]): the retained panel is read
+/// once and never re-written, and the corrected values flow straight
+/// through the fused scatter epilogue (inverse orientation + weighted
+/// merge + modulation), so the directional output, merge, and
+/// modulation intermediates still never exist — and neither does a
+/// corrected copy of the panel.
+///
+/// Arithmetic per element is exactly `scan_l2r_split`'s two-phase order
+/// (pinned `==` by tests); only the memory layout and the epilogue
+/// fusion differ. The retained panels cost
+/// O(nplanes · Σ_dirs hc·wc) floats — bounded in practice because the
+/// planner only picks this path when `nplanes < threads`.
+///
+/// `phase2` selects the schedule: the two-`map` barrier below, or one
+/// of the dependency-graph schedules of
+/// [`run_engine_segmented_wave`] — same jobs, same bits, no global
+/// rendezvous between phases.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine_segmented(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    segments: usize,
+    phase2: Phase2,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+) -> Tensor {
+    if phase2 != Phase2::Barrier {
+        if let Some(pool) = pool {
+            return run_engine_segmented_wave(
+                dirs,
+                staged,
+                wts,
+                gain,
+                out_shape,
+                pool,
+                segments,
+                phase2 == Phase2::WaveDir,
+                ws,
+                out_buf,
+            );
+        }
+    }
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = out_shape[0] * c;
+    let hmax = h.max(w);
+    let bounds: Vec<Vec<(usize, usize)>> =
+        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
+
+    // Retained phase-1 canonical columns: per plane, the directions'
+    // hc x wc column-major panels concatenated in direction order.
+    let dir_off: Vec<usize> = dirs
+        .iter()
+        .scan(0usize, |acc, di| {
+            let o = *acc;
+            *acc += di.taps.h * di.taps.w;
+            Some(o)
+        })
+        .collect();
+    let per_plane: usize = dirs.iter().map(|di| di.taps.h * di.taps.w).sum();
+    // Zero-reset like the fresh `vec!` it replaces: phase 1 overwrites
+    // every panel element, but keeping the fresh-allocation semantics
+    // makes the panels' contents independent of pool history by
+    // construction (bit-exactness needs no full-coverage argument).
+    let mut hbufs = ws.acquire_zeroed(nplanes * per_plane);
+
+    // Phase 1: every (plane, direction, segment) scans independently
+    // from a zero carry into its disjoint panel range.
+    {
+        let mut jobs: Vec<(usize, usize, usize, usize, &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = &mut hbufs;
+        for p in 0..nplanes {
+            for (k, di) in dirs.iter().enumerate() {
+                for &(lo, hi) in &bounds[k] {
+                    let (buf, tail) =
+                        std::mem::take(&mut rest).split_at_mut((hi - lo) * di.taps.h);
+                    rest = tail;
+                    jobs.push((p, k, lo, hi, buf));
+                }
+            }
+        }
+        let scan_piece = |(p, k, lo, hi, buf): (usize, usize, usize, usize, &mut [f32])| {
+            scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, buf, ws);
+        };
+        match pool {
+            Some(pool) if pool.threads() > 1 && jobs.len() > 1 => {
+                pool.map(jobs, scan_piece);
+            }
+            _ => jobs.into_iter().for_each(scan_piece),
+        }
+    }
+
+    // Phase 2: per plane, drain each direction's retained panel through
+    // the fused correction + scatter epilogue in the same k = 0..dirs
+    // order as the plane path. The panel is read-only from here on —
+    // the correction never lands back in it.
+    let mut out = out_tensor(out_shape, out_buf);
+    let gain_for = |ci: usize| gain.map(|g| g[ci]);
+    let last = dirs.len() - 1;
+    let planes: Vec<(usize, &mut [f32], &[f32])> = out
+        .data
+        .chunks_mut(plane)
+        .zip(hbufs.chunks(per_plane))
+        .enumerate()
+        .map(|(p, (os, pb))| (p, os, pb))
+        .collect();
+    let correct_and_drain = |(p, os, pb): (usize, &mut [f32], &[f32])| {
+        let mut scratch = DrainScratch::new(hmax, ws);
+        for (k, di) in dirs.iter().enumerate() {
+            let (hc, wc) = (di.taps.h, di.taps.w);
+            let taps = staged[k].panels(p / c, p % c);
+            let panel = &pb[dir_off[k]..dir_off[k] + hc * wc];
+            let pieces: Vec<&[f32]> =
+                bounds[k].iter().map(|&(lo, hi)| &panel[lo * hc..hi * hc]).collect();
+            drain_dir_fused(
+                &pieces,
+                &bounds[k],
+                hc,
+                di.chunk,
+                taps,
+                (h, w),
+                di.d,
+                os,
+                wts,
+                k,
+                last,
+                gain_for(p % c),
+                CarrySource::Zero,
+                &mut scratch,
+            );
+        }
+    };
+    match pool {
+        Some(pool) if pool.threads() > 1 && planes.len() > 1 => {
+            pool.map(planes, correct_and_drain);
+        }
+        _ => planes.into_iter().for_each(correct_and_drain),
+    }
+    out
+}
+
+/// The wavefront-scheduled segmented engine: the same (plane,
+/// direction, segment) phase-1 jobs as the barrier engine, submitted as
+/// a dependency graph ([`ThreadPool::run_graph`]) so no global
+/// rendezvous exists anywhere in the pass. Two continuation shapes:
+///
+/// * `per_dir = true` (production): **one drain continuation per
+///   (plane, direction)** — 4 per plane on a merged pass — running the
+///   fused-correction drain ([`drain_dir_pieces_fused`]). Direction k's
+///   drain depends on its *own* phase-1 pieces plus the same plane's
+///   direction-(k-1) drain (the chain preserves the k = 0..4 merge
+///   accumulation order on the shared output plane), so it overlaps
+///   both other planes' phase 1 and the same plane's later directions'
+///   scans.
+/// * `per_dir = false`: the PR 4 schedule — one continuation per plane
+///   over all directions, running the two-pass correct-then-drain
+///   ([`correct_and_drain_pieces`]). Kept as the bit/bench reference
+///   for the fused drain.
+///
+/// Phase-1 pieces hand their panels to the continuations through
+/// per-(plane, direction, segment) slots, and the per-direction drains
+/// share their output plane through a per-plane slot; the graph's
+/// dependency edges are what order the accesses, so the locks are
+/// uncontended (and recovered if poisoned — a panicking job must
+/// surface as the collected graph payload, not a `PoisonError`).
+/// Arithmetic is untouched — output is exact `==` with the barrier
+/// engine (and hence `scan_l2r_split`), pinned by tests.
+#[allow(clippy::too_many_arguments)]
+fn run_engine_segmented_wave(
+    dirs: &[DirInput<'_>],
+    staged: &[StagedTaps<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: &ThreadPool,
+    segments: usize,
+    per_dir: bool,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+) -> Tensor {
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = out_shape[0] * c;
+    let hmax = h.max(w);
+    let bounds: Vec<Vec<(usize, usize)>> =
+        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
+    let per_plane_slots: usize = bounds.iter().map(|b| b.len()).sum();
+    // Piece hand-off slots hold *leased* panels: whatever is still in a
+    // slot when this vec drops (e.g. drains skipped after a phase-1
+    // panic) returns to the workspace pool instead of leaking.
+    let slots: Vec<Mutex<Option<Lease<'_>>>> =
+        (0..nplanes * per_plane_slots).map(|_| Mutex::new(None)).collect();
+
+    let mut out = out_tensor(out_shape, out_buf);
+    let conts = if per_dir { dirs.len() } else { 1 };
+    let mut graph = GraphBuilder::with_capacity(nplanes * (per_plane_slots + conts));
+    let bounds_ref = &bounds;
+    let slots_ref = &slots;
+    // One phase-1 piece node per (plane, direction, segment), identical
+    // under both continuation shapes (the schedules cannot drift apart
+    // in what phase 1 computes).
+    macro_rules! submit_pieces {
+        ($ids:ident, $p:expr, $k:expr, $slot:ident) => {
+            for &(lo, hi) in &bounds_ref[$k] {
+                let dst = &slots_ref[$slot];
+                $slot += 1;
+                let (p, k) = ($p, $k);
+                let hc = dirs[k].taps.h;
+                $ids.push(graph.submit(move || {
+                    // Lease before the (test-only) fault hook so an
+                    // injected panic unwinds while scratch is out on
+                    // lease — the leak test covers the window that
+                    // matters. Zeroed like the fresh `vec!` it replaces.
+                    let mut buf = ws.acquire_zeroed((hi - lo) * hc);
+                    #[cfg(test)]
+                    test_hooks::maybe_panic(p, k, lo, hi);
+                    scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, &mut buf, ws);
+                    *lock_unpoisoned(dst) = Some(buf);
+                }));
+            }
+        };
+    }
+    if per_dir {
+        // Per-plane output + scratch hand-off slots: the per-direction
+        // drain chain of a plane shares its output plane and one drain
+        // scratch through a single slot, ordered by the drain-(k-1) →
+        // drain-k graph edges (one scratch allocation per plane, as in
+        // the barrier path).
+        let os_slots: Vec<Mutex<(&mut [f32], DrainScratch<'_>)>> = out
+            .data
+            .chunks_mut(plane)
+            .map(|os| Mutex::new((os, DrainScratch::new(hmax, ws))))
+            .collect();
+        for (p, os_slot) in os_slots.iter().enumerate() {
+            let gv = gain.map(|g| g[p % c]);
+            let mut prev_drain: Option<NodeId> = None;
+            let mut slot = p * per_plane_slots;
+            for (k, _) in dirs.iter().enumerate() {
+                let mut deps = Vec::with_capacity(bounds[k].len() + 1);
+                let dir_slot0 = slot;
+                submit_pieces!(deps, p, k, slot);
+                if let Some(prev) = prev_drain {
+                    deps.push(prev);
+                }
+                let dir_slots = &slots_ref[dir_slot0..slot];
+                prev_drain = Some(graph.submit_after(&deps, move || {
+                    let mut guard = lock_unpoisoned(os_slot);
+                    let (os, scratch) = &mut *guard;
+                    drain_dir_pieces_fused(
+                        dirs, staged, bounds_ref, wts, gv, p, k, c, (h, w), dir_slots,
+                        os, scratch,
+                    );
+                }));
+            }
+        }
+        if let Err(e) = pool.run_graph(graph) {
+            std::panic::resume_unwind(e.into_payload());
+        }
+    } else {
+        for (p, os) in out.data.chunks_mut(plane).enumerate() {
+            let mut piece_ids = Vec::with_capacity(per_plane_slots);
+            let mut slot = p * per_plane_slots;
+            for (k, _) in dirs.iter().enumerate() {
+                submit_pieces!(piece_ids, p, k, slot);
+            }
+            let plane_slots = &slots_ref[p * per_plane_slots..(p + 1) * per_plane_slots];
+            let gv = gain.map(|g| g[p % c]);
+            graph.submit_after(&piece_ids, move || {
+                correct_and_drain_pieces(
+                    dirs,
+                    staged,
+                    bounds_ref,
+                    wts,
+                    gv,
+                    p,
+                    c,
+                    (h, w),
+                    hmax,
+                    plane_slots,
+                    os,
+                    ws,
+                );
+            });
+        }
+        if let Err(e) = pool.run_graph(graph) {
+            std::panic::resume_unwind(e.into_payload());
+        }
+    }
+    out
+}

@@ -1,0 +1,965 @@
+//! The scan engine: one set of chunk/carry/drain primitives behind
+//! every fused entry point and every execution strategy.
+//!
+//! Module map (the former monolithic `scan/fused.rs`, split along the
+//! carry algebra):
+//!
+//! * [`pack`] — canonical staging: tap panel transposes ([`StagedTaps`]
+//!   / [`TapView`], whole-axis or per-band), the `b = lam ⊙ x` slab
+//!   pack, and the spatial↔canonical index maps ([`hw_src`]).
+//! * [`chunk`] — chunk execution: the slab scan ([`scan_slab`]), the
+//!   zero-carry piece bodies ([`scan_piece_into`] and its bf16 twin),
+//!   the plane pipeline ([`run_plane`]), and the shared
+//!   [`segment_bounds`] decomposition.
+//! * [`carry`] — carry resolution: the [`CarrySource`] contract
+//!   (`Zero` / `Resolved` / `Lookback` / `External`), the shared
+//!   correction body ([`carry::correct_segment`]), the serializable
+//!   [`ExternalCarry`] band/shard hand-off, and the single-pass chained
+//!   engine ([`run_engine_chained`]).
+//! * [`drain`] — the epilogue: the one scatter/merge/modulate dispatch
+//!   ([`drain_scatter`]), the fused-correction drain
+//!   ([`drain_dir_fused`], seeded from a [`CarrySource`]), and the
+//!   barrier/wavefront segmented engines.
+//! * [`tiled`] — the streaming row-band executor
+//!   ([`run_engine_tiled`]): any inner strategy run band by band along
+//!   the scan axis between [`ExternalCarry`] hand-offs, with per-band
+//!   workspace leases so peak memory is bounded by one band.
+//!
+//! Every strategy — plane-parallel, segmented (barrier or wavefront),
+//! chained, the direction fan, and the tiled stream — is a composition
+//! of those primitives, and all of them are pinned bit-exact (`==`)
+//! against the `scan_l2r` / `scan_l2r_split` references by the test
+//! suite in this module. This file owns what is shared: the input
+//! descriptors, strategy selection ([`run_engine`]), and the public
+//! `fused_*` entry points.
+
+use super::direction::{merge_weights, Direction, DIRECTIONS};
+use super::plan::{self, ScanGeometry, ScanStrategy};
+use super::simd::{self, Precision};
+use super::taps::Taps;
+use crate::tensor::Tensor;
+use crate::util::workspace::BufferPool;
+use crate::util::ThreadPool;
+
+pub(crate) mod carry;
+pub(crate) mod chunk;
+pub(crate) mod drain;
+pub(crate) mod pack;
+pub(crate) mod tiled;
+
+#[cfg(test)]
+mod tests;
+
+pub use carry::ExternalCarry;
+pub(crate) use carry::{run_engine_chained, CarrySource, ChainOpts};
+pub(crate) use chunk::{plane_blocks, segment_bounds, scan_piece_into, scan_slab, FusedScratch, run_plane};
+pub(crate) use drain::{drain_dir_fused, drain_scatter, run_engine_segmented, DrainScratch};
+pub(crate) use pack::{hw_src, pack_slab, Orientation, StagedTaps, TapView, SLAB};
+pub(crate) use tiled::run_engine_tiled;
+
+/// How a segmented run's phase 2 (carry correction + epilogue drain) is
+/// scheduled and expressed. All three produce identical bits (pinned by
+/// tests); they differ in memory traffic and overlap.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Phase2 {
+    /// Global two-`map` barrier between the phases; correction fused
+    /// into the drain.
+    Barrier,
+    /// The PR 4 schedule: one continuation per plane running the
+    /// *two-pass* correct-then-drain ([`correct_and_drain_pieces`]) —
+    /// it re-touches the retained panel in place before the drain
+    /// re-reads it. Kept as the bit/bench reference the fused drain is
+    /// measured against (`BENCH_scan`'s "two-pass" rows).
+    WavePlane,
+    /// Per-direction wavefront continuations (4 per plane) with the
+    /// correction fused into the scatter drain — the production
+    /// schedule behind every `wavefront` plan.
+    WaveDir,
+}
+
+/// How an engine run decomposes its work across the pool. The engine
+/// holds no selection heuristics of its own: `Auto` defers to the
+/// planner ([`plan::plan_scan`]), `Forced` carries a caller- or
+/// test-chosen plan verbatim.
+#[derive(Clone, Copy)]
+pub(crate) enum ExecSpec {
+    /// Consult [`plan::plan_scan`] from the pass geometry + pool state.
+    Auto,
+    /// Execute exactly this strategy (segment counts clamped per
+    /// direction to its canonical width) with the given phase-2
+    /// schedule — the bit-identity testing / bench / plan-carrying
+    /// hook.
+    Forced(ScanStrategy, Phase2),
+}
+
+// ---------------------------------------------------------------------
+// Input descriptors + engine core
+// ---------------------------------------------------------------------
+
+/// One direction's inputs to the fused engine.
+pub(crate) struct DirInput<'a> {
+    pub(crate) d: Direction,
+    pub(crate) taps: &'a Taps,
+    pub(crate) x: &'a Tensor,
+    pub(crate) lam: &'a Tensor,
+    pub(crate) layout: Orientation,
+    /// Effective chunk width in canonical columns.
+    pub(crate) chunk: usize,
+}
+
+fn effective_chunk(wc: usize, kchunk: usize) -> usize {
+    let chunk = if kchunk == 0 { wc } else { kchunk };
+    assert!(wc % chunk == 0, "kchunk={chunk} must divide W={wc}");
+    chunk
+}
+
+fn validate_dir(x: &Tensor, taps: &Taps, lam: &Tensor, d: Direction) {
+    assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
+    assert_eq!(x.shape, lam.shape, "lam shape must match x");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (hc, wc) = hw_src(h, w, d);
+    assert_eq!((taps.n, taps.h, taps.w), (n, hc, wc), "taps geometry mismatch");
+    assert!(taps.cw == 1 || taps.cw == c, "Cw must be 1 or C");
+}
+
+/// Materialize the engine's output tensor: the caller-recycled buffer
+/// (must be zeroed and exactly `numel` long — the coordinator's
+/// reply-recycling path, see [`fused_scan_l2r_pool_ws_into`]) or a
+/// fresh zeroed allocation. The recycled buffer only replaces
+/// `Tensor::zeros`, so every drain writes the same bits either way.
+pub(crate) fn out_tensor(shape: &[usize], recycled: Option<Vec<f32>>) -> Tensor {
+    match recycled {
+        Some(buf) => {
+            debug_assert!(buf.iter().all(|&v| v == 0.0), "recycled output must be zeroed");
+            Tensor::from_vec(shape, buf)
+        }
+        None => Tensor::zeros(shape),
+    }
+}
+
+/// Drive the fused pipeline over all (N·C) planes — serially, in
+/// block-granular plane jobs on the pool, or (when the plan asks for
+/// it) through the segment-parallel / direction-fan decompositions,
+/// with or without wavefront continuations. `out_buf`, when given, is a
+/// recycled zeroed buffer the output tensor is built over instead of a
+/// fresh allocation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine(
+    dirs: &[DirInput<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    exec: ExecSpec,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+    prec: Option<Precision>,
+) -> Tensor {
+    let (n, c) = (out_shape[0], out_shape[1]);
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let plane = h * w;
+    let nplanes = n * c;
+    if nplanes == 0 || plane == 0 {
+        return out_tensor(out_shape, out_buf);
+    }
+    let hmax = h.max(w);
+    let prec = prec.unwrap_or_else(simd::precision);
+    let (strategy, phase2) = match exec {
+        ExecSpec::Forced(s, p2) => (s, p2),
+        ExecSpec::Auto => match pool {
+            Some(pool) => {
+                let geom = ScanGeometry {
+                    nplanes,
+                    ndirs: dirs.len(),
+                    wc_min: dirs.iter().map(|di| di.taps.w).min().unwrap_or(0),
+                    plane_px: plane,
+                    hmax,
+                };
+                let p = plan::plan_scan(&geom, pool.load(), pool.threads());
+                // Bounded-memory guard: when the chosen plan's footprint
+                // would blow past the workspace cap, stream it as
+                // row-band tiles of the same inner strategy instead
+                // (exact same bits, peak leases bounded by one band).
+                let tap_blocks =
+                    dirs.iter().map(|di| di.taps.n * di.taps.cw).max().unwrap_or(1);
+                let p = plan::maybe_tile(
+                    p,
+                    &geom,
+                    pool.threads(),
+                    tap_blocks,
+                    ws.cap_bytes(),
+                    prec == Precision::Bf16,
+                );
+                // A wavefront plan means the per-direction continuation
+                // schedule; the PR 4 per-plane two-pass schedule is
+                // test/bench-only.
+                let p2 = if p.wavefront { Phase2::WaveDir } else { Phase2::Barrier };
+                (p.strategy, p2)
+            }
+            None => (ScanStrategy::PlanePar, Phase2::Barrier),
+        },
+    };
+    // The tiled stream stages taps and leases panels band by band —
+    // dispatch before the whole-axis staging below so a bounded-memory
+    // run never holds full-geometry panels.
+    if let ScanStrategy::Tiled { band_rows, inner } = strategy {
+        return run_engine_tiled(
+            dirs, wts, gain, out_shape, pool, band_rows, inner, ws, out_buf, prec,
+        );
+    }
+    let staged: Vec<StagedTaps<'_>> =
+        dirs.iter().map(|d| StagedTaps::build(d.taps, pool, ws, prec)).collect();
+    let segments = match strategy {
+        ScanStrategy::PlanePar => None,
+        ScanStrategy::Segmented { s } => Some(s.max(1)),
+        // The chained strategy runs its own single-pass engine: there
+        // are no phases, so the phase-2 schedule does not apply.
+        ScanStrategy::Chained { s } => {
+            return run_engine_chained(
+                dirs,
+                &staged,
+                wts,
+                gain,
+                out_shape,
+                pool,
+                s.max(1),
+                ws,
+                out_buf,
+                prec,
+                ChainOpts::default(),
+            );
+        }
+        // The direction fan is the s = 1 degenerate segmented run: one
+        // full-width zero-carry (i.e. exact) phase-1 job per (plane,
+        // direction), no correction, fixed-order merge drain. A
+        // single-direction pass has nothing to fan: plane path.
+        ScanStrategy::DirFan => (dirs.len() > 1).then_some(1),
+        ScanStrategy::Tiled { .. } => unreachable!("tiled dispatched above"),
+    };
+    if let Some(segments) = segments {
+        return run_engine_segmented(
+            dirs, &staged, wts, gain, out_shape, pool, segments, phase2, ws, out_buf,
+        );
+    }
+    let mut out = out_tensor(out_shape, out_buf);
+    let gain_for = |ci: usize| gain.map(|g| g[ci]);
+
+    match pool {
+        Some(pool) if nplanes > 1 && pool.threads() > 1 => {
+            let nblocks = plane_blocks(nplanes, pool.threads());
+            let per_block = nplanes.div_ceil(nblocks);
+            let jobs: Vec<(usize, &mut [f32])> =
+                out.data.chunks_mut(per_block * plane).enumerate().collect();
+            pool.map(jobs, |(bi, block)| {
+                let mut scratch = FusedScratch::new(hmax, ws);
+                for (j, os) in block.chunks_mut(plane).enumerate() {
+                    let p = bi * per_block + j;
+                    run_plane(
+                        dirs,
+                        &staged,
+                        wts,
+                        gain_for(p % c),
+                        p / c,
+                        p % c,
+                        c,
+                        (h, w),
+                        os,
+                        &mut scratch,
+                    );
+                }
+            });
+        }
+        _ => {
+            let mut scratch = FusedScratch::new(hmax, ws);
+            for (p, os) in out.data.chunks_mut(plane).enumerate() {
+                run_plane(
+                    dirs,
+                    &staged,
+                    wts,
+                    gain_for(p % c),
+                    p / c,
+                    p % c,
+                    c,
+                    (h, w),
+                    os,
+                    &mut scratch,
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Test-only fault injection for the wavefront phase-1 pieces and the
+/// chained chunk jobs: lets the panic-propagation suites force exactly
+/// one (plane, dir, lo, hi) piece to panic and assert the payload
+/// surfaces as the collected graph/map error (not a `PoisonError`, a
+/// secondary index panic, or a hung look-back waiter).
+#[cfg(test)]
+pub(crate) mod test_hooks {
+    use std::sync::Mutex;
+
+    pub(crate) static PANIC_PIECE: Mutex<Option<(usize, usize, usize, usize)>> =
+        Mutex::new(None);
+
+    pub(crate) fn maybe_panic(p: usize, k: usize, lo: usize, hi: usize) {
+        let hit = crate::util::lock_unpoisoned(&PANIC_PIECE)
+            .map_or(false, |t| t == (p, k, lo, hi));
+        if hit {
+            panic!("injected phase-1 panic at ({p},{k},{lo},{hi})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------
+
+/// Fused directional scan (serial): bit-identical to
+/// `scan_dir(x, taps, lam, d, kchunk)` with zero canonical copies.
+pub fn fused_scan_dir(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, None, BufferPool::global(), None)
+}
+
+/// [`fused_scan_dir`] with block-granular plane jobs on `pool`.
+pub fn fused_scan_dir_pool(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), BufferPool::global(), None)
+}
+
+/// [`fused_scan_dir_pool`] drawing all per-call scratch from an explicit
+/// workspace pool instead of the process-global one — the serving entry:
+/// the coordinator owns one pool so its hit/miss counters are isolated
+/// and pre-warmable per bucket.
+pub fn fused_scan_dir_pool_ws(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), ws, None)
+}
+
+fn fused_scan_dir_inner(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    pool: Option<&ThreadPool>,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+) -> Tensor {
+    validate_dir(x, taps, lam, d);
+    if x.data.is_empty() {
+        return out_tensor(&x.shape, out_buf);
+    }
+    let chunk = effective_chunk(taps.w, kchunk);
+    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
+    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws, out_buf, None)
+}
+
+/// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
+/// phase-2 schedule. The pooled entry points normally consult the
+/// planner ([`plan::plan_scan`]); this hook exists for tests, benches,
+/// and plan-carrying callers that already decided.
+#[allow(clippy::too_many_arguments)]
+fn fused_scan_dir_forced(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    strategy: ScanStrategy,
+    phase2: Phase2,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_forced_ws(
+        x,
+        taps,
+        lam,
+        d,
+        kchunk,
+        strategy,
+        phase2,
+        pool,
+        BufferPool::global(),
+        None,
+    )
+}
+
+/// [`fused_scan_dir_forced`] over an explicit workspace — the hook the
+/// pooled-vs-fresh bit-exactness and zero-miss tests drive per strategy.
+/// `prec` overrides the panel/tap storage precision *for this call
+/// only* (tests must never flip the process-global precision override:
+/// concurrently running `==` suites would observe it).
+#[allow(clippy::too_many_arguments)]
+fn fused_scan_dir_forced_ws(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    strategy: ScanStrategy,
+    phase2: Phase2,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+    prec: Option<Precision>,
+) -> Tensor {
+    validate_dir(x, taps, lam, d);
+    if x.data.is_empty() {
+        return Tensor::zeros(&x.shape);
+    }
+    let chunk = effective_chunk(taps.w, kchunk);
+    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
+    run_engine(
+        &dirs,
+        None,
+        None,
+        &x.shape,
+        Some(pool),
+        ExecSpec::Forced(strategy, phase2),
+        ws,
+        None,
+        prec,
+    )
+}
+
+/// [`fused_scan_dir_pool`] with a *forced* segment-parallel
+/// decomposition: each plane's canonical columns are scanned as
+/// `segments` zero-carry segments and carry-corrected — bit-identical
+/// (exact `==`, pinned by tests) to running
+/// [`super::split::scan_l2r_split`] on the canonically reoriented
+/// tensors with the same count. Runs the barrier schedule; see
+/// [`fused_scan_dir_seg_wave`] for the wavefront twin.
+pub fn fused_scan_dir_seg(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::Barrier, pool)
+}
+
+/// [`fused_scan_dir_seg`] under per-direction wavefront scheduling:
+/// each (plane, direction)'s fused correction + epilogue drain runs as
+/// its own continuation of that direction's phase-1 segment jobs
+/// instead of behind a global barrier. Scheduling only — exact `==`
+/// with [`fused_scan_dir_seg`] (and the `scan_l2r_split` reference) at
+/// the same count, pinned by tests.
+pub fn fused_scan_dir_seg_wave(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WaveDir, pool)
+}
+
+/// [`fused_scan_dir_seg_wave`] under the retired PR 4 schedule: one
+/// continuation per plane running the *two-pass* correct-then-drain
+/// (the retained panel is corrected in place, then re-read by the
+/// drain). Exact `==` with both other schedules — kept as the bit and
+/// bench reference the fused-correction drain is measured against.
+pub fn fused_scan_dir_seg_wave_twopass(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WavePlane, pool)
+}
+
+/// [`fused_scan_dir_seg`] executed by the single-pass chained engine
+/// ([`ScanStrategy::Chained`], [`run_engine_chained`]): one decoupled
+/// look-back job per (plane, direction, segment), no phase barrier, no
+/// retained panels. Exact `==` with [`fused_scan_dir_seg`] (and hence
+/// `scan_l2r_split`) at the same count, pinned by tests.
+pub fn fused_scan_dir_chained(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    d: Direction,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Chained { s: segments };
+    // The chained engine has no phase 2; the schedule arg is inert.
+    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::Barrier, pool)
+}
+
+/// [`fused_scan_dir_chained`] for the canonical left-to-right scan.
+pub fn fused_scan_l2r_chained(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_chained(x, taps, lam, Direction::L2R, kchunk, segments, pool)
+}
+
+/// [`fused_scan_dir_seg`] for the canonical left-to-right scan: the
+/// segmented twin of [`fused_scan_l2r_pool`], exact `==` with
+/// [`super::split::scan_l2r_split`] at the same count.
+pub fn fused_scan_l2r_seg(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_seg(x, taps, lam, Direction::L2R, kchunk, segments, pool)
+}
+
+/// [`fused_scan_l2r_seg`] under wavefront scheduling (see
+/// [`fused_scan_dir_seg_wave`]).
+pub fn fused_scan_l2r_seg_wave(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_seg_wave(x, taps, lam, Direction::L2R, kchunk, segments, pool)
+}
+
+/// [`fused_scan_l2r_seg_wave`] under the PR 4 two-pass schedule (see
+/// [`fused_scan_dir_seg_wave_twopass`]).
+pub fn fused_scan_l2r_seg_wave_twopass(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_seg_wave_twopass(x, taps, lam, Direction::L2R, kchunk, segments, pool)
+}
+
+/// Fused canonical scan (serial): bit-identical to `scan_l2r`.
+pub fn fused_scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    fused_scan_dir(x, taps, lam, Direction::L2R, kchunk)
+}
+
+/// [`fused_scan_l2r`] with block-granular plane jobs on `pool`.
+pub fn fused_scan_l2r_pool(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_scan_dir_pool(x, taps, lam, Direction::L2R, kchunk, pool)
+}
+
+/// [`fused_scan_l2r_pool`] over an explicit workspace pool (see
+/// [`fused_scan_dir_pool_ws`]) — what the coordinator's CPU batch path
+/// calls so steady-state serving of a warm bucket allocates nothing in
+/// the scan hot path.
+pub fn fused_scan_l2r_pool_ws(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
+    fused_scan_dir_pool_ws(x, taps, lam, Direction::L2R, kchunk, pool, ws)
+}
+
+/// [`fused_scan_l2r_pool_ws`] writing its output into a caller-recycled
+/// buffer — zeroed, exactly `x` elements long, typically
+/// [`BufferPool::take_zeroed`] from the same workspace. This is the
+/// coordinator's reply-recycling hook: with the output buffer taken
+/// from (and, via the client's `ReplyLease` drop, donated back to) the
+/// request workspace, a warm bucket's hot path performs no heap
+/// allocation at all, reply tensor included. Bit-identical to the plain
+/// entry — the buffer only replaces the fresh `Tensor::zeros`.
+pub fn fused_scan_l2r_pool_ws_into(
+    x: &Tensor,
+    taps: &Taps,
+    lam: &Tensor,
+    kchunk: usize,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+    out_buf: Vec<f32>,
+) -> Tensor {
+    fused_scan_dir_inner(x, taps, lam, Direction::L2R, kchunk, Some(pool), ws, Some(out_buf))
+}
+
+/// [`fused_scan_l2r`] over the process-wide shared pool.
+pub fn fused_scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
+    fused_scan_l2r_pool(x, taps, lam, kchunk, ThreadPool::global())
+}
+
+fn merged_dirs<'a>(
+    x: &'a Tensor,
+    taps: [&'a Taps; 4],
+    lam: &'a Tensor,
+    kchunk: usize,
+) -> Vec<DirInput<'a>> {
+    DIRECTIONS
+        .iter()
+        .enumerate()
+        .map(|(k, &d)| {
+            validate_dir(x, taps[k], lam, d);
+            DirInput {
+                d,
+                taps: taps[k],
+                x,
+                lam,
+                layout: Orientation::Spatial,
+                chunk: effective_chunk(taps[k].w, kchunk),
+            }
+        })
+        .collect()
+}
+
+/// Fused four-direction merge (serial): bit-identical to the reference
+/// [`super::direction::merged_4dir_ref`], with the pack, all four scans,
+/// and the weighted merge in one engine pass.
+pub fn fused_merged_4dir(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(
+        &dirs,
+        Some(&wts),
+        None,
+        &x.shape,
+        None,
+        ExecSpec::Auto,
+        BufferPool::global(),
+        None,
+        None,
+    )
+}
+
+/// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
+pub fn fused_merged_4dir_pool(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(
+        &dirs,
+        Some(&wts),
+        None,
+        &x.shape,
+        Some(pool),
+        ExecSpec::Auto,
+        BufferPool::global(),
+        None,
+        None,
+    )
+}
+
+/// [`fused_merged_4dir_pool`] under an explicit strategy + phase-2
+/// schedule (the forced hook behind the seg / fan variants below).
+#[allow(clippy::too_many_arguments)]
+fn fused_merged_4dir_forced(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    strategy: ScanStrategy,
+    phase2: Phase2,
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_merged_4dir_forced_ws(
+        x,
+        taps,
+        lam,
+        merge_logits,
+        kchunk,
+        strategy,
+        phase2,
+        pool,
+        BufferPool::global(),
+        None,
+    )
+}
+
+/// [`fused_merged_4dir_forced`] over an explicit workspace — the merged
+/// twin of [`fused_scan_dir_forced_ws`] for the pooled-vs-fresh tests,
+/// with the same per-call `prec` override.
+#[allow(clippy::too_many_arguments)]
+fn fused_merged_4dir_forced_ws(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    strategy: ScanStrategy,
+    phase2: Phase2,
+    pool: &ThreadPool,
+    ws: &BufferPool,
+    prec: Option<Precision>,
+) -> Tensor {
+    let dirs = merged_dirs(x, taps, lam, kchunk);
+    let wts = merge_weights(merge_logits);
+    run_engine(
+        &dirs,
+        Some(&wts),
+        None,
+        &x.shape,
+        Some(pool),
+        ExecSpec::Forced(strategy, phase2),
+        ws,
+        None,
+        prec,
+    )
+}
+
+/// [`fused_merged_4dir_pool`] with a *forced* segment count per
+/// direction (clamped to each direction's canonical width) — the
+/// segmented twin of the merged pass for tests and benches. Segment
+/// arithmetic follows the `scan_l2r_split` decomposition per direction;
+/// merge order and the epilogue fusion are unchanged. Barrier schedule;
+/// [`fused_merged_4dir_seg_wave`] is the wavefront twin.
+pub fn fused_merged_4dir_seg(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::Barrier, pool)
+}
+
+/// [`fused_merged_4dir_seg`] under per-direction wavefront scheduling:
+/// 4 drain continuations per plane, each depending on its own
+/// direction's phase-1 jobs plus the previous direction's drain (the
+/// chain preserves the k = 0..4 merge order), with the correction fused
+/// into the merge drain. Exact `==` with the barrier twin, pinned by
+/// tests.
+pub fn fused_merged_4dir_seg_wave(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WaveDir, pool)
+}
+
+/// [`fused_merged_4dir_seg_wave`] under the retired PR 4 schedule: one
+/// two-pass correct-then-drain continuation per plane (see
+/// [`fused_scan_dir_seg_wave_twopass`]). Exact `==` with both other
+/// schedules; the bench comparison row for the fused-correction drain.
+pub fn fused_merged_4dir_seg_wave_twopass(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Segmented { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WavePlane, pool)
+}
+
+/// [`fused_merged_4dir_seg`] executed by the single-pass chained engine
+/// (see [`fused_scan_dir_chained`]): per-direction chunk chains with
+/// decoupled look-back, the k = 0..4 merge order preserved by the
+/// per-plane drain gates. Exact `==` with the barrier twin, pinned by
+/// tests.
+pub fn fused_merged_4dir_chained(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    segments: usize,
+    pool: &ThreadPool,
+) -> Tensor {
+    let strategy = ScanStrategy::Chained { s: segments };
+    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::Barrier, pool)
+}
+
+/// [`fused_merged_4dir_pool`] with the *forced* per-direction phase-1
+/// fan-out ([`ScanStrategy::DirFan`]): one zero-carry full-width scan
+/// job per (plane, direction), drained through the fixed-k-order merge
+/// epilogue per plane — bit-identical (exact `==`, pinned by tests) to
+/// [`fused_merged_4dir`] and the serial reference, ×4 the parallel
+/// width. `wavefront` runs each (plane, direction)'s drain as its own
+/// continuation of that direction's scan, chained to keep the merge
+/// order — direction k's drain overlaps direction k+1's scan; `false`
+/// uses the two-phase barrier schedule.
+pub fn fused_merged_4dir_fan(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+    wavefront: bool,
+    pool: &ThreadPool,
+) -> Tensor {
+    let phase2 = if wavefront { Phase2::WaveDir } else { Phase2::Barrier };
+    fused_merged_4dir_forced(
+        x,
+        taps,
+        lam,
+        merge_logits,
+        kchunk,
+        ScanStrategy::DirFan,
+        phase2,
+        pool,
+    )
+}
+
+/// [`fused_merged_4dir`] over the process-wide shared pool.
+pub fn fused_merged_4dir_par(
+    x: &Tensor,
+    taps: [&Taps; 4],
+    lam: &Tensor,
+    merge_logits: &[f32; 4],
+    kchunk: usize,
+) -> Tensor {
+    fused_merged_4dir_pool(x, taps, lam, merge_logits, kchunk, ThreadPool::global())
+}
+
+/// The compact unit's scan stage, fused end to end: per-direction
+/// activations `xcs[k]` / `lamcs[k]` are already in canonical layout
+/// (they come out of the unit's 1x1 projections), taps are canonical as
+/// always, and the epilogue folds the merge *and* the `u ⊙ h` output
+/// modulation into the scatter — the unit never materializes a
+/// directional output, the merged tensor, or the modulation clone.
+/// Output is the spatial (N, Cp, H, W) modulated merge, bit-identical to
+/// the reference composition in `CompactGspnUnit::forward_ref` whenever
+/// the planner ([`plan::plan_scan`]) picks a bit-exact strategy —
+/// `PlanePar` or, in the mid-occupancy regime, `DirFan` (the
+/// per-direction fan reassociates nothing). Only a low-occupancy
+/// forward wide enough to segment (canonical widths ≥ 2 ·
+/// [`plan::MIN_SEG_COLS`] = 128) follows the `scan_l2r_split`
+/// segmented arithmetic instead.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_merged_canonical(
+    xcs: [&Tensor; 4],
+    taps: [&Taps; 4],
+    lamcs: [&Tensor; 4],
+    merge_logits: &[f32; 4],
+    u: &[f32],
+    kchunk: usize,
+    out_shape: &[usize],
+    pool: &ThreadPool,
+) -> Tensor {
+    fused_merged_canonical_ws(
+        xcs,
+        taps,
+        lamcs,
+        merge_logits,
+        u,
+        kchunk,
+        out_shape,
+        pool,
+        BufferPool::global(),
+    )
+}
+
+/// [`fused_merged_canonical`] over an explicit workspace pool — what
+/// [`CompactGspnUnit::forward_ws`](super::compact::CompactGspnUnit::forward_ws)
+/// threads through so a serving coordinator's unit forwards draw from
+/// its pre-warmed per-bucket pool.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_merged_canonical_ws(
+    xcs: [&Tensor; 4],
+    taps: [&Taps; 4],
+    lamcs: [&Tensor; 4],
+    merge_logits: &[f32; 4],
+    u: &[f32],
+    kchunk: usize,
+    out_shape: &[usize],
+    pool: &ThreadPool,
+    ws: &BufferPool,
+) -> Tensor {
+    let dirs: Vec<DirInput<'_>> = DIRECTIONS
+        .iter()
+        .enumerate()
+        .map(|(k, &d)| {
+            let (xc, lamc) = (xcs[k], lamcs[k]);
+            assert_eq!(xc.rank(), 4, "xc must be (N, C, Hc, Wc)");
+            assert_eq!(xc.shape, lamc.shape, "lamc shape must match xc");
+            assert_eq!(
+                (taps[k].n, taps[k].h, taps[k].w),
+                (xc.shape[0], xc.shape[2], xc.shape[3]),
+                "taps geometry mismatch"
+            );
+            assert!(
+                taps[k].cw == 1 || taps[k].cw == xc.shape[1],
+                "Cw must be 1 or C"
+            );
+            DirInput {
+                d,
+                taps: taps[k],
+                x: xc,
+                lam: lamc,
+                layout: Orientation::Canonical,
+                chunk: effective_chunk(taps[k].w, kchunk),
+            }
+        })
+        .collect();
+    assert_eq!(u.len(), out_shape[1], "gain length must be C");
+    let wts = merge_weights(merge_logits);
+    run_engine(
+        &dirs,
+        Some(&wts),
+        Some(u),
+        out_shape,
+        Some(pool),
+        ExecSpec::Auto,
+        ws,
+        None,
+        None,
+    )
+}

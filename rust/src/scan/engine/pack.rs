@@ -1,0 +1,377 @@
+//! Pack layer: tap staging and the `b = lam ⊙ x` column-slab gather.
+//!
+//! Everything upstream of the scan recurrence lives here — the
+//! column-major re-staging of the tridiagonal taps ([`StagedTaps`],
+//! full-pass or per-band), the orientation-folding gather that builds
+//! each SLAB-column block of `b = lam ⊙ x` ([`pack_slab`]), and the
+//! direction → source-dims mapping ([`hw_src`]). The staged panels are
+//! read through [`TapView`], which carries the first staged canonical
+//! column so band stagings (the `Tiled` strategy holds only one band of
+//! columns at a time) index with the same *global* column numbers the
+//! rest of the engine uses — an untiled staging is simply `col0 == 0`.
+
+use crate::scan::direction::Direction;
+use crate::scan::simd::{self, bf16_narrow, Precision, TapCols, TapPanels};
+use crate::scan::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
+use crate::util::workspace::{BufferPool, Lease};
+use crate::util::ThreadPool;
+
+/// Canonical columns staged per slab. 32 columns keep the b/h slabs
+/// L1-resident up to H = 256 while amortizing the slab loop overhead;
+/// measured best among {8, 16, 32} at both acceptance geometries.
+/// Crate-visible so the planner's workspace-footprint model
+/// ([`plan::workspace_footprint`]) sizes slab leases with the engine's
+/// real constant.
+pub(crate) const SLAB: usize = 32;
+
+// ---------------------------------------------------------------------
+// Taps staging: full column-major panels, shared across channel planes
+// ---------------------------------------------------------------------
+
+/// Transpose columns `lo..hi` of an `h x w` row-major plane into an
+/// `(hi-lo)`-columns-of-`h` panel (`dst[(i-lo)*h + r] = src[r*w + i]`)
+/// through an 8x8 tile buffer, so reads are contiguous and writes flush
+/// in contiguous 8-float runs. A full staging is `lo == 0, hi == w`; the
+/// tiled strategy stages one column band at a time. Pure data movement —
+/// no arithmetic, so banding cannot move a bit.
+fn transpose_plane_cols(src: &[f32], h: usize, w: usize, lo: usize, hi: usize, dst: &mut [f32]) {
+    const T: usize = 8;
+    let mut tmp = [0.0f32; T * T];
+    let mut r0 = 0;
+    while r0 + T <= h {
+        let mut i0 = lo;
+        while i0 + T <= hi {
+            for r in 0..T {
+                let row = &src[(r0 + r) * w + i0..(r0 + r) * w + i0 + T];
+                for i in 0..T {
+                    tmp[i * T + r] = row[i];
+                }
+            }
+            for i in 0..T {
+                dst[(i0 + i - lo) * h + r0..(i0 + i - lo) * h + r0 + T]
+                    .copy_from_slice(&tmp[i * T..i * T + T]);
+            }
+            i0 += T;
+        }
+        while i0 < hi {
+            for r in r0..r0 + T {
+                dst[(i0 - lo) * h + r] = src[r * w + i0];
+            }
+            i0 += 1;
+        }
+        r0 += T;
+    }
+    while r0 < h {
+        for i in lo..hi {
+            dst[(i - lo) * h + r0] = src[r0 * w + i];
+        }
+        r0 += 1;
+    }
+}
+
+/// Narrowing twin of [`transpose_plane_cols`]: the same 8x8 tile walk,
+/// but each store rounds to bf16 through the tile buffer, so the
+/// reduced-precision mode writes its staged panels directly at half
+/// width — no full-width f32 staging temporary ever exists, which is
+/// what actually halves the staged footprint.
+fn transpose_plane_cols_bf16(
+    src: &[f32],
+    h: usize,
+    w: usize,
+    lo: usize,
+    hi: usize,
+    dst: &mut [u16],
+) {
+    const T: usize = 8;
+    let mut tmp = [0.0f32; T * T];
+    let mut r0 = 0;
+    while r0 + T <= h {
+        let mut i0 = lo;
+        while i0 + T <= hi {
+            for r in 0..T {
+                let row = &src[(r0 + r) * w + i0..(r0 + r) * w + i0 + T];
+                for i in 0..T {
+                    tmp[i * T + r] = row[i];
+                }
+            }
+            for i in 0..T {
+                let col = &mut dst[(i0 + i - lo) * h + r0..(i0 + i - lo) * h + r0 + T];
+                for (o, &v) in col.iter_mut().zip(&tmp[i * T..i * T + T]) {
+                    *o = bf16_narrow(v);
+                }
+            }
+            i0 += T;
+        }
+        while i0 < hi {
+            for r in r0..r0 + T {
+                dst[(i0 - lo) * h + r] = bf16_narrow(src[r * w + i0]);
+            }
+            i0 += 1;
+        }
+        r0 += T;
+    }
+    while r0 < h {
+        for i in lo..hi {
+            dst[(i - lo) * h + r0] = bf16_narrow(src[r0 * w + i]);
+        }
+        r0 += 1;
+    }
+}
+
+/// A read handle onto staged tap panels, carrying the first staged
+/// canonical column. The engine always indexes taps by *global* column
+/// number; a band staging holds only columns `[col0, col0 + cols)` and
+/// shifts the index down here, so untiled code (`col0 == 0`) compiles to
+/// exactly the old `TapPanels::col` path.
+#[derive(Clone, Copy)]
+pub(crate) struct TapView<'a> {
+    panels: TapPanels<'a>,
+    col0: usize,
+}
+
+impl<'a> TapView<'a> {
+    /// The three tap columns for global canonical column `j`.
+    #[inline]
+    pub(crate) fn col(self, j: usize, hc: usize) -> TapCols<'a> {
+        self.panels.col(j - self.col0, hc)
+    }
+}
+
+/// Taps of one direction re-staged into column-major panels, shared
+/// read-only across all plane jobs. With the channel-shared weights of
+/// §4.2 (`Cw == 1`) each tap plane is staged once per batch item and
+/// every channel plane reuses it. A *band* staging
+/// ([`StagedTaps::build_band`]) holds only canonical columns
+/// `[lo, hi)` of every block — the `Tiled` strategy's per-band working
+/// set — and its [`TapView`]s translate global column indexes down.
+pub(crate) struct StagedTaps<'w> {
+    /// Layout: per (ni*cw + ci), three `hc x (hi-lo)` column-major
+    /// panels in tap order (up, center, down). Leased from the
+    /// workspace; every element is written by the staging transpose
+    /// before any read, so the lease is not zero-reset. At
+    /// `Precision::Bf16` the panels are bf16 words packed
+    /// two-per-f32-slot ([`Lease::as_u16`]) and the lease is `bf16_len`
+    /// of the f32 size — half the bytes.
+    data: Lease<'w>,
+    cw: usize,
+    /// Staged elements per tap panel: `(hi - lo) * hc`.
+    plane: usize,
+    /// First staged canonical column (0 for a full staging).
+    col0: usize,
+    prec: Precision,
+}
+
+impl<'w> StagedTaps<'w> {
+    pub(crate) fn build(
+        taps: &Taps,
+        pool: Option<&ThreadPool>,
+        ws: &'w BufferPool,
+        prec: Precision,
+    ) -> StagedTaps<'w> {
+        StagedTaps::build_band(taps, pool, ws, prec, 0, taps.w)
+    }
+
+    /// Stage only canonical columns `[lo, hi)` of every tap block — the
+    /// per-band staging of the tiled strategy. Identical bits to the
+    /// corresponding columns of a full staging (the transpose only moves
+    /// data), so a banded pass reads exactly the tap words an untiled
+    /// pass would.
+    pub(crate) fn build_band(
+        taps: &Taps,
+        pool: Option<&ThreadPool>,
+        ws: &'w BufferPool,
+        prec: Precision,
+        lo: usize,
+        hi: usize,
+    ) -> StagedTaps<'w> {
+        let (hc, wc) = (taps.h, taps.w);
+        let hi = hi.min(wc);
+        let lo = lo.min(hi);
+        let src_plane = hc * wc;
+        let plane = (hi - lo) * hc;
+        let blocks = taps.n * taps.cw;
+        match prec {
+            Precision::F32 => {
+                let mut data = ws.acquire(blocks * 3 * plane);
+                let stage_block = |(b, dst): (usize, &mut [f32])| {
+                    let src = &taps.t.data[b * 3 * src_plane..(b + 1) * 3 * src_plane];
+                    for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
+                        transpose_plane_cols(
+                            &src[tap * src_plane..(tap + 1) * src_plane],
+                            hc,
+                            wc,
+                            lo,
+                            hi,
+                            &mut dst[tap * plane..(tap + 1) * plane],
+                        );
+                    }
+                };
+                match pool {
+                    Some(pool) if blocks > 1 && plane >= 1 << 12 => {
+                        let jobs: Vec<(usize, &mut [f32])> =
+                            data.chunks_mut(3 * plane).enumerate().collect();
+                        pool.map(jobs, stage_block);
+                    }
+                    _ => {
+                        for job in data.chunks_mut(3 * plane).enumerate() {
+                            stage_block(job);
+                        }
+                    }
+                }
+                StagedTaps { data, cw: taps.cw, plane, col0: lo, prec }
+            }
+            Precision::Bf16 => {
+                let mut data = ws.acquire(simd::bf16_len(blocks * 3 * plane));
+                let stage_block = |(b, dst): (usize, &mut [u16])| {
+                    let src = &taps.t.data[b * 3 * src_plane..(b + 1) * 3 * src_plane];
+                    for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
+                        transpose_plane_cols_bf16(
+                            &src[tap * src_plane..(tap + 1) * src_plane],
+                            hc,
+                            wc,
+                            lo,
+                            hi,
+                            &mut dst[tap * plane..(tap + 1) * plane],
+                        );
+                    }
+                };
+                let words = &mut data.as_u16_mut()[..blocks * 3 * plane];
+                match pool {
+                    Some(pool) if blocks > 1 && plane >= 1 << 12 => {
+                        let jobs: Vec<(usize, &mut [u16])> =
+                            words.chunks_mut(3 * plane).enumerate().collect();
+                        pool.map(jobs, stage_block);
+                    }
+                    _ => {
+                        for job in words.chunks_mut(3 * plane).enumerate() {
+                            stage_block(job);
+                        }
+                    }
+                }
+                StagedTaps { data, cw: taps.cw, plane, col0: lo, prec }
+            }
+        }
+    }
+
+    /// The three staged panels for channel `ci` of batch item `ni`
+    /// (clamped for shared mode), at the staging precision, viewed
+    /// through the staging's column offset.
+    #[inline]
+    pub(crate) fn panels(&self, ni: usize, ci: usize) -> TapView<'_> {
+        let c = if self.cw == 1 { 0 } else { ci };
+        let base = (ni * self.cw + c) * 3 * self.plane;
+        let panels = match self.prec {
+            Precision::F32 => {
+                let s = &self.data[base..base + 3 * self.plane];
+                TapPanels::F32 {
+                    tu: &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
+                    tc: &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
+                    td: &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
+                }
+            }
+            Precision::Bf16 => {
+                let s = &self.data.as_u16()[base..base + 3 * self.plane];
+                TapPanels::Bf16 {
+                    tu: &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
+                    tc: &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
+                    td: &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
+                }
+            }
+        };
+        TapView { panels, col0: self.col0 }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pack: gather b = lam ⊙ x column slabs with orientation folded in
+// ---------------------------------------------------------------------
+
+/// How a direction's activations are laid out: shared spatial tensors
+/// (orientation folded into the gather) or per-direction canonical
+/// row-major tensors (the compact unit's case — its 1x1 projections
+/// already produced canonical layouts, so the gather is a straight
+/// transpose).
+#[derive(Clone, Copy)]
+pub(crate) enum Orientation {
+    Spatial,
+    Canonical,
+}
+
+/// Pack canonical columns `i0..i0+sw` of `b = lam ⊙ x` into the
+/// column-major slab (`b[i*hc + r]` = canonical column `i0+i`, row `r`).
+/// The product is the exact `ls[p] * xs[p]` unit of the reference
+/// expression, computed during the gather so `x` and `lam` are each read
+/// once and no staged copy of either exists.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pack_slab(
+    xs: &[f32],
+    ls: &[f32],
+    h: usize,
+    w: usize,
+    d: Direction,
+    layout: Orientation,
+    i0: usize,
+    sw: usize,
+    hc: usize,
+    b: &mut [f32],
+) {
+    match (layout, d) {
+        // Spatial L2R and every canonical layout: canonical (r, i) is
+        // row-major (r, i) of the source with dims (hc, wc) — for
+        // spatial L2R those are just (H, W), so one transposing gather
+        // covers both.
+        (Orientation::Canonical, _) | (Orientation::Spatial, Direction::L2R) => {
+            let wr = hw_src(h, w, d).1;
+            for r in 0..hc {
+                let base = r * wr + i0;
+                let (xr, lr) = (&xs[base..base + sw], &ls[base..base + sw]);
+                for i in 0..sw {
+                    b[i * hc + r] = lr[i] * xr[i];
+                }
+            }
+        }
+        (Orientation::Spatial, Direction::R2L) => {
+            // canonical (r, i) = spatial (r, W-1-i).
+            for r in 0..h {
+                let row = r * w;
+                for i in 0..sw {
+                    let p = row + w - 1 - (i0 + i);
+                    b[i * hc + r] = ls[p] * xs[p];
+                }
+            }
+        }
+        (Orientation::Spatial, Direction::T2B) => {
+            // canonical column i0+i is spatial row i0+i: contiguous on
+            // both sides.
+            for i in 0..sw {
+                let row = (i0 + i) * w;
+                let (xr, lr) = (&xs[row..row + w], &ls[row..row + w]);
+                let bc = &mut b[i * hc..i * hc + hc];
+                for r in 0..hc {
+                    bc[r] = lr[r] * xr[r];
+                }
+            }
+        }
+        (Orientation::Spatial, Direction::B2T) => {
+            // canonical column i0+i is spatial row H-1-(i0+i).
+            for i in 0..sw {
+                let row = (h - 1 - (i0 + i)) * w;
+                let (xr, lr) = (&xs[row..row + w], &ls[row..row + w]);
+                let bc = &mut b[i * hc..i * hc + hc];
+                for r in 0..hc {
+                    bc[r] = lr[r] * xr[r];
+                }
+            }
+        }
+    }
+}
+
+/// Source row-major dims for a direction/layout pair: spatial tensors
+/// keep (H, W); canonical tensors are stored as (hc, wc).
+#[inline]
+pub(crate) fn hw_src(h: usize, w: usize, d: Direction) -> (usize, usize) {
+    match d {
+        Direction::L2R | Direction::R2L => (h, w),
+        Direction::T2B | Direction::B2T => (w, h),
+    }
+}

@@ -1,0 +1,1716 @@
+use super::*;
+use crate::scan::core::{scan_l2r, scan_l2r_pool};
+use crate::scan::direction::{merged_4dir_ref, scan_dir};
+use crate::scan::plan::TileInner;
+use crate::util::lock_unpoisoned;
+use crate::util::proptest::{check, ensure};
+use crate::util::Rng;
+
+fn divisors(w: usize) -> Vec<usize> {
+    (1..=w).filter(|d| w % d == 0).collect()
+}
+
+fn mk_taps(rng: &mut Rng, n: usize, cw: usize, h: usize, w: usize) -> Taps {
+    Taps::normalize(&Tensor::randn(&[n, cw, 3, h, w], rng, 1.0))
+}
+
+/// The tentpole pinning property: the fused engine is exactly equal
+/// (`==` on `data`, not allclose) to the serial reference across
+/// random shapes, every kchunk divisor, shared and per-channel taps,
+/// and all four directions — including H=1 and W=1 edge geometries.
+#[test]
+fn fused_scan_pinned_bit_exact_to_reference() {
+    check("fused == scan_dir reference", |g| {
+        let n = g.int_in(1, 2);
+        let c = g.int_in(1, 3);
+        let h = g.int_in(1, 7);
+        let w = g.int_in(1, 7);
+        let cw = *g.pick(&[1, c]);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, cw, hc, wc);
+            let mut kchunks = vec![0usize];
+            kchunks.extend(divisors(wc));
+            for k in kchunks {
+                let reference = scan_dir(&x, &taps, &lam, d, k);
+                let fused = fused_scan_dir(&x, &taps, &lam, d, k);
+                ensure(
+                    reference.shape == fused.shape && reference.data == fused.data,
+                    format!("fused != ref: n{n} c{c} {h}x{w} cw{cw} {d:?} k{k}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Slab-boundary coverage: widths around multiples of SLAB, so the
+/// carry column crossing and the partial last slab are both hit,
+/// including kchunk resets landing inside and on slab boundaries.
+#[test]
+fn fused_scan_exact_across_slab_boundaries() {
+    let mut rng = Rng::new(39);
+    for w in [SLAB - 1, SLAB, SLAB + 1, 2 * SLAB, 2 * SLAB + 3] {
+        let (n, c, h) = (1, 2, 5);
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, 1, h, w);
+        let mut kchunks = vec![0usize];
+        kchunks.extend(divisors(w));
+        for k in kchunks {
+            let reference = scan_l2r(&x, &taps, &lam, k);
+            let fused = fused_scan_l2r(&x, &taps, &lam, k);
+            assert_eq!(reference.data, fused.data, "w={w} k={k}");
+        }
+    }
+}
+
+#[test]
+fn fused_merged_pinned_bit_exact_to_reference() {
+    check("fused merged == merged_4dir_ref", |g| {
+        let n = g.int_in(1, 2);
+        let c = g.int_in(1, 3);
+        let h = g.int_in(1, 6);
+        let w = g.int_in(1, 6);
+        let cw = *g.pick(&[1, c]);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, cw, h, w);
+        let t_rl = mk_taps(&mut rng, n, cw, h, w);
+        let t_tb = mk_taps(&mut rng, n, cw, w, h);
+        let t_bt = mk_taps(&mut rng, n, cw, w, h);
+        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [
+            g.f32_in(-2.0, 2.0),
+            g.f32_in(-2.0, 2.0),
+            g.f32_in(-2.0, 2.0),
+            g.f32_in(-2.0, 2.0),
+        ];
+        // kchunk must divide the canonical width of every direction.
+        let mut kchunks = vec![0usize];
+        kchunks.extend(divisors(w).into_iter().filter(|k| h % k == 0));
+        for k in kchunks {
+            let reference = merged_4dir_ref(&x, taps, &lam, &logits, k);
+            let fused = fused_merged_4dir(&x, taps, &lam, &logits, k);
+            ensure(
+                reference.data == fused.data,
+                format!("fused merged != ref: n{n} c{c} {h}x{w} cw{cw} k{k}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_pool_bit_identical_to_fused_serial_and_reference() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(40);
+    for (n, c, h, w, cw) in
+        [(2, 3, 8, 12, 3), (1, 1, 5, 7, 1), (3, 4, 16, 16, 1), (1, 2, 1, 6, 1), (1, 2, 6, 1, 2)]
+    {
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, cw, h, w);
+        for kchunk in [0, w] {
+            let reference = scan_l2r(&x, &taps, &lam, kchunk);
+            let serial = fused_scan_l2r(&x, &taps, &lam, kchunk);
+            let pooled = fused_scan_l2r_pool(&x, &taps, &lam, kchunk, &pool);
+            assert_eq!(reference.data, serial.data, "serial n{n} c{c} {h}x{w} k{kchunk}");
+            assert_eq!(reference.data, pooled.data, "pooled n{n} c{c} {h}x{w} k{kchunk}");
+        }
+    }
+}
+
+#[test]
+fn fused_merged_pool_bit_identical_to_reference() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(41);
+    let (n, c, h, w) = (2, 3, 6, 7);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let taps = [&t_lr, &t_lr, &t_tb, &t_tb];
+    let logits = [0.4f32, -0.2, 1.1, 0.0];
+    let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+    let pooled = fused_merged_4dir_pool(&x, taps, &lam, &logits, 0, &pool);
+    let global = fused_merged_4dir_par(&x, taps, &lam, &logits, 0);
+    assert_eq!(reference.data, pooled.data);
+    assert_eq!(reference.data, global.data);
+}
+
+#[test]
+fn fused_canonical_merge_modulate_matches_reference_composition() {
+    // The compact-unit path: canonical per-direction activations,
+    // fused merge + u ⊙ h modulation vs the explicit reference
+    // composition (scan_l2r_pool + from_canonical + merge pass +
+    // output_modulation).
+    use crate::scan::direction::{from_canonical, to_canonical};
+    let pool = crate::util::ThreadPool::new(2);
+    let mut rng = Rng::new(42);
+    let (n, c, h, w) = (2, 3, 5, 6);
+    let xp = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let logits = [0.3f32, -0.7, 0.2, 1.0];
+    let u: Vec<f32> = (0..c).map(|i| 0.5 + i as f32).collect();
+    let mut xcs = Vec::new();
+    let mut taps = Vec::new();
+    let mut lamcs = Vec::new();
+    for d in DIRECTIONS {
+        let xc = to_canonical(&xp, d);
+        let (hc, wc) = (xc.shape[2], xc.shape[3]);
+        taps.push(mk_taps(&mut rng, n, 1, hc, wc));
+        lamcs.push(Tensor::randn(&xc.shape, &mut rng, 1.0));
+        xcs.push(xc);
+    }
+    let fused = fused_merged_canonical(
+        [&xcs[0], &xcs[1], &xcs[2], &xcs[3]],
+        [&taps[0], &taps[1], &taps[2], &taps[3]],
+        [&lamcs[0], &lamcs[1], &lamcs[2], &lamcs[3]],
+        &logits,
+        &u,
+        0,
+        &xp.shape,
+        &pool,
+    );
+    let wts = merge_weights(&logits);
+    let mut merged = Tensor::zeros(&xp.shape);
+    for (k, d) in DIRECTIONS.iter().enumerate() {
+        let hcan = scan_l2r_pool(&xcs[k], &taps[k], &lamcs[k], 0, &pool);
+        let y = from_canonical(&hcan, *d);
+        for (o, v) in merged.data.iter_mut().zip(&y.data) {
+            *o += wts[k] * v;
+        }
+    }
+    let reference = crate::scan::core::output_modulation_owned(merged, &u);
+    assert_eq!(reference.data, fused.data);
+}
+
+#[test]
+fn fused_empty_and_degenerate_geometries() {
+    // N·C = 0 and H = 0 return zeros without panicking, as the
+    // reference does.
+    let x = Tensor::zeros(&[0, 3, 4, 5]);
+    let lam = Tensor::zeros(&[0, 3, 4, 5]);
+    let taps = Taps::normalize(&Tensor::zeros(&[0, 1, 3, 4, 5]));
+    let out = fused_scan_l2r(&x, &taps, &lam, 0);
+    assert_eq!(out.shape, vec![0, 3, 4, 5]);
+
+    let x = Tensor::zeros(&[1, 2, 0, 5]);
+    let lam = Tensor::zeros(&[1, 2, 0, 5]);
+    let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
+    let out = fused_scan_l2r(&x, &taps, &lam, 0);
+    assert!(out.data.is_empty());
+}
+
+#[test]
+fn block_count_scales_with_pool_not_planes() {
+    assert_eq!(plane_blocks(1000, 4), 8);
+    assert_eq!(plane_blocks(3, 4), 3);
+    assert_eq!(plane_blocks(0, 4), 0);
+    assert_eq!(plane_blocks(16, 1), 2);
+}
+
+// -----------------------------------------------------------------
+// Segment-parallel decomposition
+// -----------------------------------------------------------------
+
+use crate::scan::split::scan_l2r_split;
+
+/// The tentpole pinning property for the segmented path: exact `==`
+/// with the reference decomposition `scan_l2r_split` across segment
+/// counts and boundaries — including W = 1, more segments than
+/// columns, and a 1-thread pool (helping-wait execution).
+#[test]
+fn segmented_fused_exact_eq_scan_l2r_split() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(50);
+    for (n, c, h, w, cw) in [
+        (1, 1, 5, 12, 1),
+        (1, 2, 3, 64, 2),
+        (2, 3, 8, 40, 1),
+        (1, 1, 1, 7, 1),
+        (1, 2, 9, 1, 1),
+        (1, 1, 4, 2 * SLAB + 3, 1),
+    ] {
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, cw, h, w);
+        for segments in [1usize, 2, 3, 5, 8, w, w + 9, 500] {
+            let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
+            let seg1 = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool1);
+            let seg3 = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
+            assert_eq!(
+                reference.data, seg1.data,
+                "1-thread n{n} c{c} {h}x{w} cw{cw} S{segments}"
+            );
+            assert_eq!(
+                reference.data, seg3.data,
+                "3-thread n{n} c{c} {h}x{w} cw{cw} S{segments}"
+            );
+        }
+    }
+}
+
+#[test]
+fn segmented_fused_split_identity_property() {
+    let pool = crate::util::ThreadPool::new(2);
+    check("fused segmented == scan_l2r_split", |g| {
+        let n = g.int_in(1, 2);
+        let c = g.int_in(1, 3);
+        let h = g.int_in(1, 9);
+        let w = g.int_in(1, 40);
+        let segments = g.int_in(1, 7);
+        let cw = *g.pick(&[1, c]);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, cw, h, w);
+        let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
+        let seg = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool);
+        ensure(
+            reference.data == seg.data,
+            format!("segmented != split: n{n} c{c} {h}x{w} cw{cw} S{segments}"),
+        )
+    });
+}
+
+/// Segment boundaries landing on chunk resets carry nothing across,
+/// so the segmented path collapses to the exact plane-path bits.
+#[test]
+fn segmented_chunk_aligned_is_exact_vs_reference() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(51);
+    let (n, c, h, w) = (1, 2, 6, 64);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    // S = 4 -> seg_len = 16; kchunk = 8 divides 16, so every segment
+    // starts on a reset.
+    let reference = scan_l2r(&x, &taps, &lam, 8);
+    let seg = fused_scan_l2r_seg(&x, &taps, &lam, 8, 4, &pool);
+    assert_eq!(reference.data, seg.data);
+}
+
+/// Unaligned chunk resets inside segments stay numerically
+/// equivalent (the carry dies at the reset; only pre-reset columns
+/// reassociate).
+#[test]
+fn segmented_chunk_unaligned_is_close() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(52);
+    let (n, c, h, w) = (1, 1, 7, 96);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let reference = scan_l2r(&x, &taps, &lam, 32);
+    // S = 5 -> seg_len = 20: boundaries at 20/40/60/80 never align
+    // with the resets at 32/64.
+    let seg = fused_scan_l2r_seg(&x, &taps, &lam, 32, 5, &pool);
+    assert!(
+        reference.allclose(&seg, 1e-4, 1e-4),
+        "max diff {}",
+        reference.max_abs_diff(&seg)
+    );
+}
+
+/// The merged 4-direction segmented pass: tolerance-pinned against
+/// the serial reference composition, and bit-deterministic across
+/// pool widths (scheduling never changes segmented arithmetic).
+#[test]
+fn segmented_merged_close_to_reference_and_deterministic() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(53);
+    let (n, c, h, w) = (1, 2, 24, 40);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_rl = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let t_bt = mk_taps(&mut rng, n, 1, w, h);
+    let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+    let logits = [0.4f32, -0.2, 1.1, 0.0];
+    let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+    let a = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, 4, &pool1);
+    let b = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, 4, &pool3);
+    assert_eq!(a.data, b.data, "pool width changed segmented bits");
+    assert!(
+        reference.allclose(&a, 1e-4, 1e-4),
+        "max diff {}",
+        reference.max_abs_diff(&a)
+    );
+}
+
+/// Whenever the planner picks plane-parallel, the pooled entry
+/// points are exactly the PR 2 engine — bit-identical to the serial
+/// reference. Any geometry narrower than 2 * plan::MIN_SEG_COLS
+/// canonical columns (everything the unit/e2e suites pin) can never
+/// be segmented regardless of host pool width.
+#[test]
+fn auto_plane_regime_stays_bit_identical() {
+    let pool = crate::util::ThreadPool::new(7);
+    let mut rng = Rng::new(54);
+    let (n, c, h, w) = (1, 2, 32, 64);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    assert_eq!(plan::auto_segments(n * c, w, pool.threads()), None);
+    let reference = scan_l2r(&x, &taps, &lam, 0);
+    let pooled = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+    assert_eq!(reference.data, pooled.data);
+}
+
+/// When the planner does segment, the pooled entry point produces
+/// exactly the scan_l2r_split bits for the count it chose.
+#[test]
+fn auto_low_occupancy_matches_split_reference() {
+    let pool = crate::util::ThreadPool::new(4);
+    let mut rng = Rng::new(55);
+    let (n, c, h, w) = (1, 1, 8, 256);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let s = plan::auto_segments(n * c, w, pool.threads())
+        .expect("low occupancy must segment");
+    assert_eq!(s, 4);
+    let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+    let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
+    assert_eq!(reference.data, viapool.data);
+}
+
+/// The single-direction serving band the fused-correction drain
+/// opened (128 <= wc < 256, previously fenced onto the plane path):
+/// the planner now segments it, and the pooled entry point produces
+/// exactly the scan_l2r_split bits at the planned count.
+#[test]
+fn auto_midwidth_band_segments_and_matches_split() {
+    let pool = crate::util::ThreadPool::new(4);
+    let mut rng = Rng::new(57);
+    let (n, c, h, w) = (1, 1, 8, 192);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let s = plan::auto_segments(n * c, w, pool.threads())
+        .expect("the 128..256 band must segment now");
+    assert_eq!(s, 3);
+    let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+    let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
+    assert_eq!(reference.data, viapool.data);
+}
+
+/// Orientation folding in the segmented path, pinned exactly: the
+/// segmented directional scan equals `scan_l2r_split` run on the
+/// canonically reoriented tensors (data movement changes no bits).
+#[test]
+fn segmented_all_directions_match_canonical_split() {
+    use crate::scan::direction::{from_canonical, to_canonical};
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(56);
+    let (n, c, h, w) = (1, 2, 6, 9);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    for d in DIRECTIONS {
+        let (hc, wc) = hw_src(h, w, d);
+        let taps = mk_taps(&mut rng, n, 1, hc, wc);
+        let xc = to_canonical(&x, d);
+        let lamc = to_canonical(&lam, d);
+        for segments in [2usize, 3] {
+            let want =
+                from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+            let got = fused_scan_dir_seg(&x, &taps, &lam, d, 0, segments, &pool);
+            assert_eq!(want.data, got.data, "{d:?} S{segments}");
+        }
+    }
+}
+
+#[test]
+fn segmented_empty_and_degenerate_geometries() {
+    let pool = crate::util::ThreadPool::new(2);
+    let x = Tensor::zeros(&[0, 3, 4, 5]);
+    let lam = Tensor::zeros(&[0, 3, 4, 5]);
+    let taps = Taps::normalize(&Tensor::zeros(&[0, 1, 3, 4, 5]));
+    let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
+    assert_eq!(out.shape, vec![0, 3, 4, 5]);
+
+    let x = Tensor::zeros(&[1, 2, 0, 5]);
+    let lam = Tensor::zeros(&[1, 2, 0, 5]);
+    let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
+    let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
+    assert!(out.data.is_empty());
+}
+
+// -----------------------------------------------------------------
+// Wavefront scheduling + the direction fan
+// -----------------------------------------------------------------
+
+/// The tentpole pinning property for wavefront scheduling and the
+/// fused-correction drain: neither the dependency-graph schedule nor
+/// fusing the correction into the drain changes what is computed —
+/// exact `==` across the full schedule matrix (barrier,
+/// per-direction wavefront, PR 4 two-pass single-continuation) with
+/// the `scan_l2r_split` reference, across segment counts, chunk
+/// resets, pool widths (including the 1-thread all-helping case),
+/// and slab-boundary widths.
+#[test]
+fn wavefront_exact_eq_barrier_and_split() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(60);
+    for (n, c, h, w, cw) in [
+        (1, 1, 5, 12, 1),
+        (2, 3, 8, 40, 1),
+        (1, 2, 9, 1, 1),
+        (1, 1, 4, 2 * SLAB + 3, 1),
+        (2, 2, 6, 96, 2),
+    ] {
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let taps = mk_taps(&mut rng, n, cw, h, w);
+        for segments in [1usize, 2, 3, 5, w + 9] {
+            let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
+            let barrier = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
+            let wave1 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool1);
+            let wave3 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool3);
+            let twopass =
+                fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, segments, &pool3);
+            assert_eq!(
+                reference.data, barrier.data,
+                "barrier n{n} c{c} {h}x{w} S{segments}"
+            );
+            assert_eq!(
+                reference.data, wave1.data,
+                "wave 1-thread n{n} c{c} {h}x{w} S{segments}"
+            );
+            assert_eq!(
+                reference.data, wave3.data,
+                "wave 3-thread n{n} c{c} {h}x{w} S{segments}"
+            );
+            assert_eq!(
+                reference.data, twopass.data,
+                "PR4 two-pass n{n} c{c} {h}x{w} S{segments}"
+            );
+        }
+    }
+}
+
+/// Wavefront with chunk resets landing inside segments: the carry
+/// dies at resets exactly like the barrier path.
+#[test]
+fn wavefront_chunked_matches_barrier_bits() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(61);
+    let (n, c, h, w) = (1, 2, 7, 96);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    for (kchunk, segments) in [(32usize, 5usize), (8, 4), (96, 3)] {
+        let barrier = fused_scan_l2r_seg(&x, &taps, &lam, kchunk, segments, &pool);
+        let wave = fused_scan_l2r_seg_wave(&x, &taps, &lam, kchunk, segments, &pool);
+        let twopass =
+            fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, kchunk, segments, &pool);
+        assert_eq!(barrier.data, wave.data, "k{kchunk} S{segments}");
+        assert_eq!(barrier.data, twopass.data, "two-pass k{kchunk} S{segments}");
+    }
+}
+
+/// The merged 4-direction pass under wavefront scheduling: exact
+/// `==` with the barrier twin for every direction/orientation mix.
+#[test]
+fn wavefront_merged_exact_eq_barrier() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(62);
+    let (n, c, h, w) = (1, 2, 24, 40);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_rl = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let t_bt = mk_taps(&mut rng, n, 1, w, h);
+    let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+    let logits = [0.4f32, -0.2, 1.1, 0.0];
+    for segments in [1usize, 4] {
+        let barrier = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
+        let wave1 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool1);
+        let wave3 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool3);
+        let twopass =
+            fused_merged_4dir_seg_wave_twopass(&x, taps, &lam, &logits, 0, segments, &pool3);
+        assert_eq!(barrier.data, wave1.data, "S{segments}");
+        assert_eq!(barrier.data, wave3.data, "S{segments}");
+        assert_eq!(barrier.data, twopass.data, "two-pass S{segments}");
+    }
+}
+
+/// Directional scans under wavefront scheduling match the canonical
+/// split reference exactly, per direction (orientation folding does
+/// not interact with the schedule).
+#[test]
+fn wavefront_all_directions_match_canonical_split() {
+    use crate::scan::direction::{from_canonical, to_canonical};
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(63);
+    let (n, c, h, w) = (1, 2, 6, 9);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    for d in DIRECTIONS {
+        let (hc, wc) = hw_src(h, w, d);
+        let taps = mk_taps(&mut rng, n, 1, hc, wc);
+        let xc = to_canonical(&x, d);
+        let lamc = to_canonical(&lam, d);
+        for segments in [2usize, 3] {
+            let want =
+                from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+            let got = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
+            let twopass =
+                fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, 0, segments, &pool);
+            assert_eq!(want.data, got.data, "{d:?} S{segments}");
+            assert_eq!(want.data, twopass.data, "two-pass {d:?} S{segments}");
+        }
+    }
+}
+
+/// The direction fan is bit-identical to the fused merge (and hence
+/// the serial reference): a full-width zero-carry scan per (plane,
+/// direction) reassociates nothing, and the drain replays the fixed
+/// k = 0..4 merge order. Both schedules, several pool widths, tiny
+/// and slab-crossing widths, H=1/W=1 edges.
+#[test]
+fn dirfan_exact_eq_fused_merge_reference() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(64);
+    for (n, c, h, w) in [(2, 3, 6, 7), (1, 1, 1, 6), (1, 2, 6, 1), (1, 2, 24, 2 * SLAB + 3)]
+    {
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.3f32, -0.7, 0.2, 1.0];
+        let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+        for pool in [&pool1, &pool3] {
+            for wavefront in [false, true] {
+                let fan =
+                    fused_merged_4dir_fan(&x, taps, &lam, &logits, 0, wavefront, pool);
+                assert_eq!(
+                    reference.data, fan.data,
+                    "n{n} c{c} {h}x{w} wf{wavefront}"
+                );
+            }
+        }
+    }
+}
+
+/// DirFan with chunk resets: the fan scans full width with resets
+/// folded into phase 1, so chunked output equals the chunked
+/// reference exactly too.
+#[test]
+fn dirfan_chunked_exact_eq_reference() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(65);
+    let (n, c, h, w) = (1, 2, 8, 8);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let taps = [&t_lr, &t_lr, &t_tb, &t_tb];
+    let logits = [0.1f32, 0.5, -0.3, 0.0];
+    for kchunk in [0usize, 4, 8] {
+        let reference = merged_4dir_ref(&x, taps, &lam, &logits, kchunk);
+        let fan = fused_merged_4dir_fan(&x, taps, &lam, &logits, kchunk, true, &pool);
+        assert_eq!(reference.data, fan.data, "k{kchunk}");
+    }
+}
+
+/// A planner-forced plan carried end to end through the forced hook
+/// equals running the plan's strategy directly (the plan-carrying
+/// path the serving/bench layers use).
+#[test]
+fn planned_execution_matches_direct_strategy_calls() {
+    use crate::scan::plan::{plan_scan_with, PlanOverride};
+    let pool = crate::util::ThreadPool::new(4);
+    let mut rng = Rng::new(66);
+    let (n, c, h, w) = (1, 1, 8, 256);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let geom = ScanGeometry::single_dir(n * c, h, w);
+    let p = plan_scan_with(&geom, 0, pool.threads(), PlanOverride::Auto);
+    let ScanStrategy::Chained { s } = p.strategy else {
+        panic!("expected a chained plan, got {:?}", p.strategy);
+    };
+    assert!(!p.wavefront, "the chained engine has no phases to wavefront");
+    let via_auto = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+    let direct = fused_scan_l2r_chained(&x, &taps, &lam, 0, s, &pool);
+    assert_eq!(via_auto.data, direct.data);
+    // The chained engine replaced the two-phase Segmented plan at
+    // the same count bit-for-bit.
+    let twophase = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool);
+    assert_eq!(via_auto.data, twophase.data);
+}
+
+// -----------------------------------------------------------------
+// The fused-correction drain
+// -----------------------------------------------------------------
+
+/// The fused-correction drain property: exact `==` against the
+/// `scan_l2r_split` reference across random shapes (including H=1,
+/// W=1, and slab-crossing widths), all 4 directions, segment
+/// counts, and the full schedule matrix — per-direction wavefront,
+/// barrier, and the PR 4 two-pass single-continuation. Plus, under
+/// random kchunk divisors (split has no chunk form), all three
+/// schedules stay bit-identical to each other.
+#[test]
+fn fused_correction_drain_schedule_matrix_property() {
+    use crate::scan::direction::{from_canonical, to_canonical};
+    let pool = crate::util::ThreadPool::new(3);
+    check("fused drain == split across schedules", |g| {
+        let n = g.int_in(1, 2);
+        let c = g.int_in(1, 2);
+        let h = g.int_in(1, 9);
+        let w = g.int_in(1, 2 * SLAB + 8);
+        let segments = g.int_in(1, 5);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, 1, hc, wc);
+            let xc = to_canonical(&x, d);
+            let lamc = to_canonical(&lam, d);
+            let want =
+                from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+            let barrier = fused_scan_dir_seg(&x, &taps, &lam, d, 0, segments, &pool);
+            let wave = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
+            let twopass =
+                fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, 0, segments, &pool);
+            let tag = format!("n{n} c{c} {h}x{w} {d:?} S{segments}");
+            ensure(want.data == barrier.data, format!("barrier != split: {tag}"))?;
+            ensure(want.data == wave.data, format!("wave != split: {tag}"))?;
+            ensure(want.data == twopass.data, format!("two-pass != split: {tag}"))?;
+            // Chunk resets inside segments: the three schedules must
+            // agree bit-for-bit (the chunked split reference is the
+            // barrier engine itself).
+            let kchunk = *g.pick(&divisors(wc));
+            let cb = fused_scan_dir_seg(&x, &taps, &lam, d, kchunk, segments, &pool);
+            let cw_ = fused_scan_dir_seg_wave(&x, &taps, &lam, d, kchunk, segments, &pool);
+            let ct =
+                fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, kchunk, segments, &pool);
+            ensure(cb.data == cw_.data, format!("chunked wave != barrier: {tag} k{kchunk}"))?;
+            ensure(cb.data == ct.data, format!("chunked two-pass != barrier: {tag} k{kchunk}"))?;
+        }
+        Ok(())
+    });
+}
+
+// -----------------------------------------------------------------
+// The single-pass chained engine
+// -----------------------------------------------------------------
+
+/// The tentpole exactness property: the single-pass chained engine
+/// (decoupled look-back, no phase barrier) is exact `==` against
+/// `scan_l2r_split` across random shapes (including H=1, W=1, and
+/// slab-crossing widths), all 4 directions, chunk counts, shared
+/// and per-channel taps, and both the serial path (1-thread pool)
+/// and concurrent chains with work-assist (3-thread pool). Under
+/// random kchunk divisors (split has no chunk form) chained must
+/// equal the two-phase barrier engine bit-for-bit — the claim that
+/// retiring the barrier changed the schedule and nothing else.
+#[test]
+fn chained_engine_exact_eq_split_property() {
+    use crate::scan::direction::{from_canonical, to_canonical};
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    check("chained == split across shapes", |g| {
+        let n = g.int_in(1, 2);
+        let c = g.int_in(1, 2);
+        let h = g.int_in(1, 9);
+        let w = g.int_in(1, 2 * SLAB + 8);
+        let segments = g.int_in(1, 5);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let cw = *g.pick(&[1, c]);
+            let taps = mk_taps(&mut rng, n, cw, hc, wc);
+            let xc = to_canonical(&x, d);
+            let lamc = to_canonical(&lam, d);
+            let want =
+                from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
+            let tag = format!("n{n} c{c} cw{cw} {h}x{w} {d:?} S{segments}");
+            for (pname, pool) in [("pool1", &pool1), ("pool3", &pool3)] {
+                let got = fused_scan_dir_chained(&x, &taps, &lam, d, 0, segments, pool);
+                ensure(want.data == got.data, format!("chained != split: {tag} {pname}"))?;
+            }
+            // Chunk resets inside chunks: the chunked split
+            // reference is the two-phase barrier engine itself.
+            let kchunk = *g.pick(&divisors(wc));
+            let barrier = fused_scan_dir_seg(&x, &taps, &lam, d, kchunk, segments, &pool3);
+            let chained =
+                fused_scan_dir_chained(&x, &taps, &lam, d, kchunk, segments, &pool3);
+            ensure(
+                barrier.data == chained.data,
+                format!("chunked chained != barrier: {tag} k{kchunk}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The merged 4-direction pass under the chained engine: the
+/// per-plane drain gates preserve the k = 0..4 merge order, so
+/// chained output is exact `==` the two-phase barrier merged engine
+/// at every chunk count (and, at S = 1, the serial merged
+/// reference) — on the degenerate H=1 / W=1 geometries and a
+/// slab-crossing width too.
+#[test]
+fn chained_merged_4dir_exact_eq_segmented() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let pool3 = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(74);
+    for (n, c, h, w) in [(2, 3, 6, 7), (1, 1, 1, 6), (1, 2, 6, 1), (1, 2, 24, 2 * SLAB + 3)]
+    {
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let t_lr = mk_taps(&mut rng, n, 1, h, w);
+        let t_rl = mk_taps(&mut rng, n, 1, h, w);
+        let t_tb = mk_taps(&mut rng, n, 1, w, h);
+        let t_bt = mk_taps(&mut rng, n, 1, w, h);
+        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
+        let logits = [0.3f32, -0.7, 0.2, 1.0];
+        let serial = merged_4dir_ref(&x, taps, &lam, &logits, 0);
+        for segments in [1usize, 2, 3] {
+            let reference =
+                fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
+            for (pname, pool) in [("pool1", &pool1), ("pool3", &pool3)] {
+                let got =
+                    fused_merged_4dir_chained(&x, taps, &lam, &logits, 0, segments, pool);
+                assert_eq!(
+                    reference.data, got.data,
+                    "n{n} c{c} {h}x{w} S{segments} {pname}"
+                );
+            }
+            if segments == 1 {
+                assert_eq!(serial.data, reference.data, "n{n} c{c} {h}x{w} S1 serial");
+            }
+        }
+    }
+}
+
+/// Satellite regression: a panicking phase-1 job in the wavefront
+/// path must surface as the original panic payload (collected
+/// MapError-style through `run_graph`), not as a `PoisonError` or a
+/// secondary index panic from a dependent drain reading a missing
+/// piece — and the engine/pool must stay healthy afterwards.
+#[test]
+fn wavefront_phase1_panic_propagates_original_payload() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let pool = crate::util::ThreadPool::new(2);
+    let mut rng = Rng::new(70);
+    let (n, c, h, w) = (1, 2, 5, 160);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    // w=160, S=2 -> bounds (0,80),(80,160). Inject into the second
+    // piece of plane 0 — a (plane, dir, lo, hi) tuple no other
+    // test's geometry produces (every other suite's segment ends
+    // are < 80 or land elsewhere), so concurrently running tests
+    // never trip the hook.
+    for schedule in ["wave-dir", "two-pass"] {
+        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some((0, 0, 80, 160));
+        let caught = catch_unwind(AssertUnwindSafe(|| match schedule {
+            "wave-dir" => fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool),
+            _ => fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, 2, &pool),
+        }));
+        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
+        let payload = match caught {
+            Ok(_) => panic!("{schedule}: wavefront must rethrow the phase-1 panic"),
+            Err(p) => p,
+        };
+        let msg = crate::util::panic_message(&*payload);
+        assert!(
+            msg.contains("injected phase-1 panic"),
+            "{schedule}: expected the injected payload, got {msg:?}"
+        );
+    }
+    // Poisoned hand-off slots are recovered; the next run is clean
+    // and exact.
+    let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
+    let after = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool);
+    assert_eq!(reference.data, after.data);
+}
+
+// -----------------------------------------------------------------
+// Workspace pooling
+// -----------------------------------------------------------------
+
+/// Pooled scratch changes no bits: every strategy/schedule produces
+/// the same output from a cold workspace (all misses), a warm one
+/// (reused, dirty buffers), and equals the `scan_l2r_split` /
+/// serial reference. This is the pooled-vs-fresh half of the
+/// allocation-free acceptance invariant.
+#[test]
+fn pooled_output_bit_identical_to_fresh_workspace_across_strategies() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(71);
+    let (n, c, h, w) = (1, 2, 7, 96);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let cases = [
+        (ScanStrategy::PlanePar, Phase2::Barrier),
+        (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
+        (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
+        (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
+        (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
+    ];
+    for (strategy, phase2) in cases {
+        let reference = match strategy {
+            ScanStrategy::Segmented { s } | ScanStrategy::Chained { s } => {
+                scan_l2r_split(&x, &taps, &lam, s, 1)
+            }
+            _ => scan_l2r(&x, &taps, &lam, 0),
+        };
+        let warm_ws = BufferPool::new(usize::MAX);
+        for round in 0..3 {
+            let cold_ws = BufferPool::new(usize::MAX);
+            let cold = fused_scan_dir_forced_ws(
+                &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &cold_ws,
+                None,
+            );
+            let warm = fused_scan_dir_forced_ws(
+                &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &warm_ws,
+                None,
+            );
+            assert_eq!(
+                reference.data, cold.data,
+                "cold != ref: {strategy:?} {phase2:?} round {round}"
+            );
+            assert_eq!(
+                reference.data, warm.data,
+                "warm != ref: {strategy:?} {phase2:?} round {round}"
+            );
+        }
+        // Everything leased came back.
+        assert_eq!(warm_ws.stats().bytes_leased, 0, "{strategy:?} {phase2:?}");
+    }
+    // The merged direction fan (the strategy the single-direction
+    // matrix above cannot reach).
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_rl = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let t_bt = mk_taps(&mut rng, n, 1, w, h);
+    let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+    let logits = [0.4f32, -0.2, 1.1, 0.0];
+    let reference = merged_4dir_ref(&x, mtaps, &lam, &logits, 0);
+    let warm_ws = BufferPool::new(usize::MAX);
+    for phase2 in [Phase2::Barrier, Phase2::WaveDir] {
+        for round in 0..2 {
+            let fan = fused_merged_4dir_forced_ws(
+                &x,
+                mtaps,
+                &lam,
+                &logits,
+                0,
+                ScanStrategy::DirFan,
+                phase2,
+                &pool,
+                &warm_ws,
+                None,
+            );
+            assert_eq!(reference.data, fan.data, "dirfan {phase2:?} round {round}");
+        }
+    }
+    assert_eq!(warm_ws.stats().bytes_leased, 0);
+}
+
+/// The reply-recycling entry: an output buffer taken from the
+/// workspace produces bit-identical results to the fresh-allocating
+/// entry, and donating the result's storage back makes the next
+/// take a pool hit — the coordinator's whole-request
+/// allocation-free loop, exercised at the engine level.
+#[test]
+fn recycled_output_buffer_bit_identical_and_donated() {
+    // 1 thread: the serial lease sequence makes the zero-miss
+    // assertion deterministic (the 2+-thread schedules are covered
+    // by the bit-exactness suites).
+    let pool = crate::util::ThreadPool::new(1);
+    let mut rng = Rng::new(77);
+    let (n, c, h, w) = (1, 3, 7, 40);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let want = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
+    let ws = BufferPool::new(usize::MAX);
+    let out = fused_scan_l2r_pool_ws_into(
+        &x,
+        &taps,
+        &lam,
+        0,
+        &pool,
+        &ws,
+        ws.take_zeroed(x.data.len()),
+    );
+    assert_eq!(out.data, want.data);
+    assert_eq!(ws.stats().bytes_leased, 0);
+    // Donate the reply storage back; the rerun's take must hit.
+    ws.donate(out.data);
+    let before = ws.stats();
+    let out = fused_scan_l2r_pool_ws_into(
+        &x,
+        &taps,
+        &lam,
+        0,
+        &pool,
+        &ws,
+        ws.take_zeroed(x.data.len()),
+    );
+    let after = ws.stats();
+    assert_eq!(out.data, want.data);
+    assert!(after.hits > before.hits, "recycled take must be served from the pool");
+    assert_eq!(
+        after.misses, before.misses,
+        "a donated reply buffer must make the next take allocation-free"
+    );
+}
+
+/// The allocation-free invariant at the engine level: on the
+/// deterministic (serial-execution) paths, repeating an identical
+/// call against a warm workspace records ZERO pool misses — the
+/// second run's every acquire is served from buffers the first run
+/// returned. A 1-thread pool takes the serial branches of every
+/// barrier strategy, so the lease sequence is reproducible.
+#[test]
+fn warm_workspace_rerun_records_zero_misses() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let mut rng = Rng::new(72);
+    let (n, c, h, w) = (1, 2, 6, 48);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    for strategy in [
+        ScanStrategy::PlanePar,
+        ScanStrategy::Segmented { s: 3 },
+        ScanStrategy::Chained { s: 3 },
+    ] {
+        let ws = BufferPool::new(usize::MAX);
+        let first = fused_scan_dir_forced_ws(
+            &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
+            None,
+        );
+        let s1 = ws.stats();
+        assert!(s1.misses > 0, "{strategy:?}: cold run must allocate");
+        assert_eq!(s1.bytes_leased, 0, "{strategy:?}: leases must all return");
+        let second = fused_scan_dir_forced_ws(
+            &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
+            None,
+        );
+        let s2 = ws.stats();
+        assert_eq!(
+            s2.misses, s1.misses,
+            "{strategy:?}: warm rerun allocated from the heap"
+        );
+        assert!(s2.hits > s1.hits, "{strategy:?}: warm rerun must hit the pool");
+        assert_eq!(first.data, second.data);
+    }
+    // The merged fan on the barrier schedule is serial on a 1-thread
+    // pool too.
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let mtaps = [&t_lr, &t_lr, &t_tb, &t_tb];
+    let logits = [0.3f32, -0.7, 0.2, 1.0];
+    let ws = BufferPool::new(usize::MAX);
+    let first = fused_merged_4dir_forced_ws(
+        &x,
+        mtaps,
+        &lam,
+        &logits,
+        0,
+        ScanStrategy::DirFan,
+        Phase2::Barrier,
+        &pool1,
+        &ws,
+        None,
+    );
+    let s1 = ws.stats();
+    let second = fused_merged_4dir_forced_ws(
+        &x,
+        mtaps,
+        &lam,
+        &logits,
+        0,
+        ScanStrategy::DirFan,
+        Phase2::Barrier,
+        &pool1,
+        &ws,
+        None,
+    );
+    assert_eq!(ws.stats().misses, s1.misses, "dirfan warm rerun allocated");
+    assert_eq!(first.data, second.data);
+}
+
+/// RAII under unwinding: a phase-1 piece job that panics while
+/// holding leased scratch (the injection fires *after* the piece
+/// lease is acquired) must return every lease to the workspace —
+/// nothing stays out on lease, and the buffers parked in the
+/// abandoned hand-off slots come back when the engine's slot vec
+/// drops. The pool serves the next run without leaking.
+#[test]
+fn wavefront_panic_returns_all_leases_to_workspace() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let pool = crate::util::ThreadPool::new(2);
+    let ws = BufferPool::new(usize::MAX);
+    let mut rng = Rng::new(73);
+    let (n, c, h, w) = (1, 2, 5, 224);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    // w=224, S=2 -> bounds (0,112),(112,224). A (plane, dir, lo, hi)
+    // tuple unique to this test's geometry, so concurrently running
+    // suites never trip the hook.
+    *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some((0, 0, 112, 224));
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        fused_scan_dir_forced_ws(
+            &x,
+            &taps,
+            &lam,
+            Direction::L2R,
+            0,
+            ScanStrategy::Segmented { s: 2 },
+            Phase2::WaveDir,
+            &pool,
+            &ws,
+            None,
+        )
+    }));
+    *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
+    assert!(caught.is_err(), "the injected panic must propagate");
+    let s = ws.stats();
+    assert_eq!(
+        s.bytes_leased, 0,
+        "a panicking scan leaked workspace leases: {s:?}"
+    );
+    assert!(s.bytes_pooled > 0, "returned buffers must be pooled for reuse");
+    // The pool still serves bit-exact scans afterwards.
+    let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
+    let after = fused_scan_dir_forced_ws(
+        &x,
+        &taps,
+        &lam,
+        Direction::L2R,
+        0,
+        ScanStrategy::Segmented { s: 2 },
+        Phase2::WaveDir,
+        &pool,
+        &ws,
+        None,
+    );
+    assert_eq!(reference.data, after.data);
+    assert_eq!(ws.stats().bytes_leased, 0);
+}
+
+/// Spin-safety of the chained engine (the look-back satellite): a
+/// chunk that panics mid-chain poisons its board block, so every
+/// chunk spinning on that chain unwinds through `MapError` instead
+/// of deadlocking on a prefix that will never be published. Both
+/// injection points matter — the chain head (everyone downstream
+/// waits on it) and a mid-chain chunk (upstream already published,
+/// downstream mid-wait). Afterwards every lease is back, the
+/// returned buffers are pooled, and the same pool + workspace serve
+/// a bit-exact rerun.
+#[test]
+fn chained_panic_poisons_board_and_returns_leases() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let pool = crate::util::ThreadPool::new(2);
+    let ws = BufferPool::new(usize::MAX);
+    let mut rng = Rng::new(75);
+    let (n, c, h, w) = (1, 2, 5, 320);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    // w=320, S=2 -> bounds (0,160),(160,320), planes {0,1}. Plane
+    // 1's tuples are unique to this geometry (no other suite
+    // produces segment ends at 160/320), so concurrently running
+    // tests never trip the hook.
+    for inject in [(1, 0, 160, 320), (1, 0, 0, 160)] {
+        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some(inject);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            fused_scan_dir_forced_ws(
+                &x,
+                &taps,
+                &lam,
+                Direction::L2R,
+                0,
+                ScanStrategy::Chained { s: 2 },
+                Phase2::Barrier,
+                &pool,
+                &ws,
+                None,
+            )
+        }));
+        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
+        let payload = match caught {
+            Ok(_) => panic!("{inject:?}: the chained engine must rethrow the panic"),
+            Err(p) => p,
+        };
+        // The surfaced payload is the injected one, or a waiter's
+        // secondary poisoned-chain panic when that lands in the
+        // MapError first — never a deadlock or a PoisonError.
+        let msg = crate::util::panic_message(&*payload);
+        assert!(
+            msg.contains("injected phase-1 panic") || msg.contains("chained scan"),
+            "{inject:?}: unexpected payload {msg:?}"
+        );
+        let s = ws.stats();
+        assert_eq!(s.bytes_leased, 0, "{inject:?}: leaked leases: {s:?}");
+        assert!(s.bytes_pooled > 0, "{inject:?}: returned buffers must be pooled");
+    }
+    // The pool and workspace still serve bit-exact chained scans.
+    let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
+    let after = fused_scan_dir_forced_ws(
+        &x,
+        &taps,
+        &lam,
+        Direction::L2R,
+        0,
+        ScanStrategy::Chained { s: 2 },
+        Phase2::Barrier,
+        &pool,
+        &ws,
+        None,
+    );
+    assert_eq!(reference.data, after.data);
+    assert_eq!(ws.stats().bytes_leased, 0);
+}
+
+/// The SIMD pin at the engine level: every vector kernel this host
+/// supports produces output exactly `==` the scalar kernel's across
+/// all four directions, every strategy/schedule, kchunk resets, and
+/// slab-boundary / degenerate widths. (The scalar kernel itself is
+/// pinned `==` the unfused reference by the suites above, so this
+/// transitively pins the vector kernels to the reference.) Flipping
+/// the process-global kernel override is safe even under concurrent
+/// tests precisely because of this property — any kernel produces
+/// the same bits.
+#[test]
+fn simd_kernels_pinned_bit_identical_to_scalar_across_engine_matrix() {
+    let kernels: Vec<&str> = ["avx2", "neon"]
+        .into_iter()
+        .filter(|k| simd::set_simd_override(k).is_ok())
+        .collect();
+    simd::set_simd_override("auto").unwrap();
+    if kernels.is_empty() {
+        // Scalar-only host: the vector kernels are pinned by the
+        // x86_64/aarch64 CI legs; nothing to compare here.
+        return;
+    }
+    let pool = crate::util::ThreadPool::new(4);
+    let ws = BufferPool::new(usize::MAX);
+    let mut rng = Rng::new(91);
+    // Slab crossings, the partial last slab, H=1 and W=1 columns.
+    let geoms = [
+        (1usize, 2usize, 5usize, SLAB - 1),
+        (1, 2, 5, SLAB + 1),
+        (1, 1, 1, 2 * SLAB + 3),
+        (1, 2, 2 * SLAB + 3, 1),
+        (2, 2, 9, 48),
+    ];
+    let cases = [
+        (ScanStrategy::PlanePar, Phase2::Barrier),
+        (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
+        (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
+        (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
+        (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
+    ];
+    for (n, c, h, w) in geoms {
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, 1, hc, wc);
+            // Full width plus one mid-column carry reset.
+            let kchunks =
+                if wc >= 2 && wc % 2 == 0 { vec![0usize, wc / 2] } else { vec![0usize] };
+            for &k in &kchunks {
+                for (strategy, phase2) in cases {
+                    simd::set_simd_override("scalar").unwrap();
+                    let base = fused_scan_dir_forced_ws(
+                        &x, &taps, &lam, d, k, strategy, phase2, &pool, &ws, None,
+                    );
+                    for kern in &kernels {
+                        simd::set_simd_override(kern).unwrap();
+                        let got = fused_scan_dir_forced_ws(
+                            &x, &taps, &lam, d, k, strategy, phase2, &pool, &ws, None,
+                        );
+                        assert_eq!(
+                            base.data, got.data,
+                            "{kern} != scalar: n{n} c{c} {h}x{w} {d:?} k{k} \
+                             {strategy:?} {phase2:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // The merged path: softmax-merge + modulation epilogue under
+    // DirFan (unreachable from the single-direction matrix) and the
+    // chained engine.
+    let (n, c, h, w) = (1usize, 2usize, 6usize, SLAB + 5);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_rl = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let t_bt = mk_taps(&mut rng, n, 1, w, h);
+    let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+    let logits = [0.4f32, -0.2, 1.1, 0.0];
+    for (strategy, phase2) in [
+        (ScanStrategy::DirFan, Phase2::Barrier),
+        (ScanStrategy::DirFan, Phase2::WaveDir),
+        (ScanStrategy::Segmented { s: 2 }, Phase2::WaveDir),
+        (ScanStrategy::Chained { s: 2 }, Phase2::Barrier),
+    ] {
+        simd::set_simd_override("scalar").unwrap();
+        let base = fused_merged_4dir_forced_ws(
+            &x, mtaps, &lam, &logits, 0, strategy, phase2, &pool, &ws, None,
+        );
+        for kern in &kernels {
+            simd::set_simd_override(kern).unwrap();
+            let got = fused_merged_4dir_forced_ws(
+                &x, mtaps, &lam, &logits, 0, strategy, phase2, &pool, &ws, None,
+            );
+            assert_eq!(
+                base.data, got.data,
+                "merged {kern} != scalar: {strategy:?} {phase2:?}"
+            );
+        }
+    }
+    simd::set_simd_override("auto").unwrap();
+    assert_eq!(ws.stats().bytes_leased, 0);
+}
+
+/// The bf16 panel-mode pin: with taps and chained panels stored as
+/// bf16 (threaded per call — never via the process-global override,
+/// which concurrently running `==` suites would observe), every
+/// strategy's output matches the f32 run elementwise within the
+/// documented tolerance `|bf16 - f32| <= (|f32| + 1) * 2^-6`, and
+/// the narrowing actually engages (bits differ from f32).
+#[test]
+fn bf16_panels_within_documented_tolerance_of_f32() {
+    let pool = crate::util::ThreadPool::new(4);
+    let ws = BufferPool::new(usize::MAX);
+    let mut rng = Rng::new(92);
+    // 2^-6, the documented pin; the merged rows get one extra bit
+    // of slack (2^-5) because the softmax merge can cancel |f32|
+    // while the per-direction errors it averages do not cancel.
+    let tol_ok = |f: &[f32], b: &[f32], eps: f32| {
+        f.iter().zip(b).all(|(&a, &o)| (a - o).abs() <= (a.abs() + 1.0) * eps)
+    };
+    let (n, c, h, w) = (1usize, 2usize, 7usize, 2 * SLAB + 3);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    for d in DIRECTIONS {
+        let (hc, wc) = hw_src(h, w, d);
+        let taps = mk_taps(&mut rng, n, 1, hc, wc);
+        for (strategy, phase2) in [
+            (ScanStrategy::PlanePar, Phase2::Barrier),
+            (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
+            (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
+        ] {
+            let full = fused_scan_dir_forced_ws(
+                &x,
+                &taps,
+                &lam,
+                d,
+                0,
+                strategy,
+                phase2,
+                &pool,
+                &ws,
+                Some(Precision::F32),
+            );
+            let half = fused_scan_dir_forced_ws(
+                &x,
+                &taps,
+                &lam,
+                d,
+                0,
+                strategy,
+                phase2,
+                &pool,
+                &ws,
+                Some(Precision::Bf16),
+            );
+            assert!(
+                tol_ok(&full.data, &half.data, 0.015_625),
+                "bf16 out of tolerance: {d:?} {strategy:?} {phase2:?}"
+            );
+            assert_ne!(
+                full.data, half.data,
+                "bf16 did not engage: {d:?} {strategy:?} {phase2:?}"
+            );
+            // An explicit F32 equals the default (None) bits.
+            let default = fused_scan_dir_forced_ws(
+                &x, &taps, &lam, d, 0, strategy, phase2, &pool, &ws, None,
+            );
+            assert_eq!(full.data, default.data, "{d:?} {strategy:?} {phase2:?}");
+        }
+    }
+    // The merged epilogue (softmax merge + modulation) on top of
+    // bf16-staged scans, across the fan and chained engines.
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_rl = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let t_bt = mk_taps(&mut rng, n, 1, w, h);
+    let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+    let logits = [0.3f32, -0.7, 0.2, 1.0];
+    for (strategy, phase2) in [
+        (ScanStrategy::DirFan, Phase2::WaveDir),
+        (ScanStrategy::Segmented { s: 2 }, Phase2::Barrier),
+        (ScanStrategy::Chained { s: 2 }, Phase2::Barrier),
+    ] {
+        let full = fused_merged_4dir_forced_ws(
+            &x,
+            mtaps,
+            &lam,
+            &logits,
+            0,
+            strategy,
+            phase2,
+            &pool,
+            &ws,
+            Some(Precision::F32),
+        );
+        let half = fused_merged_4dir_forced_ws(
+            &x,
+            mtaps,
+            &lam,
+            &logits,
+            0,
+            strategy,
+            phase2,
+            &pool,
+            &ws,
+            Some(Precision::Bf16),
+        );
+        assert!(
+            tol_ok(&full.data, &half.data, 0.031_25),
+            "merged bf16 out of tolerance: {strategy:?} {phase2:?}"
+        );
+        assert_ne!(full.data, half.data, "merged bf16 did not engage: {strategy:?}");
+    }
+    assert_eq!(ws.stats().bytes_leased, 0);
+}
+
+// =====================================================================
+// Tiled streaming (bounded-memory row-band execution)
+// =====================================================================
+
+/// The tiled `==` matrix: every inner strategy × band sizes hitting
+/// each grouping edge (a single column, a prime, an aligned power of
+/// two, and ≥ the axis — the degenerate one-band case that IS the
+/// untiled engine) × all four directions × kchunk divisors × 1- and
+/// multi-thread pools. The pin is exact `==` against the untiled fused
+/// engine, which the suites above pin `==` to `scan_l2r` /
+/// `scan_l2r_split` — so tiled is transitively pinned to the serial
+/// reference.
+#[test]
+fn tiled_bit_exact_across_band_matrix() {
+    check("tiled == untiled across bands/dirs/inners/kchunks", |g| {
+        let n = g.int_in(1, 2);
+        let c = g.int_in(1, 2);
+        let h = g.int_in(1, 9);
+        let w = g.int_in(1, 9);
+        let threads = *g.pick(&[1usize, 3]);
+        let pool = crate::util::ThreadPool::new(threads);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+        for d in DIRECTIONS {
+            let (hc, wc) = hw_src(h, w, d);
+            let taps = mk_taps(&mut rng, n, 1, hc, wc);
+            let k = *g.pick(&divisors(wc));
+            let reference = fused_scan_dir(&x, &taps, &lam, d, k);
+            let s = g.int_in(1, wc.min(4));
+            for inner in [TileInner::Seq, TileInner::Segmented { s }, TileInner::Chained { s }]
+            {
+                for band_rows in [1usize, 3, 4, wc, wc + 5] {
+                    let ws = BufferPool::new(usize::MAX);
+                    let tiled = fused_scan_dir_forced_ws(
+                        &x,
+                        &taps,
+                        &lam,
+                        d,
+                        k,
+                        ScanStrategy::Tiled { band_rows, inner },
+                        Phase2::Barrier,
+                        &pool,
+                        &ws,
+                        None,
+                    );
+                    ensure(
+                        tiled.data == reference.data,
+                        format!(
+                            "tiled != untiled: {h}x{w} {d:?} k{k} s{s} \
+                             band{band_rows} {inner:?} t{threads}"
+                        ),
+                    )?;
+                    ensure(
+                        ws.stats().bytes_leased == 0,
+                        format!("tiled leaked leases: {inner:?} band{band_rows}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The three-way deterministic pin of the issue on a ragged (prime)
+/// axis: tiled == the untiled segmented/chained engines == the
+/// `scan_l2r_split` reference at the same count, across band sizes that
+/// group 1, several, and all pieces — plus the `Seq` inner against the
+/// plain sequential reference, with a kchunk that resets mid-band.
+#[test]
+fn tiled_matches_split_reference() {
+    let pool = crate::util::ThreadPool::new(2);
+    let mut rng = Rng::new(91);
+    let (n, c, h, w) = (1, 2, 5, 97);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    for s in [2usize, 3, 5] {
+        let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
+        for band_rows in [1usize, 7, 32, 97, 128] {
+            for inner in [TileInner::Segmented { s }, TileInner::Chained { s }] {
+                let ws = BufferPool::new(usize::MAX);
+                let tiled = fused_scan_dir_forced_ws(
+                    &x,
+                    &taps,
+                    &lam,
+                    Direction::L2R,
+                    0,
+                    ScanStrategy::Tiled { band_rows, inner },
+                    Phase2::Barrier,
+                    &pool,
+                    &ws,
+                    None,
+                );
+                assert_eq!(
+                    reference.data, tiled.data,
+                    "tiled != split: s{s} band{band_rows} {inner:?}"
+                );
+            }
+        }
+    }
+    // Seq inner vs the sequential reference, with chunk resets landing
+    // inside and on band boundaries (band 7 vs reset every 97/97=1..).
+    for kchunk in [0usize, 97] {
+        let reference = scan_l2r(&x, &taps, &lam, kchunk);
+        for band_rows in [1usize, 7, 32, 200] {
+            let ws = BufferPool::new(usize::MAX);
+            let tiled = fused_scan_dir_forced_ws(
+                &x,
+                &taps,
+                &lam,
+                Direction::L2R,
+                kchunk,
+                ScanStrategy::Tiled { band_rows, inner: TileInner::Seq },
+                Phase2::Barrier,
+                &pool,
+                &ws,
+                None,
+            );
+            assert_eq!(reference.data, tiled.data, "seq tiled != ref: band{band_rows}");
+        }
+    }
+}
+
+/// Tiled 4-direction merged passes: directions run serially band by
+/// band, so every pixel must still receive its k = 0..4 merge ops in
+/// the reference order — exact `==` with `merged_4dir_ref` for every
+/// inner.
+#[test]
+fn tiled_merged_4dir_bit_exact() {
+    let pool = crate::util::ThreadPool::new(3);
+    let mut rng = Rng::new(92);
+    let (n, c, h, w) = (1, 2, 7, 9);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let t_lr = mk_taps(&mut rng, n, 1, h, w);
+    let t_rl = mk_taps(&mut rng, n, 1, h, w);
+    let t_tb = mk_taps(&mut rng, n, 1, w, h);
+    let t_bt = mk_taps(&mut rng, n, 1, w, h);
+    let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
+    let logits = [0.4f32, -0.2, 1.1, 0.0];
+    let reference = merged_4dir_ref(&x, mtaps, &lam, &logits, 0);
+    for inner in [TileInner::Seq, TileInner::Segmented { s: 2 }, TileInner::Chained { s: 2 }] {
+        for band_rows in [1usize, 4, 16] {
+            let ws = BufferPool::new(usize::MAX);
+            let tiled = fused_merged_4dir_forced_ws(
+                &x,
+                mtaps,
+                &lam,
+                &logits,
+                0,
+                ScanStrategy::Tiled { band_rows, inner },
+                Phase2::Barrier,
+                &pool,
+                &ws,
+                None,
+            );
+            assert_eq!(
+                reference.data, tiled.data,
+                "tiled merged != ref: band{band_rows} {inner:?}"
+            );
+            assert_eq!(ws.stats().bytes_leased, 0);
+        }
+    }
+}
+
+/// The allocation-free steady state extends to tiling: on a 1-thread
+/// pool, rerunning an identical tiled pass against a warm workspace
+/// records ZERO pool misses for every inner — band leases return and
+/// are re-acquired in a reproducible sequence.
+#[test]
+fn tiled_warm_rerun_records_zero_misses() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let mut rng = Rng::new(93);
+    let (n, c, h, w) = (1, 2, 6, 48);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    for inner in [TileInner::Seq, TileInner::Segmented { s: 3 }, TileInner::Chained { s: 3 }] {
+        let ws = BufferPool::new(usize::MAX);
+        let strategy = ScanStrategy::Tiled { band_rows: 16, inner };
+        let first = fused_scan_dir_forced_ws(
+            &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws, None,
+        );
+        let s1 = ws.stats();
+        assert!(s1.misses > 0, "{inner:?}: cold run must allocate");
+        assert_eq!(s1.bytes_leased, 0, "{inner:?}: leases must all return");
+        let second = fused_scan_dir_forced_ws(
+            &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws, None,
+        );
+        let s2 = ws.stats();
+        assert_eq!(s2.misses, s1.misses, "{inner:?}: warm tiled rerun allocated");
+        assert!(s2.hits > s1.hits, "{inner:?}: warm tiled rerun must hit the pool");
+        assert_eq!(first.data, second.data);
+    }
+}
+
+/// The bounded-memory claim itself: on a wide axis, streaming in small
+/// bands must hold strictly less workspace at peak than the untiled
+/// engine — peak `bytes_leased`, measured on fresh pools.
+#[test]
+fn tiled_peak_lease_below_untiled() {
+    let pool1 = crate::util::ThreadPool::new(1);
+    let mut rng = Rng::new(94);
+    let (n, c, h, w) = (1, 2, 8, 512);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let untiled_ws = BufferPool::new(usize::MAX);
+    let untiled = fused_scan_dir_forced_ws(
+        &x,
+        &taps,
+        &lam,
+        Direction::L2R,
+        0,
+        ScanStrategy::Chained { s: 4 },
+        Phase2::Barrier,
+        &pool1,
+        &untiled_ws,
+        None,
+    );
+    let tiled_ws = BufferPool::new(usize::MAX);
+    let tiled = fused_scan_dir_forced_ws(
+        &x,
+        &taps,
+        &lam,
+        Direction::L2R,
+        0,
+        ScanStrategy::Tiled { band_rows: 64, inner: TileInner::Chained { s: 4 } },
+        Phase2::Barrier,
+        &pool1,
+        &tiled_ws,
+        None,
+    );
+    assert_eq!(untiled.data, tiled.data);
+    let (up, tp) = (untiled_ws.stats().peak_leased, tiled_ws.stats().peak_leased);
+    assert!(
+        tp * 2 <= up,
+        "tiled peak {tp} must be at most half the untiled peak {up}"
+    );
+}
+
+/// The planner × engine integration: a workspace whose retention cap
+/// is far below the pass's untiled footprint makes the Auto path
+/// stream the request (no forced strategy anywhere) — and the output
+/// stays bit-identical to the uncapped run.
+#[test]
+fn auto_plan_tiles_over_cap_workspace() {
+    let pool = crate::util::ThreadPool::new(4);
+    let mut rng = Rng::new(95);
+    let (n, c, h, w) = (1, 1, 8, 512);
+    let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
+    let taps = mk_taps(&mut rng, n, 1, h, w);
+    let reference = fused_scan_dir(&x, &taps, &lam, Direction::L2R, 0);
+    // 64 KiB cap: far below the staged-tap panel alone (3 * 8 * 512
+    // floats per plane), so maybe_tile must wrap the auto decision.
+    let geom = plan::ScanGeometry::single_dir(n * c, h, w);
+    let auto = plan::plan_scan_with(&geom, 0, pool.threads(), plan::PlanOverride::Auto);
+    let capped = plan::maybe_tile(auto, &geom, pool.threads(), 1, 64 * 1024, false);
+    assert!(
+        matches!(capped.strategy, ScanStrategy::Tiled { .. }),
+        "cap must force tiling, got {:?}",
+        capped.strategy
+    );
+    let ws = BufferPool::new(64 * 1024);
+    let out = fused_scan_dir_pool_ws(&x, &taps, &lam, Direction::L2R, 0, &pool, &ws);
+    assert_eq!(reference.data, out.data);
+    assert_eq!(ws.stats().bytes_leased, 0);
+}
+
+/// The `ExternalCarry` wire format — the serialization seam a LASP-2
+/// style multi-node split ships between ranks: `to_bytes`/`from_bytes`
+/// round-trips every column bit for bit (including -0.0 and subnormal
+/// values), and malformed payloads are rejected, not misread.
+#[test]
+fn external_carry_wire_roundtrip() {
+    let mut ec = ExternalCarry::zeros(5, 3);
+    let vals = [1.5f32, -0.0, f32::MIN_POSITIVE / 2.0, -7.25, 1e-38];
+    for p in 0..3 {
+        for (i, v) in vals.iter().enumerate() {
+            ec.column_mut(p)[i] = v * (p as f32 + 1.0);
+        }
+    }
+    let bytes = ec.to_bytes();
+    let back = ExternalCarry::from_bytes(&bytes).expect("roundtrip must parse");
+    assert_eq!(back.hc(), 5);
+    assert_eq!(back.nplanes(), 3);
+    for p in 0..3 {
+        let (a, b) = (ec.column(p), back.column(p));
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "column {p} must round-trip bit-exactly"
+        );
+    }
+    // Truncated, oversized, and garbage-header payloads all fail
+    // cleanly.
+    assert!(ExternalCarry::from_bytes(&bytes[..bytes.len() - 1]).is_none());
+    assert!(ExternalCarry::from_bytes(&[0u8; 3]).is_none());
+    let mut oversized = bytes.clone();
+    oversized.extend_from_slice(&[0u8; 4]);
+    assert!(ExternalCarry::from_bytes(&oversized).is_none());
+}

@@ -1,0 +1,306 @@
+//! The tiled streaming executor ([`crate::scan::plan::ScanStrategy::Tiled`]):
+//! run a huge geometry as a stream of bands along the scan axis, each
+//! band executed by the full existing engine from the [`ExternalCarry`]
+//! handed off by the previous band.
+//!
+//! Memory, not arithmetic, is what tiling changes: every band leases
+//! its staged taps, retained panels, and scratch from the workspace and
+//! returns them before the next band starts, so peak `bytes_leased` is
+//! bounded by ONE band regardless of the full geometry. The carry
+//! columns crossing band boundaries are KiB-scale [`ExternalCarry`]
+//! values — the serialization seam a LASP-2-style multi-node split
+//! would ship between processes.
+//!
+//! Bit-exactness (`==` with the untiled engines and `scan_l2r` /
+//! `scan_l2r_split`, pinned by tests) rests on three invariants:
+//!
+//! 1. **Directions run serially, bands within a direction serially.**
+//!    Each output pixel receives its k = 0..ndirs epilogue ops in
+//!    exactly the untiled order (bands of one direction write disjoint
+//!    spatial regions).
+//! 2. **Segment-bearing inners keep the untiled piece set.** A band
+//!    groups whole pieces of `segment_bounds(wc, s)` — never re-cutting
+//!    one — so phase-1 pieces, correction seams, and chunk resets (on
+//!    global column indices throughout) are identical to the untiled
+//!    `Segmented{s}` / `Chained{s}` run; the only change is *when* a
+//!    piece's correction learns its carry (from the previous band's
+//!    exit instead of an in-call chain — same f32 value either way,
+//!    since a band's exit IS the corrected last column).
+//! 3. **`Seq` bands replay the sequential recurrence.** The carry
+//!    column crosses the band boundary exactly as it crosses a slab
+//!    boundary inside [`run_plane`](super::chunk::run_plane).
+//!
+//! [`run_plane`]: super::chunk::run_plane
+
+use super::carry::{run_engine_chained_into, CarrySource, ChainOpts, ExternalCarry};
+use super::chunk::{scan_piece_into, scan_slab, segment_bounds, FusedScratch};
+use super::drain::{drain_dir_fused, drain_scatter, DrainScratch};
+use super::pack::{pack_slab, StagedTaps, SLAB};
+use super::{out_tensor, DirInput};
+use crate::scan::plan::TileInner;
+use crate::scan::simd::Precision;
+use crate::tensor::Tensor;
+use crate::util::workspace::BufferPool;
+use crate::util::ThreadPool;
+
+/// Group the untiled piece list into bands of whole pieces: `g`
+/// consecutive pieces per band, where `g` is the most pieces whose
+/// combined extent stays within `band_rows` (always at least one —
+/// a band never re-cuts a piece, so a `band_rows` smaller than one
+/// piece degrades to one piece per band).
+fn piece_groups(npieces: usize, piece_len: usize, band_rows: usize) -> Vec<(usize, usize)> {
+    let g = (band_rows.max(piece_len) / piece_len).max(1);
+    (0..npieces).step_by(g).map(|b0| (b0, (b0 + g).min(npieces))).collect()
+}
+
+/// Execute the pass as a stream of row-band tiles (see the module
+/// docs). `band_rows` is the band extent along the scan axis in
+/// canonical columns — spatial rows for T2B/B2T, spatial columns for
+/// L2R/R2L; `inner` is the engine each band runs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine_tiled(
+    dirs: &[DirInput<'_>],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    out_shape: &[usize],
+    pool: Option<&ThreadPool>,
+    band_rows: usize,
+    inner: TileInner,
+    ws: &BufferPool,
+    out_buf: Option<Vec<f32>>,
+    prec: Precision,
+) -> Tensor {
+    let c = out_shape[1];
+    let (h, w) = (out_shape[2], out_shape[3]);
+    let nplanes = out_shape[0] * c;
+    let band_rows = band_rows.max(1);
+    let mut out = out_tensor(out_shape, out_buf);
+    let last = dirs.len() - 1;
+    for (k, di) in dirs.iter().enumerate() {
+        let (hc, wc) = (di.taps.h, di.taps.w);
+        if wc == 0 {
+            continue;
+        }
+        // The band hand-off: `entry` seeds this band, the band resolves
+        // its own exit, and the pair swaps. `to_bytes`/`from_bytes` on
+        // [`ExternalCarry`] is the (bit-exact) wire format a multi-node
+        // split would insert right here.
+        let mut entry = ExternalCarry::zeros(hc, nplanes);
+        let mut exit = ExternalCarry::zeros(hc, nplanes);
+        match inner {
+            TileInner::Seq => {
+                let mut lo = 0;
+                while lo < wc {
+                    let hi = (lo + band_rows).min(wc);
+                    band_seq(
+                        di, c, (h, w), lo, hi, wts, gain, k, last, &entry, &mut exit,
+                        pool, ws, prec, &mut out.data,
+                    );
+                    std::mem::swap(&mut entry, &mut exit);
+                    lo = hi;
+                }
+            }
+            TileInner::Segmented { s } => {
+                let bounds = segment_bounds(wc, s.max(1));
+                let piece_len = bounds[0].1 - bounds[0].0;
+                for (b0, b1) in piece_groups(bounds.len(), piece_len, band_rows) {
+                    band_segmented(
+                        di, c, (h, w), &bounds[b0..b1], wts, gain, k, last, &entry,
+                        &mut exit, pool, ws, prec, &mut out.data,
+                    );
+                    std::mem::swap(&mut entry, &mut exit);
+                }
+            }
+            TileInner::Chained { s } => {
+                let s = s.max(1);
+                let bounds = segment_bounds(wc, s);
+                let piece_len = bounds[0].1 - bounds[0].0;
+                let dir_one = std::slice::from_ref(di);
+                for (b0, b1) in piece_groups(bounds.len(), piece_len, band_rows) {
+                    let (lo, hi) = (bounds[b0].0, bounds[b1 - 1].1);
+                    let staged = [StagedTaps::build_band(di.taps, pool, ws, prec, lo, hi)];
+                    run_engine_chained_into(
+                        dir_one,
+                        &staged,
+                        wts,
+                        gain,
+                        out_shape,
+                        pool,
+                        s,
+                        ws,
+                        prec,
+                        ChainOpts {
+                            band: Some((b0, b1)),
+                            entry: Some(&entry),
+                            exit: Some(&mut exit),
+                            ep: Some((k, last)),
+                        },
+                        &mut out.data,
+                    );
+                    std::mem::swap(&mut entry, &mut exit);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One `Seq` band of one direction: every plane advances the plain
+/// sequential recurrence over columns `[lo, hi)` from its entry carry —
+/// the same slab loop as the plane pipeline, with the band boundary
+/// crossing the carry column exactly like a slab boundary.
+#[allow(clippy::too_many_arguments)]
+fn band_seq(
+    di: &DirInput<'_>,
+    c: usize,
+    hw: (usize, usize),
+    lo: usize,
+    hi: usize,
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    k: usize,
+    last: usize,
+    entry: &ExternalCarry,
+    exit: &mut ExternalCarry,
+    pool: Option<&ThreadPool>,
+    ws: &BufferPool,
+    prec: Precision,
+    out_data: &mut [f32],
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let hc = di.taps.h;
+    let hmax = h.max(w);
+    let staged = StagedTaps::build_band(di.taps, pool, ws, prec, lo, hi);
+    let jobs: Vec<(usize, &mut [f32], &mut [f32])> = out_data
+        .chunks_mut(plane)
+        .zip(exit.columns_mut())
+        .enumerate()
+        .map(|(p, (os, ec))| (p, os, ec))
+        .collect();
+    let run_one = |(p, os, ecol): (usize, &mut [f32], &mut [f32])| {
+        let mut scratch = FusedScratch::new(hmax, ws);
+        CarrySource::External(entry, p).seed(&mut scratch.carry[..hc]);
+        let base = p * plane;
+        let xs = &di.x.data[base..base + plane];
+        let ls = &di.lam.data[base..base + plane];
+        let taps = staged.panels(p / c, p % c);
+        let gv = gain.map(|g| g[p % c]);
+        let mut i0 = lo;
+        while i0 < hi {
+            let sw = SLAB.min(hi - i0);
+            pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut scratch.b);
+            scan_slab(
+                hc,
+                i0,
+                sw,
+                di.chunk,
+                &scratch.b,
+                taps,
+                &scratch.zeros,
+                &mut scratch.carry,
+                &mut scratch.h,
+            );
+            drain_scatter(&scratch.h, h, w, di.d, i0, sw, hc, os, wts, k, last, gv);
+            i0 += sw;
+        }
+        ecol[..hc].copy_from_slice(&scratch.carry[..hc]);
+    };
+    match pool {
+        Some(pool) if pool.threads() > 1 && jobs.len() > 1 => pool.map(jobs, run_one),
+        _ => jobs.into_iter().for_each(run_one),
+    }
+}
+
+/// One `Segmented{s}` band of one direction: phase-1 scans the band's
+/// (untiled-identical) pieces from zero carries into a band-sized
+/// retained panel, phase-2 drains them through the fused-correction
+/// drain seeded by the band's [`CarrySource::External`] entry. The exit
+/// carry is the drain's tracked corrected last column.
+#[allow(clippy::too_many_arguments)]
+fn band_segmented(
+    di: &DirInput<'_>,
+    c: usize,
+    hw: (usize, usize),
+    pieces: &[(usize, usize)],
+    wts: Option<&[f32; 4]>,
+    gain: Option<&[f32]>,
+    k: usize,
+    last: usize,
+    entry: &ExternalCarry,
+    exit: &mut ExternalCarry,
+    pool: Option<&ThreadPool>,
+    ws: &BufferPool,
+    prec: Precision,
+    out_data: &mut [f32],
+) {
+    let (h, w) = hw;
+    let plane = h * w;
+    let hc = di.taps.h;
+    let hmax = h.max(w);
+    let nplanes = out_data.len() / plane.max(1);
+    let (lo, hi) = (pieces[0].0, pieces[pieces.len() - 1].1);
+    let band_cols = hi - lo;
+    let staged = [StagedTaps::build_band(di.taps, pool, ws, prec, lo, hi)];
+    let dir_one = std::slice::from_ref(di);
+    // Band-sized retained panels: per plane, the band's canonical
+    // columns. Zero-reset for the same pool-history-independence
+    // argument as the untiled segmented engine.
+    let mut hbufs = ws.acquire_zeroed(nplanes * band_cols * hc);
+    {
+        let mut jobs: Vec<(usize, usize, usize, &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = &mut hbufs;
+        for p in 0..nplanes {
+            for &(plo, phi) in pieces {
+                let (buf, tail) = std::mem::take(&mut rest).split_at_mut((phi - plo) * hc);
+                rest = tail;
+                jobs.push((p, plo, phi, buf));
+            }
+        }
+        let scan_piece = |(p, plo, phi, buf): (usize, usize, usize, &mut [f32])| {
+            scan_piece_into(dir_one, &staged, c, (h, w), hmax, p, 0, plo, phi, buf, ws);
+        };
+        match pool {
+            Some(pool) if pool.threads() > 1 && jobs.len() > 1 => pool.map(jobs, scan_piece),
+            _ => jobs.into_iter().for_each(scan_piece),
+        }
+    }
+    let planes: Vec<(usize, &mut [f32], &[f32], &mut [f32])> = out_data
+        .chunks_mut(plane)
+        .zip(hbufs.chunks(band_cols * hc))
+        .zip(exit.columns_mut())
+        .enumerate()
+        .map(|(p, ((os, pb), ec))| (p, os, pb, ec))
+        .collect();
+    let correct_and_drain = |(p, os, pb, ecol): (usize, &mut [f32], &[f32], &mut [f32])| {
+        let mut scratch = DrainScratch::new(hmax, ws);
+        let taps = staged[0].panels(p / c, p % c);
+        let piece_refs: Vec<&[f32]> = pieces
+            .iter()
+            .map(|&(plo, phi)| &pb[(plo - lo) * hc..(phi - lo) * hc])
+            .collect();
+        drain_dir_fused(
+            &piece_refs,
+            pieces,
+            hc,
+            di.chunk,
+            taps,
+            (h, w),
+            di.d,
+            os,
+            wts,
+            k,
+            last,
+            gain.map(|g| g[p % c]),
+            CarrySource::External(entry, p),
+            &mut scratch,
+        );
+        ecol[..hc].copy_from_slice(&scratch.carry[..hc]);
+    };
+    match pool {
+        Some(pool) if pool.threads() > 1 && planes.len() > 1 => {
+            pool.map(planes, correct_and_drain);
+        }
+        _ => planes.into_iter().for_each(correct_and_drain),
+    }
+}

@@ -1,4246 +1,26 @@
-//! Column-staged fused scan engine: one pass for pack → 4-direction
-//! scan → merge → modulate.
+//! Compatibility facade over the fused scan engine.
 //!
-//! GSPN-2's system contribution is three fixes to the same hot path, and
-//! this module is their CPU analog — the reference path in [`super::core`] /
-//! [`super::direction`] reproduces all three sins, the engine here removes
-//! them while staying **bit-identical** (exact `==` on `data`, pinned by
-//! property tests) to that reference:
+//! This file *was* the 4,246-line fused-engine monolith; the
+//! implementation now lives in the [`super::engine`] module tree,
+//! split along the carry algebra — `engine/pack.rs` (canonical
+//! staging), `engine/chunk.rs` (chunk execution), `engine/carry.rs`
+//! (carry resolution: the `CarrySource` contract, `ExternalCarry`
+//! hand-offs, the chained engine), `engine/drain.rs` (the scatter
+//! epilogue + segmented engines), and `engine/tiled.rs` (the streaming
+//! row-band executor). See [`super::engine`]'s module docs for the map.
 //!
-//! 1. **Micro-launches → block-granular work.** The reference submits one
-//!    pool job per (N·C) plane (the CPU twin of the paper's thousands of
-//!    per-column kernel launches). The fused engine submits one job per
-//!    *block* of planes, the block count sized off
-//!    [`ThreadPool::threads`] (§ "fusing the column loop into a single
-//!    kernel launch"), so dispatch overhead is O(threads), not O(planes).
-//!
-//! 2. **Shared-memory column staging → L1-resident column slabs.** The
-//!    reference walks columns over a row-major layout: every inner-loop
-//!    access strides by `W` floats and nothing vectorizes. The engine
-//!    processes each plane in slabs of [`SLAB`] canonical columns: the
-//!    pack step gathers the input term `b = lam ⊙ x` (one fused product,
-//!    exactly the `ls[p] * xs[p]` unit of the reference expression) into
-//!    a column-major slab — row index contiguous, the CPU analog of the
-//!    paper's shared-memory column staging — with the direction's
-//!    orientation folded into the gather, so no
-//!    `to_canonical`/`from_canonical`/`flip_last` tensor is ever
-//!    materialized. The previous column is read straight out of the slab
-//!    (a carry column crosses slab boundaries), and the scan inner loop
-//!    is unit-stride over four L1-resident columns and runs in explicit
-//!    SIMD lanes ([`super::simd`]) with a scalar fallback pinned
-//!    bit-identical.
-//!    Taps are staged once per (batch, weight-channel) and — with the
-//!    §4.2 channel-shared weights — reused by every channel plane.
-//!
-//! 3. **Global-memory round trips → fused epilogue.** The reference
-//!    materializes two canonical copies per direction, a full scan
-//!    output per direction, a `from_canonical` copy of each, a separate
-//!    merge-accumulate pass, and `output_modulation`'s clone + second
-//!    traversal — four full intermediate tensors and change. The
-//!    scatter-back epilogue here folds the inverse orientation, the
-//!    softmax-weighted 4-direction merge, *and* the `u ⊙ h` output
-//!    modulation into the per-slab drain; no directional intermediate
-//!    ever exists in memory, and scratch is O(SLAB·max(H, W)) per job
-//!    instead of O(H·W) panels.
-//!
-//! 4. **Low-occupancy geometries → planned decompositions.** Plane
-//!    blocks are the only parallelism above, so a single
-//!    large-resolution request (few N·C planes, huge H·W — the §5.1
-//!    occupancy collapse) runs nearly serial. Strategy selection lives
-//!    in the execution planner ([`super::plan::plan_scan`]) — this
-//!    module only *executes* whichever plan it is handed:
-//!
-//!    * `Segmented { s }` — the two-phase decomposition of
-//!      [`super::split`], fused end to end: phase 1 scans every (plane,
-//!      direction, segment) from a zero incoming carry in parallel —
-//!      the same pack/unit-stride-scan slab pipeline, retaining the
-//!      canonical columns instead of scattering them — and phase 2
-//!      chains the true carries across segment boundaries as a linear
-//!      correction scan (`correct_col` in [`super::simd`]) **computed
-//!      on the fly inside
-//!      the scatter drain** ([`drain_dir_fused`]): each panel element
-//!      is read exactly once, the per-column correction is added in
-//!      registers, and the corrected value goes straight through the
-//!      inverse-orientation + merge + modulation epilogue. The retained
-//!      panel is never re-written — the separate in-place correction
-//!      pass of the PR 3/4 engines (kept as
-//!      [`correct_and_drain_pieces`], the two-pass bench/bit reference)
-//!      re-touched the whole panel between phase 1 and the drain, the
-//!      exact global-memory round trip §5 eliminates on the GPU.
-//!      Segmented arithmetic is exactly `scan_l2r_split`'s two-phase
-//!      order (pinned `==` by tests): `phase1 + corr` is the same f32
-//!      add whether it lands in the panel or in the drain.
-//!    * `DirFan` — for merged passes: one phase-1 job per (plane,
-//!      direction) scanning its *full* width from the true zero carry
-//!      (already exact, no correction), then a fixed-k-order merge
-//!      drain per plane. Bit-identical to the plane path; executed as
-//!      the `s = 1` degenerate case of the segmented engine.
-//!    * `Chained { s }` — the single-pass decoupled-look-back engine
-//!      ([`run_engine_chained`]): the same (plane, direction, segment)
-//!      decomposition, but each chunk is ONE job that scans from a
-//!      zero carry, publishes its aggregate on a [`BlockBoard`],
-//!      resolves its true incoming carry by looking back over
-//!      predecessors' published prefixes/aggregates (helping with
-//!      other chunks or assisting the pool while it waits), corrects
-//!      its own panel while still cache-hot, publishes its inclusive
-//!      prefix, and drains through the same fused epilogue. No phase
-//!      barrier, no retained-panel array, no second panel read —
-//!      two-phase engine overhead retired, bits unchanged (the fold
-//!      replays the exact `correct_col` recurrence + skip rules of the
-//!      two-phase order; pinned `==` against `scan_l2r_split` and the
-//!      segmented engine by the chained property suite).
-//!    * The **wavefront** flag replaces the global barrier between the
-//!      phases with dependency-aware pool submission
-//!      ([`crate::util::ThreadPool::run_graph`]). The drain of each
-//!      (plane, direction) is its own continuation — chained after the
-//!      same plane's previous direction to preserve the k = 0..4 merge
-//!      order, depending only on its *own* direction's phase-1 pieces —
-//!      so direction k's drain overlaps both other planes' phase 1 and
-//!      the same plane's direction-(k+1) scans (4 continuations per
-//!      plane instead of PR 4's 1). Scheduling only — the arithmetic
-//!      (and every bit) matches the barrier path.
-//!
-//!    The plane-parallel regime is untouched and stays bit-identical to
-//!    the serial reference.
-//!
-//! Bit-exactness: per element the engine evaluates exactly the reference
-//! expression `up + ct + dn + (lam·x)` in the same association,
-//! accumulates directions in the same `k = 0..4` order, and multiplies
-//! the modulation gain after the full accumulation — memory layout
-//! changes, arithmetic does not (Rust never reassociates or contracts
-//! float ops, and the explicit SIMD kernels of [`super::simd`] evaluate
-//! the same association per lane with no FMA, so vectorization cannot
-//! perturb results). The segmented path reassociates only where the
-//! reference decomposition (`scan_l2r_split`) does, and reproduces *its*
-//! bits exactly. The opt-in `scan.precision = bf16` mode (see
-//! [`super::simd`]) narrows staged taps and chained panels to bf16
-//! storage and is the one deliberate exception: tolerance-pinned, never
-//! the default.
-//!
-//! **Workspace pooling.** Every per-call scratch buffer — staged-tap
-//! panels, pack/scan slabs, retained phase-1 panels (`hbufs`), wavefront
-//! piece buffers, and the correction columns — is leased from a
-//! [`BufferPool`] workspace instead of `vec!`-allocated, so steady-state
-//! serving of a warm bucket performs zero heap allocations in the scan
-//! hot path (pinned by the pool-miss counter tests). Leases return on
-//! drop, *including during unwinding*, so a panicking piece job cannot
-//! leak scratch. Buffers the old code relied on being zeroed (carry and
-//! `zeros` columns, correction ping-pong, retained panels) are
-//! re-acquired through [`BufferPool::acquire_zeroed`]; fully-overwritten
-//! buffers (pack/scan slabs, staged taps, staging columns) skip the
-//! reset — bit-exactness is unchanged either way, pinned by the
-//! pooled-vs-fresh property tests. The one deliberate non-pooled
-//! allocation is the output tensor itself: it escapes to the caller (the
-//! serving reply), so its storage cannot return to the pool.
+//! Every historical `crate::scan::fused::*` entry-point path is
+//! preserved here as a re-export, so callers (and muscle memory) keep
+//! working.
 
-use super::direction::{merge_weights, Direction, DIRECTIONS};
-use super::plan::{self, ScanGeometry, ScanStrategy};
-use super::simd::{self, bf16_narrow, bf16_widen, EpOp, Precision, TapPanels};
-use super::taps::{Taps, TAP_CENTER, TAP_DOWN, TAP_UP};
-use crate::tensor::Tensor;
-use crate::util::workspace::{
-    BlockBoard, BufferPool, Lease, BLOCK_AGG, BLOCK_POISONED, BLOCK_PREFIX,
+pub use super::engine::{
+    fused_merged_4dir, fused_merged_4dir_chained, fused_merged_4dir_fan, fused_merged_4dir_par,
+    fused_merged_4dir_pool, fused_merged_4dir_seg, fused_merged_4dir_seg_wave,
+    fused_merged_4dir_seg_wave_twopass, fused_merged_canonical, fused_merged_canonical_ws,
+    fused_scan_dir, fused_scan_dir_chained, fused_scan_dir_pool, fused_scan_dir_pool_ws,
+    fused_scan_dir_seg, fused_scan_dir_seg_wave, fused_scan_dir_seg_wave_twopass, fused_scan_l2r,
+    fused_scan_l2r_chained, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_pool_ws,
+    fused_scan_l2r_pool_ws_into, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
+    fused_scan_l2r_seg_wave_twopass, ExternalCarry,
 };
-use crate::util::{lock_unpoisoned, GraphBuilder, NodeId, ThreadPool};
-use std::cell::Cell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
-
-/// Canonical columns staged per slab. 32 columns keep the b/h slabs
-/// L1-resident up to H = 256 while amortizing the slab loop overhead;
-/// measured best among {8, 16, 32} at both acceptance geometries.
-/// Crate-visible so the planner's workspace-footprint model
-/// ([`plan::workspace_footprint`]) sizes slab leases with the engine's
-/// real constant.
-pub(crate) const SLAB: usize = 32;
-
-// ---------------------------------------------------------------------
-// Taps staging: full column-major panels, shared across channel planes
-// ---------------------------------------------------------------------
-
-/// Transpose an `h x w` row-major plane into a `w`-columns-of-`h` panel
-/// (`dst[i*h + r] = src[r*w + i]`) through an 8x8 tile buffer, so reads
-/// are contiguous and writes flush in contiguous 8-float runs.
-fn transpose_plane(src: &[f32], h: usize, w: usize, dst: &mut [f32]) {
-    const T: usize = 8;
-    let mut tmp = [0.0f32; T * T];
-    let mut r0 = 0;
-    while r0 + T <= h {
-        let mut i0 = 0;
-        while i0 + T <= w {
-            for r in 0..T {
-                let row = &src[(r0 + r) * w + i0..(r0 + r) * w + i0 + T];
-                for i in 0..T {
-                    tmp[i * T + r] = row[i];
-                }
-            }
-            for i in 0..T {
-                dst[(i0 + i) * h + r0..(i0 + i) * h + r0 + T]
-                    .copy_from_slice(&tmp[i * T..i * T + T]);
-            }
-            i0 += T;
-        }
-        while i0 < w {
-            for r in r0..r0 + T {
-                dst[i0 * h + r] = src[r * w + i0];
-            }
-            i0 += 1;
-        }
-        r0 += T;
-    }
-    while r0 < h {
-        for i in 0..w {
-            dst[i * h + r0] = src[r0 * w + i];
-        }
-        r0 += 1;
-    }
-}
-
-/// Narrowing twin of [`transpose_plane`]: the same 8x8 tile walk, but
-/// each store rounds to bf16 through the tile buffer, so the
-/// reduced-precision mode writes its staged panels directly at half
-/// width — no full-width f32 staging temporary ever exists, which is
-/// what actually halves the staged footprint.
-fn transpose_plane_bf16(src: &[f32], h: usize, w: usize, dst: &mut [u16]) {
-    const T: usize = 8;
-    let mut tmp = [0.0f32; T * T];
-    let mut r0 = 0;
-    while r0 + T <= h {
-        let mut i0 = 0;
-        while i0 + T <= w {
-            for r in 0..T {
-                let row = &src[(r0 + r) * w + i0..(r0 + r) * w + i0 + T];
-                for i in 0..T {
-                    tmp[i * T + r] = row[i];
-                }
-            }
-            for i in 0..T {
-                let col = &mut dst[(i0 + i) * h + r0..(i0 + i) * h + r0 + T];
-                for (o, &v) in col.iter_mut().zip(&tmp[i * T..i * T + T]) {
-                    *o = bf16_narrow(v);
-                }
-            }
-            i0 += T;
-        }
-        while i0 < w {
-            for r in r0..r0 + T {
-                dst[i0 * h + r] = bf16_narrow(src[r * w + i0]);
-            }
-            i0 += 1;
-        }
-        r0 += T;
-    }
-    while r0 < h {
-        for i in 0..w {
-            dst[i * h + r0] = bf16_narrow(src[r0 * w + i]);
-        }
-        r0 += 1;
-    }
-}
-
-/// Taps of one direction re-staged into column-major panels, shared
-/// read-only across all plane jobs. With the channel-shared weights of
-/// §4.2 (`Cw == 1`) each tap plane is staged once per batch item and
-/// every channel plane reuses it.
-struct StagedTaps<'w> {
-    /// Layout: per (ni*cw + ci), three `hc x wc` column-major panels in
-    /// tap order (up, center, down). Leased from the workspace; every
-    /// element is written by the staging transpose before any read, so
-    /// the lease is not zero-reset. At `Precision::Bf16` the panels are
-    /// bf16 words packed two-per-f32-slot ([`Lease::as_u16`]) and the
-    /// lease is `bf16_len` of the f32 size — half the bytes.
-    data: Lease<'w>,
-    cw: usize,
-    plane: usize,
-    prec: Precision,
-}
-
-impl<'w> StagedTaps<'w> {
-    fn build(
-        taps: &Taps,
-        pool: Option<&ThreadPool>,
-        ws: &'w BufferPool,
-        prec: Precision,
-    ) -> StagedTaps<'w> {
-        let (hc, wc) = (taps.h, taps.w);
-        let plane = hc * wc;
-        let blocks = taps.n * taps.cw;
-        match prec {
-            Precision::F32 => {
-                let mut data = ws.acquire(blocks * 3 * plane);
-                let stage_block = |(b, dst): (usize, &mut [f32])| {
-                    let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
-                    for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
-                        transpose_plane(
-                            &src[tap * plane..(tap + 1) * plane],
-                            hc,
-                            wc,
-                            &mut dst[tap * plane..(tap + 1) * plane],
-                        );
-                    }
-                };
-                match pool {
-                    Some(pool) if blocks > 1 && plane >= 1 << 12 => {
-                        let jobs: Vec<(usize, &mut [f32])> =
-                            data.chunks_mut(3 * plane).enumerate().collect();
-                        pool.map(jobs, stage_block);
-                    }
-                    _ => {
-                        for job in data.chunks_mut(3 * plane).enumerate() {
-                            stage_block(job);
-                        }
-                    }
-                }
-                StagedTaps { data, cw: taps.cw, plane, prec }
-            }
-            Precision::Bf16 => {
-                let mut data = ws.acquire(simd::bf16_len(blocks * 3 * plane));
-                let stage_block = |(b, dst): (usize, &mut [u16])| {
-                    let src = &taps.t.data[b * 3 * plane..(b + 1) * 3 * plane];
-                    for tap in [TAP_UP, TAP_CENTER, TAP_DOWN] {
-                        transpose_plane_bf16(
-                            &src[tap * plane..(tap + 1) * plane],
-                            hc,
-                            wc,
-                            &mut dst[tap * plane..(tap + 1) * plane],
-                        );
-                    }
-                };
-                let words = &mut data.as_u16_mut()[..blocks * 3 * plane];
-                match pool {
-                    Some(pool) if blocks > 1 && plane >= 1 << 12 => {
-                        let jobs: Vec<(usize, &mut [u16])> =
-                            words.chunks_mut(3 * plane).enumerate().collect();
-                        pool.map(jobs, stage_block);
-                    }
-                    _ => {
-                        for job in words.chunks_mut(3 * plane).enumerate() {
-                            stage_block(job);
-                        }
-                    }
-                }
-                StagedTaps { data, cw: taps.cw, plane, prec }
-            }
-        }
-    }
-
-    /// The three staged panels for channel `ci` of batch item `ni`
-    /// (clamped for shared mode), at the staging precision.
-    #[inline]
-    fn panels(&self, ni: usize, ci: usize) -> TapPanels<'_> {
-        let c = if self.cw == 1 { 0 } else { ci };
-        let base = (ni * self.cw + c) * 3 * self.plane;
-        match self.prec {
-            Precision::F32 => {
-                let s = &self.data[base..base + 3 * self.plane];
-                TapPanels::F32 {
-                    tu: &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
-                    tc: &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
-                    td: &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
-                }
-            }
-            Precision::Bf16 => {
-                let s = &self.data.as_u16()[base..base + 3 * self.plane];
-                TapPanels::Bf16 {
-                    tu: &s[TAP_UP * self.plane..(TAP_UP + 1) * self.plane],
-                    tc: &s[TAP_CENTER * self.plane..(TAP_CENTER + 1) * self.plane],
-                    td: &s[TAP_DOWN * self.plane..(TAP_DOWN + 1) * self.plane],
-                }
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------
-// Pack: gather b = lam ⊙ x column slabs with orientation folded in
-// ---------------------------------------------------------------------
-
-/// How a direction's activations are laid out: shared spatial tensors
-/// (orientation folded into the gather) or per-direction canonical
-/// row-major tensors (the compact unit's case — its 1x1 projections
-/// already produced canonical layouts, so the gather is a straight
-/// transpose).
-#[derive(Clone, Copy)]
-enum Orientation {
-    Spatial,
-    Canonical,
-}
-
-/// Pack canonical columns `i0..i0+sw` of `b = lam ⊙ x` into the
-/// column-major slab (`b[i*hc + r]` = canonical column `i0+i`, row `r`).
-/// The product is the exact `ls[p] * xs[p]` unit of the reference
-/// expression, computed during the gather so `x` and `lam` are each read
-/// once and no staged copy of either exists.
-#[allow(clippy::too_many_arguments)]
-fn pack_slab(
-    xs: &[f32],
-    ls: &[f32],
-    h: usize,
-    w: usize,
-    d: Direction,
-    layout: Orientation,
-    i0: usize,
-    sw: usize,
-    hc: usize,
-    b: &mut [f32],
-) {
-    match (layout, d) {
-        // Spatial L2R and every canonical layout: canonical (r, i) is
-        // row-major (r, i) of the source with dims (hc, wc) — for
-        // spatial L2R those are just (H, W), so one transposing gather
-        // covers both.
-        (Orientation::Canonical, _) | (Orientation::Spatial, Direction::L2R) => {
-            let wr = hw_src(h, w, d).1;
-            for r in 0..hc {
-                let base = r * wr + i0;
-                let (xr, lr) = (&xs[base..base + sw], &ls[base..base + sw]);
-                for i in 0..sw {
-                    b[i * hc + r] = lr[i] * xr[i];
-                }
-            }
-        }
-        (Orientation::Spatial, Direction::R2L) => {
-            // canonical (r, i) = spatial (r, W-1-i).
-            for r in 0..h {
-                let row = r * w;
-                for i in 0..sw {
-                    let p = row + w - 1 - (i0 + i);
-                    b[i * hc + r] = ls[p] * xs[p];
-                }
-            }
-        }
-        (Orientation::Spatial, Direction::T2B) => {
-            // canonical column i0+i is spatial row i0+i: contiguous on
-            // both sides.
-            for i in 0..sw {
-                let row = (i0 + i) * w;
-                let (xr, lr) = (&xs[row..row + w], &ls[row..row + w]);
-                let bc = &mut b[i * hc..i * hc + hc];
-                for r in 0..hc {
-                    bc[r] = lr[r] * xr[r];
-                }
-            }
-        }
-        (Orientation::Spatial, Direction::B2T) => {
-            // canonical column i0+i is spatial row H-1-(i0+i).
-            for i in 0..sw {
-                let row = (h - 1 - (i0 + i)) * w;
-                let (xr, lr) = (&xs[row..row + w], &ls[row..row + w]);
-                let bc = &mut b[i * hc..i * hc + hc];
-                for r in 0..hc {
-                    bc[r] = lr[r] * xr[r];
-                }
-            }
-        }
-    }
-}
-
-/// Source row-major dims for a direction/layout pair: spatial tensors
-/// keep (H, W); canonical tensors are stored as (hc, wc).
-#[inline]
-fn hw_src(h: usize, w: usize, d: Direction) -> (usize, usize) {
-    match d {
-        Direction::L2R | Direction::R2L => (h, w),
-        Direction::T2B | Direction::B2T => (w, h),
-    }
-}
-
-// ---------------------------------------------------------------------
-// Scan: the unit-stride staged kernel
-// ---------------------------------------------------------------------
-
-// The per-column kernels — the scan recurrence (`up + ct + dn + b` with
-// literal `0.0` boundary terms, exactly `core::scan_plane`'s expression)
-// and the carry-correction fold (the same recurrence without the `b`
-// term, exactly `split::phase2_plane`'s association) — live in
-// [`super::simd`] as `scan_col` / `correct_col`: a pinned scalar
-// reference plus runtime-dispatched AVX2/NEON lane kernels that are
-// bit-identical to it. The engine calls them through the dispatcher so
-// every strategy path picks up the active kernel and tap precision.
-
-/// Scan one slab of canonical columns. `carry` holds the previous
-/// slab's last column on entry and this slab's last column on return —
-/// the "shared-memory" column handed across slab boundaries. Chunk
-/// resets (`gi % chunk == 0`) substitute the zero column, exactly like
-/// the reference's `hprev` reset.
-#[allow(clippy::too_many_arguments)]
-fn scan_slab(
-    hc: usize,
-    i0: usize,
-    sw: usize,
-    chunk: usize,
-    b: &[f32],
-    taps: TapPanels,
-    zeros: &[f32],
-    carry: &mut [f32],
-    hs: &mut [f32],
-) {
-    for i in 0..sw {
-        let gi = i0 + i;
-        let col = i * hc;
-        let (done, rest) = hs.split_at_mut(col);
-        let cur = &mut rest[..hc];
-        let prev: &[f32] = if gi % chunk == 0 {
-            &zeros[..hc]
-        } else if i == 0 {
-            &carry[..hc]
-        } else {
-            &done[col - hc..]
-        };
-        simd::scan_col(prev, &b[col..col + hc], taps.col(gi, hc), cur);
-    }
-    carry[..hc].copy_from_slice(&hs[(sw - 1) * hc..sw * hc]);
-}
-
-// ---------------------------------------------------------------------
-// Scatter-back epilogue: inverse orientation + merge + modulation
-// ---------------------------------------------------------------------
-
-/// Drain a scanned slab back to the spatial plane, mapping canonical
-/// (r, i0+i) to its spatial position and applying the epilogue op
-/// (assign, weighted merge, or merge + modulation) per element. This is
-/// the step that deletes the directional intermediates, the separate
-/// accumulation loop, and `output_modulation`'s clone.
-///
-/// The op is a [`EpOp`] value, not a closure: the T2B/B2T arms drain in
-/// contiguous `w`-length runs on *both* sides and dispatch to the batch
-/// lane kernels ([`simd::ep_apply`]), while the L2R/R2L arms read the
-/// slab with stride `hc` and apply the same pinned per-element
-/// expression ([`EpOp::apply`]) scalar — bit-identical either way (a
-/// strided gather was measured not worth the complexity on the row
-/// arms; the column arms are where the epilogue bytes move).
-fn scatter_slab(
-    hs: &[f32],
-    h: usize,
-    w: usize,
-    d: Direction,
-    i0: usize,
-    sw: usize,
-    hc: usize,
-    out: &mut [f32],
-    op: EpOp,
-) {
-    match d {
-        Direction::L2R => {
-            for r in 0..h {
-                let orow = &mut out[r * w + i0..r * w + i0 + sw];
-                for (i, o) in orow.iter_mut().enumerate() {
-                    *o = op.apply(*o, hs[i * hc + r]);
-                }
-            }
-        }
-        Direction::R2L => {
-            for r in 0..h {
-                let row = r * w;
-                for i in 0..sw {
-                    let p = row + w - 1 - (i0 + i);
-                    out[p] = op.apply(out[p], hs[i * hc + r]);
-                }
-            }
-        }
-        Direction::T2B => {
-            for i in 0..sw {
-                let row = (i0 + i) * w;
-                let orow = &mut out[row..row + w];
-                let hcol = &hs[i * hc..i * hc + hc];
-                simd::ep_apply(op, orow, &hcol[..w]);
-            }
-        }
-        Direction::B2T => {
-            for i in 0..sw {
-                let row = (h - 1 - (i0 + i)) * w;
-                let orow = &mut out[row..row + w];
-                let hcol = &hs[i * hc..i * hc + hc];
-                simd::ep_apply(op, orow, &hcol[..w]);
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------
-// Per-job scratch + block sizing
-// ---------------------------------------------------------------------
-
-/// Per-job scratch: the b and h column slabs, the carry column, and the
-/// zero column used at chunk resets. One per pool job, reused across
-/// every plane (and direction) the job owns. Leased from the workspace:
-/// the slabs are fully overwritten before every read, the carry/zeros
-/// columns must start zero (the reference semantics), so only those two
-/// are zero-reset.
-struct FusedScratch<'w> {
-    b: Lease<'w>,
-    h: Lease<'w>,
-    carry: Lease<'w>,
-    zeros: Lease<'w>,
-}
-
-impl<'w> FusedScratch<'w> {
-    fn new(hmax: usize, ws: &'w BufferPool) -> FusedScratch<'w> {
-        FusedScratch {
-            b: ws.acquire(SLAB * hmax),
-            h: ws.acquire(SLAB * hmax),
-            carry: ws.acquire_zeroed(hmax),
-            zeros: ws.acquire_zeroed(hmax),
-        }
-    }
-}
-
-/// Number of plane-blocks to submit for `nplanes` planes: about two
-/// blocks per worker for load balance, never more blocks than planes.
-/// This is the "one kernel launch" fix: job count scales with the pool,
-/// not with N·C. Shared with `Proj::apply`'s block dispatch so the
-/// blocks-per-worker policy has one source of truth.
-pub(crate) fn plane_blocks(nplanes: usize, threads: usize) -> usize {
-    nplanes.min((2 * threads).max(1))
-}
-
-// ---------------------------------------------------------------------
-// Segment-parallel decomposition (strategy selection lives in plan.rs)
-// ---------------------------------------------------------------------
-
-/// Segment bounds over `wc` canonical columns — the same decomposition
-/// formula as `scan_l2r_split`, so for equal counts the segmented
-/// arithmetic (and therefore every bit) matches the reference.
-fn segment_bounds(wc: usize, segments: usize) -> Vec<(usize, usize)> {
-    let segments = segments.clamp(1, wc.max(1));
-    let seg_len = wc.div_ceil(segments).max(1);
-    (0..wc).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(wc))).collect()
-}
-
-/// How a segmented run's phase 2 (carry correction + epilogue drain) is
-/// scheduled and expressed. All three produce identical bits (pinned by
-/// tests); they differ in memory traffic and overlap.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-enum Phase2 {
-    /// Global two-`map` barrier between the phases; correction fused
-    /// into the drain.
-    Barrier,
-    /// The PR 4 schedule: one continuation per plane running the
-    /// *two-pass* correct-then-drain ([`correct_and_drain_pieces`]) —
-    /// it re-touches the retained panel in place before the drain
-    /// re-reads it. Kept as the bit/bench reference the fused drain is
-    /// measured against (`BENCH_scan`'s "two-pass" rows).
-    WavePlane,
-    /// Per-direction wavefront continuations (4 per plane) with the
-    /// correction fused into the scatter drain — the production
-    /// schedule behind every `wavefront` plan.
-    WaveDir,
-}
-
-/// How an engine run decomposes its work across the pool. The engine
-/// holds no selection heuristics of its own: `Auto` defers to the
-/// planner ([`plan::plan_scan`]), `Forced` carries a caller- or
-/// test-chosen plan verbatim.
-#[derive(Clone, Copy)]
-enum ExecSpec {
-    /// Consult [`plan::plan_scan`] from the pass geometry + pool state.
-    Auto,
-    /// Execute exactly this strategy (segment counts clamped per
-    /// direction to its canonical width) with the given phase-2
-    /// schedule — the bit-identity testing / bench / plan-carrying
-    /// hook.
-    Forced(ScanStrategy, Phase2),
-}
-
-// ---------------------------------------------------------------------
-// Input descriptors + engine core
-// ---------------------------------------------------------------------
-
-/// One direction's inputs to the fused engine.
-struct DirInput<'a> {
-    d: Direction,
-    taps: &'a Taps,
-    x: &'a Tensor,
-    lam: &'a Tensor,
-    layout: Orientation,
-    /// Effective chunk width in canonical columns.
-    chunk: usize,
-}
-
-fn effective_chunk(wc: usize, kchunk: usize) -> usize {
-    let chunk = if kchunk == 0 { wc } else { kchunk };
-    assert!(wc % chunk == 0, "kchunk={chunk} must divide W={wc}");
-    chunk
-}
-
-fn validate_dir(x: &Tensor, taps: &Taps, lam: &Tensor, d: Direction) {
-    assert_eq!(x.rank(), 4, "x must be (N, C, H, W)");
-    assert_eq!(x.shape, lam.shape, "lam shape must match x");
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let (hc, wc) = hw_src(h, w, d);
-    assert_eq!((taps.n, taps.h, taps.w), (n, hc, wc), "taps geometry mismatch");
-    assert!(taps.cw == 1 || taps.cw == c, "Cw must be 1 or C");
-}
-
-/// The fused per-plane pipeline: for each direction in order, walk the
-/// plane in column slabs — pack `b = lam ⊙ x`, scan, scatter with the
-/// epilogue op (assign / weighted merge / merge + modulate) — so every
-/// staged value is consumed while still L1-hot.
-#[allow(clippy::too_many_arguments)]
-fn run_plane(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<f32>,
-    ni: usize,
-    ci: usize,
-    c: usize,
-    hw: (usize, usize),
-    os: &mut [f32],
-    scratch: &mut FusedScratch<'_>,
-) {
-    let (h, w) = hw;
-    let plane = h * w;
-    let last = dirs.len() - 1;
-    for (k, di) in dirs.iter().enumerate() {
-        let (hc, wc) = (di.taps.h, di.taps.w);
-        let base = (ni * c + ci) * plane;
-        let xs = &di.x.data[base..base + plane];
-        let ls = &di.lam.data[base..base + plane];
-        let taps = staged[k].panels(ni, ci);
-        let mut i0 = 0;
-        while i0 < wc {
-            let sw = SLAB.min(wc - i0);
-            pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut scratch.b);
-            scan_slab(
-                hc,
-                i0,
-                sw,
-                di.chunk,
-                &scratch.b,
-                taps,
-                &scratch.zeros,
-                &mut scratch.carry,
-                &mut scratch.h,
-            );
-            drain_scatter(&scratch.h, h, w, di.d, i0, sw, hc, os, wts, k, last, gain);
-            i0 += sw;
-        }
-    }
-}
-
-/// The one epilogue-op dispatch every drain site shares: scatter `hs`
-/// back to the spatial plane with the per-element op the pass calls for
-/// — assign (single direction), weighted merge accumulate, or, on the
-/// last direction of a modulated pass, merge + `u ⊙ h` gain. Keeping
-/// this in one place is what keeps the plane, barrier-segmented,
-/// wavefront, and dirfan drains bit-identical by construction.
-#[allow(clippy::too_many_arguments)]
-fn drain_scatter(
-    hs: &[f32],
-    h: usize,
-    w: usize,
-    d: Direction,
-    i0: usize,
-    sw: usize,
-    hc: usize,
-    os: &mut [f32],
-    wts: Option<&[f32; 4]>,
-    k: usize,
-    last: usize,
-    gain: Option<f32>,
-) {
-    let op = match wts {
-        None => EpOp::Assign,
-        Some(wts) => {
-            let wt = wts[k];
-            match gain.filter(|_| k == last) {
-                None => EpOp::Merge(wt),
-                Some(g) => EpOp::MergeGain(wt, g),
-            }
-        }
-    };
-    scatter_slab(hs, h, w, d, i0, sw, hc, os, op);
-}
-
-/// Materialize the engine's output tensor: the caller-recycled buffer
-/// (must be zeroed and exactly `numel` long — the coordinator's
-/// reply-recycling path, see [`fused_scan_l2r_pool_ws_into`]) or a
-/// fresh zeroed allocation. The recycled buffer only replaces
-/// `Tensor::zeros`, so every drain writes the same bits either way.
-fn out_tensor(shape: &[usize], recycled: Option<Vec<f32>>) -> Tensor {
-    match recycled {
-        Some(buf) => {
-            debug_assert!(buf.iter().all(|&v| v == 0.0), "recycled output must be zeroed");
-            Tensor::from_vec(shape, buf)
-        }
-        None => Tensor::zeros(shape),
-    }
-}
-
-/// Drive the fused pipeline over all (N·C) planes — serially, in
-/// block-granular plane jobs on the pool, or (when the plan asks for
-/// it) through the segment-parallel / direction-fan decompositions,
-/// with or without wavefront continuations. `out_buf`, when given, is a
-/// recycled zeroed buffer the output tensor is built over instead of a
-/// fresh allocation.
-#[allow(clippy::too_many_arguments)]
-fn run_engine(
-    dirs: &[DirInput<'_>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<&[f32]>,
-    out_shape: &[usize],
-    pool: Option<&ThreadPool>,
-    exec: ExecSpec,
-    ws: &BufferPool,
-    out_buf: Option<Vec<f32>>,
-    prec: Option<Precision>,
-) -> Tensor {
-    let (n, c) = (out_shape[0], out_shape[1]);
-    let (h, w) = (out_shape[2], out_shape[3]);
-    let plane = h * w;
-    let nplanes = n * c;
-    if nplanes == 0 || plane == 0 {
-        return out_tensor(out_shape, out_buf);
-    }
-    let hmax = h.max(w);
-    let prec = prec.unwrap_or_else(simd::precision);
-    let staged: Vec<StagedTaps<'_>> =
-        dirs.iter().map(|d| StagedTaps::build(d.taps, pool, ws, prec)).collect();
-    let (strategy, phase2) = match exec {
-        ExecSpec::Forced(s, p2) => (s, p2),
-        ExecSpec::Auto => match pool {
-            Some(pool) => {
-                let geom = ScanGeometry {
-                    nplanes,
-                    ndirs: dirs.len(),
-                    wc_min: dirs.iter().map(|di| di.taps.w).min().unwrap_or(0),
-                    plane_px: plane,
-                    hmax,
-                };
-                let p = plan::plan_scan(&geom, pool.load(), pool.threads());
-                // A wavefront plan means the per-direction continuation
-                // schedule; the PR 4 per-plane two-pass schedule is
-                // test/bench-only.
-                let p2 = if p.wavefront { Phase2::WaveDir } else { Phase2::Barrier };
-                (p.strategy, p2)
-            }
-            None => (ScanStrategy::PlanePar, Phase2::Barrier),
-        },
-    };
-    let segments = match strategy {
-        ScanStrategy::PlanePar => None,
-        ScanStrategy::Segmented { s } => Some(s.max(1)),
-        // The chained strategy runs its own single-pass engine: there
-        // are no phases, so the phase-2 schedule does not apply.
-        ScanStrategy::Chained { s } => {
-            return run_engine_chained(
-                dirs, &staged, wts, gain, out_shape, pool, s.max(1), ws, out_buf, prec,
-            );
-        }
-        // The direction fan is the s = 1 degenerate segmented run: one
-        // full-width zero-carry (i.e. exact) phase-1 job per (plane,
-        // direction), no correction, fixed-order merge drain. A
-        // single-direction pass has nothing to fan: plane path.
-        ScanStrategy::DirFan => (dirs.len() > 1).then_some(1),
-    };
-    if let Some(segments) = segments {
-        return run_engine_segmented(
-            dirs, &staged, wts, gain, out_shape, pool, segments, phase2, ws, out_buf,
-        );
-    }
-    let mut out = out_tensor(out_shape, out_buf);
-    let gain_for = |ci: usize| gain.map(|g| g[ci]);
-
-    match pool {
-        Some(pool) if nplanes > 1 && pool.threads() > 1 => {
-            let nblocks = plane_blocks(nplanes, pool.threads());
-            let per_block = nplanes.div_ceil(nblocks);
-            let jobs: Vec<(usize, &mut [f32])> =
-                out.data.chunks_mut(per_block * plane).enumerate().collect();
-            pool.map(jobs, |(bi, block)| {
-                let mut scratch = FusedScratch::new(hmax, ws);
-                for (j, os) in block.chunks_mut(plane).enumerate() {
-                    let p = bi * per_block + j;
-                    run_plane(
-                        dirs,
-                        &staged,
-                        wts,
-                        gain_for(p % c),
-                        p / c,
-                        p % c,
-                        c,
-                        (h, w),
-                        os,
-                        &mut scratch,
-                    );
-                }
-            });
-        }
-        _ => {
-            let mut scratch = FusedScratch::new(hmax, ws);
-            for (p, os) in out.data.chunks_mut(plane).enumerate() {
-                run_plane(
-                    dirs,
-                    &staged,
-                    wts,
-                    gain_for(p % c),
-                    p / c,
-                    p % c,
-                    c,
-                    (h, w),
-                    os,
-                    &mut scratch,
-                );
-            }
-        }
-    }
-    out
-}
-
-/// The segment-parallel engine (the fused §5.1 decomposition).
-///
-/// Phase 1 fans one job per (plane, direction, segment) — each packs and
-/// unit-stride-scans its column range from a zero incoming carry with
-/// the very same slab pipeline as the plane path, but retains the
-/// canonical columns in a per-plane panel instead of scattering them
-/// (chunk resets still fire on global column indices inside
-/// [`scan_slab`]). Phase 2 fans one job per plane: for each direction it
-/// chains the true carry across segment boundaries — the corrected last
-/// column of segment k *is* segment k+1's carry — with the linear
-/// correction scan (`correct_col` in [`super::simd`]) computed **on the fly inside the
-/// scatter drain** ([`drain_dir_fused`]): the retained panel is read
-/// once and never re-written, and the corrected values flow straight
-/// through the fused scatter epilogue (inverse orientation + weighted
-/// merge + modulation), so the directional output, merge, and
-/// modulation intermediates still never exist — and neither does a
-/// corrected copy of the panel.
-///
-/// Arithmetic per element is exactly `scan_l2r_split`'s two-phase order
-/// (pinned `==` by tests); only the memory layout and the epilogue
-/// fusion differ. The retained panels cost
-/// O(nplanes · Σ_dirs hc·wc) floats — bounded in practice because the
-/// planner only picks this path when `nplanes < threads`.
-///
-/// `phase2` selects the schedule: the two-`map` barrier below, or one
-/// of the dependency-graph schedules of
-/// [`run_engine_segmented_wave`] — same jobs, same bits, no global
-/// rendezvous between phases.
-#[allow(clippy::too_many_arguments)]
-fn run_engine_segmented(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<&[f32]>,
-    out_shape: &[usize],
-    pool: Option<&ThreadPool>,
-    segments: usize,
-    phase2: Phase2,
-    ws: &BufferPool,
-    out_buf: Option<Vec<f32>>,
-) -> Tensor {
-    if phase2 != Phase2::Barrier {
-        if let Some(pool) = pool {
-            return run_engine_segmented_wave(
-                dirs,
-                staged,
-                wts,
-                gain,
-                out_shape,
-                pool,
-                segments,
-                phase2 == Phase2::WaveDir,
-                ws,
-                out_buf,
-            );
-        }
-    }
-    let c = out_shape[1];
-    let (h, w) = (out_shape[2], out_shape[3]);
-    let plane = h * w;
-    let nplanes = out_shape[0] * c;
-    let hmax = h.max(w);
-    let bounds: Vec<Vec<(usize, usize)>> =
-        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
-
-    // Retained phase-1 canonical columns: per plane, the directions'
-    // hc x wc column-major panels concatenated in direction order.
-    let dir_off: Vec<usize> = dirs
-        .iter()
-        .scan(0usize, |acc, di| {
-            let o = *acc;
-            *acc += di.taps.h * di.taps.w;
-            Some(o)
-        })
-        .collect();
-    let per_plane: usize = dirs.iter().map(|di| di.taps.h * di.taps.w).sum();
-    // Zero-reset like the fresh `vec!` it replaces: phase 1 overwrites
-    // every panel element, but keeping the fresh-allocation semantics
-    // makes the panels' contents independent of pool history by
-    // construction (bit-exactness needs no full-coverage argument).
-    let mut hbufs = ws.acquire_zeroed(nplanes * per_plane);
-
-    // Phase 1: every (plane, direction, segment) scans independently
-    // from a zero carry into its disjoint panel range.
-    {
-        let mut jobs: Vec<(usize, usize, usize, usize, &mut [f32])> = Vec::new();
-        let mut rest: &mut [f32] = &mut hbufs;
-        for p in 0..nplanes {
-            for (k, di) in dirs.iter().enumerate() {
-                for &(lo, hi) in &bounds[k] {
-                    let (buf, tail) =
-                        std::mem::take(&mut rest).split_at_mut((hi - lo) * di.taps.h);
-                    rest = tail;
-                    jobs.push((p, k, lo, hi, buf));
-                }
-            }
-        }
-        let scan_piece = |(p, k, lo, hi, buf): (usize, usize, usize, usize, &mut [f32])| {
-            scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, buf, ws);
-        };
-        match pool {
-            Some(pool) if pool.threads() > 1 && jobs.len() > 1 => {
-                pool.map(jobs, scan_piece);
-            }
-            _ => jobs.into_iter().for_each(scan_piece),
-        }
-    }
-
-    // Phase 2: per plane, drain each direction's retained panel through
-    // the fused correction + scatter epilogue in the same k = 0..dirs
-    // order as the plane path. The panel is read-only from here on —
-    // the correction never lands back in it.
-    let mut out = out_tensor(out_shape, out_buf);
-    let gain_for = |ci: usize| gain.map(|g| g[ci]);
-    let last = dirs.len() - 1;
-    let planes: Vec<(usize, &mut [f32], &[f32])> = out
-        .data
-        .chunks_mut(plane)
-        .zip(hbufs.chunks(per_plane))
-        .enumerate()
-        .map(|(p, (os, pb))| (p, os, pb))
-        .collect();
-    let correct_and_drain = |(p, os, pb): (usize, &mut [f32], &[f32])| {
-        let mut scratch = DrainScratch::new(hmax, ws);
-        for (k, di) in dirs.iter().enumerate() {
-            let (hc, wc) = (di.taps.h, di.taps.w);
-            let taps = staged[k].panels(p / c, p % c);
-            let panel = &pb[dir_off[k]..dir_off[k] + hc * wc];
-            let pieces: Vec<&[f32]> =
-                bounds[k].iter().map(|&(lo, hi)| &panel[lo * hc..hi * hc]).collect();
-            drain_dir_fused(
-                &pieces,
-                &bounds[k],
-                hc,
-                di.chunk,
-                taps,
-                (h, w),
-                di.d,
-                os,
-                wts,
-                k,
-                last,
-                gain_for(p % c),
-                &mut scratch,
-            );
-        }
-    };
-    match pool {
-        Some(pool) if pool.threads() > 1 && planes.len() > 1 => {
-            pool.map(planes, correct_and_drain);
-        }
-        _ => planes.into_iter().for_each(correct_and_drain),
-    }
-    out
-}
-
-// ---------------------------------------------------------------------
-// Shared phase bodies + wavefront scheduling (phase 2 as a per-plane
-// continuation)
-// ---------------------------------------------------------------------
-
-/// Phase 1 of one (plane, direction, segment) piece: pack and
-/// unit-stride-scan columns `[lo, hi)` from a zero incoming carry into
-/// `buf` (column-major, `(hi - lo) * hc`). The one shared phase-1 body
-/// — the barrier engine calls it on preallocated panel slices, the
-/// wavefront engine on owned piece buffers — so the two schedules
-/// cannot drift apart arithmetically.
-#[allow(clippy::too_many_arguments)]
-fn scan_piece_into(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    c: usize,
-    hw: (usize, usize),
-    hmax: usize,
-    p: usize,
-    k: usize,
-    lo: usize,
-    hi: usize,
-    buf: &mut [f32],
-    ws: &BufferPool,
-) {
-    let (h, w) = hw;
-    let plane = h * w;
-    let di = &dirs[k];
-    let hc = di.taps.h;
-    let base = p * plane;
-    let xs = &di.x.data[base..base + plane];
-    let ls = &di.lam.data[base..base + plane];
-    let taps = staged[k].panels(p / c, p % c);
-    // The pack slab is fully overwritten per slab; the carry must start
-    // zero (a piece scans from a zero incoming carry and READS the carry
-    // on its first column when `lo` is off a chunk boundary), and the
-    // reset column must stay zero.
-    let mut b = ws.acquire(SLAB * hmax);
-    let mut carry = ws.acquire_zeroed(hmax);
-    let zeros = ws.acquire_zeroed(hmax);
-    let mut i0 = lo;
-    while i0 < hi {
-        let sw = SLAB.min(hi - i0);
-        pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
-        let o = (i0 - lo) * hc;
-        scan_slab(
-            hc,
-            i0,
-            sw,
-            di.chunk,
-            &b,
-            taps,
-            &zeros,
-            &mut carry,
-            &mut buf[o..o + sw * hc],
-        );
-        i0 += sw;
-    }
-}
-
-/// [`scan_piece_into`] retaining the piece as packed bf16 words — the
-/// chained engine's reduced-precision panel path. The recurrence is
-/// untouched: every slab scans in f32 through the very same
-/// [`scan_slab`] (the f32 carry column crosses slab boundaries exactly
-/// as in f32 mode), and only the *store* into the retained panel
-/// narrows, via round-to-nearest-even. `agg` receives the piece's last
-/// column at full f32 precision — the publication-board aggregate, so
-/// look-back folds lose nothing to the panel narrowing.
-#[allow(clippy::too_many_arguments)]
-fn scan_piece_into_bf16(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    c: usize,
-    hw: (usize, usize),
-    hmax: usize,
-    p: usize,
-    k: usize,
-    lo: usize,
-    hi: usize,
-    panel: &mut [u16],
-    agg: &mut [f32],
-    ws: &BufferPool,
-) {
-    let (h, w) = hw;
-    let plane = h * w;
-    let di = &dirs[k];
-    let hc = di.taps.h;
-    let base = p * plane;
-    let xs = &di.x.data[base..base + plane];
-    let ls = &di.lam.data[base..base + plane];
-    let taps = staged[k].panels(p / c, p % c);
-    let mut b = ws.acquire(SLAB * hmax);
-    // f32 staging slab the scan lands in before narrowing; fully
-    // overwritten per slab.
-    let mut hslab = ws.acquire(SLAB * hmax);
-    let mut carry = ws.acquire_zeroed(hmax);
-    let zeros = ws.acquire_zeroed(hmax);
-    let mut i0 = lo;
-    while i0 < hi {
-        let sw = SLAB.min(hi - i0);
-        pack_slab(xs, ls, h, w, di.d, di.layout, i0, sw, hc, &mut b);
-        scan_slab(
-            hc,
-            i0,
-            sw,
-            di.chunk,
-            &b,
-            taps,
-            &zeros,
-            &mut carry,
-            &mut hslab[..sw * hc],
-        );
-        let o = (i0 - lo) * hc;
-        for (dst, &v) in panel[o..o + sw * hc].iter_mut().zip(&hslab[..sw * hc]) {
-            *dst = bf16_narrow(v);
-        }
-        i0 += sw;
-    }
-    agg.copy_from_slice(&carry[..agg.len()]);
-}
-
-/// The one shared carry-correction body: add the linear correction scan
-/// seeded by `cin` onto segment columns `[lo, hi)` held in `seg`
-/// (column-major within the segment), dying at chunk resets. Callers
-/// own the zero-carry skip (the reference decomposition elides all-zero
-/// corrections, which keeps even -0.0 pixels bit-identical).
-#[allow(clippy::too_many_arguments)]
-fn correct_segment<'w>(
-    hc: usize,
-    chunk: usize,
-    lo: usize,
-    hi: usize,
-    taps: TapPanels<'_>,
-    cin: &[f32],
-    corr: &mut Lease<'w>,
-    next: &mut Lease<'w>,
-    seg: &mut [f32],
-) {
-    corr[..hc].copy_from_slice(&cin[..hc]);
-    for (j, gi) in (lo..hi).enumerate() {
-        if gi % chunk == 0 {
-            // Chunk reset: the carry dies here and phase 1 was already
-            // exact from this column on.
-            break;
-        }
-        simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
-        for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
-            *o += v;
-        }
-        std::mem::swap(corr, next);
-    }
-}
-
-/// [`correct_segment`] over a bf16-stored segment: the correction
-/// recurrence itself runs in f32 (it never reads panel values), and
-/// each corrected element decodes, adds in f32, and re-encodes with
-/// round-to-nearest-even — the chained engine's reduced-precision
-/// panel path. Chunk-reset and zero-carry semantics are identical to
-/// the f32 body.
-#[allow(clippy::too_many_arguments)]
-fn correct_segment_bf16<'w>(
-    hc: usize,
-    chunk: usize,
-    lo: usize,
-    hi: usize,
-    taps: TapPanels<'_>,
-    cin: &[f32],
-    corr: &mut Lease<'w>,
-    next: &mut Lease<'w>,
-    seg: &mut [u16],
-) {
-    corr[..hc].copy_from_slice(&cin[..hc]);
-    for (j, gi) in (lo..hi).enumerate() {
-        if gi % chunk == 0 {
-            // Chunk reset: the carry dies here and phase 1 was already
-            // exact from this column on.
-            break;
-        }
-        simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
-        for (o, &v) in seg[j * hc..(j + 1) * hc].iter_mut().zip(&next[..hc]) {
-            *o = bf16_narrow(bf16_widen(*o) + v);
-        }
-        std::mem::swap(corr, next);
-    }
-}
-
-/// Per-drain scratch: the correction ping-pong columns, the tracked
-/// inter-segment carry, and the slab used to stage corrected columns
-/// before they scatter. O(SLAB·max(H, W)) — the correction never needs
-/// panel-sized scratch. The staging slab is leased lazily on the first
-/// corrected column, so drains that never stage (DirFan's s = 1 runs,
-/// zero-carry planes) pay only the three small columns. The three
-/// columns are zero-reset (the zero-carry skip reads them); the staging
-/// slab is fully overwritten before every read, so it is not.
-struct DrainScratch<'w> {
-    ws: &'w BufferPool,
-    corr: Lease<'w>,
-    next: Lease<'w>,
-    carry: Lease<'w>,
-    colb: Option<Lease<'w>>,
-}
-
-impl<'w> DrainScratch<'w> {
-    fn new(hmax: usize, ws: &'w BufferPool) -> DrainScratch<'w> {
-        DrainScratch {
-            ws,
-            corr: ws.acquire_zeroed(hmax),
-            next: ws.acquire_zeroed(hmax),
-            carry: ws.acquire_zeroed(hmax),
-            colb: None,
-        }
-    }
-}
-
-/// The fused-correction drain for one (plane, direction): walk the
-/// direction's phase-1 segment pieces in column order, computing the
-/// linear carry correction *on the fly* and scattering `phase1 + corr`
-/// straight through the epilogue op — the retained panel is read once
-/// and written zero extra times (the two-pass reference re-touched the
-/// whole corrected region in place first, then read it all again).
-///
-/// Bit-exactness vs the two-pass order ([`correct_segment`] +
-/// [`drain_scatter`], and hence `split::phase2_plane`): the correction
-/// recurrence `corr_i = w_i · corr_{i-1}` never reads panel values, so
-/// fusing changes no operand of any float op — `phase1 + corr` is the
-/// same f32 add whether it lands in the panel or in the drain, the
-/// all-zero carry skip is identical (eliding the correction keeps even
-/// -0.0 pixels bit-identical), and the carry handed to segment k+1 is
-/// the same corrected last column, tracked out of band instead of
-/// re-read from the panel. Chunk resets kill the correction exactly
-/// where the two-pass loop `break`s (including a reset landing on the
-/// segment's first column). Validated bitwise against the two-pass
-/// mirror in C over ~9k randomized geometry/chunk/zero-carry cases
-/// before porting, and pinned `==` by the schedule-matrix tests.
-///
-/// Corrected columns are staged through a [`SLAB`]-column buffer so the
-/// scatter keeps the slab pipeline's write locality; columns with no
-/// live correction (segment 0, a zero carry, or past a chunk reset —
-/// once dead, a correction never revives within a segment) scatter
-/// straight from the piece with no staging copy.
-#[allow(clippy::too_many_arguments)]
-fn drain_dir_fused(
-    pieces: &[&[f32]],
-    bounds: &[(usize, usize)],
-    hc: usize,
-    chunk: usize,
-    taps: TapPanels<'_>,
-    hw: (usize, usize),
-    d: Direction,
-    os: &mut [f32],
-    wts: Option<&[f32; 4]>,
-    k: usize,
-    last: usize,
-    gain: Option<f32>,
-    s: &mut DrainScratch<'_>,
-) {
-    let (h, w) = hw;
-    for (si, (&(lo, hi), piece)) in bounds.iter().zip(pieces).enumerate() {
-        let seglen = hi - lo;
-        // Incoming carry: the previous segment's (corrected) last
-        // column. The reference decomposition skips all-zero carries;
-        // matching the skip keeps even -0.0 pixels bit-identical.
-        let mut active = si > 0 && !s.carry[..hc].iter().all(|&v| v == 0.0);
-        if active {
-            s.corr[..hc].copy_from_slice(&s.carry[..hc]);
-        }
-        let mut j = 0;
-        while j < seglen {
-            if !active {
-                // Everything from here to the segment end is already
-                // exact (zero incoming carry, or a chunk reset killed
-                // the correction — it can never re-activate within a
-                // segment): scatter straight from the piece, no
-                // staging copy at all.
-                drain_scatter(
-                    &piece[j * hc..seglen * hc],
-                    h,
-                    w,
-                    d,
-                    lo + j,
-                    seglen - j,
-                    hc,
-                    os,
-                    wts,
-                    k,
-                    last,
-                    gain,
-                );
-                s.carry[..hc].copy_from_slice(&piece[(seglen - 1) * hc..seglen * hc]);
-                break;
-            }
-            let sw = SLAB.min(seglen - j);
-            if s.colb.as_ref().map_or(true, |cb| cb.len() < SLAB * hc) {
-                // Staging slab: every column is fully written before the
-                // scatter reads it, so a plain (non-zeroed) lease.
-                s.colb = Some(s.ws.acquire(SLAB * hc));
-            }
-            let colb = s.colb.as_mut().unwrap();
-            for i in 0..sw {
-                let gi = lo + j + i;
-                let src = &piece[(j + i) * hc..(j + i + 1) * hc];
-                if active && gi % chunk == 0 {
-                    // Chunk reset: the carry dies here and phase 1 was
-                    // already exact from this column on.
-                    active = false;
-                }
-                let dst = &mut colb[i * hc..(i + 1) * hc];
-                if active {
-                    simd::correct_col(&s.corr[..hc], taps.col(gi, hc), &mut s.next[..hc]);
-                    for ((o, &p1), &cv) in dst.iter_mut().zip(src).zip(&s.next[..hc]) {
-                        *o = p1 + cv;
-                    }
-                    std::mem::swap(&mut s.corr, &mut s.next);
-                } else {
-                    dst.copy_from_slice(src);
-                }
-            }
-            drain_scatter(&colb[..], h, w, d, lo + j, sw, hc, os, wts, k, last, gain);
-            if j + sw == seglen {
-                // The corrected last column *is* segment k+1's carry.
-                s.carry[..hc].copy_from_slice(&colb[(sw - 1) * hc..sw * hc]);
-            }
-            j += sw;
-        }
-    }
-}
-
-/// [`drain_dir_fused`] over the wavefront engine's per-segment piece
-/// slots: the body of one per-direction drain continuation. Takes the
-/// direction's pieces out of their hand-off slots (the graph's
-/// dependency edges ordered the accesses, so the locks are uncontended;
-/// poisoned slots are recovered — see the module notes on panic
-/// hygiene) and runs the fused-correction drain for direction `k` of
-/// plane `p`.
-#[allow(clippy::too_many_arguments)]
-fn drain_dir_pieces_fused(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    bounds: &[Vec<(usize, usize)>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<f32>,
-    p: usize,
-    k: usize,
-    c: usize,
-    hw: (usize, usize),
-    slots: &[Mutex<Option<Lease<'_>>>],
-    os: &mut [f32],
-    scratch: &mut DrainScratch<'_>,
-) {
-    let di = &dirs[k];
-    let hc = di.taps.h;
-    let taps = staged[k].panels(p / c, p % c);
-    // Taking the leases out of the slots moves ownership here: they
-    // return to the workspace pool when `bufs` drops, on every exit
-    // path — including the early return below.
-    let bufs: Vec<Option<Lease<'_>>> =
-        slots.iter().map(|s| lock_unpoisoned(s).take()).collect();
-    // A missing or wrong-size piece means its phase-1 job panicked
-    // before handing the panel over; `run_graph` already holds that
-    // payload — skip quietly so the caller reports the real panic, not
-    // a confusing secondary index/Poison error.
-    if bufs
-        .iter()
-        .zip(&bounds[k])
-        .any(|(b, &(lo, hi))| b.as_ref().map_or(true, |b| b.len() != (hi - lo) * hc))
-    {
-        return;
-    }
-    let pieces: Vec<&[f32]> = bufs.iter().map(|b| b.as_deref().unwrap()).collect();
-    drain_dir_fused(
-        &pieces,
-        &bounds[k],
-        hc,
-        di.chunk,
-        taps,
-        hw,
-        di.d,
-        os,
-        wts,
-        k,
-        dirs.len() - 1,
-        gain,
-        scratch,
-    );
-}
-
-/// Phase 2 of one plane off per-segment panel pieces, in the retired
-/// PR 4 *two-pass* form: chain the true carry across segment boundaries
-/// (the corrected last column of segment k *is* segment k+1's carry),
-/// add the linear correction scan **in place** (a full read-modify-write
-/// of every corrected panel column), then drain each corrected segment
-/// through the fused scatter epilogue in the same k = 0..dirs order as
-/// the plane path. Kept as the bit/bench reference the fused-correction
-/// drain ([`drain_dir_fused`]) is pinned `==` against and measured
-/// over (every element sees the same values in the same order, so the
-/// bits match).
-#[allow(clippy::too_many_arguments)]
-fn correct_and_drain_pieces(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    bounds: &[Vec<(usize, usize)>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<f32>,
-    p: usize,
-    c: usize,
-    hw: (usize, usize),
-    hmax: usize,
-    slots: &[Mutex<Option<Lease<'_>>>],
-    os: &mut [f32],
-    ws: &BufferPool,
-) {
-    let (h, w) = hw;
-    let last = dirs.len() - 1;
-    // Zero-reset: the zero-carry skip below reads `carry` before any
-    // write, and the correction columns keep fresh-`vec!` semantics.
-    let mut corr = ws.acquire_zeroed(hmax);
-    let mut next = ws.acquire_zeroed(hmax);
-    let mut carry = ws.acquire_zeroed(hmax);
-    let mut slot = 0usize;
-    for (k, di) in dirs.iter().enumerate() {
-        let hc = di.taps.h;
-        let taps = staged[k].panels(p / c, p % c);
-        for (si, &(lo, hi)) in bounds[k].iter().enumerate() {
-            // Taking the lease moves ownership here; it returns to the
-            // pool when `buf` drops, even on the early return below.
-            let taken = lock_unpoisoned(&slots[slot]).take();
-            slot += 1;
-            // A missing or wrong-size piece means its phase-1 job
-            // panicked before handing the panel over; `run_graph`
-            // already holds that payload — bail quietly so the caller
-            // reports the real panic, not a secondary index/Poison
-            // error.
-            let Some(mut buf) = taken else { return };
-            if buf.len() != (hi - lo) * hc {
-                return;
-            }
-            // Incoming carry: the previous segment's (corrected) last
-            // column. The reference decomposition skips all-zero
-            // carries; matching the skip keeps even -0.0 pixels
-            // bit-identical.
-            if si > 0 && !carry[..hc].iter().all(|&v| v == 0.0) {
-                correct_segment(
-                    hc, di.chunk, lo, hi, taps, &carry, &mut corr, &mut next, &mut buf,
-                );
-            }
-            carry[..hc].copy_from_slice(&buf[(hi - lo - 1) * hc..(hi - lo) * hc]);
-            drain_scatter(&buf, h, w, di.d, lo, hi - lo, hc, os, wts, k, last, gain);
-        }
-    }
-}
-
-/// The wavefront-scheduled segmented engine: the same (plane,
-/// direction, segment) phase-1 jobs as the barrier engine, submitted as
-/// a dependency graph ([`ThreadPool::run_graph`]) so no global
-/// rendezvous exists anywhere in the pass. Two continuation shapes:
-///
-/// * `per_dir = true` (production): **one drain continuation per
-///   (plane, direction)** — 4 per plane on a merged pass — running the
-///   fused-correction drain ([`drain_dir_pieces_fused`]). Direction k's
-///   drain depends on its *own* phase-1 pieces plus the same plane's
-///   direction-(k-1) drain (the chain preserves the k = 0..4 merge
-///   accumulation order on the shared output plane), so it overlaps
-///   both other planes' phase 1 and the same plane's later directions'
-///   scans.
-/// * `per_dir = false`: the PR 4 schedule — one continuation per plane
-///   over all directions, running the two-pass correct-then-drain
-///   ([`correct_and_drain_pieces`]). Kept as the bit/bench reference
-///   for the fused drain.
-///
-/// Phase-1 pieces hand their panels to the continuations through
-/// per-(plane, direction, segment) slots, and the per-direction drains
-/// share their output plane through a per-plane slot; the graph's
-/// dependency edges are what order the accesses, so the locks are
-/// uncontended (and recovered if poisoned — a panicking job must
-/// surface as the collected graph payload, not a `PoisonError`).
-/// Arithmetic is untouched — output is exact `==` with the barrier
-/// engine (and hence `scan_l2r_split`), pinned by tests.
-#[allow(clippy::too_many_arguments)]
-fn run_engine_segmented_wave(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<&[f32]>,
-    out_shape: &[usize],
-    pool: &ThreadPool,
-    segments: usize,
-    per_dir: bool,
-    ws: &BufferPool,
-    out_buf: Option<Vec<f32>>,
-) -> Tensor {
-    let c = out_shape[1];
-    let (h, w) = (out_shape[2], out_shape[3]);
-    let plane = h * w;
-    let nplanes = out_shape[0] * c;
-    let hmax = h.max(w);
-    let bounds: Vec<Vec<(usize, usize)>> =
-        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
-    let per_plane_slots: usize = bounds.iter().map(|b| b.len()).sum();
-    // Piece hand-off slots hold *leased* panels: whatever is still in a
-    // slot when this vec drops (e.g. drains skipped after a phase-1
-    // panic) returns to the workspace pool instead of leaking.
-    let slots: Vec<Mutex<Option<Lease<'_>>>> =
-        (0..nplanes * per_plane_slots).map(|_| Mutex::new(None)).collect();
-
-    let mut out = out_tensor(out_shape, out_buf);
-    let conts = if per_dir { dirs.len() } else { 1 };
-    let mut graph = GraphBuilder::with_capacity(nplanes * (per_plane_slots + conts));
-    let bounds_ref = &bounds;
-    let slots_ref = &slots;
-    // One phase-1 piece node per (plane, direction, segment), identical
-    // under both continuation shapes (the schedules cannot drift apart
-    // in what phase 1 computes).
-    macro_rules! submit_pieces {
-        ($ids:ident, $p:expr, $k:expr, $slot:ident) => {
-            for &(lo, hi) in &bounds_ref[$k] {
-                let dst = &slots_ref[$slot];
-                $slot += 1;
-                let (p, k) = ($p, $k);
-                let hc = dirs[k].taps.h;
-                $ids.push(graph.submit(move || {
-                    // Lease before the (test-only) fault hook so an
-                    // injected panic unwinds while scratch is out on
-                    // lease — the leak test covers the window that
-                    // matters. Zeroed like the fresh `vec!` it replaces.
-                    let mut buf = ws.acquire_zeroed((hi - lo) * hc);
-                    #[cfg(test)]
-                    test_hooks::maybe_panic(p, k, lo, hi);
-                    scan_piece_into(dirs, staged, c, (h, w), hmax, p, k, lo, hi, &mut buf, ws);
-                    *lock_unpoisoned(dst) = Some(buf);
-                }));
-            }
-        };
-    }
-    if per_dir {
-        // Per-plane output + scratch hand-off slots: the per-direction
-        // drain chain of a plane shares its output plane and one drain
-        // scratch through a single slot, ordered by the drain-(k-1) →
-        // drain-k graph edges (one scratch allocation per plane, as in
-        // the barrier path).
-        let os_slots: Vec<Mutex<(&mut [f32], DrainScratch<'_>)>> = out
-            .data
-            .chunks_mut(plane)
-            .map(|os| Mutex::new((os, DrainScratch::new(hmax, ws))))
-            .collect();
-        for (p, os_slot) in os_slots.iter().enumerate() {
-            let gv = gain.map(|g| g[p % c]);
-            let mut prev_drain: Option<NodeId> = None;
-            let mut slot = p * per_plane_slots;
-            for (k, _) in dirs.iter().enumerate() {
-                let mut deps = Vec::with_capacity(bounds[k].len() + 1);
-                let dir_slot0 = slot;
-                submit_pieces!(deps, p, k, slot);
-                if let Some(prev) = prev_drain {
-                    deps.push(prev);
-                }
-                let dir_slots = &slots_ref[dir_slot0..slot];
-                prev_drain = Some(graph.submit_after(&deps, move || {
-                    let mut guard = lock_unpoisoned(os_slot);
-                    let (os, scratch) = &mut *guard;
-                    drain_dir_pieces_fused(
-                        dirs, staged, bounds_ref, wts, gv, p, k, c, (h, w), dir_slots,
-                        os, scratch,
-                    );
-                }));
-            }
-        }
-        if let Err(e) = pool.run_graph(graph) {
-            std::panic::resume_unwind(e.into_payload());
-        }
-    } else {
-        for (p, os) in out.data.chunks_mut(plane).enumerate() {
-            let mut piece_ids = Vec::with_capacity(per_plane_slots);
-            let mut slot = p * per_plane_slots;
-            for (k, _) in dirs.iter().enumerate() {
-                submit_pieces!(piece_ids, p, k, slot);
-            }
-            let plane_slots = &slots_ref[p * per_plane_slots..(p + 1) * per_plane_slots];
-            let gv = gain.map(|g| g[p % c]);
-            graph.submit_after(&piece_ids, move || {
-                correct_and_drain_pieces(
-                    dirs,
-                    staged,
-                    bounds_ref,
-                    wts,
-                    gv,
-                    p,
-                    c,
-                    (h, w),
-                    hmax,
-                    plane_slots,
-                    os,
-                    ws,
-                );
-            });
-        }
-        if let Err(e) = pool.run_graph(graph) {
-            std::panic::resume_unwind(e.into_payload());
-        }
-    }
-    out
-}
-
-// ---------------------------------------------------------------------
-// Single-pass chained engine (decoupled look-back)
-// ---------------------------------------------------------------------
-
-thread_local! {
-    /// The chained-scan helping bound of the current thread: while a
-    /// chunk job is on the stack, a wait loop inside it may only
-    /// claim-and-run jobs with a *strictly lower* claim index. The
-    /// nested-job stack is therefore strictly decreasing in claim
-    /// index, so helping can never re-enter (or transitively depend
-    /// on) the job that is waiting — the deadlock an unbounded
-    /// work-steal here would hit. Fresh pool tickets start unbounded
-    /// (`usize::MAX`).
-    static CHAIN_BOUND: Cell<usize> = const { Cell::new(usize::MAX) };
-}
-
-/// Scoped setter for [`CHAIN_BOUND`]: restores the previous bound on
-/// drop, including during unwinding (a panicking chunk must not leave
-/// a stale bound on a pool worker's thread-local).
-struct BoundGuard {
-    prev: usize,
-}
-
-impl BoundGuard {
-    fn set(j: usize) -> BoundGuard {
-        BoundGuard { prev: CHAIN_BOUND.with(|b| b.replace(j)) }
-    }
-}
-
-impl Drop for BoundGuard {
-    fn drop(&mut self) {
-        CHAIN_BOUND.with(|b| b.set(self.prev));
-    }
-}
-
-/// Claim the lowest unclaimed job with index `< bound`. Lowest-first
-/// matches the claim order's topology (see [`run_engine_chained`]), so
-/// a fresh runner always picks a job whose predecessors are already
-/// claimed or complete, and a blocked job only helps jobs it can never
-/// transitively wait on.
-fn chain_claim(claimed: &[AtomicBool], bound: usize) -> Option<usize> {
-    let n = claimed.len().min(bound);
-    (0..n).find(|&j| {
-        !claimed[j].load(Ordering::Relaxed)
-            && claimed[j]
-                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
-                .is_ok()
-    })
-}
-
-/// Whether a chunk reset (`gi % chunk == 0`) lands inside block columns
-/// `[lo, hi)`. If so, any incoming carry dies before the block's last
-/// column, its inclusive prefix equals its zero-carry aggregate no
-/// matter what precedes it, and a look-back can terminate there.
-fn chain_broken(lo: usize, hi: usize, chunk: usize) -> bool {
-    lo.div_ceil(chunk) * chunk < hi
-}
-
-/// One (plane, direction, segment) chunk of the chained engine, plus
-/// its publication-board block index.
-struct ChainJob {
-    p: usize,
-    k: usize,
-    si: usize,
-    lo: usize,
-    hi: usize,
-    bidx: usize,
-}
-
-/// Shared state of one chained-engine call: the job table in claim
-/// order, the claim flags, the publication board, the merge-order
-/// drain counters, and the per-plane output slots.
-struct ChainState<'e, 'w> {
-    dirs: &'e [DirInput<'e>],
-    staged: &'e [StagedTaps<'w>],
-    wts: Option<&'e [f32; 4]>,
-    gain: Option<&'e [f32]>,
-    c: usize,
-    hw: (usize, usize),
-    hmax: usize,
-    bounds: &'e [Vec<(usize, usize)>],
-    jobs: Vec<ChainJob>,
-    claimed: Vec<AtomicBool>,
-    /// Completed-drain counters per `(plane, direction)` — the
-    /// merge-order gate of merged passes: direction k's chunks scatter
-    /// only after all `bounds[k-1].len()` chunks of the same plane
-    /// drained, preserving the fixed k = 0..4 accumulation order.
-    drained: Vec<AtomicUsize>,
-    board: BlockBoard<'e>,
-    os_slots: Vec<Mutex<&'e mut [f32]>>,
-    /// Call-wide abort flag: set (with the block poisoned) by any
-    /// panicking chunk so every spinning waiter unwinds instead of
-    /// waiting on a publication that will never come.
-    poisoned: AtomicBool,
-    pool: Option<&'e ThreadPool>,
-    ws: &'w BufferPool,
-    /// Storage precision of the job-local panels (the staged taps carry
-    /// their own): [`Precision::Bf16`] halves the retained bytes while
-    /// the recurrence and the publication board stay f32.
-    prec: Precision,
-}
-
-impl ChainState<'_, '_> {
-    /// Wait until `pred` holds, productively: claim-and-run another
-    /// chain job below the current helping bound, or assist the pool's
-    /// global queue, before falling back to spin/yield. Panics
-    /// (unwinding the waiting job) once any chunk of this call has
-    /// poisoned the board.
-    fn wait_until(&self, what: &str, pred: impl Fn(&Self) -> bool) {
-        let mut spins = 0u32;
-        while !pred(self) {
-            if self.poisoned.load(Ordering::Acquire) {
-                panic!("chained scan: waiting on {what}, but a chunk panicked");
-            }
-            let bound = CHAIN_BOUND.with(|b| b.get());
-            if let Some(j) = chain_claim(&self.claimed, bound) {
-                run_chain_job(self, j);
-            } else if self.pool.map_or(false, |p| p.try_assist()) {
-                spins = 0;
-            } else {
-                spins += 1;
-                if spins < 64 {
-                    std::hint::spin_loop();
-                } else {
-                    std::thread::yield_now();
-                }
-            }
-        }
-    }
-}
-
-/// One chained runner: claim the lowest unclaimed job under the
-/// thread's current helping bound and run it, until nothing claimable
-/// remains. Fresh pool tickets run unbounded; a runner ticket executed
-/// from inside a blocked job's wait loop (via
-/// [`ThreadPool::try_assist`]) inherits that job's bound and may exit
-/// early — the caller's mop-up pass finishes the tail.
-fn chain_runner(st: &ChainState<'_, '_>) {
-    loop {
-        let bound = CHAIN_BOUND.with(|b| b.get());
-        match chain_claim(&st.claimed, bound) {
-            Some(j) => run_chain_job(st, j),
-            None => break,
-        }
-    }
-}
-
-/// Run one claimed chain job with the helping bound scoped to its claim
-/// index, and panic containment: a panicking chunk poisons its board
-/// block and the call-wide flag — so look-back waiters unwind through
-/// the normal panic path instead of deadlocking on a publication that
-/// will never arrive — then rethrows for the pool to collect as a
-/// `MapError`.
-fn run_chain_job(st: &ChainState<'_, '_>, j: usize) {
-    let _bound = BoundGuard::set(j);
-    if let Err(payload) =
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chain_job_body(st, j)))
-    {
-        st.board.poison(st.jobs[j].bidx);
-        st.poisoned.store(true, Ordering::Release);
-        std::panic::resume_unwind(payload);
-    }
-}
-
-/// The single-pass chunk body: scan once from a zero carry into
-/// job-local scratch, publish the aggregate, resolve the true incoming
-/// carry by decoupled look-back, fold the correction into the still
-/// cache-hot local panel, publish the inclusive prefix, and scatter the
-/// corrected panel through the unchanged fused epilogue. No phase
-/// barrier, no retained panel array, no second DRAM read of the panel.
-fn chain_job_body(st: &ChainState<'_, '_>, j: usize) {
-    let &ChainJob { p, k, si, lo, hi, bidx } = &st.jobs[j];
-    let di = &st.dirs[k];
-    let hc = di.taps.h;
-    let chunk = di.chunk;
-    let (h, w) = st.hw;
-    let seglen = hi - lo;
-    let taps = st.staged[k].panels(p / st.c, p % st.c);
-    let bf16 = st.prec == Precision::Bf16;
-    // Job-local panel — half-width (packed bf16 words in the f32 lease)
-    // in reduced-precision mode, fully overwritten by the scan below.
-    // Leased before the (test-only) fault hook so an injected panic
-    // unwinds while scratch is out on lease — the leak test covers the
-    // window that matters.
-    let mut panel = if bf16 {
-        st.ws.acquire(simd::bf16_len(seglen * hc))
-    } else {
-        st.ws.acquire(seglen * hc)
-    };
-    // The f32 aggregate column of a bf16 chunk: the recurrence runs in
-    // f32 (only the *stored* panel narrows), so the board still carries
-    // full-precision columns and the look-back fold loses nothing.
-    let mut aggbuf = bf16.then(|| st.ws.acquire(st.hmax));
-    #[cfg(test)]
-    test_hooks::maybe_panic(p, k, lo, hi);
-    match aggbuf.as_mut() {
-        Some(agg) => {
-            scan_piece_into_bf16(
-                st.dirs,
-                st.staged,
-                st.c,
-                (h, w),
-                st.hmax,
-                p,
-                k,
-                lo,
-                hi,
-                &mut panel.as_u16_mut()[..seglen * hc],
-                &mut agg[..hc],
-                st.ws,
-            );
-            // Publish the zero-carry aggregate (the chunk's last
-            // column) immediately: successors' look-backs can fold over
-            // it while this chunk is still resolving its own carry.
-            st.board.publish_agg(bidx, &agg[..hc]);
-        }
-        None => {
-            scan_piece_into(
-                st.dirs, st.staged, st.c, (h, w), st.hmax, p, k, lo, hi, &mut panel, st.ws,
-            );
-            st.board.publish_agg(bidx, &panel[(seglen - 1) * hc..]);
-        }
-    }
-
-    // Decoupled look-back: walk predecessor blocks back to the nearest
-    // *final* value — a published inclusive PREFIX, block 0 (whose
-    // aggregate is its prefix), or a chain-breaker — then fold forward
-    // over the skipped blocks' aggregates with the exact
-    // `correct_col` recurrence and zero-carry/chunk-reset skips of
-    // the two-phase engine, so the resolved carry is bit-identical to
-    // the sequentially chained one.
-    let mut corr = st.ws.acquire_zeroed(st.hmax);
-    let mut next = st.ws.acquire_zeroed(st.hmax);
-    let mut carry = st.ws.acquire_zeroed(st.hmax);
-    let mut active = false;
-    if si > 0 {
-        let sbounds = &st.bounds[k];
-        let base = bidx - si; // board index of (p, k, si = 0)
-        let mut t = si - 1;
-        loop {
-            let b = base + t;
-            st.wait_until("a predecessor's published column", |s| {
-                s.board.state(b) >= BLOCK_AGG
-            });
-            let state = st.board.state(b);
-            assert!(state != BLOCK_POISONED, "chained scan: predecessor chunk panicked");
-            if state == BLOCK_PREFIX {
-                st.board.read_prefix(b, &mut carry[..hc]);
-                break;
-            }
-            let (tlo, thi) = sbounds[t];
-            if t == 0 || chain_broken(tlo, thi, chunk) {
-                st.board.read_agg(b, &mut carry[..hc]);
-                break;
-            }
-            t -= 1;
-        }
-        let mut agg = st.ws.acquire(st.hmax);
-        for u in t + 1..si {
-            let (ulo, uhi) = sbounds[u];
-            let b = base + u;
-            assert!(
-                st.board.state(b) != BLOCK_POISONED,
-                "chained scan: predecessor chunk panicked"
-            );
-            st.board.read_agg(b, &mut agg[..hc]);
-            if carry[..hc].iter().all(|&v| v == 0.0) {
-                // Zero incoming carry: block u needed no correction, so
-                // its prefix is its aggregate (the reference
-                // decomposition's skip — keeps even -0.0 pixels
-                // bit-identical).
-                carry[..hc].copy_from_slice(&agg[..hc]);
-                continue;
-            }
-            // The carry is the full corrected value of column ulo - 1
-            // (phase 1 scanned from zero there), so it seeds the linear
-            // correction directly — the same association
-            // [`correct_segment`] walks, minus the panel adds.
-            corr[..hc].copy_from_slice(&carry[..hc]);
-            let mut died = false;
-            for gi in ulo..uhi {
-                if gi % chunk == 0 {
-                    died = true;
-                    break;
-                }
-                simd::correct_col(&corr[..hc], taps.col(gi, hc), &mut next[..hc]);
-                std::mem::swap(&mut corr, &mut next);
-            }
-            if died {
-                carry[..hc].copy_from_slice(&agg[..hc]);
-            } else {
-                // prefix_u = agg_u + corr(last column): the identical
-                // f32 add [`drain_dir_fused`] performs on the panel's
-                // last column.
-                for ((cv, &av), &co) in
-                    carry[..hc].iter_mut().zip(&agg[..hc]).zip(&corr[..hc])
-                {
-                    *cv = av + co;
-                }
-            }
-        }
-        active = !carry[..hc].iter().all(|&v| v == 0.0);
-    }
-
-    // Fold the resolved carry into the job-local panel while it is
-    // still cache-hot — exactly the two-pass correction arithmetic
-    // (`phase1 + corr`, dying at chunk resets; bf16 panels decode, add
-    // in f32, and re-encode per element).
-    if active {
-        match aggbuf.as_mut() {
-            Some(_) => correct_segment_bf16(
-                hc,
-                chunk,
-                lo,
-                hi,
-                taps,
-                &carry,
-                &mut corr,
-                &mut next,
-                &mut panel.as_u16_mut()[..seglen * hc],
-            ),
-            None => correct_segment(
-                hc, chunk, lo, hi, taps, &carry, &mut corr, &mut next, &mut panel,
-            ),
-        }
-    }
-
-    // Publish the inclusive prefix (the corrected last column) BEFORE
-    // the merge-order gate: successors' look-backs terminate here even
-    // while this chunk is queued behind the previous direction's
-    // drains.
-    match aggbuf.as_mut() {
-        Some(agg) => {
-            if active {
-                // Decode the corrected bf16 last column; an uncorrected
-                // chunk republishes its exact f32 aggregate instead
-                // (prefix == aggregate, bit for bit, as in f32 mode).
-                let last = &panel.as_u16()[(seglen - 1) * hc..seglen * hc];
-                for (o, &v) in agg[..hc].iter_mut().zip(last) {
-                    *o = bf16_widen(v);
-                }
-            }
-            st.board.publish_prefix(bidx, &agg[..hc]);
-        }
-        None => st.board.publish_prefix(bidx, &panel[(seglen - 1) * hc..]),
-    }
-
-    // Merged passes: direction k's contributions land on the shared
-    // output plane only after every direction-(k-1) chunk of the same
-    // plane has drained — the fixed k = 0..4 merge order the serial
-    // reference accumulates in.
-    let ndirs = st.dirs.len();
-    if k > 0 {
-        let want = st.bounds[k - 1].len();
-        let gate = p * ndirs + (k - 1);
-        st.wait_until("the previous direction's drains", |s| {
-            s.drained[gate].load(Ordering::Acquire) >= want
-        });
-    }
-
-    // Pure scatter of the already-corrected panel through the shared
-    // epilogue op — no correction work happens under the plane lock.
-    // bf16 panels decode slab-by-slab into an f32 staging slab (leased
-    // before the lock) so the scatter arms stay f32-only.
-    {
-        let mut dec = bf16.then(|| st.ws.acquire(SLAB * hc.max(1)));
-        let gain = st.gain.map(|g| g[p % st.c]);
-        let mut guard = lock_unpoisoned(&st.os_slots[p]);
-        let os: &mut [f32] = &mut guard;
-        let mut j0 = 0;
-        while j0 < seglen {
-            let sw = SLAB.min(seglen - j0);
-            let hs: &[f32] = match dec.as_mut() {
-                Some(dec) => {
-                    let words = &panel.as_u16()[j0 * hc..(j0 + sw) * hc];
-                    for (o, &v) in dec[..sw * hc].iter_mut().zip(words) {
-                        *o = bf16_widen(v);
-                    }
-                    &dec[..sw * hc]
-                }
-                None => &panel[j0 * hc..(j0 + sw) * hc],
-            };
-            drain_scatter(hs, h, w, di.d, lo + j0, sw, hc, os, st.wts, k, ndirs - 1, gain);
-            j0 += sw;
-        }
-    }
-    st.drained[p * ndirs + k].fetch_add(1, Ordering::Release);
-}
-
-/// The single-pass chained engine ([`ScanStrategy::Chained`]): the same
-/// (plane, direction, segment) decomposition as the segmented engine,
-/// but each chunk is ONE self-contained job — scan from a zero carry,
-/// publish the aggregate, resolve the true carry by decoupled look-back
-/// over a publication board ([`BlockBoard`]), correct in place while
-/// the panel is L2-hot, publish the inclusive prefix, drain through the
-/// unchanged fused epilogue. What the two-phase engines pay and this
-/// one does not: the global phase rendezvous (barrier) or dependency-
-/// graph machinery (wavefront), the retained-panel array and its extra
-/// DRAM round trip, and the per-piece lease hand-offs.
-///
-/// Bit-exactness: chunk bounds come from the same [`segment_bounds`],
-/// phase-1 arithmetic is the shared [`scan_piece_into`], and the
-/// look-back fold replays the exact `correct_col` recurrence order
-/// with the reference's zero-carry and chunk-reset skips — so the
-/// resolved carry, the corrected panel, and hence every output bit
-/// match `scan_l2r_split` and the segmented engine exactly (validated
-/// bitwise against a two-phase mirror over ~9.4k randomized
-/// geometry/chunk/zero-carry cases before porting, and pinned `==` by
-/// the chained property suite).
-///
-/// Scheduling: jobs are claimed lowest-index-first from a direction-
-/// major (k, p, si) order — a valid topological order of the chain's
-/// dependencies, since block (p, k, si) waits only on (p, k, < si)
-/// (look-back) and (p, k-1, *) (merge-order gate). A blocked chunk
-/// helps by claiming jobs strictly below its own index
-/// ([`CHAIN_BOUND`]), assists the pool's global queue, or spins;
-/// deadlock-freedom follows by induction on the lowest incomplete
-/// index. On a serial pool the claim order degrades to the plain
-/// sequential two-phase order, every wait instantly satisfied.
-#[allow(clippy::too_many_arguments)]
-fn run_engine_chained(
-    dirs: &[DirInput<'_>],
-    staged: &[StagedTaps<'_>],
-    wts: Option<&[f32; 4]>,
-    gain: Option<&[f32]>,
-    out_shape: &[usize],
-    pool: Option<&ThreadPool>,
-    segments: usize,
-    ws: &BufferPool,
-    out_buf: Option<Vec<f32>>,
-    prec: Precision,
-) -> Tensor {
-    let c = out_shape[1];
-    let (h, w) = (out_shape[2], out_shape[3]);
-    let plane = h * w;
-    let nplanes = out_shape[0] * c;
-    let hmax = h.max(w);
-    let bounds: Vec<Vec<(usize, usize)>> =
-        dirs.iter().map(|di| segment_bounds(di.taps.w, segments)).collect();
-    let seg_off: Vec<usize> = bounds
-        .iter()
-        .scan(0usize, |acc, b| {
-            let o = *acc;
-            *acc += b.len();
-            Some(o)
-        })
-        .collect();
-    let per_plane: usize = bounds.iter().map(|b| b.len()).sum();
-    let total_blocks = nplanes * per_plane;
-    // Publication board payload: one pooled lease holding an
-    // [aggregate | prefix] column pair per block. Every slot range is
-    // fully written before its state permits a read, so the lease is
-    // not zero-reset.
-    let mut board_payload = ws.acquire(2 * hmax * total_blocks);
-    let board = BlockBoard::new(&mut board_payload, total_blocks, hmax);
-    // Claim order (k, p, si), direction-major: dependencies of every
-    // job sit at strictly lower indices, and ordering directions
-    // outermost keeps every plane's direction-k chain moving instead of
-    // camping all workers on one plane's serial look-back chain.
-    let mut jobs = Vec::with_capacity(total_blocks);
-    for (k, b) in bounds.iter().enumerate() {
-        for p in 0..nplanes {
-            for (si, &(lo, hi)) in b.iter().enumerate() {
-                jobs.push(ChainJob { p, k, si, lo, hi, bidx: p * per_plane + seg_off[k] + si });
-            }
-        }
-    }
-    let njobs = jobs.len();
-    let mut out = out_tensor(out_shape, out_buf);
-    let st = ChainState {
-        dirs,
-        staged,
-        wts,
-        gain,
-        c,
-        hw: (h, w),
-        hmax,
-        bounds: &bounds,
-        jobs,
-        claimed: (0..njobs).map(|_| AtomicBool::new(false)).collect(),
-        drained: (0..nplanes * dirs.len()).map(|_| AtomicUsize::new(0)).collect(),
-        board,
-        os_slots: out.data.chunks_mut(plane).map(Mutex::new).collect(),
-        poisoned: AtomicBool::new(false),
-        pool: pool.filter(|p| p.threads() > 1 && njobs > 1),
-        ws,
-        prec,
-    };
-    match st.pool {
-        Some(pool) => {
-            // min(threads, jobs) self-scheduling runner tickets; the
-            // caller participates through `try_map`'s own-call helping.
-            let runners: Vec<usize> = (0..pool.threads().min(njobs)).collect();
-            if let Err(e) = pool.try_map(runners, |_| chain_runner(&st)) {
-                std::panic::resume_unwind(e.into_payload());
-            }
-            // A runner ticket drained from inside a blocked job's wait
-            // loop inherits that job's helping bound and may have
-            // exited early; one unbounded mop-up pass completes any
-            // unclaimed tail.
-            chain_runner(&st);
-        }
-        // Serial path: claim in order on the caller thread — every
-        // wait's predecessor has already completed, so the chain
-        // degrades to the plain sequential two-phase order, bit for
-        // bit and with a deterministic lease sequence.
-        None => chain_runner(&st),
-    }
-    drop(st);
-    out
-}
-
-/// Test-only fault injection for the wavefront phase-1 pieces and the
-/// chained chunk jobs: lets the panic-propagation suites force exactly
-/// one (plane, dir, lo, hi) piece to panic and assert the payload
-/// surfaces as the collected graph/map error (not a `PoisonError`, a
-/// secondary index panic, or a hung look-back waiter).
-#[cfg(test)]
-pub(crate) mod test_hooks {
-    use std::sync::Mutex;
-
-    pub(crate) static PANIC_PIECE: Mutex<Option<(usize, usize, usize, usize)>> =
-        Mutex::new(None);
-
-    pub(crate) fn maybe_panic(p: usize, k: usize, lo: usize, hi: usize) {
-        let hit = crate::util::lock_unpoisoned(&PANIC_PIECE)
-            .map_or(false, |t| t == (p, k, lo, hi));
-        if hit {
-            panic!("injected phase-1 panic at ({p},{k},{lo},{hi})");
-        }
-    }
-}
-
-// ---------------------------------------------------------------------
-// Public entry points
-// ---------------------------------------------------------------------
-
-/// Fused directional scan (serial): bit-identical to
-/// `scan_dir(x, taps, lam, d, kchunk)` with zero canonical copies.
-pub fn fused_scan_dir(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, None, BufferPool::global(), None)
-}
-
-/// [`fused_scan_dir`] with block-granular plane jobs on `pool`.
-pub fn fused_scan_dir_pool(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), BufferPool::global(), None)
-}
-
-/// [`fused_scan_dir_pool`] drawing all per-call scratch from an explicit
-/// workspace pool instead of the process-global one — the serving entry:
-/// the coordinator owns one pool so its hit/miss counters are isolated
-/// and pre-warmable per bucket.
-pub fn fused_scan_dir_pool_ws(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    pool: &ThreadPool,
-    ws: &BufferPool,
-) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, d, kchunk, Some(pool), ws, None)
-}
-
-fn fused_scan_dir_inner(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    pool: Option<&ThreadPool>,
-    ws: &BufferPool,
-    out_buf: Option<Vec<f32>>,
-) -> Tensor {
-    validate_dir(x, taps, lam, d);
-    if x.data.is_empty() {
-        return out_tensor(&x.shape, out_buf);
-    }
-    let chunk = effective_chunk(taps.w, kchunk);
-    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(&dirs, None, None, &x.shape, pool, ExecSpec::Auto, ws, out_buf, None)
-}
-
-/// [`fused_scan_dir_pool`] under an explicit, caller-forced strategy +
-/// phase-2 schedule. The pooled entry points normally consult the
-/// planner ([`plan::plan_scan`]); this hook exists for tests, benches,
-/// and plan-carrying callers that already decided.
-#[allow(clippy::too_many_arguments)]
-fn fused_scan_dir_forced(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    strategy: ScanStrategy,
-    phase2: Phase2,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_forced_ws(
-        x,
-        taps,
-        lam,
-        d,
-        kchunk,
-        strategy,
-        phase2,
-        pool,
-        BufferPool::global(),
-        None,
-    )
-}
-
-/// [`fused_scan_dir_forced`] over an explicit workspace — the hook the
-/// pooled-vs-fresh bit-exactness and zero-miss tests drive per strategy.
-/// `prec` overrides the panel/tap storage precision *for this call
-/// only* (tests must never flip the process-global precision override:
-/// concurrently running `==` suites would observe it).
-#[allow(clippy::too_many_arguments)]
-fn fused_scan_dir_forced_ws(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    strategy: ScanStrategy,
-    phase2: Phase2,
-    pool: &ThreadPool,
-    ws: &BufferPool,
-    prec: Option<Precision>,
-) -> Tensor {
-    validate_dir(x, taps, lam, d);
-    if x.data.is_empty() {
-        return Tensor::zeros(&x.shape);
-    }
-    let chunk = effective_chunk(taps.w, kchunk);
-    let dirs = [DirInput { d, taps, x, lam, layout: Orientation::Spatial, chunk }];
-    run_engine(
-        &dirs,
-        None,
-        None,
-        &x.shape,
-        Some(pool),
-        ExecSpec::Forced(strategy, phase2),
-        ws,
-        None,
-        prec,
-    )
-}
-
-/// [`fused_scan_dir_pool`] with a *forced* segment-parallel
-/// decomposition: each plane's canonical columns are scanned as
-/// `segments` zero-carry segments and carry-corrected — bit-identical
-/// (exact `==`, pinned by tests) to running
-/// [`super::split::scan_l2r_split`] on the canonically reoriented
-/// tensors with the same count. Runs the barrier schedule; see
-/// [`fused_scan_dir_seg_wave`] for the wavefront twin.
-pub fn fused_scan_dir_seg(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Segmented { s: segments };
-    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::Barrier, pool)
-}
-
-/// [`fused_scan_dir_seg`] under per-direction wavefront scheduling:
-/// each (plane, direction)'s fused correction + epilogue drain runs as
-/// its own continuation of that direction's phase-1 segment jobs
-/// instead of behind a global barrier. Scheduling only — exact `==`
-/// with [`fused_scan_dir_seg`] (and the `scan_l2r_split` reference) at
-/// the same count, pinned by tests.
-pub fn fused_scan_dir_seg_wave(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Segmented { s: segments };
-    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WaveDir, pool)
-}
-
-/// [`fused_scan_dir_seg_wave`] under the retired PR 4 schedule: one
-/// continuation per plane running the *two-pass* correct-then-drain
-/// (the retained panel is corrected in place, then re-read by the
-/// drain). Exact `==` with both other schedules — kept as the bit and
-/// bench reference the fused-correction drain is measured against.
-pub fn fused_scan_dir_seg_wave_twopass(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Segmented { s: segments };
-    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::WavePlane, pool)
-}
-
-/// [`fused_scan_dir_seg`] executed by the single-pass chained engine
-/// ([`ScanStrategy::Chained`], [`run_engine_chained`]): one decoupled
-/// look-back job per (plane, direction, segment), no phase barrier, no
-/// retained panels. Exact `==` with [`fused_scan_dir_seg`] (and hence
-/// `scan_l2r_split`) at the same count, pinned by tests.
-pub fn fused_scan_dir_chained(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    d: Direction,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Chained { s: segments };
-    // The chained engine has no phase 2; the schedule arg is inert.
-    fused_scan_dir_forced(x, taps, lam, d, kchunk, strategy, Phase2::Barrier, pool)
-}
-
-/// [`fused_scan_dir_chained`] for the canonical left-to-right scan.
-pub fn fused_scan_l2r_chained(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_chained(x, taps, lam, Direction::L2R, kchunk, segments, pool)
-}
-
-/// [`fused_scan_dir_seg`] for the canonical left-to-right scan: the
-/// segmented twin of [`fused_scan_l2r_pool`], exact `==` with
-/// [`super::split::scan_l2r_split`] at the same count.
-pub fn fused_scan_l2r_seg(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_seg(x, taps, lam, Direction::L2R, kchunk, segments, pool)
-}
-
-/// [`fused_scan_l2r_seg`] under wavefront scheduling (see
-/// [`fused_scan_dir_seg_wave`]).
-pub fn fused_scan_l2r_seg_wave(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_seg_wave(x, taps, lam, Direction::L2R, kchunk, segments, pool)
-}
-
-/// [`fused_scan_l2r_seg_wave`] under the PR 4 two-pass schedule (see
-/// [`fused_scan_dir_seg_wave_twopass`]).
-pub fn fused_scan_l2r_seg_wave_twopass(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_seg_wave_twopass(x, taps, lam, Direction::L2R, kchunk, segments, pool)
-}
-
-/// Fused canonical scan (serial): bit-identical to `scan_l2r`.
-pub fn fused_scan_l2r(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
-    fused_scan_dir(x, taps, lam, Direction::L2R, kchunk)
-}
-
-/// [`fused_scan_l2r`] with block-granular plane jobs on `pool`.
-pub fn fused_scan_l2r_pool(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_scan_dir_pool(x, taps, lam, Direction::L2R, kchunk, pool)
-}
-
-/// [`fused_scan_l2r_pool`] over an explicit workspace pool (see
-/// [`fused_scan_dir_pool_ws`]) — what the coordinator's CPU batch path
-/// calls so steady-state serving of a warm bucket allocates nothing in
-/// the scan hot path.
-pub fn fused_scan_l2r_pool_ws(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    pool: &ThreadPool,
-    ws: &BufferPool,
-) -> Tensor {
-    fused_scan_dir_pool_ws(x, taps, lam, Direction::L2R, kchunk, pool, ws)
-}
-
-/// [`fused_scan_l2r_pool_ws`] writing its output into a caller-recycled
-/// buffer — zeroed, exactly `x` elements long, typically
-/// [`BufferPool::take_zeroed`] from the same workspace. This is the
-/// coordinator's reply-recycling hook: with the output buffer taken
-/// from (and, via the client's `ReplyLease` drop, donated back to) the
-/// request workspace, a warm bucket's hot path performs no heap
-/// allocation at all, reply tensor included. Bit-identical to the plain
-/// entry — the buffer only replaces the fresh `Tensor::zeros`.
-pub fn fused_scan_l2r_pool_ws_into(
-    x: &Tensor,
-    taps: &Taps,
-    lam: &Tensor,
-    kchunk: usize,
-    pool: &ThreadPool,
-    ws: &BufferPool,
-    out_buf: Vec<f32>,
-) -> Tensor {
-    fused_scan_dir_inner(x, taps, lam, Direction::L2R, kchunk, Some(pool), ws, Some(out_buf))
-}
-
-/// [`fused_scan_l2r`] over the process-wide shared pool.
-pub fn fused_scan_l2r_par(x: &Tensor, taps: &Taps, lam: &Tensor, kchunk: usize) -> Tensor {
-    fused_scan_l2r_pool(x, taps, lam, kchunk, ThreadPool::global())
-}
-
-fn merged_dirs<'a>(
-    x: &'a Tensor,
-    taps: [&'a Taps; 4],
-    lam: &'a Tensor,
-    kchunk: usize,
-) -> Vec<DirInput<'a>> {
-    DIRECTIONS
-        .iter()
-        .enumerate()
-        .map(|(k, &d)| {
-            validate_dir(x, taps[k], lam, d);
-            DirInput {
-                d,
-                taps: taps[k],
-                x,
-                lam,
-                layout: Orientation::Spatial,
-                chunk: effective_chunk(taps[k].w, kchunk),
-            }
-        })
-        .collect()
-}
-
-/// Fused four-direction merge (serial): bit-identical to the reference
-/// [`super::direction::merged_4dir_ref`], with the pack, all four scans,
-/// and the weighted merge in one engine pass.
-pub fn fused_merged_4dir(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-) -> Tensor {
-    let dirs = merged_dirs(x, taps, lam, kchunk);
-    let wts = merge_weights(merge_logits);
-    run_engine(
-        &dirs,
-        Some(&wts),
-        None,
-        &x.shape,
-        None,
-        ExecSpec::Auto,
-        BufferPool::global(),
-        None,
-        None,
-    )
-}
-
-/// [`fused_merged_4dir`] with block-granular plane jobs on `pool`.
-pub fn fused_merged_4dir_pool(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let dirs = merged_dirs(x, taps, lam, kchunk);
-    let wts = merge_weights(merge_logits);
-    run_engine(
-        &dirs,
-        Some(&wts),
-        None,
-        &x.shape,
-        Some(pool),
-        ExecSpec::Auto,
-        BufferPool::global(),
-        None,
-        None,
-    )
-}
-
-/// [`fused_merged_4dir_pool`] under an explicit strategy + phase-2
-/// schedule (the forced hook behind the seg / fan variants below).
-#[allow(clippy::too_many_arguments)]
-fn fused_merged_4dir_forced(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    strategy: ScanStrategy,
-    phase2: Phase2,
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_merged_4dir_forced_ws(
-        x,
-        taps,
-        lam,
-        merge_logits,
-        kchunk,
-        strategy,
-        phase2,
-        pool,
-        BufferPool::global(),
-        None,
-    )
-}
-
-/// [`fused_merged_4dir_forced`] over an explicit workspace — the merged
-/// twin of [`fused_scan_dir_forced_ws`] for the pooled-vs-fresh tests,
-/// with the same per-call `prec` override.
-#[allow(clippy::too_many_arguments)]
-fn fused_merged_4dir_forced_ws(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    strategy: ScanStrategy,
-    phase2: Phase2,
-    pool: &ThreadPool,
-    ws: &BufferPool,
-    prec: Option<Precision>,
-) -> Tensor {
-    let dirs = merged_dirs(x, taps, lam, kchunk);
-    let wts = merge_weights(merge_logits);
-    run_engine(
-        &dirs,
-        Some(&wts),
-        None,
-        &x.shape,
-        Some(pool),
-        ExecSpec::Forced(strategy, phase2),
-        ws,
-        None,
-        prec,
-    )
-}
-
-/// [`fused_merged_4dir_pool`] with a *forced* segment count per
-/// direction (clamped to each direction's canonical width) — the
-/// segmented twin of the merged pass for tests and benches. Segment
-/// arithmetic follows the `scan_l2r_split` decomposition per direction;
-/// merge order and the epilogue fusion are unchanged. Barrier schedule;
-/// [`fused_merged_4dir_seg_wave`] is the wavefront twin.
-pub fn fused_merged_4dir_seg(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Segmented { s: segments };
-    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::Barrier, pool)
-}
-
-/// [`fused_merged_4dir_seg`] under per-direction wavefront scheduling:
-/// 4 drain continuations per plane, each depending on its own
-/// direction's phase-1 jobs plus the previous direction's drain (the
-/// chain preserves the k = 0..4 merge order), with the correction fused
-/// into the merge drain. Exact `==` with the barrier twin, pinned by
-/// tests.
-pub fn fused_merged_4dir_seg_wave(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Segmented { s: segments };
-    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WaveDir, pool)
-}
-
-/// [`fused_merged_4dir_seg_wave`] under the retired PR 4 schedule: one
-/// two-pass correct-then-drain continuation per plane (see
-/// [`fused_scan_dir_seg_wave_twopass`]). Exact `==` with both other
-/// schedules; the bench comparison row for the fused-correction drain.
-pub fn fused_merged_4dir_seg_wave_twopass(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Segmented { s: segments };
-    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::WavePlane, pool)
-}
-
-/// [`fused_merged_4dir_seg`] executed by the single-pass chained engine
-/// (see [`fused_scan_dir_chained`]): per-direction chunk chains with
-/// decoupled look-back, the k = 0..4 merge order preserved by the
-/// per-plane drain gates. Exact `==` with the barrier twin, pinned by
-/// tests.
-pub fn fused_merged_4dir_chained(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    segments: usize,
-    pool: &ThreadPool,
-) -> Tensor {
-    let strategy = ScanStrategy::Chained { s: segments };
-    fused_merged_4dir_forced(x, taps, lam, merge_logits, kchunk, strategy, Phase2::Barrier, pool)
-}
-
-/// [`fused_merged_4dir_pool`] with the *forced* per-direction phase-1
-/// fan-out ([`ScanStrategy::DirFan`]): one zero-carry full-width scan
-/// job per (plane, direction), drained through the fixed-k-order merge
-/// epilogue per plane — bit-identical (exact `==`, pinned by tests) to
-/// [`fused_merged_4dir`] and the serial reference, ×4 the parallel
-/// width. `wavefront` runs each (plane, direction)'s drain as its own
-/// continuation of that direction's scan, chained to keep the merge
-/// order — direction k's drain overlaps direction k+1's scan; `false`
-/// uses the two-phase barrier schedule.
-pub fn fused_merged_4dir_fan(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-    wavefront: bool,
-    pool: &ThreadPool,
-) -> Tensor {
-    let phase2 = if wavefront { Phase2::WaveDir } else { Phase2::Barrier };
-    fused_merged_4dir_forced(
-        x,
-        taps,
-        lam,
-        merge_logits,
-        kchunk,
-        ScanStrategy::DirFan,
-        phase2,
-        pool,
-    )
-}
-
-/// [`fused_merged_4dir`] over the process-wide shared pool.
-pub fn fused_merged_4dir_par(
-    x: &Tensor,
-    taps: [&Taps; 4],
-    lam: &Tensor,
-    merge_logits: &[f32; 4],
-    kchunk: usize,
-) -> Tensor {
-    fused_merged_4dir_pool(x, taps, lam, merge_logits, kchunk, ThreadPool::global())
-}
-
-/// The compact unit's scan stage, fused end to end: per-direction
-/// activations `xcs[k]` / `lamcs[k]` are already in canonical layout
-/// (they come out of the unit's 1x1 projections), taps are canonical as
-/// always, and the epilogue folds the merge *and* the `u ⊙ h` output
-/// modulation into the scatter — the unit never materializes a
-/// directional output, the merged tensor, or the modulation clone.
-/// Output is the spatial (N, Cp, H, W) modulated merge, bit-identical to
-/// the reference composition in `CompactGspnUnit::forward_ref` whenever
-/// the planner ([`plan::plan_scan`]) picks a bit-exact strategy —
-/// `PlanePar` or, in the mid-occupancy regime, `DirFan` (the
-/// per-direction fan reassociates nothing). Only a low-occupancy
-/// forward wide enough to segment (canonical widths ≥ 2 ·
-/// [`plan::MIN_SEG_COLS`] = 128) follows the `scan_l2r_split`
-/// segmented arithmetic instead.
-#[allow(clippy::too_many_arguments)]
-pub fn fused_merged_canonical(
-    xcs: [&Tensor; 4],
-    taps: [&Taps; 4],
-    lamcs: [&Tensor; 4],
-    merge_logits: &[f32; 4],
-    u: &[f32],
-    kchunk: usize,
-    out_shape: &[usize],
-    pool: &ThreadPool,
-) -> Tensor {
-    fused_merged_canonical_ws(
-        xcs,
-        taps,
-        lamcs,
-        merge_logits,
-        u,
-        kchunk,
-        out_shape,
-        pool,
-        BufferPool::global(),
-    )
-}
-
-/// [`fused_merged_canonical`] over an explicit workspace pool — what
-/// [`CompactGspnUnit::forward_ws`](super::compact::CompactGspnUnit::forward_ws)
-/// threads through so a serving coordinator's unit forwards draw from
-/// its pre-warmed per-bucket pool.
-#[allow(clippy::too_many_arguments)]
-pub fn fused_merged_canonical_ws(
-    xcs: [&Tensor; 4],
-    taps: [&Taps; 4],
-    lamcs: [&Tensor; 4],
-    merge_logits: &[f32; 4],
-    u: &[f32],
-    kchunk: usize,
-    out_shape: &[usize],
-    pool: &ThreadPool,
-    ws: &BufferPool,
-) -> Tensor {
-    let dirs: Vec<DirInput<'_>> = DIRECTIONS
-        .iter()
-        .enumerate()
-        .map(|(k, &d)| {
-            let (xc, lamc) = (xcs[k], lamcs[k]);
-            assert_eq!(xc.rank(), 4, "xc must be (N, C, Hc, Wc)");
-            assert_eq!(xc.shape, lamc.shape, "lamc shape must match xc");
-            assert_eq!(
-                (taps[k].n, taps[k].h, taps[k].w),
-                (xc.shape[0], xc.shape[2], xc.shape[3]),
-                "taps geometry mismatch"
-            );
-            assert!(
-                taps[k].cw == 1 || taps[k].cw == xc.shape[1],
-                "Cw must be 1 or C"
-            );
-            DirInput {
-                d,
-                taps: taps[k],
-                x: xc,
-                lam: lamc,
-                layout: Orientation::Canonical,
-                chunk: effective_chunk(taps[k].w, kchunk),
-            }
-        })
-        .collect();
-    assert_eq!(u.len(), out_shape[1], "gain length must be C");
-    let wts = merge_weights(merge_logits);
-    run_engine(
-        &dirs,
-        Some(&wts),
-        Some(u),
-        out_shape,
-        Some(pool),
-        ExecSpec::Auto,
-        ws,
-        None,
-        None,
-    )
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::scan::core::{scan_l2r, scan_l2r_pool};
-    use crate::scan::direction::{merged_4dir_ref, scan_dir};
-    use crate::util::proptest::{check, ensure};
-    use crate::util::Rng;
-
-    fn divisors(w: usize) -> Vec<usize> {
-        (1..=w).filter(|d| w % d == 0).collect()
-    }
-
-    fn mk_taps(rng: &mut Rng, n: usize, cw: usize, h: usize, w: usize) -> Taps {
-        Taps::normalize(&Tensor::randn(&[n, cw, 3, h, w], rng, 1.0))
-    }
-
-    /// The tentpole pinning property: the fused engine is exactly equal
-    /// (`==` on `data`, not allclose) to the serial reference across
-    /// random shapes, every kchunk divisor, shared and per-channel taps,
-    /// and all four directions — including H=1 and W=1 edge geometries.
-    #[test]
-    fn fused_scan_pinned_bit_exact_to_reference() {
-        check("fused == scan_dir reference", |g| {
-            let n = g.int_in(1, 2);
-            let c = g.int_in(1, 3);
-            let h = g.int_in(1, 7);
-            let w = g.int_in(1, 7);
-            let cw = *g.pick(&[1, c]);
-            let mut rng = Rng::new(g.rng.next_u64());
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            for d in DIRECTIONS {
-                let (hc, wc) = hw_src(h, w, d);
-                let taps = mk_taps(&mut rng, n, cw, hc, wc);
-                let mut kchunks = vec![0usize];
-                kchunks.extend(divisors(wc));
-                for k in kchunks {
-                    let reference = scan_dir(&x, &taps, &lam, d, k);
-                    let fused = fused_scan_dir(&x, &taps, &lam, d, k);
-                    ensure(
-                        reference.shape == fused.shape && reference.data == fused.data,
-                        format!("fused != ref: n{n} c{c} {h}x{w} cw{cw} {d:?} k{k}"),
-                    )?;
-                }
-            }
-            Ok(())
-        });
-    }
-
-    /// Slab-boundary coverage: widths around multiples of SLAB, so the
-    /// carry column crossing and the partial last slab are both hit,
-    /// including kchunk resets landing inside and on slab boundaries.
-    #[test]
-    fn fused_scan_exact_across_slab_boundaries() {
-        let mut rng = Rng::new(39);
-        for w in [SLAB - 1, SLAB, SLAB + 1, 2 * SLAB, 2 * SLAB + 3] {
-            let (n, c, h) = (1, 2, 5);
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let taps = mk_taps(&mut rng, n, 1, h, w);
-            let mut kchunks = vec![0usize];
-            kchunks.extend(divisors(w));
-            for k in kchunks {
-                let reference = scan_l2r(&x, &taps, &lam, k);
-                let fused = fused_scan_l2r(&x, &taps, &lam, k);
-                assert_eq!(reference.data, fused.data, "w={w} k={k}");
-            }
-        }
-    }
-
-    #[test]
-    fn fused_merged_pinned_bit_exact_to_reference() {
-        check("fused merged == merged_4dir_ref", |g| {
-            let n = g.int_in(1, 2);
-            let c = g.int_in(1, 3);
-            let h = g.int_in(1, 6);
-            let w = g.int_in(1, 6);
-            let cw = *g.pick(&[1, c]);
-            let mut rng = Rng::new(g.rng.next_u64());
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let t_lr = mk_taps(&mut rng, n, cw, h, w);
-            let t_rl = mk_taps(&mut rng, n, cw, h, w);
-            let t_tb = mk_taps(&mut rng, n, cw, w, h);
-            let t_bt = mk_taps(&mut rng, n, cw, w, h);
-            let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
-            let logits = [
-                g.f32_in(-2.0, 2.0),
-                g.f32_in(-2.0, 2.0),
-                g.f32_in(-2.0, 2.0),
-                g.f32_in(-2.0, 2.0),
-            ];
-            // kchunk must divide the canonical width of every direction.
-            let mut kchunks = vec![0usize];
-            kchunks.extend(divisors(w).into_iter().filter(|k| h % k == 0));
-            for k in kchunks {
-                let reference = merged_4dir_ref(&x, taps, &lam, &logits, k);
-                let fused = fused_merged_4dir(&x, taps, &lam, &logits, k);
-                ensure(
-                    reference.data == fused.data,
-                    format!("fused merged != ref: n{n} c{c} {h}x{w} cw{cw} k{k}"),
-                )?;
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn fused_pool_bit_identical_to_fused_serial_and_reference() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(40);
-        for (n, c, h, w, cw) in
-            [(2, 3, 8, 12, 3), (1, 1, 5, 7, 1), (3, 4, 16, 16, 1), (1, 2, 1, 6, 1), (1, 2, 6, 1, 2)]
-        {
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let taps = mk_taps(&mut rng, n, cw, h, w);
-            for kchunk in [0, w] {
-                let reference = scan_l2r(&x, &taps, &lam, kchunk);
-                let serial = fused_scan_l2r(&x, &taps, &lam, kchunk);
-                let pooled = fused_scan_l2r_pool(&x, &taps, &lam, kchunk, &pool);
-                assert_eq!(reference.data, serial.data, "serial n{n} c{c} {h}x{w} k{kchunk}");
-                assert_eq!(reference.data, pooled.data, "pooled n{n} c{c} {h}x{w} k{kchunk}");
-            }
-        }
-    }
-
-    #[test]
-    fn fused_merged_pool_bit_identical_to_reference() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(41);
-        let (n, c, h, w) = (2, 3, 6, 7);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let taps = [&t_lr, &t_lr, &t_tb, &t_tb];
-        let logits = [0.4f32, -0.2, 1.1, 0.0];
-        let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
-        let pooled = fused_merged_4dir_pool(&x, taps, &lam, &logits, 0, &pool);
-        let global = fused_merged_4dir_par(&x, taps, &lam, &logits, 0);
-        assert_eq!(reference.data, pooled.data);
-        assert_eq!(reference.data, global.data);
-    }
-
-    #[test]
-    fn fused_canonical_merge_modulate_matches_reference_composition() {
-        // The compact-unit path: canonical per-direction activations,
-        // fused merge + u ⊙ h modulation vs the explicit reference
-        // composition (scan_l2r_pool + from_canonical + merge pass +
-        // output_modulation).
-        use crate::scan::direction::{from_canonical, to_canonical};
-        let pool = crate::util::ThreadPool::new(2);
-        let mut rng = Rng::new(42);
-        let (n, c, h, w) = (2, 3, 5, 6);
-        let xp = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let logits = [0.3f32, -0.7, 0.2, 1.0];
-        let u: Vec<f32> = (0..c).map(|i| 0.5 + i as f32).collect();
-        let mut xcs = Vec::new();
-        let mut taps = Vec::new();
-        let mut lamcs = Vec::new();
-        for d in DIRECTIONS {
-            let xc = to_canonical(&xp, d);
-            let (hc, wc) = (xc.shape[2], xc.shape[3]);
-            taps.push(mk_taps(&mut rng, n, 1, hc, wc));
-            lamcs.push(Tensor::randn(&xc.shape, &mut rng, 1.0));
-            xcs.push(xc);
-        }
-        let fused = fused_merged_canonical(
-            [&xcs[0], &xcs[1], &xcs[2], &xcs[3]],
-            [&taps[0], &taps[1], &taps[2], &taps[3]],
-            [&lamcs[0], &lamcs[1], &lamcs[2], &lamcs[3]],
-            &logits,
-            &u,
-            0,
-            &xp.shape,
-            &pool,
-        );
-        let wts = merge_weights(&logits);
-        let mut merged = Tensor::zeros(&xp.shape);
-        for (k, d) in DIRECTIONS.iter().enumerate() {
-            let hcan = scan_l2r_pool(&xcs[k], &taps[k], &lamcs[k], 0, &pool);
-            let y = from_canonical(&hcan, *d);
-            for (o, v) in merged.data.iter_mut().zip(&y.data) {
-                *o += wts[k] * v;
-            }
-        }
-        let reference = crate::scan::core::output_modulation_owned(merged, &u);
-        assert_eq!(reference.data, fused.data);
-    }
-
-    #[test]
-    fn fused_empty_and_degenerate_geometries() {
-        // N·C = 0 and H = 0 return zeros without panicking, as the
-        // reference does.
-        let x = Tensor::zeros(&[0, 3, 4, 5]);
-        let lam = Tensor::zeros(&[0, 3, 4, 5]);
-        let taps = Taps::normalize(&Tensor::zeros(&[0, 1, 3, 4, 5]));
-        let out = fused_scan_l2r(&x, &taps, &lam, 0);
-        assert_eq!(out.shape, vec![0, 3, 4, 5]);
-
-        let x = Tensor::zeros(&[1, 2, 0, 5]);
-        let lam = Tensor::zeros(&[1, 2, 0, 5]);
-        let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
-        let out = fused_scan_l2r(&x, &taps, &lam, 0);
-        assert!(out.data.is_empty());
-    }
-
-    #[test]
-    fn block_count_scales_with_pool_not_planes() {
-        assert_eq!(plane_blocks(1000, 4), 8);
-        assert_eq!(plane_blocks(3, 4), 3);
-        assert_eq!(plane_blocks(0, 4), 0);
-        assert_eq!(plane_blocks(16, 1), 2);
-    }
-
-    // -----------------------------------------------------------------
-    // Segment-parallel decomposition
-    // -----------------------------------------------------------------
-
-    use crate::scan::split::scan_l2r_split;
-
-    /// The tentpole pinning property for the segmented path: exact `==`
-    /// with the reference decomposition `scan_l2r_split` across segment
-    /// counts and boundaries — including W = 1, more segments than
-    /// columns, and a 1-thread pool (helping-wait execution).
-    #[test]
-    fn segmented_fused_exact_eq_scan_l2r_split() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(50);
-        for (n, c, h, w, cw) in [
-            (1, 1, 5, 12, 1),
-            (1, 2, 3, 64, 2),
-            (2, 3, 8, 40, 1),
-            (1, 1, 1, 7, 1),
-            (1, 2, 9, 1, 1),
-            (1, 1, 4, 2 * SLAB + 3, 1),
-        ] {
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let taps = mk_taps(&mut rng, n, cw, h, w);
-            for segments in [1usize, 2, 3, 5, 8, w, w + 9, 500] {
-                let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
-                let seg1 = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool1);
-                let seg3 = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
-                assert_eq!(
-                    reference.data, seg1.data,
-                    "1-thread n{n} c{c} {h}x{w} cw{cw} S{segments}"
-                );
-                assert_eq!(
-                    reference.data, seg3.data,
-                    "3-thread n{n} c{c} {h}x{w} cw{cw} S{segments}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn segmented_fused_split_identity_property() {
-        let pool = crate::util::ThreadPool::new(2);
-        check("fused segmented == scan_l2r_split", |g| {
-            let n = g.int_in(1, 2);
-            let c = g.int_in(1, 3);
-            let h = g.int_in(1, 9);
-            let w = g.int_in(1, 40);
-            let segments = g.int_in(1, 7);
-            let cw = *g.pick(&[1, c]);
-            let mut rng = Rng::new(g.rng.next_u64());
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let taps = mk_taps(&mut rng, n, cw, h, w);
-            let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
-            let seg = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool);
-            ensure(
-                reference.data == seg.data,
-                format!("segmented != split: n{n} c{c} {h}x{w} cw{cw} S{segments}"),
-            )
-        });
-    }
-
-    /// Segment boundaries landing on chunk resets carry nothing across,
-    /// so the segmented path collapses to the exact plane-path bits.
-    #[test]
-    fn segmented_chunk_aligned_is_exact_vs_reference() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(51);
-        let (n, c, h, w) = (1, 2, 6, 64);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        // S = 4 -> seg_len = 16; kchunk = 8 divides 16, so every segment
-        // starts on a reset.
-        let reference = scan_l2r(&x, &taps, &lam, 8);
-        let seg = fused_scan_l2r_seg(&x, &taps, &lam, 8, 4, &pool);
-        assert_eq!(reference.data, seg.data);
-    }
-
-    /// Unaligned chunk resets inside segments stay numerically
-    /// equivalent (the carry dies at the reset; only pre-reset columns
-    /// reassociate).
-    #[test]
-    fn segmented_chunk_unaligned_is_close() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(52);
-        let (n, c, h, w) = (1, 1, 7, 96);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        let reference = scan_l2r(&x, &taps, &lam, 32);
-        // S = 5 -> seg_len = 20: boundaries at 20/40/60/80 never align
-        // with the resets at 32/64.
-        let seg = fused_scan_l2r_seg(&x, &taps, &lam, 32, 5, &pool);
-        assert!(
-            reference.allclose(&seg, 1e-4, 1e-4),
-            "max diff {}",
-            reference.max_abs_diff(&seg)
-        );
-    }
-
-    /// The merged 4-direction segmented pass: tolerance-pinned against
-    /// the serial reference composition, and bit-deterministic across
-    /// pool widths (scheduling never changes segmented arithmetic).
-    #[test]
-    fn segmented_merged_close_to_reference_and_deterministic() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(53);
-        let (n, c, h, w) = (1, 2, 24, 40);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_rl = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let t_bt = mk_taps(&mut rng, n, 1, w, h);
-        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
-        let logits = [0.4f32, -0.2, 1.1, 0.0];
-        let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
-        let a = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, 4, &pool1);
-        let b = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, 4, &pool3);
-        assert_eq!(a.data, b.data, "pool width changed segmented bits");
-        assert!(
-            reference.allclose(&a, 1e-4, 1e-4),
-            "max diff {}",
-            reference.max_abs_diff(&a)
-        );
-    }
-
-    /// Whenever the planner picks plane-parallel, the pooled entry
-    /// points are exactly the PR 2 engine — bit-identical to the serial
-    /// reference. Any geometry narrower than 2 * plan::MIN_SEG_COLS
-    /// canonical columns (everything the unit/e2e suites pin) can never
-    /// be segmented regardless of host pool width.
-    #[test]
-    fn auto_plane_regime_stays_bit_identical() {
-        let pool = crate::util::ThreadPool::new(7);
-        let mut rng = Rng::new(54);
-        let (n, c, h, w) = (1, 2, 32, 64);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        assert_eq!(plan::auto_segments(n * c, w, pool.threads()), None);
-        let reference = scan_l2r(&x, &taps, &lam, 0);
-        let pooled = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
-        assert_eq!(reference.data, pooled.data);
-    }
-
-    /// When the planner does segment, the pooled entry point produces
-    /// exactly the scan_l2r_split bits for the count it chose.
-    #[test]
-    fn auto_low_occupancy_matches_split_reference() {
-        let pool = crate::util::ThreadPool::new(4);
-        let mut rng = Rng::new(55);
-        let (n, c, h, w) = (1, 1, 8, 256);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        let s = plan::auto_segments(n * c, w, pool.threads())
-            .expect("low occupancy must segment");
-        assert_eq!(s, 4);
-        let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
-        let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
-        assert_eq!(reference.data, viapool.data);
-    }
-
-    /// The single-direction serving band the fused-correction drain
-    /// opened (128 <= wc < 256, previously fenced onto the plane path):
-    /// the planner now segments it, and the pooled entry point produces
-    /// exactly the scan_l2r_split bits at the planned count.
-    #[test]
-    fn auto_midwidth_band_segments_and_matches_split() {
-        let pool = crate::util::ThreadPool::new(4);
-        let mut rng = Rng::new(57);
-        let (n, c, h, w) = (1, 1, 8, 192);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        let s = plan::auto_segments(n * c, w, pool.threads())
-            .expect("the 128..256 band must segment now");
-        assert_eq!(s, 3);
-        let viapool = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
-        let reference = scan_l2r_split(&x, &taps, &lam, s, 1);
-        assert_eq!(reference.data, viapool.data);
-    }
-
-    /// Orientation folding in the segmented path, pinned exactly: the
-    /// segmented directional scan equals `scan_l2r_split` run on the
-    /// canonically reoriented tensors (data movement changes no bits).
-    #[test]
-    fn segmented_all_directions_match_canonical_split() {
-        use crate::scan::direction::{from_canonical, to_canonical};
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(56);
-        let (n, c, h, w) = (1, 2, 6, 9);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        for d in DIRECTIONS {
-            let (hc, wc) = hw_src(h, w, d);
-            let taps = mk_taps(&mut rng, n, 1, hc, wc);
-            let xc = to_canonical(&x, d);
-            let lamc = to_canonical(&lam, d);
-            for segments in [2usize, 3] {
-                let want =
-                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
-                let got = fused_scan_dir_seg(&x, &taps, &lam, d, 0, segments, &pool);
-                assert_eq!(want.data, got.data, "{d:?} S{segments}");
-            }
-        }
-    }
-
-    #[test]
-    fn segmented_empty_and_degenerate_geometries() {
-        let pool = crate::util::ThreadPool::new(2);
-        let x = Tensor::zeros(&[0, 3, 4, 5]);
-        let lam = Tensor::zeros(&[0, 3, 4, 5]);
-        let taps = Taps::normalize(&Tensor::zeros(&[0, 1, 3, 4, 5]));
-        let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
-        assert_eq!(out.shape, vec![0, 3, 4, 5]);
-
-        let x = Tensor::zeros(&[1, 2, 0, 5]);
-        let lam = Tensor::zeros(&[1, 2, 0, 5]);
-        let taps = Taps::normalize(&Tensor::zeros(&[1, 1, 3, 0, 5]));
-        let out = fused_scan_l2r_seg(&x, &taps, &lam, 0, 3, &pool);
-        assert!(out.data.is_empty());
-    }
-
-    // -----------------------------------------------------------------
-    // Wavefront scheduling + the direction fan
-    // -----------------------------------------------------------------
-
-    /// The tentpole pinning property for wavefront scheduling and the
-    /// fused-correction drain: neither the dependency-graph schedule nor
-    /// fusing the correction into the drain changes what is computed —
-    /// exact `==` across the full schedule matrix (barrier,
-    /// per-direction wavefront, PR 4 two-pass single-continuation) with
-    /// the `scan_l2r_split` reference, across segment counts, chunk
-    /// resets, pool widths (including the 1-thread all-helping case),
-    /// and slab-boundary widths.
-    #[test]
-    fn wavefront_exact_eq_barrier_and_split() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(60);
-        for (n, c, h, w, cw) in [
-            (1, 1, 5, 12, 1),
-            (2, 3, 8, 40, 1),
-            (1, 2, 9, 1, 1),
-            (1, 1, 4, 2 * SLAB + 3, 1),
-            (2, 2, 6, 96, 2),
-        ] {
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let taps = mk_taps(&mut rng, n, cw, h, w);
-            for segments in [1usize, 2, 3, 5, w + 9] {
-                let reference = scan_l2r_split(&x, &taps, &lam, segments, 1);
-                let barrier = fused_scan_l2r_seg(&x, &taps, &lam, 0, segments, &pool3);
-                let wave1 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool1);
-                let wave3 = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, segments, &pool3);
-                let twopass =
-                    fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, segments, &pool3);
-                assert_eq!(
-                    reference.data, barrier.data,
-                    "barrier n{n} c{c} {h}x{w} S{segments}"
-                );
-                assert_eq!(
-                    reference.data, wave1.data,
-                    "wave 1-thread n{n} c{c} {h}x{w} S{segments}"
-                );
-                assert_eq!(
-                    reference.data, wave3.data,
-                    "wave 3-thread n{n} c{c} {h}x{w} S{segments}"
-                );
-                assert_eq!(
-                    reference.data, twopass.data,
-                    "PR4 two-pass n{n} c{c} {h}x{w} S{segments}"
-                );
-            }
-        }
-    }
-
-    /// Wavefront with chunk resets landing inside segments: the carry
-    /// dies at resets exactly like the barrier path.
-    #[test]
-    fn wavefront_chunked_matches_barrier_bits() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(61);
-        let (n, c, h, w) = (1, 2, 7, 96);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        for (kchunk, segments) in [(32usize, 5usize), (8, 4), (96, 3)] {
-            let barrier = fused_scan_l2r_seg(&x, &taps, &lam, kchunk, segments, &pool);
-            let wave = fused_scan_l2r_seg_wave(&x, &taps, &lam, kchunk, segments, &pool);
-            let twopass =
-                fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, kchunk, segments, &pool);
-            assert_eq!(barrier.data, wave.data, "k{kchunk} S{segments}");
-            assert_eq!(barrier.data, twopass.data, "two-pass k{kchunk} S{segments}");
-        }
-    }
-
-    /// The merged 4-direction pass under wavefront scheduling: exact
-    /// `==` with the barrier twin for every direction/orientation mix.
-    #[test]
-    fn wavefront_merged_exact_eq_barrier() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(62);
-        let (n, c, h, w) = (1, 2, 24, 40);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_rl = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let t_bt = mk_taps(&mut rng, n, 1, w, h);
-        let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
-        let logits = [0.4f32, -0.2, 1.1, 0.0];
-        for segments in [1usize, 4] {
-            let barrier = fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
-            let wave1 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool1);
-            let wave3 = fused_merged_4dir_seg_wave(&x, taps, &lam, &logits, 0, segments, &pool3);
-            let twopass =
-                fused_merged_4dir_seg_wave_twopass(&x, taps, &lam, &logits, 0, segments, &pool3);
-            assert_eq!(barrier.data, wave1.data, "S{segments}");
-            assert_eq!(barrier.data, wave3.data, "S{segments}");
-            assert_eq!(barrier.data, twopass.data, "two-pass S{segments}");
-        }
-    }
-
-    /// Directional scans under wavefront scheduling match the canonical
-    /// split reference exactly, per direction (orientation folding does
-    /// not interact with the schedule).
-    #[test]
-    fn wavefront_all_directions_match_canonical_split() {
-        use crate::scan::direction::{from_canonical, to_canonical};
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(63);
-        let (n, c, h, w) = (1, 2, 6, 9);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        for d in DIRECTIONS {
-            let (hc, wc) = hw_src(h, w, d);
-            let taps = mk_taps(&mut rng, n, 1, hc, wc);
-            let xc = to_canonical(&x, d);
-            let lamc = to_canonical(&lam, d);
-            for segments in [2usize, 3] {
-                let want =
-                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
-                let got = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
-                let twopass =
-                    fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, 0, segments, &pool);
-                assert_eq!(want.data, got.data, "{d:?} S{segments}");
-                assert_eq!(want.data, twopass.data, "two-pass {d:?} S{segments}");
-            }
-        }
-    }
-
-    /// The direction fan is bit-identical to the fused merge (and hence
-    /// the serial reference): a full-width zero-carry scan per (plane,
-    /// direction) reassociates nothing, and the drain replays the fixed
-    /// k = 0..4 merge order. Both schedules, several pool widths, tiny
-    /// and slab-crossing widths, H=1/W=1 edges.
-    #[test]
-    fn dirfan_exact_eq_fused_merge_reference() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(64);
-        for (n, c, h, w) in [(2, 3, 6, 7), (1, 1, 1, 6), (1, 2, 6, 1), (1, 2, 24, 2 * SLAB + 3)]
-        {
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let t_lr = mk_taps(&mut rng, n, 1, h, w);
-            let t_rl = mk_taps(&mut rng, n, 1, h, w);
-            let t_tb = mk_taps(&mut rng, n, 1, w, h);
-            let t_bt = mk_taps(&mut rng, n, 1, w, h);
-            let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
-            let logits = [0.3f32, -0.7, 0.2, 1.0];
-            let reference = merged_4dir_ref(&x, taps, &lam, &logits, 0);
-            for pool in [&pool1, &pool3] {
-                for wavefront in [false, true] {
-                    let fan =
-                        fused_merged_4dir_fan(&x, taps, &lam, &logits, 0, wavefront, pool);
-                    assert_eq!(
-                        reference.data, fan.data,
-                        "n{n} c{c} {h}x{w} wf{wavefront}"
-                    );
-                }
-            }
-        }
-    }
-
-    /// DirFan with chunk resets: the fan scans full width with resets
-    /// folded into phase 1, so chunked output equals the chunked
-    /// reference exactly too.
-    #[test]
-    fn dirfan_chunked_exact_eq_reference() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(65);
-        let (n, c, h, w) = (1, 2, 8, 8);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let taps = [&t_lr, &t_lr, &t_tb, &t_tb];
-        let logits = [0.1f32, 0.5, -0.3, 0.0];
-        for kchunk in [0usize, 4, 8] {
-            let reference = merged_4dir_ref(&x, taps, &lam, &logits, kchunk);
-            let fan = fused_merged_4dir_fan(&x, taps, &lam, &logits, kchunk, true, &pool);
-            assert_eq!(reference.data, fan.data, "k{kchunk}");
-        }
-    }
-
-    /// A planner-forced plan carried end to end through the forced hook
-    /// equals running the plan's strategy directly (the plan-carrying
-    /// path the serving/bench layers use).
-    #[test]
-    fn planned_execution_matches_direct_strategy_calls() {
-        use crate::scan::plan::{plan_scan_with, PlanOverride};
-        let pool = crate::util::ThreadPool::new(4);
-        let mut rng = Rng::new(66);
-        let (n, c, h, w) = (1, 1, 8, 256);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        let geom = ScanGeometry::single_dir(n * c, h, w);
-        let p = plan_scan_with(&geom, 0, pool.threads(), PlanOverride::Auto);
-        let ScanStrategy::Chained { s } = p.strategy else {
-            panic!("expected a chained plan, got {:?}", p.strategy);
-        };
-        assert!(!p.wavefront, "the chained engine has no phases to wavefront");
-        let via_auto = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
-        let direct = fused_scan_l2r_chained(&x, &taps, &lam, 0, s, &pool);
-        assert_eq!(via_auto.data, direct.data);
-        // The chained engine replaced the two-phase Segmented plan at
-        // the same count bit-for-bit.
-        let twophase = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, s, &pool);
-        assert_eq!(via_auto.data, twophase.data);
-    }
-
-    // -----------------------------------------------------------------
-    // The fused-correction drain
-    // -----------------------------------------------------------------
-
-    /// The fused-correction drain property: exact `==` against the
-    /// `scan_l2r_split` reference across random shapes (including H=1,
-    /// W=1, and slab-crossing widths), all 4 directions, segment
-    /// counts, and the full schedule matrix — per-direction wavefront,
-    /// barrier, and the PR 4 two-pass single-continuation. Plus, under
-    /// random kchunk divisors (split has no chunk form), all three
-    /// schedules stay bit-identical to each other.
-    #[test]
-    fn fused_correction_drain_schedule_matrix_property() {
-        use crate::scan::direction::{from_canonical, to_canonical};
-        let pool = crate::util::ThreadPool::new(3);
-        check("fused drain == split across schedules", |g| {
-            let n = g.int_in(1, 2);
-            let c = g.int_in(1, 2);
-            let h = g.int_in(1, 9);
-            let w = g.int_in(1, 2 * SLAB + 8);
-            let segments = g.int_in(1, 5);
-            let mut rng = Rng::new(g.rng.next_u64());
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            for d in DIRECTIONS {
-                let (hc, wc) = hw_src(h, w, d);
-                let taps = mk_taps(&mut rng, n, 1, hc, wc);
-                let xc = to_canonical(&x, d);
-                let lamc = to_canonical(&lam, d);
-                let want =
-                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
-                let barrier = fused_scan_dir_seg(&x, &taps, &lam, d, 0, segments, &pool);
-                let wave = fused_scan_dir_seg_wave(&x, &taps, &lam, d, 0, segments, &pool);
-                let twopass =
-                    fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, 0, segments, &pool);
-                let tag = format!("n{n} c{c} {h}x{w} {d:?} S{segments}");
-                ensure(want.data == barrier.data, format!("barrier != split: {tag}"))?;
-                ensure(want.data == wave.data, format!("wave != split: {tag}"))?;
-                ensure(want.data == twopass.data, format!("two-pass != split: {tag}"))?;
-                // Chunk resets inside segments: the three schedules must
-                // agree bit-for-bit (the chunked split reference is the
-                // barrier engine itself).
-                let kchunk = *g.pick(&divisors(wc));
-                let cb = fused_scan_dir_seg(&x, &taps, &lam, d, kchunk, segments, &pool);
-                let cw_ = fused_scan_dir_seg_wave(&x, &taps, &lam, d, kchunk, segments, &pool);
-                let ct =
-                    fused_scan_dir_seg_wave_twopass(&x, &taps, &lam, d, kchunk, segments, &pool);
-                ensure(cb.data == cw_.data, format!("chunked wave != barrier: {tag} k{kchunk}"))?;
-                ensure(cb.data == ct.data, format!("chunked two-pass != barrier: {tag} k{kchunk}"))?;
-            }
-            Ok(())
-        });
-    }
-
-    // -----------------------------------------------------------------
-    // The single-pass chained engine
-    // -----------------------------------------------------------------
-
-    /// The tentpole exactness property: the single-pass chained engine
-    /// (decoupled look-back, no phase barrier) is exact `==` against
-    /// `scan_l2r_split` across random shapes (including H=1, W=1, and
-    /// slab-crossing widths), all 4 directions, chunk counts, shared
-    /// and per-channel taps, and both the serial path (1-thread pool)
-    /// and concurrent chains with work-assist (3-thread pool). Under
-    /// random kchunk divisors (split has no chunk form) chained must
-    /// equal the two-phase barrier engine bit-for-bit — the claim that
-    /// retiring the barrier changed the schedule and nothing else.
-    #[test]
-    fn chained_engine_exact_eq_split_property() {
-        use crate::scan::direction::{from_canonical, to_canonical};
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        check("chained == split across shapes", |g| {
-            let n = g.int_in(1, 2);
-            let c = g.int_in(1, 2);
-            let h = g.int_in(1, 9);
-            let w = g.int_in(1, 2 * SLAB + 8);
-            let segments = g.int_in(1, 5);
-            let mut rng = Rng::new(g.rng.next_u64());
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            for d in DIRECTIONS {
-                let (hc, wc) = hw_src(h, w, d);
-                let cw = *g.pick(&[1, c]);
-                let taps = mk_taps(&mut rng, n, cw, hc, wc);
-                let xc = to_canonical(&x, d);
-                let lamc = to_canonical(&lam, d);
-                let want =
-                    from_canonical(&scan_l2r_split(&xc, &taps, &lamc, segments, 1), d);
-                let tag = format!("n{n} c{c} cw{cw} {h}x{w} {d:?} S{segments}");
-                for (pname, pool) in [("pool1", &pool1), ("pool3", &pool3)] {
-                    let got = fused_scan_dir_chained(&x, &taps, &lam, d, 0, segments, pool);
-                    ensure(want.data == got.data, format!("chained != split: {tag} {pname}"))?;
-                }
-                // Chunk resets inside chunks: the chunked split
-                // reference is the two-phase barrier engine itself.
-                let kchunk = *g.pick(&divisors(wc));
-                let barrier = fused_scan_dir_seg(&x, &taps, &lam, d, kchunk, segments, &pool3);
-                let chained =
-                    fused_scan_dir_chained(&x, &taps, &lam, d, kchunk, segments, &pool3);
-                ensure(
-                    barrier.data == chained.data,
-                    format!("chunked chained != barrier: {tag} k{kchunk}"),
-                )?;
-            }
-            Ok(())
-        });
-    }
-
-    /// The merged 4-direction pass under the chained engine: the
-    /// per-plane drain gates preserve the k = 0..4 merge order, so
-    /// chained output is exact `==` the two-phase barrier merged engine
-    /// at every chunk count (and, at S = 1, the serial merged
-    /// reference) — on the degenerate H=1 / W=1 geometries and a
-    /// slab-crossing width too.
-    #[test]
-    fn chained_merged_4dir_exact_eq_segmented() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let pool3 = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(74);
-        for (n, c, h, w) in [(2, 3, 6, 7), (1, 1, 1, 6), (1, 2, 6, 1), (1, 2, 24, 2 * SLAB + 3)]
-        {
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let t_lr = mk_taps(&mut rng, n, 1, h, w);
-            let t_rl = mk_taps(&mut rng, n, 1, h, w);
-            let t_tb = mk_taps(&mut rng, n, 1, w, h);
-            let t_bt = mk_taps(&mut rng, n, 1, w, h);
-            let taps = [&t_lr, &t_rl, &t_tb, &t_bt];
-            let logits = [0.3f32, -0.7, 0.2, 1.0];
-            let serial = merged_4dir_ref(&x, taps, &lam, &logits, 0);
-            for segments in [1usize, 2, 3] {
-                let reference =
-                    fused_merged_4dir_seg(&x, taps, &lam, &logits, 0, segments, &pool3);
-                for (pname, pool) in [("pool1", &pool1), ("pool3", &pool3)] {
-                    let got =
-                        fused_merged_4dir_chained(&x, taps, &lam, &logits, 0, segments, pool);
-                    assert_eq!(
-                        reference.data, got.data,
-                        "n{n} c{c} {h}x{w} S{segments} {pname}"
-                    );
-                }
-                if segments == 1 {
-                    assert_eq!(serial.data, reference.data, "n{n} c{c} {h}x{w} S1 serial");
-                }
-            }
-        }
-    }
-
-    /// Satellite regression: a panicking phase-1 job in the wavefront
-    /// path must surface as the original panic payload (collected
-    /// MapError-style through `run_graph`), not as a `PoisonError` or a
-    /// secondary index panic from a dependent drain reading a missing
-    /// piece — and the engine/pool must stay healthy afterwards.
-    #[test]
-    fn wavefront_phase1_panic_propagates_original_payload() {
-        use std::panic::{catch_unwind, AssertUnwindSafe};
-        let pool = crate::util::ThreadPool::new(2);
-        let mut rng = Rng::new(70);
-        let (n, c, h, w) = (1, 2, 5, 160);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        // w=160, S=2 -> bounds (0,80),(80,160). Inject into the second
-        // piece of plane 0 — a (plane, dir, lo, hi) tuple no other
-        // test's geometry produces (every other suite's segment ends
-        // are < 80 or land elsewhere), so concurrently running tests
-        // never trip the hook.
-        for schedule in ["wave-dir", "two-pass"] {
-            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some((0, 0, 80, 160));
-            let caught = catch_unwind(AssertUnwindSafe(|| match schedule {
-                "wave-dir" => fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool),
-                _ => fused_scan_l2r_seg_wave_twopass(&x, &taps, &lam, 0, 2, &pool),
-            }));
-            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
-            let payload = match caught {
-                Ok(_) => panic!("{schedule}: wavefront must rethrow the phase-1 panic"),
-                Err(p) => p,
-            };
-            let msg = crate::util::panic_message(&*payload);
-            assert!(
-                msg.contains("injected phase-1 panic"),
-                "{schedule}: expected the injected payload, got {msg:?}"
-            );
-        }
-        // Poisoned hand-off slots are recovered; the next run is clean
-        // and exact.
-        let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
-        let after = fused_scan_l2r_seg_wave(&x, &taps, &lam, 0, 2, &pool);
-        assert_eq!(reference.data, after.data);
-    }
-
-    // -----------------------------------------------------------------
-    // Workspace pooling
-    // -----------------------------------------------------------------
-
-    /// Pooled scratch changes no bits: every strategy/schedule produces
-    /// the same output from a cold workspace (all misses), a warm one
-    /// (reused, dirty buffers), and equals the `scan_l2r_split` /
-    /// serial reference. This is the pooled-vs-fresh half of the
-    /// allocation-free acceptance invariant.
-    #[test]
-    fn pooled_output_bit_identical_to_fresh_workspace_across_strategies() {
-        let pool = crate::util::ThreadPool::new(3);
-        let mut rng = Rng::new(71);
-        let (n, c, h, w) = (1, 2, 7, 96);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        let cases = [
-            (ScanStrategy::PlanePar, Phase2::Barrier),
-            (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
-            (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
-            (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
-            (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
-        ];
-        for (strategy, phase2) in cases {
-            let reference = match strategy {
-                ScanStrategy::Segmented { s } | ScanStrategy::Chained { s } => {
-                    scan_l2r_split(&x, &taps, &lam, s, 1)
-                }
-                _ => scan_l2r(&x, &taps, &lam, 0),
-            };
-            let warm_ws = BufferPool::new(usize::MAX);
-            for round in 0..3 {
-                let cold_ws = BufferPool::new(usize::MAX);
-                let cold = fused_scan_dir_forced_ws(
-                    &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &cold_ws,
-                    None,
-                );
-                let warm = fused_scan_dir_forced_ws(
-                    &x, &taps, &lam, Direction::L2R, 0, strategy, phase2, &pool, &warm_ws,
-                    None,
-                );
-                assert_eq!(
-                    reference.data, cold.data,
-                    "cold != ref: {strategy:?} {phase2:?} round {round}"
-                );
-                assert_eq!(
-                    reference.data, warm.data,
-                    "warm != ref: {strategy:?} {phase2:?} round {round}"
-                );
-            }
-            // Everything leased came back.
-            assert_eq!(warm_ws.stats().bytes_leased, 0, "{strategy:?} {phase2:?}");
-        }
-        // The merged direction fan (the strategy the single-direction
-        // matrix above cannot reach).
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_rl = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let t_bt = mk_taps(&mut rng, n, 1, w, h);
-        let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
-        let logits = [0.4f32, -0.2, 1.1, 0.0];
-        let reference = merged_4dir_ref(&x, mtaps, &lam, &logits, 0);
-        let warm_ws = BufferPool::new(usize::MAX);
-        for phase2 in [Phase2::Barrier, Phase2::WaveDir] {
-            for round in 0..2 {
-                let fan = fused_merged_4dir_forced_ws(
-                    &x,
-                    mtaps,
-                    &lam,
-                    &logits,
-                    0,
-                    ScanStrategy::DirFan,
-                    phase2,
-                    &pool,
-                    &warm_ws,
-                    None,
-                );
-                assert_eq!(reference.data, fan.data, "dirfan {phase2:?} round {round}");
-            }
-        }
-        assert_eq!(warm_ws.stats().bytes_leased, 0);
-    }
-
-    /// The reply-recycling entry: an output buffer taken from the
-    /// workspace produces bit-identical results to the fresh-allocating
-    /// entry, and donating the result's storage back makes the next
-    /// take a pool hit — the coordinator's whole-request
-    /// allocation-free loop, exercised at the engine level.
-    #[test]
-    fn recycled_output_buffer_bit_identical_and_donated() {
-        // 1 thread: the serial lease sequence makes the zero-miss
-        // assertion deterministic (the 2+-thread schedules are covered
-        // by the bit-exactness suites).
-        let pool = crate::util::ThreadPool::new(1);
-        let mut rng = Rng::new(77);
-        let (n, c, h, w) = (1, 3, 7, 40);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        let want = fused_scan_l2r_pool(&x, &taps, &lam, 0, &pool);
-        let ws = BufferPool::new(usize::MAX);
-        let out = fused_scan_l2r_pool_ws_into(
-            &x,
-            &taps,
-            &lam,
-            0,
-            &pool,
-            &ws,
-            ws.take_zeroed(x.data.len()),
-        );
-        assert_eq!(out.data, want.data);
-        assert_eq!(ws.stats().bytes_leased, 0);
-        // Donate the reply storage back; the rerun's take must hit.
-        ws.donate(out.data);
-        let before = ws.stats();
-        let out = fused_scan_l2r_pool_ws_into(
-            &x,
-            &taps,
-            &lam,
-            0,
-            &pool,
-            &ws,
-            ws.take_zeroed(x.data.len()),
-        );
-        let after = ws.stats();
-        assert_eq!(out.data, want.data);
-        assert!(after.hits > before.hits, "recycled take must be served from the pool");
-        assert_eq!(
-            after.misses, before.misses,
-            "a donated reply buffer must make the next take allocation-free"
-        );
-    }
-
-    /// The allocation-free invariant at the engine level: on the
-    /// deterministic (serial-execution) paths, repeating an identical
-    /// call against a warm workspace records ZERO pool misses — the
-    /// second run's every acquire is served from buffers the first run
-    /// returned. A 1-thread pool takes the serial branches of every
-    /// barrier strategy, so the lease sequence is reproducible.
-    #[test]
-    fn warm_workspace_rerun_records_zero_misses() {
-        let pool1 = crate::util::ThreadPool::new(1);
-        let mut rng = Rng::new(72);
-        let (n, c, h, w) = (1, 2, 6, 48);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        for strategy in [
-            ScanStrategy::PlanePar,
-            ScanStrategy::Segmented { s: 3 },
-            ScanStrategy::Chained { s: 3 },
-        ] {
-            let ws = BufferPool::new(usize::MAX);
-            let first = fused_scan_dir_forced_ws(
-                &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
-                None,
-            );
-            let s1 = ws.stats();
-            assert!(s1.misses > 0, "{strategy:?}: cold run must allocate");
-            assert_eq!(s1.bytes_leased, 0, "{strategy:?}: leases must all return");
-            let second = fused_scan_dir_forced_ws(
-                &x, &taps, &lam, Direction::L2R, 0, strategy, Phase2::Barrier, &pool1, &ws,
-                None,
-            );
-            let s2 = ws.stats();
-            assert_eq!(
-                s2.misses, s1.misses,
-                "{strategy:?}: warm rerun allocated from the heap"
-            );
-            assert!(s2.hits > s1.hits, "{strategy:?}: warm rerun must hit the pool");
-            assert_eq!(first.data, second.data);
-        }
-        // The merged fan on the barrier schedule is serial on a 1-thread
-        // pool too.
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let mtaps = [&t_lr, &t_lr, &t_tb, &t_tb];
-        let logits = [0.3f32, -0.7, 0.2, 1.0];
-        let ws = BufferPool::new(usize::MAX);
-        let first = fused_merged_4dir_forced_ws(
-            &x,
-            mtaps,
-            &lam,
-            &logits,
-            0,
-            ScanStrategy::DirFan,
-            Phase2::Barrier,
-            &pool1,
-            &ws,
-            None,
-        );
-        let s1 = ws.stats();
-        let second = fused_merged_4dir_forced_ws(
-            &x,
-            mtaps,
-            &lam,
-            &logits,
-            0,
-            ScanStrategy::DirFan,
-            Phase2::Barrier,
-            &pool1,
-            &ws,
-            None,
-        );
-        assert_eq!(ws.stats().misses, s1.misses, "dirfan warm rerun allocated");
-        assert_eq!(first.data, second.data);
-    }
-
-    /// RAII under unwinding: a phase-1 piece job that panics while
-    /// holding leased scratch (the injection fires *after* the piece
-    /// lease is acquired) must return every lease to the workspace —
-    /// nothing stays out on lease, and the buffers parked in the
-    /// abandoned hand-off slots come back when the engine's slot vec
-    /// drops. The pool serves the next run without leaking.
-    #[test]
-    fn wavefront_panic_returns_all_leases_to_workspace() {
-        use std::panic::{catch_unwind, AssertUnwindSafe};
-        let pool = crate::util::ThreadPool::new(2);
-        let ws = BufferPool::new(usize::MAX);
-        let mut rng = Rng::new(73);
-        let (n, c, h, w) = (1, 2, 5, 224);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        // w=224, S=2 -> bounds (0,112),(112,224). A (plane, dir, lo, hi)
-        // tuple unique to this test's geometry, so concurrently running
-        // suites never trip the hook.
-        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some((0, 0, 112, 224));
-        let caught = catch_unwind(AssertUnwindSafe(|| {
-            fused_scan_dir_forced_ws(
-                &x,
-                &taps,
-                &lam,
-                Direction::L2R,
-                0,
-                ScanStrategy::Segmented { s: 2 },
-                Phase2::WaveDir,
-                &pool,
-                &ws,
-                None,
-            )
-        }));
-        *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
-        assert!(caught.is_err(), "the injected panic must propagate");
-        let s = ws.stats();
-        assert_eq!(
-            s.bytes_leased, 0,
-            "a panicking scan leaked workspace leases: {s:?}"
-        );
-        assert!(s.bytes_pooled > 0, "returned buffers must be pooled for reuse");
-        // The pool still serves bit-exact scans afterwards.
-        let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
-        let after = fused_scan_dir_forced_ws(
-            &x,
-            &taps,
-            &lam,
-            Direction::L2R,
-            0,
-            ScanStrategy::Segmented { s: 2 },
-            Phase2::WaveDir,
-            &pool,
-            &ws,
-            None,
-        );
-        assert_eq!(reference.data, after.data);
-        assert_eq!(ws.stats().bytes_leased, 0);
-    }
-
-    /// Spin-safety of the chained engine (the look-back satellite): a
-    /// chunk that panics mid-chain poisons its board block, so every
-    /// chunk spinning on that chain unwinds through `MapError` instead
-    /// of deadlocking on a prefix that will never be published. Both
-    /// injection points matter — the chain head (everyone downstream
-    /// waits on it) and a mid-chain chunk (upstream already published,
-    /// downstream mid-wait). Afterwards every lease is back, the
-    /// returned buffers are pooled, and the same pool + workspace serve
-    /// a bit-exact rerun.
-    #[test]
-    fn chained_panic_poisons_board_and_returns_leases() {
-        use std::panic::{catch_unwind, AssertUnwindSafe};
-        let pool = crate::util::ThreadPool::new(2);
-        let ws = BufferPool::new(usize::MAX);
-        let mut rng = Rng::new(75);
-        let (n, c, h, w) = (1, 2, 5, 320);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let taps = mk_taps(&mut rng, n, 1, h, w);
-        // w=320, S=2 -> bounds (0,160),(160,320), planes {0,1}. Plane
-        // 1's tuples are unique to this geometry (no other suite
-        // produces segment ends at 160/320), so concurrently running
-        // tests never trip the hook.
-        for inject in [(1, 0, 160, 320), (1, 0, 0, 160)] {
-            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = Some(inject);
-            let caught = catch_unwind(AssertUnwindSafe(|| {
-                fused_scan_dir_forced_ws(
-                    &x,
-                    &taps,
-                    &lam,
-                    Direction::L2R,
-                    0,
-                    ScanStrategy::Chained { s: 2 },
-                    Phase2::Barrier,
-                    &pool,
-                    &ws,
-                    None,
-                )
-            }));
-            *lock_unpoisoned(&test_hooks::PANIC_PIECE) = None;
-            let payload = match caught {
-                Ok(_) => panic!("{inject:?}: the chained engine must rethrow the panic"),
-                Err(p) => p,
-            };
-            // The surfaced payload is the injected one, or a waiter's
-            // secondary poisoned-chain panic when that lands in the
-            // MapError first — never a deadlock or a PoisonError.
-            let msg = crate::util::panic_message(&*payload);
-            assert!(
-                msg.contains("injected phase-1 panic") || msg.contains("chained scan"),
-                "{inject:?}: unexpected payload {msg:?}"
-            );
-            let s = ws.stats();
-            assert_eq!(s.bytes_leased, 0, "{inject:?}: leaked leases: {s:?}");
-            assert!(s.bytes_pooled > 0, "{inject:?}: returned buffers must be pooled");
-        }
-        // The pool and workspace still serve bit-exact chained scans.
-        let reference = scan_l2r_split(&x, &taps, &lam, 2, 1);
-        let after = fused_scan_dir_forced_ws(
-            &x,
-            &taps,
-            &lam,
-            Direction::L2R,
-            0,
-            ScanStrategy::Chained { s: 2 },
-            Phase2::Barrier,
-            &pool,
-            &ws,
-            None,
-        );
-        assert_eq!(reference.data, after.data);
-        assert_eq!(ws.stats().bytes_leased, 0);
-    }
-
-    /// The SIMD pin at the engine level: every vector kernel this host
-    /// supports produces output exactly `==` the scalar kernel's across
-    /// all four directions, every strategy/schedule, kchunk resets, and
-    /// slab-boundary / degenerate widths. (The scalar kernel itself is
-    /// pinned `==` the unfused reference by the suites above, so this
-    /// transitively pins the vector kernels to the reference.) Flipping
-    /// the process-global kernel override is safe even under concurrent
-    /// tests precisely because of this property — any kernel produces
-    /// the same bits.
-    #[test]
-    fn simd_kernels_pinned_bit_identical_to_scalar_across_engine_matrix() {
-        let kernels: Vec<&str> = ["avx2", "neon"]
-            .into_iter()
-            .filter(|k| simd::set_simd_override(k).is_ok())
-            .collect();
-        simd::set_simd_override("auto").unwrap();
-        if kernels.is_empty() {
-            // Scalar-only host: the vector kernels are pinned by the
-            // x86_64/aarch64 CI legs; nothing to compare here.
-            return;
-        }
-        let pool = crate::util::ThreadPool::new(4);
-        let ws = BufferPool::new(usize::MAX);
-        let mut rng = Rng::new(91);
-        // Slab crossings, the partial last slab, H=1 and W=1 columns.
-        let geoms = [
-            (1usize, 2usize, 5usize, SLAB - 1),
-            (1, 2, 5, SLAB + 1),
-            (1, 1, 1, 2 * SLAB + 3),
-            (1, 2, 2 * SLAB + 3, 1),
-            (2, 2, 9, 48),
-        ];
-        let cases = [
-            (ScanStrategy::PlanePar, Phase2::Barrier),
-            (ScanStrategy::Segmented { s: 3 }, Phase2::Barrier),
-            (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
-            (ScanStrategy::Segmented { s: 3 }, Phase2::WavePlane),
-            (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
-        ];
-        for (n, c, h, w) in geoms {
-            let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-            for d in DIRECTIONS {
-                let (hc, wc) = hw_src(h, w, d);
-                let taps = mk_taps(&mut rng, n, 1, hc, wc);
-                // Full width plus one mid-column carry reset.
-                let kchunks =
-                    if wc >= 2 && wc % 2 == 0 { vec![0usize, wc / 2] } else { vec![0usize] };
-                for &k in &kchunks {
-                    for (strategy, phase2) in cases {
-                        simd::set_simd_override("scalar").unwrap();
-                        let base = fused_scan_dir_forced_ws(
-                            &x, &taps, &lam, d, k, strategy, phase2, &pool, &ws, None,
-                        );
-                        for kern in &kernels {
-                            simd::set_simd_override(kern).unwrap();
-                            let got = fused_scan_dir_forced_ws(
-                                &x, &taps, &lam, d, k, strategy, phase2, &pool, &ws, None,
-                            );
-                            assert_eq!(
-                                base.data, got.data,
-                                "{kern} != scalar: n{n} c{c} {h}x{w} {d:?} k{k} \
-                                 {strategy:?} {phase2:?}"
-                            );
-                        }
-                    }
-                }
-            }
-        }
-        // The merged path: softmax-merge + modulation epilogue under
-        // DirFan (unreachable from the single-direction matrix) and the
-        // chained engine.
-        let (n, c, h, w) = (1usize, 2usize, 6usize, SLAB + 5);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_rl = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let t_bt = mk_taps(&mut rng, n, 1, w, h);
-        let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
-        let logits = [0.4f32, -0.2, 1.1, 0.0];
-        for (strategy, phase2) in [
-            (ScanStrategy::DirFan, Phase2::Barrier),
-            (ScanStrategy::DirFan, Phase2::WaveDir),
-            (ScanStrategy::Segmented { s: 2 }, Phase2::WaveDir),
-            (ScanStrategy::Chained { s: 2 }, Phase2::Barrier),
-        ] {
-            simd::set_simd_override("scalar").unwrap();
-            let base = fused_merged_4dir_forced_ws(
-                &x, mtaps, &lam, &logits, 0, strategy, phase2, &pool, &ws, None,
-            );
-            for kern in &kernels {
-                simd::set_simd_override(kern).unwrap();
-                let got = fused_merged_4dir_forced_ws(
-                    &x, mtaps, &lam, &logits, 0, strategy, phase2, &pool, &ws, None,
-                );
-                assert_eq!(
-                    base.data, got.data,
-                    "merged {kern} != scalar: {strategy:?} {phase2:?}"
-                );
-            }
-        }
-        simd::set_simd_override("auto").unwrap();
-        assert_eq!(ws.stats().bytes_leased, 0);
-    }
-
-    /// The bf16 panel-mode pin: with taps and chained panels stored as
-    /// bf16 (threaded per call — never via the process-global override,
-    /// which concurrently running `==` suites would observe), every
-    /// strategy's output matches the f32 run elementwise within the
-    /// documented tolerance `|bf16 - f32| <= (|f32| + 1) * 2^-6`, and
-    /// the narrowing actually engages (bits differ from f32).
-    #[test]
-    fn bf16_panels_within_documented_tolerance_of_f32() {
-        let pool = crate::util::ThreadPool::new(4);
-        let ws = BufferPool::new(usize::MAX);
-        let mut rng = Rng::new(92);
-        // 2^-6, the documented pin; the merged rows get one extra bit
-        // of slack (2^-5) because the softmax merge can cancel |f32|
-        // while the per-direction errors it averages do not cancel.
-        let tol_ok = |f: &[f32], b: &[f32], eps: f32| {
-            f.iter().zip(b).all(|(&a, &o)| (a - o).abs() <= (a.abs() + 1.0) * eps)
-        };
-        let (n, c, h, w) = (1usize, 2usize, 7usize, 2 * SLAB + 3);
-        let x = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        let lam = Tensor::randn(&[n, c, h, w], &mut rng, 1.0);
-        for d in DIRECTIONS {
-            let (hc, wc) = hw_src(h, w, d);
-            let taps = mk_taps(&mut rng, n, 1, hc, wc);
-            for (strategy, phase2) in [
-                (ScanStrategy::PlanePar, Phase2::Barrier),
-                (ScanStrategy::Segmented { s: 3 }, Phase2::WaveDir),
-                (ScanStrategy::Chained { s: 3 }, Phase2::Barrier),
-            ] {
-                let full = fused_scan_dir_forced_ws(
-                    &x,
-                    &taps,
-                    &lam,
-                    d,
-                    0,
-                    strategy,
-                    phase2,
-                    &pool,
-                    &ws,
-                    Some(Precision::F32),
-                );
-                let half = fused_scan_dir_forced_ws(
-                    &x,
-                    &taps,
-                    &lam,
-                    d,
-                    0,
-                    strategy,
-                    phase2,
-                    &pool,
-                    &ws,
-                    Some(Precision::Bf16),
-                );
-                assert!(
-                    tol_ok(&full.data, &half.data, 0.015_625),
-                    "bf16 out of tolerance: {d:?} {strategy:?} {phase2:?}"
-                );
-                assert_ne!(
-                    full.data, half.data,
-                    "bf16 did not engage: {d:?} {strategy:?} {phase2:?}"
-                );
-                // An explicit F32 equals the default (None) bits.
-                let default = fused_scan_dir_forced_ws(
-                    &x, &taps, &lam, d, 0, strategy, phase2, &pool, &ws, None,
-                );
-                assert_eq!(full.data, default.data, "{d:?} {strategy:?} {phase2:?}");
-            }
-        }
-        // The merged epilogue (softmax merge + modulation) on top of
-        // bf16-staged scans, across the fan and chained engines.
-        let t_lr = mk_taps(&mut rng, n, 1, h, w);
-        let t_rl = mk_taps(&mut rng, n, 1, h, w);
-        let t_tb = mk_taps(&mut rng, n, 1, w, h);
-        let t_bt = mk_taps(&mut rng, n, 1, w, h);
-        let mtaps = [&t_lr, &t_rl, &t_tb, &t_bt];
-        let logits = [0.3f32, -0.7, 0.2, 1.0];
-        for (strategy, phase2) in [
-            (ScanStrategy::DirFan, Phase2::WaveDir),
-            (ScanStrategy::Segmented { s: 2 }, Phase2::Barrier),
-            (ScanStrategy::Chained { s: 2 }, Phase2::Barrier),
-        ] {
-            let full = fused_merged_4dir_forced_ws(
-                &x,
-                mtaps,
-                &lam,
-                &logits,
-                0,
-                strategy,
-                phase2,
-                &pool,
-                &ws,
-                Some(Precision::F32),
-            );
-            let half = fused_merged_4dir_forced_ws(
-                &x,
-                mtaps,
-                &lam,
-                &logits,
-                0,
-                strategy,
-                phase2,
-                &pool,
-                &ws,
-                Some(Precision::Bf16),
-            );
-            assert!(
-                tol_ok(&full.data, &half.data, 0.031_25),
-                "merged bf16 out of tolerance: {strategy:?} {phase2:?}"
-            );
-            assert_ne!(full.data, half.data, "merged bf16 did not engage: {strategy:?}");
-        }
-        assert_eq!(ws.stats().bytes_leased, 0);
-    }
-}
+pub(crate) use super::engine::{plane_blocks, SLAB};

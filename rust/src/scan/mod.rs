@@ -5,10 +5,17 @@
 //! * [`core`] — the canonical left-to-right line scan (Eq. 1) with the
 //!   GSPN-local chunked variant, plus output modulation (Eq. 2).
 //! * [`direction`] — the four directional passes and learned merging.
-//! * [`fused`] — the column-staged fused scan engine: pack →
+//! * [`engine`] — the column-staged fused scan engine: pack →
 //!   4-direction scan → merge → modulate in one pass, bit-identical to
-//!   the reference path above (the production hot path; see its module
-//!   docs for how it maps onto the paper's three GPU bottlenecks).
+//!   the reference path above (the production hot path). Split along
+//!   the carry algebra into `engine/pack.rs` (canonical tap/slab
+//!   staging), `engine/chunk.rs` (zero-/carried-state chunk scans),
+//!   `engine/carry.rs` (carry resolution — see the `CarrySource`
+//!   contract below), `engine/drain.rs` (the scatter/merge/modulate
+//!   epilogue and the segmented engines), and `engine/tiled.rs` (the
+//!   bounded-memory streaming band executor).
+//! * [`fused`] — the compatibility facade re-exporting the engine's
+//!   entry points under their historical `scan::fused::*` paths.
 //! * [`gmatrix`] — the Eq. 4 dense expansion (linear-attention view),
 //!   used for validation and attention-map introspection.
 //! * [`compact`] — GSPN-2's compact channel propagation (§4.2):
@@ -44,6 +51,48 @@
 //! barrier — and in both engines the carry correction is computed
 //! inside the scatter drain, so each panel is read once and never
 //! re-written.
+//!
+//! # The `CarrySource` contract
+//!
+//! Every strategy above is a composition of the same primitives, glued
+//! by one question: *where does this piece's entry carry come from?*
+//! `engine::CarrySource` names the four answers —
+//!
+//! * `Zero` — scan from rest state; `seed` returns `false` and leaves
+//!   the destination untouched, so callers keep the exact all-zero
+//!   fast path (including `-0.0` preservation) of the historical code.
+//! * `Resolved(&[f32])` — the carry column is already materialised
+//!   (the segmented engine's phase-2 fold).
+//! * `Lookback(board, block)` — resolve from a [`crate::util::workspace::BlockBoard`]
+//!   publication (the chained engine's decoupled look-back).
+//! * `External(carry, plane)` — a serialized [`engine::ExternalCarry`]
+//!   hand-off from outside the call: the previous row-band of a tiled
+//!   stream today, a remote shard's boundary column under LASP-2-style
+//!   sequence parallelism tomorrow (`ExternalCarry::to_bytes` /
+//!   `from_bytes` is the wire format).
+//!
+//! The invariant every source upholds: seeding a piece with the
+//! *corrected* last column of its predecessor and rescanning is
+//! bit-identical to the unsplit scan — chunk resets (`gi % chunk == 0`)
+//! kill corrections at exactly the same columns either way. That
+//! invariant is what makes the tiled executor exact.
+//!
+//! # Tiled streaming (bounded-memory high-res serving)
+//!
+//! `ScanStrategy::Tiled { band_rows, inner }` executes a huge geometry
+//! as a stream of canonical row-band tiles: each band is scanned by the
+//! full engine (any inner strategy — `TileInner::Seq`, `Segmented`,
+//! `Chained`) from the `External` carry of the previous band, and each
+//! band's staged taps + scratch are leased and returned *within* the
+//! band, so peak workspace is bounded by one band instead of the whole
+//! image. Band boundaries fall on whole segment-piece boundaries of the
+//! untiled decomposition, so tiled output is `==` untiled output for
+//! every band size (property-pinned). The planner wraps its own
+//! decision in a Tiled plan when the footprint would exceed the
+//! workspace cap ([`plan::maybe_tile`]); `scan.plan = tiled` /
+//! `tiled-chained` (env `GSPN2_SCAN_PLAN`) forces it, and
+//! `scan.tile_band_rows` (env `GSPN2_SCAN_TILE_BAND_ROWS`) sets the
+//! band height.
 //!
 //! # SIMD dispatch & precision
 //!
@@ -97,6 +146,7 @@
 pub mod compact;
 pub mod core;
 pub mod direction;
+pub mod engine;
 pub mod fused;
 pub mod gmatrix;
 pub mod plan;
@@ -121,13 +171,13 @@ pub use fused::{
     fused_scan_dir_seg_wave, fused_scan_dir_seg_wave_twopass, fused_scan_l2r,
     fused_scan_l2r_chained, fused_scan_l2r_par, fused_scan_l2r_pool, fused_scan_l2r_pool_ws,
     fused_scan_l2r_pool_ws_into, fused_scan_l2r_seg, fused_scan_l2r_seg_wave,
-    fused_scan_l2r_seg_wave_twopass,
+    fused_scan_l2r_seg_wave_twopass, ExternalCarry,
 };
 pub use gmatrix::{attention_map, expand_g};
 pub use plan::{
-    auto_segments, eager_release_min, eager_release_min_mem, eager_release_min_slo, plan_scan,
-    workspace_footprint, workspace_footprint_prec, PlanOverride, ScanGeometry, ScanPlan,
-    ScanStrategy,
+    auto_segments, eager_release_min, eager_release_min_mem, eager_release_min_slo, maybe_tile,
+    plan_scan, set_tile_band_rows, tile_band_rows, workspace_footprint, workspace_footprint_prec,
+    PlanOverride, ScanGeometry, ScanPlan, ScanStrategy, TileInner,
 };
 pub use simd::{
     bf16_narrow, bf16_widen, set_precision_override, set_simd_override, Precision, SimdKernel,

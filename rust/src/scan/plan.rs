@@ -113,7 +113,7 @@
 //! capacity releases immediately, a wide plan on a busy pool holds out
 //! for a fused batch.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 
 /// Minimum canonical columns per segment. Below this the per-segment
 /// job dispatch dominates any occupancy gain. Lowered from 128 to 64
@@ -175,6 +175,30 @@ pub fn effective_lanes(lanes: usize) -> f64 {
     1.0 + (lanes.max(1) as f64 - 1.0) * LANE_FRACTION
 }
 
+/// The engine a tiled stream runs *inside each row band*. Every inner
+/// executes the band from the previous band's [`crate::scan::engine::ExternalCarry`]
+/// and is bit-identical to the corresponding untiled strategy (band
+/// boundaries fall on whole segment pieces, so the decomposition — and
+/// therefore the bits — never changes with the band size).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileInner {
+    /// Serial per-plane band scan (the `PlanePar` arithmetic); exact
+    /// `==` `scan_l2r`.
+    Seq,
+    /// The two-phase segmented engine per band, keeping the *untiled*
+    /// `s`-piece decomposition; exact `==` `Segmented { s }`.
+    Segmented {
+        /// Column segments per plane per direction (untiled count).
+        s: usize,
+    },
+    /// The single-pass chained engine per band, keeping the untiled
+    /// `s`-chunk decomposition; exact `==` `Chained { s }`.
+    Chained {
+        /// Column chunks per plane per direction (untiled count).
+        s: usize,
+    },
+}
+
 /// How a scan pass decomposes its work across the pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScanStrategy {
@@ -197,6 +221,32 @@ pub enum ScanStrategy {
         /// Column chunks per plane per direction.
         s: usize,
     },
+    /// Bounded-memory streaming: execute the pass as a serial stream of
+    /// canonical row bands of ~`band_rows` columns, each scanned by the
+    /// `inner` engine from the previous band's serialized carry, with
+    /// the band's staged taps + scratch leased and returned *within*
+    /// the band. Peak workspace is one band's, not the image's; output
+    /// is bit-identical to the untiled `inner` at every band size.
+    Tiled {
+        /// Canonical columns per band (the planner clamps degenerate
+        /// values to at least 1; `>= wc` degenerates to one band ==
+        /// the untiled engine).
+        band_rows: usize,
+        /// The engine each band runs.
+        inner: TileInner,
+    },
+}
+
+impl TileInner {
+    /// The untiled strategy this inner is bit-identical to — the cost
+    /// and footprint models price a band through it.
+    pub fn as_strategy(self) -> ScanStrategy {
+        match self {
+            TileInner::Seq => ScanStrategy::PlanePar,
+            TileInner::Segmented { s } => ScanStrategy::Segmented { s },
+            TileInner::Chained { s } => ScanStrategy::Chained { s },
+        }
+    }
 }
 
 /// The planner's cost estimate for one pass under one strategy, in the
@@ -285,6 +335,10 @@ impl ScanPlan {
         ScanPlan::with(ScanStrategy::Chained { s: s.max(1) }, false, geom, threads)
     }
 
+    pub fn tiled(band_rows: usize, inner: TileInner, geom: &ScanGeometry, threads: usize) -> ScanPlan {
+        ScanPlan::with(ScanStrategy::Tiled { band_rows: band_rows.max(1), inner }, false, geom, threads)
+    }
+
     fn with(strategy: ScanStrategy, wavefront: bool, geom: &ScanGeometry, threads: usize) -> ScanPlan {
         ScanPlan { strategy, wavefront, cost: plan_cost(geom, strategy, wavefront, threads) }
     }
@@ -367,6 +421,15 @@ pub fn plan_cost_lanes(
             let chains = (planes * geom.ndirs.max(1)) as f64;
             PlanCost { work_flops: base + corr, span_flops: p1 + corr / chains, width }
         }
+        ScanStrategy::Tiled { inner, .. } => {
+            // A tiled stream runs the inner engine band by band over the
+            // same pixels: same arithmetic, same total work. The bands
+            // are serial, but they partition the very columns the
+            // untiled span already charges, so the inner's estimate is
+            // the model here too — tiling trades peak workspace for
+            // (at most) some cross-band fan width, not for flops.
+            plan_cost_lanes(geom, inner.as_strategy(), wavefront, threads, lanes)
+        }
     }
 }
 
@@ -425,6 +488,15 @@ pub enum PlanOverride {
     /// `Chained` wherever a valid chunk count exists (same width fence
     /// as `Segment`), ignoring pool occupancy; else `PlanePar`.
     Chained,
+    /// Wrap the auto decision in a `Tiled` stream at
+    /// [`tile_band_rows`] — whatever strategy the auto rule picks runs
+    /// band by band (bit-identical to it). The CI hook for running the
+    /// whole suite through the streaming path.
+    Tiled,
+    /// `Tiled` with a `Chained` inner wherever a valid chunk count
+    /// exists (same width fence as `chained`); else a `Seq` inner.
+    /// Exercises the `External`-carry × look-back composition.
+    TiledChained,
 }
 
 const OV_UNSET: u8 = u8::MAX;
@@ -437,15 +509,20 @@ fn parse_override(name: &str) -> Option<PlanOverride> {
         "segment" => Some(PlanOverride::Segment),
         "dirfan" => Some(PlanOverride::DirFan),
         "chained" => Some(PlanOverride::Chained),
+        "tiled" => Some(PlanOverride::Tiled),
+        "tiled-chained" => Some(PlanOverride::TiledChained),
         _ => None,
     }
 }
 
 /// Set the process-wide planner override (the `scan.plan` config knob).
-/// Accepts `auto | plane | segment | dirfan | chained`.
+/// Accepts `auto | plane | segment | dirfan | chained | tiled |
+/// tiled-chained`.
 pub fn set_plan_override(name: &str) -> Result<(), String> {
     let ov = parse_override(name).ok_or_else(|| {
-        format!("unknown scan.plan {name:?} (want auto|plane|segment|dirfan|chained)")
+        format!(
+            "unknown scan.plan {name:?} (want auto|plane|segment|dirfan|chained|tiled|tiled-chained)"
+        )
     })?;
     PLAN_OVERRIDE.store(ov as u8, Ordering::Relaxed);
     Ok(())
@@ -463,7 +540,10 @@ pub fn plan_override() -> PlanOverride {
     }
     let ov = match std::env::var("GSPN2_SCAN_PLAN") {
         Ok(s) => parse_override(&s).unwrap_or_else(|| {
-            panic!("GSPN2_SCAN_PLAN={s:?} is not one of auto|plane|segment|dirfan|chained")
+            panic!(
+                "GSPN2_SCAN_PLAN={s:?} is not one of \
+                 auto|plane|segment|dirfan|chained|tiled|tiled-chained"
+            )
         }),
         Err(_) => PlanOverride::Auto,
     };
@@ -477,12 +557,94 @@ fn from_u8(v: u8) -> PlanOverride {
         2 => PlanOverride::Segment,
         3 => PlanOverride::DirFan,
         4 => PlanOverride::Chained,
+        5 => PlanOverride::Tiled,
+        6 => PlanOverride::TiledChained,
         _ => PlanOverride::Auto,
     }
 }
 
 // Discriminant values used by the atomic above.
-// (PlanOverride as u8: Auto=0, Plane=1, Segment=2, DirFan=3, Chained=4.)
+// (PlanOverride as u8: Auto=0, Plane=1, Segment=2, DirFan=3, Chained=4,
+// Tiled=5, TiledChained=6.)
+
+// ---------------------------------------------------------------------
+// Tile band height: config knob / env var, and the auto-tiling rule
+// ---------------------------------------------------------------------
+
+/// Default canonical columns per tiled band. At the serving shapes this
+/// keeps a band's staged taps + scratch in the tens of MiB while still
+/// giving every band enough columns to amortize its staging pass.
+pub const DEFAULT_TILE_BAND_ROWS: usize = 128;
+
+static TILE_BAND_ROWS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide tiled band height (the `scan.tile_band_rows`
+/// config knob). Zero is rejected — a zero band makes no progress.
+pub fn set_tile_band_rows(rows: usize) -> Result<(), String> {
+    if rows == 0 {
+        return Err("scan.tile_band_rows must be >= 1".to_string());
+    }
+    TILE_BAND_ROWS.store(rows, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The active tiled band height: the config knob if set, else
+/// `GSPN2_SCAN_TILE_BAND_ROWS` (read once), else
+/// [`DEFAULT_TILE_BAND_ROWS`]. Mirrors [`plan_override`]'s env
+/// handling, including the panic on an invalid value — CI forcing the
+/// tiled plan through a typo'd band height must not silently test the
+/// default.
+pub fn tile_band_rows() -> usize {
+    let v = TILE_BAND_ROWS.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let rows = match std::env::var("GSPN2_SCAN_TILE_BAND_ROWS") {
+        Ok(s) => s.parse::<usize>().ok().filter(|&r| r > 0).unwrap_or_else(|| {
+            panic!("GSPN2_SCAN_TILE_BAND_ROWS={s:?} is not a positive integer")
+        }),
+        Err(_) => DEFAULT_TILE_BAND_ROWS,
+    };
+    TILE_BAND_ROWS.store(rows, Ordering::Relaxed);
+    rows
+}
+
+/// The auto-tiling rule: wrap `p` in a [`ScanStrategy::Tiled`] stream
+/// (same inner arithmetic, bit-identical output) when its untiled
+/// workspace demand would exceed the pool's retention cap — the
+/// geometry is too big to execute in-cap any other way. `cap_bytes ==
+/// 0` means no cap (never auto-tile); an already-tiled plan passes
+/// through. Called by the engine after [`plan_scan`] with the pass's
+/// staged-tap block count and storage precision; forced strategies
+/// (tests, benches) bypass it, and the `tiled`/`tiled-chained`
+/// overrides tile unconditionally through [`decide`] instead.
+pub fn maybe_tile(
+    p: ScanPlan,
+    geom: &ScanGeometry,
+    threads: usize,
+    tap_blocks: usize,
+    cap_bytes: usize,
+    bf16: bool,
+) -> ScanPlan {
+    if cap_bytes == 0 || matches!(p.strategy, ScanStrategy::Tiled { .. }) {
+        return p;
+    }
+    let prec = if bf16 { crate::scan::simd::Precision::Bf16 } else { crate::scan::simd::Precision::F32 };
+    let bytes: usize = workspace_footprint_prec(geom, p.strategy, threads, tap_blocks, prec)
+        .iter()
+        .map(|&(class, count)| class * 4 * count)
+        .sum();
+    if bytes <= cap_bytes {
+        return p;
+    }
+    let inner = match p.strategy {
+        ScanStrategy::PlanePar | ScanStrategy::DirFan => TileInner::Seq,
+        ScanStrategy::Segmented { s } => TileInner::Segmented { s },
+        ScanStrategy::Chained { s } => TileInner::Chained { s },
+        ScanStrategy::Tiled { .. } => unreachable!("checked above"),
+    };
+    ScanPlan::tiled(tile_band_rows(), inner, geom, threads)
+}
 
 // ---------------------------------------------------------------------
 // The planner
@@ -528,6 +690,26 @@ fn decide(geom: &ScanGeometry, threads: usize, ov: PlanOverride) -> (ScanStrateg
                 Some(s) => (ScanStrategy::Chained { s }, false),
                 None => (ScanStrategy::PlanePar, false),
             };
+        }
+        PlanOverride::Tiled => {
+            // Tile whatever the auto rule picks: same inner arithmetic,
+            // streamed band by band — the bits never change, so this is
+            // safe to force across the whole suite.
+            let (base, _) = decide(geom, threads, PlanOverride::Auto);
+            let inner = match base {
+                ScanStrategy::PlanePar | ScanStrategy::DirFan => TileInner::Seq,
+                ScanStrategy::Segmented { s } => TileInner::Segmented { s },
+                ScanStrategy::Chained { s } => TileInner::Chained { s },
+                ScanStrategy::Tiled { .. } => unreachable!("auto rule never tiles"),
+            };
+            return (ScanStrategy::Tiled { band_rows: tile_band_rows(), inner }, false);
+        }
+        PlanOverride::TiledChained => {
+            let inner = match forced_segments(geom.nplanes, geom.wc_min, threads) {
+                Some(s) => TileInner::Chained { s },
+                None => TileInner::Seq,
+            };
+            return (ScanStrategy::Tiled { band_rows: tile_band_rows(), inner }, false);
         }
         PlanOverride::DirFan if can_fan => {
             return (ScanStrategy::DirFan, true);
@@ -606,42 +788,118 @@ pub fn workspace_footprint_prec(
     tap_blocks: usize,
     prec: crate::scan::simd::Precision,
 ) -> Vec<(usize, usize)> {
+    let mut demand: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+    accumulate_footprint(&mut demand, geom, strategy, threads, tap_blocks, prec);
+    demand.into_iter().collect()
+}
+
+/// Accumulate `count` buffers of `len` elements into the class-keyed
+/// demand map — the one place every strategy arm's sizes funnel
+/// through, so classes aggregate no matter which arm (or band
+/// recursion) produced them.
+fn add_class(demand: &mut std::collections::BTreeMap<usize, usize>, len: usize, count: usize) {
+    if len > 0 && count > 0 {
+        *demand.entry(crate::util::workspace::size_class(len)).or_default() += count;
+    }
+}
+
+/// The zero-carry scan scratch every engine leases per concurrent job:
+/// `slabs` pack/staging slabs plus the carry + zeros columns. The
+/// plane path's `FusedScratch` holds two slabs; a segmented phase-1
+/// piece or a chained chunk holds one (two at bf16, for the decode
+/// slab) — the shared shape the strategy arms used to each spell out.
+fn add_scan_scratch(
+    demand: &mut std::collections::BTreeMap<usize, usize>,
+    slab: usize,
+    hmax: usize,
+    slabs: usize,
+    jobs: usize,
+) {
+    add_class(demand, slab, slabs * jobs);
+    add_class(demand, hmax, 2 * jobs);
+}
+
+/// How a tiled band groups the untiled `s`-piece decomposition:
+/// `(pieces_per_band, band_cols)` — whole consecutive pieces, at least
+/// one, covering ~`band_rows` canonical columns. Mirrors the tiled
+/// executor's grouping exactly (bands never re-cut a piece; that is
+/// what keeps tiled output bit-identical to untiled).
+fn band_pieces(wc: usize, s: usize, band_rows: usize) -> (usize, usize) {
+    let s = s.max(1);
+    let piece = wc.div_ceil(s);
+    let g = (band_rows.max(piece) / piece).max(1).min(s);
+    (g, (g * piece).min(wc))
+}
+
+fn accumulate_footprint(
+    demand: &mut std::collections::BTreeMap<usize, usize>,
+    geom: &ScanGeometry,
+    strategy: ScanStrategy,
+    threads: usize,
+    tap_blocks: usize,
+    prec: crate::scan::simd::Precision,
+) {
     use crate::scan::simd::{bf16_len, Precision};
-    use crate::util::workspace::size_class;
     let threads = threads.max(1);
     let planes = geom.nplanes;
     let ndirs = geom.ndirs.max(1);
     if planes == 0 || geom.plane_px == 0 {
-        return Vec::new();
+        return;
     }
     let bf16 = prec == Precision::Bf16;
     let half = |len: usize| if bf16 { bf16_len(len) } else { len };
     let hmax = geom.hmax.max(1);
     let slab = crate::scan::fused::SLAB * hmax;
-    let mut demand: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
-    let mut add = |len: usize, count: usize| {
-        if len > 0 && count > 0 {
-            *demand.entry(size_class(len)).or_default() += count;
-        }
-    };
+    if let ScanStrategy::Tiled { band_rows, inner } = strategy {
+        // One band's demand IS the pass's peak: bands run serially and
+        // return every lease (band taps, scratch, panels, board) before
+        // the next band stages, and the `ExternalCarry` hand-off
+        // columns between bands are plain owned buffers outside the
+        // pool by design (KiB-scale, and the serialization seam for
+        // sharding). Bands execute one direction at a time over whole
+        // pieces of the untiled decomposition, so price one
+        // single-direction band through the inner's own arm.
+        let wc = geom.wc_min.max(1);
+        let hc = (geom.plane_px / wc).max(1);
+        let band_rows = band_rows.max(1);
+        let (base, band_cols) = match inner {
+            TileInner::Seq => (ScanStrategy::PlanePar, band_rows.min(wc)),
+            TileInner::Segmented { s } => {
+                let (g, cols) = band_pieces(wc, s, band_rows);
+                (ScanStrategy::Segmented { s: g }, cols)
+            }
+            TileInner::Chained { s } => {
+                let (g, cols) = band_pieces(wc, s, band_rows);
+                (ScanStrategy::Chained { s: g }, cols)
+            }
+        };
+        let band = ScanGeometry {
+            nplanes: geom.nplanes,
+            ndirs: 1,
+            wc_min: band_cols,
+            plane_px: hc * band_cols,
+            hmax: geom.hmax,
+        };
+        accumulate_footprint(demand, &band, base, threads, tap_blocks, prec);
+        return;
+    }
     // Staged taps: one panel lease per direction, alive for the pass
     // (half-width words at bf16).
-    add(half(tap_blocks.max(1) * 3 * geom.plane_px), ndirs);
+    add_class(demand, half(tap_blocks.max(1) * 3 * geom.plane_px), ndirs);
     if let ScanStrategy::Chained { s } = strategy {
         let s = s.max(1);
         // The look-back board: one [aggregate|prefix] slot of 2·hmax
         // floats per chunk, leased as a single payload for the pass.
-        add(2 * hmax * planes * ndirs * s, 1);
+        add_class(demand, 2 * hmax * planes * ndirs * s, 1);
         // Per concurrent chunk job: the local panel (~1/s of a plane,
         // half-width at bf16), the zero-carry scan scratch (pack slab +
         // carry + zeros), and the look-back fold columns (corr + next +
         // carry + agg).
         let jobs = threads.min(planes * ndirs * s).max(1);
-        add(half(geom.plane_px.div_ceil(s)), jobs);
-        add(slab, if bf16 { 2 * jobs } else { jobs });
-        add(hmax, 2 * jobs);
-        add(hmax, if bf16 { 5 * jobs } else { 4 * jobs });
-        return demand.into_iter().collect();
+        add_class(demand, half(geom.plane_px.div_ceil(s)), jobs);
+        add_scan_scratch(demand, slab, hmax, if bf16 { 2 } else { 1 }, jobs);
+        add_class(demand, hmax, if bf16 { 5 * jobs } else { 4 * jobs });
+        return;
     }
     // Mirror run_engine's strategy dispatch: DirFan degenerates to the
     // plane path for single-direction passes, else runs segmented s=1.
@@ -649,32 +907,31 @@ pub fn workspace_footprint_prec(
         ScanStrategy::PlanePar => None,
         ScanStrategy::Segmented { s } => Some(s.max(1)),
         ScanStrategy::DirFan => (ndirs > 1).then_some(1),
-        ScanStrategy::Chained { .. } => unreachable!("handled above"),
+        ScanStrategy::Chained { .. } | ScanStrategy::Tiled { .. } => {
+            unreachable!("handled above")
+        }
     };
     match segments {
         None => {
             // One FusedScratch (b + h slabs, carry + zeros columns) per
             // concurrent plane-block job.
             let jobs = crate::scan::fused::plane_blocks(planes, threads).min(threads).max(1);
-            add(slab, 2 * jobs);
-            add(hmax, 2 * jobs);
+            add_scan_scratch(demand, slab, hmax, 2, jobs);
         }
         Some(s) => {
             // Retained phase-1 panels (the barrier form's single block).
-            add(planes * ndirs * geom.plane_px, 1);
+            add_class(demand, planes * ndirs * geom.plane_px, 1);
             // Phase-1 piece scratch (pack slab + carry + zeros) per
             // concurrent job.
             let p1 = threads.min(planes * ndirs * s.max(1)).max(1);
-            add(slab, p1);
-            add(hmax, 2 * p1);
+            add_scan_scratch(demand, slab, hmax, 1, p1);
             // DrainScratch (3 columns + lazy staging slab) per
             // concurrent phase-2 plane.
             let p2 = threads.min(planes).max(1);
-            add(slab, p2);
-            add(hmax, 3 * p2);
+            add_class(demand, slab, p2);
+            add_class(demand, hmax, 3 * p2);
         }
     }
-    demand.into_iter().collect()
 }
 
 // ---------------------------------------------------------------------
@@ -987,6 +1244,10 @@ mod tests {
         let chained4 = ScanPlan::chained(4, &geom4, 8);
         assert_eq!(chained4.cost.work_flops, seg4.cost.work_flops);
         assert!(chained4.cost.span_flops <= seg4.cost.span_flops);
+        // Tiled prices through its inner: same arithmetic, streamed.
+        let tiled = ScanPlan::tiled(128, TileInner::Chained { s: 4 }, &geom, 8);
+        assert_eq!(tiled.cost, chained.cost);
+        assert_eq!(ScanPlan::tiled(128, TileInner::Seq, &geom, 8).cost, plane.cost);
         // Fan width bookkeeping.
         let m = ScanGeometry::merged_4dir(2, 384, 384);
         assert_eq!(ScanPlan::dir_fan(true, &m, 8).cost.width, 8);
@@ -1042,6 +1303,8 @@ mod tests {
             ScanStrategy::Segmented { s: 4 },
             ScanStrategy::DirFan,
             ScanStrategy::Chained { s: 4 },
+            ScanStrategy::Tiled { band_rows: 128, inner: TileInner::Chained { s: 4 } },
+            ScanStrategy::Tiled { band_rows: 128, inner: TileInner::Seq },
         ] {
             let fp = workspace_footprint(&geom, strategy, 8, 4);
             assert!(!fp.is_empty(), "{strategy:?}");
@@ -1234,7 +1497,100 @@ mod tests {
         assert_eq!(parse_override("segment"), Some(PlanOverride::Segment));
         assert_eq!(parse_override("dirfan"), Some(PlanOverride::DirFan));
         assert_eq!(parse_override("chained"), Some(PlanOverride::Chained));
+        assert_eq!(parse_override("tiled"), Some(PlanOverride::Tiled));
+        assert_eq!(parse_override("tiled-chained"), Some(PlanOverride::TiledChained));
         assert_eq!(parse_override("tpu"), None);
         assert!(set_plan_override("bogus").is_err());
+        assert!(set_tile_band_rows(0).is_err());
+    }
+
+    #[test]
+    fn tiled_override_wraps_auto_decision() {
+        let rows = tile_band_rows();
+        // Wherever auto picks a strategy, `tiled` picks the Tiled wrap
+        // of that same strategy (bit-identical inner), wavefront off.
+        let cases = [
+            (ScanGeometry::single_dir(8, 512, 512), TileInner::Seq), // auto: PlanePar
+            (ScanGeometry::single_dir(4, 512, 512), TileInner::Chained { s: 4 }),
+            (ScanGeometry::merged_4dir(2, 384, 384), TileInner::Seq), // auto: DirFan
+        ];
+        for (geom, inner) in cases {
+            let p = plan_scan_with(&geom, 0, 8, PlanOverride::Tiled);
+            assert_eq!(p.strategy, ScanStrategy::Tiled { band_rows: rows, inner }, "{geom:?}");
+            assert!(!p.wavefront, "{geom:?}");
+        }
+        // tiled-chained: Chained inner wherever a chunk count exists
+        // (same fence and count as the chained override)...
+        let wide = ScanGeometry::single_dir(1, 8, 512);
+        assert_eq!(
+            plan_scan_with(&wide, 0, 8, PlanOverride::TiledChained).strategy,
+            ScanStrategy::Tiled { band_rows: rows, inner: TileInner::Chained { s: 8 } }
+        );
+        // ...else the Seq inner (still tiled — the override's point is
+        // exercising the streaming path).
+        let narrow = ScanGeometry::single_dir(1, 8, 64);
+        assert_eq!(
+            plan_scan_with(&narrow, 0, 8, PlanOverride::TiledChained).strategy,
+            ScanStrategy::Tiled { band_rows: rows, inner: TileInner::Seq }
+        );
+    }
+
+    #[test]
+    fn maybe_tile_bounds_oversized_footprints() {
+        let rows = tile_band_rows();
+        let geom = ScanGeometry::single_dir(4, 2048, 2048);
+        let p = ScanPlan::plane(&geom, 8);
+        let untiled = p.workspace_bytes(&geom, 8, 4);
+        assert!(untiled > 0);
+        // Cap comfortably above the demand, or no cap at all: the plan
+        // passes through untouched.
+        assert_eq!(maybe_tile(p, &geom, 8, 4, untiled * 2, false).strategy, p.strategy);
+        assert_eq!(maybe_tile(p, &geom, 8, 4, 0, false).strategy, p.strategy);
+        // Cap below the demand: wrapped in Tiled with the matching
+        // inner, and the tiled footprint prices far below the untiled
+        // one (the whole point — one band's leases, not the image's).
+        let tiled = maybe_tile(p, &geom, 8, 4, untiled / 2, false);
+        assert_eq!(
+            tiled.strategy,
+            ScanStrategy::Tiled { band_rows: rows, inner: TileInner::Seq }
+        );
+        let tiled_bytes = tiled.workspace_bytes(&geom, 8, 4);
+        assert!(
+            tiled_bytes * 2 <= untiled,
+            "tiled {tiled_bytes} must be <= half of untiled {untiled}"
+        );
+        // The inner follows the wrapped strategy.
+        let c = ScanPlan::chained(8, &geom, 8);
+        assert_eq!(
+            maybe_tile(c, &geom, 8, 4, 1, false).strategy,
+            ScanStrategy::Tiled { band_rows: rows, inner: TileInner::Chained { s: 8 } }
+        );
+        let s = ScanPlan::segmented(8, true, &geom, 8);
+        assert_eq!(
+            maybe_tile(s, &geom, 8, 4, 1, false).strategy,
+            ScanStrategy::Tiled { band_rows: rows, inner: TileInner::Segmented { s: 8 } }
+        );
+        // Already tiled: idempotent.
+        let t = ScanPlan::tiled(64, TileInner::Seq, &geom, 8);
+        assert_eq!(maybe_tile(t, &geom, 8, 4, 1, false).strategy, t.strategy);
+        // bf16 prices the bf16 model (smaller, so a cap between the two
+        // tiles f32 but not bf16).
+        let f32b = untiled;
+        let bf16b: usize = workspace_footprint_prec(
+            &geom,
+            ScanStrategy::PlanePar,
+            8,
+            4,
+            crate::scan::simd::Precision::Bf16,
+        )
+        .iter()
+        .map(|&(class, count)| class * 4 * count)
+        .sum();
+        assert!(bf16b < f32b);
+        assert_eq!(maybe_tile(p, &geom, 8, 4, bf16b, true).strategy, p.strategy);
+        assert!(matches!(
+            maybe_tile(p, &geom, 8, 4, bf16b, false).strategy,
+            ScanStrategy::Tiled { .. }
+        ));
     }
 }

@@ -224,6 +224,20 @@ impl BufferPool {
         }
     }
 
+    /// Reset the lease high-water mark to the *current* outstanding
+    /// gauge and return the peak observed since the previous rebase —
+    /// the per-request peak-workspace accounting hook for the serving
+    /// coordinator (bracket an execution with two calls; the second
+    /// returns that execution's peak). With several concurrent users of
+    /// one pool the measurement windows overlap, so per-window peaks
+    /// attribute shared demand rather than isolating it; callers that
+    /// need the lifetime high-water mark fold each return value into
+    /// their own running max (the serving metrics do).
+    pub fn rebase_peak(&self) -> u64 {
+        let now = self.bytes_leased.load(Ordering::Relaxed);
+        self.peak_leased.swap(now, Ordering::Relaxed).max(now)
+    }
+
     fn release(&self, buf: Vec<f32>) {
         // Leases never resize the vec, so its length IS the size class.
         let class = buf.len();
@@ -429,6 +443,30 @@ mod tests {
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(s.bytes_leased, 0);
         assert!(s.peak_leased >= 128 * 4);
+    }
+
+    #[test]
+    fn rebase_peak_windows_the_high_water_mark() {
+        let p = BufferPool::new(usize::MAX);
+        {
+            let _a = p.acquire(100); // class 128
+            let _b = p.acquire(100);
+        }
+        // First window saw both leases outstanding at once.
+        assert_eq!(p.rebase_peak(), 2 * 128 * 4);
+        // A fresh window with one smaller lease reports only its own peak.
+        {
+            let _a = p.acquire(40); // class 64
+        }
+        assert_eq!(p.rebase_peak(), 64 * 4);
+        // An idle window reports zero; outstanding leases floor the reset.
+        assert_eq!(p.rebase_peak(), 0);
+        let held = p.acquire(100);
+        assert_eq!(p.rebase_peak(), 128 * 4);
+        // Rebase while a lease is live: the next window starts at the
+        // outstanding gauge, not zero.
+        assert_eq!(p.rebase_peak(), 128 * 4);
+        drop(held);
     }
 
     #[test]

@@ -20,6 +20,15 @@ GSPN2_SCAN_PLAN=dirfan cargo test -q scan
 # production low-occupancy path, bit-identical to `segment` at the same
 # count — so the whole scan suite runs through its state machine.
 GSPN2_SCAN_PLAN=chained cargo test -q scan
+# `tiled` forces the row-band streaming mode (every pooled scan runs as
+# a stream of band tiles joined through serialized External carries,
+# peak workspace bounded by one band) with the planner picking each
+# band's inner strategy; `tiled-chained` pins the chained engine inside
+# every band, compounding the two carry machines — both bit-identical
+# to the monolithic plans, so the whole scan suite rides through the
+# band-boundary carry hand-off.
+GSPN2_SCAN_PLAN=tiled cargo test -q scan
+GSPN2_SCAN_PLAN=tiled-chained cargo test -q scan
 # SIMD kernel matrix: the scan suite is `==`-pinned against the scalar
 # reference, so re-run it with the lane kernels forced off (every inner
 # loop through the scalar path) and — where the host supports it — with
